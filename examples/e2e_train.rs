@@ -1,0 +1,115 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train
+//! ```
+//!
+//! Proves all layers compose: rust coordinator (L3) feeding the
+//! AOT-compiled jax maxout network (L2) whose hot path runs the Pallas
+//! quantize / fused-maxout kernels (L1), via the PJRT CPU client.
+//!
+//! Trains the permutation-invariant maxout MLP (~560k parameters) for
+//! several hundred steps on the synthetic digits corpus under THREE
+//! arithmetics — float32, float16, dynamic fixed point 10/12 — logging
+//! the loss curve of each and writing them to `e2e_loss_curves.csv`.
+//! This is the run recorded in EXPERIMENTS.md §End-to-end.
+
+use std::io::Write;
+
+use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::coordinator::{RunResult, Trainer};
+use lpdnn::runtime::{Engine, Manifest};
+
+fn run(
+    engine: &Engine,
+    manifest: &Manifest,
+    name: &str,
+    arith: Arithmetic,
+    steps: usize,
+) -> lpdnn::Result<RunResult> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.arithmetic = arith;
+    cfg.train.steps = steps;
+    cfg.train.lr_start = 0.15;
+    cfg.train.lr_end = 0.01;
+    cfg.train.dropout_input = 0.1;
+    cfg.train.dropout_hidden = 0.25;
+    cfg.train.eval_every = 50;
+    cfg.data.n_train = 4096;
+    cfg.data.n_test = 1024;
+    let mut t = Trainer::new(engine, manifest, cfg);
+    t.verbose = true;
+    t.run()
+}
+
+fn main() -> lpdnn::Result<()> {
+    let steps: usize = std::env::var("E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    println!("model: pi_mlp (2x maxout-128/k4 + softmax, ~560k params)");
+    println!("data: 4096 train / 1024 test synthetic digits, batch 64, {steps} steps\n");
+
+    let f32r = run(&engine, &manifest, "e2e-float32", Arithmetic::Float32, steps)?;
+    let halfr = run(&engine, &manifest, "e2e-float16", Arithmetic::Half, steps)?;
+    let dynr = run(
+        &engine,
+        &manifest,
+        "e2e-dynamic-10-12",
+        Arithmetic::Dynamic {
+            bits_comp: 10,
+            bits_up: 12,
+            max_overflow_rate: 1e-4,
+            update_every_examples: 4096,
+            init_int_bits: 3,
+            warmup_steps: 40,
+        },
+        steps,
+    )?;
+
+    // combined loss-curve CSV
+    let path = "e2e_loss_curves.csv";
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "step,float32,float16,dynamic_10_12")?;
+    for i in 0..steps {
+        writeln!(
+            f,
+            "{},{},{},{}",
+            i, f32r.metrics.losses[i].1, halfr.metrics.losses[i].1, dynr.metrics.losses[i].1
+        )?;
+    }
+
+    let mut table = lpdnn::bench_support::Table::new(&[
+        "arithmetic", "comp bits", "up bits", "test error", "normalized", "wallclock",
+    ]);
+    let base = f32r.test_error.max(1e-9);
+    for (label, comp, up, r) in [
+        ("float32", "32", "32", &f32r),
+        ("float16", "16", "16", &halfr),
+        ("dynamic fixed point", "10", "12", &dynr),
+    ] {
+        table.row(&[
+            label.to_string(),
+            comp.to_string(),
+            up.to_string(),
+            format!("{:.2}%", 100.0 * r.test_error),
+            format!("{:.2}x", r.test_error / base),
+            format!("{:.1?}", r.wallclock),
+        ]);
+    }
+    println!("\n=== end-to-end results (paper Table 3 analogue) ===");
+    table.print();
+    println!("loss curves written to {path}");
+
+    // quick textual loss-curve comparison (every steps/10 steps)
+    println!("\nloss curve (sampled):");
+    println!("{:>6} {:>10} {:>10} {:>10}", "step", "float32", "float16", "dyn10/12");
+    for i in (0..steps).step_by((steps / 10).max(1)) {
+        println!(
+            "{:>6} {:>10.4} {:>10.4} {:>10.4}",
+            i, f32r.metrics.losses[i].1, halfr.metrics.losses[i].1, dynr.metrics.losses[i].1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Format explorer: the numeric formats themselves, host-side.
+//!
+//! ```bash
+//! cargo run --release --example format_explorer
+//! ```
+//!
+//! No artifacts needed — this example exercises the from-scratch software
+//! arithmetic substrate (`lpdnn::arith`): fixed point grids and mantissa
+//! bit patterns, rounding modes, IEEE binary16 conversion, and the
+//! quantization error / overflow-rate trade-off the radix position
+//! controls (the intuition behind the paper's Figure 1).
+
+use lpdnn::arith::{FixedFormat, QFixed, Quantizer, RoundMode};
+use lpdnn::arith::float16::{f32_to_f16_bits, half_roundtrip};
+use lpdnn::bench_support::Table;
+use lpdnn::tensor::Pcg32;
+
+fn main() {
+    println!("=== fixed point mantissas (QFixed) ===");
+    let fmt = FixedFormat::new(12, 3); // Q3.8
+    let mut t = Table::new(&["value", "mantissa", "bits", "reconstructed"]);
+    for v in [0.0f32, 1.0, -1.0, 3.14159, 7.96875, 8.5, -9.0] {
+        let q = QFixed::from_f32(v, fmt, RoundMode::HalfAway, 0.0);
+        t.row(&[
+            format!("{v}"),
+            format!("{}", q.mantissa),
+            format!("{:012b}", (q.mantissa as i16 as u16) & 0xFFF),
+            format!("{}", q.to_f32()),
+        ]);
+    }
+    println!("format {fmt}: step {}, range [-{}, {})", fmt.step(), fmt.maxv(), fmt.maxv());
+    t.print();
+
+    println!("\n=== rounding modes on ties ===");
+    let mut t = Table::new(&["x", "half-away", "half-even", "truncate"]);
+    for x in [0.5f32, 1.5, 2.5, -2.5] {
+        t.row(&[
+            format!("{x}"),
+            format!("{}", RoundMode::HalfAway.round(x, 0.0)),
+            format!("{}", RoundMode::HalfEven.round(x, 0.0)),
+            format!("{}", RoundMode::Truncate.round(x, 0.0)),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== IEEE binary16 (paper Table 1: 1+5+10 bits) ===");
+    let mut t = Table::new(&["f32", "f16 bits", "roundtrip", "rel err"]);
+    for v in [1.0f32, 0.1, 3.141592, 65504.0, 70000.0, 1e-7] {
+        let rt = half_roundtrip(v);
+        t.row(&[
+            format!("{v}"),
+            format!("{:#06x}", f32_to_f16_bits(v)),
+            format!("{rt}"),
+            format!("{:.2e}", ((rt - v) / v).abs()),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== radix position trade-off (the Figure 1 intuition) ===");
+    println!("Quantizing N(0, 4) samples with a 12-bit format at each radix:");
+    let mut rng = Pcg32::seeded(7);
+    let xs: Vec<f32> = (0..100_000).map(|_| rng.normal() * 4.0).collect();
+    let mut t = Table::new(&["radix (int bits)", "range", "overflow rate", "RMS error"]);
+    for int_bits in 0..9 {
+        let q = Quantizer::from_format(FixedFormat::new(12, int_bits));
+        let stats = q.stats_only(&xs);
+        let mut se = 0.0f64;
+        for &x in &xs {
+            let e = (q.apply(x) - x) as f64;
+            se += e * e;
+        }
+        t.row(&[
+            format!("{int_bits}"),
+            format!("±{}", q.maxv),
+            format!("{:.4}%", 100.0 * stats.rate()),
+            format!("{:.3e}", (se / xs.len() as f64).sqrt()),
+        ]);
+    }
+    t.print();
+    println!("Too few integer bits → saturation error dominates;");
+    println!("too many → resolution error dominates. The paper finds the");
+    println!("sweet spot at radix 5 for its networks (section 9.2).");
+}

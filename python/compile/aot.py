@@ -1,0 +1,167 @@
+"""AOT lowering: jax graphs -> HLO text artifacts + manifest.json.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Python runs ONLY here, at `make artifacts` time.  The rust binary is
+self-contained once `artifacts/` exists: it reads manifest.json for every
+shape, parameter spec, group table and input/output ordering, so nothing
+about the model topology is duplicated on the rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MODES = ("fixed", "half")
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to XLA HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def train_io_names(m: M.Model):
+    specs = m.param_specs()
+    inputs = [s["name"] for s in specs]
+    inputs += [f"vel:{s['name']}" for s in specs]
+    inputs += ["x", "y", "lr", "mom", "maxnorm", "seed", "rates", "steps", "maxvs"]
+    outputs = [s["name"] for s in specs]
+    outputs += [f"vel:{s['name']}" for s in specs]
+    outputs += ["loss", "overflow"]
+    return inputs, outputs
+
+
+def eval_io_names(m: M.Model):
+    specs = m.param_specs()
+    inputs = [s["name"] for s in specs] + ["x", "y", "steps", "maxvs"]
+    outputs = ["err_count", "loss_sum"]
+    return inputs, outputs
+
+
+def layer_descr(m: M.Model):
+    out = []
+    for layer in m.layers:
+        d = {"layer": layer.layer, "type": type(layer).__name__}
+        for attr in ("d_in", "d_out", "k", "hw", "c_in", "c_out", "ksize", "pool", "n_classes"):
+            if hasattr(layer, attr):
+                d[attr] = getattr(layer, attr)
+        out.append(d)
+    return out
+
+
+def build_model_entry(m: M.Model):
+    return {
+        "name": m.name,
+        "input_shape": list(m.input_shape),
+        "n_layers": m.n_layers,
+        "n_groups": m.n_groups,
+        "group_names": m.group_names(),
+        "train_batch": M.TRAIN_BATCH,
+        "eval_batch": M.EVAL_BATCH,
+        "n_classes": M.N_CLASSES,
+        "params": m.param_specs(),
+        "layers": layer_descr(m),
+    }
+
+
+def lower_artifact(m: M.Model, mode: str, graph: str, out_dir: str, manifest: dict):
+    key = f"{m.name}_{mode}_{graph}"
+    fname = f"{key}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+
+    if graph == "train":
+        fn, example = m.train_step(mode), m.train_example_args()
+        inputs, outputs = train_io_names(m)
+    else:
+        fn, example = m.eval_step(mode), m.eval_example_args()
+        inputs, outputs = eval_io_names(m)
+
+    print(f"  lowering {key} ...", flush=True)
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+    manifest["artifacts"][key] = {
+        "file": fname,
+        "model": m.name,
+        "mode": mode,
+        "graph": graph,
+        "inputs": inputs,
+        "outputs": outputs,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="pi_mlp,conv,conv32,pi_mlp_wide",
+        help="comma-separated subset of: " + ",".join(M.MODELS),
+    )
+    ap.add_argument("--modes", default=",".join(MODES))
+    ap.add_argument(
+        "--units", type=int, default=128, help="pi_mlp hidden units (ablation: 256)"
+    )
+    ap.add_argument(
+        "--elementwise",
+        choices=["jnp", "pallas"],
+        default="jnp",
+        help="standalone quantize-hook implementation: 'jnp' fuses into XLA "
+        "(CPU default, ~5x faster artifacts); 'pallas' runs the L1 kernel at "
+        "every hook (TPU shape / kernel-parity testing). The fused maxout "
+        "Pallas kernel is always on the hot path either way.",
+    )
+    # Legacy single-file mode kept for the original scaffold Makefile.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "artifacts": {}}
+
+    manifest["elementwise_impl"] = args.elementwise
+    for name in args.models.split(","):
+        if name == "pi_mlp":
+            m = M.pi_mlp(units=args.units)
+        else:
+            m = M.MODELS[name]()
+        m.elementwise = args.elementwise
+        manifest["models"][m.name] = build_model_entry(m)
+        # the wide ablation model only needs the fixed-mode artifacts
+        modes = ["fixed"] if name == "pi_mlp_wide" else args.modes.split(",")
+        for mode in modes:
+            for graph in ("train", "eval"):
+                lower_artifact(m, mode, graph, out_dir, manifest)
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Numeric-format bookkeeping shared by the L2 model and the AOT manifest.
+
+The paper (Courbariaux, David & Bengio 2014) quantizes eight signal kinds per
+layer -- weights, biases, weighted sums, outputs, and the gradients of each --
+and gives every (layer, kind) pair its own scaling factor in dynamic fixed
+point mode.  This module defines the canonical group indexing used across the
+whole stack:
+
+  group(layer, kind) = layer * N_KINDS + kind
+
+The rust coordinator (`lpdnn::coordinator::scale_ctrl`) and the golden model
+(`lpdnn::golden`) rely on the exact same mapping, which is exported to
+`artifacts/manifest.json` by `aot.py`.
+
+A fixed point format is described by two runtime scalars per group:
+
+  step = 2**(int_bits - (total_bits - 1))   -- quantization step (LSB value)
+  maxv = 2**int_bits                        -- saturation magnitude
+
+so the representable grid is { k * step : -maxv/step <= k <= maxv/step - 1 },
+i.e. a `total_bits`-bit signed mantissa with the radix point after the
+`int_bits`-th most significant magnitude bit (paper Fig. 1 terminology).
+`step == 0` is the float32 passthrough sentinel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Signal kinds, one scaling-factor group each (paper section 5).
+KIND_W = 0   # weights (parameter storage -> update bit-width)
+KIND_B = 1   # biases  (parameter storage -> update bit-width)
+KIND_Z = 2   # weighted sums, pre-nonlinearity (computation bit-width)
+KIND_H = 3   # outputs, post-nonlinearity     (computation bit-width)
+KIND_DW = 4  # gradient wrt weights           (computation bit-width)
+KIND_DB = 5  # gradient wrt biases            (computation bit-width)
+KIND_DZ = 6  # gradient wrt weighted sums     (computation bit-width)
+KIND_DH = 7  # gradient wrt outputs           (computation bit-width)
+N_KINDS = 8
+
+KIND_NAMES = ["w", "b", "z", "h", "dw", "db", "dz", "dh"]
+
+# Kinds quantized with the *parameter update* bit-width; the rest use the
+# *computation* bit-width (paper section 6, "two different bit widths").
+UPDATE_KINDS = (KIND_W, KIND_B)
+
+
+def group_index(layer: int, kind: int) -> int:
+    """Flat scaling-factor group index for (layer, kind)."""
+    assert 0 <= kind < N_KINDS
+    return layer * N_KINDS + kind
+
+
+def n_groups(n_layers: int) -> int:
+    return n_layers * N_KINDS
+
+
+def group_name(layer: int, kind: int) -> str:
+    return f"l{layer}.{KIND_NAMES[kind]}"
+
+
+def step_for(int_bits: int, total_bits: int) -> float:
+    """LSB value of a `total_bits`-wide format with `int_bits` integer bits."""
+    return float(2.0 ** (int_bits - (total_bits - 1)))
+
+
+def maxv_for(int_bits: int) -> float:
+    """Saturation magnitude of a format with `int_bits` integer bits."""
+    return float(2.0 ** int_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedFormat:
+    """A concrete fixed point format: total width (incl. sign) + radix."""
+
+    total_bits: int
+    int_bits: int
+
+    @property
+    def step(self) -> float:
+        if self.total_bits == 0:  # float32 passthrough sentinel
+            return 0.0
+        return step_for(self.int_bits, self.total_bits)
+
+    @property
+    def maxv(self) -> float:
+        if self.total_bits == 0:
+            return 0.0
+        return maxv_for(self.int_bits)
+
+
+# Passthrough sentinel (float32 simulation): step == 0 disables quantization.
+FLOAT32 = FixedFormat(total_bits=0, int_bits=0)

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: fused maxout dense layer forward.
+
+The compute hot-spot of the paper's networks is the maxout unit
+(section 2): k dot products per output unit, a bias add, a max over the k
+filters -- and, in the low precision simulation, a quantization of every
+weighted sum z_j = w_j . x + b_j *before* the max (the weighted sums form
+their own scaling-factor group, distinct from the post-nonlinearity
+outputs).
+
+GPU implementations do this as k cuBLAS GEMMs + an elementwise max over
+materialized [k, B, U] tensors.  The TPU-shaped rethink (DESIGN.md
+§Hardware-Adaptation): tile (batch x units) into MXU-sized blocks, keep a
+float32 accumulator of shape [k, bt, ut] in VMEM scratch across the
+reduction (d_in) grid dimension, and on the last reduction step apply
+bias + quantize + max + argmax in-register, storing only the [bt, ut]
+result -- the [k, B, U] intermediate never exists in HBM, and the wide
+accumulator narrows to the low precision grid exactly once, at the store,
+matching the paper's "wide accumulator, narrow storage" hypothesis
+(section 7).
+
+Outputs:
+  h      f32[B, U]   = max_j quantize(z_j)
+  amax   f32[B, U]   = argmax_j quantize(z_j)  (filter routing for backprop)
+  counts f32[1, 2]   = [#{|z| >= maxv}, #{|z| >= maxv/2}] over all k filters
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls); block shapes are
+still chosen as if targeting the 128x128 MXU so the §Perf VMEM/MXU estimate
+is meaningful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .quantize import _quantize_block
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (block shapes must tile
+    the array exactly; interpret-mode padding semantics are undefined)."""
+    for cand in range(min(preferred, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _kernel(k: int, scale_ref, x_ref, w_ref, b_ref, h_ref, amax_ref, cnt_ref, acc_ref):
+    ni = pl.num_programs(2)
+    i = pl.program_id(2)
+    # program_id must be read at kernel top level (not inside a pl.when body).
+    first_tile = jnp.logical_and(pl.program_id(0) == 0, pl.program_id(1) == 0)
+
+    @pl.when(i == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # [bt, it]
+    # k is small and static: unroll the filter loop; each iteration is one
+    # MXU matmul accumulating into VMEM scratch.
+    for j in range(k):
+        acc_ref[j] += jnp.dot(x, w_ref[j], preferred_element_type=jnp.float32)
+
+    @pl.when(i == ni - 1)
+    def _finish():
+        step = scale_ref[0, 0]
+        maxv = scale_ref[0, 1]
+        z = acc_ref[...] + b_ref[...][:, None, :]          # [k, bt, ut]
+        zq = _quantize_block(z, step, maxv)
+        h_ref[0] = jnp.max(zq, axis=0)
+        amax_ref[0] = jnp.argmax(zq, axis=0).astype(jnp.float32)
+
+        absz = jnp.abs(z)
+        live = jnp.where(step > 0, jnp.float32(1.0), jnp.float32(0.0))
+        n_over = jnp.sum(jnp.where(absz >= maxv, 1.0, 0.0)) * live
+        n_half = jnp.sum(jnp.where(absz >= maxv * 0.5, 1.0, 0.0)) * live
+
+        @pl.when(first_tile)
+        def _init_cnt():
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        cnt_ref[0, 0] += n_over
+        cnt_ref[0, 1] += n_half
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "ut", "it"))
+def maxout_dense(x, w, b, step_z, maxv_z, bt: int = 64, ut: int = 128, it: int = 1024):
+    # Default block preferences: (bt, ut) MXU-aligned; `it` covers the whole
+    # reduction for the paper's layer sizes (d_in <= 1024 ==> w block
+    # k*it*ut*4B <= 2 MiB, comfortably inside the ~16 MiB VMEM budget with
+    # the k*bt*ut accumulator), so the grid has a single reduction step.
+    # EXPERIMENTS.md §Perf logs the interpret-mode effect of this choice.
+    """Fused maxout dense forward.
+
+    x: f32[B, I]; w: f32[k, I, U]; b: f32[k, U];
+    step_z/maxv_z: runtime f32 scalars for the weighted-sum group.
+
+    Returns (h f32[B, U], amax f32[B, U], stats f32[3]).
+    Block sizes are preferences; the actual block is the largest divisor of
+    each dimension not exceeding the preference (MXU-aligned when possible).
+    """
+    B, I = x.shape
+    k, I2, U = w.shape
+    assert I == I2 and b.shape == (k, U), (x.shape, w.shape, b.shape)
+
+    bt = _pick_block(B, bt)
+    ut = _pick_block(U, ut)
+    it = _pick_block(I, it)
+    grid = (B // bt, U // ut, I // it)
+
+    scale = jnp.stack([jnp.float32(step_z), jnp.float32(maxv_z)]).reshape(1, 2)
+    # Batch dim gets a leading unit axis so every operand block is rank>=2.
+    x3 = x.reshape(1, B, I)
+
+    kernel = functools.partial(_kernel, k)
+    h, amax, cnt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda ib, iu, ii: (0, 0)),          # scale
+            pl.BlockSpec((1, bt, it), lambda ib, iu, ii: (0, ib, ii)),  # x
+            pl.BlockSpec((k, it, ut), lambda ib, iu, ii: (0, ii, iu)),  # w
+            pl.BlockSpec((k, ut), lambda ib, iu, ii: (0, iu)),          # b
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, ut), lambda ib, iu, ii: (0, ib, iu)),  # h
+            pl.BlockSpec((1, bt, ut), lambda ib, iu, ii: (0, ib, iu)),  # amax
+            pl.BlockSpec((1, 2), lambda ib, iu, ii: (0, 0)),            # counts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, B, U), jnp.float32),
+            jax.ShapeDtypeStruct((1, B, U), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((k, bt, ut), jnp.float32)],
+        interpret=True,
+    )(scale, x3, w, b)
+
+    stats = jnp.stack([cnt[0, 0], cnt[0, 1], jnp.float32(k * B * U)])
+    return h[0], amax[0], stats

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: fused quantize + overflow-statistics.
+
+This is the elementwise hot-spot of the paper's simulation contract
+(section 7): every time an activation, gradient or parameter is *stored*,
+its precision is artificially reduced; compute (the accumulators) stays
+float32.  On TPU this fusion is exactly the right shape: the value is
+quantized in-register between the compute and the single store to HBM, and
+the two overflow counters the dynamic fixed point controller needs
+(paper section 5) are reduced on the fly instead of in a second pass over
+the tensor.
+
+Kernel contract (mirrors kernels.ref.quantize_with_stats_ref):
+
+  y      = clip(round_half_away(x/step), -maxv/step, maxv/step-1) * step
+  counts = [ #{|x| >= maxv}, #{|x| >= maxv/2} ]       (float32 exact counts)
+  step == 0  ->  passthrough, counts = 0.
+
+The kernel is written against a 1-D view of the input, tiled into VMEM-sized
+blocks; the counters live in a single (1, 2) output block revisited by every
+grid step (sequential TPU grid -> safe accumulation).  `interpret=True`
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernel lowers to plain HLO (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default 1-D tile: 8 * 1024 f32 = 32 KiB per block, comfortably inside VMEM
+# alongside the output block and counters (see EXPERIMENTS.md §Perf for the
+# footprint table).
+DEFAULT_BLOCK = 8 * 1024
+
+
+def _quantize_block(x, step, maxv):
+    """Quantize one block; `step`/`maxv` are f32 scalars (step>0 guarded)."""
+    safe = jnp.where(step > 0, step, jnp.float32(1.0))
+    lim_lo = -maxv / safe
+    lim_hi = maxv / safe - 1.0
+    scaled = x / safe
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    q = jnp.clip(rounded, lim_lo, lim_hi) * safe
+    return jnp.where(step > 0, q, x)
+
+
+def _kernel(scale_ref, x_ref, y_ref, cnt_ref):
+    """One grid step: quantize a (1, block) tile and accumulate counters."""
+    step = scale_ref[0, 0]
+    maxv = scale_ref[0, 1]
+    x = x_ref[...]
+
+    y_ref[...] = _quantize_block(x, step, maxv)
+
+    absx = jnp.abs(x)
+    live = jnp.where(step > 0, jnp.float32(1.0), jnp.float32(0.0))
+    n_over = jnp.sum(jnp.where(absx >= maxv, 1.0, 0.0)) * live
+    n_half = jnp.sum(jnp.where(absx >= maxv * 0.5, 1.0, 0.0)) * live
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cnt_ref[0, 0] += n_over
+    cnt_ref[0, 1] += n_half
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_with_stats(x, step, maxv, block: int = DEFAULT_BLOCK):
+    """Quantize `x` (any shape) and report overflow statistics.
+
+    Returns (y, stats) with y.shape == x.shape and stats == f32[3]
+    (n_over, n_half, n_total).  `step` and `maxv` are runtime f32 scalars:
+    one compiled artifact serves float32 (step=0), any fixed point format
+    and any dynamic fixed point schedule (see DESIGN.md).
+    """
+    orig_shape = x.shape
+    n = x.size
+    x1 = jnp.reshape(jnp.asarray(x, jnp.float32), (n,))
+
+    # Pad to a whole number of blocks; padded zeros never count as overflow
+    # (maxv > 0 whenever counting is live).
+    bl = min(block, max(n, 1))
+    n_pad = (-n) % bl
+    if n_pad:
+        x1 = jnp.concatenate([x1, jnp.zeros((n_pad,), jnp.float32)])
+    n_blocks = x1.size // bl
+    x2 = x1.reshape(n_blocks, bl)
+
+    scale = jnp.stack([jnp.float32(step), jnp.float32(maxv)]).reshape(1, 2)
+
+    y2, cnt = pl.pallas_call(
+        _kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),       # (step, maxv)
+            pl.BlockSpec((1, bl), lambda i: (i, 0)),      # x tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bl), lambda i: (i, 0)),      # y tile
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),       # counters (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, bl), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(scale, x2)
+
+    y = y2.reshape(-1)[:n].reshape(orig_shape)
+    stats = jnp.stack([cnt[0, 0], cnt[0, 1], jnp.float32(n)])
+    return y, stats
+
+
+def quantize(x, step, maxv, block: int = DEFAULT_BLOCK):
+    """Quantize only (statistics discarded)."""
+    y, _ = quantize_with_stats(x, step, maxv, block=block)
+    return y

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything in this file is straight-line jax.numpy with no Pallas, no custom
+control flow and no cleverness: it is the correctness contract that
+`quantize.py` and `maxout.py` are tested against (pytest + hypothesis), and
+its semantics are mirrored bit-for-bit by the rust golden quantizer
+(`lpdnn::arith::Quantizer`).
+
+Quantization semantics (see formats.py for the (step, maxv) encoding):
+
+  q(x)    = clip(round_half_away(x / step), -maxv/step, maxv/step - 1) * step
+  q(x)    = x                                     when step == 0 (float32)
+
+Overflow counters (per call, i.e. per scaling-factor group per step):
+
+  n_over  = #{ |x| >= maxv }        -- would saturate at the current scale
+  n_half  = #{ |x| >= maxv / 2 }    -- would saturate at half the scale
+  n_total = x.size
+
+The dynamic fixed point controller (paper section 5) grows the scale when
+n_over/n_total exceeds the max overflow rate and shrinks it when
+n_half/n_total stays below it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_half_away(x):
+    """Round to nearest, ties away from zero (classic fixed-point rounding)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize_ref(x, step, maxv):
+    """Quantize `x` onto the fixed point grid described by (step, maxv).
+
+    `step` and `maxv` are scalars (python floats or 0-d arrays).  A `step`
+    of zero is the float32 passthrough sentinel.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    step = jnp.float32(step)
+    maxv = jnp.float32(maxv)
+    safe = jnp.where(step > 0, step, jnp.float32(1.0))
+    lim_lo = -maxv / safe
+    lim_hi = maxv / safe - 1.0
+    q = jnp.clip(round_half_away(x / safe), lim_lo, lim_hi) * safe
+    return jnp.where(step > 0, q, x)
+
+
+def overflow_stats_ref(x, maxv):
+    """(n_over, n_half, n_total) as float32 scalars (counts fit exactly)."""
+    x = jnp.asarray(x, jnp.float32)
+    absx = jnp.abs(x)
+    n_over = jnp.sum(jnp.where(absx >= maxv, 1.0, 0.0), dtype=jnp.float32)
+    n_half = jnp.sum(jnp.where(absx >= maxv * 0.5, 1.0, 0.0), dtype=jnp.float32)
+    n_total = jnp.float32(x.size)
+    return jnp.stack([n_over, n_half, n_total])
+
+
+def quantize_with_stats_ref(x, step, maxv):
+    """Reference for the fused quantize + overflow-counter kernel.
+
+    When step == 0 the value passes through and the over/half counters are
+    zero (there is no scale to overflow), but n_total is still reported.
+    """
+    y = quantize_ref(x, step, maxv)
+    stats = overflow_stats_ref(x, maxv)
+    live = jnp.where(jnp.float32(step) > 0, jnp.float32(1.0), jnp.float32(0.0))
+    mask = jnp.stack([live, live, jnp.float32(1.0)])
+    return y, stats * mask
+
+
+def maxout_dense_ref(x, w, b, step_z, maxv_z):
+    """Reference maxout dense layer forward.
+
+    x: [batch, d_in]; w: [k, d_in, d_out]; b: [k, d_out].
+    Per filter j: z_j = x @ w[j] + b[j], quantized as the layer's weighted-sum
+    group; output h = max_j z_q_j (paper section 2).  Returns (h, z_stats)
+    where z_stats counts overflow over all k*batch*d_out weighted sums.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    z = jnp.einsum("bi,kio->kbo", x, w) + b[:, None, :]
+    zq, stats = quantize_with_stats_ref(z, step_z, maxv_z)
+    return jnp.max(zq, axis=0), stats
+
+
+def half_roundtrip_ref(x):
+    """Float16 simulation: round-trip through IEEE half precision."""
+    return jnp.asarray(x, jnp.float32).astype(jnp.float16).astype(jnp.float32)

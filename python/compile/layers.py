@@ -1,0 +1,278 @@
+"""L2 layers: maxout dense, softmax head, conv-maxout stage.
+
+Backward passes are written EXPLICITLY (not jax.grad of the quantized
+forward): quantization is a staircase whose a.e. derivative is zero, so the
+paper's scheme -- quantize the *signals* (dh, dz, dw, db) while propagating
+straight-through across each quantizer -- must be coded by hand.  For the
+maxout dense layer the backward is exact manual backprop (gradient routing
+through the argmax filter recorded by the fused forward kernel).  For conv
+stages the *linear/piecewise-linear local ops* (conv, bias, max, pool) are
+differentiated with jax.vjp at the quantized operands, and quantization
+hooks are applied between them -- identical semantics, far less code.
+
+Every layer exposes:
+  init_specs()            -> parameter metadata for the rust initializer
+  fwd(q, params, x, train, seed, rates) -> (out, residuals)
+  bwd(q, params, residuals, g_out, need_dx) -> (dparams, dx or None)
+
+Group convention (formats.py): per layer, W/B hold parameter storage
+(update bit-width), Z/H the forward signals, DW/DB/DZ/DH the gradients
+(computation bit-width).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+from . import quant
+from .kernels.maxout import maxout_dense
+from .kernels import ref
+
+
+class DenseMaxout:
+    """Fully connected maxout layer (paper section 2): k filters per unit."""
+
+    def __init__(self, layer: int, d_in: int, d_out: int, k: int, dropout_salt: int):
+        self.layer = layer
+        self.d_in = d_in
+        self.d_out = d_out
+        self.k = k
+        self.salt = dropout_salt
+
+    def init_specs(self):
+        return [
+            {
+                "name": f"l{self.layer}.w",
+                "shape": [self.k, self.d_in, self.d_out],
+                "init": "glorot_uniform",
+                "fan_in": self.d_in,
+                "fan_out": self.d_out,
+            },
+            {
+                "name": f"l{self.layer}.b",
+                "shape": [self.k, self.d_out],
+                "init": "zeros",
+            },
+        ]
+
+    def fwd(self, q: quant.Q, params, x, train: bool, seed, rates):
+        w, b = params
+        if train:
+            xd, keep = quant.dropout(x, rates[self.layer], seed, self.salt)
+        else:
+            xd, keep = x, None
+
+        if q.mode in ("half", "off"):
+            # Fused kernel quantizes on the fixed point grid only; in half
+            # (f16 round-trip) and off (pure float32 reference) modes run
+            # the reference einsum instead.
+            z = jnp.einsum("bi,kio->kbo", xd, w) + b[:, None, :]
+            zq = q(z, self.layer, F.KIND_Z)
+            amax = jnp.argmax(zq, axis=0).astype(jnp.float32)
+            h_pre = jnp.max(zq, axis=0)
+        else:
+            step_z, maxv_z = q.scale(self.layer, F.KIND_Z)
+            h_pre, amax, z_stats = maxout_dense(xd, w, b, step_z, maxv_z)
+            q.record(self.layer, F.KIND_Z, z_stats)
+
+        h = q(h_pre, self.layer, F.KIND_H)
+        return h, (xd, keep, amax)
+
+    def bwd(self, q: quant.Q, params, residuals, g, need_dx: bool, rates):
+        w, _b = params
+        xd, keep, amax = residuals
+        # Straight-through across the output quantizer; route the gradient
+        # to the winning filter (exact subgradient of max over quantized z).
+        sel = jnp.stack(
+            [jnp.where(amax == j, 1.0, 0.0) for j in range(self.k)]
+        )  # [k, B, U]
+        dz = q(sel * g[None, :, :], self.layer, F.KIND_DZ)
+
+        dw = q(jnp.einsum("bi,kbo->kio", xd, dz), self.layer, F.KIND_DW)
+        db = q(jnp.sum(dz, axis=1), self.layer, F.KIND_DB)
+
+        dx = None
+        if need_dx:
+            dxd = jnp.einsum("kbo,kio->bi", dz, w)
+            dx = quant.dropout_bwd(dxd, keep, rates[self.layer]) if keep is not None else dxd
+        return (dw, db), dx
+
+
+class DenseSoftmax:
+    """Final densely connected softmax layer (k = 1, no nonlinearity)."""
+
+    def __init__(self, layer: int, d_in: int, n_classes: int, dropout_salt: int):
+        self.layer = layer
+        self.d_in = d_in
+        self.n_classes = n_classes
+        self.salt = dropout_salt
+
+    def init_specs(self):
+        return [
+            {
+                "name": f"l{self.layer}.w",
+                "shape": [self.d_in, self.n_classes],
+                "init": "glorot_uniform",
+                "fan_in": self.d_in,
+                "fan_out": self.n_classes,
+            },
+            {
+                "name": f"l{self.layer}.b",
+                "shape": [self.n_classes],
+                "init": "zeros",
+            },
+        ]
+
+    def fwd(self, q: quant.Q, params, x, train: bool, seed, rates):
+        w, b = params
+        if train:
+            xd, keep = quant.dropout(x, rates[self.layer], seed, self.salt)
+        else:
+            xd, keep = x, None
+        z = q(xd @ w + b, self.layer, F.KIND_Z)
+        # Softmax + cross-entropy stay float32: the paper's simulation keeps
+        # accumulators and the loss at full precision (section 7).
+        logp = jax.nn.log_softmax(z, axis=-1)
+        return (z, logp), (xd, keep, z)
+
+    def loss_and_grad(self, q: quant.Q, fwd_out, y_onehot):
+        """Cross-entropy loss and the quantized dz = (p - y)/B."""
+        z, logp = fwd_out
+        batch = z.shape[0]
+        loss = -jnp.sum(y_onehot * logp) / batch
+        p = jnp.exp(logp)
+        dz = q((p - y_onehot) / batch, self.layer, F.KIND_DZ)
+        return loss, dz
+
+    def bwd(self, q: quant.Q, params, residuals, dz, need_dx: bool, rates):
+        w, _b = params
+        xd, keep, _z = residuals
+        dw = q(xd.T @ dz, self.layer, F.KIND_DW)
+        db = q(jnp.sum(dz, axis=0), self.layer, F.KIND_DB)
+        dx = None
+        if need_dx:
+            dxd = dz @ w.T
+            dx = quant.dropout_bwd(dxd, keep, rates[self.layer]) if keep is not None else dxd
+        return (dw, db), dx
+
+
+class ConvMaxout:
+    """Convolutional maxout stage: conv -> +b -> quantize z -> max over k
+    filter groups -> spatial max pool -> quantize h (paper sections 8.1-8.3).
+
+    Input/output layout NHWC.  Local linear/piecewise-linear maps are
+    differentiated with jax.vjp at the quantized operands (exact for conv /
+    bias / max / pool), with quantization hooks applied between them.
+    """
+
+    def __init__(
+        self,
+        layer: int,
+        hw: int,
+        c_in: int,
+        c_out: int,
+        k: int,
+        ksize: int,
+        pool: int,
+        dropout_salt: int,
+    ):
+        self.layer = layer
+        self.hw = hw
+        self.c_in = c_in
+        self.c_out = c_out
+        self.k = k
+        self.ksize = ksize
+        self.pool = pool
+        self.salt = dropout_salt
+        self.out_hw = hw // pool  # SAME conv, then pool
+
+    def init_specs(self):
+        fan_in = self.ksize * self.ksize * self.c_in
+        fan_out = self.ksize * self.ksize * self.c_out
+        return [
+            {
+                "name": f"l{self.layer}.w",
+                "shape": [self.ksize, self.ksize, self.c_in, self.k * self.c_out],
+                "init": "glorot_uniform",
+                "fan_in": fan_in,
+                "fan_out": fan_out,
+            },
+            {
+                "name": f"l{self.layer}.b",
+                "shape": [self.k * self.c_out],
+                "init": "zeros",
+            },
+        ]
+
+    def _conv(self, x, w):
+        return jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+    def _max_pool(self, zq):
+        """max over k filter groups then spatial max pool (both piecewise
+        linear, differentiated together with one vjp in bwd)."""
+        b, h, w_, _ = zq.shape
+        z5 = zq.reshape(b, h, w_, self.k, self.c_out)
+        m = jnp.max(z5, axis=3)
+        return jax.lax.reduce_window(
+            m,
+            -jnp.inf,
+            jax.lax.max,
+            (1, self.pool, self.pool, 1),
+            (1, self.pool, self.pool, 1),
+            "VALID",
+        )
+
+    def fwd(self, q: quant.Q, params, x, train: bool, seed, rates):
+        w, b = params
+        if train:
+            xd, keep = quant.dropout(x, rates[self.layer], seed, self.salt)
+        else:
+            xd, keep = x, None
+        z = self._conv(xd, w) + b
+        zq = q(z, self.layer, F.KIND_Z)
+        hp = self._max_pool(zq)
+        h = q(hp, self.layer, F.KIND_H)
+        return h, (xd, keep, zq)
+
+    def bwd(self, q: quant.Q, params, residuals, g, need_dx: bool, rates):
+        w, _b = params
+        xd, keep, zq = residuals
+
+        # Through max-over-filters + pool (exact subgradient at zq).
+        _, pool_vjp = jax.vjp(self._max_pool, zq)
+        dz = q(pool_vjp(g)[0], self.layer, F.KIND_DZ)
+
+        # Through conv at the quantized input.
+        _, conv_vjp = jax.vjp(lambda xx, ww: self._conv(xx, ww), xd, w)
+        dxd, dw = conv_vjp(dz)
+        dw = q(dw, self.layer, F.KIND_DW)
+        db = q(jnp.sum(dz, axis=(0, 1, 2)), self.layer, F.KIND_DB)
+
+        dx = None
+        if need_dx:
+            dx = quant.dropout_bwd(dxd, keep, rates[self.layer]) if keep is not None else dxd
+        return (dw, db), dx
+
+
+class Flatten:
+    """Shape adapter between conv stages and the dense softmax head.
+
+    Not a parameterised layer: it owns no groups and no dropout.
+    """
+
+    def __init__(self, shape_in):
+        self.shape_in = tuple(shape_in)
+
+    def fwd(self, x):
+        return x.reshape(x.shape[0], -1)
+
+    def bwd(self, g):
+        return g.reshape((g.shape[0],) + self.shape_in)

@@ -1,0 +1,303 @@
+"""L2 models: the paper's Maxout networks with low precision hooks.
+
+Three topologies mirror the paper's experiments (scaled down; DESIGN.md
+§Substitutions -- the paper itself notes that doubling the hidden layer
+width does not change the minimum bit-widths, sections 9.2/9.3):
+
+  pi_mlp -- permutation invariant MNIST model: two fully connected maxout
+            layers + softmax (paper 8.1, first model).
+  conv   -- three convolutional maxout stages + softmax over 28x28x1
+            inputs (paper 8.1, second model).
+  conv32 -- same shape over 32x32x3 inputs for the CIFAR10-like and
+            SVHN-like datasets (paper 8.2/8.3).
+
+Each model builds two compiled graphs per arithmetic mode:
+
+  train_step: one full SGD+momentum step with EXPLICIT manual backprop and
+              quantization at every signal the paper names (weights, bias,
+              weighted sums, outputs + their gradients), the max-norm
+              column constraint (Srebro & Shraibman 2005, used in paper
+              8.1), and the parameter update quantized at the *update*
+              bit-width (paper section 6).  Returns the per-group overflow
+              counter matrix for the rust dynamic fixed point controller.
+  eval_step:  forward only, no dropout; returns (error_count, loss_sum).
+
+Everything that varies during training (learning rate, momentum, dropout
+rates, max-norm bound, PRNG seed, per-group scales) is a runtime input:
+the rust coordinator owns all schedules and the scaling-factor state.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import formats as F
+from . import quant
+from .layers import ConvMaxout, DenseMaxout, DenseSoftmax, Flatten
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+N_CLASSES = 10
+
+
+class Model:
+    """A stack of group-owning layers (+ optional Flatten) and its graphs."""
+
+    def __init__(self, name: str, input_shape, layers, flatten_before_head=None):
+        self.name = name
+        self.input_shape = tuple(input_shape)  # per-example, e.g. (784,) or (28,28,1)
+        self.layers = layers                    # group-owning layers, in order
+        self.flatten = flatten_before_head      # Flatten between last conv and head
+        self.n_layers = len(layers)
+        self.n_groups = F.n_groups(self.n_layers)
+        # Elementwise-quantize implementation for the standalone hooks:
+        # "jnp" (XLA-fused, the CPU-artifact default) or "pallas" (the L1
+        # kernel at every site — the TPU shape). See quant.Q docstring and
+        # EXPERIMENTS.md §Perf. aot.py overrides via --elementwise.
+        self.elementwise = "jnp"
+
+    # -- parameter metadata ------------------------------------------------
+
+    def param_specs(self):
+        specs = []
+        for i, layer in enumerate(self.layers):
+            for s in layer.init_specs():
+                s = dict(s)
+                s["layer"] = i
+                s["kind"] = "w" if s["name"].endswith(".w") else "b"
+                specs.append(s)
+        return specs
+
+    def group_names(self):
+        return [
+            F.group_name(l, k) for l in range(self.n_layers) for k in range(F.N_KINDS)
+        ]
+
+    # -- forward/backward chains --------------------------------------------
+
+    def _split_params(self, flat):
+        """[w0, b0, w1, b1, ...] -> [(w0, b0), (w1, b1), ...]"""
+        assert len(flat) == 2 * self.n_layers
+        return [(flat[2 * i], flat[2 * i + 1]) for i in range(self.n_layers)]
+
+    def _forward(self, q, params, x, train, seed, rates):
+        """Returns (head_out, residuals list)."""
+        resids = []
+        h = x
+        for i, layer in enumerate(self.layers[:-1]):
+            h, r = layer.fwd(q, params[i], h, train, seed, rates)
+            resids.append(r)
+        if self.flatten is not None:
+            h = self.flatten.fwd(h)
+        head = self.layers[-1]
+        out, r = head.fwd(q, params[-1], h, train, seed, rates)
+        resids.append(r)
+        return out, resids
+
+    def _backward(self, q, params, resids, head_out, y, rates):
+        """Returns (loss, grads list aligned with layers)."""
+        head = self.layers[-1]
+        loss, dz = head.loss_and_grad(q, head_out, y)
+        grads = [None] * self.n_layers
+        grads[-1], dx = head.bwd(q, params[-1], resids[-1], dz, True, rates)
+        if self.flatten is not None:
+            dx = self.flatten.bwd(dx)
+        for i in range(self.n_layers - 2, -1, -1):
+            layer = self.layers[i]
+            g = q(dx, layer.layer, F.KIND_DH)
+            need_dx = i > 0
+            grads[i], dx = layer.bwd(q, params[i], resids[i], g, need_dx, rates)
+        return loss, grads
+
+    def _sgd_update(self, q, params, vels, grads, lr, mom, maxnorm):
+        """Quantized SGD with momentum and max-norm column constraint.
+
+        v' = Q_up(mom * v - lr * g)     (momentum buffer stored at the
+                                         update bit-width; not counted in
+                                         the group statistics)
+        w' = Q_up(maxnorm(w + v'))      (parameter assignment -- the 'Up.'
+                                         bit-width of paper section 6)
+        """
+        new_params, new_vels = [], []
+        for i, layer in enumerate(self.layers):
+            (w, b), (vw, vb), (gw, gb) = params[i], vels[i], grads[i]
+            li = layer.layer
+
+            vw2 = q(mom * vw - lr * gw, li, F.KIND_W, record=False)
+            vb2 = q(mom * vb - lr * gb, li, F.KIND_B, record=False)
+
+            w2 = w + vw2
+            w2 = _max_norm(w2, maxnorm)
+            w2 = q(w2, li, F.KIND_W)
+            b2 = q(b + vb2, li, F.KIND_B)
+
+            new_params.extend([w2, b2])
+            new_vels.extend([vw2, vb2])
+        return new_params, new_vels
+
+    # -- compiled graph entry points -----------------------------------------
+
+    def train_step(self, mode: str):
+        """Build the train step callable for AOT lowering.
+
+        Flat signature (all float32; see aot.py for the manifest):
+          inputs : params..., vels..., x, y_onehot, lr, mom, maxnorm, seed,
+                   rates[n_layers], steps[n_groups], maxvs[n_groups]
+          outputs: params'..., vels'..., loss, overflow[n_groups, 3]
+        """
+        n_p = 2 * self.n_layers
+
+        def step(*args):
+            params_flat = list(args[:n_p])
+            vels_flat = list(args[n_p : 2 * n_p])
+            (x, y, lr, mom, maxnorm, seed, rates, steps, maxvs) = args[2 * n_p :]
+
+            q = quant.Q(steps, maxvs, mode, self.n_layers, elementwise=self.elementwise)
+            params = self._split_params(params_flat)
+            vels = self._split_params(vels_flat)
+
+            out, resids = self._forward(q, params, x, True, seed, rates)
+            loss, grads = self._backward(q, params, resids, out, y, rates)
+            new_params, new_vels = self._sgd_update(
+                q, params, vels, grads, lr, mom, maxnorm
+            )
+            if mode == "half":
+                # steps/maxvs are unused by the f16 round-trip graph; tie
+                # them in with a zero-weight term so the lowered parameter
+                # list is identical across modes (the MLIR->XLA conversion
+                # prunes genuinely unused parameters).
+                loss = loss + jnp.float32(0.0) * (jnp.sum(steps) + jnp.sum(maxvs))
+            return tuple(new_params) + tuple(new_vels) + (loss, q.stats_matrix())
+
+        return step
+
+    def eval_step(self, mode: str):
+        """Forward-only graph: inputs params..., x, y_onehot, steps, maxvs;
+        outputs (error_count, loss_sum)."""
+        n_p = 2 * self.n_layers
+
+        def step(*args):
+            params_flat = list(args[:n_p])
+            x, y, steps, maxvs = args[n_p:]
+            q = quant.Q(steps, maxvs, mode, self.n_layers, elementwise=self.elementwise)
+            params = self._split_params(params_flat)
+            rates = jnp.zeros((self.n_layers,), jnp.float32)
+            (z, logp), _ = self._forward(q, params, x, False, jnp.float32(0.0), rates)
+            batch = z.shape[0]
+            loss_sum = -jnp.sum(y * logp)
+            pred = jnp.argmax(z, axis=-1)
+            truth = jnp.argmax(y, axis=-1)
+            err = jnp.sum(jnp.where(pred != truth, 1.0, 0.0), dtype=jnp.float32)
+            if mode == "half":
+                # see train_step: keep the parameter list uniform.
+                loss_sum = loss_sum + jnp.float32(0.0) * (jnp.sum(steps) + jnp.sum(maxvs))
+            return err, loss_sum
+
+        return step
+
+    # -- example input shapes (for jit.lower) ---------------------------------
+
+    def train_example_args(self):
+        import jax
+
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+        args = []
+        for s in self.param_specs():
+            args.append(sds(tuple(s["shape"]), f32))
+        for s in self.param_specs():
+            args.append(sds(tuple(s["shape"]), f32))
+        args.append(sds((TRAIN_BATCH,) + self.input_shape, f32))       # x
+        args.append(sds((TRAIN_BATCH, N_CLASSES), f32))                # y
+        for _ in range(4):                                             # lr mom maxnorm seed
+            args.append(sds((), f32))
+        args.append(sds((self.n_layers,), f32))                        # rates
+        args.append(sds((self.n_groups,), f32))                        # steps
+        args.append(sds((self.n_groups,), f32))                        # maxvs
+        return args
+
+    def eval_example_args(self):
+        import jax
+
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+        args = [sds(tuple(s["shape"]), f32) for s in self.param_specs()]
+        args.append(sds((EVAL_BATCH,) + self.input_shape, f32))
+        args.append(sds((EVAL_BATCH, N_CLASSES), f32))
+        args.append(sds((self.n_groups,), f32))
+        args.append(sds((self.n_groups,), f32))
+        return args
+
+
+def _max_norm(w, c):
+    """Scale columns (incoming weight vectors) to norm <= c; c <= 0 disables.
+
+    Norm is over the fan-in axes: all but the last axis for dense [in, out]
+    and maxout [k, in, out] -> per (k, out); (kh, kw, cin) for conv HWIO.
+    """
+    axes = tuple(range(w.ndim - 1)) if w.ndim != 3 else (1,)
+    norm = jnp.sqrt(jnp.sum(w * w, axis=axes, keepdims=True))
+    scale = jnp.minimum(jnp.float32(1.0), c / jnp.maximum(norm, jnp.float32(1e-7)))
+    return jnp.where(c > 0, w * scale, w)
+
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+
+
+def pi_mlp(units: int = 128, k: int = 4, name: str = "pi_mlp") -> Model:
+    """Permutation invariant maxout MLP (paper 8.1; Goodfellow 240xk5 x2)."""
+    return Model(
+        name,
+        (784,),
+        [
+            DenseMaxout(0, 784, units, k, dropout_salt=0x10),
+            DenseMaxout(1, units, units, k, dropout_salt=0x20),
+            DenseSoftmax(2, units, N_CLASSES, dropout_salt=0x30),
+        ],
+    )
+
+
+def conv(ch=(8, 16, 16), k: int = 2) -> Model:
+    """Conv maxout net over 28x28x1 (paper 8.1, convolutional model)."""
+    c0, c1, c2 = ch
+    flat = 3 * 3 * c2
+    return Model(
+        "conv",
+        (28, 28, 1),
+        [
+            ConvMaxout(0, 28, 1, c0, k, 5, 2, dropout_salt=0x10),
+            ConvMaxout(1, 14, c0, c1, k, 5, 2, dropout_salt=0x20),
+            ConvMaxout(2, 7, c1, c2, k, 5, 2, dropout_salt=0x30),
+            DenseSoftmax(3, flat, N_CLASSES, dropout_salt=0x40),
+        ],
+        flatten_before_head=Flatten((3, 3, c2)),
+    )
+
+
+def conv32(ch=(16, 16, 24), k: int = 2) -> Model:
+    """Conv maxout net over 32x32x3 (paper 8.2 CIFAR10 / 8.3 SVHN models)."""
+    c0, c1, c2 = ch
+    flat = 4 * 4 * c2
+    return Model(
+        "conv32",
+        (32, 32, 3),
+        [
+            ConvMaxout(0, 32, 3, c0, k, 5, 2, dropout_salt=0x10),
+            ConvMaxout(1, 16, c0, c1, k, 5, 2, dropout_salt=0x20),
+            ConvMaxout(2, 8, c1, c2, k, 5, 2, dropout_salt=0x30),
+            DenseSoftmax(3, flat, N_CLASSES, dropout_salt=0x40),
+        ],
+        flatten_before_head=Flatten((4, 4, c2)),
+    )
+
+
+def pi_mlp_wide() -> Model:
+    """Double-width pi_mlp for the paper's 'doubling the number of hidden
+    units does not allow any further reduction of the bit-widths'
+    ablation (sections 9.2/9.3)."""
+    return pi_mlp(units=256, name="pi_mlp_wide")
+
+
+MODELS = {"pi_mlp": pi_mlp, "conv": conv, "conv32": conv32, "pi_mlp_wide": pi_mlp_wide}

@@ -1,0 +1,177 @@
+"""L2 quantization plumbing: scaling-factor groups, hooks, dropout PRNG.
+
+A `Q` object is threaded through the model's forward and backward passes.
+Every call `q(x, layer, kind)` quantizes `x` with the runtime (step, maxv)
+scalars of its (layer, kind) scaling-factor group and accumulates that
+group's overflow counters; the train step returns the stacked
+f32[n_groups, 3] counter matrix that feeds the rust dynamic fixed point
+controller (paper section 5).
+
+Two modes share one code path:
+
+  mode="fixed"  -- parameterised fixed point quantization via the Pallas
+                   kernel.  step==0 per group means float32 passthrough, so
+                   the same compiled artifact serves the float32 baseline,
+                   static fixed point (all groups share one scale) and
+                   dynamic fixed point (per-group scales fed by rust).
+  mode="half"   -- IEEE float16 round-trip at the same hook points
+                   (paper Table 3, "Half precision floating point" row).
+                   Counters stay zero except n_total.
+  mode="off"    -- pure passthrough with NO Pallas calls: the float32
+                   reference graph.  Differentiable end to end, used by
+                   tests to check the manual backprop against jax.grad.
+
+Dropout (paper section 8.1, following Goodfellow et al. 2013) must live
+*inside* the compiled step but be driven by the rust coordinator, so masks
+come from a counter-based hash PRNG keyed on a per-step seed scalar: no
+jax.random state threading, fully deterministic given (seed, call-site
+salt), and cheap elementwise integer ops in HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import formats
+from .kernels import ref
+from .kernels.quantize import quantize_with_stats
+
+
+class Q:
+    """Per-train-step quantization context.
+
+    steps/maxvs: f32[n_groups] runtime inputs.
+    stats are accumulated per group across all call sites that touch the
+    group (e.g. several bwd sites quantize into the same dz group).
+
+    `elementwise` picks the implementation of the standalone quantize
+    hooks (the fused maxout kernel is controlled separately by layers.py):
+
+      "jnp"    -- pure-jnp reference ops. XLA fuses these into the
+                  surrounding computation, so on the CPU PJRT backend the
+                  hooks are nearly free. This is the CPU-artifact default
+                  (EXPERIMENTS.md §Perf: 62ms -> 11ms per pi_mlp step).
+      "pallas" -- the L1 Pallas kernel at every hook. What a real TPU
+                  build uses (the kernel fuses the overflow-counter
+                  reduction into the store); under interpret=True on CPU
+                  each call costs a while-loop round trip, so only enable
+                  for kernel-parity testing.
+
+    Both implement the identical contract (pytest asserts bit-equality).
+    """
+
+    def __init__(self, steps, maxvs, mode: str, n_layers: int,
+                 elementwise: str = "jnp"):
+        assert mode in ("fixed", "half", "off"), mode
+        assert elementwise in ("jnp", "pallas"), elementwise
+        self.steps = steps
+        self.maxvs = maxvs
+        self.mode = mode
+        self.elementwise = elementwise
+        self.n_groups = formats.n_groups(n_layers)
+        self._stats = [None] * self.n_groups
+
+    def _accumulate(self, g: int, stats):
+        if self._stats[g] is None:
+            self._stats[g] = stats
+        else:
+            self._stats[g] = self._stats[g] + stats
+
+    def __call__(self, x, layer: int, kind: int, record: bool = True):
+        """Quantize `x` as group (layer, kind); returns the quantized value.
+
+        record=False quantizes on the group's grid without contributing to
+        its overflow counters (used for momentum buffers, which share the
+        parameter storage format but would skew the controller's statistics
+        for the weights themselves -- see DESIGN.md).
+        """
+        g = formats.group_index(layer, kind)
+        if self.mode == "off":
+            return x
+        if self.mode == "half":
+            y = ref.half_roundtrip_ref(x)
+            stats = jnp.stack(
+                [jnp.float32(0.0), jnp.float32(0.0), jnp.float32(x.size)]
+            )
+        elif self.elementwise == "pallas":
+            y, stats = quantize_with_stats(x, self.steps[g], self.maxvs[g])
+        else:
+            y, stats = ref.quantize_with_stats_ref(x, self.steps[g], self.maxvs[g])
+        if record:
+            self._accumulate(g, stats)
+        return y
+
+    def scale(self, layer: int, kind: int):
+        """(step, maxv) runtime scalars for a group (for fused kernels that
+        quantize internally, e.g. the maxout dense kernel)."""
+        g = formats.group_index(layer, kind)
+        if self.mode in ("half", "off"):
+            # The fused kernel only supports grid quantization; in these
+            # modes callers use the reference path instead (see layers.py).
+            return jnp.float32(0.0), jnp.float32(0.0)
+        return self.steps[g], self.maxvs[g]
+
+    def record(self, layer: int, kind: int, stats):
+        """Record counters produced by a fused kernel for (layer, kind)."""
+        self._accumulate(formats.group_index(layer, kind), stats)
+
+    def stats_matrix(self):
+        """f32[n_groups, 3] accumulated (n_over, n_half, n_total)."""
+        zero = jnp.zeros((3,), jnp.float32)
+        rows = [zero if s is None else s for s in self._stats]
+        return jnp.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based hash PRNG for dropout masks.
+# ---------------------------------------------------------------------------
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _hash_u32(x):
+    """lowbias32 finalizer (Wang/Mulvey-style avalanche hash)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_uniform(shape, seed, salt: int):
+    """Deterministic U[0,1) noise tensor.
+
+    seed: runtime f32 scalar holding an integer in [0, 2^24) (the rust
+    coordinator increments it every step); salt: static per-call-site
+    constant so distinct masks within one step decorrelate.
+    """
+    n = 1
+    for d in shape:
+        n *= int(d)
+    idx = jax.lax.iota(jnp.uint32, n)
+    s = seed.astype(jnp.uint32) if hasattr(seed, "astype") else jnp.uint32(seed)
+    x = _hash_u32(idx * _GOLDEN + s * jnp.uint32(0x85EBCA6B) + jnp.uint32(salt))
+    u = x.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    return u.reshape(shape)
+
+
+def dropout(x, rate, seed, salt: int):
+    """Inverted dropout with runtime rate scalar (rate==0 -> identity).
+
+    mask scales by 1/(1-rate) so eval needs no rescaling; a rate of exactly
+    zero short-circuits through jnp.where (both branches computed, selection
+    is elementwise -- cheap, branch-free HLO).
+    """
+    u = hash_uniform(x.shape, seed, salt)
+    keep = jnp.where(u >= rate, jnp.float32(1.0), jnp.float32(0.0))
+    scale = jnp.float32(1.0) / jnp.maximum(jnp.float32(1.0) - rate, jnp.float32(1e-6))
+    dropped = x * keep * scale
+    return jnp.where(rate > 0, dropped, x), keep
+
+
+def dropout_bwd(g, keep, rate):
+    """Backward of `dropout` given the stored keep mask."""
+    scale = jnp.float32(1.0) / jnp.maximum(jnp.float32(1.0) - rate, jnp.float32(1e-6))
+    return jnp.where(rate > 0, g * keep * scale, g)

@@ -1,0 +1,70 @@
+"""AOT pipeline smoke tests: lowering works, manifest is consistent."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    import jax.numpy as jnp
+
+    def fn(a, b):
+        return (a @ b + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+@pytest.mark.parametrize("mode", ["fixed", "half"])
+def test_pi_mlp_lowers(mode):
+    m = M.pi_mlp(units=32, k=2)
+    lowered = jax.jit(m.train_step(mode)).lower(*m.train_example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # all 6 params + 6 velocities + 8 scalars/vectors = 20 inputs
+    assert text.count("parameter(") >= 20
+
+
+def test_io_name_tables_align_with_example_args():
+    m = M.pi_mlp(units=32, k=2)
+    inputs, outputs = aot.train_io_names(m)
+    assert len(inputs) == len(m.train_example_args())
+    n_p = 2 * m.n_layers
+    assert outputs[-2:] == ["loss", "overflow"]
+    assert len(outputs) == 2 * n_p + 2
+
+    inputs_e, outputs_e = aot.eval_io_names(m)
+    assert len(inputs_e) == len(m.eval_example_args())
+    assert outputs_e == ["err_count", "loss_sum"]
+
+
+def test_built_manifest_consistent_with_artifacts():
+    """If `make artifacts` has run, every referenced file must exist and
+    every model entry must be self-consistent."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for key, art in man["artifacts"].items():
+        assert os.path.exists(os.path.join(root, art["file"])), key
+        model = man["models"][art["model"]]
+        n_p = 2 * model["n_layers"]
+        if art["graph"] == "train":
+            assert len(art["inputs"]) == 2 * n_p + 9
+            assert art["outputs"][-2:] == ["loss", "overflow"]
+        else:
+            assert len(art["inputs"]) == n_p + 4
+    for name, model in man["models"].items():
+        assert model["n_groups"] == 8 * model["n_layers"]
+        assert len(model["group_names"]) == model["n_groups"]
+        assert len(model["params"]) == 2 * model["n_layers"]

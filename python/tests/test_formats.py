@@ -1,0 +1,56 @@
+"""Format bookkeeping invariants (paper Table 1 / section 4 semantics)."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import formats as F
+
+
+def test_group_indexing_bijective():
+    seen = set()
+    for l in range(4):
+        for k in range(F.N_KINDS):
+            g = F.group_index(l, k)
+            assert g not in seen
+            seen.add(g)
+    assert seen == set(range(F.n_groups(4)))
+
+
+def test_group_names_match_order():
+    names = [F.group_name(l, k) for l in range(3) for k in range(F.N_KINDS)]
+    assert names[0] == "l0.w"
+    assert names[F.group_index(1, F.KIND_DZ)] == "l1.dz"
+    assert len(set(names)) == len(names)
+
+
+@given(total_bits=st.integers(2, 32), int_bits=st.integers(-8, 10))
+def test_grid_has_2_to_the_b_levels(total_bits, int_bits):
+    """The representable grid must have exactly 2^B points in [-maxv, maxv)."""
+    step = F.step_for(int_bits, total_bits)
+    maxv = F.maxv_for(int_bits)
+    n_levels = (maxv - (-maxv)) / step
+    assert abs(n_levels - 2.0 ** total_bits) < 1e-6
+
+
+def test_paper_fig1_radix_5_range():
+    """Radix point after the 5th MSB -> range approximately [-32, 32]
+    (paper section 9.2)."""
+    assert F.maxv_for(5) == 32.0
+
+
+def test_paper_headline_formats():
+    """10-bit computations / 12-bit updates (paper abstract)."""
+    comp = F.FixedFormat(total_bits=10, int_bits=3)
+    up = F.FixedFormat(total_bits=12, int_bits=0)
+    assert comp.step == 2.0 ** (3 - 9)
+    assert up.step == 2.0 ** -11
+    assert F.FLOAT32.step == 0.0
+
+
+def test_half_float_table1_widths():
+    """Table 1: half precision = 1 sign + 5 exponent + 10 mantissa bits."""
+    f16 = np.float16
+    info = np.finfo(f16)
+    assert info.bits == 16
+    assert info.nmant == 10
+    assert info.iexp == 5

@@ -1,0 +1,84 @@
+"""Fused maxout dense Pallas kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+from compile.kernels.maxout import _pick_block, maxout_dense
+
+RNG = np.random.default_rng(99)
+
+
+def _mk(b, i, u, k, wscale=0.1):
+    x = (RNG.standard_normal((b, i)) * 2).astype(np.float32)
+    w = (RNG.standard_normal((k, i, u)) * wscale).astype(np.float32)
+    bias = (RNG.standard_normal((k, u)) * 0.2).astype(np.float32)
+    return x, w, bias
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 8, 64]),
+    i=st.sampled_from([16, 49, 784]),
+    u=st.sampled_from([10, 128]),
+    k=st.integers(1, 5),
+    int_bits=st.integers(-2, 6),
+    total_bits=st.integers(4, 31),
+)
+def test_matches_ref(b, i, u, k, int_bits, total_bits):
+    x, w, bias = _mk(b, i, u, k)
+    step, maxv = F.step_for(int_bits, total_bits), F.maxv_for(int_bits)
+    h, amax, stats = maxout_dense(x, w, bias, step, maxv)
+    hr, statsr = ref.maxout_dense_ref(x, w, bias, step, maxv)
+    # The kernel accumulates the dot products in a different order than the
+    # einsum oracle; f32 reassociation can move a weighted sum across a
+    # rounding boundary, so agreement is up to ONE quantization step (and
+    # exact for the overwhelming majority of entries).
+    hn, hrn = np.asarray(h), np.asarray(hr)
+    np.testing.assert_allclose(hn, hrn, atol=step + 1e-4, rtol=1e-5)
+    # (no exact-match assertion: for very fine steps, e.g. 2^-20, an f32
+    # reassociation difference of ~1e-7 relative flips the rounded LSB on
+    # a large fraction of entries — bounded by one step, as asserted.)
+    # counters likewise: values landing exactly on a counting threshold can
+    # tip either way under reassociation.
+    sn, srn = np.asarray(stats), np.asarray(statsr)
+    tol = max(4.0, 0.002 * float(srn[2]))
+    np.testing.assert_allclose(sn, srn, atol=tol)
+
+
+def test_argmax_routing_matches_oracle():
+    x, w, bias = _mk(64, 784, 128, 4)
+    step, maxv = F.step_for(3, 12), F.maxv_for(3)
+    _, amax, _ = maxout_dense(x, w, bias, step, maxv)
+    z = np.einsum("bi,kio->kbo", x, w) + bias[:, None, :]
+    zq = np.asarray(ref.quantize_ref(z, step, maxv))
+    np.testing.assert_array_equal(np.asarray(amax).astype(int), zq.argmax(axis=0))
+
+
+def test_float32_passthrough():
+    x, w, bias = _mk(8, 49, 10, 3)
+    h, _, stats = maxout_dense(x, w, bias, 0.0, 0.0)
+    hr, _ = ref.maxout_dense_ref(x, w, bias, 0.0, 0.0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-6)
+    assert np.asarray(stats)[0] == 0 and np.asarray(stats)[1] == 0
+
+
+def test_block_tiling_invariance():
+    """Result must not depend on the chosen block sizes (up to f32 summation
+    order: different reduction tilings reassociate the adds, which can move
+    a value across a rounding/counting boundary in rare cases)."""
+    x, w, bias = _mk(64, 784, 128, 2)
+    step, maxv = F.step_for(2, 10), F.maxv_for(2)
+    h1, a1, s1 = maxout_dense(x, w, bias, step, maxv, bt=64, ut=128, it=128)
+    h2, a2, s2 = maxout_dense(x, w, bias, step, maxv, bt=8, ut=16, it=49)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=step + 1e-6)
+    assert (np.asarray(a1) == np.asarray(a2)).mean() > 0.99
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=16)
+
+
+@given(dim=st.integers(1, 2048), pref=st.integers(1, 256))
+@settings(max_examples=60, deadline=None)
+def test_pick_block_always_divides(dim, pref):
+    bl = _pick_block(dim, pref)
+    assert 1 <= bl <= dim and dim % bl == 0 and bl <= max(pref, 1)

@@ -1,0 +1,239 @@
+"""L2 model correctness: manual backprop vs jax.grad, training dynamics,
+update rule semantics, overflow accounting, dropout determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import formats as F
+from compile import model as M
+from compile import quant
+
+RNG = np.random.default_rng(7)
+
+
+def init_params(m):
+    params = []
+    for s in m.param_specs():
+        if s["init"] == "zeros":
+            params.append(jnp.zeros(s["shape"], jnp.float32))
+        else:
+            lim = np.sqrt(6.0 / (s["fan_in"] + s["fan_out"]))
+            params.append(
+                jnp.asarray(RNG.uniform(-lim, lim, s["shape"]).astype(np.float32))
+            )
+    return params
+
+
+def make_batch(m, batch):
+    x = jnp.asarray(RNG.standard_normal((batch,) + m.input_shape).astype(np.float32))
+    y = jnp.asarray(np.eye(10, dtype=np.float32)[RNG.integers(0, 10, batch)])
+    return x, y
+
+
+def run_step(m, step_fn, params, vels, x, y, lr=0.1, mom=0.0, maxnorm=0.0,
+             seed=3.0, rates=None, steps=None, maxvs=None):
+    G, L = m.n_groups, m.n_layers
+    rates = jnp.zeros((L,), jnp.float32) if rates is None else rates
+    steps = jnp.zeros((G,), jnp.float32) if steps is None else steps
+    maxvs = jnp.zeros((G,), jnp.float32) if maxvs is None else maxvs
+    args = (
+        list(params) + list(vels)
+        + [x, y, jnp.float32(lr), jnp.float32(mom), jnp.float32(maxnorm),
+           jnp.float32(seed), rates, steps, maxvs]
+    )
+    out = step_fn(*args)
+    n = len(params)
+    return list(out[:n]), list(out[n : 2 * n]), out[2 * n], out[2 * n + 1]
+
+
+# ---------------------------------------------------------------------------
+# Manual backprop == jax.grad at float32 passthrough, no dropout.
+# ---------------------------------------------------------------------------
+
+
+def unquantized_loss(m, params, x, y):
+    """Reference float32 forward: mode="off" uses no Pallas calls, so the
+    whole graph is differentiable by jax.grad."""
+    q = quant.Q(
+        jnp.zeros((m.n_groups,), jnp.float32),
+        jnp.zeros((m.n_groups,), jnp.float32),
+        "off",
+        m.n_layers,
+    )
+    split = m._split_params(list(params))
+    rates = jnp.zeros((m.n_layers,), jnp.float32)
+    (z, logp), _ = m._forward(q, split, x, False, jnp.float32(0.0), rates)
+    return -jnp.sum(y * logp) / x.shape[0]
+
+
+@pytest.mark.parametrize(
+    "mk", [lambda: M.pi_mlp(units=32, k=2), lambda: M.conv(ch=(4, 4, 4)),
+           lambda: M.conv32(ch=(4, 4, 4))],
+    ids=["pi_mlp", "conv", "conv32"],
+)
+def test_manual_bwd_matches_jax_grad(mk):
+    m = mk()
+    params = init_params(m)
+    x, y = make_batch(m, 16)
+    step_fn = jax.jit(m.train_step("fixed"))
+    vels = [jnp.zeros_like(p) for p in params]
+    lr = 0.05
+    new_params, _, loss, _ = run_step(m, step_fn, params, vels, x, y, lr=lr)
+
+    gref = jax.grad(lambda ps: unquantized_loss(m, ps, x, y))(params)
+    for p, p2, g, s in zip(params, new_params, gref, m.param_specs()):
+        ours = (np.asarray(p) - np.asarray(p2)) / lr
+        np.testing.assert_allclose(
+            ours, np.asarray(g), atol=3e-5, rtol=1e-4,
+            err_msg=f"grad mismatch for {s['name']}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+
+def train_n(m, mode, n, steps_v=None, maxv_v=None, lr=0.1, mom=0.5):
+    params = init_params(m)
+    vels = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(m, M.TRAIN_BATCH)
+    step_fn = jax.jit(m.train_step(mode))
+    loss = None
+    for i in range(n):
+        params, vels, loss, stats = run_step(
+            m, step_fn, params, vels, x, y, lr=lr, mom=mom, seed=float(i),
+            steps=steps_v, maxvs=maxv_v,
+        )
+    return float(loss), params, stats
+
+
+def test_float32_loss_decreases():
+    m = M.pi_mlp(units=32, k=2)
+    l8, _, _ = train_n(m, "fixed", 8)
+    assert l8 < 1.0, l8
+
+
+def test_half_mode_trains():
+    m = M.pi_mlp(units=32, k=2)
+    l8, _, _ = train_n(m, "half", 8)
+    assert l8 < 1.0, l8
+
+
+def test_dynamic_12_10_bits_trains():
+    """Paper headline config: 10-bit computations, 12-bit updates."""
+    m = M.pi_mlp(units=32, k=2)
+    G = m.n_groups
+    steps_v = np.zeros(G, np.float32)
+    maxv_v = np.zeros(G, np.float32)
+    for l in range(m.n_layers):
+        for k in range(F.N_KINDS):
+            g = F.group_index(l, k)
+            bits = 12 if k in F.UPDATE_KINDS else 10
+            int_bits = 3 if k in (F.KIND_Z, F.KIND_H) else 0
+            steps_v[g] = F.step_for(int_bits, bits)
+            maxv_v[g] = F.maxv_for(int_bits)
+    l12, params, stats = train_n(
+        m, "fixed", 8, jnp.asarray(steps_v), jnp.asarray(maxv_v)
+    )
+    assert l12 < 1.5, l12
+    # all parameters must sit on their storage grid
+    for i, (p, s) in enumerate(zip(params, m.param_specs())):
+        g = F.group_index(s["layer"], F.KIND_W if s["kind"] == "w" else F.KIND_B)
+        k = np.asarray(p) / steps_v[g]
+        np.testing.assert_allclose(k, np.round(k), atol=1e-5)
+
+
+def test_severe_quantization_breaks_training():
+    """Sanity: 4-bit everything must NOT train as well as float32 (the
+    cliff the paper's figures 2-3 show must exist in our stack too)."""
+    m = M.pi_mlp(units=32, k=2)
+    G = m.n_groups
+    steps_v = np.full(G, F.step_for(3, 4), np.float32)
+    maxv_v = np.full(G, F.maxv_for(3), np.float32)
+    l4, _, _ = train_n(m, "fixed", 8, jnp.asarray(steps_v), jnp.asarray(maxv_v))
+    l32, _, _ = train_n(m, "fixed", 8)
+    assert l4 > l32 + 0.2, (l4, l32)
+
+
+# ---------------------------------------------------------------------------
+# Update rule semantics
+# ---------------------------------------------------------------------------
+
+
+def test_max_norm_constraint_enforced():
+    m = M.pi_mlp(units=16, k=2)
+    params = [p * 50.0 if p.ndim >= 2 else p for p in init_params(m)]
+    vels = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(m, 16)
+    step_fn = jax.jit(m.train_step("fixed"))
+    c = 1.5
+    new_params, _, _, _ = run_step(m, step_fn, params, vels, x, y, lr=0.0, maxnorm=c)
+    w0 = np.asarray(new_params[0])  # [k, in, out]
+    norms = np.sqrt((w0 ** 2).sum(axis=1))
+    assert norms.max() <= c + 1e-4
+
+
+def test_momentum_accumulates():
+    m = M.pi_mlp(units=16, k=2)
+    params = init_params(m)
+    vels = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(m, 16)
+    step_fn = jax.jit(m.train_step("fixed"))
+    _, vels1, _, _ = run_step(m, step_fn, params, vels, x, y, lr=0.1, mom=0.9)
+    v_norm1 = sum(float(jnp.sum(v * v)) for v in vels1)
+    assert v_norm1 > 0
+
+
+def test_overflow_totals_account_every_site():
+    m = M.pi_mlp(units=32, k=2)
+    params = init_params(m)
+    vels = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(m, M.TRAIN_BATCH)
+    step_fn = jax.jit(m.train_step("fixed"))
+    G = m.n_groups
+    steps_v = jnp.full((G,), F.step_for(4, 20), jnp.float32)
+    maxv_v = jnp.full((G,), F.maxv_for(4), jnp.float32)
+    _, _, _, stats = run_step(m, step_fn, params, vels, x, y,
+                              steps=steps_v, maxvs=maxv_v)
+    st = np.asarray(stats)
+    B, U, k = M.TRAIN_BATCH, 32, 2
+    # layer 0: z sees k*B*U weighted sums; h sees B*U outputs
+    assert st[F.group_index(0, F.KIND_Z), 2] == k * B * U
+    assert st[F.group_index(0, F.KIND_H), 2] == B * U
+    # w group counts exactly the stored weight tensor (not the velocity)
+    assert st[F.group_index(0, F.KIND_W), 2] == k * 784 * U
+    # dz of layer 1 routes through k filters
+    assert st[F.group_index(1, F.KIND_DZ), 2] == k * B * U
+
+
+# ---------------------------------------------------------------------------
+# Dropout
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_deterministic_given_seed():
+    x = jnp.asarray(RNG.standard_normal((64, 32)).astype(np.float32))
+    a1, _ = quant.dropout(x, jnp.float32(0.5), jnp.float32(11.0), 0x10)
+    a2, _ = quant.dropout(x, jnp.float32(0.5), jnp.float32(11.0), 0x10)
+    a3, _ = quant.dropout(x, jnp.float32(0.5), jnp.float32(12.0), 0x10)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert not np.array_equal(np.asarray(a1), np.asarray(a3))
+
+
+def test_dropout_rate_zero_is_identity():
+    x = jnp.asarray(RNG.standard_normal((16, 8)).astype(np.float32))
+    y, _ = quant.dropout(x, jnp.float32(0.0), jnp.float32(5.0), 0x20)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_dropout_rate_roughly_respected():
+    x = jnp.ones((100, 100), jnp.float32)
+    y, keep = quant.dropout(x, jnp.float32(0.5), jnp.float32(9.0), 0x30)
+    frac = float(np.asarray(keep).mean())
+    assert 0.45 < frac < 0.55, frac
+    # inverted scaling: kept entries are 1/(1-p)
+    kept_vals = np.asarray(y)[np.asarray(keep) > 0]
+    np.testing.assert_allclose(kept_vals, 2.0, rtol=1e-5)

@@ -1,0 +1,102 @@
+"""Pallas quantize kernel vs the pure-jnp oracle (the core L1 signal).
+
+hypothesis sweeps shapes, block sizes and format parameters; the kernel must
+agree with `ref.quantize_with_stats_ref` exactly (same f32 ops, same
+rounding), not just approximately.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile.kernels import ref
+from compile.kernels.quantize import quantize, quantize_with_stats
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=4.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    total_bits=st.integers(2, 31),
+    int_bits=st.integers(-4, 8),
+    block=st.sampled_from([64, 1024, 8192]),
+)
+def test_matches_ref_1d(n, total_bits, int_bits, block):
+    x = _rand((n,))
+    step = F.step_for(int_bits, total_bits)
+    maxv = F.maxv_for(int_bits)
+    y, stats = quantize_with_stats(x, step, maxv, block=block)
+    yr, statsr = ref.quantize_with_stats_ref(x, step, maxv)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(stats), np.asarray(statsr))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.sampled_from([(3, 5), (64, 784), (4, 64, 128), (1, 1, 1), (2, 3, 4, 5)]),
+    total_bits=st.integers(4, 20),
+)
+def test_matches_ref_nd(shape, total_bits):
+    x = _rand(shape)
+    step, maxv = F.step_for(2, total_bits), F.maxv_for(2)
+    y, stats = quantize_with_stats(x, step, maxv)
+    yr, statsr = ref.quantize_with_stats_ref(x, step, maxv)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(stats), np.asarray(statsr))
+
+
+def test_float32_passthrough_is_exact():
+    x = _rand((777,))
+    y, stats = quantize_with_stats(x, 0.0, 0.0)
+    np.testing.assert_array_equal(np.asarray(y), x)
+    assert np.asarray(stats).tolist() == [0.0, 0.0, 777.0]
+
+
+def test_idempotent():
+    """Quantizing an already-quantized tensor is the identity."""
+    x = _rand((2048,))
+    step, maxv = F.step_for(3, 10), F.maxv_for(3)
+    y1 = np.asarray(quantize(x, step, maxv))
+    y2 = np.asarray(quantize(y1, step, maxv))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_values_on_grid_and_saturated():
+    x = _rand((4096,), scale=20.0)
+    step, maxv = F.step_for(2, 8), F.maxv_for(2)  # range [-4, 4), step 2^-5
+    y = np.asarray(quantize(x, step, maxv))
+    k = y / step
+    np.testing.assert_allclose(k, np.round(k), atol=1e-6)  # on the grid
+    assert y.max() <= maxv - step + 1e-9
+    assert y.min() >= -maxv - 1e-9
+
+
+def test_rounding_is_half_away_from_zero():
+    step, maxv = 1.0, 2.0**10
+    x = np.array([0.5, -0.5, 1.5, -1.5, 2.5, -2.5], np.float32)
+    y = np.asarray(quantize(x, step, maxv))
+    np.testing.assert_array_equal(y, [1.0, -1.0, 2.0, -2.0, 3.0, -3.0])
+
+
+def test_overflow_counters_exact():
+    x = np.array([0.0, 1.0, 2.0, 3.9, 4.0, -4.0, -5.0, 100.0], np.float32)
+    _, stats = quantize_with_stats(x, F.step_for(2, 8), F.maxv_for(2))  # maxv=4
+    n_over, n_half, n_total = np.asarray(stats).tolist()
+    assert n_over == 4.0   # 4.0, -4.0, -5.0, 100.0  (|x| >= 4)
+    assert n_half == 6.0   # plus 2.0, 3.9           (|x| >= 2)
+    assert n_total == 8.0
+
+
+@pytest.mark.parametrize("total_bits,int_bits", [(10, 3), (12, 0), (20, 5)])
+def test_quantization_error_bounded(total_bits, int_bits):
+    x = _rand((4096,), scale=1.0)
+    step, maxv = F.step_for(int_bits, total_bits), F.maxv_for(int_bits)
+    y = np.asarray(quantize(x, step, maxv))
+    inside = np.abs(x) < maxv - step
+    assert np.max(np.abs(y[inside] - x[inside])) <= step / 2 + 1e-9

@@ -1,0 +1,49 @@
+//! Paper Figure 1: final test error vs radix point position.
+//!
+//! Fixed point, 31-bit computations AND parameter updates (32 with sign);
+//! the radix position (number of integer bits) sweeps 0..8. Errors are
+//! normalized by the float32 baseline. The paper finds the optimum at
+//! radix 5 (range ≈ [-32, 32]) on permutation-invariant MNIST + CIFAR10;
+//! we sweep the two pi_mlp workloads (digits = PI MNIST analogue,
+//! clusters = pure-PI control).
+
+#[path = "common.rs"]
+mod common;
+
+use lpdnn::bench_support::print_series;
+use lpdnn::config::Arithmetic;
+use lpdnn::coordinator::{run_sweep, SweepPoint};
+
+fn main() {
+    let (engine, manifest) = common::setup();
+    for dataset in ["digits", "clusters"] {
+        let baseline = common::base_cfg(&format!("fig1-base-{dataset}"), "pi_mlp", dataset);
+        let points: Vec<SweepPoint> = (0..=8)
+            .map(|radix| {
+                let mut cfg = baseline.clone();
+                cfg.name = format!("fig1-{dataset}-radix{radix}");
+                cfg.arithmetic = Arithmetic::Fixed {
+                    bits_comp: common::WIDE_BITS,
+                    bits_up: common::WIDE_BITS,
+                    int_bits: radix,
+                };
+                SweepPoint { label: format!("{radix}"), cfg }
+            })
+            .collect();
+
+        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+
+        println!("\n=== Figure 1 analogue ({dataset}): error vs radix position ===");
+        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
+        println!("(paper: optimum at radix 5, sharp rise at small radix)\n");
+        let series: Vec<(f64, f64)> = rows
+            .iter()
+            .map(|r| (r.label.parse::<f64>().unwrap(), r.normalized))
+            .collect();
+        print_series(
+            &format!("normalized final test error, {dataset} (fixed 31/31)"),
+            "radix",
+            &series,
+        );
+    }
+}

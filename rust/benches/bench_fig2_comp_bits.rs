@@ -1,0 +1,63 @@
+//! Paper Figure 2: final test error vs COMPUTATION bit-width, for fixed
+//! point vs dynamic fixed point.
+//!
+//! Parameter updates stay at 31 bits; the computation width sweeps. For
+//! fixed point the radix sits at the paper's optimum (5); dynamic fixed
+//! point uses max overflow rate 0.01% (paper settings). Expected shape:
+//! a cliff below ~19 bits for fixed point and below ~9 bits for dynamic
+//! fixed point (sign excluded — the paper counts 20/10 with sign).
+
+#[path = "common.rs"]
+mod common;
+
+use lpdnn::bench_support::print_series;
+use lpdnn::config::Arithmetic;
+use lpdnn::coordinator::{run_sweep, SweepPoint};
+
+fn main() {
+    let (engine, manifest) = common::setup();
+    let dataset = "digits";
+    let baseline = common::base_cfg("fig2-base", "pi_mlp", dataset);
+    let widths: Vec<i32> = vec![6, 8, 10, 12, 14, 16, 18, 20, 24, 28];
+
+    for arith_name in ["fixed", "dynamic"] {
+        let points: Vec<SweepPoint> = widths
+            .iter()
+            .map(|&bits| {
+                let mut cfg = baseline.clone();
+                cfg.name = format!("fig2-{arith_name}-{bits}");
+                cfg.arithmetic = match arith_name {
+                    "fixed" => Arithmetic::Fixed {
+                        bits_comp: bits,
+                        bits_up: common::WIDE_BITS,
+                        int_bits: 5,
+                    },
+                    _ => {
+                        let mut a = common::dynamic(bits, common::WIDE_BITS, 1e-4,
+                            baseline.data.n_train);
+                        if let Arithmetic::Dynamic { ref mut bits_up, .. } = a {
+                            *bits_up = common::WIDE_BITS;
+                        }
+                        a
+                    }
+                };
+                SweepPoint { label: format!("{bits}"), cfg }
+            })
+            .collect();
+
+        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+        println!("\n=== Figure 2 analogue ({arith_name} point, {dataset}) ===");
+        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
+        let series: Vec<(f64, f64)> =
+            rows.iter().map(|r| (r.label.parse().unwrap(), r.normalized)).collect();
+        print_series(
+            &format!("normalized error vs computation bits ({arith_name}, up=31)"),
+            "bits",
+            &series,
+        );
+        println!(
+            "(paper: cliff below {} bits for {arith_name})",
+            if arith_name == "fixed" { 20 } else { 10 }
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Paper Figure 3: final test error vs PARAMETER UPDATE bit-width.
+//!
+//! Computations stay at 31 bits; the storage width of θ (and the momentum
+//! buffer) sweeps. This isolates the paper's section 6 argument: SGD
+//! accumulates many small contributions, so parameter storage needs more
+//! precision than the computations — fixed point collapses below ~19
+//! bits, dynamic fixed point below ~11 bits (20/12 with sign).
+
+#[path = "common.rs"]
+mod common;
+
+use lpdnn::bench_support::print_series;
+use lpdnn::config::Arithmetic;
+use lpdnn::coordinator::{run_sweep, SweepPoint};
+
+fn main() {
+    let (engine, manifest) = common::setup();
+    let dataset = "digits";
+    let baseline = common::base_cfg("fig3-base", "pi_mlp", dataset);
+    let widths: Vec<i32> = vec![6, 8, 10, 12, 14, 16, 18, 20, 24, 28];
+
+    for arith_name in ["fixed", "dynamic"] {
+        let points: Vec<SweepPoint> = widths
+            .iter()
+            .map(|&bits| {
+                let mut cfg = baseline.clone();
+                cfg.name = format!("fig3-{arith_name}-{bits}");
+                cfg.arithmetic = match arith_name {
+                    "fixed" => Arithmetic::Fixed {
+                        bits_comp: common::WIDE_BITS,
+                        bits_up: bits,
+                        int_bits: 5,
+                    },
+                    _ => {
+                        let mut a = common::dynamic(common::WIDE_BITS, bits, 1e-4,
+                            baseline.data.n_train);
+                        if let Arithmetic::Dynamic { ref mut bits_comp, .. } = a {
+                            *bits_comp = common::WIDE_BITS;
+                        }
+                        a
+                    }
+                };
+                SweepPoint { label: format!("{bits}"), cfg }
+            })
+            .collect();
+
+        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+        println!("\n=== Figure 3 analogue ({arith_name} point, {dataset}) ===");
+        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
+        let series: Vec<(f64, f64)> =
+            rows.iter().map(|r| (r.label.parse().unwrap(), r.normalized)).collect();
+        print_series(
+            &format!("normalized error vs parameter-update bits ({arith_name}, comp=31)"),
+            "bits",
+            &series,
+        );
+        println!(
+            "(paper: cliff below {} bits for {arith_name})",
+            if arith_name == "fixed" { 20 } else { 12 }
+        );
+    }
+}

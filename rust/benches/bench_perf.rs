@@ -1,0 +1,180 @@
+//! Performance micro-benchmarks: the numbers EXPERIMENTS.md §Perf tracks.
+//!
+//! * compiled train-step latency per model/mode (the end-to-end hot path)
+//! * compiled eval-step latency
+//! * host quantizer throughput (GB/s over f32)
+//! * golden train step (host reference point for the compiled step)
+//! * literal conversion overhead (the L3↔PJRT boundary)
+//! * scale controller overhead per tick
+
+#[path = "common.rs"]
+mod common;
+
+use lpdnn::arith::{FixedFormat, Quantizer, RoundMode};
+use lpdnn::bench_support::{bench, scaled, Stats, Table};
+use lpdnn::config::Arithmetic;
+use lpdnn::coordinator::{ScaleController, Trainer};
+use lpdnn::golden::{self, MlpShape};
+use lpdnn::runtime::literal_util::*;
+use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
+
+fn fmt_stats(s: &Stats) -> String {
+    format!(
+        "{:.2}ms ±{:.2} (p50 {:.2}, p90 {:.2}, n={})",
+        s.mean * 1e3,
+        s.sd * 1e3,
+        s.p50 * 1e3,
+        s.p90 * 1e3,
+        s.n
+    )
+}
+
+fn main() {
+    let (engine, manifest) = common::setup();
+    let mut table = Table::new(&["benchmark", "result"]);
+
+    // ------------------------------------------------------------------
+    // compiled step latency per model
+    // ------------------------------------------------------------------
+    for model in ["pi_mlp", "conv", "conv32"] {
+        let dataset = match model {
+            "pi_mlp" => "digits",
+            "conv" => "digits",
+            _ => "cifar_like",
+        };
+        let mut cfg = common::base_cfg(&format!("perf-{model}"), model, dataset);
+        cfg.train.steps = scaled(20).max(5);
+        cfg.data.n_train = 512;
+        cfg.data.n_test = 256;
+        cfg.arithmetic = Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
+        let t0 = std::time::Instant::now();
+        let r = Trainer::new(&engine, &manifest, cfg).run().expect("run");
+        let total = t0.elapsed().as_secs_f64();
+        let per_step = (total
+            - 0.0) // compile amortized via engine cache across benches
+            / r.steps_run as f64;
+        table.row(&[
+            format!("{model} end-to-end per train step (incl. eval amortized)"),
+            format!("{:.1}ms", per_step * 1e3),
+        ]);
+    }
+
+    // isolated compiled step (no batcher, no literal rebuild of x/y)
+    {
+        let model = manifest.model("pi_mlp").unwrap();
+        let exe = engine
+            .load_cached(manifest.artifact("pi_mlp", "fixed", "train").unwrap())
+            .unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let params: Vec<Tensor> =
+            model.params.iter().map(|s| s.init.realize(&s.shape, &mut rng)).collect();
+        let x = Tensor::from_vec(
+            &[64, 784],
+            (0..64 * 784).map(|_| rng.uniform()).collect(),
+        );
+        let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
+        let y = ops::one_hot(&labels, 10);
+        let build_inputs = || {
+            let mut inputs = Vec::new();
+            for p in &params {
+                inputs.push(tensor_to_literal(p).unwrap());
+            }
+            for p in &params {
+                inputs.push(tensor_to_literal(&Tensor::zeros(p.shape())).unwrap());
+            }
+            inputs.push(tensor_to_literal(&x).unwrap());
+            inputs.push(tensor_to_literal(&y).unwrap());
+            for v in [0.1f32, 0.5, 3.0, 7.0] {
+                inputs.push(scalar(v));
+            }
+            inputs.push(slice_to_literal(&[0.0; 3], &[3]).unwrap());
+            inputs.push(slice_to_literal(&vec![2f32.powi(-6); 24], &[24]).unwrap());
+            inputs.push(slice_to_literal(&vec![8.0; 24], &[24]).unwrap());
+            inputs
+        };
+        let inputs = build_inputs();
+        let s = bench(3, scaled(30).max(10), || {
+            let _ = exe.run(&inputs).unwrap();
+        });
+        table.row(&["pi_mlp compiled train step (XLA execute only)".into(), fmt_stats(&s)]);
+
+        let s = bench(3, scaled(30).max(10), || {
+            let _ = build_inputs();
+        });
+        table.row(&["pi_mlp input literal assembly (L3→PJRT boundary)".into(), fmt_stats(&s)]);
+    }
+
+    // ------------------------------------------------------------------
+    // host quantizer throughput
+    // ------------------------------------------------------------------
+    {
+        let mut rng = Pcg32::seeded(2);
+        let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
+        let q = Quantizer::from_format(FixedFormat::new(12, 3));
+        let s = bench(2, 10, || {
+            let _ = q.apply_slice(&mut xs);
+        });
+        let gbps = (xs.len() * 4) as f64 / s.mean / 1e9;
+        table.row(&[
+            "host quantizer (apply_slice, 16 MiB f32)".into(),
+            format!("{:.2} GB/s ({:.2}ms)", gbps, s.mean * 1e3),
+        ]);
+    }
+
+    // ------------------------------------------------------------------
+    // golden host train step (reference for the compiled one)
+    // ------------------------------------------------------------------
+    {
+        let shape = MlpShape::pi_mlp(128, 4);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+        let mut rng = Pcg32::seeded(3);
+        let mut params = vec![
+            InitSpec::GlorotUniform { fan_in: 784, fan_out: 128 }
+                .realize(&[4, 784, 128], &mut rng),
+            Tensor::zeros(&[4, 128]),
+            InitSpec::GlorotUniform { fan_in: 128, fan_out: 128 }
+                .realize(&[4, 128, 128], &mut rng),
+            Tensor::zeros(&[4, 128]),
+            InitSpec::GlorotUniform { fan_in: 128, fan_out: 10 }
+                .realize(&[128, 10], &mut rng),
+            Tensor::zeros(&[10]),
+        ];
+        let mut vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let x = Tensor::from_vec(&[64, 784], (0..64 * 784).map(|_| rng.uniform()).collect());
+        let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
+        let y = ops::one_hot(&labels, 10);
+        let s = bench(1, scaled(10).max(3), || {
+            let _ = golden::train_step(
+                shape, &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl,
+                RoundMode::HalfAway,
+            );
+        });
+        table.row(&["golden host train step (pi_mlp, single thread)".into(), fmt_stats(&s)]);
+    }
+
+    // ------------------------------------------------------------------
+    // controller overhead
+    // ------------------------------------------------------------------
+    {
+        let mut ctrl = ScaleController::dynamic(
+            3,
+            FixedFormat::new(10, 3),
+            FixedFormat::new(12, 0),
+            1e-4,
+            64,
+        );
+        let overflow = Tensor::from_vec(&[24, 3], vec![1.0; 72]);
+        let s = bench(10, 1000, || {
+            ctrl.observe_matrix(&overflow);
+            let _ = ctrl.after_batch(64, 0);
+        });
+        table.row(&[
+            "scale controller observe+tick (24 groups)".into(),
+            format!("{:.2}µs", s.mean * 1e6),
+        ]);
+    }
+
+    println!("\n=== performance micro-benchmarks ===");
+    table.print();
+    println!("(tracked across optimization iterations in EXPERIMENTS.md §Perf)");
+}

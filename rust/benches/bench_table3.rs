@@ -1,0 +1,93 @@
+//! Paper Table 3: final test error per arithmetic per dataset.
+//!
+//! | Format                  | Comp | Up | PI | MNIST | CIFAR10 | SVHN |
+//!
+//! Datasets map to our synthetic substitutes (DESIGN.md §Substitutions):
+//! PI MNIST → pi_mlp/digits(flattened), MNIST conv → conv/digits,
+//! CIFAR10 → conv32/cifar_like, SVHN → conv32/svhn_like.
+//!
+//! Expected shape (not absolute numbers): float16 ≈ float32;
+//! fixed 20/20 slightly degraded; dynamic 10/12 close to float32 with the
+//! largest gap on the SVHN-like workload (paper: 4.95% vs 2.71%).
+
+#[path = "common.rs"]
+mod common;
+
+use lpdnn::bench_support::Table;
+use lpdnn::config::Arithmetic;
+use lpdnn::coordinator::Trainer;
+
+fn main() {
+    let (engine, manifest) = common::setup();
+    let workloads: Vec<(&str, &str, &str)> = vec![
+        ("PI digits", "pi_mlp", "digits"),
+        ("digits conv", "conv", "digits"),
+        ("cifar-like", "conv32", "cifar_like"),
+        ("svhn-like", "conv32", "svhn_like"),
+    ];
+
+    let mut table = Table::new(&[
+        "format", "comp", "up", "PI digits", "digits conv", "cifar-like", "svhn-like",
+    ]);
+    let mut rows: Vec<(&str, &str, &str, Vec<f64>)> = vec![
+        ("float32 (baseline)", "32", "32", vec![]),
+        ("float16", "16", "16", vec![]),
+        ("fixed point", "20", "20", vec![]),
+        ("dynamic fixed point", "10", "12", vec![]),
+    ];
+
+    for &(wl_name, model, dataset) in &workloads {
+        let base = common::base_cfg(&format!("tbl3-{wl_name}"), model, dataset);
+        let arithmetics = [
+            Arithmetic::Float32,
+            Arithmetic::Half,
+            Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 },
+            common::dynamic(10, 12, 1e-4, base.data.n_train),
+        ];
+        for (row, arith) in rows.iter_mut().zip(arithmetics) {
+            let mut cfg = base.clone();
+            cfg.name = format!("tbl3-{}-{}", wl_name, row.0);
+            cfg.arithmetic = arith;
+            let t0 = std::time::Instant::now();
+            let r = Trainer::new(&engine, &manifest, cfg).run().expect("run");
+            eprintln!(
+                "  [{wl_name}] {}: {:.2}% ({:.0?})",
+                row.0,
+                100.0 * r.test_error,
+                t0.elapsed()
+            );
+            row.3.push(r.test_error);
+        }
+    }
+
+    println!("\n=== Table 3 analogue: final test error (%) ===");
+    println!("(paper: float32 1.05/0.51/14.05/2.71, float16 1.10/0.51/14.14/3.02,");
+    println!(" fixed-20 1.39/0.57/15.98/2.97, dynamic-10/12 1.28/0.59/14.82/4.95)\n");
+    for (name, comp, up, errs) in &rows {
+        let cells: Vec<String> = std::iter::once(name.to_string())
+            .chain([comp.to_string(), up.to_string()])
+            .chain(errs.iter().map(|e| format!("{:.2}%", 100.0 * e)))
+            .collect();
+        table.row(&cells);
+    }
+    table.print();
+
+    // normalized view (the paper's figures divide by the float32 row);
+    // the baseline is floored at one test-set error so a perfect float32
+    // run doesn't blow the ratio up to infinity.
+    println!("normalized vs float32 baseline (baseline floored at 1 error):");
+    let floor = 1.0 / 512.0;
+    let baseline = rows[0].3.clone();
+    let mut norm = Table::new(&["format", "PI digits", "digits conv", "cifar-like", "svhn-like"]);
+    for (name, _, _, errs) in &rows[1..] {
+        let cells: Vec<String> = std::iter::once(name.to_string())
+            .chain(
+                errs.iter()
+                    .zip(&baseline)
+                    .map(|(e, b)| format!("{:.2}x", e / b.max(floor))),
+            )
+            .collect();
+        norm.row(&cells);
+    }
+    norm.print();
+}

@@ -1,0 +1,80 @@
+//! Shared helpers for the bench binaries (each bench is its own crate;
+//! included via `#[path = "common.rs"] mod common;`).
+//!
+//! Budgets: every bench scales its training-step counts by
+//! `LPDNN_BENCH_SCALE` (default 1.0) via `bench_support::scaled`, so a
+//! quick smoke pass is `LPDNN_BENCH_SCALE=0.1 cargo bench`.
+
+#![allow(dead_code)]
+
+use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
+use lpdnn::runtime::{Engine, Manifest};
+
+/// PJRT engine + manifest, or a clear message when artifacts are missing.
+pub fn setup() -> (Engine, Manifest) {
+    let dir = Manifest::default_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo bench`"
+    );
+    let manifest = Manifest::load(dir).expect("manifest");
+    let engine = Engine::cpu().expect("PJRT cpu client");
+    (engine, manifest)
+}
+
+/// Per-model default budgets tuned to the CPU testbed (see DESIGN.md):
+/// (steps, n_train, n_test, lr_start).
+pub fn budget(model: &str) -> (usize, usize, usize, f32) {
+    use lpdnn::bench_support::scaled;
+    // LRs are set so the NARROWEST formats in each sweep stay stable:
+    // at 10-bit computations, quantization noise on the updates grows with
+    // the learning rate, and conv nets random-walk into the max-norm
+    // boundary (activation explosion) above ~0.02 on this budget — the
+    // same fragility the paper's Table 3 shows on SVHN for dynamic 10/12.
+    match model {
+        "pi_mlp" | "pi_mlp_wide" => (scaled(200), 2048, 512, 0.15),
+        "conv" => (scaled(120), 1024, 512, 0.02),
+        "conv32" => (scaled(120), 2048, 256, 0.03),
+        other => panic!("no budget for model {other}"),
+    }
+}
+
+/// Base experiment config for (model, dataset) with the bench budget.
+pub fn base_cfg(name: &str, model: &str, dataset: &str) -> ExperimentConfig {
+    let (steps, n_train, n_test, lr) = budget(model);
+    ExperimentConfig {
+        name: name.into(),
+        model: model.into(),
+        arithmetic: Arithmetic::Float32,
+        train: TrainConfig {
+            steps,
+            lr_start: lr,
+            lr_end: lr / 10.0,
+            mom_start: 0.5,
+            mom_end: 0.7,
+            max_norm: 3.0,
+            dropout_input: 0.0,
+            dropout_hidden: 0.0,
+            seed: 20140101, // fixed master seed: runs are fully deterministic
+            eval_every: 0,
+        },
+        data: DataConfig { dataset: dataset.into(), n_train, n_test },
+    }
+}
+
+/// The paper's canonical dynamic fixed point arithmetic with warmup.
+pub fn dynamic(bits_comp: i32, bits_up: i32, max_rate: f64, n_train: usize) -> Arithmetic {
+    Arithmetic::Dynamic {
+        bits_comp,
+        bits_up,
+        max_overflow_rate: max_rate,
+        // paper: every 10 000 examples; scaled to our smaller corpora so
+        // the controller ticks a comparable number of times per epoch
+        update_every_examples: (n_train / 2).max(512),
+        init_int_bits: 3,
+        warmup_steps: lpdnn::bench_support::scaled(50),
+    }
+}
+
+/// Paper Figure 1/2/3 "31-bit" wide format (32 with the sign).
+pub const WIDE_BITS: i32 = 31;

@@ -1,0 +1,205 @@
+//! Dynamic fixed point group state + the paper's update rule (section 5).
+//!
+//! In dynamic fixed point, a few grouped variables (one layer's weights,
+//! or its weighted sums, or the gradients of its outputs, ...) share one
+//! scaling factor that is updated *online* from overflow statistics:
+//!
+//! > "We update the scaling factors at a given frequency: if the overflow
+//! > rate associated with a scaling factor is superior to a given maximum
+//! > overflow rate, we multiply this scaling factor by two. If the
+//! > overflow rate associated with the half of a scaling factor is
+//! > inferior to the maximum overflow rate, we divide this scaling factor
+//! > by two."
+//!
+//! The compiled train step reports, per group, exactly the two counters
+//! this rule needs: `n_over = #{|x| ≥ maxv}` (rate at the current scale)
+//! and `n_half = #{|x| ≥ maxv/2}` (the rate the group *would* see at half
+//! the scale). [`GroupState`] accumulates them between update ticks; the
+//! coordinator calls [`GroupState::maybe_update`] every
+//! `update_every_examples` examples (paper: 10 000; max rate 0.01%).
+
+use super::format::FixedFormat;
+use super::quantizer::QuantStats;
+
+/// Per-call overflow counters (alias of the quantizer's statistics type:
+/// they are the same three numbers).
+pub type OverflowCounts = QuantStats;
+
+/// What the update rule decided at a tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateDecision {
+    /// Overflowing too often → double the scaling factor (one more
+    /// integer bit, one less fraction bit).
+    ScaleUp,
+    /// Even half the scale would be overflow-safe → halve the scaling
+    /// factor (gain one fraction bit of precision).
+    ScaleDown,
+    /// Leave the scale as is.
+    Hold,
+}
+
+/// One scaling-factor group's dynamic state.
+#[derive(Clone, Debug)]
+pub struct GroupState {
+    /// Current format. `total_bits` is fixed by the experiment config;
+    /// `int_bits` is what the controller moves.
+    pub fmt: FixedFormat,
+    /// Counters accumulated since the last update tick.
+    acc: OverflowCounts,
+    /// Clamp for `int_bits` (avoids f32-degenerate scales on pathological
+    /// inputs; wide enough to never bind in the paper's regime).
+    pub int_bits_min: i32,
+    pub int_bits_max: i32,
+}
+
+impl GroupState {
+    pub fn new(fmt: FixedFormat) -> Self {
+        GroupState { fmt, acc: OverflowCounts::default(), int_bits_min: -24, int_bits_max: 24 }
+    }
+
+    /// Feed one train step's counters for this group.
+    pub fn observe(&mut self, counts: OverflowCounts) {
+        self.acc.merge(counts);
+    }
+
+    /// Counters accumulated since the last tick (for metrics/logging).
+    pub fn pending(&self) -> OverflowCounts {
+        self.acc
+    }
+
+    /// Apply the paper's rule and reset the accumulator. `max_rate` is the
+    /// maximum overflow rate (paper default 1e-4, i.e. 0.01%).
+    pub fn maybe_update(&mut self, max_rate: f64) -> UpdateDecision {
+        let decision = if self.acc.n_total == 0 {
+            UpdateDecision::Hold
+        } else if self.acc.rate() > max_rate && self.fmt.int_bits < self.int_bits_max {
+            UpdateDecision::ScaleUp
+        } else if self.acc.half_rate() < max_rate && self.fmt.int_bits > self.int_bits_min {
+            UpdateDecision::ScaleDown
+        } else {
+            UpdateDecision::Hold
+        };
+        match decision {
+            UpdateDecision::ScaleUp => self.fmt = self.fmt.scale_up(),
+            UpdateDecision::ScaleDown => self.fmt = self.fmt.scale_down(),
+            UpdateDecision::Hold => {}
+        }
+        self.acc = OverflowCounts::default();
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    fn state(int_bits: i32) -> GroupState {
+        GroupState::new(FixedFormat::new(12, int_bits))
+    }
+
+    fn counts(over: u64, half: u64, total: u64) -> OverflowCounts {
+        OverflowCounts { n_over: over, n_half: half, n_total: total }
+    }
+
+    #[test]
+    fn overflowing_group_scales_up() {
+        let mut s = state(2);
+        s.observe(counts(100, 200, 10_000)); // rate 1% > 0.01%
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::ScaleUp);
+        assert_eq!(s.fmt.int_bits, 3);
+    }
+
+    #[test]
+    fn quiet_group_scales_down() {
+        let mut s = state(2);
+        s.observe(counts(0, 0, 10_000)); // even half scale never overflows
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::ScaleDown);
+        assert_eq!(s.fmt.int_bits, 1);
+    }
+
+    #[test]
+    fn boundary_group_holds() {
+        let mut s = state(2);
+        // current scale fine (rate ≤ max), half scale would overflow too
+        // often (half_rate ≥ max) → exactly the paper's steady state.
+        s.observe(counts(0, 50, 10_000)); // half_rate 0.5% ≥ 0.01%
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::Hold);
+        assert_eq!(s.fmt.int_bits, 2);
+    }
+
+    #[test]
+    fn accumulator_resets_after_tick() {
+        let mut s = state(0);
+        s.observe(counts(1000, 1000, 1000));
+        s.maybe_update(1e-4);
+        assert_eq!(s.pending(), OverflowCounts::default());
+        // no new observations → Hold
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::Hold);
+    }
+
+    #[test]
+    fn respects_clamps() {
+        let mut s = state(24);
+        s.observe(counts(1000, 1000, 1000));
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::Hold); // at max
+
+        let mut s = state(-24);
+        s.observe(counts(0, 0, 1000));
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::Hold); // at min
+    }
+
+    #[test]
+    fn up_has_priority_over_down() {
+        // Pathological: overflowing AND quiet-at-half cannot both be true
+        // (n_half ≥ n_over by definition), but if rates straddle max_rate
+        // the rule must prefer range (ScaleUp).
+        let mut s = state(0);
+        s.observe(counts(20, 20, 10_000)); // rate 0.2% > 0.01%
+        assert_eq!(s.maybe_update(1e-4), UpdateDecision::ScaleUp);
+    }
+
+    #[test]
+    fn converges_to_stable_scale_on_stationary_data() {
+        // Simulated stationary distribution: |x| ~ N(0, 1). The controller
+        // must settle at the int_bits where rate ≤ max < half-scale rate.
+        forall("controller convergence", |g: &mut Gen| {
+            let mut s = state(g.i32_range(-6, 10));
+            let max_rate = 1e-3;
+            let mut last = s.fmt.int_bits;
+            let mut stable = 0;
+            for _ in 0..60 {
+                // Draw a batch; count overflow at the current scale.
+                let maxv = s.fmt.maxv() as f64;
+                let (mut over, mut half) = (0u64, 0u64);
+                let n = 2000u64;
+                for _ in 0..n {
+                    let x = g.f32_normal(0.0, 1.0).abs() as f64;
+                    if x >= maxv {
+                        over += 1;
+                    }
+                    if x >= maxv / 2.0 {
+                        half += 1;
+                    }
+                }
+                s.observe(counts(over, half, n));
+                s.maybe_update(max_rate);
+                if s.fmt.int_bits == last {
+                    stable += 1;
+                } else {
+                    stable = 0;
+                    last = s.fmt.int_bits;
+                }
+            }
+            // N(0,1): P(|x| ≥ 4) ≈ 6e-5 < 1e-3 < P(|x| ≥ 2) ≈ 0.046
+            // → stable point is int_bits = 2 (maxv 4); allow ±1 for
+            // sampling noise at the decision boundary.
+            assert!(
+                (1..=3).contains(&s.fmt.int_bits),
+                "settled at {}",
+                s.fmt.int_bits
+            );
+            assert!(stable >= 5, "never stabilized (last window {stable})");
+        });
+    }
+}

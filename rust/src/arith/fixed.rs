@@ -1,0 +1,172 @@
+//! `QFixed`: a saturating software fixed point scalar (paper section 4).
+//!
+//! This is the "what the dedicated hardware would actually hold" view: a
+//! signed integer mantissa plus a [`FixedFormat`]. The tensor-level
+//! [`crate::arith::Quantizer`] operates on f32 for speed; `QFixed` is the
+//! bit-true model used by property tests to prove the f32 path and the
+//! integer path agree, and by the format-explorer example to show real
+//! mantissa bit patterns.
+//!
+//! Arithmetic follows classic DSP fixed point rules:
+//! * add/sub: same format, saturating on overflow;
+//! * mul: full-precision intermediate (i64), then rounded back to the
+//!   format with the configured [`RoundMode`] and saturated —
+//!   equivalently, a wide accumulator feeding a narrow store, the paper's
+//!   section 7 hardware hypothesis.
+
+use super::format::FixedFormat;
+use super::round::RoundMode;
+
+/// A value on the fixed point grid: `value = mantissa * format.step()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFixed {
+    /// Signed mantissa, confined to `[-2^(B-1), 2^(B-1) - 1]`.
+    pub mantissa: i64,
+    pub format: FixedFormat,
+}
+
+impl QFixed {
+    /// Lowest representable mantissa for the format.
+    fn man_min(fmt: FixedFormat) -> i64 {
+        -(1i64 << (fmt.total_bits - 1))
+    }
+
+    /// Highest representable mantissa for the format.
+    fn man_max(fmt: FixedFormat) -> i64 {
+        (1i64 << (fmt.total_bits - 1)) - 1
+    }
+
+    fn saturate(m: i64, fmt: FixedFormat) -> i64 {
+        m.clamp(Self::man_min(fmt), Self::man_max(fmt))
+    }
+
+    /// Quantize an f32 onto the grid (round + saturate).
+    pub fn from_f32(x: f32, fmt: FixedFormat, mode: RoundMode, u: f32) -> Self {
+        assert!(!fmt.is_float32(), "QFixed requires a concrete format");
+        let scaled = x / fmt.step();
+        let m = mode.round(scaled, u) as i64;
+        QFixed { mantissa: Self::saturate(m, fmt), format: fmt }
+    }
+
+    /// The real value this mantissa represents.
+    pub fn to_f32(self) -> f32 {
+        self.mantissa as f32 * self.format.step()
+    }
+
+    /// Saturating addition (same format required).
+    pub fn add(self, rhs: QFixed) -> QFixed {
+        assert_eq!(self.format, rhs.format, "format mismatch");
+        QFixed {
+            mantissa: Self::saturate(self.mantissa + rhs.mantissa, self.format),
+            format: self.format,
+        }
+    }
+
+    /// Saturating subtraction (same format required).
+    pub fn sub(self, rhs: QFixed) -> QFixed {
+        assert_eq!(self.format, rhs.format, "format mismatch");
+        QFixed {
+            mantissa: Self::saturate(self.mantissa - rhs.mantissa, self.format),
+            format: self.format,
+        }
+    }
+
+    /// Multiplication with a wide (i64) intermediate, rounded back to the
+    /// format. `m1*m2*step²/step = m1*m2*step`, so the product mantissa is
+    /// `round(m1*m2*step)` — one shift when step is a power of two.
+    pub fn mul(self, rhs: QFixed, mode: RoundMode, u: f32) -> QFixed {
+        assert_eq!(self.format, rhs.format, "format mismatch");
+        let fmt = self.format;
+        let wide = self.mantissa as i128 * rhs.mantissa as i128; // exact
+        // wide * step is the product in units of `step`; do it in f64 to
+        // keep 53 bits of the intermediate (enough for B ≤ 26 mantissas).
+        let scaled = wide as f64 * fmt.step() as f64;
+        let m = mode.round(scaled as f32, u) as i64;
+        QFixed { mantissa: Self::saturate(m, fmt), format: fmt }
+    }
+
+    /// True iff `x` would saturate at this format (feeds overflow counters).
+    pub fn overflows(x: f32, fmt: FixedFormat) -> bool {
+        x.abs() >= fmt.maxv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    const FMT: FixedFormat = FixedFormat::new(12, 3);
+
+    #[test]
+    fn roundtrip_on_grid_values() {
+        forall("grid roundtrip", |g: &mut Gen| {
+            let m = g.i32_range(-2048, 2047) as i64;
+            let q = QFixed { mantissa: m, format: FMT };
+            let back = QFixed::from_f32(q.to_f32(), FMT, RoundMode::HalfAway, 0.0);
+            assert_eq!(back.mantissa, m);
+        });
+    }
+
+    #[test]
+    fn from_f32_agrees_with_kernel_formula() {
+        // The Pallas kernel: clip(round_half_away(x/step), lo, hi) * step.
+        forall("f32 vs integer path", |g: &mut Gen| {
+            let x = g.f32_range(-20.0, 20.0);
+            let q = QFixed::from_f32(x, FMT, RoundMode::HalfAway, 0.0);
+            let step = FMT.step();
+            let lim_lo = -FMT.maxv() / step;
+            let lim_hi = FMT.maxv() / step - 1.0;
+            let expect =
+                (((x / step).abs() + 0.5).floor().copysign(x)).clamp(lim_lo, lim_hi) * step;
+            assert!(
+                (q.to_f32() - expect).abs() < 1e-6,
+                "x={x} got={} want={expect}",
+                q.to_f32()
+            );
+        });
+    }
+
+    #[test]
+    fn saturation_at_extremes() {
+        let hi = QFixed::from_f32(1e9, FMT, RoundMode::HalfAway, 0.0);
+        assert_eq!(hi.to_f32(), FMT.maxv() - FMT.step());
+        let lo = QFixed::from_f32(-1e9, FMT, RoundMode::HalfAway, 0.0);
+        assert_eq!(lo.to_f32(), -FMT.maxv());
+    }
+
+    #[test]
+    fn add_saturates_not_wraps() {
+        let a = QFixed::from_f32(7.9, FMT, RoundMode::HalfAway, 0.0);
+        let s = a.add(a);
+        assert_eq!(s.mantissa, 2047); // man_max, not wrapped negative
+    }
+
+    #[test]
+    fn mul_matches_f32_within_one_ulp_of_grid() {
+        forall("mul accuracy", |g: &mut Gen| {
+            let a = QFixed::from_f32(g.f32_range(-2.0, 2.0), FMT, RoundMode::HalfAway, 0.0);
+            let b = QFixed::from_f32(g.f32_range(-2.0, 2.0), FMT, RoundMode::HalfAway, 0.0);
+            let p = a.mul(b, RoundMode::HalfAway, 0.0);
+            let exact = a.to_f32() * b.to_f32();
+            // wide accumulator then one rounding: within half a step unless
+            // saturated.
+            if exact.abs() < FMT.maxv() - FMT.step() {
+                assert!(
+                    (p.to_f32() - exact).abs() <= FMT.step() * 0.5 + 1e-6,
+                    "a={} b={} p={} exact={exact}",
+                    a.to_f32(),
+                    b.to_f32(),
+                    p.to_f32()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn overflow_predicate_matches_maxv() {
+        assert!(QFixed::overflows(8.0, FMT));
+        assert!(QFixed::overflows(-8.0, FMT));
+        assert!(!QFixed::overflows(7.99, FMT));
+    }
+}

@@ -1,0 +1,174 @@
+//! Bit-level IEEE binary16 (half precision) conversion — paper Table 1.
+//!
+//! The paper's float16 experiment stores every signal through a half
+//! precision round-trip (1 sign + 5 exponent + 10 mantissa bits). The L2
+//! graph does this with an f32→f16→f32 cast pair; this module is the
+//! bit-exact host twin, implemented from scratch (no `half` crate in the
+//! offline environment) with round-to-nearest-even, subnormal handling,
+//! infinities and NaN — validated against the device path in the runtime
+//! integration tests.
+
+/// Convert f32 to the nearest binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: preserve NaN-ness (quiet bit set), propagate Inf.
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+
+    // Unbiased exponent; f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → ±Inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. Keep 10 mantissa bits, round-to-nearest-even on the
+        // 13 dropped bits.
+        let e16 = (unbiased + 15) as u32;
+        let m16 = man >> 13;
+        let rest = man & 0x1FFF;
+        let halfway = 0x1000;
+        let mut out = ((e16 << 10) | m16) as u16;
+        if rest > halfway || (rest == halfway && (m16 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent — correct
+        }
+        return sign | out;
+    }
+    // Subnormal f16 (or zero): value = man' * 2^-24.
+    if unbiased < -25 {
+        return sign; // rounds to ±0
+    }
+    // Implicit leading 1 becomes explicit; shift right by the deficit.
+    let full = man | 0x80_0000;
+    let shift = (-14 - unbiased) as u32 + 13;
+    let m16 = full >> shift;
+    let rest = full & ((1 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    let mut out = m16 as u16;
+    if rest > halfway || (rest == halfway && (m16 & 1) == 1) {
+        out = out.wrapping_add(1);
+    }
+    sign | out
+}
+
+/// Expand a binary16 bit pattern to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        // Inf / NaN
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into f32.
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// The float16 simulation op: round-trip a value through half precision.
+#[inline]
+pub fn half_roundtrip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(half_roundtrip(x), x, "i={i}"); // 11-bit significand
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max normal
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds past max → Inf
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xFC00);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn roundtrip_idempotent() {
+        forall("f16 idempotent", |g: &mut Gen| {
+            let x = g.f32_range(-1000.0, 1000.0);
+            let once = half_roundtrip(x);
+            assert_eq!(half_roundtrip(once).to_bits(), once.to_bits());
+        });
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        forall("f16 rel error", |g: &mut Gen| {
+            let x = g.f32_range(-60000.0, 60000.0);
+            if x.abs() >= 6.2e-5 {
+                // normal range
+                let r = half_roundtrip(x);
+                let rel = ((r - x) / x).abs();
+                assert!(rel <= 2f32.powi(-11) + 1e-7, "x={x} r={r} rel={rel}");
+            }
+        });
+    }
+
+    #[test]
+    fn subnormal_absolute_error_bounded() {
+        forall("f16 subnormal", |g: &mut Gen| {
+            let x = g.f32_range(-6e-5, 6e-5);
+            let r = half_roundtrip(x);
+            assert!((r - x).abs() <= 2f32.powi(-25) + 1e-12, "x={x} r={r}");
+        });
+    }
+
+    #[test]
+    fn matches_numpy_spot_checks() {
+        // Values checked against numpy float16 semantics.
+        assert_eq!(half_roundtrip(0.1), 0.099975586);
+        assert_eq!(half_roundtrip(3.141592), 3.140625);
+        assert_eq!(half_roundtrip(1e-7), 1.1920929e-07); // subnormal grid
+    }
+
+    #[test]
+    fn round_to_nearest_even_on_ties() {
+        // 2049 is exactly between 2048 and 2050 in f16 → even (2048).
+        assert_eq!(half_roundtrip(2049.0), 2048.0);
+        // 2051 is between 2050 and 2052 → 2052 (even mantissa).
+        assert_eq!(half_roundtrip(2051.0), 2052.0);
+    }
+}

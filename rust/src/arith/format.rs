@@ -1,0 +1,153 @@
+//! Fixed point format descriptors (paper section 4).
+//!
+//! A format is a signed `total_bits`-wide mantissa plus a power-of-two
+//! scaling factor, described here by the position of the radix point:
+//! `int_bits` magnitude bits sit left of the radix point (paper Figure 1
+//! talks about "the radix point position after the i-th most significant
+//! bit"). The runtime encoding shared with the compiled artifacts is the
+//! pair `(step, maxv)`:
+//!
+//! ```text
+//! step = 2^(int_bits - (total_bits - 1))   // value of one LSB
+//! maxv = 2^int_bits                        // saturation magnitude
+//! grid = { k·step : -maxv/step ≤ k ≤ maxv/step - 1 }   (2^total_bits points)
+//! ```
+//!
+//! `step == 0` is the float32 passthrough sentinel used throughout the
+//! stack (one compiled artifact serves float32, fixed and dynamic fixed
+//! point — see DESIGN.md).
+
+use std::fmt;
+
+/// A concrete fixed point format: total width (including sign) and radix
+/// point position. `int_bits` may be negative (all-fractional formats with
+/// leading zero fraction bits) — the paper's gradient groups end up there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FixedFormat {
+    /// Total bit-width including the sign bit. 0 encodes float32 passthrough.
+    pub total_bits: i32,
+    /// Number of magnitude bits left of the radix point.
+    pub int_bits: i32,
+}
+
+impl FixedFormat {
+    /// A `total_bits`-wide format with the radix point after bit `int_bits`.
+    pub const fn new(total_bits: i32, int_bits: i32) -> Self {
+        Self { total_bits, int_bits }
+    }
+
+    /// The float32 passthrough sentinel (`step() == 0`).
+    pub const FLOAT32: FixedFormat = FixedFormat { total_bits: 0, int_bits: 0 };
+
+    /// Is this the float32 passthrough?
+    pub fn is_float32(&self) -> bool {
+        self.total_bits == 0
+    }
+
+    /// Value of one least-significant bit (the quantization step).
+    /// Computed in f64 then narrowed so that deeply fractional formats
+    /// (large negative exponents) stay exact.
+    pub fn step(&self) -> f32 {
+        if self.is_float32() {
+            0.0
+        } else {
+            2f64.powi(self.int_bits - (self.total_bits - 1)) as f32
+        }
+    }
+
+    /// Saturation magnitude: representable range is `[-maxv, maxv - step]`.
+    pub fn maxv(&self) -> f32 {
+        if self.is_float32() {
+            0.0
+        } else {
+            2f64.powi(self.int_bits) as f32
+        }
+    }
+
+    /// Number of representable grid points (2^total_bits).
+    pub fn levels(&self) -> f64 {
+        2f64.powi(self.total_bits)
+    }
+
+    /// The same format with the scaling factor doubled (one more integer
+    /// bit, one less fraction bit) — the dynamic controller's "grow" move.
+    pub fn scale_up(&self) -> FixedFormat {
+        FixedFormat::new(self.total_bits, self.int_bits + 1)
+    }
+
+    /// The same format with the scaling factor halved — the "shrink" move.
+    pub fn scale_down(&self) -> FixedFormat {
+        FixedFormat::new(self.total_bits, self.int_bits - 1)
+    }
+}
+
+impl fmt::Display for FixedFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_float32() {
+            write!(f, "float32")
+        } else {
+            write!(f, "Q{}.{}", self.int_bits, self.total_bits - 1 - self.int_bits)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_and_maxv_match_l2_formulas() {
+        // Mirrors python compile/formats.py: step_for / maxv_for.
+        let f = FixedFormat::new(10, 3);
+        assert_eq!(f.step(), (2f64.powi(3 - 9)) as f32);
+        assert_eq!(f.maxv(), 8.0);
+        let g = FixedFormat::new(12, 0);
+        assert_eq!(g.step(), (2f64.powi(-11)) as f32);
+        assert_eq!(g.maxv(), 1.0);
+    }
+
+    #[test]
+    fn float32_sentinel() {
+        assert!(FixedFormat::FLOAT32.is_float32());
+        assert_eq!(FixedFormat::FLOAT32.step(), 0.0);
+        assert_eq!(format!("{}", FixedFormat::FLOAT32), "float32");
+    }
+
+    #[test]
+    fn paper_radix_5_range_is_32() {
+        // Paper section 9.2: radix point after the 5th MSB ⇒ range ≈ [-32, 32].
+        let f = FixedFormat::new(20, 5);
+        assert_eq!(f.maxv(), 32.0);
+    }
+
+    #[test]
+    fn grid_point_count() {
+        for bits in [2, 8, 10, 12, 20, 31] {
+            let f = FixedFormat::new(bits, 2);
+            let n = (2.0 * f.maxv() as f64) / f.step() as f64;
+            assert!((n - f.levels()).abs() < 1e-6, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn negative_int_bits_formats() {
+        // All-fractional formats (gradients live here late in training).
+        let f = FixedFormat::new(10, -3);
+        assert_eq!(f.maxv(), 0.125);
+        assert!(f.step() > 0.0 && f.step() < f.maxv());
+    }
+
+    #[test]
+    fn scale_up_down_roundtrip() {
+        let f = FixedFormat::new(12, 2);
+        assert_eq!(f.scale_up().scale_down(), f);
+        assert_eq!(f.scale_up().maxv(), 2.0 * f.maxv());
+        assert_eq!(f.scale_down().maxv(), 0.5 * f.maxv());
+    }
+
+    #[test]
+    fn display_q_notation() {
+        assert_eq!(format!("{}", FixedFormat::new(20, 5)), "Q5.14");
+        assert_eq!(format!("{}", FixedFormat::new(10, -2)), "Q-2.11");
+    }
+}

@@ -1,0 +1,43 @@
+//! Software numeric-format substrate: the arithmetics the paper compares.
+//!
+//! The paper evaluates three arithmetics (sections 3–5): floating point
+//! (float32 reference / float16), fixed point (one global scaling factor)
+//! and dynamic fixed point (per-group scaling factors updated online from
+//! overflow statistics). This module implements all three **in software on
+//! the host**, bit-exactly mirroring the semantics baked into the L1
+//! Pallas kernels, so that:
+//!
+//! * the rust *golden model* (`crate::golden`) can cross-validate the
+//!   compiled HLO training step end to end,
+//! * the coordinator can quantize host-side state (initial parameters,
+//!   dataset preprocessing) identically to the device,
+//! * property tests can probe formats far beyond what a training run
+//!   exercises.
+//!
+//! Submodules:
+//!
+//! * [`format`]    — format descriptors: total/integer bit-widths, the
+//!                   `(step, maxv)` runtime encoding shared with L2.
+//! * [`round`]     — rounding primitives (half-away, half-even, stochastic,
+//!                   truncate) on `f32`.
+//! * [`fixed`]     — `QFixed`: a saturating software fixed point scalar.
+//! * [`float16`]   — bit-level `f32 ↔ IEEE binary16` conversion (paper
+//!                   Table 1) with round-to-nearest-even.
+//! * [`quantizer`] — tensor-level quantization + overflow statistics,
+//!                   the host twin of the Pallas kernel.
+//! * [`dynfixed`]  — per-group dynamic fixed point state + the paper's
+//!                   section 5 update rule (also used by the coordinator's
+//!                   scale controller).
+
+pub mod dynfixed;
+pub mod fixed;
+pub mod float16;
+pub mod format;
+pub mod quantizer;
+pub mod round;
+
+pub use dynfixed::{GroupState, OverflowCounts, UpdateDecision};
+pub use fixed::QFixed;
+pub use format::FixedFormat;
+pub use quantizer::{QuantStats, Quantizer};
+pub use round::RoundMode;

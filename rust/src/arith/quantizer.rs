@@ -1,0 +1,248 @@
+//! Tensor-level quantization + overflow statistics: the host twin of the
+//! L1 Pallas kernel (`python/compile/kernels/quantize.py`).
+//!
+//! Bit-for-bit contract with the device path (verified by the runtime
+//! integration tests and the golden-model cross-check):
+//!
+//! ```text
+//! y      = clip(round_half_away(x/step), -maxv/step, maxv/step - 1) * step
+//! y      = x                                   when step == 0 (float32)
+//! n_over = #{ |x| ≥ maxv }      n_half = #{ |x| ≥ maxv/2 }
+//! ```
+
+use super::format::FixedFormat;
+use super::round::{half_away, RoundMode};
+
+/// Overflow statistics for one quantization call (one group, one site).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantStats {
+    /// Elements that would saturate at the current scale (`|x| ≥ maxv`).
+    pub n_over: u64,
+    /// Elements that would saturate at *half* the scale (`|x| ≥ maxv/2`).
+    pub n_half: u64,
+    /// Total elements seen.
+    pub n_total: u64,
+}
+
+impl QuantStats {
+    pub fn merge(&mut self, other: QuantStats) {
+        self.n_over += other.n_over;
+        self.n_half += other.n_half;
+        self.n_total += other.n_total;
+    }
+
+    /// Overflow rate at the current scale.
+    pub fn rate(&self) -> f64 {
+        if self.n_total == 0 {
+            0.0
+        } else {
+            self.n_over as f64 / self.n_total as f64
+        }
+    }
+
+    /// Overflow rate the group would see at half the scale.
+    pub fn half_rate(&self) -> f64 {
+        if self.n_total == 0 {
+            0.0
+        } else {
+            self.n_half as f64 / self.n_total as f64
+        }
+    }
+}
+
+/// Tensor quantizer for a `(step, maxv)` pair, with pluggable rounding for
+/// the ablation benches. The canonical mode (`HalfAway`) matches the
+/// compiled artifacts exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub step: f32,
+    pub maxv: f32,
+    pub mode: RoundMode,
+}
+
+impl Quantizer {
+    /// Quantizer for a format descriptor with the canonical rounding.
+    pub fn from_format(fmt: FixedFormat) -> Self {
+        Quantizer { step: fmt.step(), maxv: fmt.maxv(), mode: RoundMode::HalfAway }
+    }
+
+    /// Float32 passthrough quantizer.
+    pub fn float32() -> Self {
+        Quantizer { step: 0.0, maxv: 0.0, mode: RoundMode::HalfAway }
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self.step <= 0.0
+    }
+
+    /// Quantize one value (canonical kernel formula).
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        if self.is_passthrough() {
+            return x;
+        }
+        let lim_lo = -self.maxv / self.step;
+        let lim_hi = self.maxv / self.step - 1.0;
+        half_away(x / self.step).clamp(lim_lo, lim_hi) * self.step
+    }
+
+    /// Quantize one value with this quantizer's rounding mode (`u` feeds
+    /// stochastic rounding; ignored by deterministic modes).
+    #[inline]
+    pub fn apply_with(&self, x: f32, u: f32) -> f32 {
+        if self.is_passthrough() {
+            return x;
+        }
+        let lim_lo = -self.maxv / self.step;
+        let lim_hi = self.maxv / self.step - 1.0;
+        self.mode.round(x / self.step, u).clamp(lim_lo, lim_hi) * self.step
+    }
+
+    /// Quantize a slice in place, returning overflow statistics. Rounds
+    /// with the configured [`RoundMode`] (stochastic uses the midpoint
+    /// sample 0.5 here — callers that want true stochastic rounding drive
+    /// [`Self::apply_with`] with their own PRNG, as the golden model does).
+    pub fn apply_slice(&self, xs: &mut [f32]) -> QuantStats {
+        let mut stats =
+            QuantStats { n_over: 0, n_half: 0, n_total: xs.len() as u64 };
+        if self.is_passthrough() {
+            return stats;
+        }
+        let half = self.maxv * 0.5;
+        for x in xs.iter_mut() {
+            let a = x.abs();
+            if a >= self.maxv {
+                stats.n_over += 1;
+            }
+            if a >= half {
+                stats.n_half += 1;
+            }
+            *x = self.apply_with(*x, 0.5);
+        }
+        stats
+    }
+
+    /// Statistics only (no mutation) — what the value *would* do.
+    pub fn stats_only(&self, xs: &[f32]) -> QuantStats {
+        let mut stats =
+            QuantStats { n_over: 0, n_half: 0, n_total: xs.len() as u64 };
+        if self.is_passthrough() {
+            return stats;
+        }
+        let half = self.maxv * 0.5;
+        for &x in xs {
+            let a = x.abs();
+            if a >= self.maxv {
+                stats.n_over += 1;
+            }
+            if a >= half {
+                stats.n_half += 1;
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    fn q(total_bits: i32, int_bits: i32) -> Quantizer {
+        Quantizer::from_format(FixedFormat::new(total_bits, int_bits))
+    }
+
+    #[test]
+    fn passthrough_is_identity_with_zero_counts() {
+        let qz = Quantizer::float32();
+        let mut xs = vec![1.5, -2.7, 1e20, f32::MIN_POSITIVE];
+        let orig = xs.clone();
+        let st = qz.apply_slice(&mut xs);
+        assert_eq!(xs, orig);
+        assert_eq!(st, QuantStats { n_over: 0, n_half: 0, n_total: 4 });
+    }
+
+    #[test]
+    fn output_always_on_grid_and_in_range() {
+        forall("grid membership", |g: &mut Gen| {
+            let quant = q(g.i32_range(2, 24), g.i32_range(-4, 8));
+            let x = g.f32_range(-1e4, 1e4);
+            let y = quant.apply(x);
+            let k = y / quant.step;
+            assert!((k - k.round()).abs() < 1e-3, "off grid: x={x} y={y}");
+            assert!(y >= -quant.maxv && y <= quant.maxv - quant.step * 0.999);
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        forall("idempotence", |g: &mut Gen| {
+            let quant = q(g.i32_range(2, 24), g.i32_range(-4, 8));
+            let x = g.f32_range(-100.0, 100.0);
+            let y = quant.apply(x);
+            assert_eq!(quant.apply(y), y);
+        });
+    }
+
+    #[test]
+    fn monotone() {
+        forall("monotonicity", |g: &mut Gen| {
+            let quant = q(g.i32_range(3, 20), g.i32_range(-2, 6));
+            let a = g.f32_range(-50.0, 50.0);
+            let b = g.f32_range(-50.0, 50.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(quant.apply(lo) <= quant.apply(hi));
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_half_step_inside_range() {
+        forall("error bound", |g: &mut Gen| {
+            let quant = q(g.i32_range(4, 24), g.i32_range(0, 6));
+            let x = g.f32_range(-quant.maxv * 0.9, quant.maxv * 0.9);
+            let y = quant.apply(x);
+            assert!((y - x).abs() <= quant.step * 0.5 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn counters_match_definition() {
+        let quant = q(8, 2); // maxv 4
+        let xs = [0.0f32, 1.0, 2.0, 3.9, 4.0, -4.0, -5.0, 100.0];
+        let st = quant.stats_only(&xs);
+        assert_eq!(st.n_over, 4); // |x| ≥ 4
+        assert_eq!(st.n_half, 6); // |x| ≥ 2
+        assert_eq!(st.n_total, 8);
+        assert!((st.rate() - 0.5).abs() < 1e-12);
+        assert!((st.half_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_python_oracle_vectors() {
+        // Golden vectors produced by compile/kernels/ref.py (quantize_ref).
+        let quant = q(10, 3); // step = 2^-6 = 0.015625, maxv = 8
+        let cases = [
+            (0.0f32, 0.0f32),
+            (1.0, 1.0),
+            (0.007812499, 0.0),      // just below the step/2 tie → 0
+            (0.0078125, 0.015625),   // exactly step/2: half-away rounds up
+            (0.01, 0.015625),
+            (-3.3333, -3.328125),
+            (7.9999, 7.984375), // lim_hi = maxv - step
+            (8.0, 7.984375),
+            (-8.0, -8.0),
+            (-9.0, -8.0),
+        ];
+        for (x, want) in cases {
+            let got = quant.apply(x);
+            assert_eq!(got, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = QuantStats { n_over: 1, n_half: 2, n_total: 10 };
+        a.merge(QuantStats { n_over: 3, n_half: 4, n_total: 20 });
+        assert_eq!(a, QuantStats { n_over: 4, n_half: 6, n_total: 30 });
+    }
+}

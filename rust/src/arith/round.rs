@@ -1,0 +1,149 @@
+//! Rounding primitives for fixed point quantization.
+//!
+//! The paper's simulation rounds every stored value to the nearest grid
+//! point; the stack's canonical mode is **half-away-from-zero** (classic
+//! DSP fixed point rounding, and what the L1 Pallas kernel implements:
+//! `sign(x)·floor(|x| + 0.5)`). The other modes exist for the ablation
+//! bench (`benches/bench_ablation.rs`): half-even removes the systematic
+//! bias of half-away on exactly-representable ties, truncation is the
+//! cheapest hardware option, and stochastic rounding is the
+//! forward-looking comparison point (Gupta et al. 2015 showed it matters
+//! at even lower widths).
+
+/// How to map a real value to an integer grid index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round to nearest; ties away from zero. The stack default — matches
+    /// the Pallas kernel and the HLO artifacts bit for bit.
+    HalfAway,
+    /// Round to nearest; ties to the even integer (IEEE default).
+    HalfEven,
+    /// Truncate toward zero (drop fraction bits) — cheapest in hardware.
+    Truncate,
+    /// Stochastic: round up with probability equal to the fractional part.
+    /// Unbiased in expectation; needs a caller-supplied uniform sample.
+    Stochastic,
+}
+
+impl RoundMode {
+    /// Round `x` (already divided by the quantization step) to an integer.
+    /// `u` is a uniform sample in [0, 1), used only by `Stochastic`.
+    #[inline]
+    pub fn round(self, x: f32, u: f32) -> f32 {
+        match self {
+            RoundMode::HalfAway => half_away(x),
+            RoundMode::HalfEven => half_even(x),
+            RoundMode::Truncate => x.trunc(),
+            RoundMode::Stochastic => stochastic(x, u),
+        }
+    }
+}
+
+/// Round to nearest, ties away from zero: `sign(x) * floor(|x| + 0.5)`.
+#[inline]
+pub fn half_away(x: f32) -> f32 {
+    x.signum() * (x.abs() + 0.5).floor()
+}
+
+/// Round to nearest, ties to even (IEEE round-to-nearest-even).
+#[inline]
+pub fn half_even(x: f32) -> f32 {
+    // f32::round_ties_even is stable since 1.77.
+    x.round_ties_even()
+}
+
+/// Stochastic rounding: floor(x) + Bernoulli(frac(x)).
+#[inline]
+pub fn stochastic(x: f32, u: f32) -> f32 {
+    let fl = x.floor();
+    let frac = x - fl;
+    if u < frac {
+        fl + 1.0
+    } else {
+        fl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    #[test]
+    fn half_away_matches_kernel_semantics() {
+        // The L1 kernel computes sign(x)*floor(|x|+0.5); spot-check ties.
+        for (x, want) in [
+            (0.5, 1.0),
+            (-0.5, -1.0),
+            (1.5, 2.0),
+            (-1.5, -2.0),
+            (2.5, 3.0),
+            (-2.5, -3.0),
+            (0.49, 0.0),
+            (-0.49, -0.0),
+        ] {
+            assert_eq!(half_away(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn half_even_ties() {
+        for (x, want) in [(0.5, 0.0), (1.5, 2.0), (2.5, 2.0), (-2.5, -2.0)] {
+            assert_eq!(half_even(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn truncate_toward_zero() {
+        assert_eq!(RoundMode::Truncate.round(1.9, 0.0), 1.0);
+        assert_eq!(RoundMode::Truncate.round(-1.9, 0.0), -1.0);
+    }
+
+    #[test]
+    fn stochastic_is_floor_or_ceil() {
+        forall("stochastic bounds", |g: &mut Gen| {
+            let x = g.f32_range(-100.0, 100.0);
+            let u = g.f32_range(0.0, 1.0);
+            let r = stochastic(x, u);
+            assert!(r == x.floor() || r == x.floor() + 1.0, "x={x} u={u} r={r}");
+        });
+    }
+
+    #[test]
+    fn stochastic_unbiased_in_expectation() {
+        // E[round(x)] == x for the fractional part, up to sampling error.
+        let x = 3.25f32;
+        let n = 20_000;
+        let mut acc = 0f64;
+        let mut g = Gen::new(42);
+        for _ in 0..n {
+            acc += stochastic(x, g.f32_range(0.0, 1.0)) as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 3.25).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn all_modes_exact_on_integers() {
+        forall("integers fixed", |g: &mut Gen| {
+            let k = g.i32_range(-1000, 1000) as f32;
+            for mode in [
+                RoundMode::HalfAway,
+                RoundMode::HalfEven,
+                RoundMode::Truncate,
+                RoundMode::Stochastic,
+            ] {
+                assert_eq!(mode.round(k, 0.3), k, "mode={mode:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn nearest_modes_within_half() {
+        forall("nearest error bound", |g: &mut Gen| {
+            let x = g.f32_range(-1e4, 1e4);
+            assert!((half_away(x) - x).abs() <= 0.5 + 1e-3);
+            assert!((half_even(x) - x).abs() <= 0.5 + 1e-3);
+        });
+    }
+}

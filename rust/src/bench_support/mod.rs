@@ -1,0 +1,181 @@
+//! Bench harness substrate (criterion is unavailable offline): timing,
+//! robust summary statistics and paper-style ASCII tables/series.
+//!
+//! Every `benches/*.rs` binary is `harness = false` and uses this module
+//! to print the rows/series the paper's tables and figures report.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of durations or values.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_values(values: &[f64]) -> Stats {
+        assert!(!values.is_empty());
+        let n = values.len();
+        let mean = values.iter().sum::<f64>() / n as f64;
+        let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            sd: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.5),
+            p90: pct(0.9),
+            max: sorted[n - 1],
+        }
+    }
+
+    pub fn from_durations(ds: &[Duration]) -> Stats {
+        let vals: Vec<f64> = ds.iter().map(|d| d.as_secs_f64()).collect();
+        Stats::from_values(&vals)
+    }
+}
+
+/// Time `f` for `warmup + iters` runs; returns stats over the timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    Stats::from_durations(&times)
+}
+
+/// Scale factor for bench workloads: `LPDNN_BENCH_SCALE` (default 1.0).
+/// Benches multiply their step counts/dataset sizes by this, so CI can run
+/// `LPDNN_BENCH_SCALE=0.1 cargo bench` for a quick pass.
+pub fn bench_scale() -> f64 {
+    std::env::var("LPDNN_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// Apply the bench scale to a step/sample count (min 1).
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * bench_scale()).round() as usize).max(1)
+}
+
+/// Paper-style ASCII table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (w, h) in widths.iter().zip(&self.headers) {
+            out.push_str(&format!("| {h:<w$} "));
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for row in &self.rows {
+            for (w, c) in widths.iter().zip(row) {
+                out.push_str(&format!("| {c:<w$} "));
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// An (x, y) series printer with a crude unicode bar chart — enough to see
+/// the "cliff" shapes the paper's figures show in a terminal.
+pub fn print_series(title: &str, xlabel: &str, points: &[(f64, f64)]) {
+    println!("## {title}");
+    let ymax = points.iter().map(|&(_, y)| y).fold(f64::NAN, f64::max).max(1e-9);
+    for &(x, y) in points {
+        let bar_len = ((y / ymax) * 40.0).round() as usize;
+        println!("  {xlabel}={x:<8} {y:<10.4} {}", "#".repeat(bar_len.min(60)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_sample() {
+        let s = Stats::from_values(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.sd - 2f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_the_closure() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["format", "error"]);
+        t.row(&["float32".to_string(), "0.0105".to_string()]);
+        t.row(&["dynamic(10/12)".to_string(), "0.0128".to_string()]);
+        let s = t.to_string();
+        assert!(s.contains("| format         |"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".to_string()]);
+    }
+
+    #[test]
+    fn scaled_respects_min() {
+        assert!(scaled(1) >= 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! From-scratch CLI argument parsing (no clap offline).
+//!
+//! Grammar: `lpdnn <subcommand> [--flag value]... [--switch]...`
+//! Subcommands are free-form strings validated by `main.rs`; this module
+//! provides the generic flag machinery + help rendering.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Flags the caller actually read (for unknown-flag detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags are `--name value`; switches are `--name`
+    /// followed by another flag or end of input.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> crate::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        if subcommand.starts_with("--") {
+            bail!("expected a subcommand before flags (got '{subcommand}')");
+        }
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let name = tok
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{tok}'"))?
+                .to_string();
+            if name.is_empty() {
+                bail!("empty flag name");
+            }
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(name, it.next().unwrap());
+                }
+                _ => switches.push(name),
+            }
+        }
+        Ok(Args { subcommand, flags, switches, known: Default::default() })
+    }
+
+    fn mark(&self, name: &str) {
+        self.known.borrow_mut().push(name.to_string());
+    }
+
+    /// String flag with default.
+    pub fn get(&self, name: &str, default: &str) -> String {
+        self.mark(name);
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn get_opt(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Boolean switch (present or absent).
+    pub fn has(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// After all reads: error on flags the command never consumed.
+    pub fn finish(&self) -> crate::Result<()> {
+        let known = self.known.borrow();
+        for f in self.flags.keys() {
+            if !known.iter().any(|k| k == f) {
+                bail!("unknown flag --{f} for subcommand '{}'", self.subcommand);
+            }
+        }
+        for s in &self.switches {
+            if !known.iter().any(|k| k == s) {
+                bail!("unknown switch --{s} for subcommand '{}'", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render the top-level help text.
+pub fn help() -> String {
+    "\
+lpdnn — Low Precision Arithmetic for Deep Learning (Courbariaux et al. 2014)
+
+USAGE:
+    lpdnn <subcommand> [flags]
+
+SUBCOMMANDS:
+    train       Train one experiment
+                  --config <file.toml>   experiment config (or use flags:)
+                  --model pi_mlp|conv|conv32    --dataset digits|clusters|cifar_like|svhn_like
+                  --arith float32|half|fixed|dynamic
+                  --bits-comp N --bits-up N --int-bits N
+                  --max-overflow-rate R --update-every N --warmup N
+                  --steps N --seed N --lr R --dropout-input R --dropout-hidden R
+                  --eval-every N --loss-csv <file> --verbose
+    eval        Evaluate a config's arithmetic on a fresh model (sanity)
+    datasets    Print the dataset overview (paper Table 2 analogue)
+    formats     Print format definitions (paper Table 1) and examples
+    artifacts   List compiled artifacts from the manifest
+    help        This message
+
+ENVIRONMENT:
+    LPDNN_ARTIFACTS     artifacts directory (default: ./artifacts)
+    LPDNN_BENCH_SCALE   scale factor for bench workloads (default 1.0)
+"
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse(&["train", "--model", "pi_mlp", "--steps", "100", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model", "x"), "pi_mlp");
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
+        assert!(a.has("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get("model", "pi_mlp"), "pi_mlp");
+        assert_eq!(a.get_parse("steps", 42usize).unwrap(), 42);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["train", "--bogus", "1"]);
+        let _ = a.get("model", "pi_mlp");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_numeric_flag_is_clear_error() {
+        let a = parse(&["train", "--steps", "many"]);
+        let err = a.get_parse("steps", 0usize).unwrap_err();
+        assert!(format!("{err}").contains("--steps"));
+    }
+
+    #[test]
+    fn flags_before_subcommand_rejected() {
+        assert!(Args::parse(["--model".to_string()]).is_err());
+    }
+
+    #[test]
+    fn missing_subcommand_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "help");
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["train", "--int-bits", "-3"]);
+        assert_eq!(a.get_parse("int-bits", 0i32).unwrap(), -3);
+    }
+}

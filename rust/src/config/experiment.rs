@@ -1,0 +1,458 @@
+//! Typed experiment configuration: what one training run looks like.
+//!
+//! An experiment is (model, dataset, arithmetic, schedule). The sweep
+//! benches construct these programmatically; the CLI reads them from a
+//! TOML-subset file (`lpdnn train --config run.toml`). All schedule
+//! parameters mirror the paper's procedure (section 8.1: linearly decaying
+//! learning rate, linearly saturating momentum, dropout, max-norm).
+
+use anyhow::{bail, Context};
+
+use super::json::Json;
+use super::toml;
+use crate::arith::FixedFormat;
+
+/// Which arithmetic the run trains under (paper sections 3–5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arithmetic {
+    /// Single precision floating point — the reference (step = 0 sentinel).
+    Float32,
+    /// Half precision floating point simulation (f16 round-trip artifact).
+    Half,
+    /// Fixed point: ONE global scaling factor for every group.
+    Fixed {
+        /// Computation bit-width (paper "Comp.", sign included).
+        bits_comp: i32,
+        /// Parameter update bit-width (paper "Up.", sign included).
+        bits_up: i32,
+        /// Radix point position (integer bits). Paper Figure 1 sweeps
+        /// this; 5 is the optimum the paper reports.
+        int_bits: i32,
+    },
+    /// Dynamic fixed point: per-group scaling factors updated online
+    /// (paper section 5).
+    Dynamic {
+        bits_comp: i32,
+        bits_up: i32,
+        /// Maximum overflow rate (paper: 1e-4 = 0.01%).
+        max_overflow_rate: f64,
+        /// Update the scaling factors every this many examples
+        /// (paper: 10 000).
+        update_every_examples: usize,
+        /// Initial integer-bit count for every group before warmup.
+        init_int_bits: i32,
+        /// Steps of high-precision warmup used to find initial scaling
+        /// factors (paper 9.3: "we find the initial scaling factors by
+        /// training with a higher precision format"); parameters are
+        /// re-initialized afterwards.
+        warmup_steps: usize,
+    },
+}
+
+impl Arithmetic {
+    /// Human-readable name matching the paper's Table 3 rows.
+    pub fn label(&self) -> String {
+        match self {
+            Arithmetic::Float32 => "float32".into(),
+            Arithmetic::Half => "float16".into(),
+            Arithmetic::Fixed { bits_comp, bits_up, int_bits } => {
+                format!("fixed({bits_comp}/{bits_up}@{int_bits})")
+            }
+            Arithmetic::Dynamic { bits_comp, bits_up, .. } => {
+                format!("dynamic({bits_comp}/{bits_up})")
+            }
+        }
+    }
+
+    /// Which compiled artifact mode this arithmetic runs on.
+    pub fn mode(&self) -> &'static str {
+        match self {
+            Arithmetic::Half => "half",
+            _ => "fixed", // float32 uses the fixed artifact with step=0
+        }
+    }
+
+    /// The initial per-kind formats `(comp_fmt, up_fmt)` for this
+    /// arithmetic (None ⇒ float32 passthrough for both).
+    pub fn initial_formats(&self) -> (FixedFormat, FixedFormat) {
+        match *self {
+            Arithmetic::Float32 | Arithmetic::Half => {
+                (FixedFormat::FLOAT32, FixedFormat::FLOAT32)
+            }
+            Arithmetic::Fixed { bits_comp, bits_up, int_bits } => {
+                (FixedFormat::new(bits_comp, int_bits), FixedFormat::new(bits_up, int_bits))
+            }
+            Arithmetic::Dynamic { bits_comp, bits_up, init_int_bits, .. } => (
+                FixedFormat::new(bits_comp, init_int_bits),
+                FixedFormat::new(bits_up, init_int_bits),
+            ),
+        }
+    }
+}
+
+/// Training schedule (paper section 8.1 procedure, budget-scaled).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Total SGD steps.
+    pub steps: usize,
+    /// Learning rate: linear decay from `lr_start` to `lr_end`.
+    pub lr_start: f32,
+    pub lr_end: f32,
+    /// Momentum: linear saturation from `mom_start` to `mom_end`.
+    pub mom_start: f32,
+    pub mom_end: f32,
+    /// Max-norm constraint on incoming weight vectors (0 disables).
+    pub max_norm: f32,
+    /// Dropout rate on the input layer (paper uses 0.2 on PI MNIST).
+    pub dropout_input: f32,
+    /// Dropout rate on hidden layers (paper uses 0.5).
+    pub dropout_hidden: f32,
+    /// Master seed: datasets, init and in-graph dropout all derive from it.
+    pub seed: u64,
+    /// Evaluate on the test set every N steps (0 = only at the end).
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 400,
+            lr_start: 0.15,
+            lr_end: 0.01,
+            mom_start: 0.5,
+            mom_end: 0.7,
+            max_norm: 3.0,
+            dropout_input: 0.0,
+            dropout_hidden: 0.0,
+            seed: 1234,
+            eval_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Linearly decaying learning rate at step `t` (paper 8.1).
+    pub fn lr_at(&self, t: usize) -> f32 {
+        schedule_linear(self.lr_start, self.lr_end, t, self.steps)
+    }
+
+    /// Linearly saturating momentum at step `t` (paper 8.1).
+    pub fn momentum_at(&self, t: usize) -> f32 {
+        schedule_linear(self.mom_start, self.mom_end, t, self.steps)
+    }
+}
+
+fn schedule_linear(start: f32, end: f32, t: usize, total: usize) -> f32 {
+    if total <= 1 {
+        return end;
+    }
+    let frac = (t.min(total - 1)) as f32 / (total - 1) as f32;
+    start + (end - start) * frac
+}
+
+/// Dataset choice + size (synthetic substitutes; DESIGN.md §Substitutions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    /// "digits" | "clusters" | "cifar_like" | "svhn_like"
+    pub dataset: String,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig { dataset: "digits".into(), n_train: 4096, n_test: 1024 }
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// "pi_mlp" | "conv" | "conv32" (must exist in the manifest).
+    pub model: String,
+    pub arithmetic: Arithmetic,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            model: "pi_mlp".into(),
+            arithmetic: Arithmetic::Float32,
+            train: TrainConfig::default(),
+            data: DataConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a TOML-subset document.
+    pub fn from_toml_str(src: &str) -> crate::Result<Self> {
+        let doc = toml::parse(src).context("parsing experiment config")?;
+        Self::from_json(&doc)
+    }
+
+    /// Build from the dynamic config tree (TOML or JSON file).
+    pub fn from_json(doc: &Json) -> crate::Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+
+        if let Some(exp) = doc.opt("experiment") {
+            if let Some(v) = exp.opt("name") {
+                cfg.name = v.as_str()?.to_string();
+            }
+            if let Some(v) = exp.opt("model") {
+                cfg.model = v.as_str()?.to_string();
+            }
+            if let Some(v) = exp.opt("dataset") {
+                cfg.data.dataset = v.as_str()?.to_string();
+            }
+        }
+        if let Some(d) = doc.opt("data") {
+            if let Some(v) = d.opt("n_train") {
+                cfg.data.n_train = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("n_test") {
+                cfg.data.n_test = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("dataset") {
+                cfg.data.dataset = v.as_str()?.to_string();
+            }
+        }
+        if let Some(a) = doc.opt("arithmetic") {
+            let kind = a.opt("kind").map(|v| v.as_str()).transpose()?.unwrap_or("float32");
+            let geti = |key: &str, default: i32| -> crate::Result<i32> {
+                Ok(a.opt(key).map(|v| v.as_i64()).transpose()?.map(|x| x as i32).unwrap_or(default))
+            };
+            cfg.arithmetic = match kind {
+                "float32" => Arithmetic::Float32,
+                "half" | "float16" => Arithmetic::Half,
+                "fixed" => Arithmetic::Fixed {
+                    bits_comp: geti("bits_comp", 20)?,
+                    bits_up: geti("bits_up", 20)?,
+                    int_bits: geti("int_bits", 5)?,
+                },
+                "dynamic" => Arithmetic::Dynamic {
+                    bits_comp: geti("bits_comp", 10)?,
+                    bits_up: geti("bits_up", 12)?,
+                    max_overflow_rate: a
+                        .opt("max_overflow_rate")
+                        .map(|v| v.as_f64())
+                        .transpose()?
+                        .unwrap_or(1e-4),
+                    update_every_examples: a
+                        .opt("update_every_examples")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(10_000),
+                    init_int_bits: geti("init_int_bits", 3)?,
+                    warmup_steps: a
+                        .opt("warmup_steps")
+                        .map(|v| v.as_usize())
+                        .transpose()?
+                        .unwrap_or(0),
+                },
+                other => bail!("unknown arithmetic kind '{other}'"),
+            };
+        }
+        if let Some(t) = doc.opt("train") {
+            let mut tc = cfg.train.clone();
+            macro_rules! grab {
+                ($field:ident, $conv:ident) => {
+                    if let Some(v) = t.opt(stringify!($field)) {
+                        tc.$field = v.as_f64()? as _;
+                    }
+                    let _ = stringify!($conv);
+                };
+            }
+            grab!(lr_start, f32);
+            grab!(lr_end, f32);
+            grab!(mom_start, f32);
+            grab!(mom_end, f32);
+            grab!(max_norm, f32);
+            grab!(dropout_input, f32);
+            grab!(dropout_hidden, f32);
+            if let Some(v) = t.opt("steps") {
+                tc.steps = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("seed") {
+                tc.seed = v.as_i64()? as u64;
+            }
+            if let Some(v) = t.opt("eval_every") {
+                tc.eval_every = v.as_usize()?;
+            }
+            cfg.train = tc;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the configuration before spending a training run on it.
+    pub fn validate(&self) -> crate::Result<()> {
+        if !["pi_mlp", "pi_mlp_wide", "conv", "conv32"].contains(&self.model.as_str()) {
+            bail!("unknown model '{}'", self.model);
+        }
+        if !["digits", "clusters", "cifar_like", "svhn_like"].contains(&self.data.dataset.as_str())
+        {
+            bail!("unknown dataset '{}'", self.data.dataset);
+        }
+        let input_ok = match self.model.as_str() {
+            "pi_mlp" | "pi_mlp_wide" => {
+                ["digits", "clusters"].contains(&self.data.dataset.as_str())
+            }
+            "conv" => self.data.dataset == "digits",
+            "conv32" => ["cifar_like", "svhn_like"].contains(&self.data.dataset.as_str()),
+            _ => unreachable!(),
+        };
+        if !input_ok {
+            bail!("model '{}' cannot consume dataset '{}'", self.model, self.data.dataset);
+        }
+        if self.train.steps == 0 {
+            bail!("train.steps must be > 0");
+        }
+        match self.arithmetic {
+            Arithmetic::Fixed { bits_comp, bits_up, .. }
+            | Arithmetic::Dynamic { bits_comp, bits_up, .. } => {
+                for (name, b) in [("bits_comp", bits_comp), ("bits_up", bits_up)] {
+                    if !(2..=31).contains(&b) {
+                        bail!("{name}={b} out of range [2, 31]");
+                    }
+                }
+            }
+            _ => {}
+        }
+        if let Arithmetic::Dynamic { max_overflow_rate, update_every_examples, .. } =
+            self.arithmetic
+        {
+            if !(0.0..1.0).contains(&max_overflow_rate) {
+                bail!("max_overflow_rate must be in [0, 1)");
+            }
+            if update_every_examples == 0 {
+                bail!("update_every_examples must be > 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_toml() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[experiment]
+name = "tbl3-dynamic"
+model = "pi_mlp"
+dataset = "digits"
+[arithmetic]
+kind = "dynamic"
+bits_comp = 10
+bits_up = 12
+max_overflow_rate = 1e-4
+update_every_examples = 10000
+init_int_bits = 3
+warmup_steps = 50
+[train]
+steps = 300
+lr_start = 0.2
+dropout_input = 0.2
+dropout_hidden = 0.5
+seed = 42
+[data]
+n_train = 2048
+n_test = 512
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "tbl3-dynamic");
+        assert_eq!(
+            cfg.arithmetic,
+            Arithmetic::Dynamic {
+                bits_comp: 10,
+                bits_up: 12,
+                max_overflow_rate: 1e-4,
+                update_every_examples: 10_000,
+                init_int_bits: 3,
+                warmup_steps: 50,
+            }
+        );
+        assert_eq!(cfg.train.steps, 300);
+        assert_eq!(cfg.train.seed, 42);
+        assert_eq!(cfg.data.n_train, 2048);
+    }
+
+    #[test]
+    fn schedules_are_linear_and_clamped() {
+        let tc = TrainConfig { steps: 101, lr_start: 1.0, lr_end: 0.0, ..Default::default() };
+        assert_eq!(tc.lr_at(0), 1.0);
+        assert!((tc.lr_at(50) - 0.5).abs() < 1e-6);
+        assert_eq!(tc.lr_at(100), 0.0);
+        assert_eq!(tc.lr_at(1000), 0.0); // clamped past the end
+        let m = TrainConfig { steps: 3, mom_start: 0.5, mom_end: 0.7, ..Default::default() };
+        assert_eq!(m.momentum_at(0), 0.5);
+        assert!((m.momentum_at(2) - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.model = "resnet".into();
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.data.dataset = "cifar_like".into(); // pi_mlp can't consume 32x32x3
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.arithmetic = Arithmetic::Fixed { bits_comp: 1, bits_up: 20, int_bits: 5 };
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.arithmetic = Arithmetic::Dynamic {
+            bits_comp: 10,
+            bits_up: 12,
+            max_overflow_rate: 2.0,
+            update_every_examples: 1000,
+            init_int_bits: 0,
+            warmup_steps: 0,
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn arithmetic_labels_and_modes() {
+        assert_eq!(Arithmetic::Float32.label(), "float32");
+        assert_eq!(Arithmetic::Half.mode(), "half");
+        assert_eq!(
+            Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 }.mode(),
+            "fixed"
+        );
+    }
+
+    #[test]
+    fn initial_formats_follow_arithmetic() {
+        let (c, u) = Arithmetic::Float32.initial_formats();
+        assert!(c.is_float32() && u.is_float32());
+        let (c, u) = Arithmetic::Dynamic {
+            bits_comp: 10,
+            bits_up: 12,
+            max_overflow_rate: 1e-4,
+            update_every_examples: 10_000,
+            init_int_bits: 3,
+            warmup_steps: 0,
+        }
+        .initial_formats();
+        assert_eq!((c.total_bits, c.int_bits), (10, 3));
+        assert_eq!((u.total_bits, u.int_bits), (12, 3));
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration substrate: JSON + TOML-subset parsing (from scratch — the
+//! offline environment has no serde) and the typed experiment schema.
+
+pub mod experiment;
+pub mod json;
+pub mod toml;
+
+pub use experiment::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
+pub use json::Json;

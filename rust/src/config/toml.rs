@@ -1,0 +1,264 @@
+//! From-scratch TOML-subset parser for experiment config files.
+//!
+//! Supports the subset our configs use: `[section]` / `[a.b]` tables,
+//! `key = value` with strings, integers, floats, booleans and flat arrays,
+//! plus `#` comments. Parses into the crate's [`Json`] value type so the
+//! rest of the config layer has a single dynamic representation.
+//!
+//! ```toml
+//! [experiment]
+//! name = "fig2-dynamic"        # identifies the run
+//! [arithmetic]
+//! kind = "dynamic"
+//! bits_comp = 10
+//! max_overflow_rate = 1e-4
+//! ```
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+use super::json::Json;
+
+#[derive(Debug, Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, msg: msg.into() }
+}
+
+/// Parse a TOML-subset document into a JSON object tree.
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line_no = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(line_no, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line_no, "empty section name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err(line_no, "empty section path component"));
+            }
+            // materialize the table so empty sections still exist
+            insert_path(&mut root, &section, None, line_no)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(line_no, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(line_no, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), line_no)?;
+        let mut path = section.clone();
+        path.push(key.to_string());
+        insert_path(&mut root, &path, Some(value), line_no)?;
+    }
+    Ok(Json::Object(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn insert_path(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    value: Option<Json>,
+    line: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for (i, part) in path.iter().enumerate() {
+        let last = i == path.len() - 1;
+        if last {
+            match value {
+                Some(ref v) => {
+                    if cur.contains_key(part) && !matches!(cur.get(part), Some(Json::Object(m)) if m.is_empty())
+                    {
+                        return Err(err(line, format!("duplicate key '{part}'")));
+                    }
+                    cur.insert(part.clone(), v.clone());
+                }
+                None => {
+                    cur.entry(part.clone()).or_insert_with(|| Json::Object(BTreeMap::new()));
+                }
+            }
+            return Ok(());
+        }
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Object(BTreeMap::new()));
+        match entry {
+            Json::Object(m) => cur = m,
+            _ => return Err(err(line, format!("'{part}' is not a table"))),
+        }
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(err(line, format!("bad escape {other:?}"))),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Array(vec![]));
+        }
+        let items: Result<Vec<Json>, TomlError> = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(Json::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(line, format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas not inside strings (arrays are flat in our subset).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_experiment_config() {
+        let src = r#"
+# paper fig 2, dynamic fixed point point
+[experiment]
+name = "fig2-dynamic-10"
+model = "pi_mlp"
+dataset = "digits"
+
+[arithmetic]
+kind = "dynamic"
+bits_comp = 10
+bits_up = 31
+max_overflow_rate = 1e-4
+
+[train]
+steps = 400
+lr_start = 0.15
+dropout = [0.2, 0.5, 0.5]
+verbose = true
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(
+            v.get("experiment").unwrap().get("name").unwrap().as_str().unwrap(),
+            "fig2-dynamic-10"
+        );
+        assert_eq!(
+            v.get("arithmetic").unwrap().get("bits_comp").unwrap().as_usize().unwrap(),
+            10
+        );
+        assert_eq!(
+            v.get("arithmetic").unwrap().get("max_overflow_rate").unwrap().as_f64().unwrap(),
+            1e-4
+        );
+        let dropout = v.get("train").unwrap().get("dropout").unwrap().as_array().unwrap();
+        assert_eq!(dropout.len(), 3);
+        assert_eq!(v.get("train").unwrap().get("verbose").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let v = parse("[a.b]\nc = 1\n[a.d]\ne = \"x\"").unwrap();
+        assert_eq!(v.get("a").unwrap().get("b").unwrap().get("c").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(v.get("a").unwrap().get("d").unwrap().get("e").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn comments_and_hashes_in_strings() {
+        let v = parse("k = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["[unclosed\nk=1", "novalue =", "= 1", "k = [1,", "k = \"open", "[a..b]\n"] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn empty_section_materializes() {
+        let v = parse("[empty]\n").unwrap();
+        assert!(v.get("empty").unwrap().as_object().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Run metrics: in-memory history + CSV/JSON export.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::config::json::Json;
+
+/// Time series recorded during one training run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// (step, train minibatch loss)
+    pub losses: Vec<(usize, f32)>,
+    /// (step, test error rate in [0,1])
+    pub evals: Vec<(usize, f64)>,
+    /// (step, #scale moves at that controller tick)
+    pub scale_moves: Vec<(usize, usize)>,
+}
+
+impl Metrics {
+    pub fn record_loss(&mut self, step: usize, loss: f32) {
+        self.losses.push((step, loss));
+    }
+
+    pub fn record_eval(&mut self, step: usize, err: f64) {
+        self.evals.push((step, err));
+    }
+
+    pub fn record_scale_moves(&mut self, step: usize, moves: usize) {
+        self.scale_moves.push((step, moves));
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.losses.last().map(|&(_, l)| l)
+    }
+
+    pub fn final_error(&self) -> Option<f64> {
+        self.evals.last().map(|&(_, e)| e)
+    }
+
+    /// Mean loss over the last `n` recorded steps (smoother than a single
+    /// minibatch loss).
+    pub fn tail_loss(&self, n: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        Some(tail.iter().map(|&(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Write the loss curve as CSV (`step,loss`).
+    pub fn write_loss_csv(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss")?;
+        for (s, l) in &self.losses {
+            writeln!(f, "{s},{l}")?;
+        }
+        Ok(())
+    }
+
+    /// Full metrics as a JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "losses".to_string(),
+            Json::Array(
+                self.losses
+                    .iter()
+                    .map(|&(s, l)| Json::Array(vec![Json::Num(s as f64), Json::Num(l as f64)]))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "evals".to_string(),
+            Json::Array(
+                self.evals
+                    .iter()
+                    .map(|&(s, e)| Json::Array(vec![Json::Num(s as f64), Json::Num(e)]))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "scale_moves".to_string(),
+            Json::Array(
+                self.scale_moves
+                    .iter()
+                    .map(|&(s, n)| Json::Array(vec![Json::Num(s as f64), Json::Num(n as f64)]))
+                    .collect(),
+            ),
+        );
+        Json::Object(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_loss(i, 1.0 / (i + 1) as f32);
+        }
+        m.record_eval(9, 0.125);
+        assert_eq!(m.final_error(), Some(0.125));
+        assert_eq!(m.final_loss(), Some(0.1));
+        let t = m.tail_loss(2).unwrap();
+        assert!((t - (1.0 / 9.0 + 0.1) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tail_loss_handles_short_history() {
+        let mut m = Metrics::default();
+        assert_eq!(m.tail_loss(5), None);
+        m.record_loss(0, 2.0);
+        assert_eq!(m.tail_loss(5), Some(2.0));
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let mut m = Metrics::default();
+        m.record_loss(0, 1.5);
+        m.record_eval(0, 0.5);
+        m.record_scale_moves(3, 2);
+        let j = m.to_json();
+        let reparsed = crate::config::json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut m = Metrics::default();
+        m.record_loss(0, 1.0);
+        m.record_loss(1, 0.5);
+        let path = std::env::temp_dir().join("lpdnn_test_loss.csv");
+        m.write_loss_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("step,loss"));
+        assert!(text.contains("1,0.5"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the training orchestrator + the paper's dynamic fixed
+//! point scale controller.
+//!
+//! * [`trainer`]    — one experiment end to end (init, loop, schedules,
+//!   eval); feeds the compiled train step and consumes its overflow
+//!   counters.
+//! * [`scale_ctrl`] — per-group scaling-factor state + the section 5
+//!   update rule. The *only* stateful online mechanism in the paper, and
+//!   the part that genuinely belongs in the coordinator.
+//! * [`metrics`]    — loss/error/scale time series, CSV/JSON export.
+//! * [`sweep`]      — figure-regeneration machinery (normalized errors).
+
+pub mod metrics;
+pub mod scale_ctrl;
+pub mod sweep;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use scale_ctrl::ScaleController;
+pub use sweep::{run_sweep, SweepPoint, SweepRow};
+pub use trainer::{RunResult, Trainer};

@@ -1,0 +1,237 @@
+//! The dynamic fixed point scale controller — the paper's section 5
+//! mechanism, owned by L3.
+//!
+//! One [`GroupState`](crate::arith::GroupState) per scaling-factor group
+//! (8 kinds × layers, see `runtime::manifest`). Every train step the
+//! compiled artifact returns the `[n_groups, 3]` overflow-counter matrix;
+//! the controller accumulates it and, every `update_every_examples`
+//! examples (paper: 10 000), applies the ×2/÷2 rule per group.
+//!
+//! The same type serves the static arithmetics: for float32/float16 the
+//! step vector is all zeros (passthrough sentinel), for fixed point all
+//! groups share one frozen format — `after_batch` simply never updates.
+
+use crate::arith::{FixedFormat, GroupState, OverflowCounts, UpdateDecision};
+use crate::runtime::manifest::{N_KINDS, UPDATE_KINDS};
+use crate::tensor::Tensor;
+
+/// Per-group scale management for one training run.
+#[derive(Clone, Debug)]
+pub struct ScaleController {
+    groups: Vec<GroupState>,
+    dynamic: bool,
+    max_rate: f64,
+    update_every_examples: usize,
+    examples_since_update: usize,
+    /// (step_index, group, new int_bits) log of every scale move.
+    pub decisions_log: Vec<(usize, usize, i32)>,
+}
+
+impl ScaleController {
+    /// Static controller: every group frozen at its kind's format.
+    /// `comp_fmt` applies to signal kinds, `up_fmt` to parameter storage
+    /// (paper section 6's two bit-widths).
+    pub fn fixed(n_layers: usize, comp_fmt: FixedFormat, up_fmt: FixedFormat) -> Self {
+        Self::build(n_layers, comp_fmt, up_fmt, false, 0.0, usize::MAX)
+    }
+
+    /// Dynamic controller (paper section 5).
+    pub fn dynamic(
+        n_layers: usize,
+        comp_fmt: FixedFormat,
+        up_fmt: FixedFormat,
+        max_rate: f64,
+        update_every_examples: usize,
+    ) -> Self {
+        Self::build(n_layers, comp_fmt, up_fmt, true, max_rate, update_every_examples)
+    }
+
+    fn build(
+        n_layers: usize,
+        comp_fmt: FixedFormat,
+        up_fmt: FixedFormat,
+        dynamic: bool,
+        max_rate: f64,
+        update_every_examples: usize,
+    ) -> Self {
+        let mut groups = Vec::with_capacity(n_layers * N_KINDS);
+        for _layer in 0..n_layers {
+            for kind in 0..N_KINDS {
+                let fmt = if UPDATE_KINDS.contains(&kind) { up_fmt } else { comp_fmt };
+                groups.push(GroupState::new(fmt));
+            }
+        }
+        ScaleController {
+            groups,
+            dynamic,
+            max_rate,
+            update_every_examples,
+            examples_since_update: 0,
+            decisions_log: Vec::new(),
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    /// Current format of group `g`.
+    pub fn format(&self, g: usize) -> FixedFormat {
+        self.groups[g].fmt
+    }
+
+    /// Runtime `steps[n_groups]` vector for the compiled artifact.
+    pub fn steps_vec(&self) -> Vec<f32> {
+        self.groups.iter().map(|g| g.fmt.step()).collect()
+    }
+
+    /// Runtime `maxvs[n_groups]` vector for the compiled artifact.
+    pub fn maxvs_vec(&self) -> Vec<f32> {
+        self.groups.iter().map(|g| g.fmt.maxv()).collect()
+    }
+
+    /// Current int_bits per group (for logging / warmup transfer).
+    pub fn int_bits_vec(&self) -> Vec<i32> {
+        self.groups.iter().map(|g| g.fmt.int_bits).collect()
+    }
+
+    /// Adopt per-group int_bits (e.g. learned during high-precision
+    /// warmup — paper 9.3) while keeping each group's bit-width.
+    pub fn adopt_int_bits(&mut self, int_bits: &[i32]) {
+        assert_eq!(int_bits.len(), self.groups.len());
+        for (g, &ib) in self.groups.iter_mut().zip(int_bits) {
+            g.fmt = FixedFormat::new(g.fmt.total_bits, ib);
+        }
+    }
+
+    /// Feed one step's `[n_groups, 3]` overflow matrix from the artifact.
+    pub fn observe_matrix(&mut self, overflow: &Tensor) {
+        assert_eq!(overflow.shape(), &[self.groups.len(), 3], "overflow matrix shape");
+        let d = overflow.data();
+        for (i, g) in self.groups.iter_mut().enumerate() {
+            g.observe(OverflowCounts {
+                n_over: d[i * 3] as u64,
+                n_half: d[i * 3 + 1] as u64,
+                n_total: d[i * 3 + 2] as u64,
+            });
+        }
+    }
+
+    /// Advance the example counter; when the update interval elapses (and
+    /// the controller is dynamic), apply the paper's rule to every group.
+    /// Returns the number of scale moves made, if an update ran.
+    pub fn after_batch(&mut self, batch_examples: usize, step_index: usize) -> Option<usize> {
+        self.examples_since_update += batch_examples;
+        if !self.dynamic || self.examples_since_update < self.update_every_examples {
+            return None;
+        }
+        self.examples_since_update = 0;
+        let mut moves = 0;
+        for (gi, g) in self.groups.iter_mut().enumerate() {
+            match g.maybe_update(self.max_rate) {
+                UpdateDecision::Hold => {}
+                _ => {
+                    moves += 1;
+                    self.decisions_log.push((step_index, gi, g.fmt.int_bits));
+                }
+            }
+        }
+        Some(moves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn overflow(n_groups: usize, over: f32, half: f32, total: f32) -> Tensor {
+        let mut d = Vec::with_capacity(n_groups * 3);
+        for _ in 0..n_groups {
+            d.extend_from_slice(&[over, half, total]);
+        }
+        Tensor::from_vec(&[n_groups, 3], d)
+    }
+
+    #[test]
+    fn static_controller_never_moves() {
+        let mut c = ScaleController::fixed(3, FixedFormat::new(20, 5), FixedFormat::new(20, 5));
+        assert!(!c.is_dynamic());
+        c.observe_matrix(&overflow(24, 1000.0, 1000.0, 1000.0));
+        assert_eq!(c.after_batch(1_000_000, 0), None);
+        assert!(c.steps_vec().iter().all(|&s| s == FixedFormat::new(20, 5).step()));
+    }
+
+    #[test]
+    fn float32_controller_is_passthrough() {
+        let c = ScaleController::fixed(2, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        assert!(c.steps_vec().iter().all(|&s| s == 0.0));
+        assert!(c.maxvs_vec().iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn update_kinds_get_up_format() {
+        let c = ScaleController::fixed(1, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        // kind order: w b z h dw db dz dh
+        assert_eq!(c.format(0).total_bits, 12); // w
+        assert_eq!(c.format(1).total_bits, 12); // b
+        assert_eq!(c.format(2).total_bits, 10); // z
+        assert_eq!(c.format(7).total_bits, 10); // dh
+        assert_eq!(c.format(0).int_bits, 0);
+        assert_eq!(c.format(2).int_bits, 3);
+    }
+
+    #[test]
+    fn dynamic_controller_updates_on_interval() {
+        let mut c = ScaleController::dynamic(
+            1,
+            FixedFormat::new(10, 2),
+            FixedFormat::new(12, 2),
+            1e-4,
+            100, // examples
+        );
+        // overflowing every group
+        c.observe_matrix(&overflow(8, 50.0, 60.0, 100.0));
+        assert_eq!(c.after_batch(64, 0), None); // 64 < 100 examples
+        c.observe_matrix(&overflow(8, 50.0, 60.0, 100.0));
+        let moves = c.after_batch(64, 1).expect("tick after 128 examples");
+        assert_eq!(moves, 8); // every group scaled up
+        assert!(c.int_bits_vec().iter().all(|&b| b == 3));
+        assert_eq!(c.decisions_log.len(), 8);
+    }
+
+    #[test]
+    fn quiet_groups_gain_precision() {
+        let mut c = ScaleController::dynamic(
+            1,
+            FixedFormat::new(10, 2),
+            FixedFormat::new(12, 2),
+            1e-4,
+            10,
+        );
+        c.observe_matrix(&overflow(8, 0.0, 0.0, 10_000.0));
+        c.after_batch(10, 0).unwrap();
+        assert!(c.int_bits_vec().iter().all(|&b| b == 1));
+    }
+
+    #[test]
+    fn adopt_int_bits_transfers_warmup_scales() {
+        let mut c =
+            ScaleController::dynamic(1, FixedFormat::new(10, 0), FixedFormat::new(12, 0), 1e-4, 10);
+        c.adopt_int_bits(&[5, 4, 3, 2, 1, 0, -1, -2]);
+        assert_eq!(c.int_bits_vec(), vec![5, 4, 3, 2, 1, 0, -1, -2]);
+        // widths preserved
+        assert_eq!(c.format(0).total_bits, 12);
+        assert_eq!(c.format(2).total_bits, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow matrix shape")]
+    fn shape_mismatch_panics() {
+        let mut c = ScaleController::fixed(2, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        c.observe_matrix(&Tensor::zeros(&[3, 3]));
+    }
+}

@@ -1,0 +1,73 @@
+//! Parameter sweeps: the machinery behind every paper figure.
+//!
+//! A sweep is a base [`ExperimentConfig`] plus a list of variants; the
+//! runner executes each variant (sharing one PJRT engine and one manifest)
+//! and reports normalized final test errors — the paper's own presentation
+//! (every figure divides by the dataset's float32 baseline error).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::trainer::{RunResult, Trainer};
+use crate::runtime::{Engine, Manifest};
+
+/// One sweep point: a label and the config to run.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub cfg: ExperimentConfig,
+}
+
+/// Result row of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub label: String,
+    pub test_error: f64,
+    /// error / baseline error (the paper's normalized final test error).
+    pub normalized: f64,
+    pub wallclock: std::time::Duration,
+    pub result: RunResult,
+}
+
+/// Run `baseline` first (float32 reference), then every point; returns
+/// (baseline error, rows with normalized errors).
+pub fn run_sweep(
+    engine: &Engine,
+    manifest: &Manifest,
+    baseline: &ExperimentConfig,
+    points: &[SweepPoint],
+    verbose: bool,
+) -> crate::Result<(f64, Vec<SweepRow>)> {
+    let mut t = Trainer::new(engine, manifest, baseline.clone());
+    t.verbose = verbose;
+    let base = t.run()?;
+    let base_err = base.test_error.max(1e-9);
+    if verbose {
+        eprintln!(
+            "[sweep] baseline '{}' error {:.4} ({:.1?})",
+            baseline.name, base.test_error, base.wallclock
+        );
+    }
+
+    let mut rows = Vec::with_capacity(points.len());
+    for p in points {
+        let mut t = Trainer::new(engine, manifest, p.cfg.clone());
+        t.verbose = verbose;
+        let r = t.run()?;
+        if verbose {
+            eprintln!(
+                "[sweep] {} error {:.4} (x{:.2} baseline, {:.1?})",
+                p.label,
+                r.test_error,
+                r.test_error / base_err,
+                r.wallclock
+            );
+        }
+        rows.push(SweepRow {
+            label: p.label.clone(),
+            test_error: r.test_error,
+            normalized: r.test_error / base_err,
+            wallclock: r.wallclock,
+            result: r,
+        });
+    }
+    Ok((base.test_error, rows))
+}

@@ -1,0 +1,183 @@
+//! Minibatch scheduling: shuffled epochs over a [`Split`].
+//!
+//! The compiled train step has a fixed batch size (baked at AOT time), so
+//! the batcher always yields full batches, reshuffling between epochs and
+//! carrying the remainder over — the standard "infinite shuffled stream"
+//! SGD contract. Evaluation uses [`Batcher::eval_batches`], which walks the
+//! split once, padding the final batch by wrapping (the runner subtracts
+//! the padded duplicates from the error count).
+
+use super::Split;
+use crate::tensor::{ops, Pcg32, Tensor};
+
+/// An infinite shuffled minibatch stream over a split.
+pub struct Batcher<'a> {
+    split: &'a Split,
+    batch: usize,
+    n_classes: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+    epoch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(split: &'a Split, batch: usize, n_classes: usize, rng: Pcg32) -> Self {
+        assert!(batch > 0 && !split.is_empty());
+        let mut b = Batcher {
+            split,
+            batch,
+            n_classes,
+            order: (0..split.len()).collect(),
+            cursor: 0,
+            rng,
+            epoch: 0,
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    /// Epochs completed so far.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Examples consumed so far (monotonic across epochs).
+    pub fn examples_seen(&self) -> usize {
+        self.epoch * self.split.len() + self.cursor
+    }
+
+    /// Next full minibatch: `(x [batch, ...], y_onehot [batch, classes])`.
+    pub fn next_batch(&mut self) -> (Tensor, Tensor) {
+        let d = self.split.example_len();
+        let mut xs = Vec::with_capacity(self.batch * d);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            xs.extend_from_slice(self.split.example(idx));
+            labels.push(self.split.labels[idx]);
+        }
+        let mut shape = vec![self.batch];
+        shape.extend_from_slice(self.split.example_shape());
+        (Tensor::from_vec(&shape, xs), ops::one_hot(&labels, self.n_classes))
+    }
+
+    /// One sequential pass for evaluation: batches of exactly `batch`,
+    /// the last one padded by wrapping to the start. Each item is
+    /// `(x, y_onehot, n_real)` where `n_real ≤ batch` is the number of
+    /// non-padding examples in the batch.
+    pub fn eval_batches(
+        split: &Split,
+        batch: usize,
+        n_classes: usize,
+    ) -> Vec<(Tensor, Tensor, usize)> {
+        let n = split.len();
+        let d = split.example_len();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let n_real = (n - i).min(batch);
+            let mut xs = Vec::with_capacity(batch * d);
+            let mut labels = Vec::with_capacity(batch);
+            for j in 0..batch {
+                let idx = if j < n_real { i + j } else { j - n_real }; // wrap-pad
+                xs.extend_from_slice(split.example(idx));
+                labels.push(split.labels[idx]);
+            }
+            let mut shape = vec![batch];
+            shape.extend_from_slice(split.example_shape());
+            out.push((
+                Tensor::from_vec(&shape, xs),
+                ops::one_hot(&labels, n_classes),
+                n_real,
+            ));
+            i += n_real;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_split(n: usize) -> Split {
+        let x: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        Split { x: Tensor::from_vec(&[n, 2], x), labels: (0..n).map(|i| i % 3).collect() }
+    }
+
+    #[test]
+    fn batches_have_exact_size_and_onehot_labels() {
+        let split = toy_split(10);
+        let mut b = Batcher::new(&split, 4, 3, Pcg32::seeded(1));
+        let (x, y) = b.next_batch();
+        assert_eq!(x.shape(), &[4, 2]);
+        assert_eq!(y.shape(), &[4, 3]);
+        for row in y.data().chunks(3) {
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn one_epoch_visits_every_example_once() {
+        let split = toy_split(12);
+        let mut b = Batcher::new(&split, 4, 3, Pcg32::seeded(2));
+        let mut seen = vec![0usize; 12];
+        for _ in 0..3 {
+            let (x, _) = b.next_batch();
+            for ex in x.data().chunks(2) {
+                seen[(ex[0] / 2.0) as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        assert_eq!(b.epoch(), 0);
+        b.next_batch();
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn examples_seen_monotonic() {
+        let split = toy_split(6);
+        let mut b = Batcher::new(&split, 4, 3, Pcg32::seeded(3));
+        let mut last = 0;
+        for _ in 0..5 {
+            b.next_batch();
+            assert!(b.examples_seen() > last);
+            last = b.examples_seen();
+        }
+        assert_eq!(last, 20);
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let split = toy_split(8);
+        let mut b = Batcher::new(&split, 8, 3, Pcg32::seeded(4));
+        let (e1, _) = b.next_batch();
+        let (e2, _) = b.next_batch();
+        assert_ne!(e1.data(), e2.data()); // same set, different order
+        let mut s1: Vec<i64> = e1.data().iter().map(|&v| v as i64).collect();
+        let mut s2: Vec<i64> = e2.data().iter().map(|&v| v as i64).collect();
+        s1.sort_unstable();
+        s2.sort_unstable();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn eval_batches_cover_split_with_wrap_padding() {
+        let split = toy_split(10);
+        let batches = Batcher::eval_batches(&split, 4, 3);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].2, 4);
+        assert_eq!(batches[1].2, 4);
+        assert_eq!(batches[2].2, 2); // 2 real + 2 wrap-padding
+        assert_eq!(batches[2].0.shape(), &[4, 2]);
+        let total: usize = batches.iter().map(|b| b.2).sum();
+        assert_eq!(total, 10);
+    }
+}

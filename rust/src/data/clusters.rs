@@ -1,0 +1,125 @@
+//! Pure permutation-invariant task: a 784-d Gaussian mixture.
+//!
+//! Ten class centres drawn on a sphere, examples = centre + isotropic
+//! noise. No spatial structure whatsoever — the control experiment for
+//! `pi_mlp` runs where we want the numeric-format effects isolated from
+//! convolutional inductive bias.
+
+use super::{Dataset, Split};
+use crate::tensor::{Pcg32, Tensor};
+
+pub const DIM: usize = 784;
+const CENTRE_NORM: f32 = 4.0;
+const NOISE_SD: f32 = 0.9;
+
+fn make_centres(rng: &mut Pcg32) -> Vec<Vec<f32>> {
+    (0..10)
+        .map(|_| {
+            let mut c: Vec<f32> = (0..DIM).map(|_| rng.normal()).collect();
+            let norm = (c.iter().map(|v| v * v).sum::<f32>()).sqrt();
+            for v in &mut c {
+                *v *= CENTRE_NORM / norm;
+            }
+            c
+        })
+        .collect()
+}
+
+fn make_split(n: usize, centres: &[Vec<f32>], rng: &mut Pcg32) -> Split {
+    let mut x = Vec::with_capacity(n * DIM);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        let c = &centres[class];
+        x.extend(c.iter().map(|&m| m + NOISE_SD * rng.normal()));
+        labels.push(class);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut xs = vec![0.0f32; n * DIM];
+    let mut ls = vec![0usize; n];
+    for (new_i, &old_i) in order.iter().enumerate() {
+        xs[new_i * DIM..(new_i + 1) * DIM]
+            .copy_from_slice(&x[old_i * DIM..(old_i + 1) * DIM]);
+        ls[new_i] = labels[old_i];
+    }
+    Split { x: Tensor::from_vec(&[n, DIM], xs), labels: ls }
+}
+
+/// Generate the Gaussian-mixture dataset (shared centres across splits).
+pub fn generate(n_train: usize, n_test: usize, rng: &mut Pcg32) -> Dataset {
+    let centres = make_centres(&mut rng.fork(0));
+    let train = make_split(n_train, &centres, &mut rng.fork(1));
+    let test = make_split(n_test, &centres, &mut rng.fork(2));
+    Dataset { name: "clusters".into(), train, test, n_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centres_have_target_norm() {
+        let centres = make_centres(&mut Pcg32::seeded(1));
+        for c in &centres {
+            let norm = c.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - CENTRE_NORM).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn classes_linearly_separable_by_nearest_centre() {
+        let mut rng = Pcg32::seeded(2);
+        let centres = make_centres(&mut rng.fork(0));
+        let split = make_split(500, &centres, &mut rng.fork(1));
+        let mut correct = 0;
+        for i in 0..split.len() {
+            let ex = split.example(i);
+            let pred = centres
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    let da: f32 = ex.iter().zip(*a).map(|(x, y)| (x - y) * (x - y)).sum();
+                    let db: f32 = ex.iter().zip(*b).map(|(x, y)| (x - y) * (x - y)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap()
+                .0;
+            if pred == split.labels[i] {
+                correct += 1;
+            }
+        }
+        // centres 3σ-ish apart in 784-d: nearest-centre is near-perfect
+        assert!(correct as f64 / split.len() as f64 > 0.95);
+    }
+
+    #[test]
+    fn train_test_share_centres() {
+        // Same class ⇒ same centre in both splits: the distance between a
+        // class's train mean and its test mean must be dominated by noise
+        // (≈ σ·√(2·784/n_per_class)), NOT by centre separation — and must
+        // be clearly smaller than the cross-class distance.
+        let ds = generate(2000, 2000, &mut Pcg32::seeded(3));
+        let mean_of = |split: &Split, class: usize| -> Vec<f32> {
+            let mut acc = vec![0.0f32; DIM];
+            let mut count = 0;
+            for i in 0..split.len() {
+                if split.labels[i] == class {
+                    for (a, &v) in acc.iter_mut().zip(split.example(i)) {
+                        *a += v;
+                    }
+                    count += 1;
+                }
+            }
+            acc.iter().map(|v| v / count as f32).collect()
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+        };
+        let same = dist(&mean_of(&ds.train, 4), &mean_of(&ds.test, 4));
+        let cross = dist(&mean_of(&ds.train, 4), &mean_of(&ds.test, 7));
+        // n_per_class = 200 ⇒ noise distance ≈ 0.9·√(2·784/200) ≈ 2.5
+        assert!(same < 3.5, "same-class mean distance {same}");
+        assert!(cross > same + 1.0, "cross {cross} vs same {same}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Procedural stroke-font digit renderer.
+//!
+//! Each digit 0–9 is a set of line segments on the unit square (a
+//! seven-segment skeleton with a couple of diagonal embellishments so 1/7
+//! and 6/9 separate cleanly). [`render`] draws the segments into a
+//! grayscale raster with anti-aliased stroke width after a random affine
+//! jitter (rotation, scale, translation, shear) — enough intra-class
+//! variation to make the task non-trivial, the same role MNIST's
+//! handwriting variation plays.
+
+use crate::tensor::Pcg32;
+
+/// One stroke: a line segment in unit-square coordinates (y grows down).
+#[derive(Clone, Copy, Debug)]
+pub struct Seg(pub f32, pub f32, pub f32, pub f32);
+
+/// Segment endpoints for the seven-segment skeleton.
+const A: Seg = Seg(0.25, 0.12, 0.75, 0.12); // top
+const B: Seg = Seg(0.75, 0.12, 0.75, 0.50); // upper right
+const C: Seg = Seg(0.75, 0.50, 0.75, 0.88); // lower right
+const D: Seg = Seg(0.25, 0.88, 0.75, 0.88); // bottom
+const E: Seg = Seg(0.25, 0.50, 0.25, 0.88); // lower left
+const F: Seg = Seg(0.25, 0.12, 0.25, 0.50); // upper left
+const G: Seg = Seg(0.25, 0.50, 0.75, 0.50); // middle
+
+/// The strokes of each digit.
+pub fn strokes(digit: usize) -> Vec<Seg> {
+    match digit {
+        0 => vec![A, B, C, D, E, F],
+        1 => vec![Seg(0.5, 0.12, 0.5, 0.88), Seg(0.35, 0.28, 0.5, 0.12)],
+        2 => vec![A, B, G, E, D],
+        3 => vec![A, B, G, C, D],
+        4 => vec![F, G, B, C],
+        5 => vec![A, F, G, C, D],
+        6 => vec![A, F, G, E, D, C],
+        7 => vec![A, Seg(0.75, 0.12, 0.45, 0.88)],
+        8 => vec![A, B, C, D, E, F, G],
+        9 => vec![A, B, C, D, F, G],
+        _ => panic!("digit out of range: {digit}"),
+    }
+}
+
+/// Affine jitter parameters drawn per example.
+#[derive(Clone, Copy, Debug)]
+pub struct Jitter {
+    pub angle: f32,
+    pub scale: f32,
+    pub dx: f32,
+    pub dy: f32,
+    pub shear: f32,
+    pub stroke: f32,
+}
+
+impl Jitter {
+    /// Sample a plausible handwriting-ish jitter.
+    pub fn sample(rng: &mut Pcg32) -> Jitter {
+        Jitter {
+            angle: rng.uniform_range(-0.22, 0.22), // ±12.6°
+            scale: rng.uniform_range(0.80, 1.10),
+            dx: rng.uniform_range(-0.08, 0.08),
+            dy: rng.uniform_range(-0.08, 0.08),
+            shear: rng.uniform_range(-0.15, 0.15),
+            stroke: rng.uniform_range(0.045, 0.075),
+        }
+    }
+
+    /// The identity jitter (for tests / golden renders).
+    pub fn identity() -> Jitter {
+        Jitter { angle: 0.0, scale: 1.0, dx: 0.0, dy: 0.0, shear: 0.0, stroke: 0.06 }
+    }
+
+    /// Apply to a unit-square point (centre-anchored).
+    fn apply(&self, x: f32, y: f32) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let sheared = cx + self.shear * cy;
+        let (s, c) = self.angle.sin_cos();
+        let rx = c * sheared - s * cy;
+        let ry = s * sheared + c * cy;
+        (rx * self.scale + 0.5 + self.dx, ry * self.scale + 0.5 + self.dy)
+    }
+}
+
+/// Distance from point `(px, py)` to segment `seg` (all unit-square).
+fn seg_distance(seg: &Seg, px: f32, py: f32) -> f32 {
+    let (x0, y0, x1, y1) = (seg.0, seg.1, seg.2, seg.3);
+    let (vx, vy) = (x1 - x0, y1 - y0);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 0.0 {
+        (((px - x0) * vx + (py - y0) * vy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (qx, qy) = (x0 + t * vx, y0 + t * vy);
+    ((px - qx) * (px - qx) + (py - qy) * (py - qy)).sqrt()
+}
+
+/// Render `digit` into a `side × side` grayscale raster in `[0, 1]`.
+/// Intensity falls off linearly across half a stroke width (cheap AA).
+pub fn render(digit: usize, side: usize, jitter: &Jitter) -> Vec<f32> {
+    // Transform the strokes once, then rasterize by distance.
+    let segs: Vec<Seg> = strokes(digit)
+        .iter()
+        .map(|s| {
+            let (x0, y0) = jitter.apply(s.0, s.1);
+            let (x1, y1) = jitter.apply(s.2, s.3);
+            Seg(x0, y0, x1, y1)
+        })
+        .collect();
+
+    let mut img = vec![0.0f32; side * side];
+    let inv = 1.0 / side as f32;
+    for r in 0..side {
+        let py = (r as f32 + 0.5) * inv;
+        for cidx in 0..side {
+            let px = (cidx as f32 + 0.5) * inv;
+            let mut v = 0.0f32;
+            for seg in &segs {
+                let d = seg_distance(seg, px, py);
+                let t = 1.0 - (d - jitter.stroke * 0.5).max(0.0) / (jitter.stroke * 0.5);
+                v = v.max(t.clamp(0.0, 1.0));
+            }
+            img[r * side + cidx] = v;
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_digit_renders_nonempty() {
+        for d in 0..10 {
+            let img = render(d, 28, &Jitter::identity());
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 10.0, "digit {d} too faint: {ink}");
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn digits_are_mutually_distinguishable() {
+        // L2 distance between clean renders of distinct digits must be
+        // well above zero (sanity: classes don't collapse).
+        let imgs: Vec<Vec<f32>> =
+            (0..10).map(|d| render(d, 28, &Jitter::identity())).collect();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d2: f32 = imgs[i]
+                    .iter()
+                    .zip(&imgs[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(d2.sqrt() > 2.0, "digits {i} and {j} too similar: {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_changes_but_preserves_class_structure() {
+        let mut rng = Pcg32::seeded(11);
+        let clean = render(3, 28, &Jitter::identity());
+        let jit = render(3, 28, &Jitter::sample(&mut rng));
+        assert_ne!(clean, jit);
+        // a jittered 3 is still closer to a clean 3 than to a clean 0
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let clean0 = render(0, 28, &Jitter::identity());
+        assert!(d(&jit, &clean) < d(&jit, &clean0));
+    }
+
+    #[test]
+    fn seg_distance_basics() {
+        let s = Seg(0.0, 0.0, 1.0, 0.0);
+        assert!((seg_distance(&s, 0.5, 0.0)).abs() < 1e-6);
+        assert!((seg_distance(&s, 0.5, 0.3) - 0.3).abs() < 1e-6);
+        assert!((seg_distance(&s, 2.0, 0.0) - 1.0).abs() < 1e-6); // clamped to endpoint
+    }
+
+    #[test]
+    #[should_panic(expected = "digit out of range")]
+    fn bad_digit_panics() {
+        strokes(10);
+    }
+}

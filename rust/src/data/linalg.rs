@@ -1,0 +1,272 @@
+//! Dense symmetric linear algebra for ZCA whitening (paper section 8.2).
+//!
+//! From scratch: covariance of a data matrix and a cyclic Jacobi
+//! eigensolver for symmetric matrices. Jacobi is O(d³) per sweep, so the
+//! preprocessing layer applies ZCA *patch-wise* (blocks of ≤ 192 dims) —
+//! see `preprocess.rs` for the block-diagonal substitution note.
+
+use crate::tensor::Tensor;
+
+/// Covariance (biased, 1/n) of rows of `x: [n, d]` around their mean.
+/// Returns `(mean[d], cov[d, d])`.
+pub fn covariance(x: &Tensor) -> (Vec<f32>, Tensor) {
+    let (n, d) = (x.shape()[0], x.shape()[1]);
+    assert!(n > 0);
+    let xd = x.data();
+    let mut mean = vec![0.0f64; d];
+    for row in xd.chunks(d) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut cov = vec![0.0f64; d * d];
+    for row in xd.chunks(d) {
+        for i in 0..d {
+            let ci = row[i] as f64 - mean[i];
+            // symmetric: fill upper triangle only, mirror later
+            for j in i..d {
+                cov[i * d + j] += ci * (row[j] as f64 - mean[j]);
+            }
+        }
+    }
+    let inv_n = 1.0 / n as f64;
+    let mut out = vec![0.0f32; d * d];
+    for i in 0..d {
+        for j in i..d {
+            let v = (cov[i * d + j] * inv_n) as f32;
+            out[i * d + j] = v;
+            out[j * d + i] = v;
+        }
+    }
+    (
+        mean.iter().map(|&m| m as f32).collect(),
+        Tensor::from_vec(&[d, d], out),
+    )
+}
+
+/// Eigendecomposition of a symmetric matrix by the cyclic Jacobi method.
+/// Returns `(eigenvalues[d], eigenvectors[d, d])` with eigenvectors in
+/// ROWS (`v[k] · a · v[k]^T = λ_k`), ordered as produced (unsorted).
+pub fn jacobi_eigh(a: &Tensor, max_sweeps: usize, tol: f64) -> (Vec<f32>, Tensor) {
+    let d = a.shape()[0];
+    assert_eq!(a.shape(), &[d, d], "square matrix required");
+    let mut m: Vec<f64> = a.data().iter().map(|&v| v as f64).collect();
+    // v starts as identity; accumulates the rotations (rows = eigenvectors).
+    let mut v = vec![0.0f64; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        // Frobenius norm of the off-diagonal part.
+        let mut off = 0.0f64;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += 2.0 * m[i * d + j] * m[i * d + j];
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..d {
+                    let mkp = m[k * d + p];
+                    let mkq = m[k * d + q];
+                    m[k * d + p] = c * mkp - s * mkq;
+                    m[k * d + q] = s * mkp + c * mkq;
+                }
+                for k in 0..d {
+                    let mpk = m[p * d + k];
+                    let mqk = m[q * d + k];
+                    m[p * d + k] = c * mpk - s * mqk;
+                    m[q * d + k] = s * mpk + c * mqk;
+                }
+                // accumulate rotation into v (rows)
+                for k in 0..d {
+                    let vpk = v[p * d + k];
+                    let vqk = v[q * d + k];
+                    v[p * d + k] = c * vpk - s * vqk;
+                    v[q * d + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+
+    let eigvals: Vec<f32> = (0..d).map(|i| m[i * d + i] as f32).collect();
+    let eigvecs = Tensor::from_vec(&[d, d], v.iter().map(|&x| x as f32).collect());
+    (eigvals, eigvecs)
+}
+
+/// ZCA whitening transform `W = V^T diag(1/sqrt(λ+eps)) V` from a
+/// covariance matrix (paper 8.2 preprocessing). Rows of `V` are the
+/// eigenvectors as returned by [`jacobi_eigh`].
+pub fn zca_matrix(cov: &Tensor, eps: f32) -> Tensor {
+    let d = cov.shape()[0];
+    let (vals, vecs) = jacobi_eigh(cov, 30, 1e-10);
+    // W[i,j] = Σ_k v[k,i] * s_k * v[k,j], s_k = 1/sqrt(λ_k + eps)
+    let vd = vecs.data();
+    let mut out = vec![0.0f32; d * d];
+    for k in 0..d {
+        let s = 1.0 / (vals[k].max(0.0) + eps).sqrt();
+        let row = &vd[k * d..(k + 1) * d];
+        for i in 0..d {
+            let vi = row[i] * s;
+            if vi == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * d..(i + 1) * d];
+            for (o, &vj) in orow.iter_mut().zip(row) {
+                *o += vi * vj;
+            }
+        }
+    }
+    Tensor::from_vec(&[d, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn rand_sym(d: usize, rng: &mut Pcg32) -> Tensor {
+        let mut m = vec![0.0f32; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.uniform_range(-1.0, 1.0);
+                m[i * d + j] = v;
+                m[j * d + i] = v;
+            }
+            m[i * d + i] += d as f32; // diagonally dominant → PD
+        }
+        Tensor::from_vec(&[d, d], m)
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // two perfectly anticorrelated dims
+        let x = Tensor::from_vec(&[4, 2], vec![1., -1., -1., 1., 2., -2., -2., 2.]);
+        let (mean, cov) = covariance(&x);
+        assert_eq!(mean, vec![0.0, 0.0]);
+        assert!((cov.at2(0, 0) - 2.5).abs() < 1e-6);
+        assert!((cov.at2(0, 1) + 2.5).abs() < 1e-6);
+        assert!((cov.at2(1, 0) - cov.at2(0, 1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        let mut rng = Pcg32::seeded(5);
+        for d in [2usize, 5, 16] {
+            let a = rand_sym(d, &mut rng);
+            let (vals, vecs) = jacobi_eigh(&a, 30, 1e-12);
+            // A ≈ Σ_k λ_k v_k v_k^T
+            for i in 0..d {
+                for j in 0..d {
+                    let mut acc = 0.0f64;
+                    for k in 0..d {
+                        acc += vals[k] as f64
+                            * vecs.at2(k, i) as f64
+                            * vecs.at2(k, j) as f64;
+                    }
+                    assert!(
+                        (acc as f32 - a.at2(i, j)).abs() < 1e-3,
+                        "d={d} ({i},{j}): {acc} vs {}",
+                        a.at2(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_eigenvectors_orthonormal() {
+        let mut rng = Pcg32::seeded(9);
+        let a = rand_sym(12, &mut rng);
+        let (_, vecs) = jacobi_eigh(&a, 30, 1e-12);
+        let d = 12;
+        for i in 0..d {
+            for j in 0..d {
+                let dot: f32 = (0..d).map(|k| vecs.at2(i, k) * vecs.at2(j, k)).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({i},{j}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_2x2_eigenvalues() {
+        // [[2, 1], [1, 2]] has eigenvalues 1 and 3.
+        let a = Tensor::from_vec(&[2, 2], vec![2., 1., 1., 2.]);
+        let (mut vals, _) = jacobi_eigh(&a, 20, 1e-14);
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((vals[0] - 1.0).abs() < 1e-5);
+        assert!((vals[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zca_whitens_correlated_data() {
+        // Generate correlated 6-d data, whiten, check covariance ≈ I.
+        let mut rng = Pcg32::seeded(13);
+        let d = 6;
+        let n = 4000;
+        let mut xs = vec![0.0f32; n * d];
+        for row in xs.chunks_mut(d) {
+            let shared = rng.normal();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = shared * 0.8 + rng.normal() * (0.2 + 0.1 * j as f32);
+            }
+        }
+        let x = Tensor::from_vec(&[n, d], xs);
+        let (mean, cov) = covariance(&x);
+        let w = zca_matrix(&cov, 1e-5);
+        // apply: y = W (x - mean)
+        let mut ys = vec![0.0f32; n * d];
+        for (yrow, xrow) in ys.chunks_mut(d).zip(x.data().chunks(d)) {
+            for i in 0..d {
+                let mut acc = 0.0f32;
+                for j in 0..d {
+                    acc += w.at2(i, j) * (xrow[j] - mean[j]);
+                }
+                yrow[i] = acc;
+            }
+        }
+        let (_, cov_y) = covariance(&Tensor::from_vec(&[n, d], ys));
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (cov_y.at2(i, j) - want).abs() < 0.05,
+                    "cov[{i},{j}] = {}",
+                    cov_y.at2(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zca_is_symmetric() {
+        // ZCA (unlike PCA whitening) is the unique symmetric whitener.
+        let mut rng = Pcg32::seeded(17);
+        let a = rand_sym(8, &mut rng);
+        let w = zca_matrix(&a, 1e-4);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((w.at2(i, j) - w.at2(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Dataset substrate: synthetic stand-ins for MNIST / CIFAR10 / SVHN.
+//!
+//! The build environment has no network and no dataset files, so per the
+//! substitution rule (DESIGN.md §Substitutions) we synthesize datasets
+//! that exercise the same code paths and the same *numeric regimes* the
+//! paper's benchmarks do:
+//!
+//! * [`digits`]     — 28×28 grayscale stroke-rendered digits (MNIST-like);
+//!                    consumed flattened by `pi_mlp` and spatially by
+//!                    `conv`.
+//! * [`clusters`]   — 784-d Gaussian mixture; a pure permutation-invariant
+//!                    control task with no spatial structure at all.
+//! * [`cifar_like`] — 32×32×3 colour+frequency texture classes with the
+//!                    paper's CIFAR10 preprocessing (GCN + ZCA whitening).
+//! * [`svhn_like`]  — 32×32×3 digit glyph over cluttered colour background
+//!                    with distractors, LCN-preprocessed (paper 8.3).
+//!
+//! Everything is deterministic given the experiment seed: generation,
+//! preprocessing and shuffling all derive from forks of one [`Pcg32`].
+
+pub mod batcher;
+pub mod cifar_like;
+pub mod clusters;
+pub mod digits;
+pub mod glyphs;
+pub mod linalg;
+pub mod preprocess;
+pub mod svhn_like;
+
+pub use batcher::Batcher;
+
+use crate::tensor::{Pcg32, Tensor};
+
+/// An in-memory labelled dataset split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    /// `[n, ...example_shape]`, row-major.
+    pub x: Tensor,
+    /// Class labels in `[0, n_classes)`.
+    pub labels: Vec<usize>,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Per-example shape (without the leading n axis).
+    pub fn example_shape(&self) -> &[usize] {
+        &self.x.shape()[1..]
+    }
+
+    /// Flat length of one example.
+    pub fn example_len(&self) -> usize {
+        self.example_shape().iter().product()
+    }
+
+    /// Borrow example `i` as a flat slice.
+    pub fn example(&self, i: usize) -> &[f32] {
+        let d = self.example_len();
+        &self.x.data()[i * d..(i + 1) * d]
+    }
+}
+
+/// A train/test dataset pair plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Split,
+    pub test: Split,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Generate the named dataset (see module docs) deterministically.
+    pub fn generate(
+        name: &str,
+        n_train: usize,
+        n_test: usize,
+        rng: &Pcg32,
+    ) -> crate::Result<Dataset> {
+        match name {
+            "digits" => Ok(digits::generate(n_train, n_test, &mut rng.fork(0xD161))),
+            "clusters" => Ok(clusters::generate(n_train, n_test, &mut rng.fork(0xC105))),
+            "cifar_like" => Ok(cifar_like::generate(n_train, n_test, &mut rng.fork(0xC1FA))),
+            "svhn_like" => Ok(svhn_like::generate(n_train, n_test, &mut rng.fork(0x54E7))),
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_generate_with_right_shapes() {
+        let rng = Pcg32::seeded(7);
+        for (name, shape) in [
+            ("digits", vec![28usize, 28, 1]),
+            ("clusters", vec![784]),
+            ("cifar_like", vec![32, 32, 3]),
+            ("svhn_like", vec![32, 32, 3]),
+        ] {
+            let ds = Dataset::generate(name, 64, 32, &rng).unwrap();
+            assert_eq!(ds.train.len(), 64, "{name}");
+            assert_eq!(ds.test.len(), 32, "{name}");
+            assert_eq!(ds.train.example_shape(), &shape[..], "{name}");
+            assert_eq!(ds.n_classes, 10, "{name}");
+            assert!(ds.train.labels.iter().all(|&l| l < 10));
+            assert!(ds.train.x.data().iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Dataset::generate("digits", 16, 8, &Pcg32::seeded(3)).unwrap();
+        let b = Dataset::generate("digits", 16, 8, &Pcg32::seeded(3)).unwrap();
+        assert_eq!(a.train.x.data(), b.train.x.data());
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn different_seeds_give_different_data() {
+        let a = Dataset::generate("digits", 16, 8, &Pcg32::seeded(3)).unwrap();
+        let b = Dataset::generate("digits", 16, 8, &Pcg32::seeded(4)).unwrap();
+        assert_ne!(a.train.x.data(), b.train.x.data());
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        assert!(Dataset::generate("imagenet", 8, 8, &Pcg32::seeded(1)).is_err());
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let ds = Dataset::generate("digits", 1000, 10, &Pcg32::seeded(5)).unwrap();
+        let mut counts = [0usize; 10];
+        for &l in &ds.train.labels {
+            counts[l] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 50, "class counts {counts:?}");
+        }
+    }
+}

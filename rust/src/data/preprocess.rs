@@ -1,0 +1,268 @@
+//! Preprocessing: the paper's pipelines, from scratch.
+//!
+//! * [`global_contrast_normalize`] — GCN (paper 8.2, CIFAR10): per example,
+//!   subtract the mean and scale to unit (thresholded) norm.
+//! * [`zca_whiten_patches`] — ZCA whitening (paper 8.2). The paper whitens
+//!   full 3072-d images; a dense 3072-d eigendecomposition is outside this
+//!   substrate's budget, so we whiten **8×8×3 patches block-diagonally**
+//!   (16 blocks per 32×32×3 image, one shared 192-d transform fit on
+//!   training patches). This preserves what matters for the paper's
+//!   question — decorrelated, variance-equalized inputs with the heavier
+//!   tails whitening produces — at O(192³) instead of O(3072³). Documented
+//!   in DESIGN.md §Substitutions.
+//! * [`local_contrast_normalize`] — LCN (paper 8.3, SVHN, after Zeiler &
+//!   Fergus 2013): subtractive + divisive normalization with a box window
+//!   per channel.
+
+use super::linalg;
+use crate::tensor::Tensor;
+
+/// GCN: x ← (x − mean(x)) / max(‖x − mean‖ / √d, floor) per example.
+pub fn global_contrast_normalize(x: &mut Tensor, floor: f32) {
+    let d: usize = x.shape()[1..].iter().product();
+    for row in x.data_mut().chunks_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let mut ss = 0.0f64;
+        for v in row.iter_mut() {
+            *v -= mean;
+            ss += (*v as f64) * (*v as f64);
+        }
+        let scale = ((ss / d as f64).sqrt() as f32).max(floor);
+        for v in row.iter_mut() {
+            *v /= scale;
+        }
+    }
+}
+
+/// Patch geometry for block-diagonal ZCA on NHWC images.
+const PATCH: usize = 8;
+
+/// Fit a shared ZCA transform on the training split's patches and apply it
+/// to both splits. Images must be `[n, h, w, c]` with `h, w` divisible by
+/// the 8-pixel patch size.
+pub fn zca_whiten_patches(train: &mut Tensor, test: &mut Tensor, eps: f32) {
+    let (h, w, c) = (train.shape()[1], train.shape()[2], train.shape()[3]);
+    assert!(h % PATCH == 0 && w % PATCH == 0, "image not patch-divisible");
+    let pd = PATCH * PATCH * c;
+
+    // Gather training patches into a [n_patches, pd] matrix.
+    let patches = extract_patches(train);
+    let pmat = Tensor::from_vec(&[patches.len() / pd, pd], patches);
+    let (mean, cov) = linalg::covariance(&pmat);
+    let wmat = linalg::zca_matrix(&cov, eps);
+
+    apply_patchwise(train, &mean, &wmat);
+    apply_patchwise(test, &mean, &wmat);
+
+    // Rescale to unit global RMS (fit on train): whitening divides by
+    // √(λ+eps), which for near-null directions inflates magnitudes by up
+    // to 1/√eps — harmless for decorrelation, but the training-dynamics
+    // contract (activation ranges the paper's radix sweep assumes) wants
+    // inputs O(1).
+    let n = train.len();
+    let rms = (train.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        / n as f64)
+        .sqrt()
+        .max(1e-6) as f32;
+    for t in [train, test] {
+        for v in t.data_mut().iter_mut() {
+            *v /= rms;
+        }
+    }
+}
+
+fn extract_patches(x: &Tensor) -> Vec<f32> {
+    let (n, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let pd = PATCH * PATCH * c;
+    let mut out = Vec::with_capacity(n * (h / PATCH) * (w / PATCH) * pd);
+    let xd = x.data();
+    for img in 0..n {
+        for pr in (0..h).step_by(PATCH) {
+            for pc in (0..w).step_by(PATCH) {
+                for r in 0..PATCH {
+                    let base = ((img * h + pr + r) * w + pc) * c;
+                    out.extend_from_slice(&xd[base..base + PATCH * c]);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn apply_patchwise(x: &mut Tensor, mean: &[f32], wmat: &Tensor) {
+    let (n, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let pd = PATCH * PATCH * c;
+    let xd = x.data_mut();
+    let mut buf = vec![0.0f32; pd];
+    let mut outbuf = vec![0.0f32; pd];
+    for img in 0..n {
+        for pr in (0..h).step_by(PATCH) {
+            for pc in (0..w).step_by(PATCH) {
+                // gather
+                for r in 0..PATCH {
+                    let base = ((img * h + pr + r) * w + pc) * c;
+                    buf[r * PATCH * c..(r + 1) * PATCH * c]
+                        .copy_from_slice(&xd[base..base + PATCH * c]);
+                }
+                // y = W (p - mean)
+                for (b, &m) in buf.iter_mut().zip(mean) {
+                    *b -= m;
+                }
+                let wd = wmat.data();
+                for i in 0..pd {
+                    let mut acc = 0.0f32;
+                    let row = &wd[i * pd..(i + 1) * pd];
+                    for (wv, bv) in row.iter().zip(&buf) {
+                        acc += wv * bv;
+                    }
+                    outbuf[i] = acc;
+                }
+                // scatter
+                for r in 0..PATCH {
+                    let base = ((img * h + pr + r) * w + pc) * c;
+                    xd[base..base + PATCH * c]
+                        .copy_from_slice(&outbuf[r * PATCH * c..(r + 1) * PATCH * c]);
+                }
+            }
+        }
+    }
+}
+
+/// LCN: per channel, subtract a box-window local mean then divide by
+/// max(local std, mean-of-local-stds) — Zeiler & Fergus 2013 style with a
+/// box kernel instead of a Gaussian (same regime, cheaper).
+pub fn local_contrast_normalize(x: &mut Tensor, radius: usize) {
+    let (n, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let xd = x.data_mut();
+    let mut centered = vec![0.0f32; h * w];
+    let mut stds = vec![0.0f32; h * w];
+    for img in 0..n {
+        for ch in 0..c {
+            // local mean pass
+            for r in 0..h {
+                for cc in 0..w {
+                    let (mut acc, mut cnt) = (0.0f32, 0u32);
+                    for rr in r.saturating_sub(radius)..=(r + radius).min(h - 1) {
+                        for c2 in cc.saturating_sub(radius)..=(cc + radius).min(w - 1) {
+                            acc += xd[((img * h + rr) * w + c2) * c + ch];
+                            cnt += 1;
+                        }
+                    }
+                    centered[r * w + cc] =
+                        xd[((img * h + r) * w + cc) * c + ch] - acc / cnt as f32;
+                }
+            }
+            // local std pass on the centered map
+            let mut std_sum = 0.0f64;
+            for r in 0..h {
+                for cc in 0..w {
+                    let (mut acc, mut cnt) = (0.0f32, 0u32);
+                    for rr in r.saturating_sub(radius)..=(r + radius).min(h - 1) {
+                        for c2 in cc.saturating_sub(radius)..=(cc + radius).min(w - 1) {
+                            let v = centered[rr * w + c2];
+                            acc += v * v;
+                            cnt += 1;
+                        }
+                    }
+                    let s = (acc / cnt as f32).sqrt();
+                    stds[r * w + cc] = s;
+                    std_sum += s as f64;
+                }
+            }
+            let mean_std = (std_sum / (h * w) as f64) as f32;
+            for r in 0..h {
+                for cc in 0..w {
+                    let denom = stds[r * w + cc].max(mean_std).max(1e-4);
+                    xd[((img * h + r) * w + cc) * c + ch] = centered[r * w + cc] / denom;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Pcg32;
+
+    fn rand_images(n: usize, h: usize, w: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let total = n * h * w * c;
+        // correlated pixels: base + per-pixel noise
+        let mut data = vec![0.0f32; total];
+        for img in 0..n {
+            let base = rng.uniform_range(0.2, 0.8);
+            for v in &mut data[img * h * w * c..(img + 1) * h * w * c] {
+                *v = base + rng.uniform_range(-0.2, 0.2);
+            }
+        }
+        Tensor::from_vec(&[n, h, w, c], data)
+    }
+
+    #[test]
+    fn gcn_zero_mean_unit_norm() {
+        let mut x = rand_images(8, 8, 8, 1, 1);
+        global_contrast_normalize(&mut x, 1e-8);
+        let d = 64;
+        for row in x.data().chunks(d) {
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let rms: f32 = (row.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt();
+            assert!(mean.abs() < 1e-4, "mean={mean}");
+            assert!((rms - 1.0).abs() < 1e-3, "rms={rms}");
+        }
+    }
+
+    #[test]
+    fn gcn_floor_prevents_blowup_on_constant_images() {
+        let mut x = Tensor::full(&[1, 4, 4, 1], 0.5);
+        global_contrast_normalize(&mut x, 1e-2);
+        assert!(x.data().iter().all(|v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn zca_patches_decorrelate() {
+        let mut train = rand_images(128, 16, 16, 3, 2);
+        let mut test = rand_images(16, 16, 16, 3, 3);
+        zca_whiten_patches(&mut train, &mut test, 1e-3);
+        // after whitening, patch covariance ≈ identity ⇒ per-dim variance ≈ 1
+        let patches = extract_patches(&train);
+        let pd = PATCH * PATCH * 3;
+        let pmat = Tensor::from_vec(&[patches.len() / pd, pd], patches);
+        let (_, cov) = linalg::covariance(&pmat);
+        let mut diag_err = 0.0f32;
+        let mut offdiag_max = 0.0f32;
+        for i in 0..pd {
+            diag_err += (cov.at2(i, i) - 1.0).abs();
+            for j in 0..i {
+                offdiag_max = offdiag_max.max(cov.at2(i, j).abs());
+            }
+        }
+        assert!(diag_err / (pd as f32) < 0.15, "mean diag err {}", diag_err / pd as f32);
+        assert!(offdiag_max < 0.3, "offdiag {offdiag_max}");
+    }
+
+    #[test]
+    fn lcn_flattens_illumination_gradient() {
+        // an image with a strong global gradient: LCN should leave roughly
+        // zero-mean, bounded output
+        let (h, w) = (16, 16);
+        let mut data = vec![0.0f32; h * w];
+        for r in 0..h {
+            for c in 0..w {
+                data[r * w + c] = r as f32 * 0.5 + c as f32 * 0.1;
+            }
+        }
+        let mut x = Tensor::from_vec(&[1, h, w, 1], data);
+        local_contrast_normalize(&mut x, 2);
+        let mean: f32 = x.data().iter().sum::<f32>() / (h * w) as f32;
+        assert!(mean.abs() < 0.3, "mean={mean}");
+        assert!(x.data().iter().all(|v| v.abs() < 10.0));
+    }
+
+    #[test]
+    fn lcn_is_finite_on_flat_images() {
+        let mut x = Tensor::full(&[2, 8, 8, 3], 0.7);
+        local_contrast_normalize(&mut x, 2);
+        assert!(x.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,445 @@
+//! Golden model: a pure-rust, from-scratch mirror of the compiled
+//! `pi_mlp` train step.
+//!
+//! Same signals, same quantization hooks, same update rule as
+//! `python/compile/model.py`, implemented over the host [`Tensor`] ops and
+//! [`crate::arith::Quantizer`]. It exists to *cross-validate the entire
+//! AOT bridge*: an integration test trains both paths from identical
+//! state and asserts losses, updated parameters and overflow counters
+//! agree within float32 reassociation tolerance. It is also the reference
+//! used by the ablation bench for alternative rounding modes (which the
+//! compiled artifact pins to half-away).
+//!
+//! Dropout is intentionally not mirrored (the in-graph hash PRNG is a
+//! device detail); cross-checks run with dropout disabled.
+
+use crate::arith::{QuantStats, Quantizer, RoundMode};
+use crate::coordinator::ScaleController;
+use crate::runtime::manifest::{
+    group_index, KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z,
+};
+use crate::tensor::{ops, Tensor};
+
+/// Maxout MLP shape description (matches the manifest's pi_mlp).
+#[derive(Clone, Copy, Debug)]
+pub struct MlpShape {
+    pub d_in: usize,
+    pub units: usize,
+    pub k: usize,
+    pub n_classes: usize,
+}
+
+impl MlpShape {
+    pub fn pi_mlp(units: usize, k: usize) -> Self {
+        MlpShape { d_in: 784, units, k, n_classes: 10 }
+    }
+}
+
+/// Parameters/velocities: w0 [k,I,U], b0 [k,U], w1 [k,U,U], b1 [k,U],
+/// w2 [U,C], b2 [C] — manifest order.
+pub type Params = Vec<Tensor>;
+
+/// The golden train step's outputs.
+#[derive(Debug)]
+pub struct GoldenOut {
+    pub loss: f32,
+    /// `[n_groups, 3]` overflow matrix, same layout as the artifact's.
+    pub overflow: Tensor,
+}
+
+/// One quantization context: per-group quantizers + stat accumulation.
+pub struct GoldenQ<'c> {
+    ctrl: &'c ScaleController,
+    pub mode: RoundMode,
+    stats: Vec<QuantStats>,
+    /// Uniform sample source for stochastic rounding ablations.
+    pub stochastic_u: Option<crate::tensor::Pcg32>,
+}
+
+impl<'c> GoldenQ<'c> {
+    pub fn new(ctrl: &'c ScaleController, mode: RoundMode) -> Self {
+        GoldenQ {
+            ctrl,
+            mode,
+            stats: vec![QuantStats::default(); ctrl.n_groups()],
+            stochastic_u: None,
+        }
+    }
+
+    fn quantizer(&self, g: usize) -> Quantizer {
+        let mut q = Quantizer::from_format(self.ctrl.format(g));
+        q.mode = self.mode;
+        q
+    }
+
+    /// Quantize tensor `t` as group (layer, kind), recording stats.
+    fn apply(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool) {
+        let g = group_index(layer, kind);
+        let q = self.quantizer(g);
+        let st = if let Some(rng) = self.stochastic_u.as_mut() {
+            let mut stats = QuantStats { n_total: t.len() as u64, ..Default::default() };
+            if !q.is_passthrough() {
+                let half = q.maxv * 0.5;
+                for v in t.data_mut().iter_mut() {
+                    let a = v.abs();
+                    if a >= q.maxv {
+                        stats.n_over += 1;
+                    }
+                    if a >= half {
+                        stats.n_half += 1;
+                    }
+                    *v = q.apply_with(*v, rng.uniform());
+                }
+            }
+            stats
+        } else {
+            q.apply_slice(t.data_mut())
+        };
+        if record {
+            self.stats[g].merge(st);
+        }
+    }
+
+    fn stats_matrix(&self) -> Tensor {
+        let g = self.stats.len();
+        let mut d = Vec::with_capacity(g * 3);
+        for s in &self.stats {
+            d.extend_from_slice(&[s.n_over as f32, s.n_half as f32, s.n_total as f32]);
+        }
+        Tensor::from_vec(&[g, 3], d)
+    }
+}
+
+/// Forward through one maxout dense layer: per-filter z = x@w_j + b_j,
+/// quantized (Z group), then h = max_j, quantized (H group).
+/// Returns (h, argmax filter per [B,U]).
+fn maxout_fwd(
+    q: &mut GoldenQ,
+    layer: usize,
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+) -> (Tensor, Vec<u8>) {
+    let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+    let batch = x.shape()[0];
+    assert_eq!(x.shape()[1], d_in);
+
+    // z for every filter, quantized as ONE group call (stats pooled like
+    // the fused kernel does).
+    let mut zq = Tensor::zeros(&[k, batch, units]);
+    for j in 0..k {
+        let wj = Tensor::from_vec(
+            &[d_in, units],
+            w.data()[j * d_in * units..(j + 1) * d_in * units].to_vec(),
+        );
+        let zj = ops::matmul(x, &wj);
+        let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+        for r in 0..batch {
+            for u in 0..units {
+                dst[r * units + u] = zj.at2(r, u) + b.at2(j, u);
+            }
+        }
+    }
+    q.apply(&mut zq, layer, KIND_Z, true);
+
+    let mut h = Tensor::zeros(&[batch, units]);
+    let mut amax = vec![0u8; batch * units];
+    for r in 0..batch {
+        for u in 0..units {
+            let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
+            for j in 0..k {
+                let v = zq.at3(j, r, u);
+                if v > best {
+                    best = v;
+                    bj = j as u8;
+                }
+            }
+            h.data_mut()[r * units + u] = best;
+            amax[r * units + u] = bj;
+        }
+    }
+    q.apply(&mut h, layer, KIND_H, true);
+    (h, amax)
+}
+
+/// One full golden train step (no dropout). Mutates params/vels in place.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    shape: MlpShape,
+    params: &mut Params,
+    vels: &mut Params,
+    x: &Tensor,
+    y: &Tensor,
+    lr: f32,
+    mom: f32,
+    max_norm: f32,
+    ctrl: &ScaleController,
+    mode: RoundMode,
+) -> GoldenOut {
+    let mut q = GoldenQ::new(ctrl, mode);
+    if mode == RoundMode::Stochastic {
+        // true stochastic rounding needs a uniform sample per element
+        q.stochastic_u = Some(crate::tensor::Pcg32::seeded(0x57CC_4A57));
+    }
+    let batch = x.shape()[0];
+    let (k, units, classes) = (shape.k, shape.units, shape.n_classes);
+
+    // ---- forward ----
+    let (h0, amax0) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
+    let (h1, amax1) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let mut z2 = ops::matmul(&h1, &params[4]);
+    for r in 0..batch {
+        for c in 0..classes {
+            z2.data_mut()[r * classes + c] += params[5].data()[c];
+        }
+    }
+    q.apply(&mut z2, 2, KIND_Z, true);
+    let logp = ops::log_softmax(&z2);
+    let mut loss = 0.0f64;
+    for i in 0..batch * classes {
+        loss -= (y.data()[i] * logp.data()[i]) as f64;
+    }
+    let loss = (loss / batch as f64) as f32;
+
+    // ---- backward ----
+    // softmax head: dz = (p - y)/B, quantized
+    let mut dz2 = Tensor::zeros(&[batch, classes]);
+    for i in 0..batch * classes {
+        dz2.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
+    }
+    q.apply(&mut dz2, 2, KIND_DZ, true);
+    let mut dw2 = ops::matmul_tn(&h1, &dz2);
+    q.apply(&mut dw2, 2, KIND_DW, true);
+    let mut db2 = ops::sum_rows(&dz2);
+    q.apply(&mut db2, 2, KIND_DB, true);
+    let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
+    q.apply(&mut dh1, 1, KIND_DH, true);
+
+    let (dw1, db1, mut dh0) =
+        maxout_bwd(&mut q, 1, &h0, &params[2], &dh1, &amax1, k, units, true);
+    q.apply(&mut dh0, 0, KIND_DH, true);
+    let (dw0, db0, _) = maxout_bwd(&mut q, 0, x, &params[0], &dh0, &amax0, k, units, false);
+
+    // ---- SGD + momentum + max-norm + storage quantization ----
+    let grads = [dw0, db0, dw1, db1, dw2, db2];
+    for (i, g) in grads.iter().enumerate() {
+        let layer = i / 2;
+        let kind = if i % 2 == 0 { KIND_W } else { KIND_B };
+        // v' = Q_up(mom*v - lr*g), stats NOT recorded (matches L2)
+        for (vv, gv) in vels[i].data_mut().iter_mut().zip(g.data()) {
+            *vv = mom * *vv - lr * gv;
+        }
+        q.apply(&mut vels[i], layer, kind, false);
+        // p' = Q_up(maxnorm(p + v'))
+        for (pv, vv) in params[i].data_mut().iter_mut().zip(vels[i].data()) {
+            *pv += vv;
+        }
+        if kind == KIND_W {
+            ops::max_norm_inplace(&mut params[i], max_norm);
+        }
+        q.apply(&mut params[i], layer, kind, true);
+    }
+
+    GoldenOut { loss, overflow: q.stats_matrix() }
+}
+
+/// Backward through a maxout dense layer: route dh to the winning filter,
+/// quantize dz/dw/db; optionally produce dx (pre-quantization — the caller
+/// quantizes it as the lower layer's DH group, matching L2's ordering).
+#[allow(clippy::too_many_arguments)]
+fn maxout_bwd(
+    q: &mut GoldenQ,
+    layer: usize,
+    x: &Tensor,
+    w: &Tensor,
+    dh: &Tensor,
+    amax: &[u8],
+    k: usize,
+    _units: usize,
+    need_dx: bool,
+) -> (Tensor, Tensor, Tensor) {
+    let (batch, d_in) = (x.shape()[0], x.shape()[1]);
+    let units = dh.shape()[1];
+
+    let mut dz = Tensor::zeros(&[k, batch, units]);
+    for r in 0..batch {
+        for u in 0..units {
+            let j = amax[r * units + u] as usize;
+            dz.data_mut()[(j * batch + r) * units + u] = dh.at2(r, u);
+        }
+    }
+    q.apply(&mut dz, layer, KIND_DZ, true);
+
+    let mut dw = Tensor::zeros(&[k, d_in, units]);
+    let mut db = Tensor::zeros(&[k, units]);
+    let mut dx = Tensor::zeros(&[batch, d_in]);
+    for j in 0..k {
+        let dzj = Tensor::from_vec(
+            &[batch, units],
+            dz.data()[j * batch * units..(j + 1) * batch * units].to_vec(),
+        );
+        let dwj = ops::matmul_tn(x, &dzj);
+        dw.data_mut()[j * d_in * units..(j + 1) * d_in * units]
+            .copy_from_slice(dwj.data());
+        let dbj = ops::sum_rows(&dzj);
+        db.data_mut()[j * units..(j + 1) * units].copy_from_slice(dbj.data());
+        if need_dx {
+            let wj = Tensor::from_vec(
+                &[d_in, units],
+                w.data()[j * d_in * units..(j + 1) * d_in * units].to_vec(),
+            );
+            let dxj = ops::matmul_nt(&dzj, &wj);
+            for (a, &b) in dx.data_mut().iter_mut().zip(dxj.data()) {
+                *a += b;
+            }
+        }
+    }
+    q.apply(&mut dw, layer, KIND_DW, true);
+    q.apply(&mut db, layer, KIND_DB, true);
+    (dw, db, dx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FixedFormat;
+    use crate::tensor::init::InitSpec;
+    use crate::tensor::Pcg32;
+
+    fn tiny_shape() -> MlpShape {
+        MlpShape { d_in: 12, units: 8, k: 2, n_classes: 4 }
+    }
+
+    fn init_state(s: MlpShape, seed: u64) -> (Params, Params) {
+        let mut rng = Pcg32::seeded(seed);
+        let mk = |shape: &[usize], rng: &mut Pcg32, fan_in: usize, fan_out: usize| {
+            InitSpec::GlorotUniform { fan_in, fan_out }.realize(shape, rng)
+        };
+        let params = vec![
+            mk(&[s.k, s.d_in, s.units], &mut rng, s.d_in, s.units),
+            Tensor::zeros(&[s.k, s.units]),
+            mk(&[s.k, s.units, s.units], &mut rng, s.units, s.units),
+            Tensor::zeros(&[s.k, s.units]),
+            mk(&[s.units, s.n_classes], &mut rng, s.units, s.n_classes),
+            Tensor::zeros(&[s.n_classes]),
+        ];
+        let vels = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        (params, vels)
+    }
+
+    fn batch(s: MlpShape, n: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Pcg32::seeded(seed);
+        let x = Tensor::from_vec(
+            &[n, s.d_in],
+            (0..n * s.d_in).map(|_| rng.normal()).collect(),
+        );
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(s.n_classes as u32) as usize).collect();
+        (x, ops::one_hot(&labels, s.n_classes))
+    }
+
+    #[test]
+    fn float32_loss_decreases_over_steps() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 1);
+        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (x, y) = batch(s, 16, 2);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let out = train_step(
+                s, &mut params, &mut vels, &x, &y, 0.2, 0.5, 0.0, &ctrl, RoundMode::HalfAway,
+            );
+            first.get_or_insert(out.loss);
+            last = out.loss;
+        }
+        assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn quantized_params_live_on_grid() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 3);
+        let up = FixedFormat::new(12, 0);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), up);
+        let (x, y) = batch(s, 8, 4);
+        // initial params must be quantized by the caller (as the Trainer
+        // does); here the first step's output is what we check.
+        let _ = train_step(
+            s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 2.0, &ctrl, RoundMode::HalfAway,
+        );
+        for p in &params {
+            for &v in p.data() {
+                let kq = v / up.step();
+                assert!((kq - kq.round()).abs() < 1e-3, "off grid: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_totals_match_signal_sizes() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 5);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        let n = 16;
+        let (x, y) = batch(s, n, 6);
+        let out = train_step(
+            s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, RoundMode::HalfAway,
+        );
+        let st = out.overflow;
+        // z group of layer 0: k*B*U values; h group: B*U
+        assert_eq!(st.at2(group_index(0, KIND_Z), 2), (s.k * n * s.units) as f32);
+        assert_eq!(st.at2(group_index(0, KIND_H), 2), (n * s.units) as f32);
+        // w group counts the weight tensor only (velocity unrecorded)
+        assert_eq!(
+            st.at2(group_index(0, KIND_W), 2),
+            (s.k * s.d_in * s.units) as f32
+        );
+        // softmax dz: B*C
+        assert_eq!(st.at2(group_index(2, KIND_DZ), 2), (n * s.n_classes) as f32);
+    }
+
+    #[test]
+    fn max_norm_respected_after_update() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 7);
+        for p in params.iter_mut() {
+            p.map_inplace(|v| v * 30.0);
+        }
+        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (x, y) = batch(s, 8, 8);
+        let c = 1.0;
+        let _ = train_step(
+            s, &mut params, &mut vels, &x, &y, 0.0, 0.0, c, &ctrl, RoundMode::HalfAway,
+        );
+        let w0 = &params[0];
+        for j in 0..s.k {
+            for u in 0..s.units {
+                let mut ss = 0.0f32;
+                for i in 0..s.d_in {
+                    ss += w0.at3(j, i, u).powi(2);
+                }
+                assert!(ss.sqrt() <= c + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_mode_runs() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 9);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        let (x, y) = batch(s, 8, 10);
+        let mut q_ctx_probe = GoldenQ::new(&ctrl, RoundMode::Stochastic);
+        q_ctx_probe.stochastic_u = Some(Pcg32::seeded(11));
+        // run via public API with stochastic mode (internally deterministic
+        // because apply() falls back to apply_slice without a PRNG — so
+        // exercise apply_with via the probe):
+        let mut t = Tensor::from_vec(&[4], vec![0.3, 0.7, -0.2, 5.0]);
+        q_ctx_probe.apply(&mut t, 0, KIND_Z, true);
+        assert!(t.data().iter().all(|v| v.is_finite()));
+        let out = train_step(
+            s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, RoundMode::HalfEven,
+        );
+        assert!(out.loss.is_finite());
+    }
+}

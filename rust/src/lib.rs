@@ -1,0 +1,34 @@
+//! # lpdnn — Low Precision Arithmetic for Deep Learning
+//!
+//! A production-grade reproduction of *Courbariaux, David & Bengio (2014),
+//! "Low Precision Arithmetic for Deep Learning"* (arXiv:1412.7024; first
+//! posted as *"Training deep neural networks with low precision
+//! multiplications"*) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): fused
+//!   quantize-with-overflow-stats and fused maxout-dense forward.
+//! * **L2** — JAX maxout networks with explicit manual backprop and
+//!   quantization hooks at every signal the paper names
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text.
+//! * **L3** — this crate: the training coordinator, the dynamic fixed
+//!   point scale controller (the paper's section 5 mechanism), every
+//!   substrate (datasets, preprocessing, config, metrics), and the PJRT
+//!   runtime that executes the compiled artifacts. Python never runs on
+//!   the training path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for reproduction results of every paper table/figure.
+
+pub mod arith;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod golden;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

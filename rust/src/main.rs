@@ -1,0 +1,202 @@
+//! lpdnn CLI: the L3 leader entrypoint.
+//!
+//! See `lpdnn help` (or `cli::help()`) for the subcommand reference.
+
+use anyhow::Context;
+
+use lpdnn::arith::FixedFormat;
+use lpdnn::cli::{self, Args};
+use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::coordinator::Trainer;
+use lpdnn::data::Dataset;
+use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::tensor::Pcg32;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> lpdnn::Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_train(&args), // eval = train with --steps 1 semantics; kept for discoverability
+        "datasets" => cmd_datasets(&args),
+        "formats" => cmd_formats(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "-h" | "--help" => {
+            print!("{}", cli::help());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `lpdnn help`)"),
+    }
+}
+
+/// Build an ExperimentConfig from either --config or individual flags.
+fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
+    if let Some(path) = args.get_opt("config") {
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        return ExperimentConfig::from_toml_str(&text);
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = args.get("name", "cli");
+    cfg.model = args.get("model", "pi_mlp");
+    cfg.data.dataset = args.get("dataset", "digits");
+    cfg.data.n_train = args.get_parse("n-train", cfg.data.n_train)?;
+    cfg.data.n_test = args.get_parse("n-test", cfg.data.n_test)?;
+
+    let arith = args.get("arith", "float32");
+    cfg.arithmetic = match arith.as_str() {
+        "float32" => Arithmetic::Float32,
+        "half" | "float16" => Arithmetic::Half,
+        "fixed" => Arithmetic::Fixed {
+            bits_comp: args.get_parse("bits-comp", 20)?,
+            bits_up: args.get_parse("bits-up", 20)?,
+            int_bits: args.get_parse("int-bits", 5)?,
+        },
+        "dynamic" => Arithmetic::Dynamic {
+            bits_comp: args.get_parse("bits-comp", 10)?,
+            bits_up: args.get_parse("bits-up", 12)?,
+            max_overflow_rate: args.get_parse("max-overflow-rate", 1e-4)?,
+            update_every_examples: args.get_parse("update-every", 10_000)?,
+            init_int_bits: args.get_parse("init-int-bits", 3)?,
+            warmup_steps: args.get_parse("warmup", 0)?,
+        },
+        other => anyhow::bail!("unknown --arith '{other}'"),
+    };
+
+    cfg.train.steps = args.get_parse("steps", cfg.train.steps)?;
+    cfg.train.seed = args.get_parse("seed", cfg.train.seed)?;
+    cfg.train.lr_start = args.get_parse("lr", cfg.train.lr_start)?;
+    cfg.train.lr_end = args.get_parse("lr-end", cfg.train.lr_start / 10.0)?;
+    cfg.train.dropout_input = args.get_parse("dropout-input", cfg.train.dropout_input)?;
+    cfg.train.dropout_hidden = args.get_parse("dropout-hidden", cfg.train.dropout_hidden)?;
+    cfg.train.max_norm = args.get_parse("max-norm", cfg.train.max_norm)?;
+    cfg.train.eval_every = args.get_parse("eval-every", cfg.train.eval_every)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> lpdnn::Result<()> {
+    let cfg = config_from_args(args)?;
+    let loss_csv = args.get_opt("loss-csv");
+    let verbose = args.has("verbose");
+    args.finish()?;
+
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&engine, &manifest, cfg.clone());
+    trainer.verbose = verbose;
+
+    eprintln!(
+        "training '{}': model={} dataset={} arith={} steps={}",
+        cfg.name,
+        cfg.model,
+        cfg.data.dataset,
+        cfg.arithmetic.label(),
+        cfg.train.steps
+    );
+    let result = trainer.run()?;
+
+    println!("experiment:      {}", result.config_name);
+    println!("arithmetic:      {}", cfg.arithmetic.label());
+    println!("steps:           {}", result.steps_run);
+    println!("final loss:      {:.4}", result.train_loss);
+    println!("test error:      {:.4} ({:.2}%)", result.test_error, 100.0 * result.test_error);
+    println!("wallclock:       {:.2?}", result.wallclock);
+    if matches!(cfg.arithmetic, Arithmetic::Dynamic { .. }) {
+        println!("final int_bits:  {:?}", result.final_int_bits);
+        println!("scale moves:     {}", result.metrics.scale_moves.iter().map(|&(_, n)| n).sum::<usize>());
+    }
+    if let Some(path) = loss_csv {
+        result.metrics.write_loss_csv(&path)?;
+        println!("loss curve:      {path}");
+    }
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> lpdnn::Result<()> {
+    let n_train = args.get_parse("n-train", 256usize)?;
+    let n_test = args.get_parse("n-test", 64usize)?;
+    args.finish()?;
+    let rng = Pcg32::seeded(1);
+    let mut table = lpdnn::bench_support::Table::new(&[
+        "dataset", "dimension", "labels", "train", "test", "paper analogue",
+    ]);
+    for (name, analogue) in [
+        ("digits", "MNIST (60K 28x28 gray)"),
+        ("clusters", "PI MNIST control"),
+        ("cifar_like", "CIFAR10 (50K 32x32 colour)"),
+        ("svhn_like", "SVHN (604K 32x32 colour)"),
+    ] {
+        let ds = Dataset::generate(name, n_train, n_test, &rng)?;
+        let dim: usize = ds.train.example_len();
+        table.row(&[
+            name.to_string(),
+            format!("{dim} {:?}", ds.train.example_shape()),
+            format!("{}", ds.n_classes),
+            format!("{}", ds.train.len()),
+            format!("{}", ds.test.len()),
+            analogue.to_string(),
+        ]);
+    }
+    println!("Dataset overview (synthetic substitutes; paper Table 2):");
+    table.print();
+    Ok(())
+}
+
+fn cmd_formats(args: &Args) -> lpdnn::Result<()> {
+    args.finish()?;
+    println!("Floating point formats (paper Table 1):");
+    let mut t = lpdnn::bench_support::Table::new(&["format", "total", "exponent", "mantissa"]);
+    t.row(&["double".into(), "64".into(), "11".into(), "52".into()]);
+    t.row(&["single".into(), "32".into(), "8".into(), "23".into()]);
+    t.row(&["half".into(), "16".into(), "5".into(), "10".into()]);
+    t.print();
+
+    println!("\nFixed point formats used in the reproduction:");
+    let mut t = lpdnn::bench_support::Table::new(&["format", "step (LSB)", "range", "levels"]);
+    for (label, fmt) in [
+        ("fixed 20-bit, radix 5 (paper 9.2)", FixedFormat::new(20, 5)),
+        ("dynamic comp 10-bit", FixedFormat::new(10, 3)),
+        ("dynamic up 12-bit", FixedFormat::new(12, 0)),
+        ("wide 31-bit (figs 1/3)", FixedFormat::new(31, 5)),
+    ] {
+        t.row(&[
+            format!("{label} [{fmt}]"),
+            format!("{:.3e}", fmt.step()),
+            format!("[-{}, {})", fmt.maxv(), fmt.maxv()),
+            format!("2^{}", fmt.total_bits),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> lpdnn::Result<()> {
+    args.finish()?;
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let mut t = lpdnn::bench_support::Table::new(&["artifact", "model", "mode", "graph", "inputs", "outputs"]);
+    for (key, a) in &manifest.artifacts {
+        t.row(&[
+            key.clone(),
+            a.model.clone(),
+            a.mode.clone(),
+            a.graph.clone(),
+            format!("{}", a.inputs.len()),
+            format!("{}", a.outputs.len()),
+        ]);
+    }
+    println!("Compiled artifacts in {:?}:", manifest.dir);
+    t.print();
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: input {:?}, {} layers, {} groups, train batch {}, eval batch {}",
+            m.input_shape, m.n_layers, m.n_groups, m.train_batch, m.eval_batch
+        );
+    }
+    Ok(())
+}

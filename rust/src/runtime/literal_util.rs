@@ -1,0 +1,55 @@
+//! Host [`Tensor`] ↔ XLA [`Literal`] conversion helpers.
+
+use xla::Literal;
+
+use crate::tensor::Tensor;
+
+/// Convert a host tensor to an f32 literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> crate::Result<Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// Convert a flat f32 slice + shape to a literal.
+pub fn slice_to_literal(data: &[f32], shape: &[usize]) -> crate::Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar(v: f32) -> Literal {
+    Literal::from(v)
+}
+
+/// Convert a literal back to a host tensor (f32 only).
+pub fn literal_to_tensor(l: &Literal) -> crate::Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Extract the f32 scalar held by a literal.
+pub fn literal_to_scalar(l: &Literal) -> crate::Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = scalar(3.25);
+        assert_eq!(literal_to_scalar(&l).unwrap(), 3.25);
+    }
+}

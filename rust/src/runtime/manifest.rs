@@ -1,0 +1,235 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
+//!
+//! The manifest is the single source of truth for everything the rust side
+//! must know about the compiled graphs: model topologies, parameter specs
+//! (shape + init + group), scaling-factor group tables, and the exact
+//! input/output orderings of each artifact. Nothing about the models is
+//! duplicated in rust code.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::config::json;
+use crate::tensor::init::InitSpec;
+
+/// Signal kinds — must match python `compile/formats.py` exactly.
+pub const KIND_NAMES: [&str; 8] = ["w", "b", "z", "h", "dw", "db", "dz", "dh"];
+pub const N_KINDS: usize = 8;
+pub const KIND_W: usize = 0;
+pub const KIND_B: usize = 1;
+pub const KIND_Z: usize = 2;
+pub const KIND_H: usize = 3;
+pub const KIND_DW: usize = 4;
+pub const KIND_DB: usize = 5;
+pub const KIND_DZ: usize = 6;
+pub const KIND_DH: usize = 7;
+
+/// Kinds stored at the parameter-update bit-width (paper section 6).
+pub const UPDATE_KINDS: [usize; 2] = [KIND_W, KIND_B];
+
+/// Flat scaling-factor group index (must match formats.group_index).
+pub fn group_index(layer: usize, kind: usize) -> usize {
+    layer * N_KINDS + kind
+}
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub layer: usize,
+    /// "w" or "b".
+    pub kind: String,
+    pub init: InitSpec,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// The scaling-factor group this parameter is stored under.
+    pub fn group(&self) -> usize {
+        group_index(self.layer, if self.kind == "w" { KIND_W } else { KIND_B })
+    }
+}
+
+/// One model's metadata.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub n_layers: usize,
+    pub n_groups: usize,
+    pub group_names: Vec<String>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub n_classes: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One compiled artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub key: String,
+    pub file: PathBuf,
+    pub model: String,
+    /// "fixed" | "half"
+    pub mode: String,
+    /// "train" | "eval"
+    pub graph: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+
+        let version = doc.get("version")?.as_i64()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut models = BTreeMap::new();
+        for (name, m) in doc.get("models")?.as_object()? {
+            let mut params = Vec::new();
+            for p in m.get("params")?.as_array()? {
+                let init = match p.get("init")?.as_str()? {
+                    "zeros" => InitSpec::Zeros,
+                    "glorot_uniform" => InitSpec::GlorotUniform {
+                        fan_in: p.get("fan_in")?.as_usize()?,
+                        fan_out: p.get("fan_out")?.as_usize()?,
+                    },
+                    other => anyhow::bail!("unknown init '{other}'"),
+                };
+                params.push(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_usize_vec()?,
+                    layer: p.get("layer")?.as_usize()?,
+                    kind: p.get("kind")?.as_str()?.to_string(),
+                    init,
+                });
+            }
+            let info = ModelInfo {
+                name: name.clone(),
+                input_shape: m.get("input_shape")?.as_usize_vec()?,
+                n_layers: m.get("n_layers")?.as_usize()?,
+                n_groups: m.get("n_groups")?.as_usize()?,
+                group_names: m.get("group_names")?.as_str_vec()?,
+                train_batch: m.get("train_batch")?.as_usize()?,
+                eval_batch: m.get("eval_batch")?.as_usize()?,
+                n_classes: m.get("n_classes")?.as_usize()?,
+                params,
+            };
+            anyhow::ensure!(
+                info.n_groups == info.n_layers * N_KINDS,
+                "group table mismatch for model {name}"
+            );
+            anyhow::ensure!(
+                info.group_names.len() == info.n_groups,
+                "group names mismatch for model {name}"
+            );
+            models.insert(name.clone(), info);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (key, a) in doc.get("artifacts")?.as_object()? {
+            let info = ArtifactInfo {
+                key: key.clone(),
+                file: dir.join(a.get("file")?.as_str()?),
+                model: a.get("model")?.as_str()?.to_string(),
+                mode: a.get("mode")?.as_str()?.to_string(),
+                graph: a.get("graph")?.as_str()?.to_string(),
+                inputs: a.get("inputs")?.as_str_vec()?,
+                outputs: a.get("outputs")?.as_str_vec()?,
+            };
+            anyhow::ensure!(
+                models.contains_key(&info.model),
+                "artifact {key} references unknown model {}",
+                info.model
+            );
+            anyhow::ensure!(info.file.exists(), "artifact file missing: {:?}", info.file);
+            artifacts.insert(key.clone(), info);
+        }
+
+        Ok(Manifest { dir, models, artifacts })
+    }
+
+    /// Locate the default artifacts directory (`$LPDNN_ARTIFACTS` or
+    /// `<crate root>/artifacts`).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("LPDNN_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelInfo> {
+        self.models.get(name).with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Artifact for (model, mode, graph), e.g. ("pi_mlp", "fixed", "train").
+    pub fn artifact(&self, model: &str, mode: &str, graph: &str) -> crate::Result<&ArtifactInfo> {
+        let key = format!("{model}_{mode}_{graph}");
+        self.artifacts.get(&key).with_context(|| format!("artifact '{key}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        let pi = m.model("pi_mlp").unwrap();
+        assert_eq!(pi.n_layers, 3);
+        assert_eq!(pi.n_groups, 24);
+        assert_eq!(pi.input_shape, vec![784]);
+        assert_eq!(pi.params.len(), 6);
+        assert_eq!(pi.params[0].name, "l0.w");
+        assert!(matches!(pi.params[0].init, InitSpec::GlorotUniform { fan_in: 784, .. }));
+        assert_eq!(pi.params[0].group(), 0);
+        assert_eq!(pi.params[1].group(), 1); // l0.b → group 1
+
+        let art = m.artifact("pi_mlp", "fixed", "train").unwrap();
+        assert_eq!(art.inputs.len(), 12 + 9);
+        assert_eq!(art.outputs.last().unwrap(), "overflow");
+        assert!(art.file.exists());
+    }
+
+    #[test]
+    fn group_indexing_matches_python() {
+        assert_eq!(group_index(0, KIND_W), 0);
+        assert_eq!(group_index(1, KIND_DZ), 14);
+        assert_eq!(group_index(2, KIND_DH), 23);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

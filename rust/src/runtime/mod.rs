@@ -1,0 +1,127 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the bridge between L3 (this crate) and the compiled L2/L1
+//! graphs: a thin, typed wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! * [`Engine`] — one PJRT client per process (creation is expensive).
+//! * [`Executable`] — a compiled artifact + its manifest metadata; `run`
+//!   takes inputs in manifest order and returns the flattened output
+//!   tuple (the L2 graphs are lowered with `return_tuple=True`).
+//! * [`manifest`] — the typed `manifest.json` view.
+//! * [`literal_util`] — host tensor ↔ literal conversion.
+//!
+//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod literal_util;
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, ParamSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Context;
+use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+/// Process-wide PJRT client wrapper with a compile cache: sweeps run tens
+/// of experiments over the same handful of artifacts, and XLA compilation
+/// costs seconds per artifact.
+pub struct Engine {
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> crate::Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact (uncached).
+    pub fn load(&self, info: &ArtifactInfo) -> crate::Result<Executable> {
+        let proto = HloModuleProto::from_text_file(
+            info.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", info.key))?;
+        Ok(Executable { exe, info: info.clone() })
+    }
+
+    /// Load + compile with memoization on the artifact key.
+    pub fn load_cached(&self, info: &ArtifactInfo) -> crate::Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(&info.key) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(self.load(info)?);
+        self.cache.borrow_mut().insert(info.key.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact, executable with manifest-ordered inputs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    info: ArtifactInfo,
+}
+
+impl Executable {
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Execute with inputs in manifest order; returns the output tuple
+    /// elements in manifest order. Accepts owned or borrowed literals, so
+    /// the trainer can feed the previous step's outputs back without
+    /// host-side copies.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> crate::Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "artifact {} expects {} inputs, got {} (order: {:?})",
+            self.info.key,
+            self.info.inputs.len(),
+            inputs.len(),
+            self.info.inputs
+        );
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.info.key))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching outputs")?
+            .to_tuple()
+            .context("untupling outputs")?;
+        anyhow::ensure!(
+            tuple.len() == self.info.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.info.key,
+            tuple.len(),
+            self.info.outputs.len()
+        );
+        Ok(tuple)
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("output '{name}' not in {}", self.info.key))
+    }
+}

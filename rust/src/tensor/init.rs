@@ -1,0 +1,67 @@
+//! Parameter initialization (host side — the compiled step never inits).
+//!
+//! The manifest (`artifacts/manifest.json`) carries an init spec per
+//! parameter: `glorot_uniform` with explicit fan-in/fan-out for weights,
+//! `zeros` for biases — exactly what `python/compile/model.py` declares,
+//! so the rust initializer is the single source of initial state.
+
+use super::rng::Pcg32;
+use super::Tensor;
+
+/// Init spec as read from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    /// U(-limit, limit) with limit = sqrt(6 / (fan_in + fan_out))
+    /// (Glorot & Bengio 2010 — what pylearn2's maxout used).
+    GlorotUniform { fan_in: usize, fan_out: usize },
+    Zeros,
+}
+
+impl InitSpec {
+    /// Materialize a tensor of `shape` from this spec.
+    pub fn realize(&self, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        match self {
+            InitSpec::Zeros => Tensor::zeros(shape),
+            InitSpec::GlorotUniform { fan_in, fan_out } => {
+                let limit = (6.0 / (*fan_in as f64 + *fan_out as f64)).sqrt() as f32;
+                let n: usize = shape.iter().product();
+                let data = (0..n).map(|_| rng.uniform_range(-limit, limit)).collect();
+                Tensor::from_vec(shape, data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_is_zero() {
+        let mut rng = Pcg32::seeded(1);
+        let t = InitSpec::Zeros.realize(&[3, 4], &mut rng);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn glorot_respects_limit_and_moments() {
+        let mut rng = Pcg32::seeded(2);
+        let spec = InitSpec::GlorotUniform { fan_in: 784, fan_out: 128 };
+        let t = spec.realize(&[4, 784, 128], &mut rng);
+        let limit = (6.0f64 / (784.0 + 128.0)).sqrt() as f32;
+        assert!(t.data().iter().all(|&x| x.abs() <= limit));
+        let mean = t.data().iter().sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < limit * 0.02, "mean={mean}");
+        // variance of U(-L, L) is L²/3
+        let var = t.data().iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        assert!((var - limit * limit / 3.0).abs() < limit * limit * 0.05);
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let spec = InitSpec::GlorotUniform { fan_in: 10, fan_out: 10 };
+        let a = spec.realize(&[10, 10], &mut Pcg32::seeded(7));
+        let b = spec.realize(&[10, 10], &mut Pcg32::seeded(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,329 @@
+//! The linear algebra the maxout networks need, tested against naive loops.
+//!
+//! Shapes follow the L2 model exactly (python/compile/model.py):
+//! activations `[B, I]`, maxout weights `[k, I, U]`, biases `[k, U]`,
+//! softmax weights `[I, C]`.
+
+use super::Tensor;
+
+/// `c[B,U] = a[B,I] @ b[I,U]` (row-major, cache-friendly ikj loop order).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ia) = (a.shape()[0], a.shape()[1]);
+    let (ib, ub) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ia, ib, "matmul inner dims: {:?} @ {:?}", a.shape(), b.shape());
+    let mut out = vec![0.0f32; ba * ub];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..ba {
+        for kk in 0..ia {
+            let aik = ad[i * ia + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * ub..(kk + 1) * ub];
+            let orow = &mut out[i * ub..(i + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[ba, ub], out)
+}
+
+/// `c[B,I] = a[B,U] @ b[I,U]^T` (backprop through a dense layer).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ua) = (a.shape()[0], a.shape()[1]);
+    let (ib, ub) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ua, ub, "matmul_nt inner dims");
+    let mut out = vec![0.0f32; ba * ib];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..ba {
+        let arow = &ad[i * ua..(i + 1) * ua];
+        for j in 0..ib {
+            let brow = &bd[j * ub..(j + 1) * ub];
+            let mut acc = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            out[i * ib + j] = acc;
+        }
+    }
+    Tensor::from_vec(&[ba, ib], out)
+}
+
+/// `c[I,U] = a[B,I]^T @ b[B,U]` (weight gradient of a dense layer).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ia) = (a.shape()[0], a.shape()[1]);
+    let (bb, ub) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ba, bb, "matmul_tn batch dims");
+    let mut out = vec![0.0f32; ia * ub];
+    let ad = a.data();
+    let bd = b.data();
+    for n in 0..ba {
+        let arow = &ad[n * ia..(n + 1) * ia];
+        let brow = &bd[n * ub..(n + 1) * ub];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * ub..(i + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[ia, ub], out)
+}
+
+/// Row-wise log-softmax of a `[B, C]` tensor (numerically stabilized).
+pub fn log_softmax(x: &Tensor) -> Tensor {
+    let (b, c) = (x.shape()[0], x.shape()[1]);
+    let mut out = x.data().to_vec();
+    for row in out.chunks_mut(c) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|v| ((v - m) as f64).exp()).sum::<f64>().ln() as f32 + m;
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+    Tensor::from_vec(&[b, c], out)
+}
+
+/// Row-wise argmax of a `[B, C]` tensor.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let c = x.shape()[1];
+    x.data()
+        .chunks(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Sum over axis 0 of a `[B, C]` tensor → `[C]`.
+pub fn sum_rows(x: &Tensor) -> Tensor {
+    let (b, c) = (x.shape()[0], x.shape()[1]);
+    let mut out = vec![0.0f32; c];
+    for n in 0..b {
+        for j in 0..c {
+            out[j] += x.at2(n, j);
+        }
+    }
+    Tensor::from_vec(&[c], out)
+}
+
+/// One-hot encode labels into `[B, n_classes]`.
+pub fn one_hot(labels: &[usize], n_classes: usize) -> Tensor {
+    let mut out = vec![0.0f32; labels.len() * n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < n_classes, "label {l} out of range");
+        out[i * n_classes + l] = 1.0;
+    }
+    Tensor::from_vec(&[labels.len(), n_classes], out)
+}
+
+/// Scale columns of a weight tensor so each incoming vector has norm ≤ c
+/// (max-norm constraint, paper section 8.1). Fan-in axes: all but the last
+/// for 2-D `[I, U]`; axis 1 for maxout `[k, I, U]`. `c ≤ 0` disables.
+pub fn max_norm_inplace(w: &mut Tensor, c: f32) {
+    if c <= 0.0 {
+        return;
+    }
+    match w.shape().len() {
+        2 => {
+            let (i_dim, u_dim) = (w.shape()[0], w.shape()[1]);
+            for u in 0..u_dim {
+                let mut ss = 0.0f64;
+                for i in 0..i_dim {
+                    let v = w.data()[i * u_dim + u] as f64;
+                    ss += v * v;
+                }
+                let norm = ss.sqrt() as f32;
+                if norm > c {
+                    let s = c / norm.max(1e-7);
+                    for i in 0..i_dim {
+                        w.data_mut()[i * u_dim + u] *= s;
+                    }
+                }
+            }
+        }
+        3 => {
+            let (k, i_dim, u_dim) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+            for kk in 0..k {
+                for u in 0..u_dim {
+                    let mut ss = 0.0f64;
+                    for i in 0..i_dim {
+                        let v = w.data()[(kk * i_dim + i) * u_dim + u] as f64;
+                        ss += v * v;
+                    }
+                    let norm = ss.sqrt() as f32;
+                    if norm > c {
+                        let s = c / norm.max(1e-7);
+                        for i in 0..i_dim {
+                            w.data_mut()[(kk * i_dim + i) * u_dim + u] *= s;
+                        }
+                    }
+                }
+            }
+        }
+        d => panic!("max_norm: unsupported rank {d}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Gen};
+
+    fn rand_tensor(g: &mut Gen, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| g.f32_range(-2.0, 2.0)).collect())
+    }
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at2(i, kk) * b.at2(kk, j);
+                }
+                out.data_mut()[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        forall("matmul", |g: &mut Gen| {
+            let (m, k, n) =
+                (g.usize_range(1, 8), g.usize_range(1, 8), g.usize_range(1, 8));
+            let a = rand_tensor(g, &[m, k]);
+            let b = rand_tensor(g, &[k, n]);
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            for (x, y) in fast.data().iter().zip(slow.data()) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_nt_tn_match_transpose_identities() {
+        forall("nt/tn", |g: &mut Gen| {
+            let (b, i, u) =
+                (g.usize_range(1, 6), g.usize_range(1, 6), g.usize_range(1, 6));
+            let a = rand_tensor(g, &[b, u]);
+            let w = rand_tensor(g, &[i, u]);
+            // a @ w^T via explicit transpose
+            let mut wt = Tensor::zeros(&[u, i]);
+            for x in 0..i {
+                for y in 0..u {
+                    wt.data_mut()[y * i + x] = w.at2(x, y);
+                }
+            }
+            let want = naive_matmul(&a, &wt);
+            let got = matmul_nt(&a, &w);
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((x - y).abs() < 1e-4);
+            }
+
+            let xs = rand_tensor(g, &[b, i]);
+            let ys = rand_tensor(g, &[b, u]);
+            let mut xt = Tensor::zeros(&[i, b]);
+            for r in 0..b {
+                for cidx in 0..i {
+                    xt.data_mut()[cidx * b + r] = xs.at2(r, cidx);
+                }
+            }
+            let want2 = naive_matmul(&xt, &ys);
+            let got2 = matmul_tn(&xs, &ys);
+            for (x, y) in got2.data().iter().zip(want2.data()) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn log_softmax_rows_sum_to_one() {
+        forall("log_softmax", |g: &mut Gen| {
+            let (b, c) = (g.usize_range(1, 5), g.usize_range(2, 10));
+            let x = rand_tensor(g, &[b, c]);
+            let ls = log_softmax(&x);
+            for row in ls.data().chunks(c) {
+                let s: f64 = row.iter().map(|v| (*v as f64).exp()).sum();
+                assert!((s - 1.0).abs() < 1e-5, "sum={s}");
+                assert!(row.iter().all(|v| *v <= 1e-6));
+            }
+        });
+    }
+
+    #[test]
+    fn log_softmax_shift_invariant() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let y = Tensor::from_vec(&[1, 3], vec![101.0, 102.0, 103.0]);
+        let a = log_softmax(&x);
+        let b = log_softmax(&y);
+        for (p, q) in a.data().iter().zip(b.data()) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_and_one_hot() {
+        let x = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 0.5, 0.2, 0.4]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+        let oh = one_hot(&[1, 0], 3);
+        assert_eq!(oh.data(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sum_rows_matches_loop() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(sum_rows(&x).data(), &[5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn max_norm_caps_column_norms() {
+        forall("max_norm", |g: &mut Gen| {
+            let (k, i, u) =
+                (g.usize_range(1, 3), g.usize_range(1, 6), g.usize_range(1, 6));
+            let mut w = rand_tensor(g, &[k, i, u]);
+            w.map_inplace(|x| x * 10.0);
+            max_norm_inplace(&mut w, 1.5);
+            for kk in 0..k {
+                for uu in 0..u {
+                    let mut ss = 0.0f32;
+                    for ii in 0..i {
+                        let v = w.at3(kk, ii, uu);
+                        ss += v * v;
+                    }
+                    assert!(ss.sqrt() <= 1.5 + 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn max_norm_disabled_when_c_nonpositive() {
+        let mut w = Tensor::from_vec(&[2, 2], vec![10., 10., 10., 10.]);
+        let orig = w.clone();
+        max_norm_inplace(&mut w, 0.0);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn max_norm_leaves_small_columns_untouched() {
+        let mut w = Tensor::from_vec(&[2, 1], vec![0.3, 0.4]); // norm 0.5
+        max_norm_inplace(&mut w, 1.0);
+        assert_eq!(w.data(), &[0.3, 0.4]);
+    }
+}

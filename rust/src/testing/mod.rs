@@ -1,0 +1,177 @@
+//! Quickcheck-lite: deterministic property testing without external crates.
+//!
+//! The offline build environment ships no proptest/quickcheck, so this is a
+//! small from-scratch harness: a seeded [`Gen`] (SplitMix64 core) plus a
+//! [`forall`] runner that executes a property over `N` generated cases and
+//! reports the failing case index + seed so a failure reproduces exactly.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+//! use lpdnn::testing::{forall, Gen};
+//! forall("abs is non-negative", |g: &mut Gen| {
+//!     let x = g.f32_range(-100.0, 100.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Number of cases per property (override with env `LPDNN_PROP_CASES`).
+pub const DEFAULT_CASES: usize = 200;
+
+/// Deterministic random generator for property tests (SplitMix64).
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Next raw 64-bit value (SplitMix64 step).
+    pub fn u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        (self.u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f64_unit() as f32) * (hi - lo)
+    }
+
+    /// Uniform i32 in `[lo, hi]` (inclusive).
+    pub fn i32_range(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        (lo as i64 + (self.u64() % span) as i64) as i32
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.u64() % (hi as u64 - lo as u64 + 1)) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_range(0, xs.len() - 1)]
+    }
+
+    /// A vector of f32 drawn from `[lo, hi)` with random length in
+    /// `[min_len, max_len]`.
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_range(min_len, max_len);
+        (0..n).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// Roughly normal sample (sum of uniforms, Irwin–Hall with 12 terms).
+    pub fn f32_normal(&mut self, mean: f32, sd: f32) -> f32 {
+        let s: f64 = (0..12).map(|_| self.f64_unit()).sum::<f64>() - 6.0;
+        mean + sd * s as f32
+    }
+}
+
+fn n_cases() -> usize {
+    std::env::var("LPDNN_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_CASES)
+}
+
+/// Run `prop` over `n_cases()` deterministic generators. On failure, panics
+/// with the case index and per-case seed so the case replays in isolation:
+/// `Gen::new(seed)` reproduces the failing inputs exactly.
+pub fn forall<F: Fn(&mut Gen)>(name: &str, prop: F) {
+    forall_seeded(name, 0xC0FF_EE00, prop)
+}
+
+/// [`forall`] with an explicit base seed (distinct properties in one test
+/// fn should use different seeds to decorrelate).
+pub fn forall_seeded<F: Fn(&mut Gen)>(name: &str, base_seed: u64, prop: F) {
+    for case in 0..n_cases() {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay: Gen::new({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respect_bounds() {
+        forall("bounds", |g: &mut Gen| {
+            let x = g.f32_range(-3.0, 5.0);
+            assert!((-3.0..5.0).contains(&x));
+            let k = g.i32_range(-7, 7);
+            assert!((-7..=7).contains(&k));
+            let u = g.usize_range(2, 9);
+            assert!((2..=9).contains(&u));
+        });
+    }
+
+    #[test]
+    fn f64_unit_in_unit_interval() {
+        let mut g = Gen::new(1);
+        for _ in 0..10_000 {
+            let u = g.f64_unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_has_roughly_right_moments() {
+        let mut g = Gen::new(3);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| g.f32_normal(1.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failures_report_case_and_seed() {
+        forall("always fails", |_g: &mut Gen| panic!("boom"));
+    }
+}

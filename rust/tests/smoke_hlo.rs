@@ -1,0 +1,77 @@
+//! Early integration smoke test: the pi_mlp_fixed_train artifact produced by
+//! `python -m compile.aot` must parse, compile and execute on the PJRT CPU
+//! client of xla_extension 0.5.1 (the whole AOT bridge in one test).
+//!
+//! Run `make artifacts` first; the test is skipped if artifacts are missing.
+
+use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+fn zeros(dims: &[i64]) -> Literal {
+    let n: i64 = dims.iter().product();
+    Literal::vec1(&vec![0f32; n as usize]).reshape(dims).unwrap()
+}
+
+fn filled(dims: &[i64], v: f32) -> Literal {
+    let n: i64 = dims.iter().product();
+    Literal::vec1(&vec![v; n as usize]).reshape(dims).unwrap()
+}
+
+#[test]
+fn pi_mlp_train_artifact_executes() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/pi_mlp_fixed_train.hlo.txt");
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not built (run `make artifacts`)");
+        return;
+    }
+    let client = PjRtClient::cpu().expect("cpu client");
+    let proto = HloModuleProto::from_text_file(path).expect("parse hlo text");
+    let exe = client.compile(&XlaComputation::from_proto(&proto)).expect("compile");
+
+    let (u, k, b, g, nl) = (128i64, 4i64, 64i64, 24i64, 3i64);
+    let mut inputs: Vec<Literal> = Vec::new();
+    // params w0,b0,w1,b1,w2,b2 (tiny nonzero weights so loss is finite)
+    inputs.push(filled(&[k, 784, u], 0.01));
+    inputs.push(zeros(&[k, u]));
+    inputs.push(filled(&[k, u, u], 0.01));
+    inputs.push(zeros(&[k, u]));
+    inputs.push(filled(&[u, 10], 0.01));
+    inputs.push(zeros(&[10]));
+    // velocities
+    inputs.push(zeros(&[k, 784, u]));
+    inputs.push(zeros(&[k, u]));
+    inputs.push(zeros(&[k, u, u]));
+    inputs.push(zeros(&[k, u]));
+    inputs.push(zeros(&[u, 10]));
+    inputs.push(zeros(&[10]));
+    // x, y
+    inputs.push(filled(&[b, 784], 0.5));
+    let mut y = vec![0f32; (b * 10) as usize];
+    for i in 0..b as usize {
+        y[i * 10 + (i % 10)] = 1.0;
+    }
+    inputs.push(Literal::vec1(&y).reshape(&[b, 10]).unwrap());
+    // lr, mom, maxnorm, seed
+    inputs.push(Literal::from(0.1f32));
+    inputs.push(Literal::from(0.5f32));
+    inputs.push(Literal::from(0.0f32));
+    inputs.push(Literal::from(42.0f32));
+    // rates, steps, maxvs (all zero = no dropout, float32 passthrough)
+    inputs.push(zeros(&[nl]));
+    inputs.push(zeros(&[g]));
+    inputs.push(zeros(&[g]));
+
+    let result = exe.execute::<Literal>(&inputs).expect("execute")[0][0]
+        .to_literal_sync()
+        .expect("to literal");
+    let outs = result.to_tuple().expect("tuple outputs");
+    assert_eq!(outs.len(), 12 + 2, "params' + vels' + loss + overflow");
+
+    let loss = outs[12].get_first_element::<f32>().expect("loss");
+    assert!(loss.is_finite() && loss > 0.0, "loss = {loss}");
+
+    let overflow = outs[13].to_vec::<f32>().expect("overflow");
+    assert_eq!(overflow.len(), (g * 3) as usize);
+    // n_total of group l0.z = k * batch * units
+    assert_eq!(overflow[2 * 3 + 2], (k * b * u) as f32);
+    println!("smoke ok: loss={loss}");
+}
