@@ -1,24 +1,28 @@
 //! Dynamic scaling demo: watch the paper's section 5 controller work.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example dynamic_scaling_demo
+//! cargo run --release --example dynamic_scaling_demo
 //! ```
 //!
-//! Trains pi_mlp under dynamic fixed point with a very frequent update
-//! interval and prints the per-group scaling factors (int_bits) as they
-//! adapt: weighted-sum groups grow their range while gradient groups
-//! shrink toward high precision — and keep shrinking as the gradients
-//! themselves shrink during training (the paper's "the gradients diminish
-//! during the training, so do their ranges", section 10).
+//! Trains pi_mlp (native backend — self-contained; set
+//! `LPDNN_BACKEND=pjrt` for the compiled path) under dynamic fixed point
+//! with a very frequent update interval and prints the per-group scaling
+//! factors (int_bits) as they adapt: weighted-sum groups grow their range
+//! while gradient groups shrink toward high precision — and keep
+//! shrinking as the gradients themselves shrink during training (the
+//! paper's "the gradients diminish during the training, so do their
+//! ranges", section 10).
 
-use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
 use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::runtime::{create_backend, Backend as _, ModelInfo};
 
 fn main() -> lpdnn::Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let engine = Engine::cpu()?;
-    let model = manifest.model("pi_mlp")?;
+    let kind = BackendKind::from_env()?;
+    let mut backend = create_backend(kind)?;
+    // group names are topology metadata — identical on both backends
+    let model = ModelInfo::builtin("pi_mlp").expect("builtin pi_mlp");
+    println!("backend: {}", backend.name());
 
     let mut cfg = ExperimentConfig::default();
     cfg.name = "scaling-demo".into();
@@ -33,7 +37,7 @@ fn main() -> lpdnn::Result<()> {
     cfg.train.steps = 240;
     cfg.data.n_train = 2048;
 
-    let trainer = Trainer::new(&engine, &manifest, cfg);
+    let mut trainer = Trainer::new(backend.as_mut(), cfg);
     let result = trainer.run()?;
 
     println!("groups ({}):", model.n_groups);

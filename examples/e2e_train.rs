@@ -1,28 +1,29 @@
-//! End-to-end driver: the full three-layer stack on a real workload.
+//! End-to-end driver: the full stack on a real workload.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_train
+//! cargo run --release --example e2e_train
 //! ```
-//!
-//! Proves all layers compose: rust coordinator (L3) feeding the
-//! AOT-compiled jax maxout network (L2) whose hot path runs the Pallas
-//! quantize / fused-maxout kernels (L1), via the PJRT CPU client.
 //!
 //! Trains the permutation-invariant maxout MLP (~560k parameters) for
 //! several hundred steps on the synthetic digits corpus under THREE
 //! arithmetics — float32, float16, dynamic fixed point 10/12 — logging
 //! the loss curve of each and writing them to `e2e_loss_curves.csv`.
 //! This is the run recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! The backend comes from `LPDNN_BACKEND` (default: the pure-Rust native
+//! engine, which needs nothing beyond `cargo run`; `pjrt` proves all
+//! three compiled layers compose — rust coordinator (L3) feeding the
+//! AOT-compiled jax maxout network (L2) whose hot path runs the Pallas
+//! quantize / fused-maxout kernels (L1), via the PJRT CPU client).
 
 use std::io::Write;
 
-use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
 use lpdnn::coordinator::{RunResult, Trainer};
-use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::runtime::Backend;
 
 fn run(
-    engine: &Engine,
-    manifest: &Manifest,
+    backend: &mut dyn Backend,
     name: &str,
     arith: Arithmetic,
     steps: usize,
@@ -38,24 +39,23 @@ fn run(
     cfg.train.eval_every = 50;
     cfg.data.n_train = 4096;
     cfg.data.n_test = 1024;
-    let mut t = Trainer::new(engine, manifest, cfg);
+    let mut t = Trainer::new(backend, cfg);
     t.verbose = true;
     t.run()
 }
 
 fn main() -> lpdnn::Result<()> {
     let steps: usize = std::env::var("E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let engine = Engine::cpu()?;
-    println!("platform: {}", engine.platform());
+    let kind = BackendKind::from_env()?;
+    let mut backend = lpdnn::runtime::create_backend(kind)?;
+    println!("backend: {}", backend.name());
     println!("model: pi_mlp (2x maxout-128/k4 + softmax, ~560k params)");
     println!("data: 4096 train / 1024 test synthetic digits, batch 64, {steps} steps\n");
 
-    let f32r = run(&engine, &manifest, "e2e-float32", Arithmetic::Float32, steps)?;
-    let halfr = run(&engine, &manifest, "e2e-float16", Arithmetic::Half, steps)?;
+    let f32r = run(backend.as_mut(), "e2e-float32", Arithmetic::Float32, steps)?;
+    let halfr = run(backend.as_mut(), "e2e-float16", Arithmetic::Half, steps)?;
     let dynr = run(
-        &engine,
-        &manifest,
+        backend.as_mut(),
         "e2e-dynamic-10-12",
         Arithmetic::Dynamic {
             bits_comp: 10,

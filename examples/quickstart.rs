@@ -1,31 +1,36 @@
 //! Quickstart: train one Maxout network under low precision arithmetic.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Loads the AOT-compiled pi_mlp artifact, trains it on the synthetic
-//! digits dataset under the paper's headline arithmetic (dynamic fixed
-//! point, 10-bit computations / 12-bit parameter updates) and prints the
-//! final test error next to a float32 baseline.
+//! Runs entirely on the self-contained native backend — no artifacts, no
+//! Python. Trains the pi_mlp maxout network on the synthetic digits
+//! dataset under the paper's headline arithmetic (dynamic fixed point,
+//! 10-bit computations / 12-bit parameter updates) and prints the final
+//! test error next to a float32 baseline. Set `LPDNN_BACKEND=pjrt` (with
+//! a `--features pjrt` build and `make artifacts`) to run the identical
+//! experiment on the compiled path.
 
-use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
 use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::runtime::{create_backend, Backend as _};
 
 fn main() -> lpdnn::Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let engine = Engine::cpu()?;
+    let kind = BackendKind::from_env()?;
+    let mut backend = create_backend(kind)?;
+    println!("backend: {}", backend.name());
 
     // A baseline config: pi_mlp on the digits dataset, 120 SGD steps.
     let mut cfg = ExperimentConfig::default();
     cfg.name = "quickstart-float32".into();
+    cfg.backend = kind;
     cfg.train.steps = 120;
     cfg.data.n_train = 2048;
     cfg.data.n_test = 512;
 
     println!("== float32 baseline ==");
-    let base = Trainer::new(&engine, &manifest, cfg.clone()).run()?;
+    let base = Trainer::new(backend.as_mut(), cfg.clone()).run()?;
     println!("test error: {:.2}%  ({:.1?})", 100.0 * base.test_error, base.wallclock);
 
     // The paper's headline: 10-bit computations, 12-bit parameter updates,
@@ -34,14 +39,14 @@ fn main() -> lpdnn::Result<()> {
     cfg.arithmetic = Arithmetic::Dynamic {
         bits_comp: 10,
         bits_up: 12,
-        max_overflow_rate: 1e-4,  // paper: 0.01%
+        max_overflow_rate: 1e-4, // paper: 0.01%
         update_every_examples: 2048,
         init_int_bits: 3,
         warmup_steps: 30,
     };
 
     println!("\n== dynamic fixed point (10-bit comp / 12-bit up) ==");
-    let dynr = Trainer::new(&engine, &manifest, cfg).run()?;
+    let dynr = Trainer::new(backend.as_mut(), cfg).run()?;
     println!("test error: {:.2}%  ({:.1?})", 100.0 * dynr.test_error, dynr.wallclock);
     println!("normalized vs float32: {:.2}x", dynr.test_error / base.test_error.max(1e-9));
     println!(

@@ -15,7 +15,7 @@ use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::{run_sweep, SweepPoint};
 
 fn main() {
-    let (engine, manifest) = common::setup();
+    let mut backend = common::setup();
     for dataset in ["digits", "clusters"] {
         let baseline = common::base_cfg(&format!("fig1-base-{dataset}"), "pi_mlp", dataset);
         let points: Vec<SweepPoint> = (0..=8)
@@ -31,7 +31,7 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
 
         println!("\n=== Figure 1 analogue ({dataset}): error vs radix position ===");
         println!("float32 baseline error: {:.2}%", 100.0 * base_err);

@@ -14,7 +14,7 @@ use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::{run_sweep, SweepPoint};
 
 fn main() {
-    let (engine, manifest) = common::setup();
+    let mut backend = common::setup();
     let dataset = "digits";
     let baseline = common::base_cfg("fig3-base", "pi_mlp", dataset);
     let widths: Vec<i32> = vec![6, 8, 10, 12, 14, 16, 18, 20, 24, 28];
@@ -44,7 +44,7 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
         println!("\n=== Figure 3 analogue ({arith_name} point, {dataset}) ===");
         println!("float32 baseline error: {:.2}%", 100.0 * base_err);
         let series: Vec<(f64, f64)> =

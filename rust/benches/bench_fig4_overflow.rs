@@ -15,7 +15,7 @@ use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::{run_sweep, SweepPoint};
 
 fn main() {
-    let (engine, manifest) = common::setup();
+    let mut backend = common::setup();
     let dataset = "digits";
     let baseline = common::base_cfg("fig4-base", "pi_mlp", dataset);
     let rates: Vec<f64> = vec![1e-5, 1e-4, 1e-3, 1e-2, 1e-1];
@@ -39,7 +39,7 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(&engine, &manifest, &baseline, &points, true).unwrap();
+        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
         println!("\n=== Figure 4 analogue: comp bits = {bits} ===");
         println!("float32 baseline error: {:.2}%", 100.0 * base_err);
         let series: Vec<(f64, f64)> = rows

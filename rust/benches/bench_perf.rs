@@ -1,11 +1,14 @@
 //! Performance micro-benchmarks: the numbers EXPERIMENTS.md §Perf tracks.
 //!
-//! * compiled train-step latency per model/mode (the end-to-end hot path)
-//! * compiled eval-step latency
+//! * matmul kernels: seed-style naive loops vs blocked serial vs blocked
+//!   parallel, on the pi_mlp hot-path shapes (the acceptance numbers for
+//!   the parallel-matmul work)
+//! * end-to-end train-step latency per model on the selected backend
 //! * host quantizer throughput (GB/s over f32)
-//! * golden train step (host reference point for the compiled step)
-//! * literal conversion overhead (the L3↔PJRT boundary)
+//! * golden/native train step (the native backend's hot path)
 //! * scale controller overhead per tick
+//! * with `--features pjrt` + artifacts: compiled-step latency and the
+//!   L3↔PJRT literal-assembly boundary
 
 #[path = "common.rs"]
 mod common;
@@ -15,7 +18,7 @@ use lpdnn::bench_support::{bench, scaled, Stats, Table};
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::{ScaleController, Trainer};
 use lpdnn::golden::{self, MlpShape};
-use lpdnn::runtime::literal_util::*;
+use lpdnn::runtime::Backend;
 use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
 
 fn fmt_stats(s: &Stats) -> String {
@@ -29,14 +32,129 @@ fn fmt_stats(s: &Stats) -> String {
     )
 }
 
-fn main() {
-    let (engine, manifest) = common::setup();
-    let mut table = Table::new(&["benchmark", "result"]);
+/// The seed repo's naive ikj matmul, kept verbatim as the speedup
+/// reference point.
+fn naive_seed_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ia) = (a.shape()[0], a.shape()[1]);
+    let ub = b.shape()[1];
+    let mut out = vec![0.0f32; ba * ub];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..ba {
+        for kk in 0..ia {
+            let aik = ad[i * ia + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * ub..(kk + 1) * ub];
+            let orow = &mut out[i * ub..(i + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[ba, ub], out)
+}
 
-    // ------------------------------------------------------------------
-    // compiled step latency per model
-    // ------------------------------------------------------------------
+/// The seed repo's naive a^T @ b loops (weight-gradient kernel), kept
+/// verbatim as the TN-path speedup reference.
+fn naive_seed_matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ia) = (a.shape()[0], a.shape()[1]);
+    let ub = b.shape()[1];
+    let mut out = vec![0.0f32; ia * ub];
+    let ad = a.data();
+    let bd = b.data();
+    for n in 0..ba {
+        let arow = &ad[n * ia..(n + 1) * ia];
+        let brow = &bd[n * ub..(n + 1) * ub];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * ub..(i + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[ia, ub], out)
+}
+
+fn matmul_section(table: &mut Table) {
+    let mut rng = Pcg32::seeded(99);
+    let mut rand = |shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.normal()).collect())
+    };
+    // pi_mlp forward hot-path shapes (batch 64) + one sweep-scale shape
+    let shapes: &[(usize, usize, usize, &str)] = &[
+        (64, 784, 128, "pi_mlp l0 z (64x784x128)"),
+        (64, 128, 128, "pi_mlp l1 z (64x128x128)"),
+        (256, 784, 512, "wide sweep (256x784x512)"),
+    ];
+    let iters = scaled(40).max(10);
+    for &(m, k, n, label) in shapes {
+        let a = rand(&[m, k]);
+        let b = rand(&[k, n]);
+        let s_naive = bench(2, iters, || {
+            let _ = naive_seed_matmul(&a, &b);
+        });
+        let s_serial = bench(2, iters, || {
+            let _ = ops::par_matmul(&a, &b, 1);
+        });
+        let s_par = bench(2, iters, || {
+            let _ = ops::matmul(&a, &b); // auto: parallel above threshold
+        });
+        table.row(&[
+            format!("matmul {label}"),
+            format!(
+                "naive {:.2}ms | blocked {:.2}ms | parallel {:.2}ms | speedup {:.1}x (threads {})",
+                s_naive.mean * 1e3,
+                s_serial.mean * 1e3,
+                s_par.mean * 1e3,
+                s_naive.mean / s_par.mean.max(1e-12),
+                ops::max_threads(),
+            ),
+        ]);
+    }
+
+    // the dw path runs the distinct TN kernel (x^T @ dz): bench it as
+    // such, on the real l0 gradient shape
+    {
+        let x = rand(&[64, 784]);
+        let dz = rand(&[64, 128]);
+        let s_naive = bench(2, iters, || {
+            let _ = naive_seed_matmul_tn(&x, &dz);
+        });
+        let s_serial = bench(2, iters, || {
+            let _ = ops::matmul_tn_sl_threads(x.data(), dz.data(), 64, 784, 128, 1);
+        });
+        let s_par = bench(2, iters, || {
+            let _ = ops::matmul_tn(&x, &dz); // auto-threaded
+        });
+        table.row(&[
+            "matmul_tn pi_mlp l0 dw (64x784 ^T @ 64x128)".to_string(),
+            format!(
+                "naive {:.2}ms | blocked {:.2}ms | parallel {:.2}ms | speedup {:.1}x (threads {})",
+                s_naive.mean * 1e3,
+                s_serial.mean * 1e3,
+                s_par.mean * 1e3,
+                s_naive.mean / s_par.mean.max(1e-12),
+                ops::max_threads(),
+            ),
+        ]);
+    }
+}
+
+fn end_to_end_section(backend: &mut dyn Backend, table: &mut Table) {
     for model in ["pi_mlp", "conv", "conv32"] {
+        if !backend.supports_model(model) {
+            table.row(&[
+                format!("{model} end-to-end per train step"),
+                format!("skipped ({} backend cannot run it)", backend.name()),
+            ]);
+            continue;
+        }
         let dataset = match model {
             "pi_mlp" => "digits",
             "conv" => "digits",
@@ -48,131 +166,145 @@ fn main() {
         cfg.data.n_test = 256;
         cfg.arithmetic = Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
         let t0 = std::time::Instant::now();
-        let r = Trainer::new(&engine, &manifest, cfg).run().expect("run");
+        let r = Trainer::new(&mut *backend, cfg).run().expect("run");
         let total = t0.elapsed().as_secs_f64();
-        let per_step = (total
-            - 0.0) // compile amortized via engine cache across benches
-            / r.steps_run as f64;
+        let per_step = total / r.steps_run as f64;
         table.row(&[
             format!("{model} end-to-end per train step (incl. eval amortized)"),
-            format!("{:.1}ms", per_step * 1e3),
+            format!("{:.1}ms ({} backend)", per_step * 1e3, r.backend_name),
         ]);
     }
+}
 
-    // isolated compiled step (no batcher, no literal rebuild of x/y)
-    {
-        let model = manifest.model("pi_mlp").unwrap();
-        let exe = engine
-            .load_cached(manifest.artifact("pi_mlp", "fixed", "train").unwrap())
-            .unwrap();
-        let mut rng = Pcg32::seeded(1);
-        let params: Vec<Tensor> =
-            model.params.iter().map(|s| s.init.realize(&s.shape, &mut rng)).collect();
-        let x = Tensor::from_vec(
-            &[64, 784],
-            (0..64 * 784).map(|_| rng.uniform()).collect(),
+fn native_step_section(table: &mut Table) {
+    // golden/native train step at pi_mlp scale — the native backend's
+    // hot path (runs the blocked/parallel kernels)
+    let shape = MlpShape::pi_mlp(128, 4);
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+    let mut rng = Pcg32::seeded(3);
+    let mut params = vec![
+        InitSpec::GlorotUniform { fan_in: 784, fan_out: 128 }
+            .realize(&[4, 784, 128], &mut rng),
+        Tensor::zeros(&[4, 128]),
+        InitSpec::GlorotUniform { fan_in: 128, fan_out: 128 }
+            .realize(&[4, 128, 128], &mut rng),
+        Tensor::zeros(&[4, 128]),
+        InitSpec::GlorotUniform { fan_in: 128, fan_out: 10 }.realize(&[128, 10], &mut rng),
+        Tensor::zeros(&[10]),
+    ];
+    let mut vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let x = Tensor::from_vec(&[64, 784], (0..64 * 784).map(|_| rng.uniform()).collect());
+    let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+    let s = bench(1, scaled(10).max(3), || {
+        let _ = golden::train_step(
+            shape, &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, RoundMode::HalfAway,
         );
-        let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
-        let y = ops::one_hot(&labels, 10);
-        let build_inputs = || {
-            let mut inputs = Vec::new();
-            for p in &params {
-                inputs.push(tensor_to_literal(p).unwrap());
-            }
-            for p in &params {
-                inputs.push(tensor_to_literal(&Tensor::zeros(p.shape())).unwrap());
-            }
-            inputs.push(tensor_to_literal(&x).unwrap());
-            inputs.push(tensor_to_literal(&y).unwrap());
-            for v in [0.1f32, 0.5, 3.0, 7.0] {
-                inputs.push(scalar(v));
-            }
-            inputs.push(slice_to_literal(&[0.0; 3], &[3]).unwrap());
-            inputs.push(slice_to_literal(&vec![2f32.powi(-6); 24], &[24]).unwrap());
-            inputs.push(slice_to_literal(&vec![8.0; 24], &[24]).unwrap());
-            inputs
-        };
-        let inputs = build_inputs();
-        let s = bench(3, scaled(30).max(10), || {
-            let _ = exe.run(&inputs).unwrap();
-        });
-        table.row(&["pi_mlp compiled train step (XLA execute only)".into(), fmt_stats(&s)]);
+    });
+    table.row(&["native/golden train step (pi_mlp, batch 64)".into(), fmt_stats(&s)]);
+}
 
-        let s = bench(3, scaled(30).max(10), || {
-            let _ = build_inputs();
-        });
-        table.row(&["pi_mlp input literal assembly (L3→PJRT boundary)".into(), fmt_stats(&s)]);
-    }
+fn quantizer_section(table: &mut Table) {
+    let mut rng = Pcg32::seeded(2);
+    let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
+    let q = Quantizer::from_format(FixedFormat::new(12, 3));
+    let s = bench(2, 10, || {
+        let _ = q.apply_slice(&mut xs);
+    });
+    let gbps = (xs.len() * 4) as f64 / s.mean / 1e9;
+    table.row(&[
+        "host quantizer (apply_slice, 16 MiB f32)".into(),
+        format!("{:.2} GB/s ({:.2}ms)", gbps, s.mean * 1e3),
+    ]);
+}
 
-    // ------------------------------------------------------------------
-    // host quantizer throughput
-    // ------------------------------------------------------------------
-    {
-        let mut rng = Pcg32::seeded(2);
-        let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
-        let q = Quantizer::from_format(FixedFormat::new(12, 3));
-        let s = bench(2, 10, || {
-            let _ = q.apply_slice(&mut xs);
-        });
-        let gbps = (xs.len() * 4) as f64 / s.mean / 1e9;
+fn controller_section(table: &mut Table) {
+    let mut ctrl = ScaleController::dynamic(
+        3,
+        FixedFormat::new(10, 3),
+        FixedFormat::new(12, 0),
+        1e-4,
+        64,
+    );
+    let overflow = Tensor::from_vec(&[24, 3], vec![1.0; 72]);
+    let s = bench(10, 1000, || {
+        ctrl.observe_matrix(&overflow);
+        let _ = ctrl.after_batch(64, 0);
+    });
+    table.row(&[
+        "scale controller observe+tick (24 groups)".into(),
+        format!("{:.2}µs", s.mean * 1e6),
+    ]);
+}
+
+/// PJRT-only micro-benchmarks: the compiled step in isolation and the
+/// literal-assembly boundary. Needs artifacts; skipped without.
+#[cfg(feature = "pjrt")]
+fn pjrt_section(table: &mut Table) {
+    use lpdnn::runtime::literal_util::*;
+    use lpdnn::runtime::{Engine, Manifest};
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
         table.row(&[
-            "host quantizer (apply_slice, 16 MiB f32)".into(),
-            format!("{:.2} GB/s ({:.2}ms)", gbps, s.mean * 1e3),
+            "pjrt compiled-step micro-benches".into(),
+            "skipped (run `make artifacts`)".into(),
         ]);
+        return;
     }
+    let manifest = Manifest::load(dir).expect("manifest");
+    let engine = Engine::cpu().expect("PJRT cpu client");
+    let model = manifest.model("pi_mlp").unwrap();
+    let exe = engine
+        .load_cached(manifest.artifact("pi_mlp", "fixed", "train").unwrap())
+        .unwrap();
+    let mut rng = Pcg32::seeded(1);
+    let params: Vec<Tensor> =
+        model.params.iter().map(|s| s.init.realize(&s.shape, &mut rng)).collect();
+    let x = Tensor::from_vec(&[64, 784], (0..64 * 784).map(|_| rng.uniform()).collect());
+    let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+    let build_inputs = || {
+        let mut inputs = Vec::new();
+        for p in &params {
+            inputs.push(tensor_to_literal(p).unwrap());
+        }
+        for p in &params {
+            inputs.push(tensor_to_literal(&Tensor::zeros(p.shape())).unwrap());
+        }
+        inputs.push(tensor_to_literal(&x).unwrap());
+        inputs.push(tensor_to_literal(&y).unwrap());
+        for v in [0.1f32, 0.5, 3.0, 7.0] {
+            inputs.push(scalar(v));
+        }
+        inputs.push(slice_to_literal(&[0.0; 3], &[3]).unwrap());
+        inputs.push(slice_to_literal(&vec![2f32.powi(-6); 24], &[24]).unwrap());
+        inputs.push(slice_to_literal(&vec![8.0; 24], &[24]).unwrap());
+        inputs
+    };
+    let inputs = build_inputs();
+    let s = bench(3, scaled(30).max(10), || {
+        let _ = exe.run(&inputs).unwrap();
+    });
+    table.row(&["pi_mlp compiled train step (XLA execute only)".into(), fmt_stats(&s)]);
 
-    // ------------------------------------------------------------------
-    // golden host train step (reference for the compiled one)
-    // ------------------------------------------------------------------
-    {
-        let shape = MlpShape::pi_mlp(128, 4);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
-        let mut rng = Pcg32::seeded(3);
-        let mut params = vec![
-            InitSpec::GlorotUniform { fan_in: 784, fan_out: 128 }
-                .realize(&[4, 784, 128], &mut rng),
-            Tensor::zeros(&[4, 128]),
-            InitSpec::GlorotUniform { fan_in: 128, fan_out: 128 }
-                .realize(&[4, 128, 128], &mut rng),
-            Tensor::zeros(&[4, 128]),
-            InitSpec::GlorotUniform { fan_in: 128, fan_out: 10 }
-                .realize(&[128, 10], &mut rng),
-            Tensor::zeros(&[10]),
-        ];
-        let mut vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-        let x = Tensor::from_vec(&[64, 784], (0..64 * 784).map(|_| rng.uniform()).collect());
-        let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
-        let y = ops::one_hot(&labels, 10);
-        let s = bench(1, scaled(10).max(3), || {
-            let _ = golden::train_step(
-                shape, &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl,
-                RoundMode::HalfAway,
-            );
-        });
-        table.row(&["golden host train step (pi_mlp, single thread)".into(), fmt_stats(&s)]);
-    }
+    let s = bench(3, scaled(30).max(10), || {
+        let _ = build_inputs();
+    });
+    table.row(&["pi_mlp input literal assembly (L3→PJRT boundary)".into(), fmt_stats(&s)]);
+}
 
-    // ------------------------------------------------------------------
-    // controller overhead
-    // ------------------------------------------------------------------
-    {
-        let mut ctrl = ScaleController::dynamic(
-            3,
-            FixedFormat::new(10, 3),
-            FixedFormat::new(12, 0),
-            1e-4,
-            64,
-        );
-        let overflow = Tensor::from_vec(&[24, 3], vec![1.0; 72]);
-        let s = bench(10, 1000, || {
-            ctrl.observe_matrix(&overflow);
-            let _ = ctrl.after_batch(64, 0);
-        });
-        table.row(&[
-            "scale controller observe+tick (24 groups)".into(),
-            format!("{:.2}µs", s.mean * 1e6),
-        ]);
-    }
+fn main() {
+    let mut backend = common::setup();
+    let mut table = Table::new(&["benchmark", "result"]);
+
+    matmul_section(&mut table);
+    end_to_end_section(backend.as_mut(), &mut table);
+    native_step_section(&mut table);
+    quantizer_section(&mut table);
+    controller_section(&mut table);
+    #[cfg(feature = "pjrt")]
+    pjrt_section(&mut table);
 
     println!("\n=== performance micro-benchmarks ===");
     table.print();

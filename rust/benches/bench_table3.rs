@@ -16,9 +16,10 @@ mod common;
 use lpdnn::bench_support::Table;
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::Trainer;
+use lpdnn::runtime::Backend as _;
 
 fn main() {
-    let (engine, manifest) = common::setup();
+    let mut backend = common::setup();
     let workloads: Vec<(&str, &str, &str)> = vec![
         ("PI digits", "pi_mlp", "digits"),
         ("digits conv", "conv", "digits"),
@@ -37,6 +38,17 @@ fn main() {
     ];
 
     for &(wl_name, model, dataset) in &workloads {
+        if !backend.supports_model(model) {
+            eprintln!(
+                "  [{wl_name}] skipped: model {model} not runnable on the {} backend \
+                 (needs compiled artifacts — set LPDNN_BACKEND=pjrt)",
+                backend.name()
+            );
+            for row in rows.iter_mut() {
+                row.3.push(f64::NAN);
+            }
+            continue;
+        }
         let base = common::base_cfg(&format!("tbl3-{wl_name}"), model, dataset);
         let arithmetics = [
             Arithmetic::Float32,
@@ -49,7 +61,7 @@ fn main() {
             cfg.name = format!("tbl3-{}-{}", wl_name, row.0);
             cfg.arithmetic = arith;
             let t0 = std::time::Instant::now();
-            let r = Trainer::new(&engine, &manifest, cfg).run().expect("run");
+            let r = Trainer::new(backend.as_mut(), cfg).run().expect("run");
             eprintln!(
                 "  [{wl_name}] {}: {:.2}% ({:.0?})",
                 row.0,
@@ -63,10 +75,17 @@ fn main() {
     println!("\n=== Table 3 analogue: final test error (%) ===");
     println!("(paper: float32 1.05/0.51/14.05/2.71, float16 1.10/0.51/14.14/3.02,");
     println!(" fixed-20 1.39/0.57/15.98/2.97, dynamic-10/12 1.28/0.59/14.82/4.95)\n");
+    let fmt_err = |e: &f64| {
+        if e.is_nan() {
+            "n/a".to_string()
+        } else {
+            format!("{:.2}%", 100.0 * e)
+        }
+    };
     for (name, comp, up, errs) in &rows {
         let cells: Vec<String> = std::iter::once(name.to_string())
             .chain([comp.to_string(), up.to_string()])
-            .chain(errs.iter().map(|e| format!("{:.2}%", 100.0 * e)))
+            .chain(errs.iter().map(fmt_err))
             .collect();
         table.row(&cells);
     }
@@ -81,11 +100,13 @@ fn main() {
     let mut norm = Table::new(&["format", "PI digits", "digits conv", "cifar-like", "svhn-like"]);
     for (name, _, _, errs) in &rows[1..] {
         let cells: Vec<String> = std::iter::once(name.to_string())
-            .chain(
-                errs.iter()
-                    .zip(&baseline)
-                    .map(|(e, b)| format!("{:.2}x", e / b.max(floor))),
-            )
+            .chain(errs.iter().zip(&baseline).map(|(e, b)| {
+                if e.is_nan() || b.is_nan() {
+                    "n/a".to_string()
+                } else {
+                    format!("{:.2}x", e / b.max(floor))
+                }
+            }))
             .collect();
         norm.row(&cells);
     }

@@ -1,25 +1,32 @@
 //! Shared helpers for the bench binaries (each bench is its own crate;
 //! included via `#[path = "common.rs"] mod common;`).
 //!
+//! Backends: every bench runs on the backend named by `LPDNN_BACKEND`
+//! (default `native`, which needs no artifacts; `pjrt` needs a build
+//! with `--features pjrt` plus `make artifacts`). Workloads a backend
+//! cannot run (conv models on native) are skipped with a note — see
+//! EXPERIMENTS.md §Experiment index for which figure needs which.
+//!
 //! Budgets: every bench scales its training-step counts by
 //! `LPDNN_BENCH_SCALE` (default 1.0) via `bench_support::scaled`, so a
 //! quick smoke pass is `LPDNN_BENCH_SCALE=0.1 cargo bench`.
 
 #![allow(dead_code)]
 
-use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
-use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::config::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
+use lpdnn::runtime::Backend;
 
-/// PJRT engine + manifest, or a clear message when artifacts are missing.
-pub fn setup() -> (Engine, Manifest) {
-    let dir = Manifest::default_dir();
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` before `cargo bench`"
-    );
-    let manifest = Manifest::load(dir).expect("manifest");
-    let engine = Engine::cpu().expect("PJRT cpu client");
-    (engine, manifest)
+/// The backend under test (`LPDNN_BACKEND`, default native) — or a clear
+/// message when the name is unknown or the backend cannot be constructed.
+pub fn setup() -> Box<dyn Backend> {
+    let kind = BackendKind::from_env().expect("LPDNN_BACKEND");
+    match lpdnn::runtime::create_backend(kind) {
+        Ok(b) => {
+            eprintln!("[bench] backend: {}", b.name());
+            b
+        }
+        Err(e) => panic!("cannot construct {} backend: {e:#}", kind.label()),
+    }
 }
 
 /// Per-model default budgets tuned to the CPU testbed (see DESIGN.md):
@@ -45,6 +52,7 @@ pub fn base_cfg(name: &str, model: &str, dataset: &str) -> ExperimentConfig {
     ExperimentConfig {
         name: name.into(),
         model: model.into(),
+        backend: BackendKind::default(), // benches pick the backend object via setup()
         arithmetic: Arithmetic::Float32,
         train: TrainConfig {
             steps,

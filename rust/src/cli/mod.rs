@@ -6,7 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context};
+use crate::error::Context;
+use crate::bail;
 
 /// Parsed command line: subcommand + flags.
 #[derive(Clone, Debug, Default)]
@@ -73,7 +74,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse::<T>()
-                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+                .map_err(|e| crate::err!("--{name} {v}: {e}")),
         }
     }
 
@@ -111,7 +112,10 @@ USAGE:
 SUBCOMMANDS:
     train       Train one experiment
                   --config <file.toml>   experiment config (or use flags:)
-                  --model pi_mlp|conv|conv32    --dataset digits|clusters|cifar_like|svhn_like
+                  --backend native|pjrt  execution backend (default native;
+                                         pjrt needs --features pjrt + artifacts)
+                  --model pi_mlp|pi_mlp_wide|conv|conv32
+                  --dataset digits|clusters|cifar_like|svhn_like
                   --arith float32|half|fixed|dynamic
                   --bits-comp N --bits-up N --int-bits N
                   --max-overflow-rate R --update-every N --warmup N
@@ -120,12 +124,15 @@ SUBCOMMANDS:
     eval        Evaluate a config's arithmetic on a fresh model (sanity)
     datasets    Print the dataset overview (paper Table 2 analogue)
     formats     Print format definitions (paper Table 1) and examples
-    artifacts   List compiled artifacts from the manifest
+    artifacts   List compiled artifacts from the manifest (pjrt backend)
     help        This message
 
 ENVIRONMENT:
     LPDNN_ARTIFACTS     artifacts directory (default: ./artifacts)
     LPDNN_BENCH_SCALE   scale factor for bench workloads (default 1.0)
+    LPDNN_BACKEND       backend for the bench binaries (native|pjrt)
+    LPDNN_THREADS       worker-thread cap for the native matmul kernels
+    LPDNN_PAR_MATMUL    FLOP threshold for going parallel (default 2^20)
 "
     .to_string()
 }

@@ -6,11 +6,49 @@
 //! parameters mirror the paper's procedure (section 8.1: linearly decaying
 //! learning rate, linearly saturating momentum, dropout, max-norm).
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::error::Context;
 
 use super::json::Json;
 use super::toml;
 use crate::arith::FixedFormat;
+
+/// Which execution backend runs the experiment (DESIGN.md §Backends).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust engine (default): self-contained, no artifacts needed.
+    #[default]
+    Native,
+    /// Compiled AOT artifacts on the PJRT CPU client (`pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> crate::Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend '{other}' (native|pjrt)"),
+        }
+    }
+
+    /// Backend named by the `LPDNN_BACKEND` env var (benches + examples);
+    /// unset means [`BackendKind::Native`], anything unrecognized is an
+    /// error rather than a silent fallback.
+    pub fn from_env() -> crate::Result<BackendKind> {
+        match std::env::var("LPDNN_BACKEND") {
+            Ok(s) => Self::parse(&s),
+            Err(_) => Ok(BackendKind::Native),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Which arithmetic the run trains under (paper sections 3–5).
 #[derive(Clone, Debug, PartialEq)]
@@ -169,8 +207,11 @@ impl Default for DataConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// "pi_mlp" | "conv" | "conv32" (must exist in the manifest).
+    /// "pi_mlp" | "pi_mlp_wide" | "conv" | "conv32" (built-in for the
+    /// native backend; must exist in the manifest for pjrt).
     pub model: String,
+    /// Which execution backend to run on (`[experiment] backend = ...`).
+    pub backend: BackendKind,
     pub arithmetic: Arithmetic,
     pub train: TrainConfig,
     pub data: DataConfig,
@@ -181,6 +222,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             name: "default".into(),
             model: "pi_mlp".into(),
+            backend: BackendKind::default(),
             arithmetic: Arithmetic::Float32,
             train: TrainConfig::default(),
             data: DataConfig::default(),
@@ -208,6 +250,9 @@ impl ExperimentConfig {
             }
             if let Some(v) = exp.opt("dataset") {
                 cfg.data.dataset = v.as_str()?.to_string();
+            }
+            if let Some(v) = exp.opt("backend") {
+                cfg.backend = BackendKind::parse(v.as_str()?)?;
             }
         }
         if let Some(d) = doc.opt("data") {
@@ -427,6 +472,20 @@ n_test = 512
             warmup_steps: 0,
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_kind_parses_and_defaults_native() {
+        assert_eq!(ExperimentConfig::default().backend, BackendKind::Native);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        let cfg = ExperimentConfig::from_toml_str(
+            "[experiment]\nname = \"b\"\nbackend = \"pjrt\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        assert_eq!(cfg.backend.label(), "pjrt");
     }
 
     #[test]

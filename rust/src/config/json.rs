@@ -8,8 +8,6 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 /// A parsed JSON value. Objects use a BTreeMap: deterministic iteration
 /// order makes written files diff-stable.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,15 +20,28 @@ pub enum Json {
     Object(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("json missing key: {0}")]
     Missing(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key: {key}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ------------------------------------------------------------------

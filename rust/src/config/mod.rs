@@ -5,5 +5,5 @@ pub mod experiment;
 pub mod json;
 pub mod toml;
 
-pub use experiment::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
+pub use experiment::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
 pub use json::Json;

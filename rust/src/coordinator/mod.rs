@@ -2,8 +2,8 @@
 //! point scale controller.
 //!
 //! * [`trainer`]    — one experiment end to end (init, loop, schedules,
-//!   eval); feeds the compiled train step and consumes its overflow
-//!   counters.
+//!   eval); feeds any [`crate::runtime::Backend`]'s train step and
+//!   consumes its overflow counters.
 //! * [`scale_ctrl`] — per-group scaling-factor state + the section 5
 //!   update rule. The *only* stateful online mechanism in the paper, and
 //!   the part that genuinely belongs in the coordinator.

@@ -1,13 +1,15 @@
 //! Parameter sweeps: the machinery behind every paper figure.
 //!
 //! A sweep is a base [`ExperimentConfig`] plus a list of variants; the
-//! runner executes each variant (sharing one PJRT engine and one manifest)
-//! and reports normalized final test errors — the paper's own presentation
-//! (every figure divides by the dataset's float32 baseline error).
+//! runner executes each variant on ONE shared [`Backend`] (so the PJRT
+//! backend's compile cache — and any future backend state worth keeping —
+//! is reused across tens of runs) and reports normalized final test
+//! errors: the paper's own presentation (every figure divides by the
+//! dataset's float32 baseline error).
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::trainer::{RunResult, Trainer};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::Backend;
 
 /// One sweep point: a label and the config to run.
 #[derive(Clone, Debug)]
@@ -30,15 +32,16 @@ pub struct SweepRow {
 /// Run `baseline` first (float32 reference), then every point; returns
 /// (baseline error, rows with normalized errors).
 pub fn run_sweep(
-    engine: &Engine,
-    manifest: &Manifest,
+    backend: &mut dyn Backend,
     baseline: &ExperimentConfig,
     points: &[SweepPoint],
     verbose: bool,
 ) -> crate::Result<(f64, Vec<SweepRow>)> {
-    let mut t = Trainer::new(engine, manifest, baseline.clone());
+    // `&mut *backend` reborrows so the one backend serves every run
+    let mut t = Trainer::new(&mut *backend, baseline.clone());
     t.verbose = verbose;
     let base = t.run()?;
+    drop(t);
     let base_err = base.test_error.max(1e-9);
     if verbose {
         eprintln!(
@@ -49,9 +52,10 @@ pub fn run_sweep(
 
     let mut rows = Vec::with_capacity(points.len());
     for p in points {
-        let mut t = Trainer::new(engine, manifest, p.cfg.clone());
+        let mut t = Trainer::new(&mut *backend, p.cfg.clone());
         t.verbose = verbose;
         let r = t.run()?;
+        drop(t);
         if verbose {
             eprintln!(
                 "[sweep] {} error {:.4} (x{:.2} baseline, {:.1?})",

@@ -1,11 +1,14 @@
-//! The training coordinator: drives the compiled train/eval steps.
+//! The training coordinator: drives one experiment over any [`Backend`].
 //!
 //! One [`Trainer`] owns a full run: dataset synthesis, parameter init
 //! (quantized onto the storage grid), the minibatch loop feeding the
-//! compiled train step, the paper's LR/momentum schedules, the dynamic
+//! backend's train step, the paper's LR/momentum schedules, the dynamic
 //! fixed point scale controller, periodic evaluation, and the final test
-//! error. Python never runs here — the artifacts were AOT-compiled by
-//! `make artifacts`.
+//! error. The numeric work is entirely behind the
+//! [`Backend`](crate::runtime::Backend) trait — the native backend runs
+//! it in pure Rust, the PJRT backend on compiled artifacts (DESIGN.md
+//! §Backends) — so this loop is written once and the sweeps/benches are
+//! backend-agnostic.
 //!
 //! Dynamic fixed point warmup (paper 9.3): "We find the initial scaling
 //! factors by training with a higher precision format. Once those scaling
@@ -14,24 +17,20 @@
 //! a fast update interval, adopts the learned per-group exponents, then
 //! reinitializes parameters and trains at the target bit-widths.
 
-use anyhow::Context;
-use xla::Literal;
-
 use super::metrics::Metrics;
 use super::scale_ctrl::ScaleController;
-use crate::arith::{FixedFormat, Quantizer};
 use crate::config::{Arithmetic, ExperimentConfig};
 use crate::data::{Batcher, Dataset};
-use crate::runtime::literal_util::{
-    literal_to_scalar, literal_to_tensor, scalar, slice_to_literal, tensor_to_literal,
-};
-use crate::runtime::{Engine, Executable, Manifest, ModelInfo};
-use crate::tensor::{Pcg32, Tensor};
+use crate::error::Context;
+use crate::runtime::{Backend, ModelInfo, StepParams};
+use crate::tensor::Pcg32;
 
 /// Everything a finished run reports.
 #[derive(Clone, Debug)]
 pub struct RunResult {
     pub config_name: String,
+    /// Which backend executed the run ("native" / "pjrt").
+    pub backend_name: String,
     /// Final test error rate in [0, 1].
     pub test_error: f64,
     /// Final (tail-averaged) training loss.
@@ -43,61 +42,26 @@ pub struct RunResult {
     pub wallclock: std::time::Duration,
 }
 
-/// Model state: parameter + velocity literals in manifest order.
-///
-/// State lives as PJRT literals, not host tensors: each step's outputs are
-/// fed straight back as the next step's inputs, so parameters never make a
-/// host round-trip on the training path (EXPERIMENTS.md §Perf, L3).
-pub struct State {
-    params: Vec<Literal>,
-    vels: Vec<Literal>,
-}
-
-impl State {
-    /// Initialize from the manifest specs, quantizing every parameter
-    /// onto its group's storage grid (the device does so on every
-    /// *update*; doing it at init keeps step 0 consistent).
-    fn init(
-        model: &ModelInfo,
-        ctrl: &ScaleController,
-        rng: &mut Pcg32,
-    ) -> crate::Result<State> {
-        let mut params = Vec::with_capacity(model.params.len());
-        let mut vels = Vec::with_capacity(model.params.len());
-        for spec in &model.params {
-            let mut t = spec.init.realize(&spec.shape, rng);
-            Quantizer::from_format(ctrl.format(spec.group())).apply_slice(t.data_mut());
-            params.push(tensor_to_literal(&t)?);
-            vels.push(tensor_to_literal(&Tensor::zeros(&spec.shape))?);
-        }
-        Ok(State { params, vels })
-    }
-}
-
-/// Drives one experiment end to end.
+/// Drives one experiment end to end on a borrowed backend. The backend
+/// outlives the trainer, so sweeps reuse one backend (and its compile
+/// caches) across many runs.
 pub struct Trainer<'a> {
-    pub engine: &'a Engine,
-    pub manifest: &'a Manifest,
+    pub backend: &'a mut dyn Backend,
     pub cfg: ExperimentConfig,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(engine: &'a Engine, manifest: &'a Manifest, cfg: ExperimentConfig) -> Self {
-        Trainer { engine, manifest, cfg, verbose: false }
+    pub fn new(backend: &'a mut dyn Backend, cfg: ExperimentConfig) -> Self {
+        Trainer { backend, cfg, verbose: false }
     }
 
     /// Run the experiment and return its results.
-    pub fn run(&self) -> crate::Result<RunResult> {
+    pub fn run(&mut self) -> crate::Result<RunResult> {
         let started = std::time::Instant::now();
         self.cfg.validate()?;
-        let model = self.manifest.model(&self.cfg.model)?;
-        let mode = self.cfg.arithmetic.mode();
-        let train_exe =
-            self.engine.load_cached(self.manifest.artifact(&self.cfg.model, mode, "train")?)?;
-        let eval_exe =
-            self.engine.load_cached(self.manifest.artifact(&self.cfg.model, mode, "eval")?)?;
+        let model = self.backend.begin_run(&self.cfg)?;
 
         // Dataset: test size rounded up to whole eval batches so padded
         // wrap-around examples never exist (exact error counts).
@@ -112,9 +76,9 @@ impl<'a> Trainer<'a> {
 
         // Scale controller, with optional high-precision warmup.
         let mut ctrl = self.make_controller(model.n_layers);
-        if let Arithmetic::Dynamic { warmup_steps, bits_comp: _, .. } = self.cfg.arithmetic {
+        if let Arithmetic::Dynamic { warmup_steps, .. } = self.cfg.arithmetic {
             if warmup_steps > 0 {
-                let learned = self.warmup(model, train_exe.as_ref(), &dataset, warmup_steps)?;
+                let learned = self.warmup(&model, &dataset, warmup_steps)?;
                 ctrl.adopt_int_bits(&learned);
                 if self.verbose {
                     eprintln!("[{}] warmup adopted int_bits {learned:?}", self.cfg.name);
@@ -124,7 +88,7 @@ impl<'a> Trainer<'a> {
 
         // Parameter init (reinitialized after warmup per the paper).
         let mut init_rng = root_rng.fork(0x1217);
-        let mut state = State::init(model, &ctrl, &mut init_rng)?;
+        self.backend.init_state(&ctrl, &mut init_rng)?;
 
         // Train loop.
         let mut metrics = Metrics::default();
@@ -137,7 +101,9 @@ impl<'a> Trainer<'a> {
         let steps = self.cfg.train.steps;
         for t in 0..steps {
             let (x, y) = batcher.next_batch();
-            let out = self.run_train_step(train_exe.as_ref(), model, &mut state, &ctrl, &x, &y, t)?;
+            let hp = self.step_params(t);
+            let out = self.backend.train_step(&ctrl, &x, &y, &hp).context("train step")?;
+            crate::ensure!(out.loss.is_finite(), "non-finite loss at step {t}: {}", out.loss);
             metrics.record_loss(t, out.loss);
             ctrl.observe_matrix(&out.overflow);
             if let Some(moves) = ctrl.after_batch(model.train_batch, t) {
@@ -147,7 +113,7 @@ impl<'a> Trainer<'a> {
                 && t + 1 != steps
                 && (t + 1) % self.cfg.train.eval_every == 0
             {
-                let err = self.evaluate(eval_exe.as_ref(), model, &state, &ctrl, &dataset)?;
+                let err = self.evaluate(&model, &ctrl, &dataset)?;
                 metrics.record_eval(t, err);
                 if self.verbose {
                     eprintln!(
@@ -159,11 +125,12 @@ impl<'a> Trainer<'a> {
         }
 
         // Final evaluation.
-        let err = self.evaluate(eval_exe.as_ref(), model, &state, &ctrl, &dataset)?;
+        let err = self.evaluate(&model, &ctrl, &dataset)?;
         metrics.record_eval(steps.saturating_sub(1), err);
 
         Ok(RunResult {
             config_name: self.cfg.name.clone(),
+            backend_name: self.backend.name().to_string(),
             test_error: err,
             train_loss: metrics.tail_loss(10).unwrap_or(f32::NAN),
             final_int_bits: ctrl.int_bits_vec(),
@@ -171,6 +138,19 @@ impl<'a> Trainer<'a> {
             steps_run: steps,
             wallclock: started.elapsed(),
         })
+    }
+
+    /// Resolve the schedules at step `t` into per-step backend inputs.
+    fn step_params(&self, t: usize) -> StepParams {
+        let tc = &self.cfg.train;
+        StepParams {
+            lr: tc.lr_at(t),
+            momentum: tc.momentum_at(t),
+            max_norm: tc.max_norm,
+            dropout_input: tc.dropout_input,
+            dropout_hidden: tc.dropout_hidden,
+            t,
+        }
     }
 
     fn make_controller(&self, n_layers: usize) -> ScaleController {
@@ -193,21 +173,18 @@ impl<'a> Trainer<'a> {
     /// dynamic controller with a short update interval so the exponents
     /// converge quickly; return the learned per-group int_bits.
     fn warmup(
-        &self,
+        &mut self,
         model: &ModelInfo,
-        train_exe: &Executable,
         dataset: &Dataset,
         warmup_steps: usize,
     ) -> crate::Result<Vec<i32>> {
-        let init_int = match self.cfg.arithmetic {
-            Arithmetic::Dynamic { init_int_bits, .. } => init_int_bits,
+        let (init_int, max_rate) = match self.cfg.arithmetic {
+            Arithmetic::Dynamic { init_int_bits, max_overflow_rate, .. } => {
+                (init_int_bits, max_overflow_rate)
+            }
             _ => unreachable!("warmup only runs for dynamic arithmetic"),
         };
-        let max_rate = match self.cfg.arithmetic {
-            Arithmetic::Dynamic { max_overflow_rate, .. } => max_overflow_rate,
-            _ => unreachable!(),
-        };
-        let wide = FixedFormat::new(31, init_int);
+        let wide = crate::arith::FixedFormat::new(31, init_int);
         let mut ctrl = ScaleController::dynamic(
             model.n_layers,
             wide,
@@ -217,7 +194,7 @@ impl<'a> Trainer<'a> {
         );
         let root_rng = Pcg32::seeded(self.cfg.train.seed ^ 0xAAAA);
         let mut rng = root_rng.fork(0x1217);
-        let mut state = State::init(model, &ctrl, &mut rng)?;
+        self.backend.init_state(&ctrl, &mut rng)?;
         let mut batcher = Batcher::new(
             &dataset.train,
             model.train_batch,
@@ -226,100 +203,37 @@ impl<'a> Trainer<'a> {
         );
         for t in 0..warmup_steps {
             let (x, y) = batcher.next_batch();
-            let out = self.run_train_step(train_exe, model, &mut state, &ctrl, &x, &y, t)?;
+            let hp = self.step_params(t);
+            let out = self.backend.train_step(&ctrl, &x, &y, &hp).context("warmup step")?;
+            // a diverged warmup must fail fast: NaN activations would read
+            // as zero overflow and teach the controller garbage exponents
+            crate::ensure!(
+                out.loss.is_finite(),
+                "non-finite loss at warmup step {t}: {}",
+                out.loss
+            );
             ctrl.observe_matrix(&out.overflow);
             ctrl.after_batch(model.train_batch, t);
         }
         Ok(ctrl.int_bits_vec())
     }
 
-    /// Assemble inputs, execute one train step, scatter outputs back.
-    fn run_train_step(
-        &self,
-        exe: &Executable,
-        model: &ModelInfo,
-        state: &mut State,
-        ctrl: &ScaleController,
-        x: &Tensor,
-        y: &Tensor,
-        t: usize,
-    ) -> crate::Result<StepOut> {
-        let tc = &self.cfg.train;
-        let n_p = model.params.len();
-
-        // Per-step inputs (x, y, scalars, scale vectors) are freshly built;
-        // parameters/velocities are borrowed from the previous step's
-        // outputs — no host round-trip for model state.
-        // x arrives in dataset layout; the artifact wants [batch, ...model
-        // input shape] — same bytes (e.g. 28×28×1 → 784 for pi_mlp).
-        let mut x_shape = vec![model.train_batch];
-        x_shape.extend_from_slice(&model.input_shape);
-        let mut rates = vec![tc.dropout_hidden; model.n_layers];
-        rates[0] = tc.dropout_input;
-        let fresh: Vec<Literal> = vec![
-            slice_to_literal(x.data(), &x_shape)?,
-            tensor_to_literal(y)?,
-            scalar(tc.lr_at(t)),
-            scalar(tc.momentum_at(t)),
-            scalar(tc.max_norm),
-            scalar((t as u32 % (1 << 24)) as f32), // in-graph dropout seed
-            slice_to_literal(&rates, &[model.n_layers])?,
-            slice_to_literal(&ctrl.steps_vec(), &[model.n_groups])?,
-            slice_to_literal(&ctrl.maxvs_vec(), &[model.n_groups])?,
-        ];
-        let inputs: Vec<&Literal> = state
-            .params
-            .iter()
-            .chain(state.vels.iter())
-            .chain(fresh.iter())
-            .collect();
-
-        let mut outputs = exe.run(&inputs).context("train step")?;
-
-        let loss = literal_to_scalar(&outputs[2 * n_p])?;
-        anyhow::ensure!(loss.is_finite(), "non-finite loss at step {t}: {loss}");
-        let overflow = literal_to_tensor(&outputs[2 * n_p + 1])?;
-        // feed the updated state straight into the next step
-        state.vels = outputs.split_off(n_p).into_iter().take(n_p).collect();
-        state.params = outputs;
-        Ok(StepOut { loss, overflow })
-    }
-
     /// Full test-set evaluation; returns the error rate.
-    pub fn evaluate(
-        &self,
-        exe: &Executable,
+    fn evaluate(
+        &mut self,
         model: &ModelInfo,
-        state: &State,
         ctrl: &ScaleController,
         dataset: &Dataset,
     ) -> crate::Result<f64> {
-        let steps_v = ctrl.steps_vec();
-        let maxvs_v = ctrl.maxvs_vec();
-        let mut errors = 0.0f64;
+        let mut errors = 0usize;
         let mut total = 0usize;
         for (x, y, n_real) in
             Batcher::eval_batches(&dataset.test, model.eval_batch, model.n_classes)
         {
             debug_assert_eq!(n_real, model.eval_batch, "test size is batch-aligned");
-            let mut x_shape = vec![model.eval_batch];
-            x_shape.extend_from_slice(&model.input_shape);
-            let fresh: Vec<Literal> = vec![
-                slice_to_literal(x.data(), &x_shape)?,
-                tensor_to_literal(&y)?,
-                slice_to_literal(&steps_v, &[model.n_groups])?,
-                slice_to_literal(&maxvs_v, &[model.n_groups])?,
-            ];
-            let inputs: Vec<&Literal> = state.params.iter().chain(fresh.iter()).collect();
-            let out = exe.run(&inputs).context("eval step")?;
-            errors += literal_to_scalar(&out[0])? as f64;
+            errors += self.backend.eval_errors(ctrl, &x, &y, n_real).context("eval step")?;
             total += n_real;
         }
-        Ok(errors / total as f64)
+        Ok(errors as f64 / total as f64)
     }
-}
-
-struct StepOut {
-    loss: f32,
-    overflow: Tensor,
 }

@@ -88,7 +88,7 @@ impl Dataset {
             "clusters" => Ok(clusters::generate(n_train, n_test, &mut rng.fork(0xC105))),
             "cifar_like" => Ok(cifar_like::generate(n_train, n_test, &mut rng.fork(0xC1FA))),
             "svhn_like" => Ok(svhn_like::generate(n_train, n_test, &mut rng.fork(0x54E7))),
-            other => anyhow::bail!("unknown dataset '{other}'"),
+            other => crate::bail!("unknown dataset '{other}'"),
         }
     }
 }

@@ -1,0 +1,176 @@
+//! From-scratch error substrate (the offline build has no `anyhow`).
+//!
+//! A deliberately tiny mirror of the `anyhow` surface this crate actually
+//! uses: an opaque [`Error`] carrying a context chain, a [`Result`] alias,
+//! the [`Context`] extension trait for `Result`/`Option`, and the
+//! `err!` / `bail!` / `ensure!` macros (exported at the crate root).
+//! `{e}` displays the outermost message; `{e:#}` displays the full
+//! chain joined with `: ` (matching how `main.rs` reports failures).
+//!
+//! Any `std::error::Error` converts into [`Error`] via `?` (the blanket
+//! `From` below), so `io::Error`, the config parsers' typed errors and —
+//! under the `pjrt` feature — `xla::Error` all flow through unchanged.
+
+use std::fmt;
+
+/// An opaque error: a chain of human-readable messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Prepend a higher-level context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug (what `unwrap`/`expect` print) shows the full chain.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that is what makes this blanket conversion coherent (same trick as
+// `anyhow`): every concrete error type flows through `?` into `Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::err!($($arg)*)) };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("no such file"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("no such file"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            crate::ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                crate::bail!("too large: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative input"));
+        assert!(format!("{}", f(101).unwrap_err()).contains("too large"));
+        let e = crate::err!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}

@@ -1,24 +1,36 @@
 //! Golden model: a pure-rust, from-scratch mirror of the compiled
-//! `pi_mlp` train step.
+//! `pi_mlp` train step — and the compute core of the native backend.
 //!
 //! Same signals, same quantization hooks, same update rule as
 //! `python/compile/model.py`, implemented over the host [`Tensor`] ops and
-//! [`crate::arith::Quantizer`]. It exists to *cross-validate the entire
-//! AOT bridge*: an integration test trains both paths from identical
-//! state and asserts losses, updated parameters and overflow counters
-//! agree within float32 reassociation tolerance. It is also the reference
-//! used by the ablation bench for alternative rounding modes (which the
-//! compiled artifact pins to half-away).
+//! [`crate::arith::Quantizer`]. It serves three roles:
 //!
-//! Dropout is intentionally not mirrored (the in-graph hash PRNG is a
-//! device detail); cross-checks run with dropout disabled.
+//! 1. *Cross-validate the AOT bridge*: an integration test (behind the
+//!    `pjrt` feature) trains both paths from identical state and asserts
+//!    losses, updated parameters and overflow counters agree within
+//!    float32 reassociation tolerance.
+//! 2. *Reference for rounding ablations*: the ablation bench drives
+//!    alternative [`RoundMode`]s (the compiled artifact pins half-away).
+//! 3. *The native training engine*: [`crate::runtime::NativeBackend`]
+//!    drives [`train_step_opt`] / [`eval_logits`] through the same
+//!    `Trainer` loop as the compiled path — see DESIGN.md §Backends.
+//!
+//! The hot contractions run on the blocked/parallel slice kernels in
+//! [`crate::tensor::ops`], contracting per-filter sub-blocks of the
+//! `[k, I, U]` weight tensors without materializing copies.
+//!
+//! The compiled artifact's in-graph hash-PRNG dropout is a device detail
+//! and is not mirrored bit-for-bit; the native path implements standard
+//! inverted dropout from the host [`Pcg32`] stream instead
+//! ([`StepOptions::dropout`]). Cross-checks against the device run with
+//! dropout disabled.
 
-use crate::arith::{QuantStats, Quantizer, RoundMode};
+use crate::arith::{float16, QuantStats, Quantizer, RoundMode};
 use crate::coordinator::ScaleController;
 use crate::runtime::manifest::{
     group_index, KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z,
 };
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Pcg32, Tensor};
 
 /// Maxout MLP shape description (matches the manifest's pi_mlp).
 #[derive(Clone, Copy, Debug)]
@@ -47,10 +59,40 @@ pub struct GoldenOut {
     pub overflow: Tensor,
 }
 
+/// Host-side inverted dropout for the native path (the compiled path does
+/// dropout in-graph). Masks are drawn from `rng`, so a run replays
+/// bit-identically given the experiment seed.
+#[derive(Clone, Debug)]
+pub struct Dropout {
+    pub input_rate: f32,
+    pub hidden_rate: f32,
+    pub rng: Pcg32,
+}
+
+/// Per-step options for [`train_step_opt`].
+#[derive(Clone, Debug)]
+pub struct StepOptions {
+    /// Rounding mode for every quantization hook (canonical: half-away).
+    pub mode: RoundMode,
+    /// Simulate float16: round-trip every hooked signal through binary16
+    /// instead of a fixed point grid (paper Table 1 / Table 3 rows).
+    pub half: bool,
+    /// Inverted dropout (native path only; `None` = off).
+    pub dropout: Option<Dropout>,
+}
+
+impl Default for StepOptions {
+    fn default() -> Self {
+        StepOptions { mode: RoundMode::HalfAway, half: false, dropout: None }
+    }
+}
+
 /// One quantization context: per-group quantizers + stat accumulation.
 pub struct GoldenQ<'c> {
     ctrl: &'c ScaleController,
     pub mode: RoundMode,
+    /// Float16 simulation: binary16 round-trip instead of the fixed grid.
+    pub half: bool,
     stats: Vec<QuantStats>,
     /// Uniform sample source for stochastic rounding ablations.
     pub stochastic_u: Option<crate::tensor::Pcg32>,
@@ -58,9 +100,14 @@ pub struct GoldenQ<'c> {
 
 impl<'c> GoldenQ<'c> {
     pub fn new(ctrl: &'c ScaleController, mode: RoundMode) -> Self {
+        Self::with_half(ctrl, mode, false)
+    }
+
+    pub fn with_half(ctrl: &'c ScaleController, mode: RoundMode, half: bool) -> Self {
         GoldenQ {
             ctrl,
             mode,
+            half,
             stats: vec![QuantStats::default(); ctrl.n_groups()],
             stochastic_u: None,
         }
@@ -75,25 +122,34 @@ impl<'c> GoldenQ<'c> {
     /// Quantize tensor `t` as group (layer, kind), recording stats.
     fn apply(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool) {
         let g = group_index(layer, kind);
-        let q = self.quantizer(g);
-        let st = if let Some(rng) = self.stochastic_u.as_mut() {
-            let mut stats = QuantStats { n_total: t.len() as u64, ..Default::default() };
-            if !q.is_passthrough() {
-                let half = q.maxv * 0.5;
-                for v in t.data_mut().iter_mut() {
-                    let a = v.abs();
-                    if a >= q.maxv {
-                        stats.n_over += 1;
-                    }
-                    if a >= half {
-                        stats.n_half += 1;
-                    }
-                    *v = q.apply_with(*v, rng.uniform());
-                }
+        let st = if self.half {
+            // binary16 round-trip; only totals are counted (the scale
+            // controller is static under float16, so over/half are unused).
+            for v in t.data_mut().iter_mut() {
+                *v = float16::half_roundtrip(*v);
             }
-            stats
+            QuantStats { n_total: t.len() as u64, ..Default::default() }
         } else {
-            q.apply_slice(t.data_mut())
+            let q = self.quantizer(g);
+            if let Some(rng) = self.stochastic_u.as_mut() {
+                let mut stats = QuantStats { n_total: t.len() as u64, ..Default::default() };
+                if !q.is_passthrough() {
+                    let half = q.maxv * 0.5;
+                    for v in t.data_mut().iter_mut() {
+                        let a = v.abs();
+                        if a >= q.maxv {
+                            stats.n_over += 1;
+                        }
+                        if a >= half {
+                            stats.n_half += 1;
+                        }
+                        *v = q.apply_with(*v, rng.uniform());
+                    }
+                }
+                stats
+            } else {
+                q.apply_slice(t.data_mut())
+            }
         };
         if record {
             self.stats[g].merge(st);
@@ -125,18 +181,17 @@ fn maxout_fwd(
     assert_eq!(x.shape()[1], d_in);
 
     // z for every filter, quantized as ONE group call (stats pooled like
-    // the fused kernel does).
+    // the fused kernel does). Each filter contracts a [d_in, units]
+    // sub-block of w in place — no weight copies.
     let mut zq = Tensor::zeros(&[k, batch, units]);
     for j in 0..k {
-        let wj = Tensor::from_vec(
-            &[d_in, units],
-            w.data()[j * d_in * units..(j + 1) * d_in * units].to_vec(),
-        );
-        let zj = ops::matmul(x, &wj);
+        let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+        let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
         let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+        let brow = &b.data()[j * units..(j + 1) * units];
         for r in 0..batch {
             for u in 0..units {
-                dst[r * units + u] = zj.at2(r, u) + b.at2(j, u);
+                dst[r * units + u] = zj[r * units + u] + brow[u];
             }
         }
     }
@@ -162,7 +217,25 @@ fn maxout_fwd(
     (h, amax)
 }
 
-/// One full golden train step (no dropout). Mutates params/vels in place.
+/// Draw an inverted-dropout mask (scale 1/(1-rate) on keep, 0 on drop).
+fn dropout_mask(rng: &mut Pcg32, n: usize, rate: f32) -> Option<Vec<f32>> {
+    if rate <= 0.0 {
+        return None;
+    }
+    let scale = 1.0 / (1.0 - rate);
+    Some((0..n).map(|_| if rng.uniform() < rate { 0.0 } else { scale }).collect())
+}
+
+fn apply_mask(t: &mut Tensor, mask: &Option<Vec<f32>>) {
+    if let Some(m) = mask {
+        for (v, &s) in t.data_mut().iter_mut().zip(m) {
+            *v *= s;
+        }
+    }
+}
+
+/// One full golden train step with the canonical options (no dropout, no
+/// float16). Mutates params/vels in place.
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
     shape: MlpShape,
@@ -176,17 +249,71 @@ pub fn train_step(
     ctrl: &ScaleController,
     mode: RoundMode,
 ) -> GoldenOut {
-    let mut q = GoldenQ::new(ctrl, mode);
-    if mode == RoundMode::Stochastic {
+    train_step_opt(
+        shape,
+        params,
+        vels,
+        x,
+        y,
+        lr,
+        mom,
+        max_norm,
+        ctrl,
+        StepOptions { mode, ..Default::default() },
+    )
+}
+
+/// One full train step with explicit [`StepOptions`] (the native
+/// backend's entry point). Mutates params/vels in place.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_opt(
+    shape: MlpShape,
+    params: &mut Params,
+    vels: &mut Params,
+    x: &Tensor,
+    y: &Tensor,
+    lr: f32,
+    mom: f32,
+    max_norm: f32,
+    ctrl: &ScaleController,
+    mut opts: StepOptions,
+) -> GoldenOut {
+    let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
+    if opts.mode == RoundMode::Stochastic {
         // true stochastic rounding needs a uniform sample per element
         q.stochastic_u = Some(crate::tensor::Pcg32::seeded(0x57CC_4A57));
     }
     let batch = x.shape()[0];
     let (k, units, classes) = (shape.k, shape.units, shape.n_classes);
 
+    // ---- input dropout (native path) ----
+    let x_masked;
+    let x: &Tensor = match opts.dropout.as_mut() {
+        Some(d) => match dropout_mask(&mut d.rng, x.len(), d.input_rate) {
+            Some(m) => {
+                let mut xm = x.clone();
+                apply_mask(&mut xm, &Some(m));
+                x_masked = xm;
+                &x_masked
+            }
+            None => x,
+        },
+        None => x,
+    };
+
     // ---- forward ----
-    let (h0, amax0) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
-    let (h1, amax1) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let (mut h0, amax0) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
+    let m0 = opts
+        .dropout
+        .as_mut()
+        .and_then(|d| dropout_mask(&mut d.rng, h0.len(), d.hidden_rate));
+    apply_mask(&mut h0, &m0);
+    let (mut h1, amax1) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let m1 = opts
+        .dropout
+        .as_mut()
+        .and_then(|d| dropout_mask(&mut d.rng, h1.len(), d.hidden_rate));
+    apply_mask(&mut h1, &m1);
     let mut z2 = ops::matmul(&h1, &params[4]);
     for r in 0..batch {
         for c in 0..classes {
@@ -214,10 +341,12 @@ pub fn train_step(
     q.apply(&mut db2, 2, KIND_DB, true);
     let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
     q.apply(&mut dh1, 1, KIND_DH, true);
+    apply_mask(&mut dh1, &m1);
 
     let (dw1, db1, mut dh0) =
         maxout_bwd(&mut q, 1, &h0, &params[2], &dh1, &amax1, k, units, true);
     q.apply(&mut dh0, 0, KIND_DH, true);
+    apply_mask(&mut dh0, &m0);
     let (dw0, db0, _) = maxout_bwd(&mut q, 0, x, &params[0], &dh0, &amax0, k, units, false);
 
     // ---- SGD + momentum + max-norm + storage quantization ----
@@ -241,6 +370,31 @@ pub fn train_step(
     }
 
     GoldenOut { loss, overflow: q.stats_matrix() }
+}
+
+/// Forward-only logits `[B, C]` for evaluation (no dropout, no mutation),
+/// quantizing forward signals exactly as the train step does.
+pub fn eval_logits(
+    shape: MlpShape,
+    params: &Params,
+    x: &Tensor,
+    ctrl: &ScaleController,
+    mode: RoundMode,
+    half: bool,
+) -> Tensor {
+    let batch = x.shape()[0];
+    let classes = shape.n_classes;
+    let mut q = GoldenQ::with_half(ctrl, mode, half);
+    let (h0, _) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
+    let (h1, _) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let mut z2 = ops::matmul(&h1, &params[4]);
+    for r in 0..batch {
+        for c in 0..classes {
+            z2.data_mut()[r * classes + c] += params[5].data()[c];
+        }
+    }
+    q.apply(&mut z2, 2, KIND_Z, false);
+    z2
 }
 
 /// Backward through a maxout dense layer: route dh to the winning filter,
@@ -274,22 +428,16 @@ fn maxout_bwd(
     let mut db = Tensor::zeros(&[k, units]);
     let mut dx = Tensor::zeros(&[batch, d_in]);
     for j in 0..k {
-        let dzj = Tensor::from_vec(
-            &[batch, units],
-            dz.data()[j * batch * units..(j + 1) * batch * units].to_vec(),
-        );
-        let dwj = ops::matmul_tn(x, &dzj);
-        dw.data_mut()[j * d_in * units..(j + 1) * d_in * units]
-            .copy_from_slice(dwj.data());
-        let dbj = ops::sum_rows(&dzj);
-        db.data_mut()[j * units..(j + 1) * units].copy_from_slice(dbj.data());
+        // contiguous [batch, units] view of this filter's dz
+        let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
+        let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
+        dw.data_mut()[j * d_in * units..(j + 1) * d_in * units].copy_from_slice(&dwj);
+        let dbj = ops::sum_rows_sl(dzj, batch, units);
+        db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
         if need_dx {
-            let wj = Tensor::from_vec(
-                &[d_in, units],
-                w.data()[j * d_in * units..(j + 1) * d_in * units].to_vec(),
-            );
-            let dxj = ops::matmul_nt(&dzj, &wj);
-            for (a, &b) in dx.data_mut().iter_mut().zip(dxj.data()) {
+            let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+            let dxj = ops::matmul_nt_sl(dzj, wj, batch, units, d_in);
+            for (a, &b) in dx.data_mut().iter_mut().zip(&dxj) {
                 *a += b;
             }
         }
@@ -441,5 +589,122 @@ mod tests {
             s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, RoundMode::HalfEven,
         );
         assert!(out.loss.is_finite());
+    }
+
+    #[test]
+    fn half_mode_keeps_signals_on_f16_grid_and_learns() {
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 21);
+        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (x, y) = batch(s, 16, 22);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..25 {
+            let out = train_step_opt(
+                s,
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.2,
+                0.5,
+                0.0,
+                &ctrl,
+                StepOptions { half: true, ..Default::default() },
+            );
+            first.get_or_insert(out.loss);
+            last = out.loss;
+        }
+        assert!(last < first.unwrap() * 0.7, "{first:?} -> {last}");
+        // parameters are exactly representable in binary16
+        for p in &params {
+            for &v in p.data() {
+                assert_eq!(v, float16::half_roundtrip(v), "not on f16 grid: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_masks_scale_and_replay_deterministically() {
+        let s = tiny_shape();
+        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (x, y) = batch(s, 16, 30);
+        let run = |seed: u64| {
+            let (mut params, mut vels) = init_state(s, 31);
+            let opts = StepOptions {
+                dropout: Some(Dropout {
+                    input_rate: 0.2,
+                    hidden_rate: 0.5,
+                    rng: Pcg32::seeded(seed),
+                }),
+                ..Default::default()
+            };
+            let out = train_step_opt(
+                s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, opts,
+            );
+            (out.loss, params)
+        };
+        let (l1, p1) = run(77);
+        let (l2, p2) = run(77);
+        assert_eq!(l1, l2);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.data(), b.data());
+        }
+        // a different mask seed takes a different step
+        let (l3, _) = run(78);
+        assert_ne!(l1, l3);
+    }
+
+    #[test]
+    fn zero_rate_dropout_is_identity() {
+        let s = tiny_shape();
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+        let (x, y) = batch(s, 8, 40);
+        let (mut p1, mut v1) = init_state(s, 41);
+        let (mut p2, mut v2) = init_state(s, 41);
+        let a = train_step(
+            s, &mut p1, &mut v1, &x, &y, 0.1, 0.5, 2.0, &ctrl, RoundMode::HalfAway,
+        );
+        let opts = StepOptions {
+            dropout: Some(Dropout {
+                input_rate: 0.0,
+                hidden_rate: 0.0,
+                rng: Pcg32::seeded(1),
+            }),
+            ..Default::default()
+        };
+        let b = train_step_opt(s, &mut p2, &mut v2, &x, &y, 0.1, 0.5, 2.0, &ctrl, opts);
+        assert_eq!(a.loss, b.loss);
+        for (t1, t2) in p1.iter().zip(&p2) {
+            assert_eq!(t1.data(), t2.data());
+        }
+    }
+
+    #[test]
+    fn eval_logits_match_zero_lr_train_step_loss() {
+        // A zero-LR train step's loss equals the cross-entropy of the
+        // eval logits — forward paths agree.
+        let s = tiny_shape();
+        let (mut params, mut vels) = init_state(s, 50);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+        let (x, y) = batch(s, 8, 51);
+        // params pre-quantized as the Trainer does at init
+        for (i, p) in params.iter_mut().enumerate() {
+            let kind = if i % 2 == 0 { KIND_W } else { KIND_B };
+            let g = group_index(i / 2, kind);
+            Quantizer::from_format(ctrl.format(g)).apply_slice(p.data_mut());
+        }
+        let probe = train_step(
+            s, &mut params.clone(), &mut vels, &x, &y, 0.0, 0.0, 0.0, &ctrl,
+            RoundMode::HalfAway,
+        );
+        let logits = eval_logits(s, &params, &x, &ctrl, RoundMode::HalfAway, false);
+        let logp = ops::log_softmax(&logits);
+        let mut loss = 0.0f64;
+        for i in 0..x.shape()[0] * s.n_classes {
+            loss -= (y.data()[i] * logp.data()[i]) as f64;
+        }
+        let loss = (loss / x.shape()[0] as f64) as f32;
+        assert!((loss - probe.loss).abs() < 1e-5, "{loss} vs {}", probe.loss);
     }
 }

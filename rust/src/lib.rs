@@ -12,9 +12,11 @@
 //!   (`python/compile/model.py`), AOT-lowered once to HLO text.
 //! * **L3** — this crate: the training coordinator, the dynamic fixed
 //!   point scale controller (the paper's section 5 mechanism), every
-//!   substrate (datasets, preprocessing, config, metrics), and the PJRT
-//!   runtime that executes the compiled artifacts. Python never runs on
-//!   the training path.
+//!   substrate (datasets, preprocessing, config, metrics), and the
+//!   pluggable execution [`runtime::Backend`]s — the pure-Rust
+//!   [`runtime::NativeBackend`] (default, self-contained) and the PJRT
+//!   runtime that executes the compiled artifacts (behind the `pjrt`
+//!   cargo feature). Python never runs on the training path.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for reproduction results of every paper table/figure.
@@ -25,10 +27,11 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod golden;
 pub mod runtime;
 pub mod tensor;
 pub mod testing;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

@@ -2,14 +2,13 @@
 //!
 //! See `lpdnn help` (or `cli::help()`) for the subcommand reference.
 
-use anyhow::Context;
-
 use lpdnn::arith::FixedFormat;
 use lpdnn::cli::{self, Args};
-use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
 use lpdnn::coordinator::Trainer;
 use lpdnn::data::Dataset;
-use lpdnn::runtime::{Engine, Manifest};
+use lpdnn::error::Context;
+use lpdnn::runtime::{create_backend, Manifest};
 use lpdnn::tensor::Pcg32;
 
 fn main() {
@@ -32,19 +31,25 @@ fn run(argv: Vec<String>) -> lpdnn::Result<()> {
             print!("{}", cli::help());
             Ok(())
         }
-        other => anyhow::bail!("unknown subcommand '{other}' (try `lpdnn help`)"),
+        other => lpdnn::bail!("unknown subcommand '{other}' (try `lpdnn help`)"),
     }
 }
 
 /// Build an ExperimentConfig from either --config or individual flags.
+/// `--backend` always wins over the config file (quick A/B runs).
 fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
     if let Some(path) = args.get_opt("config") {
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
-        return ExperimentConfig::from_toml_str(&text);
+        let mut cfg = ExperimentConfig::from_toml_str(&text)?;
+        if let Some(b) = args.get_opt("backend") {
+            cfg.backend = BackendKind::parse(&b)?;
+        }
+        return Ok(cfg);
     }
     let mut cfg = ExperimentConfig::default();
     cfg.name = args.get("name", "cli");
     cfg.model = args.get("model", "pi_mlp");
+    cfg.backend = BackendKind::parse(&args.get("backend", "native"))?;
     cfg.data.dataset = args.get("dataset", "digits");
     cfg.data.n_train = args.get_parse("n-train", cfg.data.n_train)?;
     cfg.data.n_test = args.get_parse("n-test", cfg.data.n_test)?;
@@ -66,7 +71,7 @@ fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
             init_int_bits: args.get_parse("init-int-bits", 3)?,
             warmup_steps: args.get_parse("warmup", 0)?,
         },
-        other => anyhow::bail!("unknown --arith '{other}'"),
+        other => lpdnn::bail!("unknown --arith '{other}'"),
     };
 
     cfg.train.steps = args.get_parse("steps", cfg.train.steps)?;
@@ -86,14 +91,14 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     let verbose = args.has("verbose");
     args.finish()?;
 
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    let engine = Engine::cpu()?;
-    let mut trainer = Trainer::new(&engine, &manifest, cfg.clone());
+    let mut backend = create_backend(cfg.backend)?;
+    let mut trainer = Trainer::new(backend.as_mut(), cfg.clone());
     trainer.verbose = verbose;
 
     eprintln!(
-        "training '{}': model={} dataset={} arith={} steps={}",
+        "training '{}': backend={} model={} dataset={} arith={} steps={}",
         cfg.name,
+        cfg.backend.label(),
         cfg.model,
         cfg.data.dataset,
         cfg.arithmetic.label(),
@@ -102,6 +107,7 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     let result = trainer.run()?;
 
     println!("experiment:      {}", result.config_name);
+    println!("backend:         {}", result.backend_name);
     println!("arithmetic:      {}", cfg.arithmetic.label());
     println!("steps:           {}", result.steps_run);
     println!("final loss:      {:.4}", result.train_loss);
@@ -109,7 +115,10 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     println!("wallclock:       {:.2?}", result.wallclock);
     if matches!(cfg.arithmetic, Arithmetic::Dynamic { .. }) {
         println!("final int_bits:  {:?}", result.final_int_bits);
-        println!("scale moves:     {}", result.metrics.scale_moves.iter().map(|&(_, n)| n).sum::<usize>());
+        println!(
+            "scale moves:     {}",
+            result.metrics.scale_moves.iter().map(|&(_, n)| n).sum::<usize>()
+        );
     }
     if let Some(path) = loss_csv {
         result.metrics.write_loss_csv(&path)?;
@@ -179,7 +188,9 @@ fn cmd_formats(args: &Args) -> lpdnn::Result<()> {
 fn cmd_artifacts(args: &Args) -> lpdnn::Result<()> {
     args.finish()?;
     let manifest = Manifest::load(Manifest::default_dir())?;
-    let mut t = lpdnn::bench_support::Table::new(&["artifact", "model", "mode", "graph", "inputs", "outputs"]);
+    let mut t = lpdnn::bench_support::Table::new(&[
+        "artifact", "model", "mode", "graph", "inputs", "outputs",
+    ]);
     for (key, a) in &manifest.artifacts {
         t.row(&[
             key.clone(),
@@ -198,5 +209,6 @@ fn cmd_artifacts(args: &Args) -> lpdnn::Result<()> {
             m.input_shape, m.n_layers, m.n_groups, m.train_batch, m.eval_batch
         );
     }
+    println!("(artifacts feed the pjrt backend; the default native backend needs none)");
     Ok(())
 }

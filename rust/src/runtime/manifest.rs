@@ -1,15 +1,20 @@
-//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`).
+//! Typed view of `artifacts/manifest.json` (written by `compile/aot.py`)
+//! plus the built-in topologies the native backend runs without any
+//! artifacts at all.
 //!
-//! The manifest is the single source of truth for everything the rust side
-//! must know about the compiled graphs: model topologies, parameter specs
-//! (shape + init + group), scaling-factor group tables, and the exact
-//! input/output orderings of each artifact. Nothing about the models is
-//! duplicated in rust code.
+//! For the PJRT path the manifest is the single source of truth for
+//! everything the rust side must know about the compiled graphs: model
+//! topologies, parameter specs (shape + init + group), scaling-factor
+//! group tables, and the exact input/output orderings of each artifact.
+//! [`ModelInfo::builtin`] mirrors the maxout-MLP entries of that manifest
+//! so the self-contained [`crate::runtime::NativeBackend`] can construct
+//! identical state on a machine that has never run `make artifacts`
+//! (DESIGN.md §Backends).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::Context;
+use crate::error::Context;
 
 use crate::config::json;
 use crate::tensor::init::InitSpec;
@@ -70,6 +75,62 @@ pub struct ModelInfo {
     pub params: Vec<ParamSpec>,
 }
 
+impl ModelInfo {
+    /// Built-in maxout-MLP topologies for the native backend — the same
+    /// models `python/compile/model.py` declares, so manifest order,
+    /// group indexing and init specs line up exactly with the compiled
+    /// artifacts. Returns `None` for models the native path cannot run
+    /// (the conv nets exist only as compiled graphs).
+    pub fn builtin(name: &str) -> Option<ModelInfo> {
+        let (units, k) = match name {
+            "pi_mlp" => (128usize, 4usize),
+            // paper 9.2/9.3 width ablation: double the hidden units
+            "pi_mlp_wide" => (256, 4),
+            _ => return None,
+        };
+        let (d_in, n_classes, n_layers) = (784usize, 10usize, 3usize);
+        let w = |l: usize, shape: Vec<usize>, fan_in: usize, fan_out: usize| ParamSpec {
+            name: format!("l{l}.w"),
+            shape,
+            layer: l,
+            kind: "w".into(),
+            init: InitSpec::GlorotUniform { fan_in, fan_out },
+        };
+        let b = |l: usize, shape: Vec<usize>| ParamSpec {
+            name: format!("l{l}.b"),
+            shape,
+            layer: l,
+            kind: "b".into(),
+            init: InitSpec::Zeros,
+        };
+        let params = vec![
+            w(0, vec![k, d_in, units], d_in, units),
+            b(0, vec![k, units]),
+            w(1, vec![k, units, units], units, units),
+            b(1, vec![k, units]),
+            w(2, vec![units, n_classes], units, n_classes),
+            b(2, vec![n_classes]),
+        ];
+        let mut group_names = Vec::with_capacity(n_layers * N_KINDS);
+        for layer in 0..n_layers {
+            for kind in KIND_NAMES {
+                group_names.push(format!("l{layer}.{kind}"));
+            }
+        }
+        Some(ModelInfo {
+            name: name.to_string(),
+            input_shape: vec![d_in],
+            n_layers,
+            n_groups: n_layers * N_KINDS,
+            group_names,
+            train_batch: 64,
+            eval_batch: 256,
+            n_classes,
+            params,
+        })
+    }
+}
+
 /// One compiled artifact's metadata.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
@@ -102,7 +163,7 @@ impl Manifest {
         let doc = json::parse(&text).context("parsing manifest.json")?;
 
         let version = doc.get("version")?.as_i64()?;
-        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        crate::ensure!(version == 1, "unsupported manifest version {version}");
 
         let mut models = BTreeMap::new();
         for (name, m) in doc.get("models")?.as_object()? {
@@ -114,7 +175,7 @@ impl Manifest {
                         fan_in: p.get("fan_in")?.as_usize()?,
                         fan_out: p.get("fan_out")?.as_usize()?,
                     },
-                    other => anyhow::bail!("unknown init '{other}'"),
+                    other => crate::bail!("unknown init '{other}'"),
                 };
                 params.push(ParamSpec {
                     name: p.get("name")?.as_str()?.to_string(),
@@ -135,11 +196,11 @@ impl Manifest {
                 n_classes: m.get("n_classes")?.as_usize()?,
                 params,
             };
-            anyhow::ensure!(
+            crate::ensure!(
                 info.n_groups == info.n_layers * N_KINDS,
                 "group table mismatch for model {name}"
             );
-            anyhow::ensure!(
+            crate::ensure!(
                 info.group_names.len() == info.n_groups,
                 "group names mismatch for model {name}"
             );
@@ -157,12 +218,12 @@ impl Manifest {
                 inputs: a.get("inputs")?.as_str_vec()?,
                 outputs: a.get("outputs")?.as_str_vec()?,
             };
-            anyhow::ensure!(
+            crate::ensure!(
                 models.contains_key(&info.model),
                 "artifact {key} references unknown model {}",
                 info.model
             );
-            anyhow::ensure!(info.file.exists(), "artifact file missing: {:?}", info.file);
+            crate::ensure!(info.file.exists(), "artifact file missing: {:?}", info.file);
             artifacts.insert(key.clone(), info);
         }
 

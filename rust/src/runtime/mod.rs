@@ -1,127 +1,126 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: the pluggable [`Backend`] trait and its two
+//! implementations.
 //!
-//! This is the bridge between L3 (this crate) and the compiled L2/L1
-//! graphs: a thin, typed wrapper over the `xla` crate's PJRT CPU client.
+//! The coordinator ([`crate::coordinator::Trainer`]) is backend-agnostic:
+//! it owns dataset synthesis, schedules, the scale controller and the
+//! minibatch loop, and delegates every numeric step to a [`Backend`]:
 //!
-//! * [`Engine`] — one PJRT client per process (creation is expensive).
-//! * [`Executable`] — a compiled artifact + its manifest metadata; `run`
-//!   takes inputs in manifest order and returns the flattened output
-//!   tuple (the L2 graphs are lowered with `return_tuple=True`).
-//! * [`manifest`] — the typed `manifest.json` view.
-//! * [`literal_util`] — host tensor ↔ literal conversion.
+//! * [`NativeBackend`] (`native`, the default) — the pure-Rust golden
+//!   model promoted to a first-class training engine. Full maxout
+//!   forward/backward with every per-signal quantization hook, momentum
+//!   updates, overflow statistics, float16 simulation and host-side
+//!   dropout, running on the blocked/parallel matmul kernels. Needs no
+//!   artifacts, no Python, no external crates.
+//! * `PjrtBackend` (`pjrt`, behind the `pjrt` cargo feature) — loads
+//!   AOT artifacts (HLO text) and executes them on the `xla` crate's
+//!   PJRT CPU client. Model state lives device-side as literals; each
+//!   step's outputs feed the next step's inputs without host round-trips.
 //!
-//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! Both backends initialize from the same [`manifest::ModelInfo`] specs
+//! (manifest-loaded or [`manifest::ModelInfo::builtin`]), quantize initial
+//! parameters onto the same storage grids, and report the same
+//! `[n_groups, 3]` overflow matrix to the scale controller — so sweep
+//! results are comparable across backends (DESIGN.md §Backends,
+//! EXPERIMENTS.md §Experiment index).
 
-pub mod literal_util;
 pub mod manifest;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
+pub mod literal_util;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo, ParamSpec};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, Executable, PjrtBackend};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::rc::Rc;
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::coordinator::ScaleController;
+use crate::tensor::{Pcg32, Tensor};
 
-use anyhow::Context;
-use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
-
-/// Process-wide PJRT client wrapper with a compile cache: sweeps run tens
-/// of experiments over the same handful of artifacts, and XLA compilation
-/// costs seconds per artifact.
-pub struct Engine {
-    client: PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+/// Per-step hyperparameters the trainer hands a backend (the schedules
+/// live in the trainer; backends only see the step's resolved values,
+/// plus `t` for dropout-mask seeding).
+#[derive(Clone, Copy, Debug)]
+pub struct StepParams {
+    pub lr: f32,
+    pub momentum: f32,
+    pub max_norm: f32,
+    /// Input-layer dropout rate (0 = off).
+    pub dropout_input: f32,
+    /// Hidden-layer dropout rate (0 = off).
+    pub dropout_hidden: f32,
+    /// Step index within the run (dropout seeding + diagnostics).
+    pub t: usize,
 }
 
-impl Engine {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> crate::Result<Engine> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: RefCell::new(HashMap::new()) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one artifact (uncached).
-    pub fn load(&self, info: &ArtifactInfo) -> crate::Result<Executable> {
-        let proto = HloModuleProto::from_text_file(
-            info.file.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {}", info.key))?;
-        Ok(Executable { exe, info: info.clone() })
-    }
-
-    /// Load + compile with memoization on the artifact key.
-    pub fn load_cached(&self, info: &ArtifactInfo) -> crate::Result<Rc<Executable>> {
-        if let Some(exe) = self.cache.borrow().get(&info.key) {
-            return Ok(exe.clone());
-        }
-        let exe = Rc::new(self.load(info)?);
-        self.cache.borrow_mut().insert(info.key.clone(), exe.clone());
-        Ok(exe)
-    }
+/// One train step's observable outputs.
+#[derive(Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    /// `[n_groups, 3]` overflow matrix (n_over, n_half, n_total columns).
+    pub overflow: Tensor,
 }
 
-/// A compiled artifact, executable with manifest-ordered inputs.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    info: ArtifactInfo,
+/// A training execution engine. One backend instance serves many runs
+/// sequentially (sweeps reuse compile caches across runs); `begin_run`
+/// resets the per-run state.
+pub trait Backend {
+    /// Short identifier ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Can this backend run `model` at all? ([`NativeBackend`] only runs
+    /// the maxout MLPs; the conv nets need compiled artifacts.)
+    fn supports_model(&self, model: &str) -> bool;
+
+    /// Resolve model metadata and prepare executables for this config.
+    /// Must be called before any other stateful method.
+    fn begin_run(&mut self, cfg: &ExperimentConfig) -> crate::Result<ModelInfo>;
+
+    /// (Re)initialize parameters and velocities from the model's init
+    /// specs, quantized onto each group's storage grid under `ctrl`.
+    fn init_state(&mut self, ctrl: &ScaleController, rng: &mut Pcg32) -> crate::Result<()>;
+
+    /// One SGD step on minibatch `(x, y)`; `x` arrives in dataset layout
+    /// `[batch, ...example_shape]` and is reinterpreted per the model's
+    /// input shape. Mutates the backend-held state.
+    fn train_step(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        hp: &StepParams,
+    ) -> crate::Result<StepOut>;
+
+    /// Number of misclassified examples among the first `n_real` of the
+    /// eval batch `(x, y)` (the tail may be wrap-padding).
+    fn eval_errors(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        n_real: usize,
+    ) -> crate::Result<usize>;
+
+    /// Current parameters as host tensors in manifest order (testing and
+    /// inspection; the PJRT backend fetches from the device).
+    fn params_host(&self) -> crate::Result<Vec<Tensor>>;
 }
 
-impl Executable {
-    pub fn info(&self) -> &ArtifactInfo {
-        &self.info
-    }
-
-    /// Execute with inputs in manifest order; returns the output tuple
-    /// elements in manifest order. Accepts owned or borrowed literals, so
-    /// the trainer can feed the previous step's outputs back without
-    /// host-side copies.
-    pub fn run<L: std::borrow::Borrow<Literal>>(
-        &self,
-        inputs: &[L],
-    ) -> crate::Result<Vec<Literal>> {
-        anyhow::ensure!(
-            inputs.len() == self.info.inputs.len(),
-            "artifact {} expects {} inputs, got {} (order: {:?})",
-            self.info.key,
-            self.info.inputs.len(),
-            inputs.len(),
-            self.info.inputs
-        );
-        let result = self
-            .exe
-            .execute::<L>(inputs)
-            .with_context(|| format!("executing {}", self.info.key))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching outputs")?
-            .to_tuple()
-            .context("untupling outputs")?;
-        anyhow::ensure!(
-            tuple.len() == self.info.outputs.len(),
-            "artifact {} returned {} outputs, manifest says {}",
-            self.info.key,
-            tuple.len(),
-            self.info.outputs.len()
-        );
-        Ok(tuple)
-    }
-
-    /// Index of a named output.
-    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
-        self.info
-            .outputs
-            .iter()
-            .position(|n| n == name)
-            .with_context(|| format!("output '{name}' not in {}", self.info.key))
+/// Construct the backend a config asks for. The PJRT backend is only
+/// available when the crate is built with `--features pjrt`.
+pub fn create_backend(kind: BackendKind) -> crate::Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::from_default_manifest()?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => crate::bail!(
+            "this build has no PJRT support — rebuild with `--features pjrt` \
+             (and provide the xla crate, see rust/Cargo.toml) or use the \
+             native backend"
+        ),
     }
 }

@@ -1,0 +1,242 @@
+//! Native backend: the pure-Rust training engine (default).
+//!
+//! Promotes the golden model (`crate::golden`) from test-only
+//! cross-validator to a first-class [`Backend`]: the same maxout
+//! forward/backward, per-signal quantization hooks, momentum updates and
+//! overflow statistics as the compiled artifacts, driven by the same
+//! `Trainer` loop and scale controller — but with zero external
+//! dependencies, no AOT artifacts and no Python anywhere. Model state
+//! lives as host [`Tensor`]s; the hot contractions run on the
+//! blocked/parallel kernels in [`crate::tensor::ops`].
+//!
+//! Differences from the compiled path (documented, not hidden):
+//!
+//! * Dropout uses standard host-side inverted dropout seeded from the
+//!   experiment seed and step index ([`golden::Dropout`]); the compiled
+//!   graphs use an in-graph hash PRNG. Both are deterministic per run;
+//!   masks differ bit-wise between backends.
+//! * Only the maxout MLPs (`pi_mlp`, `pi_mlp_wide`) are implemented —
+//!   the conv nets exist only as compiled graphs. `begin_run` rejects
+//!   them with a clear error; sweeps skip them via
+//!   [`Backend::supports_model`].
+//!
+//! With dropout off, one native step is verified to agree with
+//! [`golden::train_step`] exactly (`tests/native_backend.rs`), which is
+//! itself cross-validated against the compiled artifact under `pjrt`.
+
+use super::manifest::ModelInfo;
+use super::{Backend, StepOut, StepParams};
+use crate::arith::{Quantizer, RoundMode};
+use crate::config::{Arithmetic, ExperimentConfig};
+use crate::coordinator::ScaleController;
+use crate::error::Context;
+use crate::golden::{self, Dropout, MlpShape, Params, StepOptions};
+use crate::tensor::{ops, Pcg32, Tensor};
+
+/// Per-run state for the native backend.
+struct NativeRun {
+    model: ModelInfo,
+    shape: MlpShape,
+    /// Simulate float16 via binary16 round-trips at every hook.
+    half: bool,
+    /// Experiment seed (dropout masks derive from it + the step index).
+    seed: u64,
+    params: Params,
+    vels: Params,
+}
+
+/// The self-contained pure-Rust implementation of [`Backend`].
+#[derive(Default)]
+pub struct NativeBackend {
+    run: Option<NativeRun>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { run: None }
+    }
+
+    fn run_mut(&mut self) -> crate::Result<&mut NativeRun> {
+        self.run.as_mut().context("NativeBackend: begin_run was never called")
+    }
+
+    /// Reinterpret a dataset-layout batch `[n, ...example]` as the model's
+    /// flat input `[n, d_in]` (same bytes, e.g. 28×28×1 → 784).
+    fn flatten_input(x: &Tensor, d_in: usize) -> crate::Result<Tensor> {
+        let n = x.shape()[0];
+        crate::ensure!(
+            x.len() == n * d_in,
+            "input batch {:?} does not flatten to [{n}, {d_in}]",
+            x.shape()
+        );
+        Ok(x.clone().reshape(&[n, d_in]))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_model(&self, model: &str) -> bool {
+        ModelInfo::builtin(model).is_some()
+    }
+
+    fn begin_run(&mut self, cfg: &ExperimentConfig) -> crate::Result<ModelInfo> {
+        let model = ModelInfo::builtin(&cfg.model).with_context(|| {
+            format!(
+                "the native backend implements the maxout MLPs only; model '{}' \
+                 needs compiled artifacts (build with --features pjrt and use \
+                 the pjrt backend)",
+                cfg.model
+            )
+        })?;
+        let w0 = &model.params[0].shape;
+        crate::ensure!(w0.len() == 3, "unexpected builtin weight rank");
+        let shape = MlpShape {
+            d_in: w0[1],
+            units: w0[2],
+            k: w0[0],
+            n_classes: model.n_classes,
+        };
+        self.run = Some(NativeRun {
+            model: model.clone(),
+            shape,
+            half: matches!(cfg.arithmetic, Arithmetic::Half),
+            seed: cfg.train.seed,
+            params: Vec::new(),
+            vels: Vec::new(),
+        });
+        Ok(model)
+    }
+
+    fn init_state(&mut self, ctrl: &ScaleController, rng: &mut Pcg32) -> crate::Result<()> {
+        let run = self.run_mut()?;
+        let mut params = Vec::with_capacity(run.model.params.len());
+        let mut vels = Vec::with_capacity(run.model.params.len());
+        for spec in &run.model.params {
+            let mut t = spec.init.realize(&spec.shape, rng);
+            // same init-time storage quantization as the PJRT path
+            Quantizer::from_format(ctrl.format(spec.group())).apply_slice(t.data_mut());
+            vels.push(Tensor::zeros(&spec.shape));
+            params.push(t);
+        }
+        run.params = params;
+        run.vels = vels;
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        hp: &StepParams,
+    ) -> crate::Result<StepOut> {
+        let run = self.run_mut()?;
+        let x = Self::flatten_input(x, run.shape.d_in)?;
+        let dropout = if hp.dropout_input > 0.0 || hp.dropout_hidden > 0.0 {
+            Some(Dropout {
+                input_rate: hp.dropout_input,
+                hidden_rate: hp.dropout_hidden,
+                // independent mask stream per (experiment seed, step)
+                rng: Pcg32::seeded(run.seed ^ 0xD80F_0A57).fork(hp.t as u64),
+            })
+        } else {
+            None
+        };
+        let out = golden::train_step_opt(
+            run.shape,
+            &mut run.params,
+            &mut run.vels,
+            &x,
+            y,
+            hp.lr,
+            hp.momentum,
+            hp.max_norm,
+            ctrl,
+            StepOptions { mode: RoundMode::HalfAway, half: run.half, dropout },
+        );
+        Ok(StepOut { loss: out.loss, overflow: out.overflow })
+    }
+
+    fn eval_errors(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        n_real: usize,
+    ) -> crate::Result<usize> {
+        let run = self.run_mut()?;
+        let x = Self::flatten_input(x, run.shape.d_in)?;
+        let logits = golden::eval_logits(
+            run.shape,
+            &run.params,
+            &x,
+            ctrl,
+            RoundMode::HalfAway,
+            run.half,
+        );
+        let preds = ops::argmax_rows(&logits);
+        let truth = ops::argmax_rows(y);
+        crate::ensure!(n_real <= preds.len(), "n_real {n_real} > batch {}", preds.len());
+        Ok(preds
+            .iter()
+            .zip(&truth)
+            .take(n_real)
+            .filter(|(p, t)| p != t)
+            .count())
+    }
+
+    fn params_host(&self) -> crate::Result<Vec<Tensor>> {
+        let run = self.run.as_ref().context("NativeBackend: begin_run was never called")?;
+        Ok(run.params.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FixedFormat;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::default()
+    }
+
+    #[test]
+    fn begin_run_rejects_conv_models() {
+        let mut be = NativeBackend::new();
+        let mut c = cfg();
+        c.model = "conv".into();
+        c.data.dataset = "digits".into();
+        let err = be.begin_run(&c).unwrap_err();
+        assert!(format!("{err:#}").contains("native backend"));
+        assert!(!be.supports_model("conv32"));
+        assert!(be.supports_model("pi_mlp") && be.supports_model("pi_mlp_wide"));
+    }
+
+    #[test]
+    fn init_quantizes_onto_storage_grid() {
+        let mut be = NativeBackend::new();
+        let model = be.begin_run(&cfg()).unwrap();
+        let up = FixedFormat::new(12, 0);
+        let ctrl = ScaleController::fixed(model.n_layers, FixedFormat::new(10, 3), up);
+        let mut rng = Pcg32::seeded(3);
+        be.init_state(&ctrl, &mut rng).unwrap();
+        for p in be.params_host().unwrap() {
+            for &v in p.data() {
+                let k = v / up.step();
+                assert!((k - k.round()).abs() < 1e-3, "off grid: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn methods_before_begin_run_fail_cleanly() {
+        let mut be = NativeBackend::new();
+        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut rng = Pcg32::seeded(1);
+        assert!(be.init_state(&ctrl, &mut rng).is_err());
+        assert!(be.params_host().is_err());
+    }
+}

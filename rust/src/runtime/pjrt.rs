@@ -1,0 +1,306 @@
+//! PJRT backend: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the bridge between L3 (this crate) and the compiled L2/L1
+//! graphs: a thin, typed wrapper over the `xla` crate's PJRT CPU client,
+//! plus the [`PjrtBackend`] adapter that plugs it into the generic
+//! [`Backend`](crate::runtime::Backend) trait. Only compiled when the
+//! `pjrt` cargo feature is on.
+//!
+//! * [`Engine`] — one PJRT client per process (creation is expensive).
+//! * [`Executable`] — a compiled artifact + its manifest metadata; `run`
+//!   takes inputs in manifest order and returns the flattened output
+//!   tuple (the L2 graphs are lowered with `return_tuple=True`).
+//! * [`PjrtBackend`] — per-run artifact selection + device-side model
+//!   state. Parameters/velocities live as PJRT literals: each step's
+//!   outputs are fed straight back as the next step's inputs, so model
+//!   state never makes a host round-trip on the training path
+//!   (EXPERIMENTS.md §Perf).
+//!
+//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
+
+use super::literal_util::{
+    literal_to_scalar, literal_to_tensor, scalar, slice_to_literal, tensor_to_literal,
+};
+use super::manifest::{ArtifactInfo, Manifest, ModelInfo};
+use super::{Backend, StepOut, StepParams};
+use crate::arith::Quantizer;
+use crate::config::ExperimentConfig;
+use crate::coordinator::ScaleController;
+use crate::error::Context;
+use crate::tensor::{Pcg32, Tensor};
+
+/// Process-wide PJRT client wrapper with a compile cache: sweeps run tens
+/// of experiments over the same handful of artifacts, and XLA compilation
+/// costs seconds per artifact.
+pub struct Engine {
+    client: PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> crate::Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact (uncached).
+    pub fn load(&self, info: &ArtifactInfo) -> crate::Result<Executable> {
+        let proto = HloModuleProto::from_text_file(
+            info.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", info.key))?;
+        Ok(Executable { exe, info: info.clone() })
+    }
+
+    /// Load + compile with memoization on the artifact key.
+    pub fn load_cached(&self, info: &ArtifactInfo) -> crate::Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(&info.key) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(self.load(info)?);
+        self.cache.borrow_mut().insert(info.key.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// A compiled artifact, executable with manifest-ordered inputs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    info: ArtifactInfo,
+}
+
+impl Executable {
+    pub fn info(&self) -> &ArtifactInfo {
+        &self.info
+    }
+
+    /// Execute with inputs in manifest order; returns the output tuple
+    /// elements in manifest order. Accepts owned or borrowed literals, so
+    /// the trainer can feed the previous step's outputs back without
+    /// host-side copies.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> crate::Result<Vec<Literal>> {
+        crate::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "artifact {} expects {} inputs, got {} (order: {:?})",
+            self.info.key,
+            self.info.inputs.len(),
+            inputs.len(),
+            self.info.inputs
+        );
+        let result = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.info.key))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching outputs")?
+            .to_tuple()
+            .context("untupling outputs")?;
+        crate::ensure!(
+            tuple.len() == self.info.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.info.key,
+            tuple.len(),
+            self.info.outputs.len()
+        );
+        Ok(tuple)
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> crate::Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("output '{name}' not in {}", self.info.key))
+    }
+}
+
+/// Per-run state for the PJRT backend.
+struct PjrtRun {
+    model: ModelInfo,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    params: Vec<Literal>,
+    vels: Vec<Literal>,
+}
+
+/// The compiled-artifact implementation of [`Backend`].
+pub struct PjrtBackend {
+    engine: Engine,
+    manifest: Manifest,
+    run: Option<PjrtRun>,
+}
+
+impl PjrtBackend {
+    /// Engine + manifest from [`Manifest::default_dir`].
+    pub fn from_default_manifest() -> crate::Result<PjrtBackend> {
+        Self::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn new(manifest: Manifest) -> crate::Result<PjrtBackend> {
+        Ok(PjrtBackend { engine: Engine::cpu()?, manifest, run: None })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run_mut(&mut self) -> crate::Result<&mut PjrtRun> {
+        self.run.as_mut().context("PjrtBackend: begin_run was never called")
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports_model(&self, model: &str) -> bool {
+        self.manifest.models.contains_key(model)
+    }
+
+    fn begin_run(&mut self, cfg: &ExperimentConfig) -> crate::Result<ModelInfo> {
+        let model = self.manifest.model(&cfg.model)?.clone();
+        let mode = cfg.arithmetic.mode();
+        let train_exe =
+            self.engine.load_cached(self.manifest.artifact(&cfg.model, mode, "train")?)?;
+        let eval_exe =
+            self.engine.load_cached(self.manifest.artifact(&cfg.model, mode, "eval")?)?;
+        self.run = Some(PjrtRun {
+            model: model.clone(),
+            train_exe,
+            eval_exe,
+            params: Vec::new(),
+            vels: Vec::new(),
+        });
+        Ok(model)
+    }
+
+    fn init_state(&mut self, ctrl: &ScaleController, rng: &mut Pcg32) -> crate::Result<()> {
+        let run = self.run_mut()?;
+        let mut params = Vec::with_capacity(run.model.params.len());
+        let mut vels = Vec::with_capacity(run.model.params.len());
+        for spec in &run.model.params {
+            let mut t = spec.init.realize(&spec.shape, rng);
+            // quantize onto the group's storage grid (the device does so
+            // on every update; doing it at init keeps step 0 consistent)
+            Quantizer::from_format(ctrl.format(spec.group())).apply_slice(t.data_mut());
+            params.push(tensor_to_literal(&t)?);
+            vels.push(tensor_to_literal(&Tensor::zeros(&spec.shape))?);
+        }
+        run.params = params;
+        run.vels = vels;
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        hp: &StepParams,
+    ) -> crate::Result<StepOut> {
+        let run = self.run_mut()?;
+        let model = &run.model;
+        let n_p = model.params.len();
+
+        // Per-step inputs (x, y, scalars, scale vectors) are freshly
+        // built; parameters/velocities are borrowed from the previous
+        // step's outputs — no host round-trip for model state.
+        // x arrives in dataset layout; the artifact wants [batch, ...model
+        // input shape] — same bytes (e.g. 28×28×1 → 784 for pi_mlp).
+        let mut x_shape = vec![model.train_batch];
+        x_shape.extend_from_slice(&model.input_shape);
+        let mut rates = vec![hp.dropout_hidden; model.n_layers];
+        rates[0] = hp.dropout_input;
+        let fresh: Vec<Literal> = vec![
+            slice_to_literal(x.data(), &x_shape)?,
+            tensor_to_literal(y)?,
+            scalar(hp.lr),
+            scalar(hp.momentum),
+            scalar(hp.max_norm),
+            scalar((hp.t as u32 % (1 << 24)) as f32), // in-graph dropout seed
+            slice_to_literal(&rates, &[model.n_layers])?,
+            slice_to_literal(&ctrl.steps_vec(), &[model.n_groups])?,
+            slice_to_literal(&ctrl.maxvs_vec(), &[model.n_groups])?,
+        ];
+        let inputs: Vec<&Literal> =
+            run.params.iter().chain(run.vels.iter()).chain(fresh.iter()).collect();
+
+        let mut outputs = run.train_exe.run(&inputs).context("train step")?;
+
+        let loss = literal_to_scalar(&outputs[2 * n_p])?;
+        let overflow = literal_to_tensor(&outputs[2 * n_p + 1])?;
+        // feed the updated state straight into the next step
+        run.vels = outputs.split_off(n_p).into_iter().take(n_p).collect();
+        run.params = outputs;
+        Ok(StepOut { loss, overflow })
+    }
+
+    fn eval_errors(
+        &mut self,
+        ctrl: &ScaleController,
+        x: &Tensor,
+        y: &Tensor,
+        n_real: usize,
+    ) -> crate::Result<usize> {
+        let run = self.run_mut()?;
+        let model = &run.model;
+        // the compiled eval graph scores the whole fixed-size batch; the
+        // trainer rounds the test set up to whole batches so wrap-padding
+        // never reaches it
+        crate::ensure!(
+            n_real == model.eval_batch,
+            "pjrt eval expects batch-aligned test sets ({n_real} != {})",
+            model.eval_batch
+        );
+        let mut x_shape = vec![model.eval_batch];
+        x_shape.extend_from_slice(&model.input_shape);
+        let fresh: Vec<Literal> = vec![
+            slice_to_literal(x.data(), &x_shape)?,
+            tensor_to_literal(y)?,
+            slice_to_literal(&ctrl.steps_vec(), &[model.n_groups])?,
+            slice_to_literal(&ctrl.maxvs_vec(), &[model.n_groups])?,
+        ];
+        let inputs: Vec<&Literal> = run.params.iter().chain(fresh.iter()).collect();
+        let out = run.eval_exe.run(&inputs).context("eval step")?;
+        Ok(literal_to_scalar(&out[0])?.round() as usize)
+    }
+
+    fn params_host(&self) -> crate::Result<Vec<Tensor>> {
+        let run = self.run.as_ref().context("PjrtBackend: begin_run was never called")?;
+        let mut out = Vec::with_capacity(run.params.len());
+        for (lit, spec) in run.params.iter().zip(&run.model.params) {
+            let t = literal_to_tensor(lit)?;
+            crate::ensure!(t.shape() == &spec.shape[..], "param {} shape drift", spec.name);
+            out.push(t);
+        }
+        Ok(out)
+    }
+}

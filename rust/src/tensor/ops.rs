@@ -3,31 +3,265 @@
 //! Shapes follow the L2 model exactly (python/compile/model.py):
 //! activations `[B, I]`, maxout weights `[k, I, U]`, biases `[k, U]`,
 //! softmax weights `[I, C]`.
+//!
+//! The three matmul flavours (`NN`, `NT`, `TN`) run a blocked serial
+//! kernel for small problems and split output rows across OS threads
+//! (`std::thread::scope` — no external thread-pool crate offline) once a
+//! problem crosses [`par_matmul_threshold`] FLOPs. Each output element is
+//! written by exactly one thread and every per-element accumulation runs
+//! in the same k-order as the seed's naive loops, so results are
+//! bit-identical at any thread count (see the determinism tests below,
+//! and EXPERIMENTS.md §Perf for the measured speedups).
+//!
+//! Slice-level entry points (`matmul_sl` & co.) exist so the golden model
+//! can contract per-filter sub-blocks of the `[k, I, U]` maxout weight
+//! tensors without materializing copies.
+
+use std::sync::OnceLock;
 
 use super::Tensor;
 
-/// `c[B,U] = a[B,I] @ b[I,U]` (row-major, cache-friendly ikj loop order).
+/// FLOP count (2·m·k·n) above which a matmul goes parallel. Override with
+/// `LPDNN_PAR_MATMUL` (a FLOP count; `0` forces everything parallel,
+/// a huge value forces serial).
+pub fn par_matmul_threshold() -> usize {
+    static THRESHOLD: OnceLock<usize> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("LPDNN_PAR_MATMUL")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1 << 20)
+    })
+}
+
+/// Worker-thread cap: `LPDNN_THREADS` or the machine's parallelism.
+pub fn max_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("LPDNN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Threads to use for a matmul of `flops` total work over `rows` output
+/// rows (1 = stay serial).
+fn plan_threads(flops: usize, rows: usize) -> usize {
+    if flops < par_matmul_threshold() {
+        1
+    } else {
+        max_threads().min(rows).max(1)
+    }
+}
+
+/// K-dimension block size for the serial kernels: one `[KC, n]` panel of
+/// `b` stays resident in L1/L2 while all rows stream over it.
+const KC: usize = 128;
+
+/// Serial blocked kernel: `out[m,n] += a[m,kd] @ b[kd,n]` where
+/// `m = out.len() / n`. Per-row accumulation order is ascending k —
+/// identical to the naive ikj loops, so blocking never changes results.
+fn mm_nn_serial(a: &[f32], b: &[f32], out: &mut [f32], kd: usize, n: usize) {
+    if n == 0 || kd == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    let mut kb = 0;
+    while kb < kd {
+        let kend = (kb + KC).min(kd);
+        for i in 0..m {
+            let arow = &a[i * kd..(i + 1) * kd];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// Serial kernel: `out[m,ib] = a[m,ua] @ b[ib,ua]^T` (dot products), with
+/// `m = out.len() / ib`.
+fn mm_nt_serial(a: &[f32], b: &[f32], out: &mut [f32], ua: usize, ib: usize) {
+    if ib == 0 {
+        return;
+    }
+    let m = out.len() / ib;
+    for i in 0..m {
+        let arow = &a[i * ua..(i + 1) * ua];
+        let orow = &mut out[i * ib..(i + 1) * ib];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * ua..(j + 1) * ua];
+            let mut acc = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Serial kernel for a row-slab of the TN product: accumulates
+/// `out[ii,u] += a[nrow, i0+ii] * b[nrow, u]` over all `ba` batch rows,
+/// for `ii in 0..out.len()/ub`. Batch accumulation is ascending — same
+/// order as the seed's loops.
+fn mm_tn_serial(a: &[f32], b: &[f32], out: &mut [f32], ba: usize, ia: usize, ub: usize, i0: usize) {
+    if ub == 0 {
+        return;
+    }
+    let icount = out.len() / ub;
+    for nrow in 0..ba {
+        let arow = &a[nrow * ia..(nrow + 1) * ia];
+        let brow = &b[nrow * ub..(nrow + 1) * ub];
+        for ii in 0..icount {
+            let av = arow[i0 + ii];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[ii * ub..(ii + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `[m,n] = a[m,kd] @ b[kd,n]` over flat slices, with an explicit thread
+/// count (the public wrappers pick it via [`par_matmul_threshold`]).
+pub fn matmul_sl_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * kd, "matmul a size");
+    assert_eq!(b.len(), kd * n, "matmul b size");
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || kd == 0 {
+        return out;
+    }
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        mm_nn_serial(a, b, &mut out, kd, n);
+        return out;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / n;
+            let asub = &a[i0 * kd..(i0 + rows) * kd];
+            s.spawn(move || mm_nn_serial(asub, b, ochunk, kd, n));
+        }
+    });
+    out
+}
+
+/// `[m,kd] @ [kd,n]` over flat slices, auto-threaded.
+pub fn matmul_sl(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) -> Vec<f32> {
+    matmul_sl_threads(a, b, m, kd, n, plan_threads(2 * m * kd * n, m))
+}
+
+/// `[m,ib] = a[m,ua] @ b[ib,ua]^T` over flat slices with explicit threads.
+pub fn matmul_nt_sl_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * ua, "matmul_nt a size");
+    assert_eq!(b.len(), ib * ua, "matmul_nt b size");
+    let mut out = vec![0.0f32; m * ib];
+    if m == 0 || ib == 0 {
+        return out;
+    }
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        mm_nt_serial(a, b, &mut out, ua, ib);
+        return out;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * ib).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / ib;
+            let asub = &a[i0 * ua..(i0 + rows) * ua];
+            s.spawn(move || mm_nt_serial(asub, b, ochunk, ua, ib));
+        }
+    });
+    out
+}
+
+/// `[m,ua] @ [ib,ua]^T` over flat slices, auto-threaded.
+pub fn matmul_nt_sl(a: &[f32], b: &[f32], m: usize, ua: usize, ib: usize) -> Vec<f32> {
+    matmul_nt_sl_threads(a, b, m, ua, ib, plan_threads(2 * m * ua * ib, m))
+}
+
+/// `[ia,ub] = a[ba,ia]^T @ b[ba,ub]` over flat slices with explicit
+/// threads (split over the `ia` output rows).
+pub fn matmul_tn_sl_threads(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), ba * ia, "matmul_tn a size");
+    assert_eq!(b.len(), ba * ub, "matmul_tn b size");
+    let mut out = vec![0.0f32; ia * ub];
+    if ia == 0 || ub == 0 || ba == 0 {
+        return out;
+    }
+    let nt = threads.min(ia).max(1);
+    if nt <= 1 {
+        mm_tn_serial(a, b, &mut out, ba, ia, ub, 0);
+        return out;
+    }
+    let rows_per = ia.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in out.chunks_mut(rows_per * ub).enumerate() {
+            let i0 = ci * rows_per;
+            s.spawn(move || mm_tn_serial(a, b, ochunk, ba, ia, ub, i0));
+        }
+    });
+    out
+}
+
+/// `[ba,ia]^T @ [ba,ub]` over flat slices, auto-threaded.
+pub fn matmul_tn_sl(a: &[f32], b: &[f32], ba: usize, ia: usize, ub: usize) -> Vec<f32> {
+    matmul_tn_sl_threads(a, b, ba, ia, ub, plan_threads(2 * ba * ia * ub, ia))
+}
+
+/// `c[B,U] = a[B,I] @ b[I,U]` (blocked, parallel above the threshold).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (ba, ia) = (a.shape()[0], a.shape()[1]);
     let (ib, ub) = (b.shape()[0], b.shape()[1]);
     assert_eq!(ia, ib, "matmul inner dims: {:?} @ {:?}", a.shape(), b.shape());
-    let mut out = vec![0.0f32; ba * ub];
-    let ad = a.data();
-    let bd = b.data();
-    for i in 0..ba {
-        for kk in 0..ia {
-            let aik = ad[i * ia + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &bd[kk * ub..(kk + 1) * ub];
-            let orow = &mut out[i * ub..(i + 1) * ub];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += aik * bv;
-            }
-        }
-    }
-    Tensor::from_vec(&[ba, ub], out)
+    Tensor::from_vec(&[ba, ub], matmul_sl(a.data(), b.data(), ba, ia, ub))
+}
+
+/// [`matmul`] with an explicit thread count (bench/test hook).
+pub fn par_matmul(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (ba, ia) = (a.shape()[0], a.shape()[1]);
+    let (ib, ub) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(ia, ib, "par_matmul inner dims");
+    Tensor::from_vec(&[ba, ub], matmul_sl_threads(a.data(), b.data(), ba, ia, ub, threads))
 }
 
 /// `c[B,I] = a[B,U] @ b[I,U]^T` (backprop through a dense layer).
@@ -35,21 +269,7 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (ba, ua) = (a.shape()[0], a.shape()[1]);
     let (ib, ub) = (b.shape()[0], b.shape()[1]);
     assert_eq!(ua, ub, "matmul_nt inner dims");
-    let mut out = vec![0.0f32; ba * ib];
-    let ad = a.data();
-    let bd = b.data();
-    for i in 0..ba {
-        let arow = &ad[i * ua..(i + 1) * ua];
-        for j in 0..ib {
-            let brow = &bd[j * ub..(j + 1) * ub];
-            let mut acc = 0.0f32;
-            for (&x, &y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            out[i * ib + j] = acc;
-        }
-    }
-    Tensor::from_vec(&[ba, ib], out)
+    Tensor::from_vec(&[ba, ib], matmul_nt_sl(a.data(), b.data(), ba, ua, ib))
 }
 
 /// `c[I,U] = a[B,I]^T @ b[B,U]` (weight gradient of a dense layer).
@@ -57,23 +277,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (ba, ia) = (a.shape()[0], a.shape()[1]);
     let (bb, ub) = (b.shape()[0], b.shape()[1]);
     assert_eq!(ba, bb, "matmul_tn batch dims");
-    let mut out = vec![0.0f32; ia * ub];
-    let ad = a.data();
-    let bd = b.data();
-    for n in 0..ba {
-        let arow = &ad[n * ia..(n + 1) * ia];
-        let brow = &bd[n * ub..(n + 1) * ub];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * ub..(i + 1) * ub];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    Tensor::from_vec(&[ia, ub], out)
+    Tensor::from_vec(&[ia, ub], matmul_tn_sl(a.data(), b.data(), ba, ia, ub))
 }
 
 /// Row-wise log-softmax of a `[B, C]` tensor (numerically stabilized).
@@ -108,13 +312,18 @@ pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
 /// Sum over axis 0 of a `[B, C]` tensor → `[C]`.
 pub fn sum_rows(x: &Tensor) -> Tensor {
     let (b, c) = (x.shape()[0], x.shape()[1]);
+    Tensor::from_vec(&[c], sum_rows_sl(x.data(), b, c))
+}
+
+/// Sum over axis 0 of a flat `[b, c]` slice → `[c]`.
+pub fn sum_rows_sl(x: &[f32], b: usize, c: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; c];
     for n in 0..b {
         for j in 0..c {
-            out[j] += x.at2(n, j);
+            out[j] += x[n * c + j];
         }
     }
-    Tensor::from_vec(&[c], out)
+    out
 }
 
 /// One-hot encode labels into `[B, n_classes]`.
@@ -217,6 +426,44 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matmul_is_bit_identical_to_serial() {
+        // Odd, non-divisible shapes exercise the chunking edge cases; the
+        // blocked kernels keep per-element accumulation in k-order, so
+        // serial and any thread count must agree EXACTLY.
+        let mut g = Gen::new(0xBEEF);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 150, 5), (97, 300, 33), (64, 784, 128)] {
+            let a = rand_tensor(&mut g, &[m, k]);
+            let b = rand_tensor(&mut g, &[k, n]);
+            let serial = par_matmul(&a, &b, 1);
+            for threads in [2usize, 3, 4, 8] {
+                let par = par_matmul(&a, &b, threads);
+                assert_eq!(serial.data(), par.data(), "m={m} k={k} n={n} t={threads}");
+            }
+            let slow = naive_matmul(&a, &b);
+            for (x, y) in serial.data().iter().zip(slow.data()) {
+                assert!((x - y).abs() < 1e-3 * k as f32, "vs naive: {x} {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_nt_tn_match_serial() {
+        let mut g = Gen::new(0xCAFE);
+        let (b, i, u) = (53usize, 77usize, 31usize);
+        let act = rand_tensor(&mut g, &[b, u]);
+        let w = rand_tensor(&mut g, &[i, u]);
+        let serial = matmul_nt_sl_threads(act.data(), w.data(), b, u, i, 1);
+        let par = matmul_nt_sl_threads(act.data(), w.data(), b, u, i, 4);
+        assert_eq!(serial, par);
+
+        let xs = rand_tensor(&mut g, &[b, i]);
+        let ys = rand_tensor(&mut g, &[b, u]);
+        let serial = matmul_tn_sl_threads(xs.data(), ys.data(), b, i, u, 1);
+        let par = matmul_tn_sl_threads(xs.data(), ys.data(), b, i, u, 4);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
     fn matmul_nt_tn_match_transpose_identities() {
         forall("nt/tn", |g: &mut Gen| {
             let (b, i, u) =
@@ -250,6 +497,22 @@ mod tests {
                 assert!((x - y).abs() < 1e-4);
             }
         });
+    }
+
+    #[test]
+    fn slice_matmul_views_match_tensor_path() {
+        // The golden model contracts w[k,I,U] sub-blocks without copying;
+        // the slice API on a sub-range must equal the copied-tensor path.
+        let mut g = Gen::new(7);
+        let (k, i, u, b) = (3usize, 11usize, 6usize, 9usize);
+        let w = rand_tensor(&mut g, &[k, i, u]);
+        let x = rand_tensor(&mut g, &[b, i]);
+        for j in 0..k {
+            let wj = Tensor::from_vec(&[i, u], w.data()[j * i * u..(j + 1) * i * u].to_vec());
+            let want = matmul(&x, &wj);
+            let got = matmul_sl(x.data(), &w.data()[j * i * u..(j + 1) * i * u], b, i, u);
+            assert_eq!(want.data(), &got[..]);
+        }
     }
 
     #[test]

@@ -1,26 +1,14 @@
-//! Integration tests over the full AOT bridge: rust coordinator → PJRT →
-//! compiled pallas/jax artifacts.
+//! Integration tests over the full training stack, backend-agnostic.
 //!
-//! These need `make artifacts`; they skip (with a note) when artifacts are
-//! missing so `cargo test` stays green on a fresh checkout.
+//! These run on the self-contained native backend by default — no
+//! artifacts, no Python, no external crates — so `cargo test` exercises
+//! real end-to-end training on a fresh checkout. With `--features pjrt`
+//! (plus `make artifacts`) the same suite also cross-validates the
+//! compiled path (see `pjrt_bridge` below and tests/smoke_hlo.rs).
 
-use lpdnn::arith::FixedFormat;
 use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
-use lpdnn::coordinator::{ScaleController, Trainer};
-use lpdnn::runtime::{Engine, Manifest};
-
-/// Per-test engine + manifest (PjRtClient is not Sync, so no shared
-/// static). Returns None (test skips) when artifacts are missing.
-fn setup() -> Option<(Engine, Manifest)> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping integration test: run `make artifacts` first");
-        return None;
-    }
-    let manifest = Manifest::load(dir).expect("manifest loads");
-    let engine = Engine::cpu().expect("PJRT cpu client");
-    Some((engine, manifest))
-}
+use lpdnn::coordinator::Trainer;
+use lpdnn::runtime::{Backend, NativeBackend};
 
 fn cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
     ExperimentConfig {
@@ -37,16 +25,19 @@ fn cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
             ..Default::default()
         },
         data: DataConfig { dataset: "digits".into(), n_train: 512, n_test: 256 },
+        ..Default::default()
     }
+}
+
+fn run(c: ExperimentConfig) -> lpdnn::coordinator::RunResult {
+    let mut backend = NativeBackend::new();
+    Trainer::new(&mut backend, c).run().unwrap()
 }
 
 #[test]
 fn float32_training_learns() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
-    let r = Trainer::new(engine, manifest, cfg("it-f32", Arithmetic::Float32, 40))
-        .run()
-        .unwrap();
+    let r = run(cfg("it-f32", Arithmetic::Float32, 40));
+    assert_eq!(r.backend_name, "native");
     assert!(r.test_error < 0.35, "error {:.3}", r.test_error);
     assert!(r.train_loss < 0.8, "loss {}", r.train_loss);
     // loss curve is recorded for every step
@@ -58,8 +49,6 @@ fn float32_training_learns() {
 
 #[test]
 fn dynamic_fixed_point_trains_and_moves_scales() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
     // Without sensible initial scales the gradient groups quantize to
     // zero (the paper's own observation — section 9.3 finds initial
     // scaling factors by training at higher precision first), so the
@@ -72,7 +61,7 @@ fn dynamic_fixed_point_trains_and_moves_scales() {
         init_int_bits: 3,
         warmup_steps: 20,
     };
-    let r = Trainer::new(engine, manifest, cfg("it-dyn", arith, 40)).run().unwrap();
+    let r = run(cfg("it-dyn", arith, 40));
     assert!(r.test_error < 0.4, "error {:.3}", r.test_error);
     // the controller must have moved at least some scales away from init
     assert!(
@@ -84,8 +73,6 @@ fn dynamic_fixed_point_trains_and_moves_scales() {
 
 #[test]
 fn warmup_transfers_scales() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
     let arith = Arithmetic::Dynamic {
         bits_comp: 10,
         bits_up: 12,
@@ -94,7 +81,7 @@ fn warmup_transfers_scales() {
         init_int_bits: 3,
         warmup_steps: 24,
     };
-    let r = Trainer::new(engine, manifest, cfg("it-warm", arith, 10)).run().unwrap();
+    let r = run(cfg("it-warm", arith, 10));
     // with no main-phase ticks, any deviation from init came from warmup
     assert!(
         r.final_int_bits.iter().any(|&b| b != 3),
@@ -105,14 +92,8 @@ fn warmup_transfers_scales() {
 
 #[test]
 fn half_precision_close_to_float32() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
-    let f32r = Trainer::new(engine, manifest, cfg("it-f32b", Arithmetic::Float32, 30))
-        .run()
-        .unwrap();
-    let halfr = Trainer::new(engine, manifest, cfg("it-half", Arithmetic::Half, 30))
-        .run()
-        .unwrap();
+    let f32r = run(cfg("it-f32b", Arithmetic::Float32, 30));
+    let halfr = run(cfg("it-half", Arithmetic::Half, 30));
     // Paper Table 3: half ≈ float32. Allow generous slack at tiny budget.
     assert!(
         halfr.test_error <= f32r.test_error + 0.1,
@@ -124,13 +105,9 @@ fn half_precision_close_to_float32() {
 
 #[test]
 fn severe_quantization_degrades() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
-    let good = Trainer::new(engine, manifest, cfg("it-base", Arithmetic::Float32, 30))
-        .run()
-        .unwrap();
+    let good = run(cfg("it-base", Arithmetic::Float32, 30));
     let bad_arith = Arithmetic::Fixed { bits_comp: 6, bits_up: 6, int_bits: 5 };
-    let bad = Trainer::new(engine, manifest, cfg("it-bad", bad_arith, 30)).run().unwrap();
+    let bad = run(cfg("it-bad", bad_arith, 30));
     // the paper's cliff: 6-bit fixed point must be clearly worse
     assert!(
         bad.test_error > good.test_error + 0.1,
@@ -142,142 +119,187 @@ fn severe_quantization_degrades() {
 
 #[test]
 fn deterministic_given_seed() {
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
-    let a = Trainer::new(engine, manifest, cfg("it-det", Arithmetic::Float32, 10))
-        .run()
-        .unwrap();
-    let b = Trainer::new(engine, manifest, cfg("it-det", Arithmetic::Float32, 10))
-        .run()
-        .unwrap();
+    let a = run(cfg("it-det", Arithmetic::Float32, 10));
+    let b = run(cfg("it-det", Arithmetic::Float32, 10));
     assert_eq!(a.test_error, b.test_error);
     assert_eq!(a.metrics.losses, b.metrics.losses);
 }
 
-/// The golden pure-rust train step must agree with the compiled artifact.
 #[test]
-fn golden_model_matches_compiled_step() {
-    use lpdnn::golden::{self, MlpShape};
-    use lpdnn::runtime::literal_util::*;
-    use lpdnn::tensor::{ops, Pcg32, Tensor};
-    use xla::Literal;
+fn dropout_training_stays_finite_and_deterministic() {
+    let mut c = cfg("it-drop", Arithmetic::Float32, 20);
+    c.train.dropout_input = 0.2;
+    c.train.dropout_hidden = 0.5;
+    let a = run(c.clone());
+    let b = run(c);
+    assert!(a.metrics.losses.iter().all(|&(_, l)| l.is_finite()));
+    assert_eq!(a.metrics.losses, b.metrics.losses, "dropout must be seeded");
+}
 
-    let Some((engine, manifest)) = setup() else { return };
-    let (engine, manifest) = (&engine, &manifest);
-    let model = manifest.model("pi_mlp").unwrap();
-    let exe = engine.load(manifest.artifact("pi_mlp", "fixed", "train").unwrap()).unwrap();
+#[test]
+fn one_backend_serves_many_runs() {
+    // sweep-style reuse: one backend object across sequential runs
+    let mut backend = NativeBackend::new();
+    let a = Trainer::new(&mut backend, cfg("it-multi-a", Arithmetic::Float32, 8))
+        .run()
+        .unwrap();
+    let b = Trainer::new(
+        &mut backend,
+        cfg("it-multi-b", Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 }, 8),
+    )
+    .run()
+    .unwrap();
+    assert!(a.test_error.is_finite() && b.test_error.is_finite());
+    assert!(backend.supports_model("pi_mlp"));
+}
 
-    let shape = MlpShape::pi_mlp(128, 4);
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+/// Cross-validation of the compiled PJRT path against the golden model —
+/// only meaningful (and only compiled) with `--features pjrt`; skips at
+/// runtime when `make artifacts` has not run.
+#[cfg(feature = "pjrt")]
+mod pjrt_bridge {
+    use super::*;
+    use lpdnn::arith::FixedFormat;
+    use lpdnn::coordinator::ScaleController;
+    use lpdnn::runtime::{Engine, Manifest};
 
-    // identical initial state for both paths, pre-quantized onto the grid
-    let mut rng = Pcg32::seeded(4242);
-    let mut params: Vec<Tensor> = model
-        .params
-        .iter()
-        .map(|s| {
-            let mut t = s.init.realize(&s.shape, &mut rng);
-            lpdnn::arith::Quantizer::from_format(ctrl.format(s.group()))
-                .apply_slice(t.data_mut());
-            t
-        })
-        .collect();
-    let mut vels: Vec<Tensor> =
-        model.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-
-    let batch = model.train_batch;
-    let mut drng = Pcg32::seeded(777);
-    let x = Tensor::from_vec(
-        &[batch, 784],
-        (0..batch * 784).map(|_| drng.uniform()).collect(),
-    );
-    let labels: Vec<usize> = (0..batch).map(|_| drng.below(10) as usize).collect();
-    let y = ops::one_hot(&labels, 10);
-
-    let (lr, mom, max_norm) = (0.1f32, 0.5f32, 2.0f32);
-
-    // --- compiled path ---
-    let mut inputs: Vec<Literal> = Vec::new();
-    for p in &params {
-        inputs.push(tensor_to_literal(p).unwrap());
-    }
-    for v in &vels {
-        inputs.push(tensor_to_literal(v).unwrap());
-    }
-    inputs.push(tensor_to_literal(&x).unwrap());
-    inputs.push(tensor_to_literal(&y).unwrap());
-    inputs.push(scalar(lr));
-    inputs.push(scalar(mom));
-    inputs.push(scalar(max_norm));
-    inputs.push(scalar(0.0)); // seed (dropout off anyway)
-    inputs.push(slice_to_literal(&vec![0.0; 3], &[3]).unwrap()); // rates = 0
-    inputs.push(slice_to_literal(&ctrl.steps_vec(), &[24]).unwrap());
-    inputs.push(slice_to_literal(&ctrl.maxvs_vec(), &[24]).unwrap());
-    let out = exe.run(&inputs).unwrap();
-    let dev_loss = literal_to_scalar(&out[12]).unwrap();
-    let dev_overflow = literal_to_tensor(&out[13]).unwrap();
-    let dev_params: Vec<Tensor> =
-        (0..6).map(|i| literal_to_tensor(&out[i]).unwrap()).collect();
-
-    // --- golden path ---
-    let gout = golden::train_step(
-        shape,
-        &mut params,
-        &mut vels,
-        &x,
-        &y,
-        lr,
-        mom,
-        max_norm,
-        &ctrl,
-        lpdnn::arith::RoundMode::HalfAway,
-    );
-
-    // losses agree to float32 reassociation tolerance
-    assert!(
-        (gout.loss - dev_loss).abs() < 2e-3,
-        "loss: golden {} vs device {dev_loss}",
-        gout.loss
-    );
-
-    // overflow totals agree exactly; over/half counts within a whisker
-    // (values that land exactly on a counting threshold can tip either way
-    // under different accumulation orders)
-    for g in 0..24 {
-        assert_eq!(
-            gout.overflow.at2(g, 2),
-            dev_overflow.at2(g, 2),
-            "n_total mismatch in group {g}"
-        );
-        for col in 0..2 {
-            let a = gout.overflow.at2(g, col);
-            let b = dev_overflow.at2(g, col);
-            let tol = 2.0 + 0.002 * gout.overflow.at2(g, 2);
-            assert!((a - b).abs() <= tol, "group {g} col {col}: golden {a} vs device {b}");
+    fn setup() -> Option<(Engine, Manifest)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping integration test: run `make artifacts` first");
+            return None;
         }
+        let manifest = Manifest::load(dir).expect("manifest loads");
+        let engine = Engine::cpu().expect("PJRT cpu client");
+        Some((engine, manifest))
     }
 
-    // updated parameters agree elementwise up to one quantization step
-    for (i, (gp, dp)) in params.iter().zip(&dev_params).enumerate() {
-        let spec = &model.params[i];
-        let step = ctrl.format(spec.group()).step();
-        let mut max_diff = 0.0f32;
-        for (a, b) in gp.data().iter().zip(dp.data()) {
-            max_diff = max_diff.max((a - b).abs());
-        }
-        assert!(
-            max_diff <= step + 1e-6,
-            "{}: max diff {max_diff} > step {step}",
-            spec.name
-        );
-        // and the overwhelming majority agree exactly
-        let same = gp
-            .data()
+    /// The golden pure-rust train step must agree with the compiled
+    /// artifact.
+    #[test]
+    fn golden_model_matches_compiled_step() {
+        use lpdnn::golden::{self, MlpShape};
+        use lpdnn::runtime::literal_util::*;
+        use lpdnn::tensor::{ops, Pcg32, Tensor};
+        use xla::Literal;
+
+        let Some((engine, manifest)) = setup() else { return };
+        let (engine, manifest) = (&engine, &manifest);
+        let model = manifest.model("pi_mlp").unwrap();
+        let exe = engine.load(manifest.artifact("pi_mlp", "fixed", "train").unwrap()).unwrap();
+
+        let shape = MlpShape::pi_mlp(128, 4);
+        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+
+        // identical initial state for both paths, pre-quantized onto the grid
+        let mut rng = Pcg32::seeded(4242);
+        let mut params: Vec<Tensor> = model
+            .params
             .iter()
-            .zip(dp.data())
-            .filter(|(a, b)| a == b)
-            .count();
-        let frac = same as f64 / gp.len() as f64;
-        assert!(frac > 0.99, "{}: only {frac:.4} exact agreement", spec.name);
+            .map(|s| {
+                let mut t = s.init.realize(&s.shape, &mut rng);
+                lpdnn::arith::Quantizer::from_format(ctrl.format(s.group()))
+                    .apply_slice(t.data_mut());
+                t
+            })
+            .collect();
+        let mut vels: Vec<Tensor> =
+            model.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+
+        let batch = model.train_batch;
+        let mut drng = Pcg32::seeded(777);
+        let x = Tensor::from_vec(
+            &[batch, 784],
+            (0..batch * 784).map(|_| drng.uniform()).collect(),
+        );
+        let labels: Vec<usize> = (0..batch).map(|_| drng.below(10) as usize).collect();
+        let y = ops::one_hot(&labels, 10);
+
+        let (lr, mom, max_norm) = (0.1f32, 0.5f32, 2.0f32);
+
+        // --- compiled path ---
+        let mut inputs: Vec<Literal> = Vec::new();
+        for p in &params {
+            inputs.push(tensor_to_literal(p).unwrap());
+        }
+        for v in &vels {
+            inputs.push(tensor_to_literal(v).unwrap());
+        }
+        inputs.push(tensor_to_literal(&x).unwrap());
+        inputs.push(tensor_to_literal(&y).unwrap());
+        inputs.push(scalar(lr));
+        inputs.push(scalar(mom));
+        inputs.push(scalar(max_norm));
+        inputs.push(scalar(0.0)); // seed (dropout off anyway)
+        inputs.push(slice_to_literal(&vec![0.0; 3], &[3]).unwrap()); // rates = 0
+        inputs.push(slice_to_literal(&ctrl.steps_vec(), &[24]).unwrap());
+        inputs.push(slice_to_literal(&ctrl.maxvs_vec(), &[24]).unwrap());
+        let out = exe.run(&inputs).unwrap();
+        let dev_loss = literal_to_scalar(&out[12]).unwrap();
+        let dev_overflow = literal_to_tensor(&out[13]).unwrap();
+        let dev_params: Vec<Tensor> =
+            (0..6).map(|i| literal_to_tensor(&out[i]).unwrap()).collect();
+
+        // --- golden path ---
+        let gout = golden::train_step(
+            shape,
+            &mut params,
+            &mut vels,
+            &x,
+            &y,
+            lr,
+            mom,
+            max_norm,
+            &ctrl,
+            lpdnn::arith::RoundMode::HalfAway,
+        );
+
+        // losses agree to float32 reassociation tolerance
+        assert!(
+            (gout.loss - dev_loss).abs() < 2e-3,
+            "loss: golden {} vs device {dev_loss}",
+            gout.loss
+        );
+
+        // overflow totals agree exactly; over/half counts within a whisker
+        // (values that land exactly on a counting threshold can tip either
+        // way under different accumulation orders)
+        for g in 0..24 {
+            assert_eq!(
+                gout.overflow.at2(g, 2),
+                dev_overflow.at2(g, 2),
+                "n_total mismatch in group {g}"
+            );
+            for col in 0..2 {
+                let a = gout.overflow.at2(g, col);
+                let b = dev_overflow.at2(g, col);
+                let tol = 2.0 + 0.002 * gout.overflow.at2(g, 2);
+                assert!((a - b).abs() <= tol, "group {g} col {col}: golden {a} vs device {b}");
+            }
+        }
+
+        // updated parameters agree elementwise up to one quantization step
+        for (i, (gp, dp)) in params.iter().zip(&dev_params).enumerate() {
+            let spec = &model.params[i];
+            let step = ctrl.format(spec.group()).step();
+            let mut max_diff = 0.0f32;
+            for (a, b) in gp.data().iter().zip(dp.data()) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+            assert!(
+                max_diff <= step + 1e-6,
+                "{}: max diff {max_diff} > step {step}",
+                spec.name
+            );
+            // and the overwhelming majority agree exactly
+            let same = gp
+                .data()
+                .iter()
+                .zip(dp.data())
+                .filter(|(a, b)| a == b)
+                .count();
+            let frac = same as f64 / gp.len() as f64;
+            assert!(frac > 0.99, "{}: only {frac:.4} exact agreement", spec.name);
+        }
     }
 }

@@ -1,0 +1,209 @@
+//! Native backend tests: parity with the golden step, and a fast
+//! end-to-end `Trainer` smoke run that needs no AOT artifacts — the
+//! acceptance gate for the self-contained training path.
+
+use lpdnn::arith::{FixedFormat, Quantizer, RoundMode};
+use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
+use lpdnn::coordinator::{run_sweep, ScaleController, SweepPoint, Trainer};
+use lpdnn::golden::{self, MlpShape};
+use lpdnn::runtime::{Backend, ModelInfo, NativeBackend, StepParams};
+use lpdnn::tensor::{ops, Pcg32, Tensor};
+
+fn digits_cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        model: "pi_mlp".into(),
+        arithmetic: arith,
+        train: TrainConfig {
+            steps,
+            lr_start: 0.15,
+            lr_end: 0.02,
+            seed: 4242,
+            max_norm: 3.0,
+            ..Default::default()
+        },
+        data: DataConfig { dataset: "digits".into(), n_train: 512, n_test: 256 },
+        ..Default::default()
+    }
+}
+
+/// NativeBackend must produce EXACTLY the golden step's losses and
+/// updates when driven from identical state (it is the golden model
+/// behind the Backend trait — any drift is a plumbing bug).
+#[test]
+fn native_backend_matches_golden_step_exactly() {
+    let cfg = digits_cfg("parity", Arithmetic::Fixed { bits_comp: 12, bits_up: 14, int_bits: 3 }, 1);
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 3));
+
+    // --- backend path ---
+    let mut backend = NativeBackend::new();
+    let model = backend.begin_run(&cfg).unwrap();
+    let mut rng = Pcg32::seeded(777);
+    backend.init_state(&ctrl, &mut rng).unwrap();
+    let params_before = backend.params_host().unwrap();
+
+    // --- golden path from the identical state ---
+    let shape = MlpShape::pi_mlp(128, 4);
+    let mut gparams = params_before.clone();
+    let mut gvels: Vec<Tensor> =
+        model.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+
+    // one deterministic batch in dataset layout [n, 28, 28, 1]
+    let mut drng = Pcg32::seeded(4141);
+    let batch = model.train_batch;
+    let x = Tensor::from_vec(
+        &[batch, 28, 28, 1],
+        (0..batch * 784).map(|_| drng.uniform()).collect(),
+    );
+    let labels: Vec<usize> = (0..batch).map(|_| drng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+
+    let (lr, mom, max_norm) = (0.1f32, 0.5f32, 2.0f32);
+    let hp = StepParams {
+        lr,
+        momentum: mom,
+        max_norm,
+        dropout_input: 0.0,
+        dropout_hidden: 0.0,
+        t: 0,
+    };
+    let out = backend.train_step(&ctrl, &x, &y, &hp).unwrap();
+
+    let x_flat = x.clone().reshape(&[batch, 784]);
+    let gout = golden::train_step(
+        shape, &mut gparams, &mut gvels, &x_flat, &y, lr, mom, max_norm, &ctrl,
+        RoundMode::HalfAway,
+    );
+
+    assert_eq!(out.loss, gout.loss, "losses must be bit-identical");
+    assert_eq!(out.overflow.data(), gout.overflow.data(), "overflow matrices");
+    let params_after = backend.params_host().unwrap();
+    for (i, (bp, gp)) in params_after.iter().zip(&gparams).enumerate() {
+        assert_eq!(bp.data(), gp.data(), "param {i} updates must be bit-identical");
+    }
+    // and the step actually changed the parameters
+    assert!(params_after
+        .iter()
+        .zip(&params_before)
+        .any(|(a, b)| a.data() != b.data()));
+}
+
+/// Fast end-to-end Trainer smoke test on the synthetic digits dataset:
+/// trains, learns, evaluates — with zero artifacts on disk.
+#[test]
+fn native_trainer_end_to_end_smoke() {
+    let mut backend = NativeBackend::new();
+    let r = Trainer::new(&mut backend, digits_cfg("smoke", Arithmetic::Float32, 40))
+        .run()
+        .unwrap();
+    assert_eq!(r.backend_name, "native");
+    assert_eq!(r.steps_run, 40);
+    assert!(r.test_error < 0.35, "error {:.3}", r.test_error);
+    let first = r.metrics.losses[0].1;
+    assert!(r.train_loss < first * 0.5, "{first} -> {}", r.train_loss);
+}
+
+/// The paper's headline arithmetic end to end on the native path:
+/// dynamic 10/12 with warmup stays in the same league as float32.
+#[test]
+fn native_dynamic_10_12_close_to_float32() {
+    let mut backend = NativeBackend::new();
+    let base = Trainer::new(&mut backend, digits_cfg("n-f32", Arithmetic::Float32, 60))
+        .run()
+        .unwrap();
+    let arith = Arithmetic::Dynamic {
+        bits_comp: 10,
+        bits_up: 12,
+        max_overflow_rate: 1e-4,
+        update_every_examples: 512,
+        init_int_bits: 3,
+        warmup_steps: 20,
+    };
+    let dynr = Trainer::new(&mut backend, digits_cfg("n-dyn", arith, 60)).run().unwrap();
+    assert!(
+        dynr.test_error <= base.test_error + 0.15,
+        "dynamic {:.3} vs float32 {:.3}",
+        dynr.test_error,
+        base.test_error
+    );
+}
+
+/// run_sweep drives many runs over one shared native backend.
+#[test]
+fn sweep_runs_on_native_backend() {
+    let mut backend = NativeBackend::new();
+    let baseline = digits_cfg("sw-base", Arithmetic::Float32, 8);
+    let points: Vec<SweepPoint> = [20i32, 8]
+        .iter()
+        .map(|&bits| {
+            let mut cfg = baseline.clone();
+            cfg.name = format!("sw-{bits}");
+            cfg.arithmetic = Arithmetic::Fixed { bits_comp: bits, bits_up: bits, int_bits: 5 };
+            SweepPoint { label: format!("{bits}"), cfg }
+        })
+        .collect();
+    let (base_err, rows) = run_sweep(&mut backend, &baseline, &points, false).unwrap();
+    assert!(base_err.is_finite());
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|r| r.normalized.is_finite()));
+}
+
+/// Eval batches with wrap-padding: only the first n_real examples count.
+#[test]
+fn eval_errors_honors_n_real() {
+    let cfg = digits_cfg("eval", Arithmetic::Float32, 1);
+    let mut backend = NativeBackend::new();
+    backend.begin_run(&cfg).unwrap();
+    let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+    let mut rng = Pcg32::seeded(5);
+    backend.init_state(&ctrl, &mut rng).unwrap();
+    let n = 16;
+    let x = Tensor::from_vec(&[n, 784], (0..n * 784).map(|_| rng.uniform()).collect());
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+    let full = backend.eval_errors(&ctrl, &x, &y, n).unwrap();
+    let half = backend.eval_errors(&ctrl, &x, &y, n / 2).unwrap();
+    assert!(full <= n);
+    assert!(half <= full, "fewer counted examples cannot yield more errors");
+}
+
+/// pi_mlp_wide doubles the hidden units (paper 9.2/9.3 width ablation)
+/// and must run natively too.
+#[test]
+fn native_wide_model_runs() {
+    let wide = ModelInfo::builtin("pi_mlp_wide").unwrap();
+    assert_eq!(wide.params[0].shape, vec![4, 784, 256]);
+    let mut cfg = digits_cfg("wide", Arithmetic::Float32, 6);
+    cfg.model = "pi_mlp_wide".into();
+    let mut backend = NativeBackend::new();
+    let r = Trainer::new(&mut backend, cfg).run().unwrap();
+    assert!(r.test_error.is_finite());
+}
+
+/// Builtin model metadata must agree with the golden test topology and
+/// the manifest conventions (group table layout, init specs).
+#[test]
+fn builtin_model_is_consistent() {
+    let m = ModelInfo::builtin("pi_mlp").unwrap();
+    assert_eq!(m.n_layers, 3);
+    assert_eq!(m.n_groups, 24);
+    assert_eq!(m.group_names.len(), 24);
+    assert_eq!(m.input_shape, vec![784]);
+    assert_eq!(m.params.len(), 6);
+    assert_eq!(m.params[0].group(), 0);
+    assert_eq!(m.params[1].group(), 1);
+    assert_eq!(m.params[4].group(), 16); // l2.w
+    assert_eq!(m.group_names[0], "l0.w");
+    assert_eq!(m.group_names[23], "l2.dh");
+    assert!(ModelInfo::builtin("conv").is_none());
+
+    // init realizes to the declared shapes and quantizes cleanly
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let mut rng = Pcg32::seeded(9);
+    for spec in &m.params {
+        let mut t = spec.init.realize(&spec.shape, &mut rng);
+        Quantizer::from_format(ctrl.format(spec.group())).apply_slice(t.data_mut());
+        assert_eq!(t.shape(), &spec.shape[..]);
+        assert_eq!(t.len(), spec.len());
+    }
+}

@@ -2,7 +2,11 @@
 //! `python -m compile.aot` must parse, compile and execute on the PJRT CPU
 //! client of xla_extension 0.5.1 (the whole AOT bridge in one test).
 //!
-//! Run `make artifacts` first; the test is skipped if artifacts are missing.
+//! Run `make artifacts` first; the test is skipped if artifacts are
+//! missing. The whole file needs the `xla` crate, so it only compiles
+//! with `--features pjrt`.
+
+#![cfg(feature = "pjrt")]
 
 use xla::{HloModuleProto, Literal, PjRtClient, XlaComputation};
 
