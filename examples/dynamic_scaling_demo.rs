@@ -13,16 +13,15 @@
 //! paper's "the gradients diminish during the training, so do their
 //! ranges", section 10).
 
-use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
-use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::{create_backend, Backend as _, ModelInfo};
+use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::coordinator::Session;
+use lpdnn::runtime::ModelInfo;
 
 fn main() -> lpdnn::Result<()> {
-    let kind = BackendKind::from_env()?;
-    let mut backend = create_backend(kind)?;
+    let mut session = Session::from_env()?;
     // group names are topology metadata — identical on both backends
     let model = ModelInfo::builtin("pi_mlp").expect("builtin pi_mlp");
-    println!("backend: {}", backend.name());
+    println!("backend: {}", session.backend_name()?);
 
     let mut cfg = ExperimentConfig::default();
     cfg.name = "scaling-demo".into();
@@ -37,8 +36,7 @@ fn main() -> lpdnn::Result<()> {
     cfg.train.steps = 240;
     cfg.data.n_train = 2048;
 
-    let mut trainer = Trainer::new(backend.as_mut(), cfg);
-    let result = trainer.run()?;
+    let result = session.run(cfg)?;
 
     println!("groups ({}):", model.n_groups);
     for (i, name) in model.group_names.iter().enumerate() {

@@ -17,13 +17,13 @@
 //! quantize / fused-maxout kernels (L1), via the PJRT CPU client).
 
 use std::io::Write;
+use std::sync::Arc;
 
-use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
-use lpdnn::coordinator::{RunResult, Trainer};
-use lpdnn::runtime::Backend;
+use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::coordinator::{RunResult, Session, StderrProgress};
 
 fn run(
-    backend: &mut dyn Backend,
+    session: &mut Session,
     name: &str,
     arith: Arithmetic,
     steps: usize,
@@ -39,23 +39,21 @@ fn run(
     cfg.train.eval_every = 50;
     cfg.data.n_train = 4096;
     cfg.data.n_test = 1024;
-    let mut t = Trainer::new(backend, cfg);
-    t.verbose = true;
-    t.run()
+    session.run(cfg)
 }
 
 fn main() -> lpdnn::Result<()> {
     let steps: usize = std::env::var("E2E_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
-    let kind = BackendKind::from_env()?;
-    let mut backend = lpdnn::runtime::create_backend(kind)?;
-    println!("backend: {}", backend.name());
+    // progress lines (periodic evals, run ends) go through the observer
+    let mut session = Session::from_env()?.with_observer(Arc::new(StderrProgress::new()));
+    println!("backend: {}", session.backend_name()?);
     println!("model: pi_mlp (2x maxout-128/k4 + softmax, ~560k params)");
     println!("data: 4096 train / 1024 test synthetic digits, batch 64, {steps} steps\n");
 
-    let f32r = run(backend.as_mut(), "e2e-float32", Arithmetic::Float32, steps)?;
-    let halfr = run(backend.as_mut(), "e2e-float16", Arithmetic::Half, steps)?;
+    let f32r = run(&mut session, "e2e-float32", Arithmetic::Float32, steps)?;
+    let halfr = run(&mut session, "e2e-float16", Arithmetic::Half, steps)?;
     let dynr = run(
-        backend.as_mut(),
+        &mut session,
         "e2e-dynamic-10-12",
         Arithmetic::Dynamic {
             bits_comp: 10,

@@ -5,32 +5,33 @@
 //! ```
 //!
 //! Runs entirely on the self-contained native backend — no artifacts, no
-//! Python. Trains the pi_mlp maxout network on the synthetic digits
-//! dataset under the paper's headline arithmetic (dynamic fixed point,
-//! 10-bit computations / 12-bit parameter updates) and prints the final
-//! test error next to a float32 baseline. Set `LPDNN_BACKEND=pjrt` (with
-//! a `--features pjrt` build and `make artifacts`) to run the identical
-//! experiment on the compiled path.
+//! Python. A [`Session`] owns backend construction; it trains the pi_mlp
+//! maxout network on the synthetic digits dataset under the paper's
+//! headline arithmetic (dynamic fixed point, 10-bit computations /
+//! 12-bit parameter updates) and prints the final test error next to a
+//! float32 baseline. Set `LPDNN_BACKEND=pjrt` (with a `--features pjrt`
+//! build and `make artifacts`) to run the identical experiment on the
+//! compiled path.
 
-use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
-use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::{create_backend, Backend as _};
+use lpdnn::config::{Arithmetic, ExperimentConfig};
+use lpdnn::coordinator::Session;
 
 fn main() -> lpdnn::Result<()> {
-    let kind = BackendKind::from_env()?;
-    let mut backend = create_backend(kind)?;
-    println!("backend: {}", backend.name());
+    // The session builds the backend described by LPDNN_BACKEND
+    // (default: native) and reuses it across both runs below.
+    let mut session = Session::from_env()?;
+    println!("backend: {}", session.backend_name()?);
 
     // A baseline config: pi_mlp on the digits dataset, 120 SGD steps.
     let mut cfg = ExperimentConfig::default();
     cfg.name = "quickstart-float32".into();
-    cfg.backend = kind;
+    cfg.backend = session.spec().kind();
     cfg.train.steps = 120;
     cfg.data.n_train = 2048;
     cfg.data.n_test = 512;
 
     println!("== float32 baseline ==");
-    let base = Trainer::new(backend.as_mut(), cfg.clone()).run()?;
+    let base = session.run(cfg.clone())?;
     println!("test error: {:.2}%  ({:.1?})", 100.0 * base.test_error, base.wallclock);
 
     // The paper's headline: 10-bit computations, 12-bit parameter updates,
@@ -46,7 +47,7 @@ fn main() -> lpdnn::Result<()> {
     };
 
     println!("\n== dynamic fixed point (10-bit comp / 12-bit up) ==");
-    let dynr = Trainer::new(backend.as_mut(), cfg).run()?;
+    let dynr = session.run(cfg)?;
     println!("test error: {:.2}%  ({:.1?})", 100.0 * dynr.test_error, dynr.wallclock);
     println!("normalized vs float32: {:.2}x", dynr.test_error / base.test_error.max(1e-9));
     println!(

@@ -15,12 +15,12 @@ mod common;
 use lpdnn::arith::{FixedFormat, RoundMode};
 use lpdnn::bench_support::{scaled, Table};
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::{ScaleController, Trainer};
+use lpdnn::coordinator::ScaleController;
 use lpdnn::golden::{self, MlpShape};
 use lpdnn::tensor::{init::InitSpec, Pcg32, Tensor};
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup();
 
     // ------------------------------------------------------------------
     // 1. width ablation
@@ -35,7 +35,7 @@ fn main() {
         for (bc, bu) in [(10, 12), (5, 6)] {
             let mut cfg = common::base_cfg(&format!("abl-width-{model}-{bc}"), model, "digits");
             cfg.arithmetic = common::dynamic(bc, bu, 1e-4, cfg.data.n_train);
-            let r = Trainer::new(backend.as_mut(), cfg).run().expect("run");
+            let r = session.run(cfg).expect("run");
             eprintln!("  {model} {bc}/{bu}: {:.2}%", 100.0 * r.test_error);
             errs.push(r.test_error);
         }
@@ -128,7 +128,7 @@ fn main() {
             init_int_bits: 3,
             warmup_steps: scaled(30),
         };
-        let r = Trainer::new(backend.as_mut(), cfg).run().expect("run");
+        let r = session.run(cfg).expect("run");
         let moves: usize = r.metrics.scale_moves.iter().map(|&(_, n)| n).sum();
         eprintln!("  every {every}: {:.2}% ({moves} moves)", 100.0 * r.test_error);
         t.row(&[
@@ -157,7 +157,7 @@ fn main() {
             init_int_bits: 3,
             warmup_steps: warmup,
         };
-        let r = Trainer::new(backend.as_mut(), cfg).run().expect("run");
+        let r = session.run(cfg).expect("run");
         eprintln!("  {label}: {:.2}%", 100.0 * r.test_error);
         t.row(&[label.to_string(), format!("{:.2}%", 100.0 * r.test_error)]);
     }

@@ -12,10 +12,10 @@ mod common;
 
 use lpdnn::bench_support::print_series;
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::{run_sweep, SweepPoint};
+use lpdnn::coordinator::SweepPoint;
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup_sweep();
     for dataset in ["digits", "clusters"] {
         let baseline = common::base_cfg(&format!("fig1-base-{dataset}"), "pi_mlp", dataset);
         let points: Vec<SweepPoint> = (0..=8)
@@ -31,12 +31,13 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
+        let outcome = session.sweep(&baseline, &points).unwrap();
 
         println!("\n=== Figure 1 analogue ({dataset}): error vs radix position ===");
-        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
+        println!("float32 baseline error: {:.2}%", 100.0 * outcome.baseline_error());
         println!("(paper: optimum at radix 5, sharp rise at small radix)\n");
-        let series: Vec<(f64, f64)> = rows
+        let series: Vec<(f64, f64)> = outcome
+            .rows
             .iter()
             .map(|r| (r.label.parse::<f64>().unwrap(), r.normalized))
             .collect();

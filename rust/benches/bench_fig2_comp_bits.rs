@@ -12,10 +12,10 @@ mod common;
 
 use lpdnn::bench_support::print_series;
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::{run_sweep, SweepPoint};
+use lpdnn::coordinator::SweepPoint;
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup_sweep();
     let dataset = "digits";
     let baseline = common::base_cfg("fig2-base", "pi_mlp", dataset);
     let widths: Vec<i32> = vec![6, 8, 10, 12, 14, 16, 18, 20, 24, 28];
@@ -33,8 +33,8 @@ fn main() {
                         int_bits: 5,
                     },
                     _ => {
-                        let mut a = common::dynamic(bits, common::WIDE_BITS, 1e-4,
-                            baseline.data.n_train);
+                        let mut a =
+                            common::dynamic(bits, common::WIDE_BITS, 1e-4, baseline.data.n_train);
                         if let Arithmetic::Dynamic { ref mut bits_up, .. } = a {
                             *bits_up = common::WIDE_BITS;
                         }
@@ -45,11 +45,11 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
+        let outcome = session.sweep(&baseline, &points).unwrap();
         println!("\n=== Figure 2 analogue ({arith_name} point, {dataset}) ===");
-        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
+        println!("float32 baseline error: {:.2}%", 100.0 * outcome.baseline_error());
         let series: Vec<(f64, f64)> =
-            rows.iter().map(|r| (r.label.parse().unwrap(), r.normalized)).collect();
+            outcome.rows.iter().map(|r| (r.label.parse().unwrap(), r.normalized)).collect();
         print_series(
             &format!("normalized error vs computation bits ({arith_name}, up=31)"),
             "bits",

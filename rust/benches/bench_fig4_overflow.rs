@@ -12,10 +12,10 @@ mod common;
 
 use lpdnn::bench_support::{print_series, Table};
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::{run_sweep, SweepPoint};
+use lpdnn::coordinator::SweepPoint;
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup_sweep();
     let dataset = "digits";
     let baseline = common::base_cfg("fig4-base", "pi_mlp", dataset);
     let rates: Vec<f64> = vec![1e-5, 1e-4, 1e-3, 1e-2, 1e-1];
@@ -39,10 +39,11 @@ fn main() {
             })
             .collect();
 
-        let (base_err, rows) = run_sweep(backend.as_mut(), &baseline, &points, true).unwrap();
+        let outcome = session.sweep(&baseline, &points).unwrap();
         println!("\n=== Figure 4 analogue: comp bits = {bits} ===");
-        println!("float32 baseline error: {:.2}%", 100.0 * base_err);
-        let series: Vec<(f64, f64)> = rows
+        println!("float32 baseline error: {:.2}%", 100.0 * outcome.baseline_error());
+        let series: Vec<(f64, f64)> = outcome
+            .rows
             .iter()
             .map(|r| (r.label.parse::<f64>().unwrap().log10(), r.normalized))
             .collect();
@@ -51,7 +52,7 @@ fn main() {
             "log10(rate)",
             &series,
         );
-        all_rows.push(rows.iter().map(|r| r.normalized).collect());
+        all_rows.push(outcome.rows.iter().map(|r| r.normalized).collect());
     }
 
     println!("\n=== Figure 4 summary (normalized error) ===");

@@ -16,9 +16,8 @@ mod common;
 use lpdnn::arith::{FixedFormat, Quantizer, RoundMode};
 use lpdnn::bench_support::{bench, scaled, Stats, Table};
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::{ScaleController, Trainer};
+use lpdnn::coordinator::{ScaleController, Session};
 use lpdnn::golden::{self, MlpShape};
-use lpdnn::runtime::Backend;
 use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
 
 fn fmt_stats(s: &Stats) -> String {
@@ -146,12 +145,12 @@ fn matmul_section(table: &mut Table) {
     }
 }
 
-fn end_to_end_section(backend: &mut dyn Backend, table: &mut Table) {
+fn end_to_end_section(session: &mut Session, table: &mut Table) {
     for model in ["pi_mlp", "conv", "conv32"] {
-        if !backend.supports_model(model) {
+        if !session.supports_model(model).expect("backend") {
             table.row(&[
                 format!("{model} end-to-end per train step"),
-                format!("skipped ({} backend cannot run it)", backend.name()),
+                format!("skipped ({} backend cannot run it)", session.spec().label()),
             ]);
             continue;
         }
@@ -166,7 +165,7 @@ fn end_to_end_section(backend: &mut dyn Backend, table: &mut Table) {
         cfg.data.n_test = 256;
         cfg.arithmetic = Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
         let t0 = std::time::Instant::now();
-        let r = Trainer::new(&mut *backend, cfg).run().expect("run");
+        let r = session.run(cfg).expect("run");
         let total = t0.elapsed().as_secs_f64();
         let per_step = total / r.steps_run as f64;
         table.row(&[
@@ -295,11 +294,11 @@ fn pjrt_section(table: &mut Table) {
 }
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup();
     let mut table = Table::new(&["benchmark", "result"]);
 
     matmul_section(&mut table);
-    end_to_end_section(backend.as_mut(), &mut table);
+    end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
     quantizer_section(&mut table);
     controller_section(&mut table);

@@ -15,11 +15,9 @@ mod common;
 
 use lpdnn::bench_support::Table;
 use lpdnn::config::Arithmetic;
-use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::Backend as _;
 
 fn main() {
-    let mut backend = common::setup();
+    let mut session = common::setup();
     let workloads: Vec<(&str, &str, &str)> = vec![
         ("PI digits", "pi_mlp", "digits"),
         ("digits conv", "conv", "digits"),
@@ -38,11 +36,11 @@ fn main() {
     ];
 
     for &(wl_name, model, dataset) in &workloads {
-        if !backend.supports_model(model) {
+        if !session.supports_model(model).expect("backend") {
             eprintln!(
                 "  [{wl_name}] skipped: model {model} not runnable on the {} backend \
                  (needs compiled artifacts — set LPDNN_BACKEND=pjrt)",
-                backend.name()
+                session.spec().label()
             );
             for row in rows.iter_mut() {
                 row.3.push(f64::NAN);
@@ -61,7 +59,7 @@ fn main() {
             cfg.name = format!("tbl3-{}-{}", wl_name, row.0);
             cfg.arithmetic = arith;
             let t0 = std::time::Instant::now();
-            let r = Trainer::new(backend.as_mut(), cfg).run().expect("run");
+            let r = session.run(cfg).expect("run");
             eprintln!(
                 "  [{wl_name}] {}: {:.2}% ({:.0?})",
                 row.0,

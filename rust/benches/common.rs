@@ -1,11 +1,19 @@
 //! Shared helpers for the bench binaries (each bench is its own crate;
 //! included via `#[path = "common.rs"] mod common;`).
 //!
-//! Backends: every bench runs on the backend named by `LPDNN_BACKEND`
-//! (default `native`, which needs no artifacts; `pjrt` needs a build
-//! with `--features pjrt` plus `make artifacts`). Workloads a backend
-//! cannot run (conv models on native) are skipped with a note — see
-//! EXPERIMENTS.md §Experiment index for which figure needs which.
+//! Backends: every bench drives a [`Session`] whose backend comes from
+//! `LPDNN_BACKEND` (default `native`, which needs no artifacts; `pjrt`
+//! needs a build with `--features pjrt` plus `make artifacts`).
+//! Workloads a backend cannot run (conv models on native) are skipped
+//! with a note — see EXPERIMENTS.md §Experiment index for which figure
+//! needs which.
+//!
+//! Parallelism: the sweep benches fan their points across the session's
+//! worker pool. `LPDNN_JOBS` sets the pool size; the default is one
+//! worker per core on the native backend and 1 on pjrt (each worker
+//! compiles its own artifacts, so sequential reuse of one compile cache
+//! is the better default there). Rows are bit-identical at any pool
+//! size — only wall-clock changes.
 //!
 //! Budgets: every bench scales its training-step counts by
 //! `LPDNN_BENCH_SCALE` (default 1.0) via `bench_support::scaled`, so a
@@ -13,20 +21,62 @@
 
 #![allow(dead_code)]
 
-use lpdnn::config::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
-use lpdnn::runtime::Backend;
+use std::sync::Arc;
 
-/// The backend under test (`LPDNN_BACKEND`, default native) — or a clear
-/// message when the name is unknown or the backend cannot be constructed.
-pub fn setup() -> Box<dyn Backend> {
-    let kind = BackendKind::from_env().expect("LPDNN_BACKEND");
-    match lpdnn::runtime::create_backend(kind) {
-        Ok(b) => {
-            eprintln!("[bench] backend: {}", b.name());
-            b
-        }
-        Err(e) => panic!("cannot construct {} backend: {e:#}", kind.label()),
+use lpdnn::config::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
+use lpdnn::coordinator::{Session, StderrProgress};
+use lpdnn::runtime::BackendSpec;
+
+/// Sweep worker count: `LPDNN_JOBS`, defaulting to one per core on the
+/// native backend and 1 on pjrt.
+pub fn jobs_from_env(kind: BackendKind) -> usize {
+    std::env::var("LPDNN_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| match kind {
+            BackendKind::Native => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+            _ => 1,
+        })
+        .max(1)
+}
+
+/// Session for the single-run benches (`bench_perf`, `bench_table3`,
+/// `bench_ablation`): sequential runs with the matmul kernels' full
+/// parallelism, so per-run timings stay meaningful.
+pub fn setup() -> Session {
+    make_session(BackendSpec::from_env().expect("LPDNN_BACKEND"), 1)
+}
+
+/// Session for the sweep benches (`bench_fig1..4`): points fan out over
+/// the worker pool. Sweep workers multiply with the matmul threads, so
+/// when the user caps neither, split the cores between the two levels
+/// rather than oversubscribing quadratically. Safe to do here — the
+/// kernels read `LPDNN_THREADS` once on first use (after setup), and
+/// results are bit-identical at any thread count (DESIGN.md
+/// §Performance), so this only affects wall-clock.
+pub fn setup_sweep() -> Session {
+    let spec = BackendSpec::from_env().expect("LPDNN_BACKEND");
+    let jobs = jobs_from_env(spec.kind());
+    if jobs > 1 && std::env::var("LPDNN_THREADS").is_err() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        std::env::set_var("LPDNN_THREADS", (cores / jobs).max(1).to_string());
     }
+    make_session(spec, jobs)
+}
+
+/// The session under test with the stderr progress printer attached —
+/// or a clear panic when the backend cannot be constructed.
+fn make_session(spec: BackendSpec, jobs: usize) -> Session {
+    let mut session = Session::new(spec)
+        .with_jobs(jobs)
+        .with_observer(Arc::new(StderrProgress::new()));
+    match session.backend_name() {
+        Ok(name) => eprintln!("[bench] backend: {name} (sweep jobs: {jobs})"),
+        Err(e) => panic!("cannot construct {} backend: {e:#}", session.spec().label()),
+    }
+    session
 }
 
 /// Per-model default budgets tuned to the CPU testbed (see DESIGN.md):
@@ -52,7 +102,7 @@ pub fn base_cfg(name: &str, model: &str, dataset: &str) -> ExperimentConfig {
     ExperimentConfig {
         name: name.into(),
         model: model.into(),
-        backend: BackendKind::default(), // benches pick the backend object via setup()
+        backend: BackendKind::default(), // benches pick the backend via setup()
         arithmetic: Arithmetic::Float32,
         train: TrainConfig {
             steps,

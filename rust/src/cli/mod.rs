@@ -122,6 +122,21 @@ SUBCOMMANDS:
                   --steps N --seed N --lr R --dropout-input R --dropout-hidden R
                   --eval-every N --loss-csv <file> --verbose
     eval        Evaluate a config's arithmetic on a fresh model (sanity)
+    sweep       Run a sweep: float32 baseline + points over one axis,
+                fanned across a worker pool (rows are bit-identical at
+                any --jobs value; results print normalized by baseline)
+                  base config: same flags as train (--model, --dataset,
+                  --arith, --steps, ...; without --steps/--config the
+                  default budget honors LPDNN_BENCH_SCALE)
+                  --axis arith|comp-bits|up-bits|int-bits|overflow-rate
+                                         (default arith: half,fixed,dynamic
+                                         vs the float32 baseline — Table 3)
+                  --points v1,v2,...     sweep values (default per axis)
+                  --jobs N               parallel workers (default 1)
+                  --report out.json      write a SweepReport JSON document
+                  --loss-csv base.csv    one loss curve per point,
+                                         suffixed by label
+                  --verbose
     datasets    Print the dataset overview (paper Table 2 analogue)
     formats     Print format definitions (paper Table 1) and examples
     artifacts   List compiled artifacts from the manifest (pjrt backend)
@@ -129,8 +144,9 @@ SUBCOMMANDS:
 
 ENVIRONMENT:
     LPDNN_ARTIFACTS     artifacts directory (default: ./artifacts)
-    LPDNN_BENCH_SCALE   scale factor for bench workloads (default 1.0)
+    LPDNN_BENCH_SCALE   scale factor for bench/sweep budgets (default 1.0)
     LPDNN_BACKEND       backend for the bench binaries (native|pjrt)
+    LPDNN_JOBS          sweep worker pool size for the bench binaries
     LPDNN_THREADS       worker-thread cap for the native matmul kernels
     LPDNN_PAR_MATMUL    FLOP threshold for going parallel (default 2^20)
 "

@@ -6,4 +6,4 @@ pub mod json;
 pub mod toml;
 
 pub use experiment::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
-pub use json::Json;
+pub use json::{Json, JsonError};

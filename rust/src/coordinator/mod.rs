@@ -1,21 +1,43 @@
-//! L3 coordinator: the training orchestrator + the paper's dynamic fixed
-//! point scale controller.
+//! L3 coordinator: the experiment session API + the paper's dynamic
+//! fixed point scale controller.
 //!
-//! * [`trainer`]    — one experiment end to end (init, loop, schedules,
-//!   eval); feeds any [`crate::runtime::Backend`]'s train step and
-//!   consumes its overflow counters.
+//! * [`session`]    — [`Session`], the entry point: owns backend
+//!   construction (via [`crate::runtime::BackendSpec`]), runs single
+//!   experiments and whole sweeps through a worker pool (`jobs` knob),
+//!   and fans progress out to the attached observers.
+//! * [`observer`]   — [`RunObserver`], the typed event stream every run
+//!   emits (`on_step` / `on_eval` / `on_scale_move` / `on_run_end`);
+//!   the stderr progress printer and the `--loss-csv` writer are
+//!   implementations.
+//! * [`report`]     — serializable [`RunReport`]/[`SweepReport`]
+//!   (dependency-free JSON via [`crate::config::json`]).
 //! * [`scale_ctrl`] — per-group scaling-factor state + the section 5
 //!   update rule. The *only* stateful online mechanism in the paper, and
 //!   the part that genuinely belongs in the coordinator.
 //! * [`metrics`]    — loss/error/scale time series, CSV/JSON export.
-//! * [`sweep`]      — figure-regeneration machinery (normalized errors).
+//! * [`sweep`]      — sweep data model (points, rows, normalized
+//!   errors — the figure-regeneration machinery).
+//!
+//! The training loop itself (`trainer`, crate-internal) feeds any
+//! [`crate::runtime::Backend`]'s train step and consumes its overflow
+//! counters; its RNG stream constants ([`RNG_FORK_INIT`],
+//! [`RNG_FORK_BATCHER`], [`WARMUP_SEED_XOR`]) are re-exported here.
 
 pub mod metrics;
+pub mod observer;
+pub mod report;
 pub mod scale_ctrl;
+pub mod session;
 pub mod sweep;
-pub mod trainer;
+mod trainer;
 
 pub use metrics::Metrics;
+pub use observer::{
+    LossCsvObserver, ObserverEvent, Observers, RecordingObserver, RunMeta, RunObserver,
+    RunRole, StderrProgress,
+};
+pub use report::{RunReport, SweepReport, SweepRowReport, REPORT_VERSION};
 pub use scale_ctrl::ScaleController;
-pub use sweep::{run_sweep, SweepPoint, SweepRow};
-pub use trainer::{RunResult, Trainer};
+pub use session::Session;
+pub use sweep::{SweepOutcome, SweepPoint, SweepRow};
+pub use trainer::{RunResult, RNG_FORK_BATCHER, RNG_FORK_INIT, WARMUP_SEED_XOR};

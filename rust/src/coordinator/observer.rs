@@ -1,0 +1,373 @@
+//! [`RunObserver`]: the typed event stream every run emits.
+//!
+//! The old experiment API reported progress through a `verbose: bool`
+//! and ad-hoc `eprintln!`/CSV plumbing scattered over the trainer, the
+//! sweep runner, the CLI and the benches. This module replaces all of
+//! that with one trait: the trainer emits typed events (`on_step`,
+//! `on_eval`, `on_scale_move`, `on_warmup_end`, `on_run_end`) and the
+//! consumers — the stderr progress printer, the `--loss-csv` writer,
+//! test collectors — are observer implementations attached to a
+//! [`Session`](super::Session).
+//!
+//! Observers are `Send + Sync` and take `&self` (interior mutability
+//! where state is needed), so one observer instance can watch every
+//! worker of a parallel sweep. Events from concurrent runs interleave;
+//! the [`RunMeta`] passed with every event says which run it belongs to.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::trainer::RunResult;
+
+/// How a run relates to the sweep machinery (observers use this to
+/// format and contextualize events).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunRole {
+    /// A standalone `session.run` experiment.
+    Standalone,
+    /// The float32 reference run a sweep executes first.
+    Baseline,
+    /// One point of a sweep.
+    Point,
+}
+
+/// Identity of the run an event belongs to.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    /// The experiment config's name.
+    pub name: String,
+    /// Sweep-point label (equals `name` for standalone runs).
+    pub label: String,
+    /// Which backend executes the run ("native" / "pjrt").
+    pub backend: String,
+    /// Total SGD steps the run will take.
+    pub steps: usize,
+    /// Standalone run, sweep baseline, or sweep point.
+    pub role: RunRole,
+}
+
+/// A consumer of run events. All methods default to no-ops so an
+/// observer implements only what it cares about.
+pub trait RunObserver: Send + Sync {
+    /// One SGD step finished (main phase only, not warmup).
+    fn on_step(&self, _run: &RunMeta, _step: usize, _loss: f32) {}
+
+    /// A test-set evaluation finished (periodic and final). `loss` is
+    /// the most recent minibatch loss at evaluation time.
+    fn on_eval(&self, _run: &RunMeta, _step: usize, _loss: f32, _test_error: f64) {}
+
+    /// The scale controller moved `moves` scaling factors at its tick
+    /// after `step` (dynamic fixed point only).
+    fn on_scale_move(&self, _run: &RunMeta, _step: usize, _moves: usize) {}
+
+    /// The high-precision warmup phase (paper 9.3) finished and the run
+    /// adopted the learned per-group `int_bits`.
+    fn on_warmup_end(&self, _run: &RunMeta, _int_bits: &[i32]) {}
+
+    /// The run finished; `result` is exactly what the session returns.
+    fn on_run_end(&self, _run: &RunMeta, _result: &RunResult) {}
+}
+
+/// A shared, cheaply clonable set of observers that fans every event
+/// out to each of them in attachment order.
+#[derive(Clone, Default)]
+pub struct Observers {
+    list: Vec<Arc<dyn RunObserver>>,
+}
+
+impl Observers {
+    pub fn new() -> Observers {
+        Observers::default()
+    }
+
+    pub fn push(&mut self, obs: Arc<dyn RunObserver>) {
+        self.list.push(obs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.list.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.list.is_empty()
+    }
+
+    pub fn step(&self, run: &RunMeta, step: usize, loss: f32) {
+        for o in &self.list {
+            o.on_step(run, step, loss);
+        }
+    }
+
+    pub fn eval(&self, run: &RunMeta, step: usize, loss: f32, test_error: f64) {
+        for o in &self.list {
+            o.on_eval(run, step, loss, test_error);
+        }
+    }
+
+    pub fn scale_move(&self, run: &RunMeta, step: usize, moves: usize) {
+        for o in &self.list {
+            o.on_scale_move(run, step, moves);
+        }
+    }
+
+    pub fn warmup_end(&self, run: &RunMeta, int_bits: &[i32]) {
+        for o in &self.list {
+            o.on_warmup_end(run, int_bits);
+        }
+    }
+
+    pub fn run_end(&self, run: &RunMeta, result: &RunResult) {
+        for o in &self.list {
+            o.on_run_end(run, result);
+        }
+    }
+}
+
+/// The stderr progress printer: what `Trainer.verbose` and the sweep
+/// runner's eprintln lines used to produce, as an observer.
+#[derive(Default)]
+pub struct StderrProgress {
+    /// Baseline error of the enclosing sweep, once its run ends (point
+    /// lines then print the paper's normalized ratio).
+    baseline_error: Mutex<Option<f64>>,
+}
+
+impl StderrProgress {
+    pub fn new() -> StderrProgress {
+        StderrProgress::default()
+    }
+}
+
+impl RunObserver for StderrProgress {
+    fn on_eval(&self, run: &RunMeta, step: usize, loss: f32, test_error: f64) {
+        eprintln!("[{}] step {step}: loss {loss:.4} err {test_error:.4}", run.name);
+    }
+
+    fn on_warmup_end(&self, run: &RunMeta, int_bits: &[i32]) {
+        eprintln!("[{}] warmup adopted int_bits {int_bits:?}", run.name);
+    }
+
+    fn on_run_end(&self, run: &RunMeta, result: &RunResult) {
+        match run.role {
+            RunRole::Baseline => {
+                *self.baseline_error.lock().unwrap() = Some(result.test_error.max(1e-9));
+                eprintln!(
+                    "[sweep] baseline '{}' error {:.4} ({:.1?})",
+                    run.name, result.test_error, result.wallclock
+                );
+            }
+            RunRole::Point => {
+                if let Some(base) = *self.baseline_error.lock().unwrap() {
+                    eprintln!(
+                        "[sweep] {} error {:.4} (x{:.2} baseline, {:.1?})",
+                        run.label,
+                        result.test_error,
+                        result.test_error / base,
+                        result.wallclock
+                    );
+                } else {
+                    eprintln!(
+                        "[sweep] {} error {:.4} ({:.1?})",
+                        run.label, result.test_error, result.wallclock
+                    );
+                }
+            }
+            RunRole::Standalone => {
+                eprintln!(
+                    "[{}] error {:.4} ({:.1?})",
+                    run.label, result.test_error, result.wallclock
+                );
+            }
+        }
+    }
+}
+
+/// The `--loss-csv` writer as an observer: writes one `step,loss` CSV
+/// per finished run. In per-label mode (sweeps) each run's file name is
+/// the base path suffixed with the run's label, so a sweep emits one
+/// curve per point instead of clobbering a single file.
+pub struct LossCsvObserver {
+    base: PathBuf,
+    suffix_labels: bool,
+    /// Write failures, in arrival order (observer callbacks cannot
+    /// propagate errors; the driver checks after the run — see
+    /// [`first_error`](LossCsvObserver::first_error)).
+    errors: Mutex<Vec<String>>,
+}
+
+impl LossCsvObserver {
+    /// Write every finished run to exactly `base` (single-run mode).
+    pub fn new(base: impl AsRef<Path>) -> LossCsvObserver {
+        LossCsvObserver {
+            base: base.as_ref().to_path_buf(),
+            suffix_labels: false,
+            errors: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Write `<stem>-<label>.<ext>` per run (sweep mode).
+    pub fn per_label(base: impl AsRef<Path>) -> LossCsvObserver {
+        LossCsvObserver {
+            base: base.as_ref().to_path_buf(),
+            suffix_labels: true,
+            errors: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The first write failure, if any — callers propagate it once the
+    /// run/sweep is over so a missing CSV cannot pass silently.
+    pub fn first_error(&self) -> Option<String> {
+        self.errors.lock().unwrap().first().cloned()
+    }
+
+    /// Resolve the output path for a run label.
+    pub fn path_for(&self, label: &str) -> PathBuf {
+        if !self.suffix_labels {
+            return self.base.clone();
+        }
+        let stem = self.base.file_stem().and_then(|s| s.to_str()).unwrap_or("loss");
+        let ext = self.base.extension().and_then(|s| s.to_str()).unwrap_or("csv");
+        let clean: String = label
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        self.base.with_file_name(format!("{stem}-{clean}.{ext}"))
+    }
+}
+
+impl RunObserver for LossCsvObserver {
+    fn on_run_end(&self, run: &RunMeta, result: &RunResult) {
+        let path = self.path_for(&run.label);
+        if let Err(e) = result.metrics.write_loss_csv(&path) {
+            let msg = format!("cannot write loss csv {path:?}: {e:#}");
+            eprintln!("[loss-csv] {msg}");
+            self.errors.lock().unwrap().push(msg);
+        }
+    }
+}
+
+/// One recorded event (see [`RecordingObserver`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ObserverEvent {
+    Step { label: String, step: usize, loss: f32 },
+    Eval { label: String, step: usize, test_error: f64 },
+    ScaleMove { label: String, step: usize, moves: usize },
+    WarmupEnd { label: String, int_bits: Vec<i32> },
+    RunEnd { label: String, test_error: f64 },
+}
+
+/// Records every event in arrival order — the collector the tests (and
+/// any programmatic consumer) use instead of scraping stderr.
+#[derive(Default)]
+pub struct RecordingObserver {
+    events: Mutex<Vec<ObserverEvent>>,
+}
+
+impl RecordingObserver {
+    pub fn new() -> RecordingObserver {
+        RecordingObserver::default()
+    }
+
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<ObserverEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    fn record(&self, ev: ObserverEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+}
+
+impl RunObserver for RecordingObserver {
+    fn on_step(&self, run: &RunMeta, step: usize, loss: f32) {
+        self.record(ObserverEvent::Step { label: run.label.clone(), step, loss });
+    }
+
+    fn on_eval(&self, run: &RunMeta, step: usize, _loss: f32, test_error: f64) {
+        self.record(ObserverEvent::Eval { label: run.label.clone(), step, test_error });
+    }
+
+    fn on_scale_move(&self, run: &RunMeta, step: usize, moves: usize) {
+        self.record(ObserverEvent::ScaleMove { label: run.label.clone(), step, moves });
+    }
+
+    fn on_warmup_end(&self, run: &RunMeta, int_bits: &[i32]) {
+        self.record(ObserverEvent::WarmupEnd {
+            label: run.label.clone(),
+            int_bits: int_bits.to_vec(),
+        });
+    }
+
+    fn on_run_end(&self, run: &RunMeta, result: &RunResult) {
+        self.record(ObserverEvent::RunEnd {
+            label: run.label.clone(),
+            test_error: result.test_error,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observers_fan_out_in_order() {
+        let rec = Arc::new(RecordingObserver::new());
+        let mut obs = Observers::new();
+        assert!(obs.is_empty());
+        obs.push(rec.clone());
+        obs.push(rec.clone());
+        assert_eq!(obs.len(), 2);
+        let meta = RunMeta {
+            name: "t".into(),
+            label: "t".into(),
+            backend: "native".into(),
+            steps: 1,
+            role: RunRole::Standalone,
+        };
+        obs.step(&meta, 0, 1.5);
+        let events = rec.take();
+        // both attached copies saw the event
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0], ObserverEvent::Step { label: "t".into(), step: 0, loss: 1.5 });
+    }
+
+    #[test]
+    fn loss_csv_paths_suffix_labels() {
+        let single = LossCsvObserver::new("/tmp/out.csv");
+        assert_eq!(single.path_for("anything"), PathBuf::from("/tmp/out.csv"));
+        let per = LossCsvObserver::per_label("/tmp/out.csv");
+        assert_eq!(per.path_for("10"), PathBuf::from("/tmp/out-10.csv"));
+        // hostile label characters are sanitized
+        assert_eq!(per.path_for("a/b c"), PathBuf::from("/tmp/out-a_b_c.csv"));
+    }
+
+    #[test]
+    fn recording_observer_captures_all_event_kinds() {
+        let rec = RecordingObserver::new();
+        let meta = RunMeta {
+            name: "r".into(),
+            label: "p1".into(),
+            backend: "native".into(),
+            steps: 2,
+            role: RunRole::Point,
+        };
+        rec.on_scale_move(&meta, 3, 2);
+        rec.on_warmup_end(&meta, &[3, 4]);
+        let events = rec.take();
+        assert_eq!(
+            events,
+            vec![
+                ObserverEvent::ScaleMove { label: "p1".into(), step: 3, moves: 2 },
+                ObserverEvent::WarmupEnd { label: "p1".into(), int_bits: vec![3, 4] },
+            ]
+        );
+        assert!(rec.take().is_empty(), "take drains");
+    }
+}

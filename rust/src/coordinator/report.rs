@@ -1,0 +1,292 @@
+//! Serializable run reports: machine-readable sweep results.
+//!
+//! Every paper figure is a sweep, and downstream tooling (plotting,
+//! regression tracking, CI smoke checks) wants the rows as data, not as
+//! stderr lines. [`RunReport`] is the serializable subset of a
+//! [`RunResult`]; [`SweepReport`] is a whole sweep — baseline plus rows
+//! with the paper's normalized errors — writable as JSON through the
+//! dependency-free writer in [`crate::config::json`] and parseable back
+//! with the same module (`lpdnn sweep --report out.json` emits one).
+//!
+//! The schema is versioned (`"version": 1`) and keys serialize in
+//! sorted order (the writer's `BTreeMap`), so emitted files are
+//! diff-stable and golden-testable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::sweep::SweepOutcome;
+use super::trainer::RunResult;
+use crate::config::json::{Json, JsonError};
+use crate::error::Context;
+
+/// Schema version stamped into every [`SweepReport`].
+pub const REPORT_VERSION: i64 = 1;
+
+/// The serializable subset of one finished run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    pub name: String,
+    pub label: String,
+    pub backend: String,
+    pub test_error: f64,
+    /// Tail-averaged final training loss (NaN serializes as null).
+    pub train_loss: f64,
+    /// Per-group int_bits at the end (empty for non-dynamic runs is
+    /// never the case — the controller always reports — but tolerated).
+    pub final_int_bits: Vec<i32>,
+    pub steps: usize,
+    pub wallclock_secs: f64,
+}
+
+impl RunReport {
+    pub fn from_result(r: &RunResult) -> RunReport {
+        RunReport {
+            name: r.config_name.clone(),
+            label: r.label.clone(),
+            backend: r.backend_name.clone(),
+            test_error: r.test_error,
+            train_loss: r.train_loss as f64,
+            final_int_bits: r.final_int_bits.clone(),
+            steps: r.steps_run,
+            wallclock_secs: r.wallclock.as_secs_f64(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        m.insert("test_error".to_string(), Json::Num(self.test_error));
+        m.insert("train_loss".to_string(), Json::Num(self.train_loss));
+        m.insert(
+            "final_int_bits".to_string(),
+            Json::Array(self.final_int_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+        );
+        m.insert("steps".to_string(), Json::Num(self.steps as f64));
+        m.insert("wallclock_secs".to_string(), Json::Num(self.wallclock_secs));
+        Json::Object(m)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<RunReport> {
+        let bits = v
+            .get("final_int_bits")?
+            .as_array()?
+            .iter()
+            .map(|b| b.as_i64().map(|x| x as i32))
+            .collect::<Result<Vec<i32>, JsonError>>()?;
+        Ok(RunReport {
+            name: v.get("name")?.as_str()?.to_string(),
+            label: v.get("label")?.as_str()?.to_string(),
+            backend: v.get("backend")?.as_str()?.to_string(),
+            test_error: num_or_nan(v.get("test_error")?)?,
+            train_loss: num_or_nan(v.get("train_loss")?)?,
+            final_int_bits: bits,
+            steps: v.get("steps")?.as_usize()?,
+            wallclock_secs: num_or_nan(v.get("wallclock_secs")?)?,
+        })
+    }
+}
+
+/// One serialized sweep row: label, normalized error, full run report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRowReport {
+    pub label: String,
+    /// test error / baseline test error (the paper's presentation).
+    pub normalized: f64,
+    pub run: RunReport,
+}
+
+impl SweepRowReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("normalized".to_string(), Json::Num(self.normalized));
+        m.insert("run".to_string(), self.run.to_json());
+        Json::Object(m)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<SweepRowReport> {
+        Ok(SweepRowReport {
+            label: v.get("label")?.as_str()?.to_string(),
+            normalized: num_or_nan(v.get("normalized")?)?,
+            run: RunReport::from_json(v.get("run")?)?,
+        })
+    }
+}
+
+/// A whole sweep, serializable: baseline + rows in point order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    /// Backend the sweep ran on.
+    pub backend: String,
+    /// Worker-pool size the sweep was executed with (informational:
+    /// rows are bit-identical for any value).
+    pub jobs: usize,
+    pub baseline: RunReport,
+    pub rows: Vec<SweepRowReport>,
+}
+
+impl SweepReport {
+    pub fn from_outcome(outcome: &SweepOutcome, jobs: usize) -> SweepReport {
+        SweepReport {
+            backend: outcome.baseline.backend_name.clone(),
+            jobs,
+            baseline: RunReport::from_result(&outcome.baseline),
+            rows: outcome
+                .rows
+                .iter()
+                .map(|r| SweepRowReport {
+                    label: r.label.clone(),
+                    normalized: r.normalized,
+                    run: RunReport::from_result(&r.result),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".to_string(), Json::Num(REPORT_VERSION as f64));
+        m.insert("backend".to_string(), Json::Str(self.backend.clone()));
+        m.insert("jobs".to_string(), Json::Num(self.jobs as f64));
+        m.insert("baseline".to_string(), self.baseline.to_json());
+        m.insert(
+            "rows".to_string(),
+            Json::Array(self.rows.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Object(m)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<SweepReport> {
+        if let Some(ver) = v.opt("version") {
+            let ver = ver.as_i64()?;
+            crate::ensure!(
+                ver == REPORT_VERSION,
+                "unsupported sweep report version {ver} (this build reads {REPORT_VERSION})"
+            );
+        }
+        Ok(SweepReport {
+            backend: v.get("backend")?.as_str()?.to_string(),
+            jobs: v.get("jobs")?.as_usize()?,
+            baseline: RunReport::from_json(v.get("baseline")?)?,
+            rows: v
+                .get("rows")?
+                .as_array()?
+                .iter()
+                .map(SweepRowReport::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Pretty-printed JSON document (trailing newline included).
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Write the report to `path`.
+    pub fn write(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing sweep report {path:?}"))
+    }
+}
+
+/// JSON numbers, tolerating the writer's NaN→null convention.
+fn num_or_nan(v: &Json) -> crate::Result<f64> {
+    match v {
+        Json::Null => Ok(f64::NAN),
+        other => Ok(other.as_f64()?),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json;
+
+    fn sample() -> SweepReport {
+        SweepReport {
+            backend: "native".into(),
+            jobs: 4,
+            baseline: RunReport {
+                name: "base".into(),
+                label: "base".into(),
+                backend: "native".into(),
+                test_error: 0.25,
+                train_loss: 0.5,
+                final_int_bits: vec![3, -1],
+                steps: 10,
+                wallclock_secs: 0.75,
+            },
+            rows: vec![SweepRowReport {
+                label: "p".into(),
+                normalized: 1.5,
+                run: RunReport {
+                    name: "point".into(),
+                    label: "p".into(),
+                    backend: "native".into(),
+                    test_error: 0.375,
+                    train_loss: 0.25,
+                    final_int_bits: vec![],
+                    steps: 10,
+                    wallclock_secs: 1.25,
+                },
+            }],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_the_json_module() {
+        let report = sample();
+        let text = report.to_json_string();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(SweepReport::from_json(&parsed).unwrap(), report);
+        // compact form too
+        let compact = json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(SweepReport::from_json(&compact).unwrap(), report);
+    }
+
+    #[test]
+    fn nan_losses_serialize_as_null_and_read_back_as_nan() {
+        let mut report = sample();
+        report.baseline.train_loss = f64::NAN;
+        let parsed = json::parse(&report.to_json().to_string()).unwrap();
+        let back = SweepReport::from_json(&parsed).unwrap();
+        assert!(back.baseline.train_loss.is_nan());
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut doc = sample().to_json();
+        if let Json::Object(m) = &mut doc {
+            m.insert("version".to_string(), Json::Num(99.0));
+        }
+        let err = SweepReport::from_json(&doc).unwrap_err();
+        assert!(format!("{err}").contains("version 99"));
+    }
+
+    #[test]
+    fn from_result_carries_the_run_fields() {
+        let r = RunResult {
+            config_name: "cfg".into(),
+            label: "lbl".into(),
+            backend_name: "native".into(),
+            test_error: 0.125,
+            train_loss: 0.5,
+            metrics: Default::default(),
+            final_int_bits: vec![2],
+            steps_run: 7,
+            wallclock: std::time::Duration::from_millis(250),
+        };
+        let rep = RunReport::from_result(&r);
+        assert_eq!(rep.name, "cfg");
+        assert_eq!(rep.label, "lbl");
+        assert_eq!(rep.steps, 7);
+        assert_eq!(rep.wallclock_secs, 0.25);
+        assert_eq!(rep.final_int_bits, vec![2]);
+    }
+}

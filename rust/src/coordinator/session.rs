@@ -1,0 +1,285 @@
+//! [`Session`]: the experiment-driving entry point.
+//!
+//! A session owns backend construction (through a
+//! [`BackendSpec`](crate::runtime::BackendSpec)), a set of attached
+//! [`RunObserver`]s, and a `jobs` knob for sweep parallelism:
+//!
+//! * [`Session::run`] executes one experiment on the session's own
+//!   backend (built lazily and reused across runs, so the PJRT compile
+//!   cache amortizes over a whole suite).
+//! * [`Session::sweep`] executes the paper's figure machinery: the
+//!   float32 baseline first, then every point fanned across `jobs`
+//!   worker threads. Each worker constructs its *own* backend from the
+//!   spec (backends are stateful and not `Send`), claims points off a
+//!   shared counter, and writes its rows into per-point slots — so the
+//!   returned rows are in deterministic point order and, because every
+//!   run is fully seeded and the native kernels preserve accumulation
+//!   order at any thread count, bit-identical to a `jobs = 1` sweep.
+//!
+//! Worker threads multiply with the native backend's own matmul threads
+//! (`LPDNN_THREADS`); on a saturated host cap one of the two.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::observer::{Observers, RunObserver, RunRole};
+use super::sweep::{SweepOutcome, SweepPoint, SweepRow};
+use super::trainer::{RunResult, Trainer};
+use crate::config::ExperimentConfig;
+use crate::error::Context;
+use crate::runtime::{Backend, BackendSpec};
+
+/// Owns how experiments execute: backend construction, observers,
+/// sweep parallelism. See the module docs.
+pub struct Session {
+    spec: BackendSpec,
+    jobs: usize,
+    observers: Observers,
+    /// Lazily-built engine for single runs and `jobs = 1` sweeps.
+    backend: Option<Box<dyn Backend>>,
+}
+
+impl Session {
+    pub fn new(spec: BackendSpec) -> Session {
+        Session { spec, jobs: 1, observers: Observers::new(), backend: None }
+    }
+
+    /// Session for the backend named by `LPDNN_BACKEND` (unset = native).
+    pub fn from_env() -> crate::Result<Session> {
+        Ok(Session::new(BackendSpec::from_env()?))
+    }
+
+    /// Set the sweep worker count (clamped to ≥ 1). `jobs = 1` runs
+    /// points sequentially on the session's own backend.
+    pub fn with_jobs(mut self, jobs: usize) -> Session {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// Attach an observer (builder form).
+    pub fn with_observer(mut self, obs: Arc<dyn RunObserver>) -> Session {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Attach an observer.
+    pub fn add_observer(&mut self, obs: Arc<dyn RunObserver>) {
+        self.observers.push(obs);
+    }
+
+    pub fn spec(&self) -> &BackendSpec {
+        &self.spec
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Name of the session's backend (constructs it on first call).
+    pub fn backend_name(&mut self) -> crate::Result<&'static str> {
+        Ok(self.backend()?.name())
+    }
+
+    /// Whether the session's backend can run `model` (constructs the
+    /// backend on first call).
+    pub fn supports_model(&mut self, model: &str) -> crate::Result<bool> {
+        Ok(self.backend()?.supports_model(model))
+    }
+
+    fn backend(&mut self) -> crate::Result<&mut dyn Backend> {
+        if self.backend.is_none() {
+            self.backend = Some(self.spec.create()?);
+        }
+        Ok(self.backend.as_mut().unwrap().as_mut())
+    }
+
+    /// Run one experiment end to end and return its results.
+    pub fn run(&mut self, cfg: ExperimentConfig) -> crate::Result<RunResult> {
+        let label = cfg.name.clone();
+        self.run_inner(cfg, label, RunRole::Standalone)
+    }
+
+    fn run_inner(
+        &mut self,
+        cfg: ExperimentConfig,
+        label: String,
+        role: RunRole,
+    ) -> crate::Result<RunResult> {
+        let observers = self.observers.clone();
+        let backend = self.backend()?;
+        Trainer::new(backend, cfg, label, role, &observers).run()
+    }
+
+    /// Run `baseline` first (the float32 reference), then every point
+    /// across the session's worker pool. Rows come back in point order,
+    /// normalized by the baseline error, and are bit-identical for any
+    /// `jobs` value (see module docs).
+    pub fn sweep(
+        &mut self,
+        baseline: &ExperimentConfig,
+        points: &[SweepPoint],
+    ) -> crate::Result<SweepOutcome> {
+        let base = self
+            .run_inner(baseline.clone(), baseline.name.clone(), RunRole::Baseline)
+            .with_context(|| format!("sweep baseline '{}'", baseline.name))?;
+        let base_err = base.test_error;
+
+        let jobs = self.jobs.min(points.len().max(1));
+        let rows = if jobs <= 1 {
+            let mut rows = Vec::with_capacity(points.len());
+            for p in points {
+                let r = self
+                    .run_inner(p.cfg.clone(), p.label.clone(), RunRole::Point)
+                    .with_context(|| format!("sweep point '{}'", p.label))?;
+                rows.push(SweepRow::from_result(p.label.clone(), r, base_err));
+            }
+            rows
+        } else {
+            self.sweep_parallel(points, base_err, jobs)?
+        };
+        Ok(SweepOutcome { baseline: base, rows })
+    }
+
+    /// The worker pool: `jobs` threads, each with its own backend built
+    /// from the spec, claiming points off a shared counter.
+    fn sweep_parallel(
+        &self,
+        points: &[SweepPoint],
+        base_err: f64,
+        jobs: usize,
+    ) -> crate::Result<Vec<SweepRow>> {
+        let spec = &self.spec;
+        let observers = &self.observers;
+        let next = AtomicUsize::new(0);
+        // Once any point fails, workers stop claiming new points (runs
+        // already in flight finish normally) — matching the `jobs = 1`
+        // path, which stops at the first failure.
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<crate::Result<SweepRow>>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(|| {
+                    // One engine per worker, reused across every point
+                    // this worker claims.
+                    let mut backend: Option<Box<dyn Backend>> = None;
+                    loop {
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= points.len() {
+                            break;
+                        }
+                        let point = &points[i];
+                        let row = (|| -> crate::Result<SweepRow> {
+                            if backend.is_none() {
+                                backend = Some(spec.create()?);
+                            }
+                            let be = backend.as_mut().unwrap();
+                            let r = Trainer::new(
+                                be.as_mut(),
+                                point.cfg.clone(),
+                                point.label.clone(),
+                                RunRole::Point,
+                                observers,
+                            )
+                            .run()?;
+                            Ok(SweepRow::from_result(point.label.clone(), r, base_err))
+                        })();
+                        if row.is_err() {
+                            failed.store(true, Ordering::Relaxed);
+                        }
+                        *slots[i].lock().unwrap() = Some(row);
+                    }
+                });
+            }
+        });
+
+        // Collect in point order; surface the first failure (by point
+        // order, not completion order) with its label attached. Claims
+        // are monotonic in the point index, so unexecuted (None) slots
+        // can only sit after the failed point and are never reached.
+        let mut rows = Vec::with_capacity(points.len());
+        for (slot, p) in slots.into_iter().zip(points) {
+            match slot.into_inner().unwrap() {
+                Some(row) => {
+                    rows.push(row.with_context(|| format!("sweep point '{}'", p.label))?)
+                }
+                None => crate::bail!(
+                    "sweep point '{}' was not executed (sweep aborted after a failure)",
+                    p.label
+                ),
+            }
+        }
+        Ok(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arithmetic, DataConfig, TrainConfig};
+
+    fn tiny_cfg(name: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.into(),
+            model: "pi_mlp".into(),
+            arithmetic: Arithmetic::Float32,
+            train: TrainConfig { steps: 2, seed: 7, ..Default::default() },
+            data: DataConfig { dataset: "clusters".into(), n_train: 128, n_test: 64 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_runs_and_reuses_its_backend() {
+        let mut s = Session::new(BackendSpec::native());
+        assert_eq!(s.jobs(), 1);
+        assert_eq!(s.backend_name().unwrap(), "native");
+        assert!(s.supports_model("pi_mlp").unwrap());
+        assert!(!s.supports_model("conv").unwrap());
+        let a = s.run(tiny_cfg("sess-a")).unwrap();
+        let b = s.run(tiny_cfg("sess-b")).unwrap();
+        assert_eq!(a.label, "sess-a");
+        assert!(a.test_error.is_finite() && b.test_error.is_finite());
+    }
+
+    #[test]
+    fn jobs_clamped_to_at_least_one() {
+        let s = Session::new(BackendSpec::native()).with_jobs(0);
+        assert_eq!(s.jobs(), 1);
+    }
+
+    #[test]
+    fn sweep_rows_keep_point_order_under_parallelism() {
+        let baseline = tiny_cfg("order-base");
+        let points: Vec<SweepPoint> = (0..5)
+            .map(|i| {
+                let mut cfg = tiny_cfg(&format!("order-{i}"));
+                cfg.arithmetic =
+                    Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
+                SweepPoint { label: format!("{i}"), cfg }
+            })
+            .collect();
+        let mut s = Session::new(BackendSpec::native()).with_jobs(3);
+        let out = s.sweep(&baseline, &points).unwrap();
+        assert_eq!(out.baseline.config_name, "order-base");
+        let labels: Vec<&str> = out.rows.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, ["0", "1", "2", "3", "4"]);
+        assert!(out.rows.iter().all(|r| r.normalized.is_finite()));
+    }
+
+    #[test]
+    fn sweep_point_failure_names_the_point() {
+        let baseline = tiny_cfg("fail-base");
+        let mut bad = tiny_cfg("fail-point");
+        bad.model = "conv".into(); // native backend cannot run it
+        bad.data.dataset = "digits".into();
+        let points = vec![SweepPoint { label: "bad".into(), cfg: bad }];
+        let mut s = Session::new(BackendSpec::native()).with_jobs(2);
+        let err = s.sweep(&baseline, &points).unwrap_err();
+        assert!(format!("{err:#}").contains("sweep point 'bad'"));
+    }
+}

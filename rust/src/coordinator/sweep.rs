@@ -1,15 +1,17 @@
-//! Parameter sweeps: the machinery behind every paper figure.
+//! Sweep data model: the machinery behind every paper figure.
 //!
-//! A sweep is a base [`ExperimentConfig`] plus a list of variants; the
-//! runner executes each variant on ONE shared [`Backend`] (so the PJRT
-//! backend's compile cache — and any future backend state worth keeping —
-//! is reused across tens of runs) and reports normalized final test
-//! errors: the paper's own presentation (every figure divides by the
-//! dataset's float32 baseline error).
+//! A sweep is a base [`ExperimentConfig`] (the float32 baseline) plus a
+//! list of variant points. [`Session::sweep`](super::Session::sweep)
+//! runs the baseline first, fans the points across its worker pool, and
+//! reports normalized final test errors: the paper's own presentation
+//! (every figure divides by the dataset's float32 baseline error).
+//!
+//! This module holds the plain data types; the scheduling lives in
+//! [`session`](super::session) and the serializable form in
+//! [`report`](super::report).
 
+use super::trainer::RunResult;
 use crate::config::ExperimentConfig;
-use crate::coordinator::trainer::{RunResult, Trainer};
-use crate::runtime::Backend;
 
 /// One sweep point: a label and the config to run.
 #[derive(Clone, Debug)]
@@ -29,49 +31,33 @@ pub struct SweepRow {
     pub result: RunResult,
 }
 
-/// Run `baseline` first (float32 reference), then every point; returns
-/// (baseline error, rows with normalized errors).
-pub fn run_sweep(
-    backend: &mut dyn Backend,
-    baseline: &ExperimentConfig,
-    points: &[SweepPoint],
-    verbose: bool,
-) -> crate::Result<(f64, Vec<SweepRow>)> {
-    // `&mut *backend` reborrows so the one backend serves every run
-    let mut t = Trainer::new(&mut *backend, baseline.clone());
-    t.verbose = verbose;
-    let base = t.run()?;
-    drop(t);
-    let base_err = base.test_error.max(1e-9);
-    if verbose {
-        eprintln!(
-            "[sweep] baseline '{}' error {:.4} ({:.1?})",
-            baseline.name, base.test_error, base.wallclock
-        );
-    }
-
-    let mut rows = Vec::with_capacity(points.len());
-    for p in points {
-        let mut t = Trainer::new(&mut *backend, p.cfg.clone());
-        t.verbose = verbose;
-        let r = t.run()?;
-        drop(t);
-        if verbose {
-            eprintln!(
-                "[sweep] {} error {:.4} (x{:.2} baseline, {:.1?})",
-                p.label,
-                r.test_error,
-                r.test_error / base_err,
-                r.wallclock
-            );
+impl SweepRow {
+    /// Build a row from a finished run, normalizing against the sweep's
+    /// baseline error (floored so a perfect baseline cannot divide by
+    /// zero).
+    pub fn from_result(label: String, result: RunResult, baseline_error: f64) -> SweepRow {
+        SweepRow {
+            label,
+            test_error: result.test_error,
+            normalized: result.test_error / baseline_error.max(1e-9),
+            wallclock: result.wallclock,
+            result,
         }
-        rows.push(SweepRow {
-            label: p.label.clone(),
-            test_error: r.test_error,
-            normalized: r.test_error / base_err,
-            wallclock: r.wallclock,
-            result: r,
-        });
     }
-    Ok((base.test_error, rows))
+}
+
+/// Everything a finished sweep reports: the baseline run and one row
+/// per point, in the order the points were given (regardless of the
+/// worker count that executed them).
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub baseline: RunResult,
+    pub rows: Vec<SweepRow>,
+}
+
+impl SweepOutcome {
+    /// The float32 reference error every row is normalized by.
+    pub fn baseline_error(&self) -> f64 {
+        self.baseline.test_error
+    }
 }

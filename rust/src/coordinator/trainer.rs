@@ -1,4 +1,4 @@
-//! The training coordinator: drives one experiment over any [`Backend`].
+//! The training loop: drives one experiment over any [`Backend`].
 //!
 //! One [`Trainer`] owns a full run: dataset synthesis, parameter init
 //! (quantized onto the storage grid), the minibatch loop feeding the
@@ -10,6 +10,12 @@
 //! §Backends) — so this loop is written once and the sweeps/benches are
 //! backend-agnostic.
 //!
+//! The trainer is crate-internal machinery: experiments are started
+//! through [`Session`](super::Session), which owns backend construction
+//! (via [`crate::runtime::BackendSpec`]) and fans progress out to the
+//! attached [`RunObserver`](super::RunObserver)s. The trainer itself
+//! never prints; it emits typed events.
+//!
 //! Dynamic fixed point warmup (paper 9.3): "We find the initial scaling
 //! factors by training with a higher precision format. Once those scaling
 //! factors are found, we reinitialize the model parameters." When
@@ -18,6 +24,7 @@
 //! reinitializes parameters and trains at the target bit-widths.
 
 use super::metrics::Metrics;
+use super::observer::{Observers, RunMeta, RunRole};
 use super::scale_ctrl::ScaleController;
 use crate::config::{Arithmetic, ExperimentConfig};
 use crate::data::{Batcher, Dataset};
@@ -25,10 +32,29 @@ use crate::error::Context;
 use crate::runtime::{Backend, ModelInfo, StepParams};
 use crate::tensor::Pcg32;
 
+/// RNG stream tags. Every stochastic choice in a run derives from the
+/// experiment seed through forked PCG32 streams; these constants name
+/// each fork so the warmup phase and the main phase can never silently
+/// diverge in which stream feeds which consumer:
+///
+/// * [`RNG_FORK_INIT`] — forked off the phase's root stream for
+///   parameter initialization ([`Backend::init_state`]).
+/// * [`RNG_FORK_BATCHER`] — forked off the phase's root stream for
+///   minibatch shuffling ([`Batcher::new`]).
+/// * [`WARMUP_SEED_XOR`] — xor'd into the experiment seed to derive the
+///   warmup phase's root stream, so warmup sees the same *distributions*
+///   (same fork tags) over decorrelated draws, and the post-warmup
+///   reinitialization (paper 9.3) starts from fresh parameters.
+pub const RNG_FORK_INIT: u64 = 0x1217;
+pub const RNG_FORK_BATCHER: u64 = 0xBA7C;
+pub const WARMUP_SEED_XOR: u64 = 0xAAAA;
+
 /// Everything a finished run reports.
 #[derive(Clone, Debug)]
 pub struct RunResult {
     pub config_name: String,
+    /// Sweep-point label (equals `config_name` for standalone runs).
+    pub label: String,
     /// Which backend executed the run ("native" / "pjrt").
     pub backend_name: String,
     /// Final test error rate in [0, 1].
@@ -42,23 +68,35 @@ pub struct RunResult {
     pub wallclock: std::time::Duration,
 }
 
-/// Drives one experiment end to end on a borrowed backend. The backend
-/// outlives the trainer, so sweeps reuse one backend (and its compile
-/// caches) across many runs.
-pub struct Trainer<'a> {
-    pub backend: &'a mut dyn Backend,
-    pub cfg: ExperimentConfig,
-    /// Print progress lines to stderr.
-    pub verbose: bool,
+/// Drives one experiment end to end on a borrowed backend. Constructed
+/// only by [`Session`](super::Session) (single runs and sweep workers).
+pub(crate) struct Trainer<'a> {
+    backend: &'a mut dyn Backend,
+    cfg: ExperimentConfig,
+    meta: RunMeta,
+    observers: &'a Observers,
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(backend: &'a mut dyn Backend, cfg: ExperimentConfig) -> Self {
-        Trainer { backend, cfg, verbose: false }
+    pub(crate) fn new(
+        backend: &'a mut dyn Backend,
+        cfg: ExperimentConfig,
+        label: String,
+        role: RunRole,
+        observers: &'a Observers,
+    ) -> Trainer<'a> {
+        let meta = RunMeta {
+            name: cfg.name.clone(),
+            label,
+            backend: backend.name().to_string(),
+            steps: cfg.train.steps,
+            role,
+        };
+        Trainer { backend, cfg, meta, observers }
     }
 
     /// Run the experiment and return its results.
-    pub fn run(&mut self) -> crate::Result<RunResult> {
+    pub(crate) fn run(&mut self) -> crate::Result<RunResult> {
         let started = std::time::Instant::now();
         self.cfg.validate()?;
         let model = self.backend.begin_run(&self.cfg)?;
@@ -80,14 +118,12 @@ impl<'a> Trainer<'a> {
             if warmup_steps > 0 {
                 let learned = self.warmup(&model, &dataset, warmup_steps)?;
                 ctrl.adopt_int_bits(&learned);
-                if self.verbose {
-                    eprintln!("[{}] warmup adopted int_bits {learned:?}", self.cfg.name);
-                }
+                self.observers.warmup_end(&self.meta, &learned);
             }
         }
 
         // Parameter init (reinitialized after warmup per the paper).
-        let mut init_rng = root_rng.fork(0x1217);
+        let mut init_rng = root_rng.fork(RNG_FORK_INIT);
         self.backend.init_state(&ctrl, &mut init_rng)?;
 
         // Train loop.
@@ -96,7 +132,7 @@ impl<'a> Trainer<'a> {
             &dataset.train,
             model.train_batch,
             model.n_classes,
-            root_rng.fork(0xBA7C),
+            root_rng.fork(RNG_FORK_BATCHER),
         );
         let steps = self.cfg.train.steps;
         for t in 0..steps {
@@ -105,9 +141,11 @@ impl<'a> Trainer<'a> {
             let out = self.backend.train_step(&ctrl, &x, &y, &hp).context("train step")?;
             crate::ensure!(out.loss.is_finite(), "non-finite loss at step {t}: {}", out.loss);
             metrics.record_loss(t, out.loss);
+            self.observers.step(&self.meta, t, out.loss);
             ctrl.observe_matrix(&out.overflow);
             if let Some(moves) = ctrl.after_batch(model.train_batch, t) {
                 metrics.record_scale_moves(t, moves);
+                self.observers.scale_move(&self.meta, t, moves);
             }
             if self.cfg.train.eval_every > 0
                 && t + 1 != steps
@@ -115,21 +153,24 @@ impl<'a> Trainer<'a> {
             {
                 let err = self.evaluate(&model, &ctrl, &dataset)?;
                 metrics.record_eval(t, err);
-                if self.verbose {
-                    eprintln!(
-                        "[{}] step {t}: loss {:.4} err {:.4}",
-                        self.cfg.name, out.loss, err
-                    );
-                }
+                self.observers.eval(&self.meta, t, out.loss, err);
             }
         }
 
         // Final evaluation.
         let err = self.evaluate(&model, &ctrl, &dataset)?;
-        metrics.record_eval(steps.saturating_sub(1), err);
+        let last_step = steps.saturating_sub(1);
+        metrics.record_eval(last_step, err);
+        self.observers.eval(
+            &self.meta,
+            last_step,
+            metrics.final_loss().unwrap_or(f32::NAN),
+            err,
+        );
 
-        Ok(RunResult {
+        let result = RunResult {
             config_name: self.cfg.name.clone(),
+            label: self.meta.label.clone(),
             backend_name: self.backend.name().to_string(),
             test_error: err,
             train_loss: metrics.tail_loss(10).unwrap_or(f32::NAN),
@@ -137,7 +178,9 @@ impl<'a> Trainer<'a> {
             metrics,
             steps_run: steps,
             wallclock: started.elapsed(),
-        })
+        };
+        self.observers.run_end(&self.meta, &result);
+        Ok(result)
     }
 
     /// Resolve the schedules at step `t` into per-step backend inputs.
@@ -192,14 +235,14 @@ impl<'a> Trainer<'a> {
             max_rate,
             (model.train_batch * 4).max(1), // tick every 4 batches
         );
-        let root_rng = Pcg32::seeded(self.cfg.train.seed ^ 0xAAAA);
-        let mut rng = root_rng.fork(0x1217);
+        let root_rng = Pcg32::seeded(self.cfg.train.seed ^ WARMUP_SEED_XOR);
+        let mut rng = root_rng.fork(RNG_FORK_INIT);
         self.backend.init_state(&ctrl, &mut rng)?;
         let mut batcher = Batcher::new(
             &dataset.train,
             model.train_batch,
             model.n_classes,
-            root_rng.fork(0xBA7C),
+            root_rng.fork(RNG_FORK_BATCHER),
         );
         for t in 0..warmup_steps {
             let (x, y) = batcher.next_batch();

@@ -2,13 +2,17 @@
 //!
 //! See `lpdnn help` (or `cli::help()`) for the subcommand reference.
 
+use std::sync::Arc;
+
 use lpdnn::arith::FixedFormat;
 use lpdnn::cli::{self, Args};
 use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
-use lpdnn::coordinator::Trainer;
+use lpdnn::coordinator::{
+    LossCsvObserver, Session, StderrProgress, SweepPoint, SweepReport,
+};
 use lpdnn::data::Dataset;
 use lpdnn::error::Context;
-use lpdnn::runtime::{create_backend, Manifest};
+use lpdnn::runtime::{BackendSpec, Manifest};
 use lpdnn::tensor::Pcg32;
 
 fn main() {
@@ -24,6 +28,7 @@ fn run(argv: Vec<String>) -> lpdnn::Result<()> {
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_train(&args), // eval = train with --steps 1 semantics; kept for discoverability
+        "sweep" => cmd_sweep(&args),
         "datasets" => cmd_datasets(&args),
         "formats" => cmd_formats(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -91,9 +96,14 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     let verbose = args.has("verbose");
     args.finish()?;
 
-    let mut backend = create_backend(cfg.backend)?;
-    let mut trainer = Trainer::new(backend.as_mut(), cfg.clone());
-    trainer.verbose = verbose;
+    let mut session = Session::new(BackendSpec::new(cfg.backend));
+    if verbose {
+        session.add_observer(Arc::new(StderrProgress::new()));
+    }
+    let csv_obs = loss_csv.as_ref().map(|p| Arc::new(LossCsvObserver::new(p)));
+    if let Some(obs) = &csv_obs {
+        session.add_observer(obs.clone());
+    }
 
     eprintln!(
         "training '{}': backend={} model={} dataset={} arith={} steps={}",
@@ -104,7 +114,7 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
         cfg.arithmetic.label(),
         cfg.train.steps
     );
-    let result = trainer.run()?;
+    let result = session.run(cfg.clone())?;
 
     println!("experiment:      {}", result.config_name);
     println!("backend:         {}", result.backend_name);
@@ -120,9 +130,232 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
             result.metrics.scale_moves.iter().map(|&(_, n)| n).sum::<usize>()
         );
     }
+    if let Some(obs) = &csv_obs {
+        if let Some(e) = obs.first_error() {
+            lpdnn::bail!("{e}");
+        }
+    }
     if let Some(path) = loss_csv {
-        result.metrics.write_loss_csv(&path)?;
         println!("loss curve:      {path}");
+    }
+    Ok(())
+}
+
+/// The valid `--axis` values with their default `--points`. The arith
+/// default omits float32: the baseline every sweep runs first *is* the
+/// float32 row, so a float32 point would just repeat that run to
+/// report 1.00x.
+const SWEEP_AXES: [(&str, &str); 5] = [
+    ("arith", "half,fixed,dynamic"),
+    ("comp-bits", "8,10,12,16,20"),
+    ("up-bits", "8,10,12,16,20"),
+    ("int-bits", "0,2,4,5,6,8"),
+    ("overflow-rate", "1e-5,1e-4,1e-3,1e-2"),
+];
+
+/// A quantized copy of the base arithmetic, or a clear error.
+fn require_quantized(base: &Arithmetic, axis: &str) -> lpdnn::Result<Arithmetic> {
+    match base {
+        Arithmetic::Fixed { .. } | Arithmetic::Dynamic { .. } => Ok(base.clone()),
+        _ => lpdnn::bail!(
+            "axis '{axis}' needs a quantized base arithmetic \
+             (pass --arith fixed or --arith dynamic)"
+        ),
+    }
+}
+
+/// Resolve one `--points` value on the chosen axis into an arithmetic.
+/// `scale_budget` mirrors cmd_sweep's step handling: only the built-in
+/// default budget (no explicit --steps/--config) scales the dynamic
+/// point's warmup by LPDNN_BENCH_SCALE.
+fn apply_axis(
+    base: &Arithmetic,
+    axis: &str,
+    value: &str,
+    n_train: usize,
+    scale_budget: bool,
+) -> lpdnn::Result<Arithmetic> {
+    let parse_bits = |v: &str| -> lpdnn::Result<i32> {
+        v.parse().map_err(|e| lpdnn::err!("--points value '{v}': {e}"))
+    };
+    Ok(match axis {
+        "arith" => match value {
+            "float32" => Arithmetic::Float32,
+            "half" | "float16" => Arithmetic::Half,
+            "fixed" => Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 },
+            "dynamic" => Arithmetic::Dynamic {
+                bits_comp: 10,
+                bits_up: 12,
+                max_overflow_rate: 1e-4,
+                // paper: every 10 000 examples; scaled to the configured
+                // corpus so the controller ticks comparably often
+                update_every_examples: (n_train / 2).max(512),
+                init_int_bits: 3,
+                warmup_steps: if scale_budget {
+                    lpdnn::bench_support::scaled(50)
+                } else {
+                    50
+                },
+            },
+            other => lpdnn::bail!("unknown arithmetic '{other}' on the arith axis"),
+        },
+        "comp-bits" => {
+            let mut a = require_quantized(base, axis)?;
+            match &mut a {
+                Arithmetic::Fixed { bits_comp, .. } | Arithmetic::Dynamic { bits_comp, .. } => {
+                    *bits_comp = parse_bits(value)?;
+                }
+                _ => unreachable!(),
+            }
+            a
+        }
+        "up-bits" => {
+            let mut a = require_quantized(base, axis)?;
+            match &mut a {
+                Arithmetic::Fixed { bits_up, .. } | Arithmetic::Dynamic { bits_up, .. } => {
+                    *bits_up = parse_bits(value)?;
+                }
+                _ => unreachable!(),
+            }
+            a
+        }
+        "int-bits" => match base {
+            Arithmetic::Fixed { .. } => {
+                let mut a = base.clone();
+                if let Arithmetic::Fixed { int_bits, .. } = &mut a {
+                    *int_bits = parse_bits(value)?;
+                }
+                a
+            }
+            _ => lpdnn::bail!("axis 'int-bits' needs --arith fixed (the paper's Figure 1)"),
+        },
+        "overflow-rate" => match base {
+            Arithmetic::Dynamic { .. } => {
+                let mut a = base.clone();
+                if let Arithmetic::Dynamic { max_overflow_rate, .. } = &mut a {
+                    *max_overflow_rate = value
+                        .parse()
+                        .map_err(|e| lpdnn::err!("--points value '{value}': {e}"))?;
+                }
+                a
+            }
+            _ => lpdnn::bail!("axis 'overflow-rate' needs --arith dynamic"),
+        },
+        _ => unreachable!("axis membership is validated in build_sweep"),
+    })
+}
+
+/// Expand the base config + axis + points into (baseline, sweep points).
+fn build_sweep(
+    base: &ExperimentConfig,
+    axis: &str,
+    points: Option<&str>,
+    scale_budget: bool,
+) -> lpdnn::Result<(ExperimentConfig, Vec<SweepPoint>)> {
+    let Some(&(_, default_points)) = SWEEP_AXES.iter().find(|(a, _)| *a == axis) else {
+        let known: Vec<&str> = SWEEP_AXES.iter().map(|&(a, _)| a).collect();
+        lpdnn::bail!("unknown sweep axis '{axis}' (expected one of {})", known.join("|"));
+    };
+    let mut baseline = base.clone();
+    baseline.name = format!("{}-baseline", base.name);
+    baseline.arithmetic = Arithmetic::Float32;
+
+    let values: Vec<String> = points
+        .unwrap_or(default_points)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if values.is_empty() {
+        lpdnn::bail!("no sweep points: pass --points v1,v2,... for axis '{axis}'");
+    }
+
+    let mut out = Vec::with_capacity(values.len());
+    for v in &values {
+        let mut cfg = base.clone();
+        cfg.name = format!("{}-{v}", base.name);
+        cfg.arithmetic = apply_axis(&base.arithmetic, axis, v, base.data.n_train, scale_budget)?;
+        out.push(SweepPoint { label: v.clone(), cfg });
+    }
+    Ok((baseline, out))
+}
+
+fn cmd_sweep(args: &Args) -> lpdnn::Result<()> {
+    // An explicit budget — the --steps flag or a user-authored config
+    // file — is honored verbatim; only the built-in default scales by
+    // LPDNN_BENCH_SCALE (so smoke runs like CI's stay tiny without
+    // silently rescaling configured experiments).
+    let has_config = args.get_opt("config").is_some();
+    let has_steps_flag = args.get_opt("steps").is_some();
+    if has_config && has_steps_flag {
+        lpdnn::bail!("--steps conflicts with --config (set steps in the config file)");
+    }
+    let explicit_steps = has_steps_flag || has_config;
+    let mut base = config_from_args(args)?;
+    let axis = args.get("axis", "arith");
+    let points_flag = args.get_opt("points");
+    let jobs = args.get_parse("jobs", 1usize)?.max(1);
+    let report_path = args.get_opt("report");
+    let loss_csv = args.get_opt("loss-csv");
+    let verbose = args.has("verbose");
+    args.finish()?;
+
+    if !explicit_steps {
+        base.train.steps = lpdnn::bench_support::scaled(base.train.steps);
+    }
+    if base.name == "cli" {
+        base.name = format!("sweep-{axis}");
+    }
+    let (baseline, points) = build_sweep(&base, &axis, points_flag.as_deref(), !explicit_steps)?;
+
+    let mut session = Session::new(BackendSpec::new(base.backend)).with_jobs(jobs);
+    if verbose {
+        session.add_observer(Arc::new(StderrProgress::new()));
+    }
+    let csv_obs = loss_csv.as_ref().map(|p| Arc::new(LossCsvObserver::per_label(p)));
+    if let Some(obs) = &csv_obs {
+        session.add_observer(obs.clone());
+    }
+
+    eprintln!(
+        "sweep '{}': backend={} axis={} points={} jobs={} steps={}",
+        base.name,
+        base.backend.label(),
+        axis,
+        points.len(),
+        jobs,
+        base.train.steps
+    );
+    let outcome = session.sweep(&baseline, &points)?;
+
+    println!(
+        "baseline '{}' error: {:.4}",
+        outcome.baseline.config_name,
+        outcome.baseline_error()
+    );
+    let mut table =
+        lpdnn::bench_support::Table::new(&["point", "test error", "normalized", "wallclock"]);
+    for r in &outcome.rows {
+        table.row(&[
+            r.label.clone(),
+            format!("{:.4}", r.test_error),
+            format!("{:.2}x", r.normalized),
+            format!("{:.1?}", r.wallclock),
+        ]);
+    }
+    table.print();
+
+    if let Some(obs) = &csv_obs {
+        if let Some(e) = obs.first_error() {
+            lpdnn::bail!("{e}");
+        }
+    }
+    if let Some(path) = &loss_csv {
+        println!("loss curves:     {path} (one file per point, suffixed by label)");
+    }
+    if let Some(path) = report_path {
+        SweepReport::from_outcome(&outcome, jobs).write(&path)?;
+        println!("report:          {path}");
     }
     Ok(())
 }

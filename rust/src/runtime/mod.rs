@@ -1,7 +1,7 @@
-//! Execution runtime: the pluggable [`Backend`] trait and its two
-//! implementations.
+//! Execution runtime: the pluggable [`Backend`] trait, the [`BackendSpec`]
+//! description that builds backends, and the two implementations.
 //!
-//! The coordinator ([`crate::coordinator::Trainer`]) is backend-agnostic:
+//! The coordinator ([`crate::coordinator::Session`]) is backend-agnostic:
 //! it owns dataset synthesis, schedules, the scale controller and the
 //! minibatch loop, and delegates every numeric step to a [`Backend`]:
 //!
@@ -25,6 +25,7 @@
 
 pub mod manifest;
 pub mod native;
+pub mod spec;
 
 #[cfg(feature = "pjrt")]
 pub mod literal_util;
@@ -35,8 +36,9 @@ pub use manifest::{ArtifactInfo, Manifest, ModelInfo, ParamSpec};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Engine, Executable, PjrtBackend};
+pub use spec::BackendSpec;
 
-use crate::config::{BackendKind, ExperimentConfig};
+use crate::config::ExperimentConfig;
 use crate::coordinator::ScaleController;
 use crate::tensor::{Pcg32, Tensor};
 
@@ -107,20 +109,4 @@ pub trait Backend {
     /// Current parameters as host tensors in manifest order (testing and
     /// inspection; the PJRT backend fetches from the device).
     fn params_host(&self) -> crate::Result<Vec<Tensor>>;
-}
-
-/// Construct the backend a config asks for. The PJRT backend is only
-/// available when the crate is built with `--features pjrt`.
-pub fn create_backend(kind: BackendKind) -> crate::Result<Box<dyn Backend>> {
-    match kind {
-        BackendKind::Native => Ok(Box::new(NativeBackend::new())),
-        #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::from_default_manifest()?)),
-        #[cfg(not(feature = "pjrt"))]
-        BackendKind::Pjrt => crate::bail!(
-            "this build has no PJRT support — rebuild with `--features pjrt` \
-             (and provide the xla crate, see rust/Cargo.toml) or use the \
-             native backend"
-        ),
-    }
 }

@@ -1,0 +1,128 @@
+//! [`BackendSpec`]: a cloneable, thread-safe *description* of how to
+//! build a backend.
+//!
+//! A [`Backend`](super::Backend) instance is stateful and deliberately
+//! not `Send` (the PJRT backend holds device buffers and an `Rc`-based
+//! compile cache), so it cannot be handed across threads. The spec is
+//! the opposite: a plain value (`BackendKind` + artifact location) that
+//! IS `Send + Sync + Clone`, so a parallel sweep can ship one spec to
+//! every worker and let each worker construct its own engine
+//! ([`crate::coordinator::Session`] does exactly that).
+//!
+//! This replaces the old free function `create_backend(kind)`: the kind
+//! alone was not enough to describe a backend once artifact directories
+//! entered the picture, and a bare `BackendKind` could not grow new
+//! fields without breaking every call site.
+
+use std::path::PathBuf;
+
+use super::{Backend, NativeBackend};
+use crate::config::BackendKind;
+
+/// How to build a [`Backend`]. Cheap to clone, safe to send across
+/// threads; each [`create`](BackendSpec::create) call returns a fresh,
+/// independent engine.
+#[derive(Clone, Debug)]
+pub struct BackendSpec {
+    kind: BackendKind,
+    /// Artifacts directory for the PJRT backend. `None` means
+    /// [`Manifest::default_dir`](super::Manifest::default_dir)
+    /// (`$LPDNN_ARTIFACTS` or `<crate root>/artifacts`).
+    artifacts_dir: Option<PathBuf>,
+}
+
+impl BackendSpec {
+    /// Spec for `kind` with default artifact resolution.
+    pub fn new(kind: BackendKind) -> BackendSpec {
+        BackendSpec { kind, artifacts_dir: None }
+    }
+
+    /// The self-contained pure-Rust backend (no artifacts needed).
+    pub fn native() -> BackendSpec {
+        BackendSpec::new(BackendKind::Native)
+    }
+
+    /// Spec for the backend named by `LPDNN_BACKEND` (unset = native).
+    pub fn from_env() -> crate::Result<BackendSpec> {
+        Ok(BackendSpec::new(BackendKind::from_env()?))
+    }
+
+    /// Override the artifacts directory (PJRT backend only; the native
+    /// backend ignores it).
+    pub fn with_artifacts_dir(mut self, dir: impl Into<PathBuf>) -> BackendSpec {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Short backend name ("native" / "pjrt") without constructing one.
+    pub fn label(&self) -> &'static str {
+        self.kind.label()
+    }
+
+    /// Construct a fresh backend from this description. The PJRT
+    /// backend is only available when the crate is built with
+    /// `--features pjrt`.
+    pub fn create(&self) -> crate::Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => {
+                let dir = self
+                    .artifacts_dir
+                    .clone()
+                    .unwrap_or_else(super::Manifest::default_dir);
+                let manifest = super::Manifest::load(dir)?;
+                Ok(Box::new(super::PjrtBackend::new(manifest)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => crate::bail!(
+                "this build has no PJRT support — rebuild with `--features pjrt` \
+                 (and provide the xla crate, see rust/Cargo.toml) or use the \
+                 native backend"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The whole point of the spec: sweep workers can share and ship it.
+    fn assert_send_sync<T: Send + Sync + Clone>() {}
+
+    #[test]
+    fn spec_is_send_sync_clone() {
+        assert_send_sync::<BackendSpec>();
+    }
+
+    #[test]
+    fn native_spec_creates_native_backend() {
+        let spec = BackendSpec::native();
+        assert_eq!(spec.kind(), BackendKind::Native);
+        assert_eq!(spec.label(), "native");
+        let backend = spec.create().unwrap();
+        assert_eq!(backend.name(), "native");
+        // every create() call is an independent engine
+        let again = spec.create().unwrap();
+        assert_eq!(again.name(), "native");
+    }
+
+    #[test]
+    fn artifacts_dir_override_is_recorded() {
+        let spec = BackendSpec::new(BackendKind::Pjrt).with_artifacts_dir("/tmp/arts");
+        assert_eq!(spec.kind(), BackendKind::Pjrt);
+        assert_eq!(spec.artifacts_dir.as_deref(), Some(std::path::Path::new("/tmp/arts")));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_spec_fails_cleanly_without_feature() {
+        let err = BackendSpec::new(BackendKind::Pjrt).create().unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}

@@ -7,8 +7,8 @@
 //! compiled path (see `pjrt_bridge` below and tests/smoke_hlo.rs).
 
 use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
-use lpdnn::coordinator::Trainer;
-use lpdnn::runtime::{Backend, NativeBackend};
+use lpdnn::coordinator::Session;
+use lpdnn::runtime::BackendSpec;
 
 fn cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
     ExperimentConfig {
@@ -30,8 +30,7 @@ fn cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
 }
 
 fn run(c: ExperimentConfig) -> lpdnn::coordinator::RunResult {
-    let mut backend = NativeBackend::new();
-    Trainer::new(&mut backend, c).run().unwrap()
+    Session::new(BackendSpec::native()).run(c).unwrap()
 }
 
 #[test]
@@ -137,20 +136,19 @@ fn dropout_training_stays_finite_and_deterministic() {
 }
 
 #[test]
-fn one_backend_serves_many_runs() {
-    // sweep-style reuse: one backend object across sequential runs
-    let mut backend = NativeBackend::new();
-    let a = Trainer::new(&mut backend, cfg("it-multi-a", Arithmetic::Float32, 8))
-        .run()
+fn one_session_serves_many_runs() {
+    // sweep-style reuse: one session (and its backend) across runs
+    let mut session = Session::new(BackendSpec::native());
+    let a = session.run(cfg("it-multi-a", Arithmetic::Float32, 8)).unwrap();
+    let b = session
+        .run(cfg(
+            "it-multi-b",
+            Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 },
+            8,
+        ))
         .unwrap();
-    let b = Trainer::new(
-        &mut backend,
-        cfg("it-multi-b", Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 }, 8),
-    )
-    .run()
-    .unwrap();
     assert!(a.test_error.is_finite() && b.test_error.is_finite());
-    assert!(backend.supports_model("pi_mlp"));
+    assert!(session.supports_model("pi_mlp").unwrap());
 }
 
 /// Cross-validation of the compiled PJRT path against the golden model —

@@ -1,12 +1,12 @@
 //! Native backend tests: parity with the golden step, and a fast
-//! end-to-end `Trainer` smoke run that needs no AOT artifacts — the
+//! end-to-end session smoke run that needs no AOT artifacts — the
 //! acceptance gate for the self-contained training path.
 
 use lpdnn::arith::{FixedFormat, Quantizer, RoundMode};
 use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
-use lpdnn::coordinator::{run_sweep, ScaleController, SweepPoint, Trainer};
+use lpdnn::coordinator::{ScaleController, Session, SweepPoint};
 use lpdnn::golden::{self, MlpShape};
-use lpdnn::runtime::{Backend, ModelInfo, NativeBackend, StepParams};
+use lpdnn::runtime::{Backend, BackendSpec, ModelInfo, NativeBackend, StepParams};
 use lpdnn::tensor::{ops, Pcg32, Tensor};
 
 fn digits_cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
@@ -88,14 +88,12 @@ fn native_backend_matches_golden_step_exactly() {
         .any(|(a, b)| a.data() != b.data()));
 }
 
-/// Fast end-to-end Trainer smoke test on the synthetic digits dataset:
+/// Fast end-to-end session smoke test on the synthetic digits dataset:
 /// trains, learns, evaluates — with zero artifacts on disk.
 #[test]
-fn native_trainer_end_to_end_smoke() {
-    let mut backend = NativeBackend::new();
-    let r = Trainer::new(&mut backend, digits_cfg("smoke", Arithmetic::Float32, 40))
-        .run()
-        .unwrap();
+fn native_session_end_to_end_smoke() {
+    let mut session = Session::new(BackendSpec::native());
+    let r = session.run(digits_cfg("smoke", Arithmetic::Float32, 40)).unwrap();
     assert_eq!(r.backend_name, "native");
     assert_eq!(r.steps_run, 40);
     assert!(r.test_error < 0.35, "error {:.3}", r.test_error);
@@ -107,10 +105,8 @@ fn native_trainer_end_to_end_smoke() {
 /// dynamic 10/12 with warmup stays in the same league as float32.
 #[test]
 fn native_dynamic_10_12_close_to_float32() {
-    let mut backend = NativeBackend::new();
-    let base = Trainer::new(&mut backend, digits_cfg("n-f32", Arithmetic::Float32, 60))
-        .run()
-        .unwrap();
+    let mut session = Session::new(BackendSpec::native());
+    let base = session.run(digits_cfg("n-f32", Arithmetic::Float32, 60)).unwrap();
     let arith = Arithmetic::Dynamic {
         bits_comp: 10,
         bits_up: 12,
@@ -119,7 +115,7 @@ fn native_dynamic_10_12_close_to_float32() {
         init_int_bits: 3,
         warmup_steps: 20,
     };
-    let dynr = Trainer::new(&mut backend, digits_cfg("n-dyn", arith, 60)).run().unwrap();
+    let dynr = session.run(digits_cfg("n-dyn", arith, 60)).unwrap();
     assert!(
         dynr.test_error <= base.test_error + 0.15,
         "dynamic {:.3} vs float32 {:.3}",
@@ -128,10 +124,10 @@ fn native_dynamic_10_12_close_to_float32() {
     );
 }
 
-/// run_sweep drives many runs over one shared native backend.
+/// Session::sweep drives many runs over one shared native backend.
 #[test]
 fn sweep_runs_on_native_backend() {
-    let mut backend = NativeBackend::new();
+    let mut session = Session::new(BackendSpec::native());
     let baseline = digits_cfg("sw-base", Arithmetic::Float32, 8);
     let points: Vec<SweepPoint> = [20i32, 8]
         .iter()
@@ -142,10 +138,10 @@ fn sweep_runs_on_native_backend() {
             SweepPoint { label: format!("{bits}"), cfg }
         })
         .collect();
-    let (base_err, rows) = run_sweep(&mut backend, &baseline, &points, false).unwrap();
-    assert!(base_err.is_finite());
-    assert_eq!(rows.len(), 2);
-    assert!(rows.iter().all(|r| r.normalized.is_finite()));
+    let outcome = session.sweep(&baseline, &points).unwrap();
+    assert!(outcome.baseline_error().is_finite());
+    assert_eq!(outcome.rows.len(), 2);
+    assert!(outcome.rows.iter().all(|r| r.normalized.is_finite()));
 }
 
 /// Eval batches with wrap-padding: only the first n_real examples count.
@@ -175,8 +171,7 @@ fn native_wide_model_runs() {
     assert_eq!(wide.params[0].shape, vec![4, 784, 256]);
     let mut cfg = digits_cfg("wide", Arithmetic::Float32, 6);
     cfg.model = "pi_mlp_wide".into();
-    let mut backend = NativeBackend::new();
-    let r = Trainer::new(&mut backend, cfg).run().unwrap();
+    let r = Session::new(BackendSpec::native()).run(cfg).unwrap();
     assert!(r.test_error.is_finite());
 }
 

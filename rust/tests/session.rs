@@ -1,0 +1,235 @@
+//! Session API integration tests: parallel-sweep determinism, the
+//! observer event stream, per-point loss CSVs, and the serializable
+//! sweep report (golden file + round-trip through `config/json.rs`).
+
+use std::sync::Arc;
+
+use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
+use lpdnn::coordinator::{
+    LossCsvObserver, ObserverEvent, RecordingObserver, RunReport, Session, SweepOutcome,
+    SweepPoint, SweepReport, SweepRowReport,
+};
+use lpdnn::runtime::BackendSpec;
+
+fn clusters_cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        model: "pi_mlp".into(),
+        arithmetic: arith,
+        train: TrainConfig {
+            steps,
+            lr_start: 0.15,
+            lr_end: 0.02,
+            seed: 2024,
+            max_norm: 3.0,
+            ..Default::default()
+        },
+        data: DataConfig { dataset: "clusters".into(), n_train: 256, n_test: 128 },
+        ..Default::default()
+    }
+}
+
+/// A 4-point mini-sweep (two fixed widths, float16, and the paper's
+/// dynamic 10/12 with warmup) on clusters/pi_mlp.
+fn mini_sweep(jobs: usize) -> SweepOutcome {
+    let baseline = clusters_cfg("det-base", Arithmetic::Float32, 8);
+    let mut points = Vec::new();
+    for bits in [20i32, 10] {
+        let mut cfg = clusters_cfg(&format!("det-fixed-{bits}"), Arithmetic::Float32, 8);
+        cfg.arithmetic = Arithmetic::Fixed { bits_comp: bits, bits_up: bits, int_bits: 5 };
+        points.push(SweepPoint { label: format!("fixed-{bits}"), cfg });
+    }
+    points.push(SweepPoint {
+        label: "half".into(),
+        cfg: clusters_cfg("det-half", Arithmetic::Half, 8),
+    });
+    let dynamic = Arithmetic::Dynamic {
+        bits_comp: 10,
+        bits_up: 12,
+        max_overflow_rate: 1e-4,
+        update_every_examples: 128,
+        init_int_bits: 3,
+        warmup_steps: 8,
+    };
+    points.push(SweepPoint {
+        label: "dynamic-10-12".into(),
+        cfg: clusters_cfg("det-dyn", dynamic, 8),
+    });
+    let mut session = Session::new(BackendSpec::native()).with_jobs(jobs);
+    session.sweep(&baseline, &points).unwrap()
+}
+
+/// The acceptance gate for parallel sweeps: `jobs = 4` rows must be
+/// bit-identical to `jobs = 1` — same test errors, same final int_bits,
+/// same tail losses, same order.
+#[test]
+fn parallel_sweep_is_bit_identical_to_sequential() {
+    let seq = mini_sweep(1);
+    let par = mini_sweep(4);
+    assert_eq!(seq.baseline.test_error, par.baseline.test_error);
+    assert_eq!(seq.rows.len(), 4);
+    assert_eq!(par.rows.len(), 4);
+    for (a, b) in seq.rows.iter().zip(&par.rows) {
+        assert_eq!(a.label, b.label, "rows must come back in point order");
+        assert_eq!(a.test_error, b.test_error, "{}: test error drifted", a.label);
+        assert_eq!(a.normalized, b.normalized, "{}: normalization drifted", a.label);
+        assert_eq!(
+            a.result.final_int_bits, b.result.final_int_bits,
+            "{}: scale trajectory drifted",
+            a.label
+        );
+        assert_eq!(
+            a.result.train_loss, b.result.train_loss,
+            "{}: tail loss drifted",
+            a.label
+        );
+        assert_eq!(a.result.metrics.losses, b.result.metrics.losses);
+    }
+}
+
+#[test]
+fn observer_receives_typed_event_stream() {
+    let rec = Arc::new(RecordingObserver::new());
+    let mut session = Session::new(BackendSpec::native()).with_observer(rec.clone());
+    let mut cfg = clusters_cfg("obs", Arithmetic::Float32, 6);
+    cfg.train.eval_every = 2;
+    let r = session.run(cfg).unwrap();
+
+    let events = rec.take();
+    let steps = events
+        .iter()
+        .filter(|e| matches!(e, ObserverEvent::Step { .. }))
+        .count();
+    assert_eq!(steps, 6, "one step event per SGD step");
+    let evals = events
+        .iter()
+        .filter(|e| matches!(e, ObserverEvent::Eval { .. }))
+        .count();
+    // eval_every=2 over 6 steps: periodic after steps 2 and 4, plus the
+    // final evaluation
+    assert_eq!(evals, 3);
+    match events.last().unwrap() {
+        ObserverEvent::RunEnd { label, test_error } => {
+            assert_eq!(label, "obs");
+            assert_eq!(*test_error, r.test_error);
+        }
+        other => panic!("last event should be RunEnd, got {other:?}"),
+    }
+}
+
+#[test]
+fn loss_csv_observer_writes_one_file_per_sweep_point() {
+    let dir = std::env::temp_dir().join("lpdnn_test_sweep_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base_path = dir.join("loss.csv");
+
+    let baseline = clusters_cfg("csv-base", Arithmetic::Float32, 4);
+    let mut point_cfg = clusters_cfg("csv-p20", Arithmetic::Float32, 4);
+    point_cfg.arithmetic = Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
+    let points = vec![SweepPoint { label: "p20".into(), cfg: point_cfg }];
+
+    let mut session = Session::new(BackendSpec::native())
+        .with_observer(Arc::new(LossCsvObserver::per_label(&base_path)));
+    session.sweep(&baseline, &points).unwrap();
+
+    for name in ["loss-csv-base.csv", "loss-p20.csv"] {
+        let path = dir.join(name);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("expected {path:?}: {e}"));
+        assert!(text.starts_with("step,loss"), "{name} is a loss curve");
+        assert_eq!(text.lines().count(), 5, "{name}: header + one line per step");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn golden_report() -> SweepReport {
+    SweepReport {
+        backend: "native".into(),
+        jobs: 2,
+        baseline: RunReport {
+            name: "fig-baseline".into(),
+            label: "fig-baseline".into(),
+            backend: "native".into(),
+            test_error: 0.125,
+            train_loss: 0.5,
+            final_int_bits: vec![3, -2, 0],
+            steps: 40,
+            wallclock_secs: 1.5,
+        },
+        rows: vec![
+            SweepRowReport {
+                label: "10".into(),
+                normalized: 1.25,
+                run: RunReport {
+                    name: "fig-10".into(),
+                    label: "10".into(),
+                    backend: "native".into(),
+                    test_error: 0.15625,
+                    train_loss: 0.75,
+                    final_int_bits: vec![],
+                    steps: 40,
+                    wallclock_secs: 2.0,
+                },
+            },
+            SweepRowReport {
+                label: "12".into(),
+                normalized: 1.0,
+                run: RunReport {
+                    name: "fig-12".into(),
+                    label: "12".into(),
+                    backend: "native".into(),
+                    test_error: 0.125,
+                    train_loss: 0.625,
+                    final_int_bits: vec![4],
+                    steps: 40,
+                    wallclock_secs: 0.5,
+                },
+            },
+        ],
+    }
+}
+
+/// The emitted JSON is golden: byte-for-byte stable across releases
+/// (sorted keys, fixed indentation, versioned schema).
+#[test]
+fn sweep_report_serialization_matches_golden_file() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/sweep_report_golden.json");
+    let golden = std::fs::read_to_string(path).expect("golden file");
+    assert_eq!(golden_report().to_json_string(), golden);
+}
+
+/// And the golden document round-trips: config/json.rs parses it back
+/// into an identical report.
+#[test]
+fn sweep_report_roundtrips_through_config_json() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/sweep_report_golden.json");
+    let golden = std::fs::read_to_string(path).expect("golden file");
+    let doc = lpdnn::config::json::parse(&golden).expect("golden parses");
+    let report = SweepReport::from_json(&doc).expect("golden deserializes");
+    assert_eq!(report, golden_report());
+    // serialize → parse → serialize is a fixed point
+    let again = lpdnn::config::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(SweepReport::from_json(&again).unwrap(), report);
+}
+
+/// A real (tiny) sweep produces a report whose JSON parses back with
+/// the same rows — the same check CI's sweep smoke step performs on the
+/// CLI output.
+#[test]
+fn real_sweep_report_roundtrips() {
+    let baseline = clusters_cfg("rep-base", Arithmetic::Float32, 4);
+    let mut cfg = clusters_cfg("rep-p", Arithmetic::Float32, 4);
+    cfg.arithmetic = Arithmetic::Fixed { bits_comp: 20, bits_up: 20, int_bits: 5 };
+    let points = vec![SweepPoint { label: "20".into(), cfg }];
+    let mut session = Session::new(BackendSpec::native()).with_jobs(2);
+    let outcome = session.sweep(&baseline, &points).unwrap();
+
+    let report = SweepReport::from_outcome(&outcome, session.jobs());
+    let parsed = lpdnn::config::json::parse(&report.to_json_string()).unwrap();
+    let back = SweepReport::from_json(&parsed).unwrap();
+    assert_eq!(back.rows.len(), 1);
+    assert_eq!(back.rows[0].label, "20");
+    assert_eq!(back.rows[0].run.test_error, outcome.rows[0].test_error);
+    assert_eq!(back.baseline.test_error, outcome.baseline.test_error);
+    assert_eq!(back.jobs, 2);
+}
