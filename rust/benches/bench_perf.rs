@@ -3,6 +3,8 @@
 //! * matmul kernels: seed-style naive loops vs blocked serial vs blocked
 //!   parallel, on the pi_mlp hot-path shapes (the acceptance numbers for
 //!   the parallel-matmul work)
+//! * fused quantize-aware GEMM vs the two-pass quantization epilogue
+//!   (per arithmetic, plus a fused-vs-two-pass full train step)
 //! * end-to-end train-step latency per model on the selected backend
 //! * host quantizer throughput (GB/s over f32)
 //! * golden/native train step (the native backend's hot path)
@@ -13,11 +15,11 @@
 #[path = "common.rs"]
 mod common;
 
-use lpdnn::arith::{FixedFormat, Quantizer, RoundMode};
+use lpdnn::arith::{FixedFormat, QuantEpilogue, Quantizer, RoundMode};
 use lpdnn::bench_support::{bench, scaled, Stats, Table};
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::{ScaleController, Session};
-use lpdnn::golden::{self, MlpShape};
+use lpdnn::golden::{self, MlpShape, StepOptions};
 use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
 
 fn fmt_stats(s: &Stats) -> String {
@@ -175,13 +177,10 @@ fn end_to_end_section(session: &mut Session, table: &mut Table) {
     }
 }
 
-fn native_step_section(table: &mut Table) {
-    // golden/native train step at pi_mlp scale — the native backend's
-    // hot path (runs the blocked/parallel kernels)
-    let shape = MlpShape::pi_mlp(128, 4);
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+/// Fresh pi_mlp-scale state for golden-step benches: (params, vels, x, y).
+fn pi_mlp_step_fixture() -> (Vec<Tensor>, Vec<Tensor>, Tensor, Tensor) {
     let mut rng = Pcg32::seeded(3);
-    let mut params = vec![
+    let params = vec![
         InitSpec::GlorotUniform { fan_in: 784, fan_out: 128 }
             .realize(&[4, 784, 128], &mut rng),
         Tensor::zeros(&[4, 128]),
@@ -191,16 +190,133 @@ fn native_step_section(table: &mut Table) {
         InitSpec::GlorotUniform { fan_in: 128, fan_out: 10 }.realize(&[128, 10], &mut rng),
         Tensor::zeros(&[10]),
     ];
-    let mut vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
     let x = Tensor::from_vec(&[64, 784], (0..64 * 784).map(|_| rng.uniform()).collect());
     let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
     let y = ops::one_hot(&labels, 10);
+    (params, vels, x, y)
+}
+
+fn native_step_section(table: &mut Table) {
+    // golden/native train step at pi_mlp scale — the native backend's
+    // hot path (runs the blocked/parallel kernels)
+    let shape = MlpShape::pi_mlp(128, 4);
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+    let (mut params, mut vels, x, y) = pi_mlp_step_fixture();
     let s = bench(1, scaled(10).max(3), || {
         let _ = golden::train_step(
             shape, &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, RoundMode::HalfAway,
         );
     });
     table.row(&["native/golden train step (pi_mlp, batch 64)".into(), fmt_stats(&s)]);
+}
+
+/// Fused quantize-aware GEMM vs the two-pass epilogue it replaced
+/// (materialize the f32 product → bias/copy sweep → `apply_slice`
+/// sweep) — the rows EXPERIMENTS.md §Perf tracks for this fusion, per
+/// arithmetic. The shapes are the pi_mlp sites where quantization is a
+/// visible fraction of the work (shallow reductions / large outputs).
+fn fused_gemm_section(table: &mut Table) {
+    let mut rng = Pcg32::seeded(41);
+    let mut rand = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal()).collect() };
+    let arithmetics: &[(&str, QuantEpilogue)] = &[
+        ("fixed 12.3", QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(12, 3)))),
+        ("float16", QuantEpilogue::half_sim()),
+        ("float32 passthrough", QuantEpilogue::new(Quantizer::float32())),
+    ];
+    let iters = scaled(40).max(10);
+
+    // NN: l1 z (64x128x128, with bias) — one maxout filter's fused tile
+    let (m, kd, n) = (64usize, 128usize, 128usize);
+    let a = rand(m * kd);
+    let b = rand(kd * n);
+    let bias = rand(n);
+    for (label, epi) in arithmetics {
+        let mut dst = vec![0.0f32; m * n];
+        let s_two = bench(2, iters, || {
+            let zj = ops::matmul_sl(&a, &b, m, kd, n);
+            for (drow, zrow) in dst.chunks_mut(n).zip(zj.chunks(n)) {
+                for ((d, &z), &bv) in drow.iter_mut().zip(zrow).zip(&bias) {
+                    *d = z + bv;
+                }
+            }
+            let _ = epi.run(&mut dst, 0);
+        });
+        let s_fused = bench(2, iters, || {
+            dst.fill(0.0);
+            let _ = ops::matmul_sl_q_into(&a, &b, Some(&bias), &mut dst, m, kd, n, *epi);
+        });
+        table.row(&[
+            format!("fused gemm nn l1 z 64x128x128+bias ({label})"),
+            format!(
+                "two-pass {:.2}ms | fused {:.2}ms | speedup {:.2}x",
+                s_two.mean * 1e3,
+                s_fused.mean * 1e3,
+                s_two.mean / s_fused.mean.max(1e-12),
+            ),
+        ]);
+    }
+
+    // TN: l0 dw (64-deep reduction onto a 784x128 output) — the shape
+    // where the second pass over the big dw tensor hurts most
+    let (ba, ia, ub) = (64usize, 784usize, 128usize);
+    let xs = rand(ba * ia);
+    let dz = rand(ba * ub);
+    for (label, epi) in arithmetics {
+        let mut dst = vec![0.0f32; ia * ub];
+        let s_two = bench(2, iters, || {
+            let dwj = ops::matmul_tn_sl(&xs, &dz, ba, ia, ub);
+            dst.copy_from_slice(&dwj);
+            let _ = epi.run(&mut dst, 0);
+        });
+        let s_fused = bench(2, iters, || {
+            dst.fill(0.0);
+            let _ = ops::matmul_tn_sl_q_into(&xs, &dz, &mut dst, ba, ia, ub, *epi);
+        });
+        table.row(&[
+            format!("fused gemm tn l0 dw 64^T 784x128 ({label})"),
+            format!(
+                "two-pass {:.2}ms | fused {:.2}ms | speedup {:.2}x",
+                s_two.mean * 1e3,
+                s_fused.mean * 1e3,
+                s_two.mean / s_fused.mean.max(1e-12),
+            ),
+        ]);
+    }
+
+    // end-to-end: a full golden train step, fused vs two-pass, on the
+    // fixed arithmetic (both paths are bit-identical; only time differs)
+    let shape = MlpShape::pi_mlp(128, 4);
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+    let step_iters = scaled(10).max(3);
+    let time_step = |fused: bool| {
+        let (mut params, mut vels, x, y) = pi_mlp_step_fixture();
+        bench(1, step_iters, || {
+            let _ = golden::train_step_opt(
+                shape,
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.01,
+                0.5,
+                3.0,
+                &ctrl,
+                StepOptions { fused, ..Default::default() },
+            );
+        })
+    };
+    let s_two = time_step(false);
+    let s_fused = time_step(true);
+    table.row(&[
+        "fused train step (pi_mlp, batch 64, fixed 12.3)".into(),
+        format!(
+            "two-pass {:.2}ms | fused {:.2}ms | speedup {:.2}x",
+            s_two.mean * 1e3,
+            s_fused.mean * 1e3,
+            s_two.mean / s_fused.mean.max(1e-12),
+        ),
+    ]);
 }
 
 fn quantizer_section(table: &mut Table) {
@@ -298,6 +414,7 @@ fn main() {
     let mut table = Table::new(&["benchmark", "result"]);
 
     matmul_section(&mut table);
+    fused_gemm_section(&mut table);
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
     quantizer_section(&mut table);

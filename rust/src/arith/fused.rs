@@ -1,0 +1,229 @@
+//! The quantization epilogue of the fused quantize-aware GEMM kernels.
+//!
+//! The paper's model re-quantizes every matmul output immediately (every
+//! multiplication result passes through the low-precision format before
+//! anything else reads it). The two-pass host implementation — produce
+//! the full f32 product, then sweep it again with
+//! [`Quantizer::apply_slice`] — pays one extra read+write of the whole
+//! tensor per quantization site. The fused kernels in
+//! [`crate::tensor::ops`] (`matmul_sl_q` & co.) instead run this
+//! [`QuantEpilogue`] over each output tile while it is still cache-hot.
+//!
+//! Everything here is designed around one invariant, enforced by
+//! `tests/fused_parity.rs`:
+//!
+//! > Splitting a tensor into tiles `(offset, slice)` and running the
+//! > epilogue per tile produces **bit-identical outputs and identical
+//! > [`QuantStats`] totals** to one whole-tensor sweep, for every
+//! > rounding mode, at any tile size and any thread count.
+//!
+//! Two ingredients make that hold:
+//!
+//! * Statistics are `u64` *counters* (never rates), so per-tile
+//!   [`QuantStats::merge`] is associative and order-insensitive.
+//! * Stochastic rounding draws its uniform sample from [`ElemRng`], a
+//!   counter-based stream keyed on the element's flat index in the
+//!   *logical* tensor — not on iteration order — so any tiling or
+//!   threading draws identical samples. (A sequential PRNG could never
+//!   satisfy the invariant: its samples depend on visit order.)
+
+use super::float16;
+use super::quantizer::{QuantStats, Quantizer};
+use super::round::RoundMode;
+
+/// SplitMix64 finalizer: the bit mixer behind [`ElemRng`].
+#[inline]
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-based uniform stream for stochastic rounding.
+///
+/// `at(i)` depends only on `(seed, i)`, so the sample for element `i` of
+/// a tensor is the same no matter which tile or thread visits it — the
+/// property that lets the fused kernels stay bit-identical to the
+/// two-pass sweep under `RoundMode::Stochastic`.
+#[derive(Clone, Copy, Debug)]
+pub struct ElemRng {
+    seed: u64,
+}
+
+impl ElemRng {
+    pub fn new(seed: u64) -> ElemRng {
+        ElemRng { seed: mix(seed) }
+    }
+
+    /// Derive the stream for quantization site `site` of a multi-site
+    /// consumer (the golden model numbers its sites in call order), so
+    /// distinct sites never share samples.
+    pub fn for_site(seed: u64, site: u64) -> ElemRng {
+        ElemRng::new(seed ^ mix(site ^ 0xE1E3_57CC_0A57_F00D))
+    }
+
+    /// Uniform sample in `[0, 1)` for element index `i` (24-bit
+    /// resolution, matching `Pcg32::uniform`).
+    #[inline]
+    pub fn at(&self, i: u64) -> f32 {
+        let z = mix(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        ((z >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+}
+
+/// One quantization site, ready to run inside (or after) a GEMM: the
+/// quantizer, the float16-simulation switch, the optional stochastic
+/// sample stream, and the flat-index base of this call's output within
+/// the logical tensor (non-zero when one logical tensor is produced by
+/// several GEMM calls, e.g. the per-filter maxout contractions).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantEpilogue {
+    pub quant: Quantizer,
+    /// Round-trip through IEEE binary16 instead of the fixed grid
+    /// (`StepOptions::half`); only totals are counted.
+    pub half: bool,
+    /// Sample stream for `RoundMode::Stochastic`. `None` falls back to
+    /// the midpoint sample 0.5, matching [`Quantizer::apply_slice`].
+    pub rng: Option<ElemRng>,
+    /// Flat-index offset of this call's output in the logical tensor.
+    pub base: u64,
+}
+
+impl QuantEpilogue {
+    /// Epilogue for a fixed-grid (or passthrough) quantizer.
+    pub fn new(quant: Quantizer) -> QuantEpilogue {
+        QuantEpilogue { quant, half: false, rng: None, base: 0 }
+    }
+
+    /// Epilogue for the float16 simulation (binary16 round-trip).
+    pub fn half_sim() -> QuantEpilogue {
+        QuantEpilogue { quant: Quantizer::float32(), half: true, rng: None, base: 0 }
+    }
+
+    /// Attach a stochastic-rounding sample stream.
+    pub fn with_rng(mut self, rng: ElemRng) -> QuantEpilogue {
+        self.rng = Some(rng);
+        self
+    }
+
+    /// The same site with a different flat-index base (per-GEMM-call
+    /// offsets into one logical tensor).
+    pub fn with_base(mut self, base: u64) -> QuantEpilogue {
+        self.base = base;
+        self
+    }
+
+    /// Float32 passthrough: values are untouched (only totals counted),
+    /// so fused kernels may skip per-element work entirely.
+    pub fn is_noop(&self) -> bool {
+        !self.half && self.quant.is_passthrough()
+    }
+
+    /// Quantize `xs` in place, where `xs` is the tile of the logical
+    /// tensor starting at flat index `self.base + offset`. Returns the
+    /// tile's overflow statistics.
+    ///
+    /// Bit-identical to [`Quantizer::apply_slice`] (fixed grids) and to
+    /// a [`float16::half_roundtrip`] sweep (`half`) on the same data,
+    /// for any split of the tensor into `(offset, tile)` pieces.
+    pub fn run(&self, xs: &mut [f32], offset: u64) -> QuantStats {
+        let mut st = QuantStats { n_total: xs.len() as u64, ..Default::default() };
+        if self.half {
+            for v in xs.iter_mut() {
+                *v = float16::half_roundtrip(*v);
+            }
+            return st;
+        }
+        let q = self.quant;
+        if q.is_passthrough() {
+            return st;
+        }
+        let half = q.maxv * 0.5;
+        match self.rng {
+            Some(rng) if q.mode == RoundMode::Stochastic => {
+                let start = self.base + offset;
+                for (i, v) in xs.iter_mut().enumerate() {
+                    let a = v.abs();
+                    if a >= q.maxv {
+                        st.n_over += 1;
+                    }
+                    if a >= half {
+                        st.n_half += 1;
+                    }
+                    *v = q.apply_with(*v, rng.at(start + i as u64));
+                }
+            }
+            _ => {
+                for v in xs.iter_mut() {
+                    let a = v.abs();
+                    if a >= q.maxv {
+                        st.n_over += 1;
+                    }
+                    if a >= half {
+                        st.n_half += 1;
+                    }
+                    *v = q.apply_with(*v, 0.5);
+                }
+            }
+        }
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Gen;
+
+    #[test]
+    fn elem_rng_is_deterministic_and_in_unit_interval() {
+        let rng = ElemRng::new(42);
+        for i in 0..10_000u64 {
+            let u = rng.at(i);
+            assert!((0.0..1.0).contains(&u), "i={i} u={u}");
+            assert_eq!(u, ElemRng::new(42).at(i));
+        }
+    }
+
+    #[test]
+    fn elem_rng_streams_decorrelate_across_seeds_and_sites() {
+        let a = ElemRng::new(1);
+        let b = ElemRng::new(2);
+        let same = (0..1000u64).filter(|&i| a.at(i) == b.at(i)).count();
+        assert!(same < 5, "seeds collide: {same}");
+        let s0 = ElemRng::for_site(7, 0);
+        let s1 = ElemRng::for_site(7, 1);
+        let same = (0..1000u64).filter(|&i| s0.at(i) == s1.at(i)).count();
+        assert!(same < 5, "sites collide: {same}");
+    }
+
+    // NOTE: the epilogue == apply_slice bit-identity and the tiling
+    // invariance are property-tested from the shared fixtures in
+    // tests/quantizer_prop.rs; here only the fused-module-specific
+    // surfaces (ElemRng, half_sim, noop) get unit coverage.
+
+    #[test]
+    fn half_sim_matches_roundtrip_sweep() {
+        let mut g = Gen::new(0x5E11);
+        let xs = g.vec_f32(64, 64, -100.0, 100.0);
+        let mut a = xs.clone();
+        let st = QuantEpilogue::half_sim().run(&mut a, 0);
+        assert_eq!(st, QuantStats { n_over: 0, n_half: 0, n_total: 64 });
+        for (got, &x) in a.iter().zip(&xs) {
+            assert_eq!(got.to_bits(), float16::half_roundtrip(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn noop_epilogue_counts_totals_only() {
+        let epi = QuantEpilogue::new(Quantizer::float32());
+        assert!(epi.is_noop());
+        assert!(!QuantEpilogue::half_sim().is_noop());
+        let mut xs = vec![1.5, -2.5e30, f32::MIN_POSITIVE];
+        let orig = xs.clone();
+        let st = epi.run(&mut xs, 0);
+        assert_eq!(xs, orig);
+        assert_eq!(st, QuantStats { n_over: 0, n_half: 0, n_total: 3 });
+    }
+}

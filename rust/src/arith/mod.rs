@@ -25,6 +25,9 @@
 //!                   Table 1) with round-to-nearest-even.
 //! * [`quantizer`] — tensor-level quantization + overflow statistics,
 //!                   the host twin of the Pallas kernel.
+//! * [`fused`]     — the quantization epilogue the fused GEMM kernels run
+//!                   per output tile, plus the counter-based stochastic
+//!                   sample stream that keeps tiling bit-transparent.
 //! * [`dynfixed`]  — per-group dynamic fixed point state + the paper's
 //!                   section 5 update rule (also used by the coordinator's
 //!                   scale controller).
@@ -33,11 +36,13 @@ pub mod dynfixed;
 pub mod fixed;
 pub mod float16;
 pub mod format;
+pub mod fused;
 pub mod quantizer;
 pub mod round;
 
 pub use dynfixed::{GroupState, OverflowCounts, UpdateDecision};
 pub use fixed::QFixed;
 pub use format::FixedFormat;
+pub use fused::{ElemRng, QuantEpilogue};
 pub use quantizer::{QuantStats, Quantizer};
 pub use round::RoundMode;

@@ -25,10 +25,26 @@ pub struct QuantStats {
 }
 
 impl QuantStats {
+    /// Fold `other`'s counters into `self`.
+    ///
+    /// Merging carries raw `u64` **counters** — never rates — so it is
+    /// associative and order-insensitive: any tiling of a tensor, merged
+    /// in any order, yields the same totals and therefore the same
+    /// [`Self::rate`]. The fused GEMM kernels rely on this to merge
+    /// per-tile statistics without drifting from a single-pass sweep
+    /// (regression-tested below; averaging per-tile *rates* would weight
+    /// tiles equally regardless of size and break the invariant).
     pub fn merge(&mut self, other: QuantStats) {
         self.n_over += other.n_over;
         self.n_half += other.n_half;
         self.n_total += other.n_total;
+    }
+
+    /// Non-mutating [`Self::merge`] (fold helper for per-tile stats).
+    #[must_use]
+    pub fn merged(mut self, other: QuantStats) -> QuantStats {
+        self.merge(other);
+        self
     }
 
     /// Overflow rate at the current scale.
@@ -244,5 +260,57 @@ mod tests {
         let mut a = QuantStats { n_over: 1, n_half: 2, n_total: 10 };
         a.merge(QuantStats { n_over: 3, n_half: 4, n_total: 20 });
         assert_eq!(a, QuantStats { n_over: 4, n_half: 6, n_total: 30 });
+        assert_eq!(a, QuantStats { n_over: 1, n_half: 2, n_total: 10 }
+            .merged(QuantStats { n_over: 3, n_half: 4, n_total: 20 }));
+    }
+
+    #[test]
+    fn merge_is_associative_and_order_insensitive() {
+        // The fused kernels merge per-tile stats in tile order, but the
+        // contract must not depend on it: counters (and the rates derived
+        // from them) are identical for any association or permutation.
+        forall("merge associativity", |g: &mut Gen| {
+            let tiles: Vec<QuantStats> = (0..g.usize_range(1, 8))
+                .map(|_| {
+                    let n_total = g.u64() % 1000;
+                    let n_half = if n_total == 0 { 0 } else { g.u64() % (n_total + 1) };
+                    let n_over = if n_half == 0 { 0 } else { g.u64() % (n_half + 1) };
+                    QuantStats { n_over, n_half, n_total }
+                })
+                .collect();
+            // left fold
+            let mut left = QuantStats::default();
+            for &t in &tiles {
+                left.merge(t);
+            }
+            // right-associated fold
+            let mut right = QuantStats::default();
+            for &t in tiles.iter().rev() {
+                right = t.merged(right);
+            }
+            // a rotated order
+            let mut rotated = QuantStats::default();
+            let pivot = g.usize_range(0, tiles.len() - 1);
+            for &t in tiles[pivot..].iter().chain(&tiles[..pivot]) {
+                rotated.merge(t);
+            }
+            assert_eq!(left, right);
+            assert_eq!(left, rotated);
+            assert_eq!(left.rate().to_bits(), right.rate().to_bits());
+            assert_eq!(left.half_rate().to_bits(), rotated.half_rate().to_bits());
+        });
+    }
+
+    #[test]
+    fn rates_come_from_merged_counters_not_averaged_tile_rates() {
+        // Regression guard for the drift the counter contract prevents:
+        // two tiles of different sizes — the merged rate weights by tile
+        // size; a mean of per-tile rates would not.
+        let a = QuantStats { n_over: 1, n_half: 1, n_total: 2 }; // rate 0.5
+        let b = QuantStats { n_over: 0, n_half: 0, n_total: 8 }; // rate 0.0
+        let merged = a.merged(b);
+        assert_eq!(merged.rate(), 0.1);
+        let mean_of_rates = (a.rate() + b.rate()) / 2.0; // 0.25 — wrong
+        assert!((merged.rate() - mean_of_rates).abs() > 0.1);
     }
 }

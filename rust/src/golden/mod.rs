@@ -17,7 +17,14 @@
 //!
 //! The hot contractions run on the blocked/parallel slice kernels in
 //! [`crate::tensor::ops`], contracting per-filter sub-blocks of the
-//! `[k, I, U]` weight tensors without materializing copies.
+//! `[k, I, U]` weight tensors without materializing copies. The Z, DW
+//! and DX group quantizations ride the *fused* quantize-aware kernels
+//! (`matmul_sl_q` & co.): rounding, clipping and overflow counting run
+//! in the GEMM block epilogue instead of as a second whole-tensor sweep.
+//! [`StepOptions::fused`] (default on; `LPDNN_FUSED=0` flips it) selects
+//! between the fused kernels and the two-pass reference path — the two
+//! are bit-identical in outputs and overflow counters at any thread
+//! count (`tests/fused_parity.rs`, DESIGN.md §Fused quantized GEMM).
 //!
 //! The compiled artifact's in-graph hash-PRNG dropout is a device detail
 //! and is not mirrored bit-for-bit; the native path implements standard
@@ -25,12 +32,23 @@
 //! ([`StepOptions::dropout`]). Cross-checks against the device run with
 //! dropout disabled.
 
-use crate::arith::{float16, QuantStats, Quantizer, RoundMode};
+use std::sync::OnceLock;
+
+use crate::arith::{ElemRng, QuantEpilogue, QuantStats, Quantizer, RoundMode};
 use crate::coordinator::ScaleController;
 use crate::runtime::manifest::{
     group_index, KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z,
 };
 use crate::tensor::{ops, Pcg32, Tensor};
+
+/// Default for [`StepOptions::fused`]: the fused quantized-GEMM kernels
+/// are on unless `LPDNN_FUSED=0` (which forces the two-pass reference
+/// path — an A/B hook for `bench_perf` and debugging; results are
+/// bit-identical either way).
+pub fn fused_default() -> bool {
+    static FUSED: OnceLock<bool> = OnceLock::new();
+    *FUSED.get_or_init(|| std::env::var("LPDNN_FUSED").map(|v| v != "0").unwrap_or(true))
+}
 
 /// Maxout MLP shape description (matches the manifest's pi_mlp).
 #[derive(Clone, Copy, Debug)]
@@ -79,23 +97,46 @@ pub struct StepOptions {
     pub half: bool,
     /// Inverted dropout (native path only; `None` = off).
     pub dropout: Option<Dropout>,
+    /// Quantize the Z/DW/DX groups inside the GEMM epilogues (fused
+    /// kernels) instead of with a second whole-tensor sweep. Bit-identical
+    /// either way; see [`fused_default`].
+    pub fused: bool,
 }
 
 impl Default for StepOptions {
     fn default() -> Self {
-        StepOptions { mode: RoundMode::HalfAway, half: false, dropout: None }
+        StepOptions {
+            mode: RoundMode::HalfAway,
+            half: false,
+            dropout: None,
+            fused: fused_default(),
+        }
     }
 }
 
 /// One quantization context: per-group quantizers + stat accumulation.
+///
+/// Every quantization *site* (one logical tensor hooked as one group)
+/// draws a [`QuantEpilogue`] via [`Self::epilogue`]; GEMM-adjacent sites
+/// hand it to the fused kernels, everything else runs it as a tensor
+/// sweep ([`Self::apply`]). Sites are numbered in call order so
+/// stochastic-rounding streams never overlap between sites, while within
+/// a site samples are keyed on the element's flat index — which is what
+/// keeps the fused (tiled, threaded) and two-pass paths bit-identical.
 pub struct GoldenQ<'c> {
     ctrl: &'c ScaleController,
     pub mode: RoundMode,
     /// Float16 simulation: binary16 round-trip instead of the fixed grid.
     pub half: bool,
+    /// Route GEMM-adjacent sites through the fused kernels (true) or the
+    /// two-pass reference path (false). Same bits either way.
+    pub fused: bool,
     stats: Vec<QuantStats>,
-    /// Uniform sample source for stochastic rounding ablations.
-    pub stochastic_u: Option<crate::tensor::Pcg32>,
+    /// Base seed for the counter-based stochastic-rounding streams
+    /// (`None` = deterministic midpoint sample, like `apply_slice`).
+    pub stochastic_seed: Option<u64>,
+    /// Quantization-site counter (advanced by [`Self::epilogue`]).
+    site: u64,
 }
 
 impl<'c> GoldenQ<'c> {
@@ -108,8 +149,10 @@ impl<'c> GoldenQ<'c> {
             ctrl,
             mode,
             half,
+            fused: fused_default(),
             stats: vec![QuantStats::default(); ctrl.n_groups()],
-            stochastic_u: None,
+            stochastic_seed: None,
+            site: 0,
         }
     }
 
@@ -119,40 +162,37 @@ impl<'c> GoldenQ<'c> {
         q
     }
 
-    /// Quantize tensor `t` as group (layer, kind), recording stats.
-    fn apply(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool) {
+    /// The epilogue for the next quantization site of group
+    /// (layer, kind). Advances the site counter — fused and two-pass
+    /// consumers of one logical site must share a single epilogue value.
+    fn epilogue(&mut self, layer: usize, kind: usize) -> QuantEpilogue {
         let g = group_index(layer, kind);
-        let st = if self.half {
+        let mut epi = if self.half {
             // binary16 round-trip; only totals are counted (the scale
             // controller is static under float16, so over/half are unused).
-            for v in t.data_mut().iter_mut() {
-                *v = float16::half_roundtrip(*v);
-            }
-            QuantStats { n_total: t.len() as u64, ..Default::default() }
+            QuantEpilogue::half_sim()
         } else {
-            let q = self.quantizer(g);
-            if let Some(rng) = self.stochastic_u.as_mut() {
-                let mut stats = QuantStats { n_total: t.len() as u64, ..Default::default() };
-                if !q.is_passthrough() {
-                    let half = q.maxv * 0.5;
-                    for v in t.data_mut().iter_mut() {
-                        let a = v.abs();
-                        if a >= q.maxv {
-                            stats.n_over += 1;
-                        }
-                        if a >= half {
-                            stats.n_half += 1;
-                        }
-                        *v = q.apply_with(*v, rng.uniform());
-                    }
-                }
-                stats
-            } else {
-                q.apply_slice(t.data_mut())
-            }
+            QuantEpilogue::new(self.quantizer(g))
         };
+        if let Some(seed) = self.stochastic_seed {
+            epi = epi.with_rng(ElemRng::for_site(seed, self.site));
+        }
+        self.site += 1;
+        epi
+    }
+
+    /// Fold one site's overflow counters into group (layer, kind).
+    fn record(&mut self, layer: usize, kind: usize, st: QuantStats) {
+        self.stats[group_index(layer, kind)].merge(st);
+    }
+
+    /// Two-pass tensor quantization for the non-GEMM sites (H, DZ, DB,
+    /// storage, and the multi-filter DH accumulation).
+    fn apply(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool) {
+        let epi = self.epilogue(layer, kind);
+        let st = epi.run(t.data_mut(), 0);
         if record {
-            self.stats[g].merge(st);
+            self.record(layer, kind, st);
         }
     }
 
@@ -180,22 +220,42 @@ fn maxout_fwd(
     let batch = x.shape()[0];
     assert_eq!(x.shape()[1], d_in);
 
-    // z for every filter, quantized as ONE group call (stats pooled like
-    // the fused kernel does). Each filter contracts a [d_in, units]
-    // sub-block of w in place — no weight copies.
+    // z for every filter, quantized as ONE logical site. Fused: each
+    // filter's [B, U] tile gets bias + quantization in its GEMM epilogue
+    // (base = the filter's offset in the [k, B, U] tensor). Two-pass:
+    // materialize all k tiles, then sweep the whole tensor. Identical
+    // per-element index stream → identical bits and counters.
     let mut zq = Tensor::zeros(&[k, batch, units]);
+    let epi = q.epilogue(layer, KIND_Z);
+    let mut zst = QuantStats::default();
     for j in 0..k {
         let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
-        let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
-        let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
         let brow = &b.data()[j * units..(j + 1) * units];
-        for r in 0..batch {
-            for u in 0..units {
-                dst[r * units + u] = zj[r * units + u] + brow[u];
+        let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+        if q.fused {
+            zst.merge(ops::matmul_sl_q_into(
+                x.data(),
+                wj,
+                Some(brow),
+                dst,
+                batch,
+                d_in,
+                units,
+                epi.with_base((j * batch * units) as u64),
+            ));
+        } else {
+            let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
+            for r in 0..batch {
+                for u in 0..units {
+                    dst[r * units + u] = zj[r * units + u] + brow[u];
+                }
             }
         }
     }
-    q.apply(&mut zq, layer, KIND_Z, true);
+    if !q.fused {
+        zst = epi.run(zq.data_mut(), 0);
+    }
+    q.record(layer, KIND_Z, zst);
 
     let mut h = Tensor::zeros(&[batch, units]);
     let mut amax = vec![0u8; batch * units];
@@ -279,9 +339,12 @@ pub fn train_step_opt(
     mut opts: StepOptions,
 ) -> GoldenOut {
     let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
+    q.fused = opts.fused;
     if opts.mode == RoundMode::Stochastic {
-        // true stochastic rounding needs a uniform sample per element
-        q.stochastic_u = Some(crate::tensor::Pcg32::seeded(0x57CC_4A57));
+        // true stochastic rounding draws one uniform sample per element
+        // from counter-based per-site streams (index-keyed, so the fused
+        // and two-pass paths sample identically)
+        q.stochastic_seed = Some(0x57CC_4A57);
     }
     let batch = x.shape()[0];
     let (k, units, classes) = (shape.k, shape.units, shape.n_classes);
@@ -314,13 +377,30 @@ pub fn train_step_opt(
         .as_mut()
         .and_then(|d| dropout_mask(&mut d.rng, h1.len(), d.hidden_rate));
     apply_mask(&mut h1, &m1);
-    let mut z2 = ops::matmul(&h1, &params[4]);
-    for r in 0..batch {
-        for c in 0..classes {
-            z2.data_mut()[r * classes + c] += params[5].data()[c];
+    let epi = q.epilogue(2, KIND_Z);
+    let z2 = if q.fused {
+        let (v, st) = ops::matmul_sl_q(
+            h1.data(),
+            params[4].data(),
+            Some(params[5].data()),
+            batch,
+            units,
+            classes,
+            epi,
+        );
+        q.record(2, KIND_Z, st);
+        Tensor::from_vec(&[batch, classes], v)
+    } else {
+        let mut z2 = ops::matmul(&h1, &params[4]);
+        for r in 0..batch {
+            for c in 0..classes {
+                z2.data_mut()[r * classes + c] += params[5].data()[c];
+            }
         }
-    }
-    q.apply(&mut z2, 2, KIND_Z, true);
+        let st = epi.run(z2.data_mut(), 0);
+        q.record(2, KIND_Z, st);
+        z2
+    };
     let logp = ops::log_softmax(&z2);
     let mut loss = 0.0f64;
     for i in 0..batch * classes {
@@ -335,12 +415,31 @@ pub fn train_step_opt(
         dz2.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
     }
     q.apply(&mut dz2, 2, KIND_DZ, true);
-    let mut dw2 = ops::matmul_tn(&h1, &dz2);
-    q.apply(&mut dw2, 2, KIND_DW, true);
+    let epi = q.epilogue(2, KIND_DW);
+    let dw2 = if q.fused {
+        let (v, st) = ops::matmul_tn_sl_q(h1.data(), dz2.data(), batch, units, classes, epi);
+        q.record(2, KIND_DW, st);
+        Tensor::from_vec(&[units, classes], v)
+    } else {
+        let mut dw2 = ops::matmul_tn(&h1, &dz2);
+        let st = epi.run(dw2.data_mut(), 0);
+        q.record(2, KIND_DW, st);
+        dw2
+    };
     let mut db2 = ops::sum_rows(&dz2);
     q.apply(&mut db2, 2, KIND_DB, true);
-    let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
-    q.apply(&mut dh1, 1, KIND_DH, true);
+    let epi = q.epilogue(1, KIND_DH);
+    let mut dh1 = if q.fused {
+        let (v, st) =
+            ops::matmul_nt_sl_q(dz2.data(), params[4].data(), batch, classes, units, epi);
+        q.record(1, KIND_DH, st);
+        Tensor::from_vec(&[batch, units], v)
+    } else {
+        let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
+        let st = epi.run(dh1.data_mut(), 0);
+        q.record(1, KIND_DH, st);
+        dh1
+    };
     apply_mask(&mut dh1, &m1);
 
     let (dw1, db1, mut dh0) =
@@ -387,14 +486,28 @@ pub fn eval_logits(
     let mut q = GoldenQ::with_half(ctrl, mode, half);
     let (h0, _) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
     let (h1, _) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
-    let mut z2 = ops::matmul(&h1, &params[4]);
-    for r in 0..batch {
-        for c in 0..classes {
-            z2.data_mut()[r * classes + c] += params[5].data()[c];
+    let epi = q.epilogue(2, KIND_Z);
+    if q.fused {
+        let (v, _st) = ops::matmul_sl_q(
+            h1.data(),
+            params[4].data(),
+            Some(params[5].data()),
+            batch,
+            shape.units,
+            classes,
+            epi,
+        );
+        Tensor::from_vec(&[batch, classes], v)
+    } else {
+        let mut z2 = ops::matmul(&h1, &params[4]);
+        for r in 0..batch {
+            for c in 0..classes {
+                z2.data_mut()[r * classes + c] += params[5].data()[c];
+            }
         }
+        let _ = epi.run(z2.data_mut(), 0);
+        z2
     }
-    q.apply(&mut z2, 2, KIND_Z, false);
-    z2
 }
 
 /// Backward through a maxout dense layer: route dh to the winning filter,
@@ -424,14 +537,33 @@ fn maxout_bwd(
     }
     q.apply(&mut dz, layer, KIND_DZ, true);
 
+    // dw for every filter, quantized as ONE logical site (like the z
+    // tiles in the forward pass). The dx contraction is NOT fused: its
+    // per-filter products are summed across filters before the caller
+    // quantizes the total as the lower layer's DH group.
     let mut dw = Tensor::zeros(&[k, d_in, units]);
     let mut db = Tensor::zeros(&[k, units]);
     let mut dx = Tensor::zeros(&[batch, d_in]);
+    let epi = q.epilogue(layer, KIND_DW);
+    let mut dwst = QuantStats::default();
     for j in 0..k {
         // contiguous [batch, units] view of this filter's dz
         let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
-        let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
-        dw.data_mut()[j * d_in * units..(j + 1) * d_in * units].copy_from_slice(&dwj);
+        let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
+        if q.fused {
+            dwst.merge(ops::matmul_tn_sl_q_into(
+                x.data(),
+                dzj,
+                dwj_dst,
+                batch,
+                d_in,
+                units,
+                epi.with_base((j * d_in * units) as u64),
+            ));
+        } else {
+            let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
+            dwj_dst.copy_from_slice(&dwj);
+        }
         let dbj = ops::sum_rows_sl(dzj, batch, units);
         db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
         if need_dx {
@@ -442,7 +574,10 @@ fn maxout_bwd(
             }
         }
     }
-    q.apply(&mut dw, layer, KIND_DW, true);
+    if !q.fused {
+        dwst = epi.run(dw.data_mut(), 0);
+    }
+    q.record(layer, KIND_DW, dwst);
     q.apply(&mut db, layer, KIND_DB, true);
     (dw, db, dx)
 }
@@ -450,40 +585,10 @@ fn maxout_bwd(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::FixedFormat;
-    use crate::tensor::init::InitSpec;
+    use crate::arith::{float16, FixedFormat};
     use crate::tensor::Pcg32;
 
-    fn tiny_shape() -> MlpShape {
-        MlpShape { d_in: 12, units: 8, k: 2, n_classes: 4 }
-    }
-
-    fn init_state(s: MlpShape, seed: u64) -> (Params, Params) {
-        let mut rng = Pcg32::seeded(seed);
-        let mk = |shape: &[usize], rng: &mut Pcg32, fan_in: usize, fan_out: usize| {
-            InitSpec::GlorotUniform { fan_in, fan_out }.realize(shape, rng)
-        };
-        let params = vec![
-            mk(&[s.k, s.d_in, s.units], &mut rng, s.d_in, s.units),
-            Tensor::zeros(&[s.k, s.units]),
-            mk(&[s.k, s.units, s.units], &mut rng, s.units, s.units),
-            Tensor::zeros(&[s.k, s.units]),
-            mk(&[s.units, s.n_classes], &mut rng, s.units, s.n_classes),
-            Tensor::zeros(&[s.n_classes]),
-        ];
-        let vels = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-        (params, vels)
-    }
-
-    fn batch(s: MlpShape, n: usize, seed: u64) -> (Tensor, Tensor) {
-        let mut rng = Pcg32::seeded(seed);
-        let x = Tensor::from_vec(
-            &[n, s.d_in],
-            (0..n * s.d_in).map(|_| rng.normal()).collect(),
-        );
-        let labels: Vec<usize> = (0..n).map(|_| rng.below(s.n_classes as u32) as usize).collect();
-        (x, ops::one_hot(&labels, s.n_classes))
-    }
+    use crate::testing::{mlp_batch as batch, mlp_state as init_state, tiny_mlp as tiny_shape};
 
     #[test]
     fn float32_loss_decreases_over_steps() {
@@ -578,13 +683,16 @@ mod tests {
         let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
         let (x, y) = batch(s, 8, 10);
         let mut q_ctx_probe = GoldenQ::new(&ctrl, RoundMode::Stochastic);
-        q_ctx_probe.stochastic_u = Some(Pcg32::seeded(11));
-        // run via public API with stochastic mode (internally deterministic
-        // because apply() falls back to apply_slice without a PRNG — so
-        // exercise apply_with via the probe):
+        q_ctx_probe.stochastic_seed = Some(11);
+        // true stochastic rounding through the counter-based per-site
+        // streams (what train_step enables for RoundMode::Stochastic):
         let mut t = Tensor::from_vec(&[4], vec![0.3, 0.7, -0.2, 5.0]);
         q_ctx_probe.apply(&mut t, 0, KIND_Z, true);
         assert!(t.data().iter().all(|v| v.is_finite()));
+        let out = train_step(
+            s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, RoundMode::Stochastic,
+        );
+        assert!(out.loss.is_finite());
         let out = train_step(
             s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 0.0, &ctrl, RoundMode::HalfEven,
         );

@@ -7,7 +7,10 @@
 //! `Trainer` loop and scale controller — but with zero external
 //! dependencies, no AOT artifacts and no Python anywhere. Model state
 //! lives as host [`Tensor`]s; the hot contractions run on the
-//! blocked/parallel kernels in [`crate::tensor::ops`].
+//! blocked/parallel kernels in [`crate::tensor::ops`], with the Z/DW/DX
+//! re-quantizations fused into the GEMM epilogues by default
+//! (`LPDNN_FUSED=0` selects the bit-identical two-pass path — see
+//! DESIGN.md §Fused quantized GEMM).
 //!
 //! Differences from the compiled path (documented, not hidden):
 //!
@@ -155,7 +158,9 @@ impl Backend for NativeBackend {
             hp.momentum,
             hp.max_norm,
             ctrl,
-            StepOptions { mode: RoundMode::HalfAway, half: run.half, dropout },
+            // defaults: canonical half-away rounding, fused Z/DW/DX
+            // epilogues unless LPDNN_FUSED=0 (same bits either way)
+            StepOptions { half: run.half, dropout, ..Default::default() },
         );
         Ok(StepOut { loss: out.loss, overflow: out.overflow })
     }

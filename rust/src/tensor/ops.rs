@@ -16,10 +16,24 @@
 //! Slice-level entry points (`matmul_sl` & co.) exist so the golden model
 //! can contract per-filter sub-blocks of the `[k, I, U]` maxout weight
 //! tensors without materializing copies.
+//!
+//! Every flavour also has a fused quantize-aware variant (`matmul_sl_q`
+//! & co.): the [`QuantEpilogue`] — optional bias add, rounding, clipping
+//! and `QuantStats` counting — runs over each output tile right after
+//! the tile's accumulation finishes, while it is still cache-hot,
+//! instead of as a second whole-tensor sweep. Per-tile stats are merged
+//! deterministically in tile order (u64 counter addition, so totals are
+//! order-insensitive anyway), and stochastic rounding samples come from
+//! the epilogue's counter-based [`crate::arith::ElemRng`], keyed on each
+//! element's flat index. Both together make the fused kernels
+//! **bit-identical** to the two-pass path (plain kernel +
+//! `QuantEpilogue::run` sweep) at any thread count — enforced by
+//! `tests/fused_parity.rs` and DESIGN.md §Fused quantized GEMM.
 
 use std::sync::OnceLock;
 
 use super::Tensor;
+use crate::arith::{QuantEpilogue, QuantStats};
 
 /// FLOP count (2·m·k·n) above which a matmul goes parallel. Override with
 /// `LPDNN_PAR_MATMUL` (a FLOP count; `0` forces everything parallel,
@@ -246,6 +260,269 @@ pub fn matmul_tn_sl_threads(
 /// `[ba,ia]^T @ [ba,ub]` over flat slices, auto-threaded.
 pub fn matmul_tn_sl(a: &[f32], b: &[f32], ba: usize, ia: usize, ub: usize) -> Vec<f32> {
     matmul_tn_sl_threads(a, b, ba, ia, ub, plan_threads(2 * ba * ia * ub, ia))
+}
+
+// ---------------------------------------------------------------------------
+// Fused quantize-aware GEMM kernels
+// ---------------------------------------------------------------------------
+
+/// Run the fused epilogue over one output tile of `rows × n` elements
+/// starting at flat element `offset` of the logical output: add the bias
+/// row (if any), then quantize in place with stats. Bit-identical to
+/// doing the same two steps in separate whole-tensor passes.
+fn fused_epilogue(
+    chunk: &mut [f32],
+    n: usize,
+    bias: Option<&[f32]>,
+    epi: QuantEpilogue,
+    offset: u64,
+) -> QuantStats {
+    if let Some(bs) = bias {
+        for row in chunk.chunks_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(bs) {
+                *o += bv;
+            }
+        }
+    }
+    epi.run(chunk, offset)
+}
+
+/// Fused `dst += a[m,kd] @ b[kd,n]`, then bias add + quantization in the
+/// block epilogue, with an explicit thread count. `dst` is accumulated
+/// onto (pass zeros for a plain product) and holds the *quantized*
+/// output on return; the returned [`QuantStats`] are the site's overflow
+/// counters, merged over tiles in tile order.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_q_into_threads(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    assert_eq!(a.len(), m * kd, "matmul_q a size");
+    assert_eq!(b.len(), kd * n, "matmul_q b size");
+    assert_eq!(dst.len(), m * n, "matmul_q dst size");
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), n, "matmul_q bias size");
+    }
+    if m == 0 || n == 0 {
+        return QuantStats::default();
+    }
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        mm_nn_serial(a, b, dst, kd, n);
+        return fused_epilogue(dst, n, bias, epi, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / n;
+            let asub = &a[i0 * kd..(i0 + rows) * kd];
+            tiles.push(s.spawn(move || {
+                mm_nn_serial(asub, b, ochunk, kd, n);
+                fused_epilogue(ochunk, n, bias, epi, (i0 * n) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("fused matmul worker"));
+        }
+    });
+    stats
+}
+
+/// [`matmul_sl_q_into_threads`] with the auto thread plan.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_q_into(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    matmul_sl_q_into_threads(a, b, bias, dst, m, kd, n, epi, plan_threads(2 * m * kd * n, m))
+}
+
+/// Allocating form of the fused NN kernel with explicit threads.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_q_threads(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * n];
+    let st = matmul_sl_q_into_threads(a, b, bias, &mut out, m, kd, n, epi, threads);
+    (out, st)
+}
+
+/// Fused quantized `[m,kd] @ [kd,n]` (+ optional bias row), auto-threaded.
+pub fn matmul_sl_q(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    matmul_sl_q_threads(a, b, bias, m, kd, n, epi, plan_threads(2 * m * kd * n, m))
+}
+
+/// Fused `dst = a[m,ua] @ b[ib,ua]^T` + quantization epilogue with an
+/// explicit thread count. Unlike the NN/TN flavours this *assigns* `dst`
+/// (the serial NT kernel writes dot products, it does not accumulate).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_sl_q_into_threads(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    assert_eq!(a.len(), m * ua, "matmul_nt_q a size");
+    assert_eq!(b.len(), ib * ua, "matmul_nt_q b size");
+    assert_eq!(dst.len(), m * ib, "matmul_nt_q dst size");
+    if m == 0 || ib == 0 {
+        return QuantStats::default();
+    }
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        mm_nt_serial(a, b, dst, ua, ib);
+        return fused_epilogue(dst, ib, None, epi, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * ib).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / ib;
+            let asub = &a[i0 * ua..(i0 + rows) * ua];
+            tiles.push(s.spawn(move || {
+                mm_nt_serial(asub, b, ochunk, ua, ib);
+                fused_epilogue(ochunk, ib, None, epi, (i0 * ib) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("fused matmul_nt worker"));
+        }
+    });
+    stats
+}
+
+/// Allocating form of the fused NT kernel with explicit threads.
+pub fn matmul_nt_sl_q_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * ib];
+    let st = matmul_nt_sl_q_into_threads(a, b, &mut out, m, ua, ib, epi, threads);
+    (out, st)
+}
+
+/// Fused quantized `[m,ua] @ [ib,ua]^T`, auto-threaded.
+pub fn matmul_nt_sl_q(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    matmul_nt_sl_q_threads(a, b, m, ua, ib, epi, plan_threads(2 * m * ua * ib, m))
+}
+
+/// Fused `dst += a[ba,ia]^T @ b[ba,ub]` + quantization epilogue with an
+/// explicit thread count. `dst` is accumulated onto (pass zeros for a
+/// plain product) and holds the quantized output on return.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_sl_q_into_threads(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    assert_eq!(a.len(), ba * ia, "matmul_tn_q a size");
+    assert_eq!(b.len(), ba * ub, "matmul_tn_q b size");
+    assert_eq!(dst.len(), ia * ub, "matmul_tn_q dst size");
+    if ia == 0 || ub == 0 {
+        return QuantStats::default();
+    }
+    let nt = threads.min(ia).max(1);
+    if nt <= 1 {
+        mm_tn_serial(a, b, dst, ba, ia, ub, 0);
+        return fused_epilogue(dst, ub, None, epi, 0);
+    }
+    let rows_per = ia.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * ub).enumerate() {
+            let i0 = ci * rows_per;
+            tiles.push(s.spawn(move || {
+                mm_tn_serial(a, b, ochunk, ba, ia, ub, i0);
+                fused_epilogue(ochunk, ub, None, epi, (i0 * ub) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("fused matmul_tn worker"));
+        }
+    });
+    stats
+}
+
+/// Allocating form of the fused TN kernel with explicit threads.
+pub fn matmul_tn_sl_q_threads(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; ia * ub];
+    let st = matmul_tn_sl_q_into_threads(a, b, &mut out, ba, ia, ub, epi, threads);
+    (out, st)
+}
+
+/// Fused quantized `[ba,ia]^T @ [ba,ub]`, auto-threaded.
+pub fn matmul_tn_sl_q(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    matmul_tn_sl_q_threads(a, b, ba, ia, ub, epi, plan_threads(2 * ba * ia * ub, ia))
 }
 
 /// `c[B,U] = a[B,I] @ b[I,U]` (blocked, parallel above the threshold).

@@ -5,6 +5,11 @@
 //! [`forall`] runner that executes a property over `N` generated cases and
 //! reports the failing case index + seed so a failure reproduces exactly.
 //!
+//! It also hosts the shared deterministic fixtures (`gen_quantizer`,
+//! `gen_signal`, the tiny maxout-MLP state builders) that the quantizer
+//! property tests, the fused-GEMM parity suite and the golden unit tests
+//! all build their cases from — one place to widen the tested regimes.
+//!
 //! ```no_run
 //! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
 //! use lpdnn::testing::{forall, Gen};
@@ -15,6 +20,10 @@
 //! ```
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::arith::{FixedFormat, Quantizer, RoundMode};
+use crate::golden::{MlpShape, Params};
+use crate::tensor::{init::InitSpec, ops, Pcg32, Tensor};
 
 /// Number of cases per property (override with env `LPDNN_PROP_CASES`).
 pub const DEFAULT_CASES: usize = 200;
@@ -122,6 +131,81 @@ pub fn forall_seeded<F: Fn(&mut Gen)>(name: &str, base_seed: u64, prop: F) {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------------
+
+/// All four rounding modes — the ablation/parity matrices iterate this.
+pub const ROUND_MODES: [RoundMode; 4] = [
+    RoundMode::HalfAway,
+    RoundMode::HalfEven,
+    RoundMode::Truncate,
+    RoundMode::Stochastic,
+];
+
+/// A spread of fixed formats covering the regimes the paper's sweeps
+/// cross: wide storage, the canonical 10.3 computation grid, narrow
+/// widths near the error cliff, and negative-radix (all-fractional)
+/// gradient formats.
+pub fn format_grid() -> Vec<FixedFormat> {
+    vec![
+        FixedFormat::new(20, 5),
+        FixedFormat::new(12, 0),
+        FixedFormat::new(10, 3),
+        FixedFormat::new(6, 1),
+        FixedFormat::new(8, -2),
+    ]
+}
+
+/// A random (never-passthrough) quantizer: random format + rounding mode.
+pub fn gen_quantizer(g: &mut Gen) -> Quantizer {
+    let mut q =
+        Quantizer::from_format(FixedFormat::new(g.i32_range(2, 24), g.i32_range(-4, 8)));
+    q.mode = *g.choose(&ROUND_MODES);
+    q
+}
+
+/// Signal data for `q`: values spanning well inside the representable
+/// range *and* beyond `maxv`, so clipping and the overflow counters are
+/// always exercised. Falls back to a small span for passthrough.
+pub fn gen_signal(g: &mut Gen, q: &Quantizer, min_len: usize, max_len: usize) -> Vec<f32> {
+    let span = if q.is_passthrough() { 4.0 } else { 2.5 * q.maxv };
+    g.vec_f32(min_len, max_len, -span, span)
+}
+
+/// The tiny maxout-MLP shape the golden/backend unit tests train.
+pub fn tiny_mlp() -> MlpShape {
+    MlpShape { d_in: 12, units: 8, k: 2, n_classes: 4 }
+}
+
+/// Deterministic (params, velocities) for `s` in manifest order
+/// (w0 b0 w1 b1 w2 b2): Glorot-uniform weights, zero biases/velocities.
+pub fn mlp_state(s: MlpShape, seed: u64) -> (Params, Params) {
+    let mut rng = Pcg32::seeded(seed);
+    let mk = |shape: &[usize], rng: &mut Pcg32, fan_in: usize, fan_out: usize| {
+        InitSpec::GlorotUniform { fan_in, fan_out }.realize(shape, rng)
+    };
+    let params = vec![
+        mk(&[s.k, s.d_in, s.units], &mut rng, s.d_in, s.units),
+        Tensor::zeros(&[s.k, s.units]),
+        mk(&[s.k, s.units, s.units], &mut rng, s.units, s.units),
+        Tensor::zeros(&[s.k, s.units]),
+        mk(&[s.units, s.n_classes], &mut rng, s.units, s.n_classes),
+        Tensor::zeros(&[s.n_classes]),
+    ];
+    let vels = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    (params, vels)
+}
+
+/// A deterministic `[n, d_in]` normal batch with one-hot labels for `s`.
+pub fn mlp_batch(s: MlpShape, n: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg32::seeded(seed);
+    let x = Tensor::from_vec(&[n, s.d_in], (0..n * s.d_in).map(|_| rng.normal()).collect());
+    let labels: Vec<usize> =
+        (0..n).map(|_| rng.below(s.n_classes as u32) as usize).collect();
+    (x, ops::one_hot(&labels, s.n_classes))
 }
 
 #[cfg(test)]

@@ -1,0 +1,346 @@
+//! Cross-kernel parity: the fused quantize-aware GEMM kernels
+//! (`matmul_sl_q` / `matmul_nt_sl_q` / `matmul_tn_sl_q` and their
+//! `_threads` variants) must be **bit-identical** — exact `u32` output
+//! bits *and* exact `QuantStats` counters — to the two-pass reference
+//! (plain kernel → bias add → `QuantEpilogue::run` sweep), across:
+//!
+//! * all three orientations (NN with/without bias, NT, TN),
+//! * all four arithmetics (float32 passthrough, fixed, dynamic-regime
+//!   fixed, float16 simulation),
+//! * all four rounding modes (stochastic via the counter-based stream),
+//! * explicit thread counts {1, 2, 4} — on top of which CI runs the
+//!   whole suite under `LPDNN_THREADS` ∈ {1, 4} to cover the
+//!   auto-threaded entry points,
+//! * degenerate shapes (1×1×1, zero-depth reductions, zero-batch TN).
+//!
+//! A second layer asserts the same at the training-step level: the
+//! golden model with `StepOptions::fused` on/off produces identical loss
+//! bits, parameters, velocities and overflow matrices.
+
+use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, QuantStats, Quantizer, RoundMode};
+use lpdnn::coordinator::ScaleController;
+use lpdnn::golden::{self, StepOptions};
+use lpdnn::tensor::{ops, Pcg32};
+use lpdnn::testing::{mlp_batch, mlp_state, ROUND_MODES, tiny_mlp};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Shapes as (m, kd, n) for NN / (m, ua, ib) for NT / (ba, ia, ub) for
+/// TN: degenerate, odd/non-divisible, and chunk-edge cases.
+const SHAPES: [(usize, usize, usize); 6] =
+    [(1, 1, 1), (5, 0, 3), (0, 4, 4), (7, 13, 9), (8, 3, 1), (33, 17, 40)];
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The four arithmetics as epilogues (mode applies to the fixed grids).
+fn arithmetics(mode: RoundMode) -> Vec<(&'static str, QuantEpilogue)> {
+    let mk = |f: FixedFormat| {
+        let mut q = Quantizer::from_format(f);
+        q.mode = mode;
+        QuantEpilogue::new(q)
+    };
+    vec![
+        ("float32", mk(FixedFormat::FLOAT32)),
+        ("fixed 12.3", mk(FixedFormat::new(12, 3))),
+        ("dynamic 10.-2", mk(FixedFormat::new(10, -2))),
+        ("float16", QuantEpilogue::half_sim()),
+    ]
+}
+
+fn rand_vec(rng: &mut Pcg32, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Reference: plain NN kernel, bias sweep, then one epilogue sweep.
+fn two_pass_nn(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = ops::matmul_sl_threads(a, b, m, kd, n, 1);
+    if let Some(bs) = bias {
+        for row in out.chunks_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(bs) {
+                *o += bv;
+            }
+        }
+    }
+    let st = epi.run(&mut out, 0);
+    (out, st)
+}
+
+fn two_pass_nt(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = ops::matmul_nt_sl_threads(a, b, m, ua, ib, 1);
+    let st = epi.run(&mut out, 0);
+    (out, st)
+}
+
+fn two_pass_tn(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = ops::matmul_tn_sl_threads(a, b, ba, ia, ub, 1);
+    let st = epi.run(&mut out, 0);
+    (out, st)
+}
+
+/// Attach the counter-based sample stream when the mode needs one, so
+/// stochastic rounding is exercised with real (index-keyed) samples.
+fn with_stream(epi: QuantEpilogue, mode: RoundMode, seed: u64) -> QuantEpilogue {
+    if mode == RoundMode::Stochastic {
+        epi.with_rng(ElemRng::new(seed))
+    } else {
+        epi
+    }
+}
+
+#[test]
+fn fused_nn_bit_identical_to_two_pass() {
+    let mut rng = Pcg32::seeded(0xF05E_D001);
+    for mode in ROUND_MODES {
+        for (label, epi) in arithmetics(mode) {
+            for (m, kd, n) in SHAPES {
+                let a = rand_vec(&mut rng, m * kd, 2.0);
+                let b = rand_vec(&mut rng, kd * n, 2.0);
+                let bias = rand_vec(&mut rng, n, 1.0);
+                for use_bias in [false, true] {
+                    let bias = use_bias.then_some(&bias[..]);
+                    let epi = with_stream(epi, mode, 0xA11C_E5ED);
+                    let (want, want_st) = two_pass_nn(&a, &b, bias, m, kd, n, epi);
+                    for t in THREADS {
+                        let (got, got_st) =
+                            ops::matmul_sl_q_threads(&a, &b, bias, m, kd, n, epi, t);
+                        assert_eq!(
+                            bits(&got),
+                            bits(&want),
+                            "nn {label} {mode:?} {m}x{kd}x{n} bias={use_bias} t={t}"
+                        );
+                        assert_eq!(
+                            got_st, want_st,
+                            "nn stats {label} {mode:?} {m}x{kd}x{n} bias={use_bias} t={t}"
+                        );
+                    }
+                    // auto-threaded wrapper (thread count from env/plan)
+                    let (got, got_st) = ops::matmul_sl_q(&a, &b, bias, m, kd, n, epi);
+                    assert_eq!(bits(&got), bits(&want), "nn auto {label} {mode:?}");
+                    assert_eq!(got_st, want_st, "nn auto stats {label} {mode:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_nt_bit_identical_to_two_pass() {
+    let mut rng = Pcg32::seeded(0xF05E_D002);
+    for mode in ROUND_MODES {
+        for (label, epi) in arithmetics(mode) {
+            for (m, ua, ib) in SHAPES {
+                let a = rand_vec(&mut rng, m * ua, 2.0);
+                let b = rand_vec(&mut rng, ib * ua, 2.0);
+                let epi = with_stream(epi, mode, 0xBEE5_EED5);
+                let (want, want_st) = two_pass_nt(&a, &b, m, ua, ib, epi);
+                for t in THREADS {
+                    let (got, got_st) = ops::matmul_nt_sl_q_threads(&a, &b, m, ua, ib, epi, t);
+                    assert_eq!(bits(&got), bits(&want), "nt {label} {mode:?} {m}x{ua}x{ib} t={t}");
+                    assert_eq!(got_st, want_st, "nt stats {label} {mode:?} t={t}");
+                }
+                let (got, got_st) = ops::matmul_nt_sl_q(&a, &b, m, ua, ib, epi);
+                assert_eq!(bits(&got), bits(&want), "nt auto {label} {mode:?}");
+                assert_eq!(got_st, want_st, "nt auto stats {label} {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_tn_bit_identical_to_two_pass() {
+    let mut rng = Pcg32::seeded(0xF05E_D003);
+    for mode in ROUND_MODES {
+        for (label, epi) in arithmetics(mode) {
+            for (ba, ia, ub) in SHAPES {
+                let a = rand_vec(&mut rng, ba * ia, 2.0);
+                let b = rand_vec(&mut rng, ba * ub, 2.0);
+                let epi = with_stream(epi, mode, 0xC0DE_D00D);
+                let (want, want_st) = two_pass_tn(&a, &b, ba, ia, ub, epi);
+                for t in THREADS {
+                    let (got, got_st) = ops::matmul_tn_sl_q_threads(&a, &b, ba, ia, ub, epi, t);
+                    assert_eq!(bits(&got), bits(&want), "tn {label} {mode:?} {ba}x{ia}x{ub} t={t}");
+                    assert_eq!(got_st, want_st, "tn stats {label} {mode:?} t={t}");
+                }
+                let (got, got_st) = ops::matmul_tn_sl_q(&a, &b, ba, ia, ub, epi);
+                assert_eq!(bits(&got), bits(&want), "tn auto {label} {mode:?}");
+                assert_eq!(got_st, want_st, "tn auto stats {label} {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_base_offsets_match_offset_reference() {
+    // Multi-call sites (per-filter maxout tiles) pass a flat-index base;
+    // the fused samples/stats must equal a reference sweep at that offset.
+    let mut rng = Pcg32::seeded(0xF05E_D004);
+    let mut q = Quantizer::from_format(FixedFormat::new(8, 1));
+    q.mode = RoundMode::Stochastic;
+    let (m, kd, n) = (6usize, 5usize, 7usize);
+    let a = rand_vec(&mut rng, m * kd, 2.0);
+    let b = rand_vec(&mut rng, kd * n, 2.0);
+    for base in [0u64, 1, 42, 10_000] {
+        let epi = QuantEpilogue::new(q).with_rng(ElemRng::new(99)).with_base(base);
+        let (want, want_st) = two_pass_nn(&a, &b, None, m, kd, n, epi);
+        for t in THREADS {
+            let (got, got_st) = ops::matmul_sl_q_threads(&a, &b, None, m, kd, n, epi, t);
+            assert_eq!(bits(&got), bits(&want), "base={base} t={t}");
+            assert_eq!(got_st, want_st, "base={base} t={t}");
+        }
+    }
+    // distinct bases draw distinct samples (streams really are indexed)
+    let e0 = QuantEpilogue::new(q).with_rng(ElemRng::new(99));
+    let (out0, _) = ops::matmul_sl_q(&a, &b, None, m, kd, n, e0);
+    let (out1, _) = ops::matmul_sl_q(&a, &b, None, m, kd, n, e0.with_base(1_000_000));
+    assert_ne!(bits(&out0), bits(&out1));
+}
+
+#[test]
+fn fused_passthrough_short_circuits_to_plain_kernel() {
+    // float32 passthrough: the fused kernel must return exactly the plain
+    // kernel's product (plus bias) with totals-only stats.
+    let mut rng = Pcg32::seeded(0xF05E_D005);
+    let (m, kd, n) = (9usize, 11usize, 6usize);
+    let a = rand_vec(&mut rng, m * kd, 2.0);
+    let b = rand_vec(&mut rng, kd * n, 2.0);
+    let epi = QuantEpilogue::new(Quantizer::float32());
+    assert!(epi.is_noop());
+    let plain = ops::matmul_sl(&a, &b, m, kd, n);
+    for t in THREADS {
+        let (got, st) = ops::matmul_sl_q_threads(&a, &b, None, m, kd, n, epi, t);
+        assert_eq!(bits(&got), bits(&plain), "t={t}");
+        assert_eq!(st, QuantStats { n_over: 0, n_half: 0, n_total: (m * n) as u64 });
+    }
+}
+
+/// Train-step-level parity: fused vs two-pass golden steps from identical
+/// state must agree bit-for-bit in loss, params, velocities and the
+/// overflow matrix — per arithmetic, per rounding mode.
+#[test]
+fn train_step_fused_bit_identical_to_two_pass() {
+    let s = tiny_mlp();
+    let arith_cases: [(&str, ScaleController, bool); 4] = [
+        (
+            "float32",
+            ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            false,
+        ),
+        (
+            "fixed 10.3/12.0",
+            ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
+            false,
+        ),
+        (
+            "dynamic-regime 8.2/14.1",
+            ScaleController::fixed(3, FixedFormat::new(8, 2), FixedFormat::new(14, 1)),
+            false,
+        ),
+        (
+            "float16",
+            ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            true,
+        ),
+    ];
+    for (label, ctrl, half) in &arith_cases {
+        for mode in ROUND_MODES {
+            let (x, y) = mlp_batch(s, 16, 0xBA7C);
+            let run = |fused: bool| {
+                let (mut params, mut vels) = mlp_state(s, 0x5EED);
+                let mut losses = Vec::new();
+                for _ in 0..3 {
+                    let out = golden::train_step_opt(
+                        s,
+                        &mut params,
+                        &mut vels,
+                        &x,
+                        &y,
+                        0.1,
+                        0.5,
+                        2.0,
+                        ctrl,
+                        StepOptions { mode, half: *half, dropout: None, fused },
+                    );
+                    losses.push((out.loss.to_bits(), bits(out.overflow.data())));
+                }
+                (losses, params, vels)
+            };
+            let (l_fused, p_fused, v_fused) = run(true);
+            let (l_two, p_two, v_two) = run(false);
+            assert_eq!(l_fused, l_two, "{label} {mode:?}: loss/overflow diverged");
+            for (i, (pf, pt)) in p_fused.iter().zip(&p_two).enumerate() {
+                assert_eq!(bits(pf.data()), bits(pt.data()), "{label} {mode:?}: param {i}");
+            }
+            for (i, (vf, vt)) in v_fused.iter().zip(&v_two).enumerate() {
+                assert_eq!(bits(vf.data()), bits(vt.data()), "{label} {mode:?}: vel {i}");
+            }
+        }
+    }
+}
+
+/// Eval parity: forward-only logits agree between a fused and a two-pass
+/// *train* probe (zero LR, so the forward is the only signal), for the
+/// quantized arithmetics. `eval_logits` itself follows the session-wide
+/// fused default, which both probes bracket.
+#[test]
+fn eval_logits_consistent_with_zero_lr_step_under_fusion() {
+    let s = tiny_mlp();
+    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+    let (mut params, _) = mlp_state(s, 7);
+    // pre-quantize storage as the Trainer does at init
+    for (i, p) in params.iter_mut().enumerate() {
+        let g = (i / 2) * 8 + if i % 2 == 0 { 0 } else { 1 };
+        Quantizer::from_format(ctrl.format(g)).apply_slice(p.data_mut());
+    }
+    let (x, y) = mlp_batch(s, 8, 8);
+    let probe = |fused: bool| {
+        let (_, mut vels) = mlp_state(s, 7);
+        let mut p = params.clone();
+        golden::train_step_opt(
+            s,
+            &mut p,
+            &mut vels,
+            &x,
+            &y,
+            0.0,
+            0.0,
+            0.0,
+            &ctrl,
+            StepOptions { fused, ..Default::default() },
+        )
+        .loss
+        .to_bits()
+    };
+    assert_eq!(probe(true), probe(false));
+    let logits = golden::eval_logits(s, &params, &x, &ctrl, RoundMode::HalfAway, false);
+    let logp = ops::log_softmax(&logits);
+    let mut loss = 0.0f64;
+    for i in 0..8 * s.n_classes {
+        loss -= (y.data()[i] * logp.data()[i]) as f64;
+    }
+    let loss = (loss / 8.0) as f32;
+    assert_eq!(loss.to_bits(), probe(true), "eval forward drifted from train forward");
+}

@@ -1,0 +1,138 @@
+//! Seeded property tests for [`Quantizer`] across every rounding mode,
+//! built from the shared fixtures in `lpdnn::testing`:
+//!
+//! * outputs always land on the `(step, maxv)` grid, inside the
+//!   representable range `[-maxv, maxv - step]`,
+//! * `apply` is idempotent (a grid point maps to itself, any mode, any
+//!   stochastic sample),
+//! * `apply` is monotone in its input (for a shared stochastic sample),
+//! * `stats_only` totals equal `apply_slice` totals on the same data,
+//! * the fused kernels' `QuantEpilogue` can never drift from
+//!   `apply_slice` (bit-for-bit cross-check, plus tiling invariance).
+
+use lpdnn::arith::{ElemRng, QuantEpilogue, QuantStats, Quantizer, RoundMode};
+use lpdnn::testing::{forall_seeded, format_grid, Gen, gen_quantizer, gen_signal, ROUND_MODES};
+
+/// A uniform sample for stochastic rounding; ignored by the other modes.
+fn gen_u(g: &mut Gen) -> f32 {
+    g.f32_range(0.0, 1.0)
+}
+
+#[test]
+fn outputs_land_on_grid_and_in_range_for_all_modes() {
+    forall_seeded("grid membership", 0x9121, |g: &mut Gen| {
+        let q = gen_quantizer(g);
+        let x = g.f32_range(-4.0 * q.maxv, 4.0 * q.maxv);
+        let u = gen_u(g);
+        let y = q.apply_with(x, u);
+        let k = y / q.step;
+        assert!((k - k.round()).abs() < 1e-3, "off grid: {q:?} x={x} y={y}");
+        assert!(
+            y >= -q.maxv && y <= q.maxv - q.step * 0.999,
+            "out of range: {q:?} x={x} y={y}"
+        );
+    });
+}
+
+#[test]
+fn apply_is_idempotent_for_all_modes() {
+    forall_seeded("idempotence", 0x9122, |g: &mut Gen| {
+        let q = gen_quantizer(g);
+        let x = g.f32_range(-3.0 * q.maxv, 3.0 * q.maxv);
+        let y = q.apply_with(x, gen_u(g));
+        // a second pass, with any sample, must be a fixed point
+        assert_eq!(q.apply_with(y, gen_u(g)), y, "{q:?} x={x} y={y}");
+        assert_eq!(q.apply(y), y, "{q:?} (canonical apply)");
+    });
+}
+
+#[test]
+fn apply_is_monotone_for_all_modes() {
+    forall_seeded("monotonicity", 0x9123, |g: &mut Gen| {
+        let q = gen_quantizer(g);
+        let a = g.f32_range(-3.0 * q.maxv, 3.0 * q.maxv);
+        let b = g.f32_range(-3.0 * q.maxv, 3.0 * q.maxv);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let u = gen_u(g); // shared sample: monotone per realization
+        assert!(
+            q.apply_with(lo, u) <= q.apply_with(hi, u),
+            "{q:?} lo={lo} hi={hi} u={u}"
+        );
+    });
+}
+
+#[test]
+fn stats_only_totals_equal_apply_slice_totals() {
+    forall_seeded("stats_only = apply_slice", 0x9124, |g: &mut Gen| {
+        let q = gen_quantizer(g);
+        let xs = gen_signal(g, &q, 0, 50);
+        let dry = q.stats_only(&xs);
+        let mut wet = xs.clone();
+        let st = q.apply_slice(&mut wet);
+        assert_eq!(dry, st, "{q:?}");
+        assert_eq!(dry.n_total, xs.len() as u64);
+        // and the counters match their definition on the raw data
+        let over = xs.iter().filter(|v| v.abs() >= q.maxv).count() as u64;
+        let half = xs.iter().filter(|v| v.abs() >= q.maxv * 0.5).count() as u64;
+        assert_eq!((dry.n_over, dry.n_half), (over, half), "{q:?}");
+    });
+}
+
+#[test]
+fn passthrough_is_identity_for_every_mode() {
+    for mode in ROUND_MODES {
+        let mut q = Quantizer::float32();
+        q.mode = mode;
+        let mut xs = vec![1.5, -2.7e30, f32::MIN_POSITIVE, 0.0];
+        let orig = xs.clone();
+        let st = q.apply_slice(&mut xs);
+        assert_eq!(xs, orig, "{mode:?}");
+        assert_eq!(st, QuantStats { n_over: 0, n_half: 0, n_total: 4 });
+        assert_eq!(q.apply_with(3.21, 0.9), 3.21, "{mode:?}");
+    }
+}
+
+#[test]
+fn epilogue_is_bit_identical_to_apply_slice() {
+    // The fused kernels' epilogue and the canonical two-pass sweep are
+    // two implementations of one contract — they may never drift.
+    forall_seeded("epilogue = apply_slice", 0x9125, |g: &mut Gen| {
+        let q = gen_quantizer(g);
+        let xs = gen_signal(g, &q, 0, 50);
+        let mut a = xs.clone();
+        let mut b = xs;
+        let st_a = QuantEpilogue::new(q).run(&mut a, 0);
+        let st_b = q.apply_slice(&mut b);
+        assert_eq!(st_a, st_b, "{q:?}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{q:?}");
+        }
+    });
+}
+
+#[test]
+fn epilogue_tiling_is_invariant_on_the_format_grid() {
+    // Fixed split points over every fixture format, with a stochastic
+    // stream attached: per-tile runs at the right offsets must equal the
+    // whole-tensor sweep exactly (the fused kernels' core invariant).
+    for fmt in format_grid() {
+        for mode in ROUND_MODES {
+            let mut q = Quantizer::from_format(fmt);
+            q.mode = mode;
+            let epi = QuantEpilogue::new(q).with_rng(ElemRng::new(0x711E));
+            let mut g = Gen::new(fmt.total_bits as u64 ^ 0xF0);
+            let xs = gen_signal(&mut g, &q, 64, 64);
+            let mut whole = xs.clone();
+            let st_whole = epi.run(&mut whole, 0);
+            let mut tiled = xs;
+            let mut st = QuantStats::default();
+            for (start, end) in [(0usize, 7usize), (7, 8), (8, 40), (40, 64)] {
+                st.merge(epi.run(&mut tiled[start..end], start as u64));
+            }
+            assert_eq!(st, st_whole, "{fmt} {mode:?}");
+            for (x, y) in whole.iter().zip(&tiled) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{fmt} {mode:?}");
+            }
+        }
+    }
+}
