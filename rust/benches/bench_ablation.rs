@@ -16,7 +16,7 @@ use lpdnn::arith::{FixedFormat, RoundMode};
 use lpdnn::bench_support::{scaled, Table};
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::ScaleController;
-use lpdnn::golden::{self, MlpShape};
+use lpdnn::golden::{MlpShape, Network, StepOptions};
 use lpdnn::tensor::{init::InitSpec, Pcg32, Tensor};
 
 fn main() {
@@ -52,7 +52,10 @@ fn main() {
     // 2. rounding-mode ablation on the golden host model
     // ------------------------------------------------------------------
     println!("=== ablation 2: rounding modes (golden model, 12-bit storage) ===");
-    let shape = MlpShape { d_in: 784, units: 64, k: 2, n_classes: 10 };
+    let shape = MlpShape::for_dataset("digits", 64, 2).expect("digits dims");
+    // one Network for the whole ablation loop (the legacy train_step
+    // wrapper would rebuild the layer graph on every step)
+    let net = Network::from_mlp_shape(shape);
     let steps = scaled(120);
     let rng = Pcg32::seeded(7);
     let ds = lpdnn::data::Dataset::generate("digits", 1024, 256, &rng).expect("data");
@@ -64,7 +67,7 @@ fn main() {
         RoundMode::Stochastic,
     ] {
         let ctrl =
-            ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+            ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
         let mut irng = Pcg32::seeded(42);
         let mut params = vec![
             InitSpec::GlorotUniform { fan_in: 784, fan_out: 64 }
@@ -84,8 +87,16 @@ fn main() {
         for _ in 0..steps {
             let (x, y) = batcher.next_batch();
             let x = x.reshape(&[64, 784]);
-            let out = golden::train_step(
-                shape, &mut params, &mut vels, &x, &y, 0.1, 0.5, 3.0, &ctrl, mode,
+            let out = net.train_step(
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.1,
+                0.5,
+                3.0,
+                &ctrl,
+                StepOptions { mode, ..Default::default() },
             );
             loss = out.loss;
         }
@@ -97,11 +108,19 @@ fn main() {
             .map(|(x, y, _)| (x.reshape(&[256, 784]), y))
             .unwrap();
         let probe_ctrl =
-            ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+            ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
         let mut pp = params.clone();
         let mut vv = vels.clone();
-        let probe = golden::train_step(
-            shape, &mut pp, &mut vv, &xe, &ye, 0.0, 0.0, 0.0, &probe_ctrl, mode,
+        let probe = net.train_step(
+            &mut pp,
+            &mut vv,
+            &xe,
+            &ye,
+            0.0,
+            0.0,
+            0.0,
+            &probe_ctrl,
+            StepOptions { mode, ..Default::default() },
         );
         t.row(&[
             format!("{mode:?}"),

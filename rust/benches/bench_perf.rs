@@ -8,6 +8,8 @@
 //! * end-to-end train-step latency per model on the selected backend
 //! * host quantizer throughput (GB/s over f32)
 //! * golden/native train step (the native backend's hot path)
+//! * layer-graph executor vs the pre-refactor monolith (`graph train
+//!   step` rows: depth 2 overhead per arithmetic, depths 3/4 scaling)
 //! * scale controller overhead per tick
 //! * with `--features pjrt` + artifacts: compiled-step latency and the
 //!   L3↔PJRT literal-assembly boundary
@@ -17,9 +19,10 @@ mod common;
 
 use lpdnn::arith::{FixedFormat, QuantEpilogue, Quantizer, RoundMode};
 use lpdnn::bench_support::{bench, scaled, Stats, Table};
-use lpdnn::config::Arithmetic;
+use lpdnn::config::{Arithmetic, TopologySpec};
 use lpdnn::coordinator::{ScaleController, Session};
-use lpdnn::golden::{self, MlpShape, StepOptions};
+use lpdnn::golden::{self, MlpShape, Network, StepOptions};
+use lpdnn::runtime::ModelInfo;
 use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
 
 fn fmt_stats(s: &Stats) -> String {
@@ -200,8 +203,8 @@ fn pi_mlp_step_fixture() -> (Vec<Tensor>, Vec<Tensor>, Tensor, Tensor) {
 fn native_step_section(table: &mut Table) {
     // golden/native train step at pi_mlp scale — the native backend's
     // hot path (runs the blocked/parallel kernels)
-    let shape = MlpShape::pi_mlp(128, 4);
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+    let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
     let (mut params, mut vels, x, y) = pi_mlp_step_fixture();
     let s = bench(1, scaled(10).max(3), || {
         let _ = golden::train_step(
@@ -209,6 +212,82 @@ fn native_step_section(table: &mut Table) {
         );
     });
     table.row(&["native/golden train step (pi_mlp, batch 64)".into(), fmt_stats(&s)]);
+}
+
+/// Layer-graph executor vs the frozen pre-refactor monolith: the `graph
+/// train step` row family. Depth 2 (where the monolith exists) reports
+/// the dispatch overhead per arithmetic; depths 3/4 at the same width
+/// track how the graph scales with topology depth.
+fn graph_step_section(table: &mut Table) {
+    let arithmetics: [(&str, FixedFormat, FixedFormat, bool); 3] = [
+        ("fixed 12.3", FixedFormat::new(12, 3), FixedFormat::new(14, 1), false),
+        ("float16", FixedFormat::FLOAT32, FixedFormat::FLOAT32, true),
+        ("float32", FixedFormat::FLOAT32, FixedFormat::FLOAT32, false),
+    ];
+    let iters = scaled(10).max(3);
+    let mut rng = Pcg32::seeded(17);
+    let (d_in, n_classes) = lpdnn::data::dataset_dims("digits").expect("digits dims");
+    let x = Tensor::from_vec(&[64, d_in], (0..64 * d_in).map(|_| rng.uniform()).collect());
+    let labels: Vec<usize> = (0..64).map(|_| rng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+
+    for depth in [2usize, 3, 4] {
+        let spec = TopologySpec::mlp(vec![128; depth], 4);
+        let net = Network::from_topology(&spec, d_in, n_classes);
+        let info = ModelInfo::from_topology(&spec, d_in, n_classes);
+        let state = || {
+            let mut srng = Pcg32::seeded(23);
+            let params: Vec<Tensor> =
+                info.params.iter().map(|s| s.init.realize(&s.shape, &mut srng)).collect();
+            let vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+            (params, vels)
+        };
+        for (label, comp, up, half) in arithmetics {
+            let ctrl = ScaleController::fixed(net.n_groups(), comp, up);
+            let (mut params, mut vels) = state();
+            let s_graph = bench(1, iters, || {
+                let _ = net.train_step(
+                    &mut params,
+                    &mut vels,
+                    &x,
+                    &y,
+                    0.01,
+                    0.5,
+                    3.0,
+                    &ctrl,
+                    StepOptions { half, ..Default::default() },
+                );
+            });
+            let result = if depth == 2 {
+                // the monolith only exists at depth 2: report overhead
+                let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+                let (mut params, mut vels) = state();
+                let s_mono = bench(1, iters, || {
+                    let _ = golden::reference::train_step_opt(
+                        shape,
+                        &mut params,
+                        &mut vels,
+                        &x,
+                        &y,
+                        0.01,
+                        0.5,
+                        3.0,
+                        &ctrl,
+                        StepOptions { half, ..Default::default() },
+                    );
+                });
+                format!(
+                    "monolith {:.2}ms | graph {:.2}ms | overhead {:+.1}%",
+                    s_mono.mean * 1e3,
+                    s_graph.mean * 1e3,
+                    100.0 * (s_graph.mean - s_mono.mean) / s_mono.mean.max(1e-12),
+                )
+            } else {
+                format!("graph {:.2}ms", s_graph.mean * 1e3)
+            };
+            table.row(&[format!("graph train step depth{depth} 128x4 ({label})"), result]);
+        }
+    }
 }
 
 /// Fused quantize-aware GEMM vs the two-pass epilogue it replaced
@@ -286,8 +365,8 @@ fn fused_gemm_section(table: &mut Table) {
 
     // end-to-end: a full golden train step, fused vs two-pass, on the
     // fixed arithmetic (both paths are bit-identical; only time differs)
-    let shape = MlpShape::pi_mlp(128, 4);
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+    let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
     let step_iters = scaled(10).max(3);
     let time_step = |fused: bool| {
         let (mut params, mut vels, x, y) = pi_mlp_step_fixture();
@@ -335,7 +414,7 @@ fn quantizer_section(table: &mut Table) {
 
 fn controller_section(table: &mut Table) {
     let mut ctrl = ScaleController::dynamic(
-        3,
+        24,
         FixedFormat::new(10, 3),
         FixedFormat::new(12, 0),
         1e-4,
@@ -417,6 +496,7 @@ fn main() {
     fused_gemm_section(&mut table);
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
+    graph_step_section(&mut table);
     quantizer_section(&mut table);
     controller_section(&mut table);
     #[cfg(feature = "pjrt")]

@@ -103,6 +103,7 @@ pub fn base_cfg(name: &str, model: &str, dataset: &str) -> ExperimentConfig {
         name: name.into(),
         model: model.into(),
         backend: BackendKind::default(), // benches pick the backend via setup()
+        topology: None,
         arithmetic: Arithmetic::Float32,
         train: TrainConfig {
             steps,

@@ -115,6 +115,12 @@ SUBCOMMANDS:
                   --backend native|pjrt  execution backend (default native;
                                          pjrt needs --features pjrt + artifacts)
                   --model pi_mlp|pi_mlp_wide|conv|conv32
+                  --topology SPEC        explicit maxout-MLP topology
+                                         (overrides --model; realized
+                                         against the dataset's dims):
+                                         builtin name, WIDTHxDEPTH or
+                                         w1,w2,..., optionally @kN —
+                                         e.g. 128x3, 256,128@k2
                   --dataset digits|clusters|cifar_like|svhn_like
                   --arith float32|half|fixed|dynamic
                   --bits-comp N --bits-up N --int-bits N

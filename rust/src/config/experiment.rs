@@ -11,6 +11,7 @@ use crate::error::Context;
 
 use super::json::Json;
 use super::toml;
+use super::topology::TopologySpec;
 use crate::arith::FixedFormat;
 
 /// Which execution backend runs the experiment (DESIGN.md §Backends).
@@ -208,10 +209,16 @@ impl Default for DataConfig {
 pub struct ExperimentConfig {
     pub name: String,
     /// "pi_mlp" | "pi_mlp_wide" | "conv" | "conv32" (built-in for the
-    /// native backend; must exist in the manifest for pjrt).
+    /// native backend; must exist in the manifest for pjrt). When
+    /// `topology` is set it overrides the model and this field is just
+    /// the run's model label.
     pub model: String,
     /// Which execution backend to run on (`[experiment] backend = ...`).
     pub backend: BackendKind,
+    /// Explicit maxout-MLP topology (`[topology]` table / `--topology`):
+    /// the native backend realizes it against the dataset's dimensions.
+    /// `None` means the model name selects a built-in topology.
+    pub topology: Option<TopologySpec>,
     pub arithmetic: Arithmetic,
     pub train: TrainConfig,
     pub data: DataConfig,
@@ -223,6 +230,7 @@ impl Default for ExperimentConfig {
             name: "default".into(),
             model: "pi_mlp".into(),
             backend: BackendKind::default(),
+            topology: None,
             arithmetic: Arithmetic::Float32,
             train: TrainConfig::default(),
             data: DataConfig::default(),
@@ -254,6 +262,14 @@ impl ExperimentConfig {
             if let Some(v) = exp.opt("backend") {
                 cfg.backend = BackendKind::parse(v.as_str()?)?;
             }
+        }
+        if let Some(t) = doc.opt("topology") {
+            let spec = TopologySpec::from_json(t)?;
+            // a custom topology names the model unless the config already did
+            if doc.opt("experiment").and_then(|e| e.opt("model")).is_none() {
+                cfg.model = spec.name.clone();
+            }
+            cfg.topology = Some(spec);
         }
         if let Some(d) = doc.opt("data") {
             if let Some(v) = d.opt("n_train") {
@@ -336,23 +352,29 @@ impl ExperimentConfig {
 
     /// Sanity-check the configuration before spending a training run on it.
     pub fn validate(&self) -> crate::Result<()> {
-        if !["pi_mlp", "pi_mlp_wide", "conv", "conv32"].contains(&self.model.as_str()) {
-            bail!("unknown model '{}'", self.model);
-        }
         if !["digits", "clusters", "cifar_like", "svhn_like"].contains(&self.data.dataset.as_str())
         {
             bail!("unknown dataset '{}'", self.data.dataset);
         }
-        let input_ok = match self.model.as_str() {
-            "pi_mlp" | "pi_mlp_wide" => {
-                ["digits", "clusters"].contains(&self.data.dataset.as_str())
+        if let Some(t) = &self.topology {
+            // an explicit topology replaces the model whitelist: the MLP
+            // graph consumes any dataset flattened to its example length
+            t.validate()?;
+        } else {
+            if !["pi_mlp", "pi_mlp_wide", "conv", "conv32"].contains(&self.model.as_str()) {
+                bail!("unknown model '{}'", self.model);
             }
-            "conv" => self.data.dataset == "digits",
-            "conv32" => ["cifar_like", "svhn_like"].contains(&self.data.dataset.as_str()),
-            _ => unreachable!(),
-        };
-        if !input_ok {
-            bail!("model '{}' cannot consume dataset '{}'", self.model, self.data.dataset);
+            let input_ok = match self.model.as_str() {
+                "pi_mlp" | "pi_mlp_wide" => {
+                    ["digits", "clusters"].contains(&self.data.dataset.as_str())
+                }
+                "conv" => self.data.dataset == "digits",
+                "conv32" => ["cifar_like", "svhn_like"].contains(&self.data.dataset.as_str()),
+                _ => unreachable!(),
+            };
+            if !input_ok {
+                bail!("model '{}' cannot consume dataset '{}'", self.model, self.data.dataset);
+            }
         }
         if self.train.steps == 0 {
             bail!("train.steps must be > 0");
@@ -434,6 +456,39 @@ n_test = 512
         assert_eq!(cfg.train.steps, 300);
         assert_eq!(cfg.train.seed, 42);
         assert_eq!(cfg.data.n_train, 2048);
+    }
+
+    #[test]
+    fn parses_topology_table() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[topology]
+hidden = [32, 32, 32]
+k = 2
+[train]
+steps = 10
+"#,
+        )
+        .unwrap();
+        let t = cfg.topology.as_ref().unwrap();
+        assert_eq!(t.hidden, vec![32, 32, 32]);
+        assert_eq!(t.k, 2);
+        // the topology names the model when the config doesn't
+        assert_eq!(cfg.model, t.name);
+        // a degenerate topology is rejected at parse time
+        assert!(ExperimentConfig::from_toml_str("[topology]\nhidden = []\n").is_err());
+    }
+
+    #[test]
+    fn topology_composes_with_any_dataset() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology = Some(crate::config::TopologySpec::mlp(vec![16, 16], 2));
+        for ds in ["digits", "clusters", "cifar_like", "svhn_like"] {
+            cfg.data.dataset = ds.into();
+            cfg.validate().unwrap_or_else(|e| panic!("{ds}: {e:#}"));
+        }
+        cfg.data.dataset = "imagenet".into();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 pub mod experiment;
 pub mod json;
 pub mod toml;
+pub mod topology;
 
 pub use experiment::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
 pub use json::{Json, JsonError};
+pub use topology::TopologySpec;

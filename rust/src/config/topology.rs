@@ -1,0 +1,262 @@
+//! [`TopologySpec`]: model topology as *data* instead of code.
+//!
+//! The paper trains several maxout topologies — PI-MLPs of varying
+//! depth/width on MNIST plus deeper nets for CIFAR-10/SVHN — and the
+//! precision effects it studies are depth-dependent. A `TopologySpec`
+//! describes one maxout-MLP topology (hidden widths + pieces-per-unit)
+//! without pinning the input/output dimensions: those are derived from
+//! the dataset when the spec is *realized* into a
+//! [`ModelInfo`](crate::runtime::ModelInfo) and a
+//! [`Network`](crate::golden::Network), so the same spec composes with
+//! any data source.
+//!
+//! Specs come from three places, all producing the same type:
+//!
+//! * the built-in names (`pi_mlp`, `pi_mlp_wide`) that mirror the
+//!   compiled manifest's models ([`TopologySpec::builtin`]),
+//! * a `[topology]` table in the experiment TOML/JSON config
+//!   ([`TopologySpec::from_json`], round-tripped by
+//!   [`TopologySpec::to_json`]),
+//! * the CLI's `--topology` flag ([`TopologySpec::parse_cli`]):
+//!   a builtin name, `WIDTHxDEPTH` (e.g. `128x3`), or a comma list of
+//!   widths (e.g. `256,128`), optionally suffixed `@kN` to set the
+//!   maxout piece count (e.g. `128x3@k2`).
+
+use crate::bail;
+
+use super::json::Json;
+
+/// One maxout-MLP topology: hidden layer widths + maxout pieces. The
+/// input/output dimensions are *not* part of the spec — they come from
+/// the dataset at realization time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TopologySpec {
+    /// Model name used in configs, reports and manifest lookups.
+    pub name: String,
+    /// Hidden maxout layer widths, input side first (e.g. `[128, 128]`).
+    pub hidden: Vec<usize>,
+    /// Maxout pieces per hidden unit (paper: 4 on PI MNIST).
+    pub k: usize,
+    /// Training minibatch size.
+    pub train_batch: usize,
+    /// Evaluation batch size.
+    pub eval_batch: usize,
+}
+
+impl TopologySpec {
+    /// A custom maxout MLP with the default batch sizes and a derived
+    /// name (`mlp-<w1>x<w2>...-k<k>`).
+    pub fn mlp(hidden: Vec<usize>, k: usize) -> TopologySpec {
+        let widths: Vec<String> = hidden.iter().map(|u| u.to_string()).collect();
+        TopologySpec {
+            name: format!("mlp-{}-k{k}", widths.join("x")),
+            hidden,
+            k,
+            train_batch: 64,
+            eval_batch: 256,
+        }
+    }
+
+    /// The built-in topologies — the same maxout MLPs
+    /// `python/compile/model.py` declares, so graph-built state lines up
+    /// with the compiled artifacts. `None` for unknown names (the conv
+    /// nets exist only as compiled graphs and have no spec).
+    pub fn builtin(name: &str) -> Option<TopologySpec> {
+        let units = match name {
+            "pi_mlp" => 128,
+            // paper 9.2/9.3 width ablation: double the hidden units
+            "pi_mlp_wide" => 256,
+            _ => return None,
+        };
+        Some(TopologySpec {
+            name: name.to_string(),
+            hidden: vec![units, units],
+            k: 4,
+            train_batch: 64,
+            eval_batch: 256,
+        })
+    }
+
+    /// Parse the CLI `--topology` value: a builtin name, `WIDTHxDEPTH`
+    /// (`128x3`), or comma-separated widths (`256,128`), optionally
+    /// suffixed `@kN` (`128x3@k2`).
+    pub fn parse_cli(s: &str) -> crate::Result<TopologySpec> {
+        if let Some(t) = TopologySpec::builtin(s) {
+            return Ok(t);
+        }
+        let (body, k) = match s.split_once('@') {
+            Some((body, ksuf)) => {
+                let Some(kstr) = ksuf.strip_prefix('k') else {
+                    bail!("--topology '{s}': expected '@k<N>' suffix, got '@{ksuf}'");
+                };
+                let k: usize = kstr
+                    .parse()
+                    .map_err(|e| crate::err!("--topology '{s}': bad k '{kstr}': {e}"))?;
+                (body, k)
+            }
+            None => (s, 4),
+        };
+        let parse_width = |w: &str| -> crate::Result<usize> {
+            w.parse().map_err(|e| crate::err!("--topology '{s}': bad width '{w}': {e}"))
+        };
+        let hidden: Vec<usize> = if let Some((w, d)) = body.split_once('x') {
+            let w = parse_width(w)?;
+            let d: usize = d
+                .parse()
+                .map_err(|e| crate::err!("--topology '{s}': bad depth '{d}': {e}"))?;
+            crate::ensure!(d >= 1, "--topology '{s}': depth must be >= 1");
+            vec![w; d]
+        } else {
+            body.split(',')
+                .map(|w| parse_width(w.trim()))
+                .collect::<crate::Result<Vec<usize>>>()?
+        };
+        let spec = TopologySpec::mlp(hidden, k);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build from a config tree's `[topology]` table (TOML or JSON).
+    pub fn from_json(doc: &Json) -> crate::Result<TopologySpec> {
+        let hidden = doc
+            .opt("hidden")
+            .map(|v| v.as_usize_vec())
+            .transpose()?
+            .unwrap_or_else(|| vec![128, 128]);
+        let k = doc.opt("k").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
+        let mut spec = TopologySpec::mlp(hidden, k);
+        if let Some(v) = doc.opt("name") {
+            spec.name = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.opt("train_batch") {
+            spec.train_batch = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("eval_batch") {
+            spec.eval_batch = v.as_usize()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize to the dynamic config tree; `from_json` of the result
+    /// reproduces the spec exactly (round-trip tested).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert(
+            "hidden".to_string(),
+            Json::Array(self.hidden.iter().map(|&u| Json::Num(u as f64)).collect()),
+        );
+        m.insert("k".to_string(), Json::Num(self.k as f64));
+        m.insert("train_batch".to_string(), Json::Num(self.train_batch as f64));
+        m.insert("eval_batch".to_string(), Json::Num(self.eval_batch as f64));
+        Json::Object(m)
+    }
+
+    /// Number of compute layers (hidden maxout layers + softmax head) —
+    /// the graph's scaling-group row count.
+    pub fn n_layers(&self) -> usize {
+        self.hidden.len() + 1
+    }
+
+    /// Sanity-check before spending a training run on it.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.hidden.is_empty() {
+            bail!("topology '{}' has no hidden layers", self.name);
+        }
+        if self.hidden.len() > 16 {
+            bail!("topology '{}': {} hidden layers (max 16)", self.name, self.hidden.len());
+        }
+        for &u in &self.hidden {
+            if !(1..=8192).contains(&u) {
+                bail!("topology '{}': hidden width {u} out of range [1, 8192]", self.name);
+            }
+        }
+        if !(1..=8).contains(&self.k) {
+            bail!("topology '{}': k={} out of range [1, 8]", self.name, self.k);
+        }
+        if self.train_batch == 0 || self.eval_batch == 0 {
+            bail!("topology '{}': batch sizes must be > 0", self.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_mirror_the_manifest_models() {
+        let pi = TopologySpec::builtin("pi_mlp").unwrap();
+        assert_eq!(pi.hidden, vec![128, 128]);
+        assert_eq!(pi.k, 4);
+        assert_eq!((pi.train_batch, pi.eval_batch), (64, 256));
+        assert_eq!(pi.n_layers(), 3);
+        let wide = TopologySpec::builtin("pi_mlp_wide").unwrap();
+        assert_eq!(wide.hidden, vec![256, 256]);
+        assert!(TopologySpec::builtin("conv").is_none());
+    }
+
+    #[test]
+    fn cli_forms_parse() {
+        assert_eq!(TopologySpec::parse_cli("pi_mlp").unwrap().hidden, vec![128, 128]);
+        let t = TopologySpec::parse_cli("128x3").unwrap();
+        assert_eq!(t.hidden, vec![128, 128, 128]);
+        assert_eq!(t.k, 4);
+        assert_eq!(t.name, "mlp-128x128x128-k4");
+        let t = TopologySpec::parse_cli("256,128").unwrap();
+        assert_eq!(t.hidden, vec![256, 128]);
+        let t = TopologySpec::parse_cli("64x4@k2").unwrap();
+        assert_eq!(t.hidden, vec![64; 4]);
+        assert_eq!(t.k, 2);
+        for bad in ["", "x3", "128x0", "128@q2", "128@k", "0x3", "128,many"] {
+            assert!(TopologySpec::parse_cli(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        for spec in [
+            TopologySpec::builtin("pi_mlp").unwrap(),
+            TopologySpec::mlp(vec![64, 32, 16], 2),
+            TopologySpec {
+                name: "custom".into(),
+                hidden: vec![48; 3],
+                k: 3,
+                train_batch: 32,
+                eval_batch: 128,
+            },
+        ] {
+            let back = TopologySpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn toml_table_round_trips_through_the_parser() {
+        let doc = crate::config::toml::parse(
+            "[topology]\nname = \"deep\"\nhidden = [32, 32, 32]\nk = 2\n",
+        )
+        .unwrap();
+        let spec = TopologySpec::from_json(doc.get("topology").unwrap()).unwrap();
+        assert_eq!(spec.name, "deep");
+        assert_eq!(spec.hidden, vec![32, 32, 32]);
+        assert_eq!(spec.k, 2);
+        // defaults fill in, and the JSON form reproduces the spec
+        assert_eq!((spec.train_batch, spec.eval_batch), (64, 256));
+        assert_eq!(TopologySpec::from_json(&spec.to_json()).unwrap(), spec);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_topologies() {
+        assert!(TopologySpec::mlp(vec![], 4).validate().is_err());
+        assert!(TopologySpec::mlp(vec![128], 0).validate().is_err());
+        assert!(TopologySpec::mlp(vec![128], 9).validate().is_err());
+        assert!(TopologySpec::mlp(vec![0], 4).validate().is_err());
+        assert!(TopologySpec::mlp(vec![16; 17], 4).validate().is_err());
+        let mut t = TopologySpec::mlp(vec![16], 2);
+        t.train_batch = 0;
+        assert!(t.validate().is_err());
+    }
+}

@@ -2,10 +2,14 @@
 //! mechanism, owned by L3.
 //!
 //! One [`GroupState`](crate::arith::GroupState) per scaling-factor group
-//! (8 kinds × layers, see `runtime::manifest`). Every train step the
-//! compiled artifact returns the `[n_groups, 3]` overflow-counter matrix;
-//! the controller accumulates it and, every `update_every_examples`
-//! examples (paper: 10 000), applies the ×2/÷2 rule per group.
+//! in the layer-major table (8 kinds per compute layer, see
+//! `runtime::manifest`). The group **count comes from the model graph**
+//! — [`Network::n_groups`](crate::golden::Network::n_groups) /
+//! `ModelInfo::n_groups` — so deeper topologies get more controller rows
+//! without any code change here. Every train step the backend returns
+//! the `[n_groups, 3]` overflow-counter matrix; the controller
+//! accumulates it and, every `update_every_examples` examples (paper:
+//! 10 000), applies the ×2/÷2 rule per group.
 //!
 //! The same type serves the static arithmetics: for float32/float16 the
 //! step vector is all zeros (passthrough sentinel), for fixed point all
@@ -29,37 +33,41 @@ pub struct ScaleController {
 
 impl ScaleController {
     /// Static controller: every group frozen at its kind's format.
+    /// `n_groups` is the graph-derived group count
+    /// ([`Network::n_groups`](crate::golden::Network::n_groups));
     /// `comp_fmt` applies to signal kinds, `up_fmt` to parameter storage
     /// (paper section 6's two bit-widths).
-    pub fn fixed(n_layers: usize, comp_fmt: FixedFormat, up_fmt: FixedFormat) -> Self {
-        Self::build(n_layers, comp_fmt, up_fmt, false, 0.0, usize::MAX)
+    pub fn fixed(n_groups: usize, comp_fmt: FixedFormat, up_fmt: FixedFormat) -> Self {
+        Self::build(n_groups, comp_fmt, up_fmt, false, 0.0, usize::MAX)
     }
 
-    /// Dynamic controller (paper section 5).
+    /// Dynamic controller (paper section 5). `n_groups` as in
+    /// [`ScaleController::fixed`].
     pub fn dynamic(
-        n_layers: usize,
+        n_groups: usize,
         comp_fmt: FixedFormat,
         up_fmt: FixedFormat,
         max_rate: f64,
         update_every_examples: usize,
     ) -> Self {
-        Self::build(n_layers, comp_fmt, up_fmt, true, max_rate, update_every_examples)
+        Self::build(n_groups, comp_fmt, up_fmt, true, max_rate, update_every_examples)
     }
 
     fn build(
-        n_layers: usize,
+        n_groups: usize,
         comp_fmt: FixedFormat,
         up_fmt: FixedFormat,
         dynamic: bool,
         max_rate: f64,
         update_every_examples: usize,
     ) -> Self {
-        let mut groups = Vec::with_capacity(n_layers * N_KINDS);
-        for _layer in 0..n_layers {
-            for kind in 0..N_KINDS {
-                let fmt = if UPDATE_KINDS.contains(&kind) { up_fmt } else { comp_fmt };
-                groups.push(GroupState::new(fmt));
-            }
+        assert!(n_groups > 0, "controller needs at least one group");
+        let mut groups = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            // layer-major table: the kind cycles within each layer row
+            let kind = g % N_KINDS;
+            let fmt = if UPDATE_KINDS.contains(&kind) { up_fmt } else { comp_fmt };
+            groups.push(GroupState::new(fmt));
         }
         ScaleController {
             groups,
@@ -158,7 +166,7 @@ mod tests {
 
     #[test]
     fn static_controller_never_moves() {
-        let mut c = ScaleController::fixed(3, FixedFormat::new(20, 5), FixedFormat::new(20, 5));
+        let mut c = ScaleController::fixed(24, FixedFormat::new(20, 5), FixedFormat::new(20, 5));
         assert!(!c.is_dynamic());
         c.observe_matrix(&overflow(24, 1000.0, 1000.0, 1000.0));
         assert_eq!(c.after_batch(1_000_000, 0), None);
@@ -167,14 +175,14 @@ mod tests {
 
     #[test]
     fn float32_controller_is_passthrough() {
-        let c = ScaleController::fixed(2, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let c = ScaleController::fixed(16, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         assert!(c.steps_vec().iter().all(|&s| s == 0.0));
         assert!(c.maxvs_vec().iter().all(|&m| m == 0.0));
     }
 
     #[test]
     fn update_kinds_get_up_format() {
-        let c = ScaleController::fixed(1, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        let c = ScaleController::fixed(8, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
         // kind order: w b z h dw db dz dh
         assert_eq!(c.format(0).total_bits, 12); // w
         assert_eq!(c.format(1).total_bits, 12); // b
@@ -185,9 +193,21 @@ mod tests {
     }
 
     #[test]
+    fn group_count_follows_the_graph_not_a_layer_constant() {
+        // a 3-hidden-layer topology (4 compute layers) yields 32 groups;
+        // the kind-format cycle repeats per layer row
+        let c = ScaleController::fixed(32, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        assert_eq!(c.n_groups(), 32);
+        for row in 0..4 {
+            assert_eq!(c.format(row * 8).total_bits, 12); // w
+            assert_eq!(c.format(row * 8 + 2).total_bits, 10); // z
+        }
+    }
+
+    #[test]
     fn dynamic_controller_updates_on_interval() {
         let mut c = ScaleController::dynamic(
-            1,
+            8,
             FixedFormat::new(10, 2),
             FixedFormat::new(12, 2),
             1e-4,
@@ -206,7 +226,7 @@ mod tests {
     #[test]
     fn quiet_groups_gain_precision() {
         let mut c = ScaleController::dynamic(
-            1,
+            8,
             FixedFormat::new(10, 2),
             FixedFormat::new(12, 2),
             1e-4,
@@ -218,9 +238,54 @@ mod tests {
     }
 
     #[test]
+    fn overflow_rate_exactly_at_threshold_holds() {
+        // the paper's rule is strict: scale up only when rate > max_rate,
+        // scale down only when half_rate < max_rate. A group sitting
+        // EXACTLY on the boundary on both counts must hold.
+        let mut c = ScaleController::dynamic(
+            8,
+            FixedFormat::new(10, 2),
+            FixedFormat::new(12, 2),
+            0.01,
+            10,
+        );
+        // rate = 100/10_000 = max exactly; half_rate = max exactly
+        c.observe_matrix(&overflow(8, 100.0, 100.0, 10_000.0));
+        let moves = c.after_batch(10, 0).unwrap();
+        assert_eq!(moves, 0);
+        assert!(c.int_bits_vec().iter().all(|&b| b == 2));
+        // one count above the boundary scales up
+        c.observe_matrix(&overflow(8, 101.0, 101.0, 10_000.0));
+        assert_eq!(c.after_batch(10, 1).unwrap(), 8);
+        assert!(c.int_bits_vec().iter().all(|&b| b == 3));
+        // half_rate one count below the boundary scales down
+        c.observe_matrix(&overflow(8, 0.0, 99.0, 10_000.0));
+        assert_eq!(c.after_batch(10, 2).unwrap(), 8);
+        assert!(c.int_bits_vec().iter().all(|&b| b == 2));
+    }
+
+    #[test]
+    fn single_group_controller_works() {
+        // degenerate but legal: one group (kind 0 = w → storage format)
+        let mut c = ScaleController::dynamic(
+            1,
+            FixedFormat::new(10, 2),
+            FixedFormat::new(12, 2),
+            1e-4,
+            10,
+        );
+        assert_eq!(c.n_groups(), 1);
+        assert_eq!(c.format(0).total_bits, 12);
+        c.observe_matrix(&overflow(1, 50.0, 60.0, 100.0));
+        assert_eq!(c.after_batch(10, 0), Some(1));
+        assert_eq!(c.int_bits_vec(), vec![3]);
+        assert_eq!(c.decisions_log, vec![(0, 0, 3)]);
+    }
+
+    #[test]
     fn adopt_int_bits_transfers_warmup_scales() {
         let mut c =
-            ScaleController::dynamic(1, FixedFormat::new(10, 0), FixedFormat::new(12, 0), 1e-4, 10);
+            ScaleController::dynamic(8, FixedFormat::new(10, 0), FixedFormat::new(12, 0), 1e-4, 10);
         c.adopt_int_bits(&[5, 4, 3, 2, 1, 0, -1, -2]);
         assert_eq!(c.int_bits_vec(), vec![5, 4, 3, 2, 1, 0, -1, -2]);
         // widths preserved
@@ -229,9 +294,35 @@ mod tests {
     }
 
     #[test]
+    fn repeated_adoption_is_idempotent() {
+        let mut c =
+            ScaleController::dynamic(8, FixedFormat::new(10, 0), FixedFormat::new(12, 0), 1e-4, 10);
+        let learned = [5, 4, 3, 2, 1, 0, -1, -2];
+        c.adopt_int_bits(&learned);
+        let first: Vec<_> = (0..8).map(|g| c.format(g)).collect();
+        c.adopt_int_bits(&learned);
+        let second: Vec<_> = (0..8).map(|g| c.format(g)).collect();
+        assert_eq!(first, second);
+        // adoption does not count as a scale move and leaves no log entry
+        assert!(c.decisions_log.is_empty());
+        // and does not disturb the accumulated-but-unticked counters:
+        // a quiet interval after adoption still scales down normally
+        c.observe_matrix(&overflow(8, 0.0, 0.0, 10_000.0));
+        assert_eq!(c.after_batch(10, 0).unwrap(), 8);
+        assert_eq!(c.int_bits_vec(), vec![4, 3, 2, 1, 0, -1, -2, -3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn adoption_with_wrong_group_count_panics() {
+        let mut c = ScaleController::fixed(8, FixedFormat::new(10, 0), FixedFormat::new(12, 0));
+        c.adopt_int_bits(&[1, 2, 3]);
+    }
+
+    #[test]
     #[should_panic(expected = "overflow matrix shape")]
     fn shape_mismatch_panics() {
-        let mut c = ScaleController::fixed(2, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut c = ScaleController::fixed(16, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         c.observe_matrix(&Tensor::zeros(&[3, 3]));
     }
 }

@@ -45,6 +45,11 @@ use crate::tensor::Pcg32;
 ///   warmup phase's root stream, so warmup sees the same *distributions*
 ///   (same fork tags) over decorrelated draws, and the post-warmup
 ///   reinitialization (paper 9.3) starts from fresh parameters.
+/// * [`STOCHASTIC_SITE_SEED`](crate::golden::STOCHASTIC_SITE_SEED) — the
+///   one stream *not* derived from the experiment seed: the base of the
+///   counter-based stochastic-rounding streams inside a train step
+///   (`golden::GoldenQ`). A fixed constant, so rounding noise is a
+///   property of the quantization site, never of the run.
 pub const RNG_FORK_INIT: u64 = 0x1217;
 pub const RNG_FORK_BATCHER: u64 = 0xBA7C;
 pub const WARMUP_SEED_XOR: u64 = 0xAAAA;
@@ -112,8 +117,9 @@ impl<'a> Trainer<'a> {
             &root_rng,
         )?;
 
-        // Scale controller, with optional high-precision warmup.
-        let mut ctrl = self.make_controller(model.n_layers);
+        // Scale controller sized from the model graph's group table,
+        // with optional high-precision warmup.
+        let mut ctrl = self.make_controller(model.n_groups);
         if let Arithmetic::Dynamic { warmup_steps, .. } = self.cfg.arithmetic {
             if warmup_steps > 0 {
                 let learned = self.warmup(&model, &dataset, warmup_steps)?;
@@ -196,19 +202,19 @@ impl<'a> Trainer<'a> {
         }
     }
 
-    fn make_controller(&self, n_layers: usize) -> ScaleController {
+    fn make_controller(&self, n_groups: usize) -> ScaleController {
         let (comp_fmt, up_fmt) = self.cfg.arithmetic.initial_formats();
         match self.cfg.arithmetic {
             Arithmetic::Dynamic { max_overflow_rate, update_every_examples, .. } => {
                 ScaleController::dynamic(
-                    n_layers,
+                    n_groups,
                     comp_fmt,
                     up_fmt,
                     max_overflow_rate,
                     update_every_examples,
                 )
             }
-            _ => ScaleController::fixed(n_layers, comp_fmt, up_fmt),
+            _ => ScaleController::fixed(n_groups, comp_fmt, up_fmt),
         }
     }
 
@@ -229,7 +235,7 @@ impl<'a> Trainer<'a> {
         };
         let wide = crate::arith::FixedFormat::new(31, init_int);
         let mut ctrl = ScaleController::dynamic(
-            model.n_layers,
+            model.n_groups,
             wide,
             wide,
             max_rate,

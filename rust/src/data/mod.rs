@@ -75,6 +75,18 @@ pub struct Dataset {
     pub n_classes: usize,
 }
 
+/// Static per-dataset dimensions `(example_len, n_classes)` — what a
+/// topology needs to size its input/output layers *before* any data is
+/// generated (model realization happens ahead of dataset synthesis).
+/// Must agree with what [`Dataset::generate`] produces; a test pins it.
+pub fn dataset_dims(name: &str) -> crate::Result<(usize, usize)> {
+    match name {
+        "digits" | "clusters" => Ok((784, 10)),
+        "cifar_like" | "svhn_like" => Ok((32 * 32 * 3, 10)),
+        other => crate::bail!("unknown dataset '{other}'"),
+    }
+}
+
 impl Dataset {
     /// Generate the named dataset (see module docs) deterministically.
     pub fn generate(
@@ -134,6 +146,18 @@ mod tests {
     #[test]
     fn unknown_dataset_rejected() {
         assert!(Dataset::generate("imagenet", 8, 8, &Pcg32::seeded(1)).is_err());
+        assert!(dataset_dims("imagenet").is_err());
+    }
+
+    #[test]
+    fn static_dims_match_generated_data() {
+        let rng = Pcg32::seeded(11);
+        for name in ["digits", "clusters", "cifar_like", "svhn_like"] {
+            let (d_in, n_classes) = dataset_dims(name).unwrap();
+            let ds = Dataset::generate(name, 4, 2, &rng).unwrap();
+            assert_eq!(d_in, ds.train.example_len(), "{name}");
+            assert_eq!(n_classes, ds.n_classes, "{name}");
+        }
     }
 
     #[test]

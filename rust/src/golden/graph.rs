@@ -1,0 +1,990 @@
+//! The layer-graph executor: topology as data, quantization sites
+//! derived from the graph.
+//!
+//! The golden model used to be one hand-inlined 2-hidden-layer maxout
+//! step (`MlpShape::pi_mlp` pinned the whole topology). This module
+//! decomposes it into a [`Layer`] trait with three concrete layers —
+//! [`MaxoutDense`], [`SoftmaxHead`], [`DropoutLayer`] — assembled into a
+//! [`Network`] from a [`TopologySpec`], so depth/width sweeps and
+//! CIFAR/SVHN-class MLP workloads are config changes, not code changes.
+//!
+//! **The bit-identity contract.** The graph executor is not "close to"
+//! the monolithic step it replaced — it is bit-identical on the builtin
+//! `pi_mlp`, across all four arithmetics, all four rounding modes, fused
+//! and two-pass kernels, any thread count, and with dropout on
+//! (`tests/graph_parity.rs` asserts exact `u32` bits against
+//! [`super::reference`]). Three orderings make that hold, and every
+//! layer implementation must preserve them:
+//!
+//! 1. **Site order.** [`GoldenQ`] numbers quantization sites in call
+//!    order (stochastic-rounding streams key on the site index). The
+//!    graph visits sites exactly as the monolith did: forward
+//!    `Z,H` per maxout layer then the head's `Z`; backward `DZ,DW,DB`
+//!    per compute layer top-down, with the produced `dx` quantized as
+//!    the *next compute layer below*'s `DH` group **before** any
+//!    intervening dropout mask is applied; update `w` then `b` per
+//!    layer bottom-up, velocity before parameter.
+//! 2. **Group table.** Scaling-factor groups stay layer-major
+//!    (`group_index(row, kind) = row * N_KINDS + kind`) where `row` is
+//!    the compute layer's position in the graph (dropout layers own no
+//!    groups). [`Network::n_groups`] is therefore *derived from the
+//!    graph* and is what
+//!    [`ScaleController::fixed`]/[`ScaleController::dynamic`] take.
+//! 3. **RNG draw order.** Dropout masks draw from one stream in forward
+//!    graph order (input mask first, then after each hidden layer), so
+//!    the graph replays the monolith's masks bit-for-bit.
+
+use crate::arith::{QuantStats, RoundMode};
+use crate::config::TopologySpec;
+use crate::coordinator::ScaleController;
+use crate::runtime::manifest::{
+    KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z, N_KINDS,
+};
+use crate::tensor::{ops, Tensor};
+
+use super::{
+    apply_mask, Dropout, dropout_mask, GoldenOut, GoldenQ, MlpShape, Params,
+    StepOptions, STOCHASTIC_SITE_SEED,
+};
+
+/// Per-step state a layer saves in `forward` for its `backward`. A
+/// closed enum instead of `Box<dyn Any>`: the three layer kinds are a
+/// deliberate vocabulary, and the variants keep tensor moves explicit.
+pub enum Cache {
+    /// Maxout: the (possibly dropout-masked) input + winning filter per
+    /// `[B, U]` output.
+    Maxout { x: Tensor, amax: Vec<u8> },
+    /// Head: the (possibly dropout-masked) input.
+    Head { x: Tensor },
+    /// Dropout: the drawn mask (`None` = identity this step).
+    Mask(Option<Vec<f32>>),
+}
+
+/// Where a [`DropoutLayer`] reads its rate from ([`StepOptions`] carries
+/// the schedule's per-step input/hidden rates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropoutRole {
+    Input,
+    Hidden,
+}
+
+/// The per-step dropout stream, threaded through the forward pass. Draws
+/// happen in graph order from the single [`Dropout`] RNG, which is what
+/// keeps graph masks identical to the monolith's.
+pub struct DropCtx<'a> {
+    dropout: Option<&'a mut Dropout>,
+}
+
+impl<'a> DropCtx<'a> {
+    /// Evaluation context: no masks, no RNG draws.
+    pub fn eval() -> DropCtx<'static> {
+        DropCtx { dropout: None }
+    }
+
+    /// Training context over the step's dropout state (if any).
+    pub fn train(dropout: Option<&'a mut Dropout>) -> DropCtx<'a> {
+        DropCtx { dropout }
+    }
+
+    fn mask(&mut self, n: usize, role: DropoutRole) -> Option<Vec<f32>> {
+        let d = self.dropout.as_mut()?;
+        let rate = match role {
+            DropoutRole::Input => d.input_rate,
+            DropoutRole::Hidden => d.hidden_rate,
+        };
+        dropout_mask(&mut d.rng, n, rate)
+    }
+}
+
+/// Resolved per-step update hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateHp {
+    pub lr: f32,
+    pub mom: f32,
+    pub max_norm: f32,
+}
+
+/// One node of the training graph.
+///
+/// A layer owns a contiguous run of the manifest-ordered parameter
+/// vector (`n_params` tensors; the [`Network`] slices them out) and, if
+/// it quantizes anything, one scaling-group *row* (`group_row`) in the
+/// layer-major group table. Every quantization site a layer touches
+/// registers against the shared [`GoldenQ`] in a fixed visit order — see
+/// the module docs for the three orderings the implementations must
+/// preserve.
+pub trait Layer {
+    /// Human-readable description for diagnostics.
+    fn describe(&self) -> String;
+
+    /// The scaling-group row this layer's sites record under; `None`
+    /// for stateless layers with no quantization sites (dropout).
+    fn group_row(&self) -> Option<usize>;
+
+    /// Number of parameter tensors this layer owns (manifest order).
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    /// Output feature width given the input feature width.
+    fn out_dim(&self, d_in: usize) -> usize;
+
+    /// Consume the layer input, produce its output plus whatever the
+    /// backward pass needs. Quantization sites register against `q` in
+    /// visit order.
+    fn forward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        drop: &mut DropCtx,
+    ) -> (Tensor, Cache);
+
+    /// Consume the gradient w.r.t. this layer's output; produce the
+    /// parameter gradients (manifest order) and, when `dx_group` is
+    /// `Some(row)`, the gradient w.r.t. the layer input quantized under
+    /// `(row, DH)` — the *lower* compute layer's DH group, matching the
+    /// monolith's (and L2's) attribution. `dx_group = None` means no
+    /// consumer below needs `dx`.
+    fn backward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        cache: &Cache,
+        dy: Tensor,
+        dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>);
+
+    /// SGD + momentum + max-norm + storage quantization over this
+    /// layer's parameter run. Default: no parameters, nothing to do.
+    fn sgd_update(
+        &self,
+        q: &mut GoldenQ,
+        params: &mut [Tensor],
+        vels: &mut [Tensor],
+        grads: &[Tensor],
+        hp: &UpdateHp,
+    ) {
+        let _ = (q, params, vels, grads, hp);
+        debug_assert!(self.n_params() == 0, "parameterized layer must implement sgd_update");
+    }
+}
+
+/// The shared dense-layer update rule (w then b, velocity quantized
+/// unrecorded, parameter max-normed then quantized recorded) — exactly
+/// the monolith's per-parameter sequence.
+fn dense_sgd_update(
+    q: &mut GoldenQ,
+    group: usize,
+    params: &mut [Tensor],
+    vels: &mut [Tensor],
+    grads: &[Tensor],
+    hp: &UpdateHp,
+) {
+    debug_assert_eq!(params.len(), 2);
+    debug_assert_eq!(grads.len(), 2);
+    for i in 0..2 {
+        let kind = if i == 0 { KIND_W } else { KIND_B };
+        // v' = Q_up(mom*v - lr*g), stats NOT recorded (matches L2)
+        for (vv, gv) in vels[i].data_mut().iter_mut().zip(grads[i].data()) {
+            *vv = hp.mom * *vv - hp.lr * gv;
+        }
+        q.apply(&mut vels[i], group, kind, false);
+        // p' = Q_up(maxnorm(p + v'))
+        for (pv, vv) in params[i].data_mut().iter_mut().zip(vels[i].data()) {
+            *pv += vv;
+        }
+        if kind == KIND_W {
+            ops::max_norm_inplace(&mut params[i], hp.max_norm);
+        }
+        q.apply(&mut params[i], group, kind, true);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaxoutDense
+// ---------------------------------------------------------------------------
+
+/// One maxout dense layer: per-filter `z_j = x @ w_j + b_j` (Z group,
+/// one logical site across all `k` filter tiles, fused into the GEMM
+/// epilogues), `h = max_j z_j` (H group). Params: `w [k, I, U]`,
+/// `b [k, U]`.
+pub struct MaxoutDense {
+    pub units: usize,
+    pub k: usize,
+    /// This layer's row in the layer-major group table.
+    pub group: usize,
+}
+
+impl Layer for MaxoutDense {
+    fn describe(&self) -> String {
+        format!("maxout({}x{})@l{}", self.units, self.k, self.group)
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        Some(self.group)
+    }
+
+    fn n_params(&self) -> usize {
+        2
+    }
+
+    fn out_dim(&self, _d_in: usize) -> usize {
+        self.units
+    }
+
+    fn forward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        _drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let (w, b) = (&params[0], &params[1]);
+        let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let batch = x.shape()[0];
+        assert_eq!(x.shape()[1], d_in, "{}: input width", self.describe());
+
+        // z for every filter, quantized as ONE logical site. Fused: each
+        // filter's [B, U] tile gets bias + quantization in its GEMM
+        // epilogue (base = the filter's offset in the [k, B, U] tensor).
+        // Two-pass: materialize all k tiles, then sweep the whole tensor.
+        // Identical per-element index stream → identical bits/counters.
+        let mut zq = Tensor::zeros(&[k, batch, units]);
+        let epi = q.epilogue(self.group, KIND_Z);
+        let mut zst = QuantStats::default();
+        for j in 0..k {
+            let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+            let brow = &b.data()[j * units..(j + 1) * units];
+            let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+            if q.fused {
+                zst.merge(ops::matmul_sl_q_into(
+                    x.data(),
+                    wj,
+                    Some(brow),
+                    dst,
+                    batch,
+                    d_in,
+                    units,
+                    epi.with_base((j * batch * units) as u64),
+                ));
+            } else {
+                let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
+                for r in 0..batch {
+                    for u in 0..units {
+                        dst[r * units + u] = zj[r * units + u] + brow[u];
+                    }
+                }
+            }
+        }
+        if !q.fused {
+            zst = epi.run(zq.data_mut(), 0);
+        }
+        q.record(self.group, KIND_Z, zst);
+
+        let mut h = Tensor::zeros(&[batch, units]);
+        let mut amax = vec![0u8; batch * units];
+        for r in 0..batch {
+            for u in 0..units {
+                let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
+                for j in 0..k {
+                    let v = zq.at3(j, r, u);
+                    if v > best {
+                        best = v;
+                        bj = j as u8;
+                    }
+                }
+                h.data_mut()[r * units + u] = best;
+                amax[r * units + u] = bj;
+            }
+        }
+        q.apply(&mut h, self.group, KIND_H, true);
+        (h, Cache::Maxout { x, amax })
+    }
+
+    fn backward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        cache: &Cache,
+        dy: Tensor,
+        dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Maxout { x, amax } = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        let w = &params[0];
+        let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let batch = x.shape()[0];
+
+        // route dh to the winning filter, quantize (DZ group)
+        let mut dz = Tensor::zeros(&[k, batch, units]);
+        for r in 0..batch {
+            for u in 0..units {
+                let j = amax[r * units + u] as usize;
+                dz.data_mut()[(j * batch + r) * units + u] = dy.at2(r, u);
+            }
+        }
+        q.apply(&mut dz, self.group, KIND_DZ, true);
+
+        // dw for every filter, quantized as ONE logical site (like the z
+        // tiles in the forward pass). The dx contraction is NOT fused:
+        // its per-filter products are summed across filters before the
+        // total is quantized as the lower layer's DH group.
+        let mut dw = Tensor::zeros(&[k, d_in, units]);
+        let mut db = Tensor::zeros(&[k, units]);
+        let mut dx = Tensor::zeros(&[batch, d_in]);
+        let epi = q.epilogue(self.group, KIND_DW);
+        let mut dwst = QuantStats::default();
+        for j in 0..k {
+            // contiguous [batch, units] view of this filter's dz
+            let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
+            let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
+            if q.fused {
+                dwst.merge(ops::matmul_tn_sl_q_into(
+                    x.data(),
+                    dzj,
+                    dwj_dst,
+                    batch,
+                    d_in,
+                    units,
+                    epi.with_base((j * d_in * units) as u64),
+                ));
+            } else {
+                let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
+                dwj_dst.copy_from_slice(&dwj);
+            }
+            let dbj = ops::sum_rows_sl(dzj, batch, units);
+            db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
+            if dx_group.is_some() {
+                let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+                let dxj = ops::matmul_nt_sl(dzj, wj, batch, units, d_in);
+                for (a, &b) in dx.data_mut().iter_mut().zip(&dxj) {
+                    *a += b;
+                }
+            }
+        }
+        if !q.fused {
+            dwst = epi.run(dw.data_mut(), 0);
+        }
+        q.record(self.group, KIND_DW, dwst);
+        q.apply(&mut db, self.group, KIND_DB, true);
+
+        let dx = dx_group.map(|g| {
+            q.apply(&mut dx, g, KIND_DH, true);
+            dx
+        });
+        (vec![dw, db], dx)
+    }
+
+    fn sgd_update(
+        &self,
+        q: &mut GoldenQ,
+        params: &mut [Tensor],
+        vels: &mut [Tensor],
+        grads: &[Tensor],
+        hp: &UpdateHp,
+    ) {
+        dense_sgd_update(q, self.group, params, vels, grads, hp);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SoftmaxHead
+// ---------------------------------------------------------------------------
+
+/// The classifier head: `z = x @ w + b` with the bias and Z-group
+/// quantization fused into the GEMM epilogue. The softmax/cross-entropy
+/// itself is loss machinery and lives in the [`Network`] driver (as it
+/// did in the monolith); this layer's backward consumes the pre-quantized
+/// `(p - y)/B` and owns the DZ/DW/DB sites plus the fused DH projection.
+/// Params: `w [U, C]`, `b [C]`.
+pub struct SoftmaxHead {
+    pub n_classes: usize,
+    /// This layer's row in the layer-major group table.
+    pub group: usize,
+}
+
+impl Layer for SoftmaxHead {
+    fn describe(&self) -> String {
+        format!("softmax({})@l{}", self.n_classes, self.group)
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        Some(self.group)
+    }
+
+    fn n_params(&self) -> usize {
+        2
+    }
+
+    fn out_dim(&self, _d_in: usize) -> usize {
+        self.n_classes
+    }
+
+    fn forward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        _drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let (w, b) = (&params[0], &params[1]);
+        let (units, classes) = (w.shape()[0], w.shape()[1]);
+        let batch = x.shape()[0];
+        assert_eq!(x.shape()[1], units, "{}: input width", self.describe());
+
+        let epi = q.epilogue(self.group, KIND_Z);
+        let z = if q.fused {
+            let (v, st) = ops::matmul_sl_q(
+                x.data(),
+                w.data(),
+                Some(b.data()),
+                batch,
+                units,
+                classes,
+                epi,
+            );
+            q.record(self.group, KIND_Z, st);
+            Tensor::from_vec(&[batch, classes], v)
+        } else {
+            let mut z = ops::matmul(&x, w);
+            for r in 0..batch {
+                for c in 0..classes {
+                    z.data_mut()[r * classes + c] += b.data()[c];
+                }
+            }
+            let st = epi.run(z.data_mut(), 0);
+            q.record(self.group, KIND_Z, st);
+            z
+        };
+        (z, Cache::Head { x })
+    }
+
+    fn backward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        cache: &Cache,
+        mut dy: Tensor,
+        dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Head { x } = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        let w = &params[0];
+        let (units, classes) = (w.shape()[0], w.shape()[1]);
+        let batch = x.shape()[0];
+
+        // dy arrives as the pre-quantized loss gradient (p - y)/B
+        q.apply(&mut dy, self.group, KIND_DZ, true);
+        let dz = dy;
+
+        let epi = q.epilogue(self.group, KIND_DW);
+        let dw = if q.fused {
+            let (v, st) = ops::matmul_tn_sl_q(x.data(), dz.data(), batch, units, classes, epi);
+            q.record(self.group, KIND_DW, st);
+            Tensor::from_vec(&[units, classes], v)
+        } else {
+            let mut dw = ops::matmul_tn(x, &dz);
+            let st = epi.run(dw.data_mut(), 0);
+            q.record(self.group, KIND_DW, st);
+            dw
+        };
+        let mut db = ops::sum_rows(&dz);
+        q.apply(&mut db, self.group, KIND_DB, true);
+
+        // dx quantized as the lower layer's DH group, fused into the NT
+        // projection (the monolith's dh1 site, generalized)
+        let dx = dx_group.map(|g| {
+            let epi = q.epilogue(g, KIND_DH);
+            if q.fused {
+                let (v, st) =
+                    ops::matmul_nt_sl_q(dz.data(), w.data(), batch, classes, units, epi);
+                q.record(g, KIND_DH, st);
+                Tensor::from_vec(&[batch, units], v)
+            } else {
+                let mut dx = ops::matmul_nt(&dz, w);
+                let st = epi.run(dx.data_mut(), 0);
+                q.record(g, KIND_DH, st);
+                dx
+            }
+        });
+        (vec![dw, db], dx)
+    }
+
+    fn sgd_update(
+        &self,
+        q: &mut GoldenQ,
+        params: &mut [Tensor],
+        vels: &mut [Tensor],
+        grads: &[Tensor],
+        hp: &UpdateHp,
+    ) {
+        dense_sgd_update(q, self.group, params, vels, grads, hp);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DropoutLayer
+// ---------------------------------------------------------------------------
+
+/// Inverted dropout as a graph node: draws its mask from the step's
+/// shared [`Dropout`] stream in forward graph order, masks in place, and
+/// replays the mask over the gradient in backward. No quantization
+/// sites, no parameters, identity in evaluation.
+pub struct DropoutLayer {
+    pub role: DropoutRole,
+}
+
+impl DropoutLayer {
+    pub fn input() -> DropoutLayer {
+        DropoutLayer { role: DropoutRole::Input }
+    }
+
+    pub fn hidden() -> DropoutLayer {
+        DropoutLayer { role: DropoutRole::Hidden }
+    }
+}
+
+impl Layer for DropoutLayer {
+    fn describe(&self) -> String {
+        match self.role {
+            DropoutRole::Input => "dropout(input)".into(),
+            DropoutRole::Hidden => "dropout(hidden)".into(),
+        }
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        None
+    }
+
+    fn out_dim(&self, d_in: usize) -> usize {
+        d_in
+    }
+
+    fn forward(
+        &self,
+        _q: &mut GoldenQ,
+        _params: &[Tensor],
+        mut x: Tensor,
+        drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let mask = drop.mask(x.len(), self.role);
+        apply_mask(&mut x, &mask);
+        (x, Cache::Mask(mask))
+    }
+
+    fn backward(
+        &self,
+        _q: &mut GoldenQ,
+        _params: &[Tensor],
+        cache: &Cache,
+        mut dy: Tensor,
+        _dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Mask(mask) = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        apply_mask(&mut dy, mask);
+        (Vec::new(), Some(dy))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Network
+// ---------------------------------------------------------------------------
+
+/// A maxout MLP assembled from [`Layer`]s, driving one train/eval step
+/// over the manifest-ordered flat parameter vector. Built from a
+/// [`TopologySpec`] (+ dataset dimensions) or, for the legacy call
+/// sites, from an [`MlpShape`].
+pub struct Network {
+    layers: Vec<Box<dyn Layer>>,
+    /// Per layer: (offset, count) into the flat manifest-order params.
+    param_ranges: Vec<(usize, usize)>,
+    n_group_rows: usize,
+    d_in: usize,
+    n_classes: usize,
+}
+
+impl Network {
+    /// Realize a topology against a data source's dimensions. The layer
+    /// sequence mirrors the monolithic step: input dropout, then per
+    /// hidden layer a maxout dense + hidden dropout, then the head.
+    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> Network {
+        // hard invariant, not a debug check: a spec that skipped
+        // validate() must not silently build a head-only linear model
+        assert!(!spec.hidden.is_empty(), "topology needs >= 1 hidden layer");
+        let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(2 * spec.hidden.len() + 2);
+        layers.push(Box::new(DropoutLayer::input()));
+        let mut row = 0;
+        for &units in &spec.hidden {
+            layers.push(Box::new(MaxoutDense { units, k: spec.k, group: row }));
+            row += 1;
+            layers.push(Box::new(DropoutLayer::hidden()));
+        }
+        layers.push(Box::new(SoftmaxHead { n_classes, group: row }));
+        row += 1;
+
+        let mut param_ranges = Vec::with_capacity(layers.len());
+        let mut offset = 0;
+        for l in &layers {
+            param_ranges.push((offset, l.n_params()));
+            offset += l.n_params();
+        }
+        Network { layers, param_ranges, n_group_rows: row, d_in, n_classes }
+    }
+
+    /// The 2-hidden-layer network an [`MlpShape`] describes (the legacy
+    /// golden entry points drive this).
+    pub fn from_mlp_shape(s: MlpShape) -> Network {
+        let spec = TopologySpec::mlp(vec![s.units, s.units], s.k);
+        Network::from_topology(&spec, s.d_in, s.n_classes)
+    }
+
+    /// Scaling-factor group count derived from the graph: one row of
+    /// `N_KINDS` kinds per compute layer. This is the number
+    /// [`ScaleController::fixed`]/[`ScaleController::dynamic`] take.
+    pub fn n_groups(&self) -> usize {
+        self.n_group_rows * N_KINDS
+    }
+
+    /// Number of compute layers (= group rows): hidden + head.
+    pub fn n_compute_layers(&self) -> usize {
+        self.n_group_rows
+    }
+
+    /// Flat input width the network consumes.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Total parameter tensors (manifest order: w0 b0 w1 b1 ...).
+    pub fn n_params(&self) -> usize {
+        self.param_ranges.last().map(|&(o, n)| o + n).unwrap_or(0)
+    }
+
+    /// One-line graph description for diagnostics.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self.layers.iter().map(|l| l.describe()).collect();
+        parts.join(" -> ")
+    }
+
+    /// Group row of the closest compute layer strictly below `pos`
+    /// (`None` when `pos` is the bottom compute layer).
+    fn group_row_below(&self, pos: usize) -> Option<usize> {
+        self.layers[..pos].iter().rev().find_map(|l| l.group_row())
+    }
+
+    /// One full train step over the graph. Bit-identical to the
+    /// monolithic reference on the builtin topology (see module docs);
+    /// mutates params/vels in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        params: &mut Params,
+        vels: &mut Params,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+        mom: f32,
+        max_norm: f32,
+        ctrl: &ScaleController,
+        mut opts: StepOptions,
+    ) -> GoldenOut {
+        assert_eq!(
+            ctrl.n_groups(),
+            self.n_groups(),
+            "scale controller group count must be Network::n_groups()"
+        );
+        assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
+        let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
+        q.fused = opts.fused;
+        if opts.mode == RoundMode::Stochastic {
+            // true stochastic rounding draws one uniform sample per
+            // element from counter-based per-site streams (index-keyed,
+            // so the fused and two-pass paths sample identically)
+            q.stochastic_seed = Some(STOCHASTIC_SITE_SEED);
+        }
+        let batch = x.shape()[0];
+        let classes = self.n_classes;
+        let mut dctx = DropCtx::train(opts.dropout.as_mut());
+
+        // ---- forward ----
+        let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
+        // one input copy buys by-value tensor flow through the whole
+        // graph (layers move activations into their caches); negligible
+        // next to the layer GEMMs — the `graph train step` bench rows
+        // track this dispatch overhead against the monolith
+        let mut h = x.clone();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[li];
+            let (out, cache) = layer.forward(&mut q, &params[o..o + n], h, &mut dctx);
+            caches.push(cache);
+            h = out;
+        }
+        let z = h;
+        let logp = ops::log_softmax(&z);
+        let mut loss = 0.0f64;
+        for i in 0..batch * classes {
+            loss -= (y.data()[i] * logp.data()[i]) as f64;
+        }
+        let loss = (loss / batch as f64) as f32;
+
+        // ---- backward ----
+        // loss gradient dz = (p - y)/B, handed to the head pre-quantized
+        let mut dz = Tensor::zeros(&[batch, classes]);
+        for i in 0..batch * classes {
+            dz.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
+        }
+        let mut grads: Vec<Vec<Tensor>> = Vec::with_capacity(self.layers.len());
+        grads.resize_with(self.layers.len(), Vec::new);
+        let mut dy = dz;
+        for pos in (0..self.layers.len()).rev() {
+            let layer = &self.layers[pos];
+            let (o, n) = self.param_ranges[pos];
+            if layer.group_row().is_some() {
+                let dx_group = self.group_row_below(pos);
+                let (g, dx) =
+                    layer.backward(&mut q, &params[o..o + n], &caches[pos], dy, dx_group);
+                grads[pos] = g;
+                match dx {
+                    Some(d) => dy = d,
+                    // bottom compute layer: nothing below consumes dx
+                    None => break,
+                }
+            } else {
+                let (_, dx) = layer.backward(&mut q, &[], &caches[pos], dy, None);
+                dy = dx.expect("stateless layers pass their gradient through");
+            }
+        }
+
+        // ---- SGD + momentum + max-norm + storage quantization ----
+        // (bottom-up = manifest parameter order, matching the monolith)
+        let hp = UpdateHp { lr, mom, max_norm };
+        for (pos, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[pos];
+            if n == 0 {
+                continue;
+            }
+            layer.sgd_update(
+                &mut q,
+                &mut params[o..o + n],
+                &mut vels[o..o + n],
+                &grads[pos],
+                &hp,
+            );
+        }
+
+        GoldenOut { loss, overflow: q.stats_matrix() }
+    }
+
+    /// Forward-only logits `[B, C]` (no dropout, no mutation),
+    /// quantizing forward signals exactly as the train step does.
+    pub fn eval_logits(
+        &self,
+        params: &Params,
+        x: &Tensor,
+        ctrl: &ScaleController,
+        mode: RoundMode,
+        half: bool,
+    ) -> Tensor {
+        assert_eq!(
+            ctrl.n_groups(),
+            self.n_groups(),
+            "scale controller group count must be Network::n_groups()"
+        );
+        let mut q = GoldenQ::with_half(ctrl, mode, half);
+        let mut dctx = DropCtx::eval();
+        let mut h = x.clone();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[li];
+            let (out, _) = layer.forward(&mut q, &params[o..o + n], h, &mut dctx);
+            h = out;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::FixedFormat;
+    use crate::runtime::manifest::group_index;
+    use crate::runtime::ModelInfo;
+    use crate::tensor::Pcg32;
+
+    fn spec3() -> TopologySpec {
+        TopologySpec::mlp(vec![10, 8, 6], 2)
+    }
+
+    /// Params + vels realized from the ModelInfo the same spec produces.
+    fn state(spec: &TopologySpec, d_in: usize, n_classes: usize, seed: u64) -> (Params, Params) {
+        let info = ModelInfo::from_topology(spec, d_in, n_classes);
+        let mut rng = Pcg32::seeded(seed);
+        let params: Vec<Tensor> =
+            info.params.iter().map(|s| s.init.realize(&s.shape, &mut rng)).collect();
+        let vels = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        (params, vels)
+    }
+
+    #[test]
+    fn graph_derives_group_table_from_topology() {
+        let net = Network::from_topology(&spec3(), 12, 4);
+        assert_eq!(net.n_compute_layers(), 4);
+        assert_eq!(net.n_groups(), 4 * N_KINDS);
+        assert_eq!(net.n_params(), 8);
+        assert_eq!(net.d_in(), 12);
+        assert_eq!(net.n_classes(), 4);
+        let desc = net.describe();
+        assert!(desc.starts_with("dropout(input) -> maxout(10x2)@l0"), "{desc}");
+        assert!(desc.ends_with("softmax(4)@l3"), "{desc}");
+        // shape inference chains input width to class count
+        let mut w = net.d_in();
+        for l in &net.layers {
+            w = l.out_dim(w);
+        }
+        assert_eq!(w, net.n_classes());
+    }
+
+    #[test]
+    fn deep_topology_trains_and_counts_per_layer_overflow() {
+        let spec = spec3();
+        let net = Network::from_topology(&spec, 12, 4);
+        let ctrl = ScaleController::fixed(
+            net.n_groups(),
+            FixedFormat::new(10, 3),
+            FixedFormat::new(12, 0),
+        );
+        let (mut params, mut vels) = state(&spec, 12, 4, 3);
+        let n = 16;
+        let mut rng = Pcg32::seeded(9);
+        let x = Tensor::from_vec(&[n, 12], (0..n * 12).map(|_| rng.normal()).collect());
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4) as usize).collect();
+        let y = ops::one_hot(&labels, 4);
+        let out = net.train_step(
+            &mut params,
+            &mut vels,
+            &x,
+            &y,
+            0.1,
+            0.5,
+            2.0,
+            &ctrl,
+            StepOptions::default(),
+        );
+        assert!(out.loss.is_finite());
+        assert_eq!(out.overflow.shape(), &[4 * N_KINDS, 3]);
+        // per-layer totals reflect each layer's own width
+        assert_eq!(out.overflow.at2(group_index(0, KIND_Z), 2), (2 * n * 10) as f32);
+        assert_eq!(out.overflow.at2(group_index(1, KIND_Z), 2), (2 * n * 8) as f32);
+        assert_eq!(out.overflow.at2(group_index(2, KIND_Z), 2), (2 * n * 6) as f32);
+        assert_eq!(out.overflow.at2(group_index(3, KIND_Z), 2), (n * 4) as f32);
+        assert_eq!(out.overflow.at2(group_index(3, KIND_DZ), 2), (n * 4) as f32);
+        // DH flows into every layer below the head
+        assert_eq!(out.overflow.at2(group_index(2, KIND_DH), 2), (n * 6) as f32);
+        assert_eq!(out.overflow.at2(group_index(0, KIND_DH), 2), (n * 10) as f32);
+    }
+
+    #[test]
+    fn deep_topology_loss_decreases() {
+        let spec = TopologySpec::mlp(vec![16, 16, 16], 2);
+        let net = Network::from_topology(&spec, 12, 4);
+        let ctrl =
+            ScaleController::fixed(net.n_groups(), FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (mut params, mut vels) = state(&spec, 12, 4, 5);
+        let n = 16;
+        let mut rng = Pcg32::seeded(6);
+        let x = Tensor::from_vec(&[n, 12], (0..n * 12).map(|_| rng.normal()).collect());
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4) as usize).collect();
+        let y = ops::one_hot(&labels, 4);
+        let (mut first, mut last) = (None, 0.0);
+        for _ in 0..40 {
+            let out = net.train_step(
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.2,
+                0.5,
+                0.0,
+                &ctrl,
+                StepOptions::default(),
+            );
+            first.get_or_insert(out.loss);
+            last = out.loss;
+        }
+        assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+    }
+
+    #[test]
+    #[should_panic(expected = "Network::n_groups")]
+    fn wrong_controller_size_is_rejected() {
+        let spec = spec3();
+        let net = Network::from_topology(&spec, 12, 4);
+        // sized for 3 compute layers, but the graph has 4
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let (mut params, mut vels) = state(&spec, 12, 4, 3);
+        let x = Tensor::zeros(&[2, 12]);
+        let y = ops::one_hot(&[0, 1], 4);
+        let _ = net.train_step(
+            &mut params,
+            &mut vels,
+            &x,
+            &y,
+            0.1,
+            0.5,
+            0.0,
+            &ctrl,
+            StepOptions::default(),
+        );
+    }
+
+    #[test]
+    fn eval_matches_zero_lr_forward_on_deep_net() {
+        let spec = spec3();
+        let net = Network::from_topology(&spec, 12, 4);
+        let ctrl = ScaleController::fixed(
+            net.n_groups(),
+            FixedFormat::new(12, 3),
+            FixedFormat::new(12, 0),
+        );
+        let (params, _) = state(&spec, 12, 4, 8);
+        let n = 8;
+        let mut rng = Pcg32::seeded(4);
+        let x = Tensor::from_vec(&[n, 12], (0..n * 12).map(|_| rng.normal()).collect());
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4) as usize).collect();
+        let y = ops::one_hot(&labels, 4);
+        // quantize storage as the trainer does at init
+        let mut pq = params.clone();
+        for (i, p) in pq.iter_mut().enumerate() {
+            let g = group_index(i / 2, if i % 2 == 0 { KIND_W } else { KIND_B });
+            crate::arith::Quantizer::from_format(ctrl.format(g)).apply_slice(p.data_mut());
+        }
+        let logits = net.eval_logits(&pq, &x, &ctrl, RoundMode::HalfAway, false);
+        let logp = ops::log_softmax(&logits);
+        let mut want = 0.0f64;
+        for i in 0..n * 4 {
+            want -= (y.data()[i] * logp.data()[i]) as f64;
+        }
+        let want = (want / n as f64) as f32;
+        let (mut p2, mut v2) = (pq.clone(), state(&spec, 12, 4, 8).1);
+        let out = net.train_step(
+            &mut p2,
+            &mut v2,
+            &x,
+            &y,
+            0.0,
+            0.0,
+            0.0,
+            &ctrl,
+            StepOptions::default(),
+        );
+        assert!((out.loss - want).abs() < 1e-5, "{want} vs {}", out.loss);
+    }
+}

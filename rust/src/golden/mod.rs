@@ -1,9 +1,9 @@
-//! Golden model: a pure-rust, from-scratch mirror of the compiled
-//! `pi_mlp` train step — and the compute core of the native backend.
+//! Golden model: the pure-Rust training engine, now organized as a
+//! composable **layer graph**.
 //!
 //! Same signals, same quantization hooks, same update rule as
-//! `python/compile/model.py`, implemented over the host [`Tensor`] ops and
-//! [`crate::arith::Quantizer`]. It serves three roles:
+//! `python/compile/model.py`, implemented over the host [`Tensor`] ops
+//! and [`crate::arith::Quantizer`]. It serves three roles:
 //!
 //! 1. *Cross-validate the AOT bridge*: an integration test (behind the
 //!    `pjrt` feature) trains both paths from identical state and asserts
@@ -12,19 +12,30 @@
 //! 2. *Reference for rounding ablations*: the ablation bench drives
 //!    alternative [`RoundMode`]s (the compiled artifact pins half-away).
 //! 3. *The native training engine*: [`crate::runtime::NativeBackend`]
-//!    drives [`train_step_opt`] / [`eval_logits`] through the same
-//!    `Trainer` loop as the compiled path — see DESIGN.md §Backends.
+//!    drives a [`Network`] built from the experiment's
+//!    [`TopologySpec`](crate::config::TopologySpec) — see DESIGN.md
+//!    §Backends and §Layer graph.
+//!
+//! The module is split in three:
+//!
+//! * **this file** — the shared quantization context ([`GoldenQ`]: per
+//!   group quantizers, stat accumulation, site numbering), the step
+//!   option types, and thin compatibility drivers
+//!   ([`train_step_opt`]/[`eval_logits`]) that run the 2-hidden-layer
+//!   [`MlpShape`] topology through the graph;
+//! * [`graph`] — the [`Layer`] trait ([`MaxoutDense`], [`SoftmaxHead`],
+//!   [`DropoutLayer`]) and the [`Network`] executor: topology as data,
+//!   scaling groups derived from the graph;
+//! * [`reference`] — the pre-refactor monolithic pi_mlp step, frozen as
+//!   the bit-identity reference (`tests/graph_parity.rs` proves the
+//!   graph reproduces it exactly; `bench_perf` tracks graph overhead
+//!   against it).
 //!
 //! The hot contractions run on the blocked/parallel slice kernels in
-//! [`crate::tensor::ops`], contracting per-filter sub-blocks of the
-//! `[k, I, U]` weight tensors without materializing copies. The Z, DW
-//! and DX group quantizations ride the *fused* quantize-aware kernels
-//! (`matmul_sl_q` & co.): rounding, clipping and overflow counting run
-//! in the GEMM block epilogue instead of as a second whole-tensor sweep.
-//! [`StepOptions::fused`] (default on; `LPDNN_FUSED=0` flips it) selects
-//! between the fused kernels and the two-pass reference path — the two
-//! are bit-identical in outputs and overflow counters at any thread
-//! count (`tests/fused_parity.rs`, DESIGN.md §Fused quantized GEMM).
+//! [`crate::tensor::ops`], with the Z, DW and DX group quantizations
+//! fused into the GEMM epilogues ([`StepOptions::fused`], env
+//! `LPDNN_FUSED=0` for the bit-identical two-pass reference path — see
+//! `tests/fused_parity.rs`, DESIGN.md §Fused quantized GEMM).
 //!
 //! The compiled artifact's in-graph hash-PRNG dropout is a device detail
 //! and is not mirrored bit-for-bit; the native path implements standard
@@ -32,14 +43,30 @@
 //! ([`StepOptions::dropout`]). Cross-checks against the device run with
 //! dropout disabled.
 
+pub mod graph;
+pub mod reference;
+
+pub use graph::{
+    Cache, DropCtx, DropoutLayer, DropoutRole, Layer, MaxoutDense, Network, SoftmaxHead,
+    UpdateHp,
+};
+
 use std::sync::OnceLock;
 
 use crate::arith::{ElemRng, QuantEpilogue, QuantStats, Quantizer, RoundMode};
 use crate::coordinator::ScaleController;
-use crate::runtime::manifest::{
-    group_index, KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z,
-};
-use crate::tensor::{ops, Pcg32, Tensor};
+use crate::runtime::manifest::group_index;
+use crate::tensor::{Pcg32, Tensor};
+
+/// Base seed of the counter-based stochastic-rounding streams every
+/// train step under [`RoundMode::Stochastic`] forks its per-site
+/// [`ElemRng`]s from. A fixed constant (not derived from the experiment
+/// seed) so that rounding noise is a property of the *site*, never of
+/// the run — listed alongside [`RNG_FORK_INIT`] and co. in the trainer's
+/// RNG-stream table (`coordinator::trainer`).
+///
+/// [`RNG_FORK_INIT`]: crate::coordinator::RNG_FORK_INIT
+pub const STOCHASTIC_SITE_SEED: u64 = 0x57CC_4A57;
 
 /// Default for [`StepOptions::fused`]: the fused quantized-GEMM kernels
 /// are on unless `LPDNN_FUSED=0` (which forces the two-pass reference
@@ -50,7 +77,9 @@ pub fn fused_default() -> bool {
     *FUSED.get_or_init(|| std::env::var("LPDNN_FUSED").map(|v| v != "0").unwrap_or(true))
 }
 
-/// Maxout MLP shape description (matches the manifest's pi_mlp).
+/// 2-hidden-layer maxout MLP shape description — the legacy fixed-depth
+/// entry points ([`train_step_opt`], [`reference`]) take it; the graph
+/// subsystem generalizes it to [`crate::config::TopologySpec`].
 #[derive(Clone, Copy, Debug)]
 pub struct MlpShape {
     pub d_in: usize,
@@ -60,8 +89,12 @@ pub struct MlpShape {
 }
 
 impl MlpShape {
-    pub fn pi_mlp(units: usize, k: usize) -> Self {
-        MlpShape { d_in: 784, units, k, n_classes: 10 }
+    /// Shape for a maxout MLP over the named dataset: input/output
+    /// dimensions come from the data source
+    /// ([`crate::data::dataset_dims`]), not from hardcoded constants.
+    pub fn for_dataset(dataset: &str, units: usize, k: usize) -> crate::Result<MlpShape> {
+        let (d_in, n_classes) = crate::data::dataset_dims(dataset)?;
+        Ok(MlpShape { d_in, units, k, n_classes })
     }
 }
 
@@ -87,7 +120,7 @@ pub struct Dropout {
     pub rng: Pcg32,
 }
 
-/// Per-step options for [`train_step_opt`].
+/// Per-step options for [`train_step_opt`] / [`Network::train_step`].
 #[derive(Clone, Debug)]
 pub struct StepOptions {
     /// Rounding mode for every quantization hook (canonical: half-away).
@@ -117,12 +150,15 @@ impl Default for StepOptions {
 /// One quantization context: per-group quantizers + stat accumulation.
 ///
 /// Every quantization *site* (one logical tensor hooked as one group)
-/// draws a [`QuantEpilogue`] via [`Self::epilogue`]; GEMM-adjacent sites
-/// hand it to the fused kernels, everything else runs it as a tensor
-/// sweep ([`Self::apply`]). Sites are numbered in call order so
-/// stochastic-rounding streams never overlap between sites, while within
-/// a site samples are keyed on the element's flat index — which is what
-/// keeps the fused (tiled, threaded) and two-pass paths bit-identical.
+/// draws a [`QuantEpilogue`] via `epilogue`; GEMM-adjacent sites hand it
+/// to the fused kernels, everything else runs it as a tensor sweep
+/// (`apply`). Sites are numbered in call order so stochastic-rounding
+/// streams never overlap between sites, while within a site samples are
+/// keyed on the element's flat index — which is what keeps the fused
+/// (tiled, threaded) and two-pass paths bit-identical. The graph layers
+/// ([`graph`]) and the frozen monolith ([`reference`]) share this one
+/// context type, so "same sites in the same order" is the whole parity
+/// argument.
 pub struct GoldenQ<'c> {
     ctrl: &'c ScaleController,
     pub mode: RoundMode,
@@ -135,7 +171,7 @@ pub struct GoldenQ<'c> {
     /// Base seed for the counter-based stochastic-rounding streams
     /// (`None` = deterministic midpoint sample, like `apply_slice`).
     pub stochastic_seed: Option<u64>,
-    /// Quantization-site counter (advanced by [`Self::epilogue`]).
+    /// Quantization-site counter (advanced by `epilogue`).
     site: u64,
 }
 
@@ -206,77 +242,6 @@ impl<'c> GoldenQ<'c> {
     }
 }
 
-/// Forward through one maxout dense layer: per-filter z = x@w_j + b_j,
-/// quantized (Z group), then h = max_j, quantized (H group).
-/// Returns (h, argmax filter per [B,U]).
-fn maxout_fwd(
-    q: &mut GoldenQ,
-    layer: usize,
-    x: &Tensor,
-    w: &Tensor,
-    b: &Tensor,
-) -> (Tensor, Vec<u8>) {
-    let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-    let batch = x.shape()[0];
-    assert_eq!(x.shape()[1], d_in);
-
-    // z for every filter, quantized as ONE logical site. Fused: each
-    // filter's [B, U] tile gets bias + quantization in its GEMM epilogue
-    // (base = the filter's offset in the [k, B, U] tensor). Two-pass:
-    // materialize all k tiles, then sweep the whole tensor. Identical
-    // per-element index stream → identical bits and counters.
-    let mut zq = Tensor::zeros(&[k, batch, units]);
-    let epi = q.epilogue(layer, KIND_Z);
-    let mut zst = QuantStats::default();
-    for j in 0..k {
-        let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
-        let brow = &b.data()[j * units..(j + 1) * units];
-        let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
-        if q.fused {
-            zst.merge(ops::matmul_sl_q_into(
-                x.data(),
-                wj,
-                Some(brow),
-                dst,
-                batch,
-                d_in,
-                units,
-                epi.with_base((j * batch * units) as u64),
-            ));
-        } else {
-            let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
-            for r in 0..batch {
-                for u in 0..units {
-                    dst[r * units + u] = zj[r * units + u] + brow[u];
-                }
-            }
-        }
-    }
-    if !q.fused {
-        zst = epi.run(zq.data_mut(), 0);
-    }
-    q.record(layer, KIND_Z, zst);
-
-    let mut h = Tensor::zeros(&[batch, units]);
-    let mut amax = vec![0u8; batch * units];
-    for r in 0..batch {
-        for u in 0..units {
-            let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
-            for j in 0..k {
-                let v = zq.at3(j, r, u);
-                if v > best {
-                    best = v;
-                    bj = j as u8;
-                }
-            }
-            h.data_mut()[r * units + u] = best;
-            amax[r * units + u] = bj;
-        }
-    }
-    q.apply(&mut h, layer, KIND_H, true);
-    (h, amax)
-}
-
 /// Draw an inverted-dropout mask (scale 1/(1-rate) on keep, 0 on drop).
 fn dropout_mask(rng: &mut Pcg32, n: usize, rate: f32) -> Option<Vec<f32>> {
     if rate <= 0.0 {
@@ -323,8 +288,9 @@ pub fn train_step(
     )
 }
 
-/// One full train step with explicit [`StepOptions`] (the native
-/// backend's entry point). Mutates params/vels in place.
+/// One full train step with explicit [`StepOptions`]: a thin driver that
+/// runs the 2-hidden-layer `shape` topology through the graph executor
+/// ([`Network::train_step`]). Mutates params/vels in place.
 #[allow(clippy::too_many_arguments)]
 pub fn train_step_opt(
     shape: MlpShape,
@@ -336,143 +302,15 @@ pub fn train_step_opt(
     mom: f32,
     max_norm: f32,
     ctrl: &ScaleController,
-    mut opts: StepOptions,
+    opts: StepOptions,
 ) -> GoldenOut {
-    let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
-    q.fused = opts.fused;
-    if opts.mode == RoundMode::Stochastic {
-        // true stochastic rounding draws one uniform sample per element
-        // from counter-based per-site streams (index-keyed, so the fused
-        // and two-pass paths sample identically)
-        q.stochastic_seed = Some(0x57CC_4A57);
-    }
-    let batch = x.shape()[0];
-    let (k, units, classes) = (shape.k, shape.units, shape.n_classes);
-
-    // ---- input dropout (native path) ----
-    let x_masked;
-    let x: &Tensor = match opts.dropout.as_mut() {
-        Some(d) => match dropout_mask(&mut d.rng, x.len(), d.input_rate) {
-            Some(m) => {
-                let mut xm = x.clone();
-                apply_mask(&mut xm, &Some(m));
-                x_masked = xm;
-                &x_masked
-            }
-            None => x,
-        },
-        None => x,
-    };
-
-    // ---- forward ----
-    let (mut h0, amax0) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
-    let m0 = opts
-        .dropout
-        .as_mut()
-        .and_then(|d| dropout_mask(&mut d.rng, h0.len(), d.hidden_rate));
-    apply_mask(&mut h0, &m0);
-    let (mut h1, amax1) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
-    let m1 = opts
-        .dropout
-        .as_mut()
-        .and_then(|d| dropout_mask(&mut d.rng, h1.len(), d.hidden_rate));
-    apply_mask(&mut h1, &m1);
-    let epi = q.epilogue(2, KIND_Z);
-    let z2 = if q.fused {
-        let (v, st) = ops::matmul_sl_q(
-            h1.data(),
-            params[4].data(),
-            Some(params[5].data()),
-            batch,
-            units,
-            classes,
-            epi,
-        );
-        q.record(2, KIND_Z, st);
-        Tensor::from_vec(&[batch, classes], v)
-    } else {
-        let mut z2 = ops::matmul(&h1, &params[4]);
-        for r in 0..batch {
-            for c in 0..classes {
-                z2.data_mut()[r * classes + c] += params[5].data()[c];
-            }
-        }
-        let st = epi.run(z2.data_mut(), 0);
-        q.record(2, KIND_Z, st);
-        z2
-    };
-    let logp = ops::log_softmax(&z2);
-    let mut loss = 0.0f64;
-    for i in 0..batch * classes {
-        loss -= (y.data()[i] * logp.data()[i]) as f64;
-    }
-    let loss = (loss / batch as f64) as f32;
-
-    // ---- backward ----
-    // softmax head: dz = (p - y)/B, quantized
-    let mut dz2 = Tensor::zeros(&[batch, classes]);
-    for i in 0..batch * classes {
-        dz2.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
-    }
-    q.apply(&mut dz2, 2, KIND_DZ, true);
-    let epi = q.epilogue(2, KIND_DW);
-    let dw2 = if q.fused {
-        let (v, st) = ops::matmul_tn_sl_q(h1.data(), dz2.data(), batch, units, classes, epi);
-        q.record(2, KIND_DW, st);
-        Tensor::from_vec(&[units, classes], v)
-    } else {
-        let mut dw2 = ops::matmul_tn(&h1, &dz2);
-        let st = epi.run(dw2.data_mut(), 0);
-        q.record(2, KIND_DW, st);
-        dw2
-    };
-    let mut db2 = ops::sum_rows(&dz2);
-    q.apply(&mut db2, 2, KIND_DB, true);
-    let epi = q.epilogue(1, KIND_DH);
-    let mut dh1 = if q.fused {
-        let (v, st) =
-            ops::matmul_nt_sl_q(dz2.data(), params[4].data(), batch, classes, units, epi);
-        q.record(1, KIND_DH, st);
-        Tensor::from_vec(&[batch, units], v)
-    } else {
-        let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
-        let st = epi.run(dh1.data_mut(), 0);
-        q.record(1, KIND_DH, st);
-        dh1
-    };
-    apply_mask(&mut dh1, &m1);
-
-    let (dw1, db1, mut dh0) =
-        maxout_bwd(&mut q, 1, &h0, &params[2], &dh1, &amax1, k, units, true);
-    q.apply(&mut dh0, 0, KIND_DH, true);
-    apply_mask(&mut dh0, &m0);
-    let (dw0, db0, _) = maxout_bwd(&mut q, 0, x, &params[0], &dh0, &amax0, k, units, false);
-
-    // ---- SGD + momentum + max-norm + storage quantization ----
-    let grads = [dw0, db0, dw1, db1, dw2, db2];
-    for (i, g) in grads.iter().enumerate() {
-        let layer = i / 2;
-        let kind = if i % 2 == 0 { KIND_W } else { KIND_B };
-        // v' = Q_up(mom*v - lr*g), stats NOT recorded (matches L2)
-        for (vv, gv) in vels[i].data_mut().iter_mut().zip(g.data()) {
-            *vv = mom * *vv - lr * gv;
-        }
-        q.apply(&mut vels[i], layer, kind, false);
-        // p' = Q_up(maxnorm(p + v'))
-        for (pv, vv) in params[i].data_mut().iter_mut().zip(vels[i].data()) {
-            *pv += vv;
-        }
-        if kind == KIND_W {
-            ops::max_norm_inplace(&mut params[i], max_norm);
-        }
-        q.apply(&mut params[i], layer, kind, true);
-    }
-
-    GoldenOut { loss, overflow: q.stats_matrix() }
+    Network::from_mlp_shape(shape)
+        .train_step(params, vels, x, y, lr, mom, max_norm, ctrl, opts)
 }
 
 /// Forward-only logits `[B, C]` for evaluation (no dropout, no mutation),
-/// quantizing forward signals exactly as the train step does.
+/// quantizing forward signals exactly as the train step does — a thin
+/// driver over [`Network::eval_logits`].
 pub fn eval_logits(
     shape: MlpShape,
     params: &Params,
@@ -481,112 +319,15 @@ pub fn eval_logits(
     mode: RoundMode,
     half: bool,
 ) -> Tensor {
-    let batch = x.shape()[0];
-    let classes = shape.n_classes;
-    let mut q = GoldenQ::with_half(ctrl, mode, half);
-    let (h0, _) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
-    let (h1, _) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
-    let epi = q.epilogue(2, KIND_Z);
-    if q.fused {
-        let (v, _st) = ops::matmul_sl_q(
-            h1.data(),
-            params[4].data(),
-            Some(params[5].data()),
-            batch,
-            shape.units,
-            classes,
-            epi,
-        );
-        Tensor::from_vec(&[batch, classes], v)
-    } else {
-        let mut z2 = ops::matmul(&h1, &params[4]);
-        for r in 0..batch {
-            for c in 0..classes {
-                z2.data_mut()[r * classes + c] += params[5].data()[c];
-            }
-        }
-        let _ = epi.run(z2.data_mut(), 0);
-        z2
-    }
-}
-
-/// Backward through a maxout dense layer: route dh to the winning filter,
-/// quantize dz/dw/db; optionally produce dx (pre-quantization — the caller
-/// quantizes it as the lower layer's DH group, matching L2's ordering).
-#[allow(clippy::too_many_arguments)]
-fn maxout_bwd(
-    q: &mut GoldenQ,
-    layer: usize,
-    x: &Tensor,
-    w: &Tensor,
-    dh: &Tensor,
-    amax: &[u8],
-    k: usize,
-    _units: usize,
-    need_dx: bool,
-) -> (Tensor, Tensor, Tensor) {
-    let (batch, d_in) = (x.shape()[0], x.shape()[1]);
-    let units = dh.shape()[1];
-
-    let mut dz = Tensor::zeros(&[k, batch, units]);
-    for r in 0..batch {
-        for u in 0..units {
-            let j = amax[r * units + u] as usize;
-            dz.data_mut()[(j * batch + r) * units + u] = dh.at2(r, u);
-        }
-    }
-    q.apply(&mut dz, layer, KIND_DZ, true);
-
-    // dw for every filter, quantized as ONE logical site (like the z
-    // tiles in the forward pass). The dx contraction is NOT fused: its
-    // per-filter products are summed across filters before the caller
-    // quantizes the total as the lower layer's DH group.
-    let mut dw = Tensor::zeros(&[k, d_in, units]);
-    let mut db = Tensor::zeros(&[k, units]);
-    let mut dx = Tensor::zeros(&[batch, d_in]);
-    let epi = q.epilogue(layer, KIND_DW);
-    let mut dwst = QuantStats::default();
-    for j in 0..k {
-        // contiguous [batch, units] view of this filter's dz
-        let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
-        let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
-        if q.fused {
-            dwst.merge(ops::matmul_tn_sl_q_into(
-                x.data(),
-                dzj,
-                dwj_dst,
-                batch,
-                d_in,
-                units,
-                epi.with_base((j * d_in * units) as u64),
-            ));
-        } else {
-            let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
-            dwj_dst.copy_from_slice(&dwj);
-        }
-        let dbj = ops::sum_rows_sl(dzj, batch, units);
-        db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
-        if need_dx {
-            let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
-            let dxj = ops::matmul_nt_sl(dzj, wj, batch, units, d_in);
-            for (a, &b) in dx.data_mut().iter_mut().zip(&dxj) {
-                *a += b;
-            }
-        }
-    }
-    if !q.fused {
-        dwst = epi.run(dw.data_mut(), 0);
-    }
-    q.record(layer, KIND_DW, dwst);
-    q.apply(&mut db, layer, KIND_DB, true);
-    (dw, db, dx)
+    Network::from_mlp_shape(shape).eval_logits(params, x, ctrl, mode, half)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arith::{float16, FixedFormat};
-    use crate::tensor::Pcg32;
+    use crate::runtime::manifest::{KIND_B, KIND_DZ, KIND_H, KIND_W, KIND_Z};
+    use crate::tensor::{ops, Pcg32};
 
     use crate::testing::{mlp_batch as batch, mlp_state as init_state, tiny_mlp as tiny_shape};
 
@@ -594,7 +335,7 @@ mod tests {
     fn float32_loss_decreases_over_steps() {
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 1);
-        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         let (x, y) = batch(s, 16, 2);
         let mut first = None;
         let mut last = 0.0;
@@ -613,7 +354,7 @@ mod tests {
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 3);
         let up = FixedFormat::new(12, 0);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), up);
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), up);
         let (x, y) = batch(s, 8, 4);
         // initial params must be quantized by the caller (as the Trainer
         // does); here the first step's output is what we check.
@@ -632,7 +373,7 @@ mod tests {
     fn overflow_totals_match_signal_sizes() {
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 5);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
         let n = 16;
         let (x, y) = batch(s, n, 6);
         let out = train_step(
@@ -658,7 +399,7 @@ mod tests {
         for p in params.iter_mut() {
             p.map_inplace(|v| v * 30.0);
         }
-        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         let (x, y) = batch(s, 8, 8);
         let c = 1.0;
         let _ = train_step(
@@ -680,7 +421,7 @@ mod tests {
     fn stochastic_rounding_mode_runs() {
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 9);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
         let (x, y) = batch(s, 8, 10);
         let mut q_ctx_probe = GoldenQ::new(&ctrl, RoundMode::Stochastic);
         q_ctx_probe.stochastic_seed = Some(11);
@@ -703,7 +444,7 @@ mod tests {
     fn half_mode_keeps_signals_on_f16_grid_and_learns() {
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 21);
-        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         let (x, y) = batch(s, 16, 22);
         let mut first = None;
         let mut last = 0.0;
@@ -735,7 +476,7 @@ mod tests {
     #[test]
     fn dropout_masks_scale_and_replay_deterministically() {
         let s = tiny_shape();
-        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         let (x, y) = batch(s, 16, 30);
         let run = |seed: u64| {
             let (mut params, mut vels) = init_state(s, 31);
@@ -766,7 +507,7 @@ mod tests {
     #[test]
     fn zero_rate_dropout_is_identity() {
         let s = tiny_shape();
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
         let (x, y) = batch(s, 8, 40);
         let (mut p1, mut v1) = init_state(s, 41);
         let (mut p2, mut v2) = init_state(s, 41);
@@ -794,7 +535,7 @@ mod tests {
         // eval logits — forward paths agree.
         let s = tiny_shape();
         let (mut params, mut vels) = init_state(s, 50);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
         let (x, y) = batch(s, 8, 51);
         // params pre-quantized as the Trainer does at init
         for (i, p) in params.iter_mut().enumerate() {
@@ -814,5 +555,14 @@ mod tests {
         }
         let loss = (loss / x.shape()[0] as f64) as f32;
         assert!((loss - probe.loss).abs() < 1e-5, "{loss} vs {}", probe.loss);
+    }
+
+    #[test]
+    fn mlp_shape_dims_derive_from_the_dataset() {
+        let s = MlpShape::for_dataset("digits", 128, 4).unwrap();
+        assert_eq!((s.d_in, s.n_classes), (784, 10));
+        let s = MlpShape::for_dataset("cifar_like", 64, 2).unwrap();
+        assert_eq!((s.d_in, s.n_classes), (3072, 10));
+        assert!(MlpShape::for_dataset("imagenet", 128, 4).is_err());
     }
 }

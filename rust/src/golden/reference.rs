@@ -1,0 +1,360 @@
+//! The pre-refactor **monolithic** pi_mlp train step, kept verbatim as
+//! the bit-identity reference for the layer-graph executor.
+//!
+//! This module is the hand-inlined 2-hidden-layer maxout forward /
+//! backward / update that `golden::train_step_opt` used to *be* before
+//! the step became a thin driver over [`super::Network`]. It exists for
+//! two consumers:
+//!
+//! * `tests/graph_parity.rs` asserts that the graph-built `pi_mlp`
+//!   reproduces this step **bit-for-bit** — exact `u32` loss/parameter/
+//!   velocity bits and exact overflow counters — across all four
+//!   arithmetics, all four rounding modes, fused and two-pass kernels,
+//!   and with dropout on.
+//! * `bench_perf`'s `graph train step` rows measure the layer-graph
+//!   dispatch overhead against this monolith.
+//!
+//! Do not "improve" this code: its value is that it does not change.
+//! New functionality goes in [`super::graph`].
+
+use crate::arith::{QuantStats, RoundMode};
+use crate::coordinator::ScaleController;
+use crate::runtime::manifest::{
+    KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z,
+};
+use crate::tensor::{ops, Tensor};
+
+use super::{
+    apply_mask, dropout_mask, GoldenOut, GoldenQ, MlpShape, Params, StepOptions,
+    STOCHASTIC_SITE_SEED,
+};
+
+/// Forward through one maxout dense layer: per-filter z = x@w_j + b_j,
+/// quantized (Z group), then h = max_j, quantized (H group).
+/// Returns (h, argmax filter per [B,U]).
+fn maxout_fwd(
+    q: &mut GoldenQ,
+    layer: usize,
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+) -> (Tensor, Vec<u8>) {
+    let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+    let batch = x.shape()[0];
+    assert_eq!(x.shape()[1], d_in);
+
+    // z for every filter, quantized as ONE logical site. Fused: each
+    // filter's [B, U] tile gets bias + quantization in its GEMM epilogue
+    // (base = the filter's offset in the [k, B, U] tensor). Two-pass:
+    // materialize all k tiles, then sweep the whole tensor. Identical
+    // per-element index stream → identical bits and counters.
+    let mut zq = Tensor::zeros(&[k, batch, units]);
+    let epi = q.epilogue(layer, KIND_Z);
+    let mut zst = QuantStats::default();
+    for j in 0..k {
+        let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+        let brow = &b.data()[j * units..(j + 1) * units];
+        let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+        if q.fused {
+            zst.merge(ops::matmul_sl_q_into(
+                x.data(),
+                wj,
+                Some(brow),
+                dst,
+                batch,
+                d_in,
+                units,
+                epi.with_base((j * batch * units) as u64),
+            ));
+        } else {
+            let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
+            for r in 0..batch {
+                for u in 0..units {
+                    dst[r * units + u] = zj[r * units + u] + brow[u];
+                }
+            }
+        }
+    }
+    if !q.fused {
+        zst = epi.run(zq.data_mut(), 0);
+    }
+    q.record(layer, KIND_Z, zst);
+
+    let mut h = Tensor::zeros(&[batch, units]);
+    let mut amax = vec![0u8; batch * units];
+    for r in 0..batch {
+        for u in 0..units {
+            let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
+            for j in 0..k {
+                let v = zq.at3(j, r, u);
+                if v > best {
+                    best = v;
+                    bj = j as u8;
+                }
+            }
+            h.data_mut()[r * units + u] = best;
+            amax[r * units + u] = bj;
+        }
+    }
+    q.apply(&mut h, layer, KIND_H, true);
+    (h, amax)
+}
+
+/// One full monolithic train step with explicit [`StepOptions`] (the
+/// pre-refactor `golden::train_step_opt`). Mutates params/vels in place.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_opt(
+    shape: MlpShape,
+    params: &mut Params,
+    vels: &mut Params,
+    x: &Tensor,
+    y: &Tensor,
+    lr: f32,
+    mom: f32,
+    max_norm: f32,
+    ctrl: &ScaleController,
+    mut opts: StepOptions,
+) -> GoldenOut {
+    let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
+    q.fused = opts.fused;
+    if opts.mode == RoundMode::Stochastic {
+        // true stochastic rounding draws one uniform sample per element
+        // from counter-based per-site streams (index-keyed, so the fused
+        // and two-pass paths sample identically)
+        q.stochastic_seed = Some(STOCHASTIC_SITE_SEED);
+    }
+    let batch = x.shape()[0];
+    let (k, units, classes) = (shape.k, shape.units, shape.n_classes);
+
+    // ---- input dropout (native path) ----
+    let x_masked;
+    let x: &Tensor = match opts.dropout.as_mut() {
+        Some(d) => match dropout_mask(&mut d.rng, x.len(), d.input_rate) {
+            Some(m) => {
+                let mut xm = x.clone();
+                apply_mask(&mut xm, &Some(m));
+                x_masked = xm;
+                &x_masked
+            }
+            None => x,
+        },
+        None => x,
+    };
+
+    // ---- forward ----
+    let (mut h0, amax0) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
+    let m0 = opts
+        .dropout
+        .as_mut()
+        .and_then(|d| dropout_mask(&mut d.rng, h0.len(), d.hidden_rate));
+    apply_mask(&mut h0, &m0);
+    let (mut h1, amax1) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let m1 = opts
+        .dropout
+        .as_mut()
+        .and_then(|d| dropout_mask(&mut d.rng, h1.len(), d.hidden_rate));
+    apply_mask(&mut h1, &m1);
+    let epi = q.epilogue(2, KIND_Z);
+    let z2 = if q.fused {
+        let (v, st) = ops::matmul_sl_q(
+            h1.data(),
+            params[4].data(),
+            Some(params[5].data()),
+            batch,
+            units,
+            classes,
+            epi,
+        );
+        q.record(2, KIND_Z, st);
+        Tensor::from_vec(&[batch, classes], v)
+    } else {
+        let mut z2 = ops::matmul(&h1, &params[4]);
+        for r in 0..batch {
+            for c in 0..classes {
+                z2.data_mut()[r * classes + c] += params[5].data()[c];
+            }
+        }
+        let st = epi.run(z2.data_mut(), 0);
+        q.record(2, KIND_Z, st);
+        z2
+    };
+    let logp = ops::log_softmax(&z2);
+    let mut loss = 0.0f64;
+    for i in 0..batch * classes {
+        loss -= (y.data()[i] * logp.data()[i]) as f64;
+    }
+    let loss = (loss / batch as f64) as f32;
+
+    // ---- backward ----
+    // softmax head: dz = (p - y)/B, quantized
+    let mut dz2 = Tensor::zeros(&[batch, classes]);
+    for i in 0..batch * classes {
+        dz2.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
+    }
+    q.apply(&mut dz2, 2, KIND_DZ, true);
+    let epi = q.epilogue(2, KIND_DW);
+    let dw2 = if q.fused {
+        let (v, st) = ops::matmul_tn_sl_q(h1.data(), dz2.data(), batch, units, classes, epi);
+        q.record(2, KIND_DW, st);
+        Tensor::from_vec(&[units, classes], v)
+    } else {
+        let mut dw2 = ops::matmul_tn(&h1, &dz2);
+        let st = epi.run(dw2.data_mut(), 0);
+        q.record(2, KIND_DW, st);
+        dw2
+    };
+    let mut db2 = ops::sum_rows(&dz2);
+    q.apply(&mut db2, 2, KIND_DB, true);
+    let epi = q.epilogue(1, KIND_DH);
+    let mut dh1 = if q.fused {
+        let (v, st) =
+            ops::matmul_nt_sl_q(dz2.data(), params[4].data(), batch, classes, units, epi);
+        q.record(1, KIND_DH, st);
+        Tensor::from_vec(&[batch, units], v)
+    } else {
+        let mut dh1 = ops::matmul_nt(&dz2, &params[4]);
+        let st = epi.run(dh1.data_mut(), 0);
+        q.record(1, KIND_DH, st);
+        dh1
+    };
+    apply_mask(&mut dh1, &m1);
+
+    let (dw1, db1, mut dh0) =
+        maxout_bwd(&mut q, 1, &h0, &params[2], &dh1, &amax1, k, units, true);
+    q.apply(&mut dh0, 0, KIND_DH, true);
+    apply_mask(&mut dh0, &m0);
+    let (dw0, db0, _) = maxout_bwd(&mut q, 0, x, &params[0], &dh0, &amax0, k, units, false);
+
+    // ---- SGD + momentum + max-norm + storage quantization ----
+    let grads = [dw0, db0, dw1, db1, dw2, db2];
+    for (i, g) in grads.iter().enumerate() {
+        let layer = i / 2;
+        let kind = if i % 2 == 0 { KIND_W } else { KIND_B };
+        // v' = Q_up(mom*v - lr*g), stats NOT recorded (matches L2)
+        for (vv, gv) in vels[i].data_mut().iter_mut().zip(g.data()) {
+            *vv = mom * *vv - lr * gv;
+        }
+        q.apply(&mut vels[i], layer, kind, false);
+        // p' = Q_up(maxnorm(p + v'))
+        for (pv, vv) in params[i].data_mut().iter_mut().zip(vels[i].data()) {
+            *pv += vv;
+        }
+        if kind == KIND_W {
+            ops::max_norm_inplace(&mut params[i], max_norm);
+        }
+        q.apply(&mut params[i], layer, kind, true);
+    }
+
+    GoldenOut { loss, overflow: q.stats_matrix() }
+}
+
+/// Forward-only logits `[B, C]` for evaluation (no dropout, no mutation),
+/// quantizing forward signals exactly as the monolithic train step does.
+pub fn eval_logits(
+    shape: MlpShape,
+    params: &Params,
+    x: &Tensor,
+    ctrl: &ScaleController,
+    mode: RoundMode,
+    half: bool,
+) -> Tensor {
+    let batch = x.shape()[0];
+    let classes = shape.n_classes;
+    let mut q = GoldenQ::with_half(ctrl, mode, half);
+    let (h0, _) = maxout_fwd(&mut q, 0, x, &params[0], &params[1]);
+    let (h1, _) = maxout_fwd(&mut q, 1, &h0, &params[2], &params[3]);
+    let epi = q.epilogue(2, KIND_Z);
+    if q.fused {
+        let (v, _st) = ops::matmul_sl_q(
+            h1.data(),
+            params[4].data(),
+            Some(params[5].data()),
+            batch,
+            shape.units,
+            classes,
+            epi,
+        );
+        Tensor::from_vec(&[batch, classes], v)
+    } else {
+        let mut z2 = ops::matmul(&h1, &params[4]);
+        for r in 0..batch {
+            for c in 0..classes {
+                z2.data_mut()[r * classes + c] += params[5].data()[c];
+            }
+        }
+        let _ = epi.run(z2.data_mut(), 0);
+        z2
+    }
+}
+
+/// Backward through a maxout dense layer: route dh to the winning filter,
+/// quantize dz/dw/db; optionally produce dx (pre-quantization — the caller
+/// quantizes it as the lower layer's DH group, matching L2's ordering).
+#[allow(clippy::too_many_arguments)]
+fn maxout_bwd(
+    q: &mut GoldenQ,
+    layer: usize,
+    x: &Tensor,
+    w: &Tensor,
+    dh: &Tensor,
+    amax: &[u8],
+    k: usize,
+    _units: usize,
+    need_dx: bool,
+) -> (Tensor, Tensor, Tensor) {
+    let (batch, d_in) = (x.shape()[0], x.shape()[1]);
+    let units = dh.shape()[1];
+
+    let mut dz = Tensor::zeros(&[k, batch, units]);
+    for r in 0..batch {
+        for u in 0..units {
+            let j = amax[r * units + u] as usize;
+            dz.data_mut()[(j * batch + r) * units + u] = dh.at2(r, u);
+        }
+    }
+    q.apply(&mut dz, layer, KIND_DZ, true);
+
+    // dw for every filter, quantized as ONE logical site (like the z
+    // tiles in the forward pass). The dx contraction is NOT fused: its
+    // per-filter products are summed across filters before the caller
+    // quantizes the total as the lower layer's DH group.
+    let mut dw = Tensor::zeros(&[k, d_in, units]);
+    let mut db = Tensor::zeros(&[k, units]);
+    let mut dx = Tensor::zeros(&[batch, d_in]);
+    let epi = q.epilogue(layer, KIND_DW);
+    let mut dwst = QuantStats::default();
+    for j in 0..k {
+        // contiguous [batch, units] view of this filter's dz
+        let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
+        let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
+        if q.fused {
+            dwst.merge(ops::matmul_tn_sl_q_into(
+                x.data(),
+                dzj,
+                dwj_dst,
+                batch,
+                d_in,
+                units,
+                epi.with_base((j * d_in * units) as u64),
+            ));
+        } else {
+            let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
+            dwj_dst.copy_from_slice(&dwj);
+        }
+        let dbj = ops::sum_rows_sl(dzj, batch, units);
+        db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
+        if need_dx {
+            let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+            let dxj = ops::matmul_nt_sl(dzj, wj, batch, units, d_in);
+            for (a, &b) in dx.data_mut().iter_mut().zip(&dxj) {
+                *a += b;
+            }
+        }
+    }
+    if !q.fused {
+        dwst = epi.run(dw.data_mut(), 0);
+    }
+    q.record(layer, KIND_DW, dwst);
+    q.apply(&mut db, layer, KIND_DB, true);
+    (dw, db, dx)
+}

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use lpdnn::arith::FixedFormat;
 use lpdnn::cli::{self, Args};
-use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig};
+use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig, TopologySpec};
 use lpdnn::coordinator::{
     LossCsvObserver, Session, StderrProgress, SweepPoint, SweepReport,
 };
@@ -40,8 +40,21 @@ fn run(argv: Vec<String>) -> lpdnn::Result<()> {
     }
 }
 
+/// Apply the `--topology` flag: an explicit maxout-MLP topology
+/// (builtin name, `WIDTHxDEPTH`, or comma widths, optionally `@kN`)
+/// that overrides the model; it is realized against the dataset dims.
+fn apply_topology_flag(args: &Args, cfg: &mut ExperimentConfig) -> lpdnn::Result<()> {
+    if let Some(t) = args.get_opt("topology") {
+        let spec = TopologySpec::parse_cli(&t)?;
+        cfg.model = spec.name.clone();
+        cfg.topology = Some(spec);
+    }
+    Ok(())
+}
+
 /// Build an ExperimentConfig from either --config or individual flags.
-/// `--backend` always wins over the config file (quick A/B runs).
+/// `--backend` and `--topology` always win over the config file (quick
+/// A/B runs).
 fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
     if let Some(path) = args.get_opt("config") {
         let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
@@ -49,11 +62,14 @@ fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
         if let Some(b) = args.get_opt("backend") {
             cfg.backend = BackendKind::parse(&b)?;
         }
+        apply_topology_flag(args, &mut cfg)?;
+        cfg.validate()?;
         return Ok(cfg);
     }
     let mut cfg = ExperimentConfig::default();
     cfg.name = args.get("name", "cli");
     cfg.model = args.get("model", "pi_mlp");
+    apply_topology_flag(args, &mut cfg)?;
     cfg.backend = BackendKind::parse(&args.get("backend", "native"))?;
     cfg.data.dataset = args.get("dataset", "digits");
     cfg.data.n_train = args.get_parse("n-train", cfg.data.n_train)?;

@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 use crate::error::Context;
 
 use crate::config::json;
+use crate::config::TopologySpec;
 use crate::tensor::init::InitSpec;
 
 /// Signal kinds — must match python `compile/formats.py` exactly.
@@ -55,6 +56,10 @@ impl ParamSpec {
         self.shape.iter().product()
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// The scaling-factor group this parameter is stored under.
     pub fn group(&self) -> usize {
         group_index(self.layer, if self.kind == "w" { KIND_W } else { KIND_B })
@@ -76,19 +81,17 @@ pub struct ModelInfo {
 }
 
 impl ModelInfo {
-    /// Built-in maxout-MLP topologies for the native backend — the same
-    /// models `python/compile/model.py` declares, so manifest order,
-    /// group indexing and init specs line up exactly with the compiled
-    /// artifacts. Returns `None` for models the native path cannot run
-    /// (the conv nets exist only as compiled graphs).
-    pub fn builtin(name: &str) -> Option<ModelInfo> {
-        let (units, k) = match name {
-            "pi_mlp" => (128usize, 4usize),
-            // paper 9.2/9.3 width ablation: double the hidden units
-            "pi_mlp_wide" => (256, 4),
-            _ => return None,
-        };
-        let (d_in, n_classes, n_layers) = (784usize, 10usize, 3usize);
+    /// Realize a [`TopologySpec`] against a data source's dimensions:
+    /// parameter specs in manifest order (`w0 b0 w1 b1 ... wH bH`),
+    /// layer-major group tables, Glorot init for weights — the same
+    /// conventions `python/compile/model.py` uses, generalized to any
+    /// depth/width. The graph executor
+    /// ([`crate::golden::Network`]) builds its layers from the same spec,
+    /// so state order and group indexing agree by construction.
+    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> ModelInfo {
+        // same hard invariant as Network::from_topology
+        assert!(!spec.hidden.is_empty(), "topology needs >= 1 hidden layer");
+        let n_layers = spec.n_layers();
         let w = |l: usize, shape: Vec<usize>, fan_in: usize, fan_out: usize| ParamSpec {
             name: format!("l{l}.w"),
             shape,
@@ -103,31 +106,47 @@ impl ModelInfo {
             kind: "b".into(),
             init: InitSpec::Zeros,
         };
-        let params = vec![
-            w(0, vec![k, d_in, units], d_in, units),
-            b(0, vec![k, units]),
-            w(1, vec![k, units, units], units, units),
-            b(1, vec![k, units]),
-            w(2, vec![units, n_classes], units, n_classes),
-            b(2, vec![n_classes]),
-        ];
+        let mut params = Vec::with_capacity(2 * n_layers);
+        let mut prev = d_in;
+        for (l, &units) in spec.hidden.iter().enumerate() {
+            params.push(w(l, vec![spec.k, prev, units], prev, units));
+            params.push(b(l, vec![spec.k, units]));
+            prev = units;
+        }
+        let head = spec.hidden.len();
+        params.push(w(head, vec![prev, n_classes], prev, n_classes));
+        params.push(b(head, vec![n_classes]));
+
         let mut group_names = Vec::with_capacity(n_layers * N_KINDS);
         for layer in 0..n_layers {
             for kind in KIND_NAMES {
                 group_names.push(format!("l{layer}.{kind}"));
             }
         }
-        Some(ModelInfo {
-            name: name.to_string(),
+        ModelInfo {
+            name: spec.name.clone(),
             input_shape: vec![d_in],
             n_layers,
             n_groups: n_layers * N_KINDS,
             group_names,
-            train_batch: 64,
-            eval_batch: 256,
+            train_batch: spec.train_batch,
+            eval_batch: spec.eval_batch,
             n_classes,
             params,
-        })
+        }
+    }
+
+    /// Built-in maxout-MLP topologies for the native backend — the same
+    /// models `python/compile/model.py` declares, so manifest order,
+    /// group indexing and init specs line up exactly with the compiled
+    /// artifacts (which pin the MNIST-class 784-in/10-out dimensions).
+    /// Returns `None` for models the native path cannot run (the conv
+    /// nets exist only as compiled graphs). Dataset-aware callers should
+    /// prefer [`ModelInfo::from_topology`] with
+    /// [`crate::data::dataset_dims`].
+    pub fn builtin(name: &str) -> Option<ModelInfo> {
+        let spec = TopologySpec::builtin(name)?;
+        Some(ModelInfo::from_topology(&spec, 784, 10))
     }
 }
 
@@ -279,6 +298,35 @@ mod tests {
         assert_eq!(art.inputs.len(), 12 + 9);
         assert_eq!(art.outputs.last().unwrap(), "overflow");
         assert!(art.file.exists());
+    }
+
+    #[test]
+    fn topology_realization_generalizes_the_builtin() {
+        use crate::config::TopologySpec;
+        // the builtin must be exactly pi_mlp realized at the MNIST dims
+        let from_spec =
+            ModelInfo::from_topology(&TopologySpec::builtin("pi_mlp").unwrap(), 784, 10);
+        let builtin = ModelInfo::builtin("pi_mlp").unwrap();
+        assert_eq!(from_spec.params.len(), builtin.params.len());
+        for (a, b) in from_spec.params.iter().zip(&builtin.params) {
+            assert_eq!((a.name.clone(), a.shape.clone()), (b.name.clone(), b.shape.clone()));
+        }
+        assert_eq!(from_spec.group_names, builtin.group_names);
+
+        // a non-square depth-3 topology against a non-MNIST data source
+        let spec = TopologySpec::mlp(vec![64, 32, 16], 2);
+        let m = ModelInfo::from_topology(&spec, 3072, 10);
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.n_groups, 32);
+        assert_eq!(m.params.len(), 8);
+        assert_eq!(m.params[0].shape, vec![2, 3072, 64]); // l0.w
+        assert_eq!(m.params[2].shape, vec![2, 64, 32]); // l1.w
+        assert_eq!(m.params[4].shape, vec![2, 32, 16]); // l2.w
+        assert_eq!(m.params[6].shape, vec![16, 10]); // head w
+        assert_eq!(m.params[7].shape, vec![10]); // head b
+        assert_eq!(m.params[6].group(), group_index(3, KIND_W));
+        assert_eq!(m.group_names[31], "l3.dh");
+        assert_eq!(m.input_shape, vec![3072]);
     }
 
     #[test]

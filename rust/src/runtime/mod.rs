@@ -73,8 +73,12 @@ pub trait Backend {
     /// Short identifier ("native" / "pjrt").
     fn name(&self) -> &'static str;
 
-    /// Can this backend run `model` at all? ([`NativeBackend`] only runs
-    /// the maxout MLPs; the conv nets need compiled artifacts.)
+    /// Can this backend run the *named* builtin/manifest model?
+    /// ([`NativeBackend`] only runs the maxout MLPs; the conv nets need
+    /// compiled artifacts.) Name-based gating only: a config carrying an
+    /// explicit [`TopologySpec`](crate::config::TopologySpec) is always
+    /// runnable on the native backend regardless of its model label —
+    /// `begin_run` is the authoritative check.
     fn supports_model(&self, model: &str) -> bool;
 
     /// Resolve model metadata and prepare executables for this config.

@@ -5,41 +5,51 @@
 //! forward/backward, per-signal quantization hooks, momentum updates and
 //! overflow statistics as the compiled artifacts, driven by the same
 //! `Trainer` loop and scale controller — but with zero external
-//! dependencies, no AOT artifacts and no Python anywhere. Model state
-//! lives as host [`Tensor`]s; the hot contractions run on the
-//! blocked/parallel kernels in [`crate::tensor::ops`], with the Z/DW/DX
-//! re-quantizations fused into the GEMM epilogues by default
+//! dependencies, no AOT artifacts and no Python anywhere.
+//!
+//! Topology is **data**: `begin_run` resolves the experiment's
+//! [`TopologySpec`] (the explicit `[topology]` table / `--topology`
+//! value, or the builtin spec the model name selects), derives the
+//! input/output dimensions from the configured dataset
+//! ([`crate::data::dataset_dims`]), and assembles a
+//! [`Network`] layer graph plus the matching
+//! [`ModelInfo`] parameter specs. Depth/width sweeps and non-MNIST MLP
+//! workloads are therefore config changes — see DESIGN.md §Layer graph.
+//!
+//! Model state lives as host [`Tensor`]s; the hot contractions run on
+//! the blocked/parallel kernels in [`crate::tensor::ops`], with the
+//! Z/DW/DX re-quantizations fused into the GEMM epilogues by default
 //! (`LPDNN_FUSED=0` selects the bit-identical two-pass path — see
 //! DESIGN.md §Fused quantized GEMM).
 //!
 //! Differences from the compiled path (documented, not hidden):
 //!
 //! * Dropout uses standard host-side inverted dropout seeded from the
-//!   experiment seed and step index ([`golden::Dropout`]); the compiled
+//!   experiment seed and step index ([`Dropout`]); the compiled
 //!   graphs use an in-graph hash PRNG. Both are deterministic per run;
 //!   masks differ bit-wise between backends.
-//! * Only the maxout MLPs (`pi_mlp`, `pi_mlp_wide`) are implemented —
-//!   the conv nets exist only as compiled graphs. `begin_run` rejects
-//!   them with a clear error; sweeps skip them via
-//!   [`Backend::supports_model`].
+//! * Only maxout MLPs run natively — the conv nets exist only as
+//!   compiled graphs. `begin_run` rejects them with a clear error;
+//!   sweeps skip them via [`Backend::supports_model`].
 //!
 //! With dropout off, one native step is verified to agree with
-//! [`golden::train_step`] exactly (`tests/native_backend.rs`), which is
+//! [`crate::golden::train_step`] exactly (`tests/native_backend.rs`), which is
 //! itself cross-validated against the compiled artifact under `pjrt`.
 
 use super::manifest::ModelInfo;
 use super::{Backend, StepOut, StepParams};
 use crate::arith::{Quantizer, RoundMode};
-use crate::config::{Arithmetic, ExperimentConfig};
+use crate::config::{Arithmetic, ExperimentConfig, TopologySpec};
 use crate::coordinator::ScaleController;
 use crate::error::Context;
-use crate::golden::{self, Dropout, MlpShape, Params, StepOptions};
+use crate::golden::{Dropout, Network, Params, StepOptions};
 use crate::tensor::{ops, Pcg32, Tensor};
 
 /// Per-run state for the native backend.
 struct NativeRun {
     model: ModelInfo,
-    shape: MlpShape,
+    /// The layer graph realized from the run's topology + dataset dims.
+    net: Network,
     /// Simulate float16 via binary16 round-trips at every hook.
     half: bool,
     /// Experiment seed (dropout masks derive from it + the step index).
@@ -82,29 +92,33 @@ impl Backend for NativeBackend {
     }
 
     fn supports_model(&self, model: &str) -> bool {
-        ModelInfo::builtin(model).is_some()
+        // name-based gating for the builtin specs only; configs with an
+        // explicit topology bypass this and are resolved by begin_run
+        TopologySpec::builtin(model).is_some()
     }
 
     fn begin_run(&mut self, cfg: &ExperimentConfig) -> crate::Result<ModelInfo> {
-        let model = ModelInfo::builtin(&cfg.model).with_context(|| {
-            format!(
-                "the native backend implements the maxout MLPs only; model '{}' \
-                 needs compiled artifacts (build with --features pjrt and use \
-                 the pjrt backend)",
-                cfg.model
-            )
-        })?;
-        let w0 = &model.params[0].shape;
-        crate::ensure!(w0.len() == 3, "unexpected builtin weight rank");
-        let shape = MlpShape {
-            d_in: w0[1],
-            units: w0[2],
-            k: w0[0],
-            n_classes: model.n_classes,
+        let spec = match &cfg.topology {
+            Some(t) => t.clone(),
+            None => TopologySpec::builtin(&cfg.model).with_context(|| {
+                format!(
+                    "the native backend implements the maxout MLPs only; model '{}' \
+                     needs compiled artifacts (build with --features pjrt and use \
+                     the pjrt backend) — or pass an explicit MLP topology \
+                     (--topology / [topology])",
+                    cfg.model
+                )
+            })?,
         };
+        spec.validate()?;
+        // input/output dimensions come from the data source, so the same
+        // topology composes with any dataset
+        let (d_in, n_classes) = crate::data::dataset_dims(&cfg.data.dataset)?;
+        let model = ModelInfo::from_topology(&spec, d_in, n_classes);
+        let net = Network::from_topology(&spec, d_in, n_classes);
         self.run = Some(NativeRun {
             model: model.clone(),
-            shape,
+            net,
             half: matches!(cfg.arithmetic, Arithmetic::Half),
             seed: cfg.train.seed,
             params: Vec::new(),
@@ -137,7 +151,7 @@ impl Backend for NativeBackend {
         hp: &StepParams,
     ) -> crate::Result<StepOut> {
         let run = self.run_mut()?;
-        let x = Self::flatten_input(x, run.shape.d_in)?;
+        let x = Self::flatten_input(x, run.net.d_in())?;
         let dropout = if hp.dropout_input > 0.0 || hp.dropout_hidden > 0.0 {
             Some(Dropout {
                 input_rate: hp.dropout_input,
@@ -148,8 +162,7 @@ impl Backend for NativeBackend {
         } else {
             None
         };
-        let out = golden::train_step_opt(
-            run.shape,
+        let out = run.net.train_step(
             &mut run.params,
             &mut run.vels,
             &x,
@@ -173,15 +186,8 @@ impl Backend for NativeBackend {
         n_real: usize,
     ) -> crate::Result<usize> {
         let run = self.run_mut()?;
-        let x = Self::flatten_input(x, run.shape.d_in)?;
-        let logits = golden::eval_logits(
-            run.shape,
-            &run.params,
-            &x,
-            ctrl,
-            RoundMode::HalfAway,
-            run.half,
-        );
+        let x = Self::flatten_input(x, run.net.d_in())?;
+        let logits = run.net.eval_logits(&run.params, &x, ctrl, RoundMode::HalfAway, run.half);
         let preds = ops::argmax_rows(&logits);
         let truth = ops::argmax_rows(y);
         crate::ensure!(n_real <= preds.len(), "n_real {n_real} > batch {}", preds.len());
@@ -225,7 +231,7 @@ mod tests {
         let mut be = NativeBackend::new();
         let model = be.begin_run(&cfg()).unwrap();
         let up = FixedFormat::new(12, 0);
-        let ctrl = ScaleController::fixed(model.n_layers, FixedFormat::new(10, 3), up);
+        let ctrl = ScaleController::fixed(model.n_groups, FixedFormat::new(10, 3), up);
         let mut rng = Pcg32::seeded(3);
         be.init_state(&ctrl, &mut rng).unwrap();
         for p in be.params_host().unwrap() {
@@ -237,9 +243,46 @@ mod tests {
     }
 
     #[test]
+    fn explicit_topology_overrides_the_model_and_follows_the_dataset() {
+        let mut be = NativeBackend::new();
+        let mut c = cfg();
+        c.topology = Some(TopologySpec::mlp(vec![24, 16, 8], 2));
+        c.model = c.topology.as_ref().unwrap().name.clone();
+        c.data.dataset = "cifar_like".into(); // 3072-d input, 10 classes
+        let model = be.begin_run(&c).unwrap();
+        assert_eq!(model.n_layers, 4);
+        assert_eq!(model.n_groups, 32);
+        assert_eq!(model.input_shape, vec![3072]);
+        assert_eq!(model.params[0].shape, vec![2, 3072, 24]);
+        let ctrl =
+            ScaleController::fixed(model.n_groups, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut rng = Pcg32::seeded(5);
+        be.init_state(&ctrl, &mut rng).unwrap();
+        // one step end to end on the dataset-shaped input
+        let n = model.train_batch;
+        let x = Tensor::from_vec(
+            &[n, 32, 32, 3],
+            (0..n * 3072).map(|_| rng.uniform()).collect(),
+        );
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(10) as usize).collect();
+        let y = ops::one_hot(&labels, 10);
+        let hp = StepParams {
+            lr: 0.1,
+            momentum: 0.5,
+            max_norm: 0.0,
+            dropout_input: 0.0,
+            dropout_hidden: 0.0,
+            t: 0,
+        };
+        let out = be.train_step(&ctrl, &x, &y, &hp).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.overflow.shape(), &[32, 3]);
+    }
+
+    #[test]
     fn methods_before_begin_run_fail_cleanly() {
         let mut be = NativeBackend::new();
-        let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
         let mut rng = Pcg32::seeded(1);
         assert!(be.init_state(&ctrl, &mut rng).is_err());
         assert!(be.params_host().is_err());

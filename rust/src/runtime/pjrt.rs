@@ -186,6 +186,17 @@ impl Backend for PjrtBackend {
     }
 
     fn begin_run(&mut self, cfg: &ExperimentConfig) -> crate::Result<ModelInfo> {
+        // explicit topologies are a native-backend feature: the compiled
+        // artifacts exist only for the manifest's models, so silently
+        // training a different network than configured must be an error
+        if let Some(t) = &cfg.topology {
+            crate::bail!(
+                "the pjrt backend runs compiled manifest models only and \
+                 cannot realize the explicit topology '{}' — drop \
+                 [topology]/--topology or use --backend native",
+                t.name
+            );
+        }
         let model = self.manifest.model(&cfg.model)?.clone();
         let mode = cfg.arithmetic.mode();
         let train_exe =

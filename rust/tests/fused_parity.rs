@@ -246,22 +246,22 @@ fn train_step_fused_bit_identical_to_two_pass() {
     let arith_cases: [(&str, ScaleController, bool); 4] = [
         (
             "float32",
-            ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
             false,
         ),
         (
             "fixed 10.3/12.0",
-            ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
+            ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
             false,
         ),
         (
             "dynamic-regime 8.2/14.1",
-            ScaleController::fixed(3, FixedFormat::new(8, 2), FixedFormat::new(14, 1)),
+            ScaleController::fixed(24, FixedFormat::new(8, 2), FixedFormat::new(14, 1)),
             false,
         ),
         (
             "float16",
-            ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
             true,
         ),
     ];
@@ -308,7 +308,7 @@ fn train_step_fused_bit_identical_to_two_pass() {
 #[test]
 fn eval_logits_consistent_with_zero_lr_step_under_fusion() {
     let s = tiny_mlp();
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
     let (mut params, _) = mlp_state(s, 7);
     // pre-quantize storage as the Trainer does at init
     for (i, p) in params.iter_mut().enumerate() {

@@ -1,0 +1,306 @@
+//! Graph-boundary parity: the layer-graph executor ([`Network`]) must be
+//! **bit-identical** — exact `u32` loss/parameter/velocity bits *and*
+//! exact `QuantStats` overflow counters — to the frozen pre-refactor
+//! monolithic step (`golden::reference`) on the builtin 2-hidden-layer
+//! topology, across:
+//!
+//! * all four arithmetics (float32 passthrough, fixed, dynamic-regime
+//!   fixed, float16 simulation),
+//! * all four rounding modes (stochastic via the counter-based per-site
+//!   streams),
+//! * fused and two-pass quantization paths (`StepOptions::fused`),
+//! * dropout on and off (mask draw order is part of the contract),
+//! * any thread count — CI re-runs this suite under `LPDNN_THREADS`
+//!   ∈ {1, 4}, covering the auto-threaded kernel entry points.
+//!
+//! A second layer exercises what the monolith never could: topologies
+//! with ≥3 hidden layers parsed from a TOML `[topology]` spec, trained
+//! end to end with dynamic fixed point adopting per-layer scales.
+
+use lpdnn::arith::{FixedFormat, RoundMode};
+use lpdnn::config::{ExperimentConfig, TopologySpec};
+use lpdnn::coordinator::{ScaleController, Session};
+use lpdnn::golden::{self, Dropout, MlpShape, Network, StepOptions};
+use lpdnn::runtime::{BackendSpec, ModelInfo};
+use lpdnn::tensor::{ops, Pcg32, Tensor};
+use lpdnn::testing::{mlp_batch, mlp_state, ROUND_MODES, tiny_mlp};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The four arithmetics as (label, controller, half) — the same matrix
+/// `tests/fused_parity.rs` uses, sized for tiny_mlp's 24 groups.
+fn arith_cases() -> Vec<(&'static str, ScaleController, bool)> {
+    vec![
+        (
+            "float32",
+            ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            false,
+        ),
+        (
+            "fixed 10.3/12.0",
+            ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
+            false,
+        ),
+        (
+            "dynamic-regime 8.2/14.1",
+            ScaleController::fixed(24, FixedFormat::new(8, 2), FixedFormat::new(14, 1)),
+            false,
+        ),
+        (
+            "float16",
+            ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            true,
+        ),
+    ]
+}
+
+/// Three steps of graph-vs-monolith from identical state: loss bits,
+/// overflow-matrix bits, parameter bits, velocity bits — all equal.
+#[test]
+fn graph_pi_mlp_bit_identical_to_monolith() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    assert_eq!(net.n_groups(), 24);
+    for (label, ctrl, half) in &arith_cases() {
+        for mode in ROUND_MODES {
+            for fused in [true, false] {
+                let (x, y) = mlp_batch(s, 16, 0xBA7C);
+                let opts = || StepOptions { mode, half: *half, dropout: None, fused };
+                let run_graph = |net: &Network| {
+                    let (mut params, mut vels) = mlp_state(s, 0x5EED);
+                    let mut trace = Vec::new();
+                    for _ in 0..3 {
+                        let out = net.train_step(
+                            &mut params, &mut vels, &x, &y, 0.1, 0.5, 2.0, ctrl, opts(),
+                        );
+                        trace.push((out.loss.to_bits(), bits(out.overflow.data())));
+                    }
+                    (trace, params, vels)
+                };
+                let run_mono = || {
+                    let (mut params, mut vels) = mlp_state(s, 0x5EED);
+                    let mut trace = Vec::new();
+                    for _ in 0..3 {
+                        let out = golden::reference::train_step_opt(
+                            s, &mut params, &mut vels, &x, &y, 0.1, 0.5, 2.0, ctrl, opts(),
+                        );
+                        trace.push((out.loss.to_bits(), bits(out.overflow.data())));
+                    }
+                    (trace, params, vels)
+                };
+                let (t_g, p_g, v_g) = run_graph(&net);
+                let (t_m, p_m, v_m) = run_mono();
+                assert_eq!(
+                    t_g, t_m,
+                    "{label} {mode:?} fused={fused}: loss/overflow diverged"
+                );
+                for (i, (a, b)) in p_g.iter().zip(&p_m).enumerate() {
+                    assert_eq!(
+                        bits(a.data()),
+                        bits(b.data()),
+                        "{label} {mode:?} fused={fused}: param {i}"
+                    );
+                }
+                for (i, (a, b)) in v_g.iter().zip(&v_m).enumerate() {
+                    assert_eq!(
+                        bits(a.data()),
+                        bits(b.data()),
+                        "{label} {mode:?} fused={fused}: vel {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Dropout parity: mask draw order through the graph's DropoutLayers
+/// must replay the monolith's masks exactly (same single RNG stream).
+#[test]
+fn graph_dropout_masks_match_monolith_bit_for_bit() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+    let (x, y) = mlp_batch(s, 16, 0xD0);
+    // input-only, hidden-only, and both — each changes the draw sequence
+    for (ri, rh) in [(0.2f32, 0.5f32), (0.0, 0.5), (0.2, 0.0)] {
+        let opts = || StepOptions {
+            dropout: Some(Dropout {
+                input_rate: ri,
+                hidden_rate: rh,
+                rng: Pcg32::seeded(0xABCD),
+            }),
+            ..Default::default()
+        };
+        let (mut pg, mut vg) = mlp_state(s, 7);
+        let g = net.train_step(&mut pg, &mut vg, &x, &y, 0.1, 0.5, 2.0, &ctrl, opts());
+        let (mut pm, mut vm) = mlp_state(s, 7);
+        let m = golden::reference::train_step_opt(
+            s, &mut pm, &mut vm, &x, &y, 0.1, 0.5, 2.0, &ctrl, opts(),
+        );
+        assert_eq!(g.loss.to_bits(), m.loss.to_bits(), "rates ({ri}, {rh})");
+        assert_eq!(bits(g.overflow.data()), bits(m.overflow.data()));
+        for (a, b) in pg.iter().zip(&pm) {
+            assert_eq!(bits(a.data()), bits(b.data()), "rates ({ri}, {rh})");
+        }
+    }
+}
+
+/// Eval parity: forward-only logits agree bit-for-bit between the graph
+/// and the monolith, for fixed grids and the float16 simulation.
+#[test]
+fn graph_eval_logits_bit_identical_to_monolith() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    for (label, ctrl, half) in &arith_cases() {
+        let (params, _) = mlp_state(s, 0xE7A1);
+        let (x, _) = mlp_batch(s, 8, 0xE7A2);
+        let got = net.eval_logits(&params, &x, ctrl, RoundMode::HalfAway, *half);
+        let want = golden::reference::eval_logits(s, &params, &x, ctrl, RoundMode::HalfAway, *half);
+        assert_eq!(bits(got.data()), bits(want.data()), "{label}");
+    }
+}
+
+/// The public thin drivers (`golden::train_step_opt` / `eval_logits`)
+/// route through the graph and stay bit-identical to the monolith too.
+#[test]
+fn thin_drivers_route_through_the_graph_unchanged() {
+    let s = tiny_mlp();
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let (x, y) = mlp_batch(s, 8, 3);
+    let (mut p1, mut v1) = mlp_state(s, 4);
+    let (mut p2, mut v2) = mlp_state(s, 4);
+    let a = golden::train_step_opt(
+        s, &mut p1, &mut v1, &x, &y, 0.1, 0.5, 2.0, &ctrl, StepOptions::default(),
+    );
+    let b = golden::reference::train_step_opt(
+        s, &mut p2, &mut v2, &x, &y, 0.1, 0.5, 2.0, &ctrl, StepOptions::default(),
+    );
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    for (t1, t2) in p1.iter().zip(&p2) {
+        assert_eq!(bits(t1.data()), bits(t2.data()));
+    }
+    let ga = golden::eval_logits(s, &p1, &x, &ctrl, RoundMode::HalfAway, false);
+    let gb = golden::reference::eval_logits(s, &p2, &x, &ctrl, RoundMode::HalfAway, false);
+    assert_eq!(bits(ga.data()), bits(gb.data()));
+}
+
+/// A ≥3-hidden-layer topology from a TOML `[topology]` spec trains end
+/// to end with dynamic fixed point: warmup learns per-layer exponents,
+/// the controller adopts them, and the run finishes with a full
+/// 32-group scale table.
+#[test]
+fn deep_topology_toml_trains_with_dynamic_scales() {
+    let cfg = ExperimentConfig::from_toml_str(
+        r#"
+[experiment]
+name = "depth3-dynamic"
+dataset = "digits"
+
+[topology]
+hidden = [32, 32, 32]
+k = 2
+
+[arithmetic]
+kind = "dynamic"
+bits_comp = 10
+bits_up = 12
+max_overflow_rate = 1e-4
+update_every_examples = 256
+init_int_bits = 3
+warmup_steps = 10
+
+[train]
+steps = 30
+lr_start = 0.1
+seed = 7
+
+[data]
+n_train = 256
+n_test = 128
+"#,
+    )
+    .unwrap();
+    let topo = cfg.topology.as_ref().unwrap();
+    assert_eq!(topo.hidden, vec![32, 32, 32]);
+    assert_eq!(topo.n_layers(), 4);
+
+    let mut session = Session::new(BackendSpec::native());
+    let r = session.run(cfg).unwrap();
+    assert_eq!(r.steps_run, 30);
+    assert!(r.train_loss.is_finite());
+    assert!(r.test_error.is_finite() && r.test_error <= 1.0);
+    // one scale per group, 4 compute layers × 8 kinds
+    assert_eq!(r.final_int_bits.len(), 32);
+    // warmup adoption + runtime moves must have taken at least one group
+    // off the uniform init_int_bits=3 cold start
+    assert!(
+        r.final_int_bits.iter().any(|&b| b != 3),
+        "no per-layer scale was ever adopted: {:?}",
+        r.final_int_bits
+    );
+}
+
+/// The same deep topology driven directly through Network/ModelInfo:
+/// bit-determinism across two identical runs (graph execution introduces
+/// no hidden state), and group count comes from the graph.
+#[test]
+fn deep_topology_is_deterministic_and_sizes_its_controller() {
+    let spec = TopologySpec::mlp(vec![24, 16, 12], 2);
+    let (d_in, n_classes) = lpdnn::data::dataset_dims("clusters").unwrap();
+    let net = Network::from_topology(&spec, d_in, n_classes);
+    let info = ModelInfo::from_topology(&spec, d_in, n_classes);
+    assert_eq!(net.n_groups(), info.n_groups);
+    let ctrl = ScaleController::fixed(
+        net.n_groups(),
+        FixedFormat::new(10, 3),
+        FixedFormat::new(12, 0),
+    );
+    let mut rng = Pcg32::seeded(31);
+    let x = Tensor::from_vec(&[8, d_in], (0..8 * d_in).map(|_| rng.normal()).collect());
+    let labels: Vec<usize> = (0..8).map(|_| rng.below(n_classes as u32) as usize).collect();
+    let y = ops::one_hot(&labels, n_classes);
+    let run = || {
+        let mut srng = Pcg32::seeded(5);
+        let mut params: Vec<Tensor> =
+            info.params.iter().map(|s| s.init.realize(&s.shape, &mut srng)).collect();
+        let mut vels: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            let out = net.train_step(
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.1,
+                0.5,
+                2.0,
+                &ctrl,
+                StepOptions::default(),
+            );
+            losses.push(out.loss.to_bits());
+        }
+        (losses, params)
+    };
+    let (l1, p1) = run();
+    let (l2, p2) = run();
+    assert_eq!(l1, l2);
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(bits(a.data()), bits(b.data()));
+    }
+}
+
+/// MlpShape dims derive from the dataset (satellite: no hardcoded
+/// 784/10), and the graph accepts what they produce.
+#[test]
+fn mlp_shape_for_dataset_builds_consistent_networks() {
+    for (ds, want_d, want_c) in [("digits", 784, 10), ("svhn_like", 3072, 10)] {
+        let s = MlpShape::for_dataset(ds, 16, 2).unwrap();
+        assert_eq!((s.d_in, s.n_classes), (want_d, want_c));
+        let net = Network::from_mlp_shape(s);
+        assert_eq!(net.d_in(), want_d);
+        assert_eq!(net.n_classes(), want_c);
+        assert_eq!(net.n_groups(), 24);
+    }
+}

@@ -186,8 +186,8 @@ mod pjrt_bridge {
         let model = manifest.model("pi_mlp").unwrap();
         let exe = engine.load(manifest.artifact("pi_mlp", "fixed", "train").unwrap()).unwrap();
 
-        let shape = MlpShape::pi_mlp(128, 4);
-        let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
+        let shape = MlpShape::for_dataset("digits", 128, 4).unwrap();
+        let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(14, 1));
 
         // identical initial state for both paths, pre-quantized onto the grid
         let mut rng = Pcg32::seeded(4242);

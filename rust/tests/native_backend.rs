@@ -33,7 +33,7 @@ fn digits_cfg(name: &str, arith: Arithmetic, steps: usize) -> ExperimentConfig {
 #[test]
 fn native_backend_matches_golden_step_exactly() {
     let cfg = digits_cfg("parity", Arithmetic::Fixed { bits_comp: 12, bits_up: 14, int_bits: 3 }, 1);
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(12, 3), FixedFormat::new(14, 3));
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(12, 3), FixedFormat::new(14, 3));
 
     // --- backend path ---
     let mut backend = NativeBackend::new();
@@ -43,7 +43,7 @@ fn native_backend_matches_golden_step_exactly() {
     let params_before = backend.params_host().unwrap();
 
     // --- golden path from the identical state ---
-    let shape = MlpShape::pi_mlp(128, 4);
+    let shape = MlpShape::for_dataset("digits", 128, 4).unwrap();
     let mut gparams = params_before.clone();
     let mut gvels: Vec<Tensor> =
         model.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
@@ -150,7 +150,7 @@ fn eval_errors_honors_n_real() {
     let cfg = digits_cfg("eval", Arithmetic::Float32, 1);
     let mut backend = NativeBackend::new();
     backend.begin_run(&cfg).unwrap();
-    let ctrl = ScaleController::fixed(3, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+    let ctrl = ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
     let mut rng = Pcg32::seeded(5);
     backend.init_state(&ctrl, &mut rng).unwrap();
     let n = 16;
@@ -193,7 +193,7 @@ fn builtin_model_is_consistent() {
     assert!(ModelInfo::builtin("conv").is_none());
 
     // init realizes to the declared shapes and quantizes cleanly
-    let ctrl = ScaleController::fixed(3, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
     let mut rng = Pcg32::seeded(9);
     for spec in &m.params {
         let mut t = spec.init.realize(&spec.shape, &mut rng);
