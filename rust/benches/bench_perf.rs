@@ -10,6 +10,8 @@
 //! * golden/native train step (the native backend's hot path)
 //! * layer-graph executor vs the pre-refactor monolith (`graph train
 //!   step` rows: depth 2 overhead per arithmetic, depths 3/4 scaling)
+//! * conv im2col lowering vs the direct nested-loop reference kernels
+//!   (`conv train step` rows, per arithmetic — bit-identical paths)
 //! * scale controller overhead per tick
 //! * with `--features pjrt` + artifacts: compiled-step latency and the
 //!   L3↔PJRT literal-assembly boundary
@@ -290,6 +292,64 @@ fn graph_step_section(table: &mut Table) {
     }
 }
 
+/// Conv train steps: the im2col lowering (conv multiplies riding the
+/// fused GEMM epilogues) vs the direct nested-loop reference kernels
+/// (`StepOptions::conv_direct`) — bit-identical paths, so the rows are
+/// pure perf A/Bs, per arithmetic, on the builtin `conv` net's
+/// 28×28×1 digits geometry.
+fn conv_step_section(table: &mut Table) {
+    let arithmetics: [(&str, FixedFormat, FixedFormat, bool); 3] = [
+        ("fixed 12.3", FixedFormat::new(12, 3), FixedFormat::new(14, 1), false),
+        ("float16", FixedFormat::FLOAT32, FixedFormat::FLOAT32, true),
+        ("float32", FixedFormat::FLOAT32, FixedFormat::FLOAT32, false),
+    ];
+    let iters = scaled(5).max(2);
+    let spec = TopologySpec::builtin("conv").expect("builtin conv");
+    let (in_shape, n_classes) = lpdnn::data::dataset_shape("digits").expect("digits shape");
+    let net = Network::from_topology_shaped(&spec, in_shape, n_classes).expect("conv net");
+    let batch = 16;
+    let mut rng = Pcg32::seeded(29);
+    let mut dims = vec![batch];
+    dims.extend(in_shape.dims());
+    let x = Tensor::from_vec(
+        &dims,
+        (0..batch * in_shape.len()).map(|_| rng.uniform()).collect(),
+    );
+    let labels: Vec<usize> = (0..batch).map(|_| rng.below(10) as usize).collect();
+    let y = ops::one_hot(&labels, 10);
+    let state = || lpdnn::testing::topology_state(&spec, in_shape, n_classes, 31);
+    for (label, comp, up, half) in arithmetics {
+        let ctrl = ScaleController::fixed(net.n_groups(), comp, up);
+        let time_path = |conv_direct: bool| {
+            let (mut params, mut vels) = state();
+            bench(1, iters, || {
+                let _ = net.train_step(
+                    &mut params,
+                    &mut vels,
+                    &x,
+                    &y,
+                    0.01,
+                    0.5,
+                    3.0,
+                    &ctrl,
+                    StepOptions { half, conv_direct, ..Default::default() },
+                );
+            })
+        };
+        let s_direct = time_path(true);
+        let s_im2col = time_path(false);
+        table.row(&[
+            format!("conv train step conv 28x28x1 b{batch} ({label})"),
+            format!(
+                "direct {:.2}ms | im2col {:.2}ms | speedup {:.2}x",
+                s_direct.mean * 1e3,
+                s_im2col.mean * 1e3,
+                s_direct.mean / s_im2col.mean.max(1e-12),
+            ),
+        ]);
+    }
+}
+
 /// Fused quantize-aware GEMM vs the two-pass epilogue it replaced
 /// (materialize the f32 product → bias/copy sweep → `apply_slice`
 /// sweep) — the rows EXPERIMENTS.md §Perf tracks for this fusion, per
@@ -497,6 +557,7 @@ fn main() {
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
     graph_step_section(&mut table);
+    conv_step_section(&mut table);
     quantizer_section(&mut table);
     controller_section(&mut table);
     #[cfg(feature = "pjrt")]

@@ -4,9 +4,9 @@
 //! Backends: every bench drives a [`Session`] whose backend comes from
 //! `LPDNN_BACKEND` (default `native`, which needs no artifacts; `pjrt`
 //! needs a build with `--features pjrt` plus `make artifacts`).
-//! Workloads a backend cannot run (conv models on native) are skipped
-//! with a note — see EXPERIMENTS.md §Experiment index for which figure
-//! needs which.
+//! Workloads a backend cannot run (models missing from a pjrt manifest)
+//! are skipped with a note — the native backend runs every builtin
+//! topology, conv nets included, since the shape-aware layer graph.
 //!
 //! Parallelism: the sweep benches fan their points across the session's
 //! worker pool. `LPDNN_JOBS` sets the pool size; the default is one

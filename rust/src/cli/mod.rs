@@ -114,13 +114,16 @@ SUBCOMMANDS:
                   --config <file.toml>   experiment config (or use flags:)
                   --backend native|pjrt  execution backend (default native;
                                          pjrt needs --features pjrt + artifacts)
-                  --model pi_mlp|pi_mlp_wide|conv|conv32
-                  --topology SPEC        explicit maxout-MLP topology
+                  --model pi_mlp|pi_mlp_wide|conv|conv32|pi_conv
+                  --topology SPEC        explicit maxout topology
                                          (overrides --model; realized
-                                         against the dataset's dims):
-                                         builtin name, WIDTHxDEPTH or
-                                         w1,w2,..., optionally @kN —
-                                         e.g. 128x3, 256,128@k2
+                                         against the dataset's shape):
+                                         builtin name, WIDTHxDEPTH,
+                                         w1,w2,..., or conv stages
+                                         cCH[kKSIZE][pPOOL],.../dense,
+                                         optionally @kN — e.g. 128x3,
+                                         256,128@k2, pi_conv,
+                                         c32k5p2,c64k5p2/128x2@k2
                   --dataset digits|clusters|cifar_like|svhn_like
                   --arith float32|half|fixed|dynamic
                   --bits-comp N --bits-up N --int-bits N

@@ -208,10 +208,11 @@ impl Default for DataConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// "pi_mlp" | "pi_mlp_wide" | "conv" | "conv32" (built-in for the
-    /// native backend; must exist in the manifest for pjrt). When
-    /// `topology` is set it overrides the model and this field is just
-    /// the run's model label.
+    /// "pi_mlp" | "pi_mlp_wide" | "conv" | "conv32" | "pi_conv" — all
+    /// built-in topologies on the native backend (realized against the
+    /// dataset's shape); for pjrt the name must exist in the manifest
+    /// (`pi_conv` is native-only). When `topology` is set it overrides
+    /// the model and this field is just the run's model label.
     pub model: String,
     /// Which execution backend to run on (`[experiment] backend = ...`).
     pub backend: BackendKind,
@@ -352,16 +353,27 @@ impl ExperimentConfig {
 
     /// Sanity-check the configuration before spending a training run on it.
     pub fn validate(&self) -> crate::Result<()> {
-        if !["digits", "clusters", "cifar_like", "svhn_like"].contains(&self.data.dataset.as_str())
-        {
-            bail!("unknown dataset '{}'", self.data.dataset);
-        }
+        // one source of truth for dataset existence AND geometry: conv
+        // stages can only consume spatial (image) datasets
+        let (data_shape, _) = crate::data::dataset_shape(&self.data.dataset)?;
+        let spatial_dataset = matches!(data_shape, crate::tensor::Shape::Spatial { .. });
         if let Some(t) = &self.topology {
             // an explicit topology replaces the model whitelist: the MLP
-            // graph consumes any dataset flattened to its example length
+            // graph consumes any dataset flattened to its example length,
+            // and conv stages consume any spatial (image) dataset
             t.validate()?;
+            if !t.conv.is_empty() && !spatial_dataset {
+                bail!(
+                    "topology '{}' has conv stages and needs a spatial dataset; \
+                     '{}' is flat",
+                    t.name,
+                    self.data.dataset
+                );
+            }
         } else {
-            if !["pi_mlp", "pi_mlp_wide", "conv", "conv32"].contains(&self.model.as_str()) {
+            if !["pi_mlp", "pi_mlp_wide", "conv", "conv32", "pi_conv"]
+                .contains(&self.model.as_str())
+            {
                 bail!("unknown model '{}'", self.model);
             }
             let input_ok = match self.model.as_str() {
@@ -370,6 +382,8 @@ impl ExperimentConfig {
                 }
                 "conv" => self.data.dataset == "digits",
                 "conv32" => ["cifar_like", "svhn_like"].contains(&self.data.dataset.as_str()),
+                // the native-first conv net realizes against any image set
+                "pi_conv" => spatial_dataset,
                 _ => unreachable!(),
             };
             if !input_ok {
@@ -489,6 +503,62 @@ steps = 10
         }
         cfg.data.dataset = "imagenet".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn conv_topologies_need_spatial_datasets() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology = Some(crate::config::TopologySpec::parse_cli("c8k3p2/16x1@k2").unwrap());
+        for ds in ["digits", "cifar_like", "svhn_like"] {
+            cfg.data.dataset = ds.into();
+            cfg.validate().unwrap_or_else(|e| panic!("{ds}: {e:#}"));
+        }
+        cfg.data.dataset = "clusters".into();
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("spatial"), "{err:#}");
+
+        // the builtin conv model names follow the same matrix
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "pi_conv".into();
+        for ds in ["digits", "cifar_like", "svhn_like"] {
+            cfg.data.dataset = ds.into();
+            cfg.validate().unwrap_or_else(|e| panic!("{ds}: {e:#}"));
+        }
+        cfg.data.dataset = "clusters".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_conv_topology_table() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+[topology]
+k = 2
+hidden = [32]
+
+[[topology.conv]]
+channels = 8
+ksize = 3
+
+[train]
+steps = 5
+
+[experiment]
+dataset = "cifar_like"
+"#,
+        )
+        .unwrap();
+        let t = cfg.topology.as_ref().unwrap();
+        assert_eq!(t.conv.len(), 1);
+        assert_eq!((t.conv[0].channels, t.conv[0].ksize, t.conv[0].pool), (8, 3, 2));
+        assert_eq!(t.hidden, vec![32]);
+        // the derived conv name labels the model
+        assert_eq!(cfg.model, t.name);
+        // the same table over the flat dataset is rejected
+        assert!(ExperimentConfig::from_toml_str(
+            "[[topology.conv]]\nchannels = 8\n[experiment]\ndataset = \"clusters\"\n",
+        )
+        .is_err());
     }
 
     #[test]

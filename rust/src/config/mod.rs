@@ -8,4 +8,4 @@ pub mod topology;
 
 pub use experiment::{Arithmetic, BackendKind, DataConfig, ExperimentConfig, TrainConfig};
 pub use json::{Json, JsonError};
-pub use topology::TopologySpec;
+pub use topology::{ConvStageSpec, TopologySpec};

@@ -1,7 +1,9 @@
 //! From-scratch TOML-subset parser for experiment config files.
 //!
 //! Supports the subset our configs use: `[section]` / `[a.b]` tables,
-//! `key = value` with strings, integers, floats, booleans and flat arrays,
+//! `[[a.b]]` arrays of tables (each header appends a fresh table;
+//! subsequent keys land in it — how conv stages are declared), `key =
+//! value` with strings, integers, floats, booleans and flat arrays,
 //! plus `#` comments. Parses into the crate's [`Json`] value type so the
 //! rest of the config layer has a single dynamic representation.
 //!
@@ -12,6 +14,10 @@
 //! kind = "dynamic"
 //! bits_comp = 10
 //! max_overflow_rate = 1e-4
+//! [[topology.conv]]
+//! channels = 32
+//! [[topology.conv]]
+//! channels = 64
 //! ```
 
 use std::collections::BTreeMap;
@@ -45,6 +51,23 @@ pub fn parse(input: &str) -> Result<Json, TomlError> {
         let line_no = lineno + 1;
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| err(line_no, "unterminated array-of-tables header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line_no, "empty array-of-tables name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err(line_no, "empty section path component"));
+            }
+            // append a fresh table; keys below the header land in it
+            // (insert_path descends into the last element of an array)
+            push_array_table(&mut root, &section, line_no)?;
             continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
@@ -109,7 +132,19 @@ fn insert_path(
                     cur.insert(part.clone(), v.clone());
                 }
                 None => {
-                    cur.entry(part.clone()).or_insert_with(|| Json::Object(BTreeMap::new()));
+                    let entry = cur
+                        .entry(part.clone())
+                        .or_insert_with(|| Json::Object(BTreeMap::new()));
+                    // a plain [..] header must name a table: catching the
+                    // single-bracket typo for an existing [[..]] array
+                    // here stops its keys silently merging into the last
+                    // array element (a different topology than declared)
+                    if !matches!(entry, Json::Object(_)) {
+                        return Err(err(
+                            line,
+                            format!("'{part}' is not a table (use [[{part}]] to append)"),
+                        ));
+                    }
                 }
             }
             return Ok(());
@@ -119,10 +154,52 @@ fn insert_path(
             .or_insert_with(|| Json::Object(BTreeMap::new()));
         match entry {
             Json::Object(m) => cur = m,
+            // descend into the array-of-tables element under construction
+            Json::Array(a) => match a.last_mut() {
+                Some(Json::Object(m)) => cur = m,
+                _ => return Err(err(line, format!("'{part}' is not a table"))),
+            },
             _ => return Err(err(line, format!("'{part}' is not a table"))),
         }
     }
     Ok(())
+}
+
+/// `[[path]]`: append a fresh table to the array at `path` (creating the
+/// array on first use), so subsequent keys land in the new element.
+fn push_array_table(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in &path[..path.len() - 1] {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Object(BTreeMap::new()));
+        match entry {
+            Json::Object(m) => cur = m,
+            Json::Array(a) => match a.last_mut() {
+                Some(Json::Object(m)) => cur = m,
+                _ => return Err(err(line, format!("'{part}' is not a table"))),
+            },
+            _ => return Err(err(line, format!("'{part}' is not a table"))),
+        }
+    }
+    let name = &path[path.len() - 1];
+    let entry = cur
+        .entry(name.clone())
+        .or_insert_with(|| Json::Array(Vec::new()));
+    match entry {
+        // only arrays built from [[..]] headers qualify — appending to a
+        // plain value array would defer the failure to a confusing
+        // downstream field-access error
+        Json::Array(a) if a.iter().all(|e| matches!(e, Json::Object(_))) => {
+            a.push(Json::Object(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(err(line, format!("'{name}' is not an array of tables"))),
+    }
 }
 
 fn parse_value(s: &str, line: usize) -> Result<Json, TomlError> {
@@ -247,6 +324,50 @@ verbose = true
     fn comments_and_hashes_in_strings() {
         let v = parse("k = \"a#b\" # trailing\n").unwrap();
         assert_eq!(v.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn array_of_tables_appends_elements() {
+        let v = parse(
+            "[topology]\nk = 2\n\
+             [[topology.conv]]\nchannels = 8\nksize = 3\n\
+             [[topology.conv]]\nchannels = 16\n\
+             [train]\nsteps = 5\n",
+        )
+        .unwrap();
+        let topo = v.get("topology").unwrap();
+        assert_eq!(topo.get("k").unwrap().as_usize().unwrap(), 2);
+        let conv = topo.get("conv").unwrap().as_array().unwrap();
+        assert_eq!(conv.len(), 2);
+        assert_eq!(conv[0].get("channels").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(conv[0].get("ksize").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(conv[1].get("channels").unwrap().as_usize().unwrap(), 16);
+        assert!(conv[1].get("ksize").is_err());
+        // a later plain section leaves the array alone
+        assert_eq!(v.get("train").unwrap().get("steps").unwrap().as_usize().unwrap(), 5);
+    }
+
+    #[test]
+    fn array_of_tables_before_parent_section() {
+        // header order doesn't matter: the parent table materializes
+        let v = parse("[[topology.conv]]\nchannels = 4\n[topology]\nk = 2\n").unwrap();
+        let topo = v.get("topology").unwrap();
+        assert_eq!(topo.get("conv").unwrap().as_array().unwrap().len(), 1);
+        assert_eq!(topo.get("k").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn array_of_tables_conflicts_rejected() {
+        // a key and an array of tables cannot share a name
+        assert!(parse("[a]\nb = 1\n[[a.b]]\nc = 2\n").is_err());
+        // ... and neither can a plain value array
+        assert!(parse("[a]\nb = [1, 2]\n[[a.b]]\nc = 2\n").is_err());
+        assert!(parse("[[a]]\nk = 1\n[a.b]\n").is_ok()); // sub-table of the last element
+        assert!(parse("[[unclosed]\nk = 1").is_err());
+        // the single-bracket typo for an existing array of tables must
+        // error, not silently merge keys into the last element
+        let err = parse("[[t.conv]]\nchannels = 32\n[t.conv]\nchannels = 64\n").unwrap_err();
+        assert!(err.msg.contains("[[conv]]"), "{err}");
     }
 
     #[test]

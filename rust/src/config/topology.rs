@@ -1,41 +1,101 @@
 //! [`TopologySpec`]: model topology as *data* instead of code.
 //!
 //! The paper trains several maxout topologies — PI-MLPs of varying
-//! depth/width on MNIST plus deeper nets for CIFAR-10/SVHN — and the
-//! precision effects it studies are depth-dependent. A `TopologySpec`
-//! describes one maxout-MLP topology (hidden widths + pieces-per-unit)
-//! without pinning the input/output dimensions: those are derived from
-//! the dataset when the spec is *realized* into a
+//! depth/width on MNIST plus maxout *convolutional* networks for
+//! MNIST/CIFAR-10/SVHN — and the precision effects it studies are
+//! topology-dependent. A `TopologySpec` describes one maxout network
+//! (conv stages + hidden dense widths + pieces-per-unit) without
+//! pinning the input/output dimensions: those are derived from the
+//! dataset's signal [`Shape`] when the spec is *realized* into a
 //! [`ModelInfo`](crate::runtime::ModelInfo) and a
 //! [`Network`](crate::golden::Network), so the same spec composes with
-//! any data source.
+//! any data source whose shape fits.
 //!
 //! Specs come from three places, all producing the same type:
 //!
-//! * the built-in names (`pi_mlp`, `pi_mlp_wide`) that mirror the
-//!   compiled manifest's models ([`TopologySpec::builtin`]),
-//! * a `[topology]` table in the experiment TOML/JSON config
+//! * the built-in names (`pi_mlp`, `pi_mlp_wide`, `conv`, `conv32`,
+//!   `pi_conv`) that mirror `python/compile/model.py`'s model zoo
+//!   ([`TopologySpec::builtin`]),
+//! * a `[topology]` table in the experiment TOML/JSON config, with conv
+//!   stages as a `[[topology.conv]]` array of tables
 //!   ([`TopologySpec::from_json`], round-tripped by
 //!   [`TopologySpec::to_json`]),
 //! * the CLI's `--topology` flag ([`TopologySpec::parse_cli`]):
-//!   a builtin name, `WIDTHxDEPTH` (e.g. `128x3`), or a comma list of
-//!   widths (e.g. `256,128`), optionally suffixed `@kN` to set the
-//!   maxout piece count (e.g. `128x3@k2`).
+//!   a builtin name, `WIDTHxDEPTH` (e.g. `128x3`), a comma list of
+//!   widths (e.g. `256,128`), or a conv grammar — comma-separated
+//!   `c<CH>[k<KSIZE>][p<POOL>]` stages, optionally followed by
+//!   `/<dense part>` (e.g. `c32k5p2,c64k5p2/128x2`) — all optionally
+//!   suffixed `@kN` to set the maxout piece count (e.g. `128x3@k2`,
+//!   `c32k5p2,c64k5p2/128x2@k2`).
 
 use crate::bail;
+use crate::tensor::Shape;
 
 use super::json::Json;
 
-/// One maxout-MLP topology: hidden layer widths + maxout pieces. The
-/// input/output dimensions are *not* part of the spec — they come from
-/// the dataset at realization time.
+/// One maxout-conv stage: SAME-padded stride-1 conv (`ksize` odd) with
+/// `channels` output maps per maxout filter, then a non-overlapping
+/// `pool`×`pool` spatial max pool (VALID: trailing rows that don't fill
+/// a window are dropped). The stage owns one scaling-group row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvStageSpec {
+    /// Output channels (per maxout filter).
+    pub channels: usize,
+    /// Square kernel side; must be odd for SAME padding.
+    pub ksize: usize,
+    /// Pool window = stride (1 disables pooling).
+    pub pool: usize,
+}
+
+impl ConvStageSpec {
+    /// The stage's output signal shape, or a config error when the
+    /// input is flat, the kernel is even (no SAME padding), the pool is
+    /// degenerate, or the pool eats the whole map. This enforces the
+    /// same rules as the graph's `MaxoutConv2d`/`MaxPool2d` shape
+    /// contract, so `ModelInfo` realization and `Network` construction
+    /// accept exactly the same specs.
+    pub fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        let Shape::Spatial { h, w, .. } = *in_shape else {
+            bail!(
+                "conv stage {} needs a spatial input, got {in_shape} (conv \
+                 topologies require an image dataset)",
+                self.label()
+            );
+        };
+        crate::ensure!(
+            self.ksize % 2 == 1,
+            "conv stage {}: SAME padding needs an odd kernel size",
+            self.label()
+        );
+        crate::ensure!(self.pool >= 1, "conv stage {}: pool must be >= 1", self.label());
+        let (ph, pw) = (h / self.pool, w / self.pool);
+        crate::ensure!(
+            ph >= 1 && pw >= 1,
+            "conv stage {} pools a {h}x{w} map below one pixel",
+            self.label()
+        );
+        Ok(Shape::Spatial { h: ph, w: pw, c: self.channels })
+    }
+
+    /// The stage in `--topology` grammar (`c<CH>k<KSIZE>p<POOL>`).
+    fn label(&self) -> String {
+        format!("c{}k{}p{}", self.channels, self.ksize, self.pool)
+    }
+}
+
+/// One maxout topology: conv stages (input side), hidden dense widths,
+/// and maxout pieces. The input/output dimensions are *not* part of the
+/// spec — they come from the dataset at realization time.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TopologySpec {
     /// Model name used in configs, reports and manifest lookups.
     pub name: String,
-    /// Hidden maxout layer widths, input side first (e.g. `[128, 128]`).
+    /// Maxout-conv stages, input side first; empty for a pure MLP.
+    pub conv: Vec<ConvStageSpec>,
+    /// Hidden maxout dense widths after the conv stages (e.g.
+    /// `[128, 128]`); may be empty when conv stages exist.
     pub hidden: Vec<usize>,
-    /// Maxout pieces per hidden unit (paper: 4 on PI MNIST).
+    /// Maxout pieces per hidden unit (paper: 4 on PI MNIST, 2 on conv).
     pub k: usize,
     /// Training minibatch size.
     pub train_batch: usize,
@@ -50,6 +110,7 @@ impl TopologySpec {
         let widths: Vec<String> = hidden.iter().map(|u| u.to_string()).collect();
         TopologySpec {
             name: format!("mlp-{}-k{k}", widths.join("x")),
+            conv: Vec::new(),
             hidden,
             k,
             train_batch: 64,
@@ -57,28 +118,95 @@ impl TopologySpec {
         }
     }
 
-    /// The built-in topologies — the same maxout MLPs
+    /// A custom maxout conv net (conv stages, then dense widths) with
+    /// the default batch sizes and a derived name.
+    pub fn conv_net(conv: Vec<ConvStageSpec>, hidden: Vec<usize>, k: usize) -> TopologySpec {
+        let stages: Vec<String> = conv.iter().map(|c| c.label()).collect();
+        let widths: Vec<String> = hidden.iter().map(|u| u.to_string()).collect();
+        let dense = if widths.is_empty() {
+            String::new()
+        } else {
+            format!("-{}", widths.join("x"))
+        };
+        TopologySpec {
+            name: format!("conv-{}{dense}-k{k}", stages.join("+")),
+            conv,
+            hidden,
+            k,
+            train_batch: 64,
+            eval_batch: 256,
+        }
+    }
+
+    /// The built-in topologies — the same maxout models
     /// `python/compile/model.py` declares, so graph-built state lines up
-    /// with the compiled artifacts. `None` for unknown names (the conv
-    /// nets exist only as compiled graphs and have no spec).
+    /// with the compiled artifacts: the PI MLPs, the 28×28 `conv` net,
+    /// and the 32×32 `conv32` net (aliased `pi_conv`, the native-first
+    /// name). `None` for unknown names.
     pub fn builtin(name: &str) -> Option<TopologySpec> {
-        let units = match name {
-            "pi_mlp" => 128,
+        let stage = |channels| ConvStageSpec { channels, ksize: 5, pool: 2 };
+        let (conv, hidden, k) = match name {
+            "pi_mlp" => (vec![], vec![128, 128], 4),
             // paper 9.2/9.3 width ablation: double the hidden units
-            "pi_mlp_wide" => 256,
+            "pi_mlp_wide" => (vec![], vec![256, 256], 4),
+            // paper 8.1 conv model (28x28x1 datasets)
+            "conv" => (vec![stage(8), stage(16), stage(16)], vec![], 2),
+            // paper 8.2/8.3 conv model (32x32x3 datasets)
+            "conv32" | "pi_conv" => (vec![stage(16), stage(16), stage(24)], vec![], 2),
             _ => return None,
         };
         Some(TopologySpec {
             name: name.to_string(),
-            hidden: vec![units, units],
-            k: 4,
+            conv,
+            hidden,
+            k,
             train_batch: 64,
             eval_batch: 256,
         })
     }
 
+    /// Parse one conv-stage token: `c<CH>`, optionally `k<KSIZE>`
+    /// (default 5), optionally `p<POOL>` (default 2).
+    fn parse_conv_token(s: &str, tok: &str) -> crate::Result<ConvStageSpec> {
+        let split_digits = |t: &str| -> (String, String) {
+            let i = t.find(|c: char| !c.is_ascii_digit()).unwrap_or(t.len());
+            (t[..i].to_string(), t[i..].to_string())
+        };
+        let Some(rest) = tok.strip_prefix('c') else {
+            bail!("--topology '{s}': conv stage '{tok}' must start with 'c'");
+        };
+        let (ch, mut rest) = split_digits(rest);
+        let channels: usize = ch
+            .parse()
+            .map_err(|e| crate::err!("--topology '{s}': bad channels in '{tok}': {e}"))?;
+        let mut ksize = 5usize;
+        let mut pool = 2usize;
+        if let Some(r) = rest.strip_prefix('k') {
+            let (n, r2) = split_digits(r);
+            ksize = n
+                .parse()
+                .map_err(|e| crate::err!("--topology '{s}': bad ksize in '{tok}': {e}"))?;
+            rest = r2;
+        }
+        if let Some(r) = rest.strip_prefix('p') {
+            let (n, r2) = split_digits(r);
+            pool = n
+                .parse()
+                .map_err(|e| crate::err!("--topology '{s}': bad pool in '{tok}': {e}"))?;
+            rest = r2;
+        }
+        crate::ensure!(
+            rest.is_empty(),
+            "--topology '{s}': trailing '{rest}' in conv stage '{tok}' \
+             (grammar: c<CH>[k<KSIZE>][p<POOL>])"
+        );
+        Ok(ConvStageSpec { channels, ksize, pool })
+    }
+
     /// Parse the CLI `--topology` value: a builtin name, `WIDTHxDEPTH`
-    /// (`128x3`), or comma-separated widths (`256,128`), optionally
+    /// (`128x3`), comma-separated widths (`256,128`), or conv stages
+    /// `c<CH>[k<KSIZE>][p<POOL>],...` optionally followed by
+    /// `/<dense part>` (`c32k5p2,c64k5p2/128x2`) — all optionally
     /// suffixed `@kN` (`128x3@k2`).
     pub fn parse_cli(s: &str) -> crate::Result<TopologySpec> {
         if let Some(t) = TopologySpec::builtin(s) {
@@ -99,32 +227,85 @@ impl TopologySpec {
         let parse_width = |w: &str| -> crate::Result<usize> {
             w.parse().map_err(|e| crate::err!("--topology '{s}': bad width '{w}': {e}"))
         };
-        let hidden: Vec<usize> = if let Some((w, d)) = body.split_once('x') {
-            let w = parse_width(w)?;
-            let d: usize = d
-                .parse()
-                .map_err(|e| crate::err!("--topology '{s}': bad depth '{d}': {e}"))?;
-            crate::ensure!(d >= 1, "--topology '{s}': depth must be >= 1");
-            vec![w; d]
-        } else {
-            body.split(',')
-                .map(|w| parse_width(w.trim()))
-                .collect::<crate::Result<Vec<usize>>>()?
+        let parse_dense = |body: &str| -> crate::Result<Vec<usize>> {
+            if let Some((w, d)) = body.split_once('x') {
+                let w = parse_width(w)?;
+                let d: usize = d
+                    .parse()
+                    .map_err(|e| crate::err!("--topology '{s}': bad depth '{d}': {e}"))?;
+                crate::ensure!(d >= 1, "--topology '{s}': depth must be >= 1");
+                Ok(vec![w; d])
+            } else {
+                body.split(',')
+                    .map(|w| parse_width(w.trim()))
+                    .collect::<crate::Result<Vec<usize>>>()
+            }
         };
-        let spec = TopologySpec::mlp(hidden, k);
+        let looks_conv =
+            |t: &str| t.len() >= 2 && t.starts_with('c') && t.as_bytes()[1].is_ascii_digit();
+        let spec = match body.split_once('/') {
+            Some((conv_part, dense_part)) => {
+                let conv = conv_part
+                    .split(',')
+                    .map(|t| Self::parse_conv_token(s, t.trim()))
+                    .collect::<crate::Result<Vec<ConvStageSpec>>>()?;
+                let hidden = if dense_part.is_empty() {
+                    Vec::new()
+                } else {
+                    parse_dense(dense_part)?
+                };
+                TopologySpec::conv_net(conv, hidden, k)
+            }
+            None if body.split(',').all(|t| looks_conv(t.trim())) && !body.is_empty() => {
+                let conv = body
+                    .split(',')
+                    .map(|t| Self::parse_conv_token(s, t.trim()))
+                    .collect::<crate::Result<Vec<ConvStageSpec>>>()?;
+                TopologySpec::conv_net(conv, Vec::new(), k)
+            }
+            None => TopologySpec::mlp(parse_dense(body)?, k),
+        };
         spec.validate()?;
         Ok(spec)
     }
 
-    /// Build from a config tree's `[topology]` table (TOML or JSON).
+    /// Build from a config tree's `[topology]` table (TOML or JSON);
+    /// conv stages come from a `[[topology.conv]]` array of tables
+    /// (`channels` required, `ksize`/`pool` defaulting to 5/2).
     pub fn from_json(doc: &Json) -> crate::Result<TopologySpec> {
+        let conv = match doc.opt("conv") {
+            Some(v) => v
+                .as_array()?
+                .iter()
+                .map(|t| {
+                    Ok(ConvStageSpec {
+                        channels: t.get("channels")?.as_usize()?,
+                        ksize: t.opt("ksize").map(|v| v.as_usize()).transpose()?.unwrap_or(5),
+                        pool: t.opt("pool").map(|v| v.as_usize()).transpose()?.unwrap_or(2),
+                    })
+                })
+                .collect::<crate::Result<Vec<ConvStageSpec>>>()?,
+            None => Vec::new(),
+        };
         let hidden = doc
             .opt("hidden")
             .map(|v| v.as_usize_vec())
             .transpose()?
-            .unwrap_or_else(|| vec![128, 128]);
+            // a pure-MLP table defaults to the pi_mlp widths; a conv
+            // table defaults to conv-stages-then-head
+            .unwrap_or_else(|| {
+                if conv.is_empty() {
+                    vec![128, 128]
+                } else {
+                    Vec::new()
+                }
+            });
         let k = doc.opt("k").map(|v| v.as_usize()).transpose()?.unwrap_or(4);
-        let mut spec = TopologySpec::mlp(hidden, k);
+        let mut spec = if conv.is_empty() {
+            TopologySpec::mlp(hidden, k)
+        } else {
+            TopologySpec::conv_net(conv, hidden, k)
+        };
         if let Some(v) = doc.opt("name") {
             spec.name = v.as_str()?.to_string();
         }
@@ -143,6 +324,20 @@ impl TopologySpec {
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         m.insert("name".to_string(), Json::Str(self.name.clone()));
+        if !self.conv.is_empty() {
+            let stages: Vec<Json> = self
+                .conv
+                .iter()
+                .map(|c| {
+                    let mut s = std::collections::BTreeMap::new();
+                    s.insert("channels".to_string(), Json::Num(c.channels as f64));
+                    s.insert("ksize".to_string(), Json::Num(c.ksize as f64));
+                    s.insert("pool".to_string(), Json::Num(c.pool as f64));
+                    Json::Object(s)
+                })
+                .collect();
+            m.insert("conv".to_string(), Json::Array(stages));
+        }
         m.insert(
             "hidden".to_string(),
             Json::Array(self.hidden.iter().map(|&u| Json::Num(u as f64)).collect()),
@@ -153,23 +348,45 @@ impl TopologySpec {
         Json::Object(m)
     }
 
-    /// Number of compute layers (hidden maxout layers + softmax head) —
-    /// the graph's scaling-group row count.
+    /// Number of compute stages (conv stages + hidden maxout layers +
+    /// softmax head) — the graph's scaling-group row count.
     pub fn n_layers(&self) -> usize {
-        self.hidden.len() + 1
+        self.conv.len() + self.hidden.len() + 1
     }
 
     /// Sanity-check before spending a training run on it.
     pub fn validate(&self) -> crate::Result<()> {
-        if self.hidden.is_empty() {
-            bail!("topology '{}' has no hidden layers", self.name);
+        if self.conv.is_empty() && self.hidden.is_empty() {
+            bail!("topology '{}' has no conv stages and no hidden layers", self.name);
         }
         if self.hidden.len() > 16 {
             bail!("topology '{}': {} hidden layers (max 16)", self.name, self.hidden.len());
         }
+        if self.conv.len() > 8 {
+            bail!("topology '{}': {} conv stages (max 8)", self.name, self.conv.len());
+        }
         for &u in &self.hidden {
             if !(1..=8192).contains(&u) {
                 bail!("topology '{}': hidden width {u} out of range [1, 8192]", self.name);
+            }
+        }
+        for c in &self.conv {
+            if !(1..=1024).contains(&c.channels) {
+                bail!(
+                    "topology '{}': conv channels {} out of range [1, 1024]",
+                    self.name,
+                    c.channels
+                );
+            }
+            if c.ksize % 2 == 0 || !(1..=15).contains(&c.ksize) {
+                bail!(
+                    "topology '{}': conv ksize {} must be odd and in [1, 15] (SAME padding)",
+                    self.name,
+                    c.ksize
+                );
+            }
+            if !(1..=8).contains(&c.pool) {
+                bail!("topology '{}': pool {} out of range [1, 8]", self.name, c.pool);
             }
         }
         if !(1..=8).contains(&self.k) {
@@ -189,13 +406,30 @@ mod tests {
     #[test]
     fn builtin_specs_mirror_the_manifest_models() {
         let pi = TopologySpec::builtin("pi_mlp").unwrap();
+        assert!(pi.conv.is_empty());
         assert_eq!(pi.hidden, vec![128, 128]);
         assert_eq!(pi.k, 4);
         assert_eq!((pi.train_batch, pi.eval_batch), (64, 256));
         assert_eq!(pi.n_layers(), 3);
         let wide = TopologySpec::builtin("pi_mlp_wide").unwrap();
         assert_eq!(wide.hidden, vec![256, 256]);
-        assert!(TopologySpec::builtin("conv").is_none());
+        // the conv zoo mirrors python/compile/model.py's conv/conv32
+        let c = TopologySpec::builtin("conv").unwrap();
+        assert_eq!(
+            c.conv.iter().map(|s| s.channels).collect::<Vec<_>>(),
+            vec![8, 16, 16]
+        );
+        assert!(c.hidden.is_empty());
+        assert_eq!((c.k, c.n_layers()), (2, 4));
+        let pc = TopologySpec::builtin("pi_conv").unwrap();
+        assert_eq!(
+            pc.conv.iter().map(|s| s.channels).collect::<Vec<_>>(),
+            vec![16, 16, 24]
+        );
+        assert_eq!(pc.conv[0], ConvStageSpec { channels: 16, ksize: 5, pool: 2 });
+        let c32 = TopologySpec::builtin("conv32").unwrap();
+        assert_eq!(c32.conv, pc.conv);
+        assert!(TopologySpec::builtin("resnet").is_none());
     }
 
     #[test]
@@ -216,12 +450,58 @@ mod tests {
     }
 
     #[test]
+    fn cli_conv_forms_parse() {
+        // the full grammar: conv stages / dense part @ maxout pieces
+        let t = TopologySpec::parse_cli("c32k5p2,c64k5p2/128x2@k2").unwrap();
+        assert_eq!(
+            t.conv,
+            vec![
+                ConvStageSpec { channels: 32, ksize: 5, pool: 2 },
+                ConvStageSpec { channels: 64, ksize: 5, pool: 2 },
+            ]
+        );
+        assert_eq!(t.hidden, vec![128, 128]);
+        assert_eq!(t.k, 2);
+        assert_eq!(t.n_layers(), 5);
+        // conv-only (no dense part), with ksize/pool defaults
+        let t = TopologySpec::parse_cli("c8,c16p1").unwrap();
+        assert_eq!(
+            t.conv,
+            vec![
+                ConvStageSpec { channels: 8, ksize: 5, pool: 2 },
+                ConvStageSpec { channels: 16, ksize: 5, pool: 1 },
+            ]
+        );
+        assert!(t.hidden.is_empty());
+        // comma dense part after the slash
+        let t = TopologySpec::parse_cli("c8k3p2/64,32").unwrap();
+        assert_eq!(t.hidden, vec![64, 32]);
+        // a trailing slash is conv-only (empty dense part)
+        assert!(TopologySpec::parse_cli("c8/").unwrap().hidden.is_empty());
+        for bad in [
+            "c/128",    // missing channels
+            "c8q3/128", // bad stage suffix
+            "c8k4/128", // even ksize (SAME padding needs odd)
+            "c8p9/128", // pool out of range
+        ] {
+            assert!(TopologySpec::parse_cli(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
     fn json_round_trip_is_exact() {
         for spec in [
             TopologySpec::builtin("pi_mlp").unwrap(),
+            TopologySpec::builtin("pi_conv").unwrap(),
             TopologySpec::mlp(vec![64, 32, 16], 2),
+            TopologySpec::conv_net(
+                vec![ConvStageSpec { channels: 8, ksize: 3, pool: 2 }],
+                vec![32],
+                2,
+            ),
             TopologySpec {
                 name: "custom".into(),
+                conv: Vec::new(),
                 hidden: vec![48; 3],
                 k: 3,
                 train_batch: 32,
@@ -249,6 +529,32 @@ mod tests {
     }
 
     #[test]
+    fn toml_conv_array_of_tables_round_trips() {
+        let doc = crate::config::toml::parse(
+            "[topology]\nk = 2\nhidden = [32]\n\n\
+             [[topology.conv]]\nchannels = 8\nksize = 3\n\n\
+             [[topology.conv]]\nchannels = 16\npool = 1\n",
+        )
+        .unwrap();
+        let spec = TopologySpec::from_json(doc.get("topology").unwrap()).unwrap();
+        assert_eq!(
+            spec.conv,
+            vec![
+                ConvStageSpec { channels: 8, ksize: 3, pool: 2 },
+                ConvStageSpec { channels: 16, ksize: 5, pool: 1 },
+            ]
+        );
+        assert_eq!(spec.hidden, vec![32]);
+        assert_eq!(spec.n_layers(), 4);
+        assert_eq!(TopologySpec::from_json(&spec.to_json()).unwrap(), spec);
+        // a conv table without hidden widths defaults to conv-then-head
+        let doc = crate::config::toml::parse("[[topology.conv]]\nchannels = 8\n").unwrap();
+        let spec = TopologySpec::from_json(doc.get("topology").unwrap()).unwrap();
+        assert!(spec.hidden.is_empty());
+        assert_eq!(spec.conv.len(), 1);
+    }
+
+    #[test]
     fn validation_rejects_degenerate_topologies() {
         assert!(TopologySpec::mlp(vec![], 4).validate().is_err());
         assert!(TopologySpec::mlp(vec![128], 0).validate().is_err());
@@ -258,5 +564,27 @@ mod tests {
         let mut t = TopologySpec::mlp(vec![16], 2);
         t.train_batch = 0;
         assert!(t.validate().is_err());
+        // conv-only is valid; degenerate conv stages are not
+        let stage = |channels, ksize, pool| ConvStageSpec { channels, ksize, pool };
+        assert!(TopologySpec::conv_net(vec![stage(8, 3, 2)], vec![], 2).validate().is_ok());
+        assert!(TopologySpec::conv_net(vec![stage(0, 3, 2)], vec![], 2).validate().is_err());
+        assert!(TopologySpec::conv_net(vec![stage(8, 4, 2)], vec![], 2).validate().is_err());
+        assert!(TopologySpec::conv_net(vec![stage(8, 3, 0)], vec![], 2).validate().is_err());
+        assert!(TopologySpec::conv_net(vec![stage(8, 3, 2); 9], vec![], 2)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn conv_stage_out_shape_follows_same_conv_plus_pool() {
+        let s = ConvStageSpec { channels: 16, ksize: 5, pool: 2 };
+        let out = s.out_shape(&Shape::Spatial { h: 28, w: 28, c: 1 }).unwrap();
+        assert_eq!(out, Shape::Spatial { h: 14, w: 14, c: 16 });
+        // VALID pooling floors odd extents, like L2's reduce_window
+        let out = s.out_shape(&Shape::Spatial { h: 7, w: 7, c: 16 }).unwrap();
+        assert_eq!(out, Shape::Spatial { h: 3, w: 3, c: 16 });
+        assert!(s.out_shape(&Shape::Flat(784)).is_err());
+        let deep = ConvStageSpec { channels: 4, ksize: 3, pool: 8 };
+        assert!(deep.out_shape(&Shape::Spatial { h: 4, w: 4, c: 1 }).is_err());
     }
 }

@@ -239,7 +239,10 @@ mod tests {
         assert_eq!(s.jobs(), 1);
         assert_eq!(s.backend_name().unwrap(), "native");
         assert!(s.supports_model("pi_mlp").unwrap());
-        assert!(!s.supports_model("conv").unwrap());
+        // conv topologies run natively since the shape-aware layer graph
+        assert!(s.supports_model("conv").unwrap());
+        assert!(s.supports_model("pi_conv").unwrap());
+        assert!(!s.supports_model("resnet").unwrap());
         let a = s.run(tiny_cfg("sess-a")).unwrap();
         let b = s.run(tiny_cfg("sess-b")).unwrap();
         assert_eq!(a.label, "sess-a");
@@ -275,8 +278,8 @@ mod tests {
     fn sweep_point_failure_names_the_point() {
         let baseline = tiny_cfg("fail-base");
         let mut bad = tiny_cfg("fail-point");
-        bad.model = "conv".into(); // native backend cannot run it
-        bad.data.dataset = "digits".into();
+        bad.model = "conv".into(); // conv stages cannot consume the flat
+        bad.data.dataset = "clusters".into(); // clusters dataset: validate fails
         let points = vec![SweepPoint { label: "bad".into(), cfg: bad }];
         let mut s = Session::new(BackendSpec::native()).with_jobs(2);
         let err = s.sweep(&baseline, &points).unwrap_err();

@@ -13,7 +13,13 @@ use super::{preprocess, Dataset, Split};
 use crate::tensor::{Pcg32, Tensor};
 
 pub const SIDE: usize = 32;
-const CH: usize = 3;
+
+/// Colour channels. **Layout contract**: every example is row-major
+/// H×W×C (NHWC once batched) — pixel `(r, c)` channel `ch` lives at
+/// flat index `(r * SIDE + c) * CH + ch`. `data::dataset_shape` reports
+/// exactly this geometry and the conv stages consume it unchanged; MLP
+/// consumers see the same bytes flattened to `SIDE * SIDE * CH`.
+pub const CH: usize = 3;
 
 /// Class palette: distinct base colours (r, g, b in [0,1]).
 const PALETTE: [(f32, f32, f32); 10] = [

@@ -29,7 +29,7 @@ pub mod svhn_like;
 
 pub use batcher::Batcher;
 
-use crate::tensor::{Pcg32, Tensor};
+use crate::tensor::{Pcg32, Shape, Tensor};
 
 /// An in-memory labelled dataset split.
 #[derive(Clone, Debug)]
@@ -75,16 +75,34 @@ pub struct Dataset {
     pub n_classes: usize,
 }
 
-/// Static per-dataset dimensions `(example_len, n_classes)` — what a
-/// topology needs to size its input/output layers *before* any data is
+/// Static per-dataset signal shape `(example Shape, n_classes)` — what
+/// a topology needs to realize its layers *before* any data is
 /// generated (model realization happens ahead of dataset synthesis).
+/// Spatial datasets report their row-major H×W×C geometry (what the
+/// conv stages consume); `clusters` is the one genuinely flat source.
 /// Must agree with what [`Dataset::generate`] produces; a test pins it.
-pub fn dataset_dims(name: &str) -> crate::Result<(usize, usize)> {
+pub fn dataset_shape(name: &str) -> crate::Result<(Shape, usize)> {
     match name {
-        "digits" | "clusters" => Ok((784, 10)),
-        "cifar_like" | "svhn_like" => Ok((32 * 32 * 3, 10)),
+        "digits" => Ok((Shape::Spatial { h: digits::SIDE, w: digits::SIDE, c: 1 }, 10)),
+        "clusters" => Ok((Shape::Flat(784), 10)),
+        "cifar_like" => Ok((
+            Shape::Spatial { h: cifar_like::SIDE, w: cifar_like::SIDE, c: cifar_like::CH },
+            10,
+        )),
+        "svhn_like" => Ok((
+            Shape::Spatial { h: svhn_like::SIDE, w: svhn_like::SIDE, c: svhn_like::CH },
+            10,
+        )),
         other => crate::bail!("unknown dataset '{other}'"),
     }
+}
+
+/// Flat per-dataset dimensions `(example_len, n_classes)` — the
+/// [`dataset_shape`] view MLP consumers see (e.g. `cifar_like` as a
+/// 3072-d vector).
+pub fn dataset_dims(name: &str) -> crate::Result<(usize, usize)> {
+    let (shape, n_classes) = dataset_shape(name)?;
+    Ok((shape.len(), n_classes))
 }
 
 impl Dataset {
@@ -158,6 +176,25 @@ mod tests {
             assert_eq!(d_in, ds.train.example_len(), "{name}");
             assert_eq!(n_classes, ds.n_classes, "{name}");
         }
+    }
+
+    #[test]
+    fn static_shapes_match_generated_data() {
+        let rng = Pcg32::seeded(12);
+        for name in ["digits", "clusters", "cifar_like", "svhn_like"] {
+            let (shape, n_classes) = dataset_shape(name).unwrap();
+            let ds = Dataset::generate(name, 4, 2, &rng).unwrap();
+            assert_eq!(shape.dims(), ds.train.example_shape(), "{name}");
+            assert_eq!(n_classes, ds.n_classes, "{name}");
+            // dataset_dims is exactly the flattened view of the shape
+            assert_eq!(dataset_dims(name).unwrap().0, shape.len(), "{name}");
+        }
+        assert_eq!(
+            dataset_shape("cifar_like").unwrap().0,
+            Shape::Spatial { h: 32, w: 32, c: 3 }
+        );
+        assert_eq!(dataset_shape("clusters").unwrap().0, Shape::Flat(784));
+        assert!(dataset_shape("imagenet").is_err());
     }
 
     #[test]

@@ -13,7 +13,12 @@ use super::{glyphs, preprocess, Dataset, Split};
 use crate::tensor::{Pcg32, Tensor};
 
 pub const SIDE: usize = 32;
-const CH: usize = 3;
+
+/// Colour channels. **Layout contract**: every example is row-major
+/// H×W×C (NHWC once batched) — pixel `(r, c)` channel `ch` lives at
+/// flat index `(r * SIDE + c) * CH + ch`, matching `cifar_like` and
+/// what `data::dataset_shape` reports to the conv stages.
+pub const CH: usize = 3;
 
 fn render_example(class: usize, rng: &mut Pcg32) -> Vec<f32> {
     let d = SIDE * SIDE;

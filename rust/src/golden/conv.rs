@@ -1,0 +1,389 @@
+//! Conv lowering: im2col patch extraction plus direct nested-loop
+//! reference kernels for the quantized maxout-conv stages.
+//!
+//! The graph's [`MaxoutConv2d`](super::MaxoutConv2d) layer lowers every
+//! convolution onto the existing fused quantize-aware GEMM kernels
+//! ([`crate::tensor::ops::matmul_sl_q_into`] & co.): [`im2col_into`]
+//! materializes the SAME-padded stride-1 patch matrix
+//! `[B·H·W, ksize²·C_in]` once per step (into a per-layer scratch buffer
+//! reused across steps), and each maxout filter's `[patch_len, C_out]`
+//! weight slab rides one GEMM with the Z/DW quantization fused into the
+//! tile epilogues — so every conv multiply passes through exactly the
+//! same low-precision machinery as the dense layers.
+//!
+//! **The bit-identity invariant.** The direct kernels here
+//! ([`conv2d_direct_q`], [`conv2d_dw_direct_q`]) are nested-loop
+//! references that accumulate each output element in the *same order*
+//! as the im2col-lowered GEMMs (ascending `(kh, kw, c_in)` for the
+//! forward product, ascending patch-row for the weight gradient) and
+//! skip zero inputs exactly where the blocked kernels do (`aik == 0.0`
+//! fast-path — which is also how the GEMM treats the padding zeros the
+//! patch matrix materializes). Both paths therefore produce **exact
+//! `u32`-identical outputs and identical [`QuantStats`]** for every
+//! arithmetic, every rounding mode and any thread count —
+//! `tests/conv_parity.rs` enforces it, and `bench_perf`'s `conv train
+//! step` rows track the im2col speedup against this reference.
+
+use crate::arith::{QuantEpilogue, QuantStats};
+
+/// Geometry of one SAME-padded, stride-1 conv stage (odd `ksize`).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels per maxout filter.
+    pub c_out: usize,
+    /// Square kernel side (odd; SAME padding is `ksize / 2`).
+    pub ksize: usize,
+}
+
+impl ConvGeom {
+    /// SAME padding on each side.
+    pub fn pad(&self) -> usize {
+        self.ksize / 2
+    }
+
+    /// Flattened patch length `ksize² · c_in` (the GEMM's k dimension).
+    pub fn patch_len(&self) -> usize {
+        self.ksize * self.ksize * self.c_in
+    }
+
+    /// Patch-matrix rows for a batch: one per output pixel.
+    pub fn rows(&self, batch: usize) -> usize {
+        batch * self.h * self.w
+    }
+}
+
+/// Materialize the SAME-padded stride-1 patch matrix: row
+/// `(b·H + y)·W + x` holds the receptive field of output pixel
+/// `(b, y, x)` in ascending `(kh, kw, c_in)` order, with out-of-bounds
+/// taps written as literal zeros. `x` is `[B, H, W, C_in]` row-major;
+/// `out` must be `rows(batch) · patch_len()` long and is fully
+/// overwritten.
+pub fn im2col_into(x: &[f32], batch: usize, g: &ConvGeom, out: &mut [f32]) {
+    let (h, w, c_in, ks) = (g.h, g.w, g.c_in, g.ksize);
+    let pad = g.pad();
+    let plen = g.patch_len();
+    assert_eq!(x.len(), batch * h * w * c_in, "im2col input size");
+    assert_eq!(out.len(), g.rows(batch) * plen, "im2col output size");
+    for b in 0..batch {
+        for y in 0..h {
+            for xx in 0..w {
+                let row = ((b * h + y) * w + xx) * plen;
+                for kh in 0..ks {
+                    let sy = (y + kh) as isize - pad as isize;
+                    for kw in 0..ks {
+                        let sx = (xx + kw) as isize - pad as isize;
+                        let dst = &mut out
+                            [row + (kh * ks + kw) * c_in..row + (kh * ks + kw + 1) * c_in];
+                        if sy < 0 || sy >= h as isize || sx < 0 || sx >= w as isize {
+                            dst.fill(0.0);
+                        } else {
+                            let src = ((b * h + sy as usize) * w + sx as usize) * c_in;
+                            dst.copy_from_slice(&x[src..src + c_in]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col_into`]: scatter-accumulate a patch-space gradient
+/// `[B·H·W, patch_len]` back onto the input image gradient
+/// `[B, H, W, C_in]` (added onto `dx`). Gather-formulated — each `dx`
+/// element sums its `(kh, kw)` taps in ascending order — so the result
+/// is deterministic and independent of any tiling.
+pub fn col2im_add(dpatch: &[f32], batch: usize, g: &ConvGeom, dx: &mut [f32]) {
+    let (h, w, c_in, ks) = (g.h, g.w, g.c_in, g.ksize);
+    let pad = g.pad();
+    let plen = g.patch_len();
+    assert_eq!(dpatch.len(), g.rows(batch) * plen, "col2im patch size");
+    assert_eq!(dx.len(), batch * h * w * c_in, "col2im output size");
+    for b in 0..batch {
+        for u in 0..h {
+            for v in 0..w {
+                let dst = &mut dx[((b * h + u) * w + v) * c_in..((b * h + u) * w + v + 1) * c_in];
+                for kh in 0..ks {
+                    // the output pixel whose tap (kh, kw) reads (u, v)
+                    let y = (u + pad) as isize - kh as isize;
+                    if y < 0 || y >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..ks {
+                        let xx = (v + pad) as isize - kw as isize;
+                        if xx < 0 || xx >= w as isize {
+                            continue;
+                        }
+                        let row = ((b * h + y as usize) * w + xx as usize) * plen
+                            + (kh * ks + kw) * c_in;
+                        for (o, &p) in dst.iter_mut().zip(&dpatch[row..row + c_in]) {
+                            *o += p;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run a quantization epilogue over a conv output tile exactly as the
+/// fused GEMM kernels do: add the bias row (if any) to every `c_out`
+/// chunk, then quantize in place with stats.
+fn tile_epilogue(
+    dst: &mut [f32],
+    c_out: usize,
+    bias: Option<&[f32]>,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    if let Some(bs) = bias {
+        for row in dst.chunks_mut(c_out) {
+            for (o, &bv) in row.iter_mut().zip(bs) {
+                *o += bv;
+            }
+        }
+    }
+    epi.run(dst, 0)
+}
+
+/// Direct nested-loop reference for one filter's forward conv:
+/// `dst[(b,y,x), o] += Σ_{kh,kw,ci} x[b, y+kh-pad, x+kw-pad, ci] ·
+/// w[(kh,kw,ci), o]`, then bias add + quantization epilogue over the
+/// whole tile. Accumulation visits `(kh, kw, ci)` ascending and skips
+/// zero input taps — the exact element order (and zero fast-path) of
+/// the im2col-lowered GEMM, so the two are bit-identical. `dst` is
+/// accumulated onto (pass zeros for a plain product).
+pub fn conv2d_direct_q(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    batch: usize,
+    g: &ConvGeom,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    let (h, ww, c_in, c_out, ks) = (g.h, g.w, g.c_in, g.c_out, g.ksize);
+    let pad = g.pad();
+    assert_eq!(x.len(), batch * h * ww * c_in, "conv2d input size");
+    assert_eq!(w.len(), g.patch_len() * c_out, "conv2d weight size");
+    assert_eq!(dst.len(), g.rows(batch) * c_out, "conv2d output size");
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), c_out, "conv2d bias size");
+    }
+    for b in 0..batch {
+        for y in 0..h {
+            for xx in 0..ww {
+                let orow = &mut dst[((b * h + y) * ww + xx) * c_out
+                    ..((b * h + y) * ww + xx + 1) * c_out];
+                for kh in 0..ks {
+                    let sy = (y + kh) as isize - pad as isize;
+                    if sy < 0 || sy >= h as isize {
+                        continue; // padding taps are zero: the GEMM skips them too
+                    }
+                    for kw in 0..ks {
+                        let sx = (xx + kw) as isize - pad as isize;
+                        if sx < 0 || sx >= ww as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * ww + sx as usize) * c_in;
+                        for (ci, &v) in x[src..src + c_in].iter().enumerate() {
+                            if v == 0.0 {
+                                continue; // matches the blocked kernels' zero fast-path
+                            }
+                            let wrow = &w[((kh * ks + kw) * c_in + ci) * c_out
+                                ..((kh * ks + kw) * c_in + ci + 1) * c_out];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += v * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    tile_epilogue(dst, c_out, bias, epi)
+}
+
+/// Direct nested-loop reference for one filter's weight gradient:
+/// `dst[(kh,kw,ci), o] += Σ_rows patch[row, (kh,kw,ci)] · dz[row, o]`
+/// without materializing the patch matrix, then the quantization
+/// epilogue over the tile. Accumulates over patch rows ascending with
+/// the zero fast-path — the element order of `matmul_tn_sl_q` on the
+/// im2col matrix, so the two are bit-identical.
+pub fn conv2d_dw_direct_q(
+    x: &[f32],
+    dz: &[f32],
+    dst: &mut [f32],
+    batch: usize,
+    g: &ConvGeom,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    let (h, w, c_in, c_out, ks) = (g.h, g.w, g.c_in, g.c_out, g.ksize);
+    let pad = g.pad();
+    assert_eq!(x.len(), batch * h * w * c_in, "conv2d_dw input size");
+    assert_eq!(dz.len(), g.rows(batch) * c_out, "conv2d_dw dz size");
+    assert_eq!(dst.len(), g.patch_len() * c_out, "conv2d_dw output size");
+    for b in 0..batch {
+        for y in 0..h {
+            for xx in 0..w {
+                let dzrow = &dz[((b * h + y) * w + xx) * c_out
+                    ..((b * h + y) * w + xx + 1) * c_out];
+                for kh in 0..ks {
+                    let sy = (y + kh) as isize - pad as isize;
+                    if sy < 0 || sy >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..ks {
+                        let sx = (xx + kw) as isize - pad as isize;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + sy as usize) * w + sx as usize) * c_in;
+                        for (ci, &v) in x[src..src + c_in].iter().enumerate() {
+                            if v == 0.0 {
+                                continue;
+                            }
+                            let orow = &mut dst[((kh * ks + kw) * c_in + ci) * c_out
+                                ..((kh * ks + kw) * c_in + ci + 1) * c_out];
+                            for (o, &gv) in orow.iter_mut().zip(dzrow) {
+                                *o += v * gv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    tile_epilogue(dst, c_out, None, epi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::Quantizer;
+    use crate::tensor::{ops, Pcg32};
+
+    fn geom() -> ConvGeom {
+        ConvGeom { h: 5, w: 4, c_in: 2, c_out: 3, ksize: 3 }
+    }
+
+    /// Random image with ~15% exact zeros so the zero fast-paths fire.
+    fn image(g: &ConvGeom, batch: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..batch * g.h * g.w * g.c_in)
+            .map(|_| {
+                if rng.uniform() < 0.15 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn im2col_extracts_padded_patches() {
+        // 2x2 single-channel image, 3x3 kernel: the (0,0) patch is the
+        // image's top-left neighborhood with a zero border.
+        let g = ConvGeom { h: 2, w: 2, c_in: 1, c_out: 1, ksize: 3 };
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut patches = vec![f32::NAN; g.rows(1) * g.patch_len()];
+        im2col_into(&x, 1, &g, &mut patches);
+        // output pixel (0,0): rows (kh,kw) over [-1..1]^2
+        assert_eq!(
+            &patches[..9],
+            &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]
+        );
+        // output pixel (1,1): centered on value 4
+        assert_eq!(
+            &patches[27..36],
+            &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn direct_conv_matches_im2col_gemm_bitwise() {
+        let g = geom();
+        let batch = 3;
+        let x = image(&g, batch, 1);
+        let mut rng = Pcg32::seeded(2);
+        let w: Vec<f32> = (0..g.patch_len() * g.c_out).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..g.c_out).map(|_| rng.normal()).collect();
+        let epi = QuantEpilogue::new(Quantizer::float32());
+
+        let mut direct = vec![0.0f32; g.rows(batch) * g.c_out];
+        let st_d = conv2d_direct_q(&x, &w, Some(&bias), &mut direct, batch, &g, epi);
+
+        let mut patches = vec![0.0f32; g.rows(batch) * g.patch_len()];
+        im2col_into(&x, batch, &g, &mut patches);
+        let mut lowered = vec![0.0f32; g.rows(batch) * g.c_out];
+        let st_g = ops::matmul_sl_q_into(
+            &patches,
+            &w,
+            Some(&bias),
+            &mut lowered,
+            g.rows(batch),
+            g.patch_len(),
+            g.c_out,
+            epi,
+        );
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&direct), bits(&lowered));
+        assert_eq!(st_d, st_g);
+    }
+
+    #[test]
+    fn direct_dw_matches_patch_gemm_bitwise() {
+        let g = geom();
+        let batch = 3;
+        let x = image(&g, batch, 3);
+        let mut rng = Pcg32::seeded(4);
+        let dz: Vec<f32> = (0..g.rows(batch) * g.c_out).map(|_| rng.normal()).collect();
+        let epi = QuantEpilogue::new(Quantizer::float32());
+
+        let mut direct = vec![0.0f32; g.patch_len() * g.c_out];
+        let st_d = conv2d_dw_direct_q(&x, &dz, &mut direct, batch, &g, epi);
+
+        let mut patches = vec![0.0f32; g.rows(batch) * g.patch_len()];
+        im2col_into(&x, batch, &g, &mut patches);
+        let mut lowered = vec![0.0f32; g.patch_len() * g.c_out];
+        let st_g = ops::matmul_tn_sl_q_into(
+            &patches,
+            &dz,
+            &mut lowered,
+            g.rows(batch),
+            g.patch_len(),
+            g.c_out,
+            epi,
+        );
+        let bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&direct), bits(&lowered));
+        assert_eq!(st_d, st_g);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // Small-integer values keep every f32 sum exact, so the adjoint
+        // identity <im2col(x), p> == <x, col2im(p)> holds bit-for-bit.
+        let g = ConvGeom { h: 3, w: 3, c_in: 2, c_out: 1, ksize: 3 };
+        let batch = 2;
+        let mut rng = Pcg32::seeded(5);
+        let x: Vec<f32> = (0..batch * g.h * g.w * g.c_in)
+            .map(|_| rng.below(7) as f32 - 3.0)
+            .collect();
+        let p: Vec<f32> = (0..g.rows(batch) * g.patch_len())
+            .map(|_| rng.below(7) as f32 - 3.0)
+            .collect();
+        let mut patches = vec![0.0f32; p.len()];
+        im2col_into(&x, batch, &g, &mut patches);
+        let lhs: f64 = patches.iter().zip(&p).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut dx = vec![0.0f32; x.len()];
+        col2im_add(&p, batch, &g, &mut dx);
+        let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| (a * b) as f64).sum();
+        assert_eq!(lhs, rhs);
+    }
+}

@@ -1,12 +1,33 @@
 //! The layer-graph executor: topology as data, quantization sites
-//! derived from the graph.
+//! derived from the graph, signals threaded as shape-aware tensors.
 //!
 //! The golden model used to be one hand-inlined 2-hidden-layer maxout
 //! step (`MlpShape::pi_mlp` pinned the whole topology). This module
-//! decomposes it into a [`Layer`] trait with three concrete layers —
-//! [`MaxoutDense`], [`SoftmaxHead`], [`DropoutLayer`] — assembled into a
-//! [`Network`] from a [`TopologySpec`], so depth/width sweeps and
-//! CIFAR/SVHN-class MLP workloads are config changes, not code changes.
+//! decomposes it into a [`Layer`] trait — dense layers
+//! ([`MaxoutDense`], [`SoftmaxHead`]), spatial layers ([`MaxoutConv2d`],
+//! [`MaxPool2d`], [`Flatten`]) and [`DropoutLayer`] — assembled into a
+//! [`Network`] from a [`TopologySpec`], so depth/width sweeps *and* the
+//! paper's CIFAR-10/SVHN-class maxout-conv workloads are config
+//! changes, not code changes.
+//!
+//! **Signals are shape-aware.** Every layer declares its output
+//! [`Shape`] (`Flat(d)` or `Spatial{h,w,c}`) as a function of its input
+//! shape via [`Layer::out_shape`];
+//! [`Network::from_topology_shaped`] chains the contract from the
+//! dataset's shape (`data::dataset_shape`) down to the head at
+//! construction time, so a conv stage over a flat dataset or an
+//! over-pooled image is a config error, never a runtime panic.
+//! Activations flow as `[B, ...shape.dims()]` tensors (NHWC for
+//! spatial signals).
+//!
+//! **Conv rides the fused GEMM epilogues.** [`MaxoutConv2d`] lowers
+//! each stage by im2col ([`super::conv`]): the SAME-padded stride-1
+//! patch matrix is built once per step into a per-layer scratch buffer
+//! (allocated on the first step of a run, reused afterwards), and each
+//! maxout filter's weight slab rides `matmul_sl_q_into` /
+//! `matmul_tn_sl_q_into` with the Z/DW quantization fused into the
+//! tile epilogues — bit-identical to the direct nested-loop reference
+//! kernels (`StepOptions::conv_direct`, `tests/conv_parity.rs`).
 //!
 //! **The bit-identity contract.** The graph executor is not "close to"
 //! the monolithic step it replaced — it is bit-identical on the builtin
@@ -19,20 +40,27 @@
 //! 1. **Site order.** [`GoldenQ`] numbers quantization sites in call
 //!    order (stochastic-rounding streams key on the site index). The
 //!    graph visits sites exactly as the monolith did: forward
-//!    `Z,H` per maxout layer then the head's `Z`; backward `DZ,DW,DB`
-//!    per compute layer top-down, with the produced `dx` quantized as
-//!    the *next compute layer below*'s `DH` group **before** any
-//!    intervening dropout mask is applied; update `w` then `b` per
-//!    layer bottom-up, velocity before parameter.
+//!    `Z,H` per maxout stage (for conv stages `Z` in the conv layer and
+//!    `H` in its pooling partner, mirroring L2's conv→Q_Z→max→pool→Q_H)
+//!    then the head's `Z`; backward `DZ,DW,DB` per compute layer
+//!    top-down, with the produced `dx` quantized as the *next compute
+//!    layer below*'s `DH` group **before** any intervening dropout mask
+//!    is applied (pooling/flatten backward is pure routing and owns no
+//!    sites); update `w` then `b` per layer bottom-up, velocity before
+//!    parameter.
 //! 2. **Group table.** Scaling-factor groups stay layer-major
 //!    (`group_index(row, kind) = row * N_KINDS + kind`) where `row` is
-//!    the compute layer's position in the graph (dropout layers own no
-//!    groups). [`Network::n_groups`] is therefore *derived from the
-//!    graph* and is what
-//!    [`ScaleController::fixed`]/[`ScaleController::dynamic`] take.
+//!    the compute *stage*'s position in the graph (a conv layer and its
+//!    pooling partner share one row; dropout/flatten own none).
+//!    [`Network::n_groups`] is therefore *derived from the graph* and
+//!    is what [`ScaleController::fixed`]/[`ScaleController::dynamic`]
+//!    take — per-conv-layer dynamic scales need zero controller
+//!    changes.
 //! 3. **RNG draw order.** Dropout masks draw from one stream in forward
-//!    graph order (input mask first, then after each hidden layer), so
-//!    the graph replays the monolith's masks bit-for-bit.
+//!    graph order (input mask first, then after each stage), so the
+//!    graph replays the monolith's masks bit-for-bit.
+
+use std::cell::RefCell;
 
 use crate::arith::{QuantStats, RoundMode};
 use crate::config::TopologySpec;
@@ -40,15 +68,16 @@ use crate::coordinator::ScaleController;
 use crate::runtime::manifest::{
     KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z, N_KINDS,
 };
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Shape, Tensor};
 
+use super::conv::{self, ConvGeom};
 use super::{
     apply_mask, Dropout, dropout_mask, GoldenOut, GoldenQ, MlpShape, Params,
     StepOptions, STOCHASTIC_SITE_SEED,
 };
 
 /// Per-step state a layer saves in `forward` for its `backward`. A
-/// closed enum instead of `Box<dyn Any>`: the three layer kinds are a
+/// closed enum instead of `Box<dyn Any>`: the layer kinds are a
 /// deliberate vocabulary, and the variants keep tensor moves explicit.
 pub enum Cache {
     /// Maxout: the (possibly dropout-masked) input + winning filter per
@@ -58,6 +87,16 @@ pub enum Cache {
     Head { x: Tensor },
     /// Dropout: the drawn mask (`None` = identity this step).
     Mask(Option<Vec<f32>>),
+    /// Conv: the (possibly dropout-masked) `[B, H, W, C]` input +
+    /// winning filter per `[B·H·W, C_out]` output element. The im2col
+    /// patch matrix itself stays in the layer's scratch buffer between
+    /// forward and backward of the same step.
+    Conv { x: Tensor, amax: Vec<u8> },
+    /// Max pool: the input tensor shape + the flat input index of each
+    /// window's argmax (routing targets for backward).
+    Pool { in_shape: Vec<usize>, idx: Vec<u32> },
+    /// Flatten: the spatial input shape to restore in backward.
+    Flat { in_shape: Vec<usize> },
 }
 
 /// Where a [`DropoutLayer`] reads its rate from ([`StepOptions`] carries
@@ -118,7 +157,9 @@ pub trait Layer {
     fn describe(&self) -> String;
 
     /// The scaling-group row this layer's sites record under; `None`
-    /// for stateless layers with no quantization sites (dropout).
+    /// for stateless layers with no quantization sites (dropout,
+    /// flatten). A [`MaxPool2d`] reports its conv partner's row: the
+    /// stage's `H` site lives on the pool side of the split.
     fn group_row(&self) -> Option<usize>;
 
     /// Number of parameter tensors this layer owns (manifest order).
@@ -126,8 +167,12 @@ pub trait Layer {
         0
     }
 
-    /// Output feature width given the input feature width.
-    fn out_dim(&self, d_in: usize) -> usize;
+    /// Output signal shape given the input signal shape — the
+    /// shape-aware contract [`Network::from_topology_shaped`] chains
+    /// through the whole graph at construction time. Errors are config
+    /// errors (dense layer fed a spatial signal, conv fed a flat one,
+    /// pooling below one pixel).
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape>;
 
     /// Consume the layer input, produce its output plus whatever the
     /// backward pass needs. Quantization sites register against `q` in
@@ -229,8 +274,13 @@ impl Layer for MaxoutDense {
         2
     }
 
-    fn out_dim(&self, _d_in: usize) -> usize {
-        self.units
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        crate::ensure!(
+            matches!(in_shape, Shape::Flat(_)),
+            "{}: needs a flat input, got {in_shape} (insert a flatten stage)",
+            self.describe()
+        );
+        Ok(Shape::Flat(self.units))
     }
 
     fn forward(
@@ -418,8 +468,13 @@ impl Layer for SoftmaxHead {
         2
     }
 
-    fn out_dim(&self, _d_in: usize) -> usize {
-        self.n_classes
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        crate::ensure!(
+            matches!(in_shape, Shape::Flat(_)),
+            "{}: needs a flat input, got {in_shape} (insert a flatten stage)",
+            self.describe()
+        );
+        Ok(Shape::Flat(self.n_classes))
     }
 
     fn forward(
@@ -559,8 +614,8 @@ impl Layer for DropoutLayer {
         None
     }
 
-    fn out_dim(&self, d_in: usize) -> usize {
-        d_in
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        Ok(*in_shape)
     }
 
     fn forward(
@@ -592,33 +647,492 @@ impl Layer for DropoutLayer {
 }
 
 // ---------------------------------------------------------------------------
+// MaxoutConv2d
+// ---------------------------------------------------------------------------
+
+/// Per-run scratch for a conv layer: the im2col patch matrix (filled in
+/// forward, read back by the same step's backward) and the summed
+/// patch-space gradient. Allocated on the first step of a run and
+/// reused afterwards — the buffers are the layer's, not the step's.
+#[derive(Default)]
+struct ConvScratch {
+    patches: Vec<f32>,
+    dpatch: Vec<f32>,
+    /// One filter's patch-space gradient (the NT product's destination).
+    dpj: Vec<f32>,
+}
+
+/// One maxout convolutional stage's *linear* half: SAME-padded stride-1
+/// conv per maxout filter, `z_j = im2col(x) @ w_j + b_j` (Z group, one
+/// logical site across all `k` filter tiles, fused into the GEMM
+/// epilogues exactly like [`MaxoutDense`]'s), then `m = max_j z_j` over
+/// the filters. The stage's spatial max pool + `H` quantization live in
+/// its [`MaxPool2d`] partner (same group row), mirroring the L2 conv
+/// stage's `conv → Q_Z → max_k → pool → Q_H` order. Params:
+/// `w [k, ksize²·C_in, C_out]` (the im2col-lowered HWIO slab, so the
+/// rank-3 max-norm path constrains each output channel's true conv
+/// fan-in), `b [k, C_out]`.
+pub struct MaxoutConv2d {
+    pub c_out: usize,
+    pub k: usize,
+    /// Square kernel side; odd (SAME padding = `ksize / 2`).
+    pub ksize: usize,
+    /// This stage's row in the layer-major group table.
+    pub group: usize,
+    scratch: RefCell<ConvScratch>,
+}
+
+impl MaxoutConv2d {
+    pub fn new(c_out: usize, k: usize, ksize: usize, group: usize) -> MaxoutConv2d {
+        MaxoutConv2d { c_out, k, ksize, group, scratch: RefCell::new(ConvScratch::default()) }
+    }
+
+    /// Geometry for a concrete `[B, H, W, C]` input.
+    fn geom(&self, x: &Tensor) -> (usize, ConvGeom) {
+        let s = x.shape();
+        assert_eq!(s.len(), 4, "{}: input must be [B, H, W, C]", self.describe());
+        (
+            s[0],
+            ConvGeom { h: s[1], w: s[2], c_in: s[3], c_out: self.c_out, ksize: self.ksize },
+        )
+    }
+}
+
+impl Layer for MaxoutConv2d {
+    fn describe(&self) -> String {
+        format!("maxconv({}x{}k{})@l{}", self.c_out, self.k, self.ksize, self.group)
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        Some(self.group)
+    }
+
+    fn n_params(&self) -> usize {
+        2
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        let Shape::Spatial { h, w, .. } = *in_shape else {
+            crate::bail!(
+                "{}: needs a spatial input, got {in_shape} (conv topologies require an \
+                 image dataset)",
+                self.describe()
+            );
+        };
+        crate::ensure!(
+            self.ksize % 2 == 1,
+            "{}: SAME padding needs an odd kernel size",
+            self.describe()
+        );
+        Ok(Shape::Spatial { h, w, c: self.c_out })
+    }
+
+    fn forward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        _drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let (w, b) = (&params[0], &params[1]);
+        let (batch, geom) = self.geom(&x);
+        let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        assert_eq!(k, self.k, "{}: filter count", self.describe());
+        assert_eq!(plen, geom.patch_len(), "{}: patch length", self.describe());
+        let rows = geom.rows(batch);
+
+        // z for every filter, quantized as ONE logical site: each
+        // filter's [rows, C_out] tile rides one fused GEMM over the
+        // shared patch matrix (base = the filter's offset in the
+        // [k, rows, C_out] tensor) — identical per-element index stream
+        // to one whole-tensor sweep, and bit-identical to the direct
+        // nested-loop reference (q.conv_direct).
+        let mut zq = Tensor::zeros(&[k, rows, c_out]);
+        let epi = q.epilogue(self.group, KIND_Z);
+        let mut zst = QuantStats::default();
+        if q.conv_direct {
+            for j in 0..k {
+                let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
+                let brow = &b.data()[j * c_out..(j + 1) * c_out];
+                let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
+                zst.merge(conv::conv2d_direct_q(
+                    x.data(),
+                    wj,
+                    Some(brow),
+                    dst,
+                    batch,
+                    &geom,
+                    epi.with_base((j * rows * c_out) as u64),
+                ));
+            }
+        } else {
+            let mut scratch = self.scratch.borrow_mut();
+            scratch.patches.resize(rows * plen, 0.0);
+            conv::im2col_into(x.data(), batch, &geom, &mut scratch.patches);
+            for j in 0..k {
+                let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
+                let brow = &b.data()[j * c_out..(j + 1) * c_out];
+                let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
+                if q.fused {
+                    zst.merge(ops::matmul_sl_q_into(
+                        &scratch.patches,
+                        wj,
+                        Some(brow),
+                        dst,
+                        rows,
+                        plen,
+                        c_out,
+                        epi.with_base((j * rows * c_out) as u64),
+                    ));
+                } else {
+                    let zj = ops::matmul_sl(&scratch.patches, wj, rows, plen, c_out);
+                    for r in 0..rows {
+                        for o in 0..c_out {
+                            dst[r * c_out + o] = zj[r * c_out + o] + brow[o];
+                        }
+                    }
+                }
+            }
+            if !q.fused {
+                zst = epi.run(zq.data_mut(), 0);
+            }
+        }
+        q.record(self.group, KIND_Z, zst);
+
+        // max over the k filters; the H quantization happens after the
+        // spatial pool, in this stage's MaxPool2d partner
+        let mut m = Tensor::zeros(&[batch, geom.h, geom.w, c_out]);
+        let mut amax = vec![0u8; rows * c_out];
+        for r in 0..rows {
+            for o in 0..c_out {
+                let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
+                for j in 0..k {
+                    let v = zq.at3(j, r, o);
+                    if v > best {
+                        best = v;
+                        bj = j as u8;
+                    }
+                }
+                m.data_mut()[r * c_out + o] = best;
+                amax[r * c_out + o] = bj;
+            }
+        }
+        (m, Cache::Conv { x, amax })
+    }
+
+    fn backward(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        cache: &Cache,
+        dy: Tensor,
+        dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Conv { x, amax } = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        let w = &params[0];
+        let (batch, geom) = self.geom(x);
+        let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let rows = geom.rows(batch);
+        assert_eq!(dy.len(), rows * c_out, "{}: gradient size", self.describe());
+
+        // route the (unpooled) gradient to the winning filter, quantize
+        // (DZ group) — L2's combined max/pool subgradient, pool half
+        // already routed by MaxPool2d
+        let mut dz = Tensor::zeros(&[k, rows, c_out]);
+        for (i, &g) in dy.data().iter().enumerate() {
+            let j = amax[i] as usize;
+            dz.data_mut()[j * rows * c_out + i] = g;
+        }
+        q.apply(&mut dz, self.group, KIND_DZ, true);
+
+        // dw for every filter, quantized as ONE logical site over the
+        // im2col patches (fused TN tiles, direct reference, or two-pass)
+        let mut dw = Tensor::zeros(&[k, plen, c_out]);
+        let mut db = Tensor::zeros(&[k, c_out]);
+        let epi = q.epilogue(self.group, KIND_DW);
+        let mut dwst = QuantStats::default();
+        let mut scratch = self.scratch.borrow_mut();
+        for j in 0..k {
+            let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
+            let dwj_dst = &mut dw.data_mut()[j * plen * c_out..(j + 1) * plen * c_out];
+            if q.conv_direct {
+                dwst.merge(conv::conv2d_dw_direct_q(
+                    x.data(),
+                    dzj,
+                    dwj_dst,
+                    batch,
+                    &geom,
+                    epi.with_base((j * plen * c_out) as u64),
+                ));
+            } else if q.fused {
+                // the forward pass of this same step filled the patches
+                debug_assert_eq!(scratch.patches.len(), rows * plen);
+                dwst.merge(ops::matmul_tn_sl_q_into(
+                    &scratch.patches,
+                    dzj,
+                    dwj_dst,
+                    rows,
+                    plen,
+                    c_out,
+                    epi.with_base((j * plen * c_out) as u64),
+                ));
+            } else {
+                debug_assert_eq!(scratch.patches.len(), rows * plen);
+                let dwj = ops::matmul_tn_sl(&scratch.patches, dzj, rows, plen, c_out);
+                dwj_dst.copy_from_slice(&dwj);
+            }
+            let dbj = ops::sum_rows_sl(dzj, rows, c_out);
+            db.data_mut()[j * c_out..(j + 1) * c_out].copy_from_slice(&dbj);
+        }
+        if !q.conv_direct && !q.fused {
+            dwst = epi.run(dw.data_mut(), 0);
+        }
+        q.record(self.group, KIND_DW, dwst);
+        q.apply(&mut db, self.group, KIND_DB, true);
+
+        // dx: per-filter patch-space gradients summed across filters,
+        // scattered back to image space, then the total quantized as the
+        // lower stage's DH group (like the dense layers' summed dx)
+        let dx = dx_group.map(|g| {
+            scratch.dpatch.resize(rows * plen, 0.0);
+            scratch.dpatch.fill(0.0);
+            scratch.dpj.resize(rows * plen, 0.0);
+            let scratch = &mut *scratch;
+            for j in 0..k {
+                let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
+                let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
+                ops::matmul_nt_sl_into(dzj, wj, &mut scratch.dpj, rows, c_out, plen);
+                for (a, &v) in scratch.dpatch.iter_mut().zip(&scratch.dpj) {
+                    *a += v;
+                }
+            }
+            let mut dx = Tensor::zeros(&[batch, geom.h, geom.w, geom.c_in]);
+            conv::col2im_add(&scratch.dpatch, batch, &geom, dx.data_mut());
+            q.apply(&mut dx, g, KIND_DH, true);
+            dx
+        });
+        (vec![dw, db], dx)
+    }
+
+    fn sgd_update(
+        &self,
+        q: &mut GoldenQ,
+        params: &mut [Tensor],
+        vels: &mut [Tensor],
+        grads: &[Tensor],
+        hp: &UpdateHp,
+    ) {
+        // w [k, ksize²·C_in, C_out] has the maxout [k, I, U] layout, so
+        // the shared rule (incl. the rank-3 max-norm) applies verbatim
+        dense_sgd_update(q, self.group, params, vels, grads, hp);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaxPool2d
+// ---------------------------------------------------------------------------
+
+/// Non-overlapping spatial max pool (window = stride = `pool`, VALID:
+/// trailing rows/cols that don't fill a window are dropped, like L2's
+/// `reduce_window`), followed by the owning conv stage's `H`-group
+/// quantization — the second half of the L2 conv stage's
+/// `conv → Q_Z → max_k → pool → Q_H` sequence. Backward is pure
+/// routing to the cached argmax positions; the routed gradient's DZ
+/// quantization belongs to the conv layer below, so `dx_group` is
+/// deliberately ignored. `pool = 1` degenerates to the bare `H` site.
+pub struct MaxPool2d {
+    pub pool: usize,
+    /// The conv partner's row in the layer-major group table.
+    pub group: usize,
+}
+
+impl Layer for MaxPool2d {
+    fn describe(&self) -> String {
+        format!("maxpool({})@l{}", self.pool, self.group)
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        Some(self.group)
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        let Shape::Spatial { h, w, c } = *in_shape else {
+            crate::bail!("{}: needs a spatial input, got {in_shape}", self.describe());
+        };
+        crate::ensure!(self.pool >= 1, "{}: pool must be >= 1", self.describe());
+        let (ph, pw) = (h / self.pool, w / self.pool);
+        crate::ensure!(
+            ph >= 1 && pw >= 1,
+            "{}: pooling a {h}x{w} map below one pixel",
+            self.describe()
+        );
+        Ok(Shape::Spatial { h: ph, w: pw, c })
+    }
+
+    fn forward(
+        &self,
+        q: &mut GoldenQ,
+        _params: &[Tensor],
+        x: Tensor,
+        _drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let s = x.shape();
+        assert_eq!(s.len(), 4, "{}: input must be [B, H, W, C]", self.describe());
+        let (batch, h, w, c) = (s[0], s[1], s[2], s[3]);
+        let p = self.pool;
+        let (ph, pw) = (h / p, w / p);
+        let mut out = Tensor::zeros(&[batch, ph, pw, c]);
+        let mut idx = vec![0u32; batch * ph * pw * c];
+        for b in 0..batch {
+            for oy in 0..ph {
+                for ox in 0..pw {
+                    for ch in 0..c {
+                        let (mut best, mut bsrc) = (f32::NEG_INFINITY, 0u32);
+                        for ky in 0..p {
+                            for kx in 0..p {
+                                let src =
+                                    ((b * h + oy * p + ky) * w + ox * p + kx) * c + ch;
+                                let v = x.data()[src];
+                                if v > best {
+                                    best = v;
+                                    bsrc = src as u32;
+                                }
+                            }
+                        }
+                        let o = ((b * ph + oy) * pw + ox) * c + ch;
+                        out.data_mut()[o] = best;
+                        idx[o] = bsrc;
+                    }
+                }
+            }
+        }
+        q.apply(&mut out, self.group, KIND_H, true);
+        (out, Cache::Pool { in_shape: s.to_vec(), idx })
+    }
+
+    fn backward(
+        &self,
+        _q: &mut GoldenQ,
+        _params: &[Tensor],
+        cache: &Cache,
+        dy: Tensor,
+        _dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Pool { in_shape, idx } = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        // scatter to the winning positions; windows never overlap, so
+        // each input cell receives at most one contribution
+        let mut dx = Tensor::zeros(in_shape);
+        for (i, &src) in idx.iter().enumerate() {
+            dx.data_mut()[src as usize] += dy.data()[i];
+        }
+        (Vec::new(), Some(dx))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flatten
+// ---------------------------------------------------------------------------
+
+/// Shape adapter between the spatial stages and the dense head:
+/// `[B, H, W, C] → [B, H·W·C]` (row-major, so the bytes don't move).
+/// No parameters, no quantization sites; backward restores the spatial
+/// shape.
+pub struct Flatten;
+
+impl Layer for Flatten {
+    fn describe(&self) -> String {
+        "flatten".into()
+    }
+
+    fn group_row(&self) -> Option<usize> {
+        None
+    }
+
+    fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
+        Ok(in_shape.flattened())
+    }
+
+    fn forward(
+        &self,
+        _q: &mut GoldenQ,
+        _params: &[Tensor],
+        x: Tensor,
+        _drop: &mut DropCtx,
+    ) -> (Tensor, Cache) {
+        let in_shape = x.shape().to_vec();
+        let (b, d) = (in_shape[0], in_shape[1..].iter().product::<usize>());
+        (x.reshape(&[b, d]), Cache::Flat { in_shape })
+    }
+
+    fn backward(
+        &self,
+        _q: &mut GoldenQ,
+        _params: &[Tensor],
+        cache: &Cache,
+        dy: Tensor,
+        _dx_group: Option<usize>,
+    ) -> (Vec<Tensor>, Option<Tensor>) {
+        let Cache::Flat { in_shape } = cache else {
+            unreachable!("{}: wrong cache variant", self.describe())
+        };
+        (Vec::new(), Some(dy.reshape(in_shape)))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Network
 // ---------------------------------------------------------------------------
 
-/// A maxout MLP assembled from [`Layer`]s, driving one train/eval step
-/// over the manifest-ordered flat parameter vector. Built from a
-/// [`TopologySpec`] (+ dataset dimensions) or, for the legacy call
-/// sites, from an [`MlpShape`].
+/// A maxout network assembled from [`Layer`]s, driving one train/eval
+/// step over the manifest-ordered flat parameter vector. Built from a
+/// [`TopologySpec`] (+ the dataset's signal [`Shape`]) or, for the
+/// legacy call sites, from an [`MlpShape`].
 pub struct Network {
     layers: Vec<Box<dyn Layer>>,
     /// Per layer: (offset, count) into the flat manifest-order params.
     param_ranges: Vec<(usize, usize)>,
     n_group_rows: usize,
-    d_in: usize,
+    /// The signal shape the network consumes (dataset-derived).
+    in_shape: Shape,
     n_classes: usize,
 }
 
 impl Network {
-    /// Realize a topology against a data source's dimensions. The layer
-    /// sequence mirrors the monolithic step: input dropout, then per
-    /// hidden layer a maxout dense + hidden dropout, then the head.
-    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> Network {
+    /// Realize a topology against a data source's signal shape. The
+    /// layer sequence generalizes the monolithic step: input dropout;
+    /// per conv stage a maxout-conv + max-pool + hidden dropout; a
+    /// flatten when any conv stage exists; per hidden width a maxout
+    /// dense + hidden dropout; then the head. The whole shape contract
+    /// is chained through [`Layer::out_shape`] here, so topology/dataset
+    /// mismatches fail at construction with the offending layer named.
+    pub fn from_topology_shaped(
+        spec: &TopologySpec,
+        in_shape: Shape,
+        n_classes: usize,
+    ) -> crate::Result<Network> {
         // hard invariant, not a debug check: a spec that skipped
         // validate() must not silently build a head-only linear model
-        assert!(!spec.hidden.is_empty(), "topology needs >= 1 hidden layer");
-        let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(2 * spec.hidden.len() + 2);
+        assert!(
+            !(spec.conv.is_empty() && spec.hidden.is_empty()),
+            "topology needs >= 1 conv stage or hidden layer"
+        );
+        let mut layers: Vec<Box<dyn Layer>> =
+            Vec::with_capacity(3 * spec.conv.len() + 2 * spec.hidden.len() + 3);
         layers.push(Box::new(DropoutLayer::input()));
         let mut row = 0;
+        for cs in &spec.conv {
+            layers.push(Box::new(MaxoutConv2d::new(cs.channels, spec.k, cs.ksize, row)));
+            layers.push(Box::new(MaxPool2d { pool: cs.pool, group: row }));
+            layers.push(Box::new(DropoutLayer::hidden()));
+            row += 1;
+        }
+        if !spec.conv.is_empty() {
+            layers.push(Box::new(Flatten));
+        }
         for &units in &spec.hidden {
             layers.push(Box::new(MaxoutDense { units, k: spec.k, group: row }));
             row += 1;
@@ -627,13 +1141,35 @@ impl Network {
         layers.push(Box::new(SoftmaxHead { n_classes, group: row }));
         row += 1;
 
+        // chain the shape contract through the graph; a failure names
+        // the layer and the shape it choked on
+        let mut shape = in_shape;
+        for l in &layers {
+            shape = l.out_shape(&shape).map_err(|e| {
+                crate::err!("topology '{}' does not fit input {in_shape}: {e}", spec.name)
+            })?;
+        }
+        debug_assert_eq!(shape, Shape::Flat(n_classes));
+
         let mut param_ranges = Vec::with_capacity(layers.len());
         let mut offset = 0;
         for l in &layers {
             param_ranges.push((offset, l.n_params()));
             offset += l.n_params();
         }
-        Network { layers, param_ranges, n_group_rows: row, d_in, n_classes }
+        Ok(Network { layers, param_ranges, n_group_rows: row, in_shape, n_classes })
+    }
+
+    /// Realize an MLP topology against a flat input width (the legacy
+    /// entry point; conv stages need [`Network::from_topology_shaped`]).
+    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> Network {
+        assert!(
+            spec.conv.is_empty(),
+            "topology '{}' has conv stages: realize it with from_topology_shaped",
+            spec.name
+        );
+        Network::from_topology_shaped(spec, Shape::Flat(d_in), n_classes)
+            .expect("MLP topologies realize against any flat input")
     }
 
     /// The 2-hidden-layer network an [`MlpShape`] describes (the legacy
@@ -657,7 +1193,18 @@ impl Network {
 
     /// Flat input width the network consumes.
     pub fn d_in(&self) -> usize {
-        self.d_in
+        self.in_shape.len()
+    }
+
+    /// The dataset-derived signal shape the network consumes.
+    pub fn in_shape(&self) -> Shape {
+        self.in_shape
+    }
+
+    /// Per-example input dims (`[d]` or `[h, w, c]`) — what a batch
+    /// tensor carries after its leading batch axis.
+    pub fn input_dims(&self) -> Vec<usize> {
+        self.in_shape.dims()
     }
 
     pub fn n_classes(&self) -> usize {
@@ -705,6 +1252,7 @@ impl Network {
         assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
         let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
         q.fused = opts.fused;
+        q.conv_direct = opts.conv_direct;
         if opts.mode == RoundMode::Stochastic {
             // true stochastic rounding draws one uniform sample per
             // element from counter-based per-site streams (index-keyed,
@@ -844,12 +1392,122 @@ mod tests {
         let desc = net.describe();
         assert!(desc.starts_with("dropout(input) -> maxout(10x2)@l0"), "{desc}");
         assert!(desc.ends_with("softmax(4)@l3"), "{desc}");
-        // shape inference chains input width to class count
-        let mut w = net.d_in();
+        // the shape contract chains the input to the class count
+        let mut shape = net.in_shape();
         for l in &net.layers {
-            w = l.out_dim(w);
+            shape = l.out_shape(&shape).unwrap();
         }
-        assert_eq!(w, net.n_classes());
+        assert_eq!(shape, Shape::Flat(net.n_classes()));
+    }
+
+    /// The shared tiny conv fixture (2 conv stages + 1 dense + head over
+    /// 8×8×2 inputs) — `tests/conv_parity.rs` trains the same spec.
+    fn conv_spec() -> TopologySpec {
+        crate::testing::tiny_conv_spec()
+    }
+
+    #[test]
+    fn conv_topology_chains_shapes_and_derives_groups() {
+        let in_shape = Shape::Spatial { h: 8, w: 8, c: 2 };
+        let net = Network::from_topology_shaped(&conv_spec(), in_shape, 4).unwrap();
+        // 2 conv stages + 1 dense + head = 4 group rows; pool layers
+        // share their conv partner's row
+        assert_eq!(net.n_compute_layers(), 4);
+        assert_eq!(net.n_groups(), 4 * N_KINDS);
+        assert_eq!(net.n_params(), 8);
+        assert_eq!(net.d_in(), 128);
+        assert_eq!(net.input_dims(), vec![8, 8, 2]);
+        let desc = net.describe();
+        assert!(desc.contains("maxconv(3x2k3)@l0 -> maxpool(2)@l0"), "{desc}");
+        assert!(desc.contains("maxpool(2)@l1 -> dropout(hidden) -> flatten"), "{desc}");
+        // 8x8 -> 4x4 -> 2x2, so the dense stage consumes 2*2*4 = 16
+        let mut shape = in_shape;
+        for l in &net.layers {
+            shape = l.out_shape(&shape).unwrap();
+        }
+        assert_eq!(shape, Shape::Flat(4));
+    }
+
+    #[test]
+    fn conv_realization_rejects_shape_mismatches() {
+        // conv stage over a flat dataset
+        let err = Network::from_topology_shaped(&conv_spec(), Shape::Flat(128), 4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("spatial"), "{err:#}");
+        // pooled below one pixel
+        let deep = TopologySpec::conv_net(
+            vec![crate::config::ConvStageSpec { channels: 2, ksize: 3, pool: 4 }; 3],
+            vec![],
+            2,
+        );
+        let err = Network::from_topology_shaped(&deep, Shape::Spatial { h: 8, w: 8, c: 1 }, 4)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("below one pixel"), "{err:#}");
+    }
+
+    #[test]
+    fn conv_topology_trains_and_counts_per_stage_overflow() {
+        let spec = conv_spec();
+        let in_shape = Shape::Spatial { h: 8, w: 8, c: 2 };
+        let net = Network::from_topology_shaped(&spec, in_shape, 4).unwrap();
+        let ctrl = ScaleController::fixed(
+            net.n_groups(),
+            FixedFormat::new(10, 3),
+            FixedFormat::new(12, 0),
+        );
+        let (mut params, mut vels) = crate::testing::topology_state(&spec, in_shape, 4, 3);
+        let n = 6;
+        let mut rng = Pcg32::seeded(9);
+        let x = Tensor::from_vec(
+            &[n, 8, 8, 2],
+            (0..n * 128).map(|_| rng.normal()).collect(),
+        );
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4) as usize).collect();
+        let y = ops::one_hot(&labels, 4);
+        let out = net.train_step(
+            &mut params,
+            &mut vels,
+            &x,
+            &y,
+            0.1,
+            0.5,
+            2.0,
+            &ctrl,
+            StepOptions::default(),
+        );
+        assert!(out.loss.is_finite());
+        assert_eq!(out.overflow.shape(), &[4 * N_KINDS, 3]);
+        // stage 0: z over k filters at full 8x8 resolution, h after the
+        // 2x2 pool; stage 1 runs at 4x4
+        assert_eq!(out.overflow.at2(group_index(0, KIND_Z), 2), (2 * n * 64 * 3) as f32);
+        assert_eq!(out.overflow.at2(group_index(0, KIND_H), 2), (n * 16 * 3) as f32);
+        assert_eq!(out.overflow.at2(group_index(1, KIND_Z), 2), (2 * n * 16 * 4) as f32);
+        assert_eq!(out.overflow.at2(group_index(1, KIND_H), 2), (n * 4 * 4) as f32);
+        // the dense stage's DH comes from the head, the last conv
+        // stage's DH from the dense layer (post-flatten), and stage 0's
+        // DH from stage 1 at stage-0's pooled resolution
+        assert_eq!(out.overflow.at2(group_index(2, KIND_DH), 2), (n * 6) as f32);
+        assert_eq!(out.overflow.at2(group_index(1, KIND_DH), 2), (n * 16) as f32);
+        assert_eq!(out.overflow.at2(group_index(0, KIND_DH), 2), (n * 16 * 3) as f32);
+    }
+
+    #[test]
+    fn max_pool_routes_gradient_to_argmax() {
+        let pool = MaxPool2d { pool: 2, group: 0 };
+        let ctrl = ScaleController::fixed(8, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut q = GoldenQ::new(&ctrl, RoundMode::HalfAway);
+        let x = Tensor::from_vec(
+            &[1, 2, 2, 1],
+            vec![1.0, 5.0, 2.0, 3.0], // window max is the 5 at (0, 1)
+        );
+        let mut drop = DropCtx::eval();
+        let (h, cache) = pool.forward(&mut q, &[], x, &mut drop);
+        assert_eq!(h.shape(), &[1, 1, 1, 1]);
+        assert_eq!(h.data(), &[5.0]);
+        let dy = Tensor::from_vec(&[1, 1, 1, 1], vec![7.0]);
+        let (grads, dx) = pool.backward(&mut q, &[], &cache, dy, Some(0));
+        assert!(grads.is_empty());
+        assert_eq!(dx.unwrap().data(), &[0.0, 7.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -919,7 +1577,8 @@ mod tests {
             first.get_or_insert(out.loss);
             last = out.loss;
         }
-        assert!(last < first.unwrap() * 0.5, "{first:?} -> {last}");
+        let first = first.expect("at least one training step ran, so the first loss is set");
+        assert!(last < first * 0.5, "{first} -> {last}");
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!    [`TopologySpec`](crate::config::TopologySpec) — see DESIGN.md
 //!    §Backends and §Layer graph.
 //!
-//! The module is split in three:
+//! The module is split in four:
 //!
 //! * **this file** — the shared quantization context ([`GoldenQ`]: per
 //!   group quantizers, stat accumulation, site numbering), the step
@@ -24,8 +24,13 @@
 //!   ([`train_step_opt`]/[`eval_logits`]) that run the 2-hidden-layer
 //!   [`MlpShape`] topology through the graph;
 //! * [`graph`] — the [`Layer`] trait ([`MaxoutDense`], [`SoftmaxHead`],
-//!   [`DropoutLayer`]) and the [`Network`] executor: topology as data,
-//!   scaling groups derived from the graph;
+//!   [`MaxoutConv2d`], [`MaxPool2d`], [`Flatten`], [`DropoutLayer`])
+//!   and the [`Network`] executor: topology as data, signals threaded
+//!   as shape-aware tensors, scaling groups derived from the graph;
+//! * [`conv`] — the conv lowering: im2col patch extraction (so every
+//!   conv multiply rides the fused quantized GEMM epilogues) plus the
+//!   bit-identical direct nested-loop reference kernels
+//!   (`tests/conv_parity.rs`);
 //! * [`reference`] — the pre-refactor monolithic pi_mlp step, frozen as
 //!   the bit-identity reference (`tests/graph_parity.rs` proves the
 //!   graph reproduces it exactly; `bench_perf` tracks graph overhead
@@ -43,12 +48,13 @@
 //! ([`StepOptions::dropout`]). Cross-checks against the device run with
 //! dropout disabled.
 
+pub mod conv;
 pub mod graph;
 pub mod reference;
 
 pub use graph::{
-    Cache, DropCtx, DropoutLayer, DropoutRole, Layer, MaxoutDense, Network, SoftmaxHead,
-    UpdateHp,
+    Cache, DropCtx, DropoutLayer, DropoutRole, Flatten, Layer, MaxPool2d, MaxoutConv2d,
+    MaxoutDense, Network, SoftmaxHead, UpdateHp,
 };
 
 use std::sync::OnceLock;
@@ -134,6 +140,11 @@ pub struct StepOptions {
     /// kernels) instead of with a second whole-tensor sweep. Bit-identical
     /// either way; see [`fused_default`].
     pub fused: bool,
+    /// Run conv stages through the direct nested-loop reference kernels
+    /// instead of the im2col-lowered GEMMs. Bit-identical either way
+    /// (`tests/conv_parity.rs`); a perf A/B hook for `bench_perf`'s
+    /// `conv train step` rows.
+    pub conv_direct: bool,
 }
 
 impl Default for StepOptions {
@@ -143,6 +154,7 @@ impl Default for StepOptions {
             half: false,
             dropout: None,
             fused: fused_default(),
+            conv_direct: false,
         }
     }
 }
@@ -167,6 +179,9 @@ pub struct GoldenQ<'c> {
     /// Route GEMM-adjacent sites through the fused kernels (true) or the
     /// two-pass reference path (false). Same bits either way.
     pub fused: bool,
+    /// Route conv stages through the direct nested-loop reference
+    /// kernels instead of the im2col-lowered GEMMs. Same bits either way.
+    pub conv_direct: bool,
     stats: Vec<QuantStats>,
     /// Base seed for the counter-based stochastic-rounding streams
     /// (`None` = deterministic midpoint sample, like `apply_slice`).
@@ -186,6 +201,7 @@ impl<'c> GoldenQ<'c> {
             mode,
             half,
             fused: fused_default(),
+            conv_direct: false,
             stats: vec![QuantStats::default(); ctrl.n_groups()],
             stochastic_seed: None,
             site: 0,

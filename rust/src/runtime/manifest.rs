@@ -19,6 +19,7 @@ use crate::error::Context;
 use crate::config::json;
 use crate::config::TopologySpec;
 use crate::tensor::init::InitSpec;
+use crate::tensor::Shape;
 
 /// Signal kinds — must match python `compile/formats.py` exactly.
 pub const KIND_NAMES: [&str; 8] = ["w", "b", "z", "h", "dw", "db", "dz", "dh"];
@@ -81,16 +82,27 @@ pub struct ModelInfo {
 }
 
 impl ModelInfo {
-    /// Realize a [`TopologySpec`] against a data source's dimensions:
-    /// parameter specs in manifest order (`w0 b0 w1 b1 ... wH bH`),
-    /// layer-major group tables, Glorot init for weights — the same
-    /// conventions `python/compile/model.py` uses, generalized to any
-    /// depth/width. The graph executor
-    /// ([`crate::golden::Network`]) builds its layers from the same spec,
-    /// so state order and group indexing agree by construction.
-    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> ModelInfo {
-        // same hard invariant as Network::from_topology
-        assert!(!spec.hidden.is_empty(), "topology needs >= 1 hidden layer");
+    /// Realize a [`TopologySpec`] against a data source's signal
+    /// [`Shape`]: parameter specs in manifest order
+    /// (`w0 b0 w1 b1 ... wH bH`, conv stages first), layer-major group
+    /// tables, Glorot init for weights — the same conventions
+    /// `python/compile/model.py` uses, generalized to any topology. Conv
+    /// stage weights are the im2col-lowered `[k, ksize²·C_in, C_out]`
+    /// slabs (fan-in/fan-out matching L2's HWIO Glorot). The graph
+    /// executor ([`crate::golden::Network`]) builds its layers from the
+    /// same spec, so state order and group indexing agree by
+    /// construction. Errors are topology/dataset mismatches (conv over a
+    /// flat source, over-pooling).
+    pub fn from_topology_shaped(
+        spec: &TopologySpec,
+        in_shape: &Shape,
+        n_classes: usize,
+    ) -> crate::Result<ModelInfo> {
+        // same hard invariant as Network::from_topology_shaped
+        assert!(
+            !(spec.conv.is_empty() && spec.hidden.is_empty()),
+            "topology needs >= 1 conv stage or hidden layer"
+        );
         let n_layers = spec.n_layers();
         let w = |l: usize, shape: Vec<usize>, fan_in: usize, fan_out: usize| ParamSpec {
             name: format!("l{l}.w"),
@@ -107,15 +119,39 @@ impl ModelInfo {
             init: InitSpec::Zeros,
         };
         let mut params = Vec::with_capacity(2 * n_layers);
-        let mut prev = d_in;
-        for (l, &units) in spec.hidden.iter().enumerate() {
+        let mut shape = *in_shape;
+        let mut l = 0;
+        for cs in &spec.conv {
+            let Shape::Spatial { c, .. } = shape else {
+                crate::bail!(
+                    "topology '{}': conv stage l{l} needs a spatial input, got {shape} \
+                     (conv topologies require an image dataset)",
+                    spec.name
+                );
+            };
+            let plen = cs.ksize * cs.ksize * c;
+            // L2's HWIO Glorot fans: in = ks²·C_in, out = ks²·C_out
+            params.push(w(
+                l,
+                vec![spec.k, plen, cs.channels],
+                plen,
+                cs.ksize * cs.ksize * cs.channels,
+            ));
+            params.push(b(l, vec![spec.k, cs.channels]));
+            shape = cs.out_shape(&shape).map_err(|e| {
+                crate::err!("topology '{}' does not fit input {in_shape}: {e}", spec.name)
+            })?;
+            l += 1;
+        }
+        let mut prev = shape.len();
+        for &units in &spec.hidden {
             params.push(w(l, vec![spec.k, prev, units], prev, units));
             params.push(b(l, vec![spec.k, units]));
             prev = units;
+            l += 1;
         }
-        let head = spec.hidden.len();
-        params.push(w(head, vec![prev, n_classes], prev, n_classes));
-        params.push(b(head, vec![n_classes]));
+        params.push(w(l, vec![prev, n_classes], prev, n_classes));
+        params.push(b(l, vec![n_classes]));
 
         let mut group_names = Vec::with_capacity(n_layers * N_KINDS);
         for layer in 0..n_layers {
@@ -123,9 +159,9 @@ impl ModelInfo {
                 group_names.push(format!("l{layer}.{kind}"));
             }
         }
-        ModelInfo {
+        Ok(ModelInfo {
             name: spec.name.clone(),
-            input_shape: vec![d_in],
+            input_shape: in_shape.dims(),
             n_layers,
             n_groups: n_layers * N_KINDS,
             group_names,
@@ -133,20 +169,43 @@ impl ModelInfo {
             eval_batch: spec.eval_batch,
             n_classes,
             params,
-        }
+        })
     }
 
-    /// Built-in maxout-MLP topologies for the native backend — the same
-    /// models `python/compile/model.py` declares, so manifest order,
-    /// group indexing and init specs line up exactly with the compiled
-    /// artifacts (which pin the MNIST-class 784-in/10-out dimensions).
-    /// Returns `None` for models the native path cannot run (the conv
-    /// nets exist only as compiled graphs). Dataset-aware callers should
-    /// prefer [`ModelInfo::from_topology`] with
-    /// [`crate::data::dataset_dims`].
+    /// Realize an MLP topology against a flat input width (the legacy
+    /// entry point; conv stages need
+    /// [`ModelInfo::from_topology_shaped`]).
+    pub fn from_topology(spec: &TopologySpec, d_in: usize, n_classes: usize) -> ModelInfo {
+        assert!(
+            spec.conv.is_empty(),
+            "topology '{}' has conv stages: realize it with from_topology_shaped",
+            spec.name
+        );
+        ModelInfo::from_topology_shaped(spec, &Shape::Flat(d_in), n_classes)
+            .expect("MLP topologies realize against any flat input")
+    }
+
+    /// Built-in topologies for the native backend — the same models
+    /// `python/compile/model.py` declares, so manifest order, group
+    /// indexing and init specs line up with the compiled artifacts
+    /// (which pin the datasets' dimensions: 784/10 for the MLPs,
+    /// 28×28×1 for `conv`, 32×32×3 for `conv32`/`pi_conv`). Note the
+    /// conv weight *layout* differs deliberately: the manifest stores
+    /// L2's HWIO `[ks, ks, C_in, k·C_out]`, the native graph the
+    /// im2col-lowered `[k, ks²·C_in, C_out]` slab. Dataset-aware
+    /// callers should prefer [`ModelInfo::from_topology_shaped`] with
+    /// [`crate::data::dataset_shape`].
     pub fn builtin(name: &str) -> Option<ModelInfo> {
         let spec = TopologySpec::builtin(name)?;
-        Some(ModelInfo::from_topology(&spec, 784, 10))
+        let in_shape = match name {
+            "conv" => Shape::Spatial { h: 28, w: 28, c: 1 },
+            "conv32" | "pi_conv" => Shape::Spatial { h: 32, w: 32, c: 3 },
+            _ => Shape::Flat(784),
+        };
+        Some(
+            ModelInfo::from_topology_shaped(&spec, &in_shape, 10)
+                .expect("builtin topologies realize against their pinned dims"),
+        )
     }
 }
 
@@ -327,6 +386,45 @@ mod tests {
         assert_eq!(m.params[6].group(), group_index(3, KIND_W));
         assert_eq!(m.group_names[31], "l3.dh");
         assert_eq!(m.input_shape, vec![3072]);
+    }
+
+    #[test]
+    fn conv_topology_realizes_im2col_slabs_against_the_shape() {
+        use crate::config::TopologySpec;
+        let spec = TopologySpec::builtin("pi_conv").unwrap();
+        let m = ModelInfo::from_topology_shaped(
+            &spec,
+            &Shape::Spatial { h: 32, w: 32, c: 3 },
+            10,
+        )
+        .unwrap();
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.n_groups, 32);
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
+        assert_eq!(m.params.len(), 8);
+        // stage 0: 5x5 over 3 channels -> [k, 75, 16]
+        assert_eq!(m.params[0].shape, vec![2, 75, 16]);
+        assert!(matches!(
+            m.params[0].init,
+            InitSpec::GlorotUniform { fan_in: 75, fan_out: 400 }
+        ));
+        assert_eq!(m.params[1].shape, vec![2, 16]);
+        // stage 2 runs at 8x8 over 16 channels -> [k, 400, 24]
+        assert_eq!(m.params[4].shape, vec![2, 400, 24]);
+        // head consumes the flattened 4x4x24 = 384 map
+        assert_eq!(m.params[6].shape, vec![384, 10]);
+        assert_eq!(m.params[6].group(), group_index(3, KIND_W));
+        // the builtin pins exactly these dims
+        let b = ModelInfo::builtin("pi_conv").unwrap();
+        assert_eq!(b.params[6].shape, vec![384, 10]);
+        let b = ModelInfo::builtin("conv").unwrap();
+        assert_eq!(b.input_shape, vec![28, 28, 1]);
+        // 28 -> 14 -> 7 -> 3 (VALID pool floors), 3*3*16 = 144
+        assert_eq!(b.params[6].shape, vec![144, 10]);
+        // conv over a flat source is a clear error
+        let err =
+            ModelInfo::from_topology_shaped(&spec, &Shape::Flat(3072), 10).unwrap_err();
+        assert!(format!("{err:#}").contains("spatial"), "{err:#}");
     }
 
     #[test]

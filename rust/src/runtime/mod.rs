@@ -74,8 +74,9 @@ pub trait Backend {
     fn name(&self) -> &'static str;
 
     /// Can this backend run the *named* builtin/manifest model?
-    /// ([`NativeBackend`] only runs the maxout MLPs; the conv nets need
-    /// compiled artifacts.) Name-based gating only: a config carrying an
+    /// ([`NativeBackend`] runs every builtin topology — the maxout MLPs
+    /// and the conv nets, im2col-lowered; the pjrt backend whatever its
+    /// manifest declares.) Name-based gating only: a config carrying an
     /// explicit [`TopologySpec`](crate::config::TopologySpec) is always
     /// runnable on the native backend regardless of its model label —
     /// `begin_run` is the authoritative check.

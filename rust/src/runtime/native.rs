@@ -10,11 +10,14 @@
 //! Topology is **data**: `begin_run` resolves the experiment's
 //! [`TopologySpec`] (the explicit `[topology]` table / `--topology`
 //! value, or the builtin spec the model name selects), derives the
-//! input/output dimensions from the configured dataset
-//! ([`crate::data::dataset_dims`]), and assembles a
+//! input signal [`Shape`] and class count from the configured dataset
+//! ([`crate::data::dataset_shape`]), and assembles a
 //! [`Network`] layer graph plus the matching
-//! [`ModelInfo`] parameter specs. Depth/width sweeps and non-MNIST MLP
-//! workloads are therefore config changes — see DESIGN.md §Layer graph.
+//! [`ModelInfo`] parameter specs. Depth/width sweeps, non-MNIST MLP
+//! workloads *and* the paper's maxout-conv nets (`conv`, `conv32`,
+//! `pi_conv`, or any `--topology c...` spec — im2col-lowered onto the
+//! fused GEMM epilogues) are therefore config changes — see DESIGN.md
+//! §Layer graph and §Conv lowering.
 //!
 //! Model state lives as host [`Tensor`]s; the hot contractions run on
 //! the blocked/parallel kernels in [`crate::tensor::ops`], with the
@@ -28,9 +31,10 @@
 //!   experiment seed and step index ([`Dropout`]); the compiled
 //!   graphs use an in-graph hash PRNG. Both are deterministic per run;
 //!   masks differ bit-wise between backends.
-//! * Only maxout MLPs run natively — the conv nets exist only as
-//!   compiled graphs. `begin_run` rejects them with a clear error;
-//!   sweeps skip them via [`Backend::supports_model`].
+//! * Conv weights are stored as the im2col-lowered
+//!   `[k, ksize²·C_in, C_out]` slabs, not L2's HWIO tensors — same
+//!   math, different layout, so conv state is not byte-interchangeable
+//!   with the compiled artifacts (the MLPs are).
 //!
 //! With dropout off, one native step is verified to agree with
 //! [`crate::golden::train_step`] exactly (`tests/native_backend.rs`), which is
@@ -43,7 +47,7 @@ use crate::config::{Arithmetic, ExperimentConfig, TopologySpec};
 use crate::coordinator::ScaleController;
 use crate::error::Context;
 use crate::golden::{Dropout, Network, Params, StepOptions};
-use crate::tensor::{ops, Pcg32, Tensor};
+use crate::tensor::{ops, Pcg32, Shape, Tensor};
 
 /// Per-run state for the native backend.
 struct NativeRun {
@@ -73,16 +77,19 @@ impl NativeBackend {
         self.run.as_mut().context("NativeBackend: begin_run was never called")
     }
 
-    /// Reinterpret a dataset-layout batch `[n, ...example]` as the model's
-    /// flat input `[n, d_in]` (same bytes, e.g. 28×28×1 → 784).
-    fn flatten_input(x: &Tensor, d_in: usize) -> crate::Result<Tensor> {
+    /// Reinterpret a dataset-layout batch `[n, ...example]` as the
+    /// network's input `[n, ...in_shape.dims()]` (same bytes: 28×28×1
+    /// flattens to 784 for the MLPs, stays NHWC for the conv nets).
+    fn shape_input(x: &Tensor, in_shape: Shape) -> crate::Result<Tensor> {
         let n = x.shape()[0];
+        let mut dims = vec![n];
+        dims.extend(in_shape.dims());
         crate::ensure!(
-            x.len() == n * d_in,
-            "input batch {:?} does not flatten to [{n}, {d_in}]",
+            x.len() == n * in_shape.len(),
+            "input batch {:?} does not reshape to [{n}, {in_shape}]",
             x.shape()
         );
-        Ok(x.clone().reshape(&[n, d_in]))
+        Ok(x.clone().reshape(&dims))
     }
 }
 
@@ -92,8 +99,9 @@ impl Backend for NativeBackend {
     }
 
     fn supports_model(&self, model: &str) -> bool {
-        // name-based gating for the builtin specs only; configs with an
-        // explicit topology bypass this and are resolved by begin_run
+        // name-based gating for the builtin specs (MLPs and conv nets
+        // alike) only; configs with an explicit topology bypass this
+        // and are resolved by begin_run
         TopologySpec::builtin(model).is_some()
     }
 
@@ -102,20 +110,26 @@ impl Backend for NativeBackend {
             Some(t) => t.clone(),
             None => TopologySpec::builtin(&cfg.model).with_context(|| {
                 format!(
-                    "the native backend implements the maxout MLPs only; model '{}' \
-                     needs compiled artifacts (build with --features pjrt and use \
-                     the pjrt backend) — or pass an explicit MLP topology \
-                     (--topology / [topology])",
+                    "model '{}' is not a builtin topology (pi_mlp, pi_mlp_wide, conv, \
+                     conv32, pi_conv) — pass an explicit topology \
+                     (--topology / [topology]) or a manifest model on the pjrt backend",
                     cfg.model
                 )
             })?,
         };
         spec.validate()?;
-        // input/output dimensions come from the data source, so the same
-        // topology composes with any dataset
-        let (d_in, n_classes) = crate::data::dataset_dims(&cfg.data.dataset)?;
-        let model = ModelInfo::from_topology(&spec, d_in, n_classes);
-        let net = Network::from_topology(&spec, d_in, n_classes);
+        // the input signal shape and class count come from the data
+        // source, so the same topology composes with any dataset whose
+        // shape fits: MLP topologies consume the flattened view (e.g.
+        // cifar_like as 3072-d), conv topologies the spatial H×W×C one
+        let (data_shape, n_classes) = crate::data::dataset_shape(&cfg.data.dataset)?;
+        let in_shape = if spec.conv.is_empty() {
+            data_shape.flattened()
+        } else {
+            data_shape
+        };
+        let model = ModelInfo::from_topology_shaped(&spec, &in_shape, n_classes)?;
+        let net = Network::from_topology_shaped(&spec, in_shape, n_classes)?;
         self.run = Some(NativeRun {
             model: model.clone(),
             net,
@@ -151,7 +165,7 @@ impl Backend for NativeBackend {
         hp: &StepParams,
     ) -> crate::Result<StepOut> {
         let run = self.run_mut()?;
-        let x = Self::flatten_input(x, run.net.d_in())?;
+        let x = Self::shape_input(x, run.net.in_shape())?;
         let dropout = if hp.dropout_input > 0.0 || hp.dropout_hidden > 0.0 {
             Some(Dropout {
                 input_rate: hp.dropout_input,
@@ -186,7 +200,7 @@ impl Backend for NativeBackend {
         n_real: usize,
     ) -> crate::Result<usize> {
         let run = self.run_mut()?;
-        let x = Self::flatten_input(x, run.net.d_in())?;
+        let x = Self::shape_input(x, run.net.in_shape())?;
         let logits = run.net.eval_logits(&run.params, &x, ctrl, RoundMode::HalfAway, run.half);
         let preds = ops::argmax_rows(&logits);
         let truth = ops::argmax_rows(y);
@@ -215,15 +229,64 @@ mod tests {
     }
 
     #[test]
-    fn begin_run_rejects_conv_models() {
+    fn supports_the_builtin_conv_models_and_rejects_unknowns() {
+        let be = NativeBackend::new();
+        assert!(be.supports_model("pi_mlp") && be.supports_model("pi_mlp_wide"));
+        assert!(be.supports_model("conv") && be.supports_model("conv32"));
+        assert!(be.supports_model("pi_conv"));
+        assert!(!be.supports_model("resnet"));
         let mut be = NativeBackend::new();
         let mut c = cfg();
-        c.model = "conv".into();
-        c.data.dataset = "digits".into();
+        c.model = "resnet".into();
         let err = be.begin_run(&c).unwrap_err();
-        assert!(format!("{err:#}").contains("native backend"));
-        assert!(!be.supports_model("conv32"));
-        assert!(be.supports_model("pi_mlp") && be.supports_model("pi_mlp_wide"));
+        assert!(format!("{err:#}").contains("not a builtin topology"), "{err:#}");
+    }
+
+    #[test]
+    fn conv_model_runs_end_to_end_on_the_spatial_dataset() {
+        let mut be = NativeBackend::new();
+        let mut c = cfg();
+        c.model = "pi_conv".into();
+        c.data.dataset = "cifar_like".into();
+        let model = be.begin_run(&c).unwrap();
+        assert_eq!(model.n_layers, 4);
+        assert_eq!(model.n_groups, 32);
+        assert_eq!(model.input_shape, vec![32, 32, 3]);
+        let ctrl =
+            ScaleController::fixed(model.n_groups, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut rng = Pcg32::seeded(9);
+        be.init_state(&ctrl, &mut rng).unwrap();
+        let n = 4;
+        let x = Tensor::from_vec(
+            &[n, 32, 32, 3],
+            (0..n * 3072).map(|_| rng.normal()).collect(),
+        );
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(10) as usize).collect();
+        let y = ops::one_hot(&labels, 10);
+        let hp = StepParams {
+            lr: 0.05,
+            momentum: 0.5,
+            max_norm: 0.0,
+            dropout_input: 0.0,
+            dropout_hidden: 0.0,
+            t: 0,
+        };
+        let out = be.train_step(&ctrl, &x, &y, &hp).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(out.overflow.shape(), &[32, 3]);
+        let errs = be.eval_errors(&ctrl, &x, &y, n).unwrap();
+        assert!(errs <= n);
+    }
+
+    #[test]
+    fn conv_stages_reject_the_flat_dataset_at_begin_run() {
+        let mut be = NativeBackend::new();
+        let mut c = cfg();
+        c.topology = Some(TopologySpec::builtin("pi_conv").unwrap());
+        c.model = "pi_conv".into();
+        c.data.dataset = "clusters".into();
+        let err = be.begin_run(&c).unwrap_err();
+        assert!(format!("{err:#}").contains("spatial"), "{err:#}");
     }
 
     #[test]

@@ -189,10 +189,13 @@ impl Backend for PjrtBackend {
         // explicit topologies are a native-backend feature: the compiled
         // artifacts exist only for the manifest's models, so silently
         // training a different network than configured must be an error
+        // — never a fallback. Conv topologies in particular are
+        // im2col-lowered by the native graph and have no compiled form.
         if let Some(t) = &cfg.topology {
+            let kind = if t.conv.is_empty() { "MLP" } else { "conv" };
             crate::bail!(
                 "the pjrt backend runs compiled manifest models only and \
-                 cannot realize the explicit topology '{}' — drop \
+                 cannot realize the explicit {kind} topology '{}' — drop \
                  [topology]/--topology or use --backend native",
                 t.name
             );

@@ -18,6 +18,56 @@ pub use rng::Pcg32;
 
 use std::fmt;
 
+/// The logical shape of one signal (one example / one activation row),
+/// independent of the batch axis: either a flat feature vector or a
+/// row-major H×W×C image. This is what the layer graph threads through
+/// its `out_shape` contract and what `data::dataset_shape` reports, so
+/// conv topologies can be validated against a dataset before any data
+/// is generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// A flat `d`-dimensional feature vector.
+    Flat(usize),
+    /// A row-major H×W×C image (NHWC once batched).
+    Spatial { h: usize, w: usize, c: usize },
+}
+
+impl Shape {
+    /// Flat element count (what a dense consumer of this signal sees).
+    pub fn len(&self) -> usize {
+        match *self {
+            Shape::Flat(d) => d,
+            Shape::Spatial { h, w, c } => h * w * c,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-example tensor dims: `[d]` or `[h, w, c]`.
+    pub fn dims(&self) -> Vec<usize> {
+        match *self {
+            Shape::Flat(d) => vec![d],
+            Shape::Spatial { h, w, c } => vec![h, w, c],
+        }
+    }
+
+    /// The same signal viewed as a flat vector (what `Flatten` does).
+    pub fn flattened(&self) -> Shape {
+        Shape::Flat(self.len())
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Shape::Flat(d) => write!(f, "flat({d})"),
+            Shape::Spatial { h, w, c } => write!(f, "{h}x{w}x{c}"),
+        }
+    }
+}
+
 /// A dense, contiguous, row-major f32 tensor.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
@@ -136,6 +186,22 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn bad_shape_panics() {
         Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn shape_lengths_dims_and_display() {
+        let f = Shape::Flat(784);
+        assert_eq!(f.len(), 784);
+        assert_eq!(f.dims(), vec![784]);
+        assert_eq!(f.flattened(), f);
+        assert_eq!(format!("{f}"), "flat(784)");
+        let s = Shape::Spatial { h: 32, w: 32, c: 3 };
+        assert_eq!(s.len(), 3072);
+        assert_eq!(s.dims(), vec![32, 32, 3]);
+        assert_eq!(s.flattened(), Shape::Flat(3072));
+        assert_eq!(format!("{s}"), "32x32x3");
+        assert!(!s.is_empty());
+        assert!(Shape::Flat(0).is_empty());
     }
 
     #[test]

@@ -189,6 +189,42 @@ pub fn matmul_sl(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) -> Vec<f32
     matmul_sl_threads(a, b, m, kd, n, plan_threads(2 * m * kd * n, m))
 }
 
+/// `dst = a[m,ua] @ b[ib,ua]^T` over flat slices with an explicit
+/// thread count — the one NT row-partitioning implementation every
+/// plain-NT entry point shares (the bit-identity invariant depends on
+/// the alloc and `_into` forms chunking rows identically). Assigns
+/// `dst` (the serial NT kernel writes dot products).
+pub fn matmul_nt_sl_into_threads(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * ua, "matmul_nt a size");
+    assert_eq!(b.len(), ib * ua, "matmul_nt b size");
+    assert_eq!(dst.len(), m * ib, "matmul_nt dst size");
+    if m == 0 || ib == 0 {
+        return;
+    }
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        mm_nt_serial(a, b, dst, ua, ib);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, ochunk) in dst.chunks_mut(rows_per * ib).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / ib;
+            let asub = &a[i0 * ua..(i0 + rows) * ua];
+            s.spawn(move || mm_nt_serial(asub, b, ochunk, ua, ib));
+        }
+    });
+}
+
 /// `[m,ib] = a[m,ua] @ b[ib,ua]^T` over flat slices with explicit threads.
 pub fn matmul_nt_sl_threads(
     a: &[f32],
@@ -198,32 +234,22 @@ pub fn matmul_nt_sl_threads(
     ib: usize,
     threads: usize,
 ) -> Vec<f32> {
-    assert_eq!(a.len(), m * ua, "matmul_nt a size");
-    assert_eq!(b.len(), ib * ua, "matmul_nt b size");
     let mut out = vec![0.0f32; m * ib];
-    if m == 0 || ib == 0 {
-        return out;
-    }
-    let nt = threads.min(m).max(1);
-    if nt <= 1 {
-        mm_nt_serial(a, b, &mut out, ua, ib);
-        return out;
-    }
-    let rows_per = m.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (ci, ochunk) in out.chunks_mut(rows_per * ib).enumerate() {
-            let i0 = ci * rows_per;
-            let rows = ochunk.len() / ib;
-            let asub = &a[i0 * ua..(i0 + rows) * ua];
-            s.spawn(move || mm_nt_serial(asub, b, ochunk, ua, ib));
-        }
-    });
+    matmul_nt_sl_into_threads(a, b, &mut out, m, ua, ib, threads);
     out
 }
 
 /// `[m,ua] @ [ib,ua]^T` over flat slices, auto-threaded.
 pub fn matmul_nt_sl(a: &[f32], b: &[f32], m: usize, ua: usize, ib: usize) -> Vec<f32> {
     matmul_nt_sl_threads(a, b, m, ua, ib, plan_threads(2 * m * ua * ib, m))
+}
+
+/// `dst = a[m,ua] @ b[ib,ua]^T` over flat slices, auto-threaded — the
+/// allocation-free form of [`matmul_nt_sl`] (assigns `dst`, same bits).
+/// Hot-loop callers with a reusable buffer (the conv dx path) use this
+/// to avoid a fresh `Vec` per call.
+pub fn matmul_nt_sl_into(a: &[f32], b: &[f32], dst: &mut [f32], m: usize, ua: usize, ib: usize) {
+    matmul_nt_sl_into_threads(a, b, dst, m, ua, ib, plan_threads(2 * m * ua * ib, m));
 }
 
 /// `[ia,ub] = a[ba,ia]^T @ b[ba,ub]` over flat slices with explicit
@@ -496,6 +522,19 @@ pub fn matmul_tn_sl_q_into_threads(
         }
     });
     stats
+}
+
+/// [`matmul_tn_sl_q_into_threads`] with the auto thread plan.
+pub fn matmul_tn_sl_q_into(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    matmul_tn_sl_q_into_threads(a, b, dst, ba, ia, ub, epi, plan_threads(2 * ba * ia * ub, ia))
 }
 
 /// Allocating form of the fused TN kernel with explicit threads.

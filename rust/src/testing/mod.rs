@@ -22,8 +22,10 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::arith::{FixedFormat, Quantizer, RoundMode};
+use crate::config::{ConvStageSpec, TopologySpec};
 use crate::golden::{MlpShape, Params};
-use crate::tensor::{init::InitSpec, ops, Pcg32, Tensor};
+use crate::runtime::ModelInfo;
+use crate::tensor::{init::InitSpec, ops, Pcg32, Shape, Tensor};
 
 /// Number of cases per property (override with env `LPDNN_PROP_CASES`).
 pub const DEFAULT_CASES: usize = 200;
@@ -206,6 +208,65 @@ pub fn mlp_batch(s: MlpShape, n: usize, seed: u64) -> (Tensor, Tensor) {
     let labels: Vec<usize> =
         (0..n).map(|_| rng.below(s.n_classes as u32) as usize).collect();
     (x, ops::one_hot(&labels, s.n_classes))
+}
+
+/// The tiny 2-conv-stage + 1-dense maxout topology the conv parity
+/// suites train, paired with [`TINY_CONV_SHAPE`]/[`TINY_CONV_CLASSES`].
+pub fn tiny_conv_spec() -> TopologySpec {
+    TopologySpec::conv_net(
+        vec![
+            ConvStageSpec { channels: 3, ksize: 3, pool: 2 },
+            ConvStageSpec { channels: 4, ksize: 3, pool: 2 },
+        ],
+        vec![6],
+        2,
+    )
+}
+
+/// Input shape for [`tiny_conv_spec`]: 8×8 two-channel images.
+pub const TINY_CONV_SHAPE: Shape = Shape::Spatial { h: 8, w: 8, c: 2 };
+
+/// Class count for [`tiny_conv_spec`] fixtures.
+pub const TINY_CONV_CLASSES: usize = 4;
+
+/// Deterministic (params, velocities) for a topology realized against
+/// `in_shape` (manifest order, Glorot weights, zero biases/velocities).
+pub fn topology_state(
+    spec: &TopologySpec,
+    in_shape: Shape,
+    n_classes: usize,
+    seed: u64,
+) -> (Params, Params) {
+    let info = ModelInfo::from_topology_shaped(spec, &in_shape, n_classes)
+        .expect("fixture topology realizes");
+    let mut rng = Pcg32::seeded(seed);
+    let params: Vec<Tensor> =
+        info.params.iter().map(|s| s.init.realize(&s.shape, &mut rng)).collect();
+    let vels = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    (params, vels)
+}
+
+/// A deterministic `[n, ...shape.dims()]` normal batch (~10% exact
+/// zeros, so the conv kernels' zero fast-paths fire) with one-hot
+/// labels.
+pub fn spatial_batch(in_shape: Shape, n: usize, n_classes: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut dims = vec![n];
+    dims.extend(in_shape.dims());
+    let x = Tensor::from_vec(
+        &dims,
+        (0..n * in_shape.len())
+            .map(|_| {
+                if rng.uniform() < 0.1 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect(),
+    );
+    let labels: Vec<usize> = (0..n).map(|_| rng.below(n_classes as u32) as usize).collect();
+    (x, ops::one_hot(&labels, n_classes))
 }
 
 #[cfg(test)]

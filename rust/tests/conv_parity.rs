@@ -1,0 +1,387 @@
+//! Conv-lowering parity: the im2col-lowered conv path (every conv
+//! multiply riding the fused quantized GEMM epilogues) must be
+//! **bit-identical** — exact `u32` output bits *and* exact
+//! [`QuantStats`] counters — to the direct nested-loop reference
+//! kernels, across:
+//!
+//! * all four arithmetics (float32 passthrough, fixed, dynamic-regime
+//!   fixed, float16 simulation),
+//! * all four rounding modes (stochastic via the counter-based
+//!   per-site streams),
+//! * explicit GEMM thread counts {1, 4} at the kernel level, and the
+//!   auto-threaded path at the step level (CI re-runs the suite under
+//!   `LPDNN_THREADS` ∈ {1, 4}),
+//! * fused and two-pass quantization (`StepOptions::fused`) at the
+//!   full-train-step level (`StepOptions::conv_direct` as the A/B).
+//!
+//! A second layer exercises the end-to-end story: conv topologies
+//! parsed from `[[topology.conv]]` TOML and the CLI grammar train
+//! deterministically on the native backend with per-conv-layer dynamic
+//! scale adoption (mirroring `tests/graph_parity.rs`).
+
+use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, QuantStats, Quantizer, RoundMode};
+use lpdnn::config::{ExperimentConfig, TopologySpec};
+use lpdnn::coordinator::{ScaleController, Session};
+use lpdnn::golden::conv::{conv2d_direct_q, conv2d_dw_direct_q, im2col_into, ConvGeom};
+use lpdnn::golden::{Network, StepOptions, STOCHASTIC_SITE_SEED};
+use lpdnn::runtime::BackendSpec;
+use lpdnn::tensor::{ops, Pcg32};
+use lpdnn::testing::{
+    spatial_batch, tiny_conv_spec, topology_state, ROUND_MODES, TINY_CONV_CLASSES,
+    TINY_CONV_SHAPE,
+};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The four arithmetics as kernel epilogues (mode applied per case).
+fn epilogue_cases() -> Vec<(&'static str, Option<FixedFormat>)> {
+    vec![
+        ("float32", Some(FixedFormat::FLOAT32)),
+        ("fixed 10.3", Some(FixedFormat::new(10, 3))),
+        ("dynamic-regime 8.2", Some(FixedFormat::new(8, 2))),
+        ("float16", None), // half_sim
+    ]
+}
+
+fn make_epi(fmt: Option<FixedFormat>, mode: RoundMode) -> QuantEpilogue {
+    let mut epi = match fmt {
+        Some(f) => {
+            let mut q = Quantizer::from_format(f);
+            q.mode = mode;
+            QuantEpilogue::new(q)
+        }
+        None => QuantEpilogue::half_sim(),
+    };
+    if mode == RoundMode::Stochastic {
+        epi = epi.with_rng(ElemRng::for_site(STOCHASTIC_SITE_SEED, 7));
+    }
+    epi
+}
+
+/// An odd-sized geometry (exercises the SAME-padding borders) with a
+/// patch length crossing nothing special — the kernel-level fixture.
+fn geom() -> ConvGeom {
+    ConvGeom { h: 9, w: 7, c_in: 3, c_out: 5, ksize: 5 }
+}
+
+/// Random image with exact zeros sprinkled in, so the zero fast-paths
+/// of both kernel families fire on identical elements.
+fn image(g: &ConvGeom, batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..batch * g.h * g.w * g.c_in)
+        .map(|_| {
+            if rng.uniform() < 0.12 {
+                0.0
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+/// (a) Forward kernels: im2col + fused GEMM ≡ direct reference, exact
+/// bits + stats, across 4 arithmetics × 4 round modes × threads {1, 4}.
+#[test]
+fn forward_conv_im2col_matches_direct_bitwise() {
+    let g = geom();
+    let batch = 3;
+    let x = image(&g, batch, 0xC0);
+    let mut rng = Pcg32::seeded(0xC1);
+    let w: Vec<f32> = (0..g.patch_len() * g.c_out).map(|_| rng.normal()).collect();
+    let bias: Vec<f32> = (0..g.c_out).map(|_| rng.normal()).collect();
+    let mut patches = vec![0.0f32; g.rows(batch) * g.patch_len()];
+    im2col_into(&x, batch, &g, &mut patches);
+
+    for (label, fmt) in epilogue_cases() {
+        for mode in ROUND_MODES {
+            let epi = make_epi(fmt, mode);
+            let mut direct = vec![0.0f32; g.rows(batch) * g.c_out];
+            let st_d = conv2d_direct_q(&x, &w, Some(&bias), &mut direct, batch, &g, epi);
+            for threads in [1usize, 4] {
+                let mut lowered = vec![0.0f32; g.rows(batch) * g.c_out];
+                let st_g = ops::matmul_sl_q_into_threads(
+                    &patches,
+                    &w,
+                    Some(&bias),
+                    &mut lowered,
+                    g.rows(batch),
+                    g.patch_len(),
+                    g.c_out,
+                    epi,
+                    threads,
+                );
+                assert_eq!(
+                    bits(&direct),
+                    bits(&lowered),
+                    "{label} {mode:?} t={threads}: forward bits"
+                );
+                assert_eq!(st_d, st_g, "{label} {mode:?} t={threads}: forward stats");
+            }
+        }
+    }
+}
+
+/// (a) Weight-gradient kernels: the direct dw reference ≡ the TN GEMM
+/// over the patch matrix, same matrix of cases.
+#[test]
+fn dw_conv_im2col_matches_direct_bitwise() {
+    let g = geom();
+    let batch = 3;
+    let x = image(&g, batch, 0xD0);
+    let mut rng = Pcg32::seeded(0xD1);
+    let dz: Vec<f32> = (0..g.rows(batch) * g.c_out).map(|_| rng.normal()).collect();
+    let mut patches = vec![0.0f32; g.rows(batch) * g.patch_len()];
+    im2col_into(&x, batch, &g, &mut patches);
+
+    for (label, fmt) in epilogue_cases() {
+        for mode in ROUND_MODES {
+            let epi = make_epi(fmt, mode);
+            let mut direct = vec![0.0f32; g.patch_len() * g.c_out];
+            let st_d = conv2d_dw_direct_q(&x, &dz, &mut direct, batch, &g, epi);
+            for threads in [1usize, 4] {
+                let mut lowered = vec![0.0f32; g.patch_len() * g.c_out];
+                let st_g = ops::matmul_tn_sl_q_into_threads(
+                    &patches,
+                    &dz,
+                    &mut lowered,
+                    g.rows(batch),
+                    g.patch_len(),
+                    g.c_out,
+                    epi,
+                    threads,
+                );
+                assert_eq!(
+                    bits(&direct),
+                    bits(&lowered),
+                    "{label} {mode:?} t={threads}: dw bits"
+                );
+                assert_eq!(st_d, st_g, "{label} {mode:?} t={threads}: dw stats");
+            }
+        }
+    }
+}
+
+/// The four arithmetics as scale controllers for the step-level suite,
+/// sized for the tiny conv net's 32 groups.
+fn arith_cases(n_groups: usize) -> Vec<(&'static str, ScaleController, bool)> {
+    vec![
+        (
+            "float32",
+            ScaleController::fixed(n_groups, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            false,
+        ),
+        (
+            "fixed 10.3/12.0",
+            ScaleController::fixed(n_groups, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
+            false,
+        ),
+        (
+            "dynamic-regime 8.2/14.1",
+            ScaleController::fixed(n_groups, FixedFormat::new(8, 2), FixedFormat::new(14, 1)),
+            false,
+        ),
+        (
+            "float16",
+            ScaleController::fixed(n_groups, FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            true,
+        ),
+    ]
+}
+
+/// (a) Full train steps through the graph: `conv_direct` ≡ im2col, for
+/// every arithmetic × round mode × fused/two-pass — loss, overflow,
+/// parameter and velocity bits all equal over two steps.
+#[test]
+fn conv_network_step_direct_equals_im2col_bitwise() {
+    let spec = tiny_conv_spec();
+    let net =
+        Network::from_topology_shaped(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES).unwrap();
+    assert_eq!(net.n_groups(), 32);
+    let (x, y) = spatial_batch(TINY_CONV_SHAPE, 6, TINY_CONV_CLASSES, 0xBA);
+    for (label, ctrl, half) in &arith_cases(net.n_groups()) {
+        for mode in ROUND_MODES {
+            for fused in [true, false] {
+                let run = |conv_direct: bool| {
+                    let (mut params, mut vels) =
+                        topology_state(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES, 0x5EED);
+                    let mut trace = Vec::new();
+                    for _ in 0..2 {
+                        let out = net.train_step(
+                            &mut params,
+                            &mut vels,
+                            &x,
+                            &y,
+                            0.1,
+                            0.5,
+                            2.0,
+                            ctrl,
+                            StepOptions {
+                                mode,
+                                half: *half,
+                                dropout: None,
+                                fused,
+                                conv_direct,
+                            },
+                        );
+                        trace.push((out.loss.to_bits(), bits(out.overflow.data())));
+                    }
+                    (trace, params, vels)
+                };
+                let (t_i, p_i, v_i) = run(false);
+                let (t_d, p_d, v_d) = run(true);
+                assert_eq!(
+                    t_i, t_d,
+                    "{label} {mode:?} fused={fused}: loss/overflow diverged"
+                );
+                for (i, (a, b)) in p_i.iter().zip(&p_d).enumerate() {
+                    assert_eq!(
+                        bits(a.data()),
+                        bits(b.data()),
+                        "{label} {mode:?} fused={fused}: param {i}"
+                    );
+                }
+                for (i, (a, b)) in v_i.iter().zip(&v_d).enumerate() {
+                    assert_eq!(
+                        bits(a.data()),
+                        bits(b.data()),
+                        "{label} {mode:?} fused={fused}: vel {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// (a) The overflow counters cover every conv site: one logical Z site
+/// of `k·B·H·W·C_out` elements per stage, H after the pool.
+#[test]
+fn conv_step_counts_the_expected_site_totals() {
+    use lpdnn::runtime::manifest::{group_index, KIND_H, KIND_Z};
+    let spec = tiny_conv_spec();
+    let net =
+        Network::from_topology_shaped(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES).unwrap();
+    let ctrl = ScaleController::fixed(
+        net.n_groups(),
+        FixedFormat::new(10, 3),
+        FixedFormat::new(12, 0),
+    );
+    let (mut params, mut vels) =
+        topology_state(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES, 1);
+    let n = 5;
+    let (x, y) = spatial_batch(TINY_CONV_SHAPE, n, TINY_CONV_CLASSES, 2);
+    let out = net.train_step(
+        &mut params,
+        &mut vels,
+        &x,
+        &y,
+        0.1,
+        0.5,
+        0.0,
+        &ctrl,
+        StepOptions::default(),
+    );
+    let st = out.overflow;
+    assert_eq!(st.at2(group_index(0, KIND_Z), 2), (2 * n * 8 * 8 * 3) as f32);
+    assert_eq!(st.at2(group_index(0, KIND_H), 2), (n * 4 * 4 * 3) as f32);
+    assert_eq!(st.at2(group_index(1, KIND_Z), 2), (2 * n * 4 * 4 * 4) as f32);
+    assert_eq!(st.at2(group_index(1, KIND_H), 2), (n * 2 * 2 * 4) as f32);
+}
+
+/// (b) A conv topology from `[[topology.conv]]` TOML trains end to end
+/// with dynamic fixed point adopting per-conv-layer scales, and the
+/// whole run replays bit-deterministically.
+#[test]
+fn conv_topology_toml_trains_with_dynamic_scales_deterministically() {
+    let toml = r#"
+[experiment]
+name = "conv-dynamic"
+dataset = "cifar_like"
+
+[topology]
+k = 2
+eval_batch = 64
+
+[[topology.conv]]
+channels = 4
+ksize = 3
+
+[[topology.conv]]
+channels = 6
+ksize = 3
+
+[arithmetic]
+kind = "dynamic"
+bits_comp = 10
+bits_up = 12
+max_overflow_rate = 1e-4
+update_every_examples = 128
+init_int_bits = 3
+warmup_steps = 4
+
+[train]
+steps = 10
+lr_start = 0.05
+seed = 7
+
+[data]
+n_train = 96
+n_test = 48
+"#;
+    let cfg = ExperimentConfig::from_toml_str(toml).unwrap();
+    let topo = cfg.topology.as_ref().unwrap();
+    assert_eq!(topo.conv.len(), 2);
+    assert_eq!(topo.n_layers(), 3);
+
+    let run = || Session::new(BackendSpec::native()).run(cfg.clone()).unwrap();
+    let r = run();
+    assert_eq!(r.steps_run, 10);
+    assert!(r.train_loss.is_finite());
+    assert!(r.test_error.is_finite() && r.test_error <= 1.0);
+    // one scale row per conv stage + head, 8 kinds each
+    assert_eq!(r.final_int_bits.len(), 24);
+    // warmup adoption + runtime moves must have taken at least one
+    // group off the uniform init_int_bits=3 cold start
+    assert!(
+        r.final_int_bits.iter().any(|&b| b != 3),
+        "no per-conv-layer scale was ever adopted: {:?}",
+        r.final_int_bits
+    );
+    // the whole run — warmup, adoption, training, eval — replays exactly
+    let r2 = run();
+    assert_eq!(r.test_error.to_bits(), r2.test_error.to_bits());
+    assert_eq!(r.train_loss.to_bits(), r2.train_loss.to_bits());
+    assert_eq!(r.final_int_bits, r2.final_int_bits);
+}
+
+/// (b) The CLI conv grammar end to end: parse, realize against digits,
+/// train on the native backend.
+#[test]
+fn cli_conv_topology_trains_on_digits() {
+    let spec = TopologySpec::parse_cli("c4k3p2,c6k3p1/8x1@k2").unwrap();
+    assert_eq!(spec.n_layers(), 4);
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "cli-conv".into();
+    cfg.model = spec.name.clone();
+    cfg.topology = Some(spec);
+    cfg.data.dataset = "digits".into();
+    cfg.data.n_train = 128;
+    cfg.data.n_test = 64;
+    cfg.train.steps = 3;
+    cfg.train.seed = 11;
+    let r = Session::new(BackendSpec::native()).run(cfg).unwrap();
+    assert_eq!(r.steps_run, 3);
+    assert!(r.test_error.is_finite());
+    assert_eq!(r.final_int_bits.len(), 32);
+}
+
+/// The stats type is re-exported where the kernel suite needs it; keep
+/// a compile-time witness that the parity assertions compare the real
+/// counter type (not a stand-in).
+#[test]
+fn quant_stats_equality_is_field_exact() {
+    let a = QuantStats { n_over: 1, n_half: 2, n_total: 3 };
+    let b = QuantStats { n_over: 1, n_half: 2, n_total: 3 };
+    assert_eq!(a, b);
+}

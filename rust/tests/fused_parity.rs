@@ -282,7 +282,13 @@ fn train_step_fused_bit_identical_to_two_pass() {
                         0.5,
                         2.0,
                         ctrl,
-                        StepOptions { mode, half: *half, dropout: None, fused },
+                        StepOptions {
+                            mode,
+                            half: *half,
+                            dropout: None,
+                            fused,
+                            ..Default::default()
+                        },
                     );
                     losses.push((out.loss.to_bits(), bits(out.overflow.data())));
                 }

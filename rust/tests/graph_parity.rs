@@ -67,7 +67,13 @@ fn graph_pi_mlp_bit_identical_to_monolith() {
         for mode in ROUND_MODES {
             for fused in [true, false] {
                 let (x, y) = mlp_batch(s, 16, 0xBA7C);
-                let opts = || StepOptions { mode, half: *half, dropout: None, fused };
+                let opts = || StepOptions {
+                    mode,
+                    half: *half,
+                    dropout: None,
+                    fused,
+                    ..Default::default()
+                };
                 let run_graph = |net: &Network| {
                     let (mut params, mut vels) = mlp_state(s, 0x5EED);
                     let mut trace = Vec::new();

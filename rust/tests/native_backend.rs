@@ -190,7 +190,11 @@ fn builtin_model_is_consistent() {
     assert_eq!(m.params[4].group(), 16); // l2.w
     assert_eq!(m.group_names[0], "l0.w");
     assert_eq!(m.group_names[23], "l2.dh");
-    assert!(ModelInfo::builtin("conv").is_none());
+    // the conv nets are builtin topologies too (im2col-lowered natively)
+    let conv = ModelInfo::builtin("conv").unwrap();
+    assert_eq!((conv.n_layers, conv.n_groups), (4, 32));
+    assert_eq!(conv.input_shape, vec![28, 28, 1]);
+    assert!(ModelInfo::builtin("resnet").is_none());
 
     // init realizes to the declared shapes and quantizes cleanly
     let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
