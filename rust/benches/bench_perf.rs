@@ -12,9 +12,15 @@
 //!   step` rows: depth 2 overhead per arithmetic, depths 3/4 scaling)
 //! * conv im2col lowering vs the direct nested-loop reference kernels
 //!   (`conv train step` rows, per arithmetic — bit-identical paths)
+//! * integer-domain GEMM vs the simulated-f32 fused path on eligible
+//!   grid operands (`int gemm` rows per orientation and arithmetic,
+//!   plus the `int train step` end-to-end A/B)
 //! * scale controller overhead per tick
 //! * with `--features pjrt` + artifacts: compiled-step latency and the
 //!   L3↔PJRT literal-assembly boundary
+//!
+//! The full table is also persisted as `BENCH_perf.json` (versioned via
+//! [`Table::to_json`]) so results can be diffed across commits.
 
 #[path = "common.rs"]
 mod common;
@@ -25,7 +31,7 @@ use lpdnn::config::{Arithmetic, TopologySpec};
 use lpdnn::coordinator::{ScaleController, Session};
 use lpdnn::golden::{self, MlpShape, Network, StepOptions};
 use lpdnn::runtime::ModelInfo;
-use lpdnn::tensor::{init::InitSpec, ops, Pcg32, Tensor};
+use lpdnn::tensor::{init::InitSpec, int_gemm, ops, Pcg32, Tensor};
 
 fn fmt_stats(s: &Stats) -> String {
     format!(
@@ -458,6 +464,152 @@ fn fused_gemm_section(table: &mut Table) {
     ]);
 }
 
+/// Integer-domain GEMM vs the simulated-f32 fused reference, on grid
+/// operands (the only inputs the integer plan accepts): the `int gemm`
+/// rows per orientation and arithmetic, plus the end-to-end `int train
+/// step` A/B. Shapes are sized so the i32 accumulator bound holds and
+/// the plan engages (asserted via `ops::quant_gemm_plan` — a silent
+/// fallback must not masquerade as a perf result); the two paths are
+/// bit-identical (tests/int_gemm_parity.rs), so rows are pure perf A/Bs.
+fn int_gemm_section(table: &mut Table) {
+    let arithmetics: &[(&str, FixedFormat)] =
+        &[("fixed 10.3", FixedFormat::new(10, 3)), ("fixed 8.-2", FixedFormat::new(8, -2))];
+    let iters = scaled(40).max(10);
+    let mut rng = Pcg32::seeded(43);
+    for &(label, fmt) in arithmetics {
+        let q = Quantizer::from_format(fmt);
+        let mut grid = |len: usize| -> Vec<f32> {
+            let mut v: Vec<f32> = (0..len).map(|_| rng.normal() * 0.2 * q.maxv).collect();
+            q.apply_slice(&mut v);
+            v
+        };
+        let epi = QuantEpilogue::new(q);
+        // deepest reduction the i32 accumulator bound admits at this
+        // format's worst-case |int|, capped at the pi_mlp l0 depth
+        let amax = (fmt.maxv() / fmt.step()) as u64;
+        let kd = ((int_gemm::ACC_BOUND / (amax * amax)) as usize).min(784);
+        let (m, n) = (64usize, 128usize);
+
+        // NN (z sites): dst += a @ b with fused bias + quantization
+        let a = grid(m * kd);
+        let b = grid(kd * n);
+        let bias = grid(n);
+        let zeros = vec![0.0f32; m * n];
+        let plan = ops::quant_gemm_plan(&a, &b, kd, Some(&zeros));
+        assert_eq!(plan, ops::QuantGemmImpl::IntDomain, "nn {label}");
+        let mut dst = zeros;
+        let mut time_nn = |int: bool| {
+            bench(2, iters, || {
+                dst.fill(0.0);
+                let _ = ops::matmul_sl_qd_into(&a, &b, Some(&bias), &mut dst, m, kd, n, epi, int);
+            })
+        };
+        let s_sim = time_nn(false);
+        let s_int = time_nn(true);
+        table.row(&[
+            format!("int gemm nn z 64x{kd}x128+bias ({label})"),
+            format!(
+                "simulated {:.2}ms | integer {:.2}ms | speedup {:.2}x",
+                s_sim.mean * 1e3,
+                s_int.mean * 1e3,
+                s_sim.mean / s_int.mean.max(1e-12),
+            ),
+        ]);
+
+        // NT (dx sites): out = dy @ w^T, assigning
+        let dy = grid(m * kd);
+        let wt = grid(n * kd);
+        let plan = ops::quant_gemm_plan(&dy, &wt, kd, None);
+        assert_eq!(plan, ops::QuantGemmImpl::IntDomain, "nt {label}");
+        let mut time_nt = |int: bool| {
+            bench(2, iters, || {
+                let _ = ops::matmul_nt_sl_qd(&dy, &wt, m, kd, n, epi, int);
+            })
+        };
+        let s_sim = time_nt(false);
+        let s_int = time_nt(true);
+        table.row(&[
+            format!("int gemm nt dx 64x{kd} @ 128x{kd}^T ({label})"),
+            format!(
+                "simulated {:.2}ms | integer {:.2}ms | speedup {:.2}x",
+                s_sim.mean * 1e3,
+                s_int.mean * 1e3,
+                s_sim.mean / s_int.mean.max(1e-12),
+            ),
+        ]);
+
+        // TN (dw sites): dst += x^T @ dz; the batch is the reduction, so
+        // the real l0 gradient shape is bound-safe at both arithmetics
+        let (ba, ia, ub) = (64usize, 784usize, 128usize);
+        let xs = grid(ba * ia);
+        let dz = grid(ba * ub);
+        let zeros = vec![0.0f32; ia * ub];
+        let plan = ops::quant_gemm_plan(&xs, &dz, ba, Some(&zeros));
+        assert_eq!(plan, ops::QuantGemmImpl::IntDomain, "tn {label}");
+        let mut dw = zeros;
+        let mut time_tn = |int: bool| {
+            bench(2, iters, || {
+                dw.fill(0.0);
+                let _ = ops::matmul_tn_sl_qd_into(&xs, &dz, &mut dw, ba, ia, ub, epi, int);
+            })
+        };
+        let s_sim = time_tn(false);
+        let s_int = time_tn(true);
+        table.row(&[
+            format!("int gemm tn dw 64^T 784x128 ({label})"),
+            format!(
+                "simulated {:.2}ms | integer {:.2}ms | speedup {:.2}x",
+                s_sim.mean * 1e3,
+                s_int.mean * 1e3,
+                s_sim.mean / s_int.mean.max(1e-12),
+            ),
+        ]);
+    }
+
+    // end-to-end: a full golden train step with every quantized GEMM
+    // site dispatched integer-domain vs simulated. The formats keep all
+    // pi_mlp site shapes inside the accumulator bound, and params/x are
+    // pre-quantized onto their grids (as the Trainer maintains them), so
+    // the forward/dw sites actually take the integer path.
+    let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+    let (comp, up) = (FixedFormat::new(8, -2), FixedFormat::new(8, 0));
+    let ctrl = ScaleController::fixed(24, comp, up);
+    let step_iters = scaled(10).max(3);
+    let time_step = |int_domain: bool| {
+        let (mut params, mut vels, mut x, y) = pi_mlp_step_fixture();
+        let qup = Quantizer::from_format(up);
+        for p in &mut params {
+            qup.apply_slice(p.data_mut());
+        }
+        Quantizer::from_format(comp).apply_slice(x.data_mut());
+        bench(1, step_iters, || {
+            let _ = golden::train_step_opt(
+                shape,
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.01,
+                0.5,
+                3.0,
+                &ctrl,
+                StepOptions { fused: true, int_domain, ..Default::default() },
+            );
+        })
+    };
+    let s_sim = time_step(false);
+    let s_int = time_step(true);
+    table.row(&[
+        "int train step (pi_mlp, batch 64, fixed 8.-2 comp / 8.0 up)".into(),
+        format!(
+            "simulated {:.2}ms | integer {:.2}ms | speedup {:.2}x",
+            s_sim.mean * 1e3,
+            s_int.mean * 1e3,
+            s_sim.mean / s_int.mean.max(1e-12),
+        ),
+    ]);
+}
+
 fn quantizer_section(table: &mut Table) {
     let mut rng = Pcg32::seeded(2);
     let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
@@ -554,6 +706,7 @@ fn main() {
 
     matmul_section(&mut table);
     fused_gemm_section(&mut table);
+    int_gemm_section(&mut table);
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
     graph_step_section(&mut table);
@@ -566,4 +719,8 @@ fn main() {
     println!("\n=== performance micro-benchmarks ===");
     table.print();
     println!("(tracked across optimization iterations in EXPERIMENTS.md §Perf)");
+    match std::fs::write("BENCH_perf.json", table.to_json().to_string_pretty()) {
+        Ok(()) => println!("(rows persisted to BENCH_perf.json)"),
+        Err(e) => eprintln!("warning: could not write BENCH_perf.json: {e}"),
+    }
 }

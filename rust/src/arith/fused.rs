@@ -169,6 +169,41 @@ impl QuantEpilogue {
         }
         st
     }
+
+    /// Integer-aware variant of the epilogue, for the integer-domain GEMM
+    /// path (`tensor::int_gemm` + the `*_qd` dispatch in `tensor::ops`):
+    /// convert an i32 accumulator tile to f32 at the power-of-two `scale`,
+    /// add the optional bias row (row width `n`), then run the standard
+    /// [`QuantEpilogue::run`] over the tile.
+    ///
+    /// Under the int-GEMM eligibility bound (`|acc| ≤ 2^24` and `scale`
+    /// in the exact-conversion exponent window — see
+    /// `tensor::int_gemm`'s module docs) the conversion is exact, so this
+    /// is bit-identical to running the f32 kernel + [`QuantEpilogue::run`]
+    /// on the same tile — enforced by `tests/int_gemm_parity.rs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_int(
+        &self,
+        acc: &[i32],
+        scale: f32,
+        n: usize,
+        bias: Option<&[f32]>,
+        dst: &mut [f32],
+        offset: u64,
+    ) -> QuantStats {
+        debug_assert_eq!(acc.len(), dst.len(), "run_int tile sizes");
+        for (o, &v) in dst.iter_mut().zip(acc) {
+            *o = v as f32 * scale;
+        }
+        if let Some(bs) = bias {
+            for row in dst.chunks_mut(n) {
+                for (o, &bv) in row.iter_mut().zip(bs) {
+                    *o += bv;
+                }
+            }
+        }
+        self.run(dst, offset)
+    }
 }
 
 #[cfg(test)]

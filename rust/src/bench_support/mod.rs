@@ -4,7 +4,10 @@
 //! Every `benches/*.rs` binary is `harness = false` and uses this module
 //! to print the rows/series the paper's tables and figures report.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::config::Json;
 
 /// Summary statistics over a sample of durations or values.
 #[derive(Clone, Debug)]
@@ -120,6 +123,34 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.to_string());
     }
+
+    /// The table as a versioned JSON document so benches can persist
+    /// their results (e.g. `BENCH_perf.json`) in a form CI and the
+    /// EXPERIMENTS.md tooling can grep and diff across commits:
+    /// `{"version": 1, "headers": [...], "rows": [{header: cell}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let m: BTreeMap<String, Json> = self
+                    .headers
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                    .collect();
+                Json::Object(m)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(1.0));
+        doc.insert(
+            "headers".to_string(),
+            Json::Array(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        doc.insert("rows".to_string(), Json::Array(rows));
+        Json::Object(doc)
+    }
 }
 
 /// An (x, y) series printer with a crude unicode bar chart — enough to see
@@ -172,6 +203,22 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only one".to_string()]);
+    }
+
+    #[test]
+    fn table_to_json_round_trips_through_the_parser() {
+        let mut t = Table::new(&["benchmark", "result"]);
+        t.row(&["int gemm nn".to_string(), "simulated 1.0ms | integer 0.5ms".to_string()]);
+        let doc = crate::config::json::parse(&t.to_json().to_string_pretty()).expect("json");
+        assert_eq!(doc.get("version").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            doc.get("headers").unwrap().as_str_vec().unwrap(),
+            vec!["benchmark".to_string(), "result".to_string()]
+        );
+        let rows = doc.get("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("benchmark").unwrap().as_str().unwrap(), "int gemm nn");
+        assert!(rows[0].get("result").unwrap().as_str().unwrap().contains("integer"));
     }
 
     #[test]

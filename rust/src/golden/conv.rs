@@ -3,7 +3,10 @@
 //!
 //! The graph's [`MaxoutConv2d`](super::MaxoutConv2d) layer lowers every
 //! convolution onto the existing fused quantize-aware GEMM kernels
-//! ([`crate::tensor::ops::matmul_sl_q_into`] & co.): [`im2col_into`]
+//! ([`crate::tensor::ops::matmul_sl_qd_into`] & co., so eligible conv
+//! GEMMs also ride the integer-domain lowering under
+//! `StepOptions::int_domain` / `LPDNN_INT_GEMM=1` — bit-identically,
+//! see `tests/int_gemm_parity.rs`): [`im2col_into`]
 //! materializes the SAME-padded stride-1 patch matrix
 //! `[B·H·W, ksize²·C_in]` once per step (into a per-layer scratch buffer
 //! reused across steps), and each maxout filter's `[patch_len, C_out]`

@@ -24,10 +24,12 @@
 //! each stage by im2col ([`super::conv`]): the SAME-padded stride-1
 //! patch matrix is built once per step into a per-layer scratch buffer
 //! (allocated on the first step of a run, reused afterwards), and each
-//! maxout filter's weight slab rides `matmul_sl_q_into` /
-//! `matmul_tn_sl_q_into` with the Z/DW quantization fused into the
+//! maxout filter's weight slab rides `matmul_sl_qd_into` /
+//! `matmul_tn_sl_qd_into` with the Z/DW quantization fused into the
 //! tile epilogues — bit-identical to the direct nested-loop reference
-//! kernels (`StepOptions::conv_direct`, `tests/conv_parity.rs`).
+//! kernels (`StepOptions::conv_direct`, `tests/conv_parity.rs`). The
+//! `_qd` dispatch also lets eligible conv GEMMs run in the integer
+//! domain (`StepOptions::int_domain`, `tests/int_gemm_parity.rs`).
 //!
 //! **The bit-identity contract.** The graph executor is not "close to"
 //! the monolithic step it replaced — it is bit-identical on the builtin
@@ -308,7 +310,7 @@ impl Layer for MaxoutDense {
             let brow = &b.data()[j * units..(j + 1) * units];
             let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
             if q.fused {
-                zst.merge(ops::matmul_sl_q_into(
+                zst.merge(ops::matmul_sl_qd_into(
                     x.data(),
                     wj,
                     Some(brow),
@@ -317,6 +319,7 @@ impl Layer for MaxoutDense {
                     d_in,
                     units,
                     epi.with_base((j * batch * units) as u64),
+                    q.int_domain,
                 ));
             } else {
                 let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
@@ -391,7 +394,7 @@ impl Layer for MaxoutDense {
             let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
             let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
             if q.fused {
-                dwst.merge(ops::matmul_tn_sl_q_into(
+                dwst.merge(ops::matmul_tn_sl_qd_into(
                     x.data(),
                     dzj,
                     dwj_dst,
@@ -399,6 +402,7 @@ impl Layer for MaxoutDense {
                     d_in,
                     units,
                     epi.with_base((j * d_in * units) as u64),
+                    q.int_domain,
                 ));
             } else {
                 let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
@@ -491,7 +495,7 @@ impl Layer for SoftmaxHead {
 
         let epi = q.epilogue(self.group, KIND_Z);
         let z = if q.fused {
-            let (v, st) = ops::matmul_sl_q(
+            let (v, st) = ops::matmul_sl_qd(
                 x.data(),
                 w.data(),
                 Some(b.data()),
@@ -499,6 +503,7 @@ impl Layer for SoftmaxHead {
                 units,
                 classes,
                 epi,
+                q.int_domain,
             );
             q.record(self.group, KIND_Z, st);
             Tensor::from_vec(&[batch, classes], v)
@@ -537,7 +542,8 @@ impl Layer for SoftmaxHead {
 
         let epi = q.epilogue(self.group, KIND_DW);
         let dw = if q.fused {
-            let (v, st) = ops::matmul_tn_sl_q(x.data(), dz.data(), batch, units, classes, epi);
+            let (v, st) =
+                ops::matmul_tn_sl_qd(x.data(), dz.data(), batch, units, classes, epi, q.int_domain);
             q.record(self.group, KIND_DW, st);
             Tensor::from_vec(&[units, classes], v)
         } else {
@@ -554,8 +560,15 @@ impl Layer for SoftmaxHead {
         let dx = dx_group.map(|g| {
             let epi = q.epilogue(g, KIND_DH);
             if q.fused {
-                let (v, st) =
-                    ops::matmul_nt_sl_q(dz.data(), w.data(), batch, classes, units, epi);
+                let (v, st) = ops::matmul_nt_sl_qd(
+                    dz.data(),
+                    w.data(),
+                    batch,
+                    classes,
+                    units,
+                    epi,
+                    q.int_domain,
+                );
                 q.record(g, KIND_DH, st);
                 Tensor::from_vec(&[batch, units], v)
             } else {
@@ -774,7 +787,7 @@ impl Layer for MaxoutConv2d {
                 let brow = &b.data()[j * c_out..(j + 1) * c_out];
                 let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
                 if q.fused {
-                    zst.merge(ops::matmul_sl_q_into(
+                    zst.merge(ops::matmul_sl_qd_into(
                         &scratch.patches,
                         wj,
                         Some(brow),
@@ -783,6 +796,7 @@ impl Layer for MaxoutConv2d {
                         plen,
                         c_out,
                         epi.with_base((j * rows * c_out) as u64),
+                        q.int_domain,
                     ));
                 } else {
                     let zj = ops::matmul_sl(&scratch.patches, wj, rows, plen, c_out);
@@ -869,7 +883,7 @@ impl Layer for MaxoutConv2d {
             } else if q.fused {
                 // the forward pass of this same step filled the patches
                 debug_assert_eq!(scratch.patches.len(), rows * plen);
-                dwst.merge(ops::matmul_tn_sl_q_into(
+                dwst.merge(ops::matmul_tn_sl_qd_into(
                     &scratch.patches,
                     dzj,
                     dwj_dst,
@@ -877,6 +891,7 @@ impl Layer for MaxoutConv2d {
                     plen,
                     c_out,
                     epi.with_base((j * plen * c_out) as u64),
+                    q.int_domain,
                 ));
             } else {
                 debug_assert_eq!(scratch.patches.len(), rows * plen);
@@ -1253,6 +1268,7 @@ impl Network {
         let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
         q.fused = opts.fused;
         q.conv_direct = opts.conv_direct;
+        q.int_domain = opts.int_domain;
         if opts.mode == RoundMode::Stochastic {
             // true stochastic rounding draws one uniform sample per
             // element from counter-based per-site streams (index-keyed,

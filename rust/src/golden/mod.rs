@@ -83,6 +83,19 @@ pub fn fused_default() -> bool {
     *FUSED.get_or_init(|| std::env::var("LPDNN_FUSED").map(|v| v != "0").unwrap_or(true))
 }
 
+/// Default for [`StepOptions::int_domain`]: the integer-domain GEMM
+/// lowering (`tensor::int_gemm` + the `*_qd` dispatch) engages when
+/// `LPDNN_INT_GEMM` is set to anything but `0`. Off by default — the
+/// simulated path is the reference; the integer path is bit-identical
+/// wherever eligible (`tests/int_gemm_parity.rs`) and falls back to
+/// simulated where not, so flipping this switch never changes results.
+/// Only fused sites dispatch (with `LPDNN_FUSED=0` the two-pass
+/// reference path runs and `LPDNN_INT_GEMM` is ignored).
+pub fn int_gemm_default() -> bool {
+    static INT_GEMM: OnceLock<bool> = OnceLock::new();
+    *INT_GEMM.get_or_init(|| std::env::var("LPDNN_INT_GEMM").map(|v| v != "0").unwrap_or(false))
+}
+
 /// 2-hidden-layer maxout MLP shape description — the legacy fixed-depth
 /// entry points ([`train_step_opt`], [`reference`]) take it; the graph
 /// subsystem generalizes it to [`crate::config::TopologySpec`].
@@ -145,6 +158,10 @@ pub struct StepOptions {
     /// (`tests/conv_parity.rs`); a perf A/B hook for `bench_perf`'s
     /// `conv train step` rows.
     pub conv_direct: bool,
+    /// Run eligible fused GEMM sites in the integer domain (i8/i16
+    /// operands, i32 accumulators) instead of simulated f32. Bit-identical
+    /// either way (`tests/int_gemm_parity.rs`); see [`int_gemm_default`].
+    pub int_domain: bool,
 }
 
 impl Default for StepOptions {
@@ -155,6 +172,7 @@ impl Default for StepOptions {
             dropout: None,
             fused: fused_default(),
             conv_direct: false,
+            int_domain: int_gemm_default(),
         }
     }
 }
@@ -182,6 +200,9 @@ pub struct GoldenQ<'c> {
     /// Route conv stages through the direct nested-loop reference
     /// kernels instead of the im2col-lowered GEMMs. Same bits either way.
     pub conv_direct: bool,
+    /// Run eligible fused GEMM sites in the integer domain. Same bits
+    /// either way (only fused sites consult this).
+    pub int_domain: bool,
     stats: Vec<QuantStats>,
     /// Base seed for the counter-based stochastic-rounding streams
     /// (`None` = deterministic midpoint sample, like `apply_slice`).
@@ -202,6 +223,7 @@ impl<'c> GoldenQ<'c> {
             half,
             fused: fused_default(),
             conv_direct: false,
+            int_domain: int_gemm_default(),
             stats: vec![QuantStats::default(); ctrl.n_groups()],
             stochastic_seed: None,
             site: 0,

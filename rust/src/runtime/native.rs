@@ -186,7 +186,8 @@ impl Backend for NativeBackend {
             hp.max_norm,
             ctrl,
             // defaults: canonical half-away rounding, fused Z/DW/DX
-            // epilogues unless LPDNN_FUSED=0 (same bits either way)
+            // epilogues unless LPDNN_FUSED=0, integer-domain GEMMs only
+            // when LPDNN_INT_GEMM=1 (same bits every way)
             StepOptions { half: run.half, dropout, ..Default::default() },
         );
         Ok(StepOut { loss: out.loss, overflow: out.overflow })

@@ -1,0 +1,477 @@
+//! Integer-domain GEMM substrate: pack f32 operands that live on a common
+//! power-of-two grid into i8/i16, multiply with i32 accumulators, and
+//! prove the result bit-identical to the f32 kernels.
+//!
+//! The paper's point is that a low-precision *multiplier* is the cheap
+//! unit; the fused kernels in [`super::ops`] still simulate fixed-point
+//! with f32 multiplies. This module is the datapath that actually pays
+//! in integers. The contract that makes it safe to swap in:
+//!
+//! **Eligibility ⇒ bit-identity.** A GEMM site may run in the integer
+//! domain only when all of the following hold (checked per call by
+//! [`pack`] + [`accum_bound_ok`] + the exponent window):
+//!
+//! 1. every element of both operands decomposes as `int · 2^p` with a
+//!    *common* exponent `p` per operand and `|int| ≤ i16::MAX`
+//!    ([`pack`] returns `None` otherwise — e.g. raw float32 data);
+//! 2. the worst-case absolute sum `inner · amax_a · amax_b` is at most
+//!    [`ACC_BOUND`] `= 2^24`: then every i32 partial sum is exact AND
+//!    every f32 partial sum in the simulated kernel is exact (all
+//!    intermediates are integers below the f32 mantissa limit), so the
+//!    two paths compute the *same real number*, independent of k-order,
+//!    blocking or zero-skipping;
+//! 3. the product exponent `pa + pb` lies in `[`[`EXP_LO`]`, `[`EXP_HI`]`]`,
+//!    so `acc as f32 * 2^(pa+pb)` is exact: any `S · 2^e` with
+//!    `|S| ≤ 2^24` and `e ≥ -149` is representable (down to the f32
+//!    subnormal floor) and `e ≤ 103` rules out overflow.
+//!
+//! Zero outputs agree in sign too: exact f32 accumulation that starts at
+//! `+0.0` can only produce `+0.0` (IEEE-754 exact cancellation yields
+//! `+0.0` in round-to-nearest, and `+0.0 + -0.0 = +0.0`), and an i32
+//! accumulator of `0` converts to `+0.0`. Ineligible sites simply fall
+//! back to the simulated kernels — which are the reference — so the
+//! dispatch in `ops.rs` is bit-transparent *unconditionally*.
+//!
+//! Inner loops are plain slice-zip reductions over widened i32 values:
+//! contiguous layout, no gather, no data-dependent control flow inside
+//! the innermost loop — the shape LLVM autovectorizes without `std::arch`
+//! (the zero-dep constraint rules out mandatory intrinsics anyway).
+
+/// Maximum worst-case absolute sum for an eligible site: `2^24`, the f32
+/// mantissa limit. Below it both the i32 and the simulated-f32
+/// accumulations are exact (and i32 overflow is impossible by a margin
+/// of `2^7`).
+pub const ACC_BOUND: u64 = 1 << 24;
+
+/// Lowest product exponent `pa + pb` for which `acc as f32 * 2^(pa+pb)`
+/// is exact: the f32 subnormal floor `2^-149`.
+pub const EXP_LO: i32 = -149;
+
+/// Highest product exponent: `2^24 · 2^103 = 2^127 ≤ f32::MAX`, so the
+/// conversion can never overflow.
+pub const EXP_HI: i32 = 103;
+
+/// K-dimension block size of the integer NN kernel (mirrors the f32
+/// kernel's panel size; integer accumulation is exact so blocking is a
+/// pure locality choice).
+const KC: usize = 128;
+
+/// Storage element of a packed operand: i8 or i16, widened to i32 in the
+/// kernels' inner loops.
+pub trait PackInt: Copy + Send + Sync {
+    fn widen(self) -> i32;
+}
+
+impl PackInt for i8 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl PackInt for i16 {
+    #[inline(always)]
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+/// The integer payload of a packed operand. i8 when every magnitude fits
+/// (the common case for the paper's ≤ 8-bit storage grids), i16 up to
+/// the 16-bit grids the sweeps use.
+pub enum PackedInts {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+}
+
+/// An f32 slice re-expressed exactly as `ints[i] · 2^exp`.
+pub struct Packed {
+    pub ints: PackedInts,
+    /// Common power-of-two exponent: `value_i = ints[i] as f32 * 2^exp`.
+    pub exp: i32,
+    /// `max |ints[i]|` — input to the accumulator worst-case bound.
+    pub amax: u32,
+}
+
+impl Packed {
+    pub fn len(&self) -> usize {
+        match &self.ints {
+            PackedInts::I8(v) => v.len(),
+            PackedInts::I16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the payload fits the narrow (i8) storage class.
+    pub fn is_i8(&self) -> bool {
+        matches!(self.ints, PackedInts::I8(_))
+    }
+
+    /// Exact inverse of [`pack`]: every element reproduces the original
+    /// f32 bits (`-0.0` inputs come back as `+0.0`; pack treats all
+    /// zeros as integer 0, which the GEMM bit-identity argument shows is
+    /// unobservable in any accumulated output).
+    pub fn unpack(&self) -> Vec<f32> {
+        let s = exp2f(self.exp);
+        match &self.ints {
+            PackedInts::I8(v) => v.iter().map(|&i| i as f32 * s).collect(),
+            PackedInts::I16(v) => v.iter().map(|&i| i as f32 * s).collect(),
+        }
+    }
+}
+
+/// Exact `2^e` as f32 for `e ∈ [-149, 127]` (computed in f64, where every
+/// such power is normal, then narrowed — the narrowing is exact because
+/// the value is representable, subnormals included).
+pub fn exp2f(e: i32) -> f32 {
+    2f64.powi(e) as f32
+}
+
+/// Decompose a finite f32 into `(m, e)` with `v = m · 2^e` and `m` odd
+/// (or `(0, 0)` for ±0.0). Returns `None` for NaN/±inf.
+fn decompose(v: f32) -> Option<(i32, i32)> {
+    if v == 0.0 {
+        return Some((0, 0));
+    }
+    let bits = v.to_bits();
+    let biased = ((bits >> 23) & 0xFF) as i32;
+    if biased == 0xFF {
+        return None; // inf / NaN
+    }
+    let frac = (bits & 0x7F_FFFF) as i32;
+    let (mut m, mut e) = if biased == 0 {
+        (frac, -149) // subnormal
+    } else {
+        (frac | (1 << 23), biased - 127 - 23)
+    };
+    let tz = m.trailing_zeros() as i32;
+    m >>= tz;
+    e += tz;
+    Some((if bits >> 31 != 0 { -m } else { m }, e))
+}
+
+/// Pack an f32 slice onto a common power-of-two grid: `Some(p)` with
+/// `xs[i] == p.ints[i] · 2^(p.exp)` exactly, or `None` when any element
+/// is non-finite or the integers would not fit i16 (raw float32 data,
+/// operands spanning > 15 octaves of grid, …). Quantized activations,
+/// weights and gradients on the paper's storage formats always pack;
+/// `None` just means "stay on the simulated path".
+pub fn pack(xs: &[f32]) -> Option<Packed> {
+    let mut dec = Vec::with_capacity(xs.len());
+    let mut p: Option<i32> = None;
+    for &v in xs {
+        let (m, e) = decompose(v)?;
+        if m != 0 {
+            // fail fast on data that can never fit (odd mantissa wider
+            // than 15 bits, e.g. generic float32 values)
+            if m.unsigned_abs() > i16::MAX as u32 {
+                return None;
+            }
+            p = Some(p.map_or(e, |p0| p0.min(e)));
+        }
+        dec.push((m, e));
+    }
+    let p = p.unwrap_or(0);
+    let mut ints = Vec::with_capacity(xs.len());
+    let mut amax: u32 = 0;
+    for (m, e) in dec {
+        if m == 0 {
+            ints.push(0i16);
+            continue;
+        }
+        let s = e - p; // ≥ 0 by construction of p
+        if s > 14 {
+            return None; // |m| ≥ 1 ⇒ |m << s| > i16::MAX
+        }
+        let mag = (m.unsigned_abs() as u64) << s;
+        if mag > i16::MAX as u64 {
+            return None;
+        }
+        amax = amax.max(mag as u32);
+        ints.push(if m < 0 { -(mag as i16) } else { mag as i16 });
+    }
+    let ints = if amax <= i8::MAX as u32 {
+        PackedInts::I8(ints.iter().map(|&v| v as i8).collect())
+    } else {
+        PackedInts::I16(ints)
+    };
+    Some(Packed { ints, exp: p, amax })
+}
+
+/// Worst-case absolute value of any partial sum at a GEMM site:
+/// `inner · amax_a · amax_b` (saturating — a saturated value always
+/// fails the bound check).
+pub fn worst_case_sum(inner: usize, amax_a: u32, amax_b: u32) -> u64 {
+    (inner as u64).saturating_mul(amax_a as u64).saturating_mul(amax_b as u64)
+}
+
+/// The accumulator eligibility bound: no i32 partial sum can exceed
+/// `2^24`, which simultaneously guarantees i32 never overflows and the
+/// simulated-f32 accumulation of the same products is exact.
+pub fn accum_bound_ok(inner: usize, amax_a: u32, amax_b: u32) -> bool {
+    worst_case_sum(inner, amax_a, amax_b) <= ACC_BOUND
+}
+
+/// Integer NN kernel: `out[m,n] += a[m,kd] @ b[kd,n]` in i32, with
+/// `m = out.len() / n`. Same panel blocking and zero-skip as the f32
+/// kernel (pure perf choices — integer accumulation is order-exact).
+pub fn imm_nn_serial<A: PackInt, B: PackInt>(
+    a: &[A],
+    b: &[B],
+    out: &mut [i32],
+    kd: usize,
+    n: usize,
+) {
+    if n == 0 || kd == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    let mut kb = 0;
+    while kb < kd {
+        let kend = (kb + KC).min(kd);
+        for i in 0..m {
+            let arow = &a[i * kd..(i + 1) * kd];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk].widen();
+                if aik == 0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv.widen();
+                }
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// Integer NT kernel: `out[m,ib] = a[m,ua] @ b[ib,ua]^T` (assigns dot
+/// products), with `m = out.len() / ib`.
+pub fn imm_nt_serial<A: PackInt, B: PackInt>(
+    a: &[A],
+    b: &[B],
+    out: &mut [i32],
+    ua: usize,
+    ib: usize,
+) {
+    if ib == 0 {
+        return;
+    }
+    let m = out.len() / ib;
+    for i in 0..m {
+        let arow = &a[i * ua..(i + 1) * ua];
+        let orow = &mut out[i * ib..(i + 1) * ib];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * ua..(j + 1) * ua];
+            let mut acc = 0i32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x.widen() * y.widen();
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Integer TN kernel for a row-slab: `out[ii,u] += a[nrow, i0+ii] *
+/// b[nrow, u]` over all `ba` batch rows, `ii in 0..out.len()/ub`.
+pub fn imm_tn_serial<A: PackInt, B: PackInt>(
+    a: &[A],
+    b: &[B],
+    out: &mut [i32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    i0: usize,
+) {
+    if ub == 0 {
+        return;
+    }
+    let icount = out.len() / ub;
+    for nrow in 0..ba {
+        let arow = &a[nrow * ia..(nrow + 1) * ia];
+        let brow = &b[nrow * ub..(nrow + 1) * ub];
+        for ii in 0..icount {
+            let av = arow[i0 + ii].widen();
+            if av == 0 {
+                continue;
+            }
+            let orow = &mut out[ii * ub..(ii + 1) * ub];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv.widen();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp2f_is_exact_at_the_extremes() {
+        assert_eq!(exp2f(0), 1.0);
+        assert_eq!(exp2f(-1), 0.5);
+        assert_eq!(exp2f(10), 1024.0);
+        assert_eq!(exp2f(-149).to_bits(), 1); // smallest subnormal
+        assert_eq!(exp2f(-126), f32::MIN_POSITIVE);
+        assert_eq!(exp2f(127), 2f32.powi(127));
+    }
+
+    #[test]
+    fn decompose_roundtrips_odd_mantissas() {
+        for v in [1.0f32, -1.0, 0.5, 3.0, -0.75, 1.5e-3, 2f32.powi(-149)] {
+            let (m, e) = decompose(v).unwrap();
+            assert!(m % 2 != 0, "mantissa must be odd for {v}");
+            let back = m as f64 * 2f64.powi(e);
+            assert_eq!(back as f32, v, "{v}");
+        }
+        assert_eq!(decompose(0.0), Some((0, 0)));
+        assert_eq!(decompose(-0.0), Some((0, 0)));
+        assert_eq!(decompose(f32::NAN), None);
+        assert_eq!(decompose(f32::INFINITY), None);
+    }
+
+    #[test]
+    fn pack_roundtrips_grid_values_exactly() {
+        // values on a Q3.4 grid (step 1/16), mixed with zeros
+        let step = 1.0f32 / 16.0;
+        let xs: Vec<f32> = [-128i32, -37, -1, 0, 1, 5, 77, 127]
+            .iter()
+            .map(|&k| k as f32 * step)
+            .collect();
+        let p = pack(&xs).expect("grid values pack");
+        assert!(!p.is_i8(), "amax 128 exceeds i8::MAX, needs i16");
+        assert_eq!(p.amax, 128);
+        let back = p.unpack();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pack_chooses_i8_when_it_fits() {
+        let xs: Vec<f32> = (-127i32..=127).map(|k| k as f32 * 0.25).collect();
+        let p = pack(&xs).expect("packs");
+        assert!(p.is_i8());
+        assert_eq!(p.amax, 127);
+        assert_eq!(p.exp, -2);
+        for (a, b) in xs.iter().zip(&p.unpack()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pack_handles_mixed_grids_via_common_exponent() {
+        // 2.0 = 1·2^1 and 0.375 = 3·2^-3 → common p = -3: ints 16 and 3
+        let p = pack(&[2.0, 0.375]).expect("packs");
+        assert_eq!(p.exp, -3);
+        assert_eq!(p.amax, 16);
+        assert_eq!(p.unpack(), vec![2.0, 0.375]);
+    }
+
+    #[test]
+    fn pack_rejects_wide_mantissas_and_nonfinite() {
+        assert!(pack(&[0.1f32]).is_none(), "0.1 has a 24-bit odd mantissa");
+        assert!(pack(&[f32::NAN]).is_none());
+        assert!(pack(&[1.0, f32::INFINITY]).is_none());
+        // > 15 octaves apart: ints would need > i16
+        assert!(pack(&[1.0, 2f32.powi(-20)]).is_none());
+    }
+
+    #[test]
+    fn pack_of_all_zeros_is_trivial() {
+        let p = pack(&[0.0, -0.0, 0.0]).expect("zeros pack");
+        assert_eq!((p.exp, p.amax), (0, 0));
+        assert!(p.unpack().iter().all(|v| v.to_bits() == 0));
+    }
+
+    #[test]
+    fn accum_bound_matches_definition() {
+        assert!(accum_bound_ok(784, 64, 64)); // unit-scale data at mnist fan-in
+        assert!(!accum_bound_ok(784, 512, 512)); // full-range 10-bit grids
+        assert!(accum_bound_ok(0, u32::MAX, u32::MAX));
+        assert!(accum_bound_ok(1 << 24, 1, 1));
+        assert!(!accum_bound_ok(1 << 25, 1, 1));
+        // saturating product can't sneak under the bound
+        assert!(!accum_bound_ok(usize::MAX, u32::MAX, u32::MAX));
+    }
+
+    fn naive_nn(a: &[i32], b: &[i32], m: usize, kd: usize, n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for k in 0..kd {
+                    out[i * n + j] += a[i * kd + k] * b[k * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn integer_kernels_match_naive_loops() {
+        let mut state = 0x1234_5678u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as i32 % 21) - 10
+        };
+        let (m, kd, n) = (5usize, 7usize, 4usize);
+        let a8: Vec<i8> = (0..m * kd).map(|_| next() as i8).collect();
+        let b16: Vec<i16> = (0..kd * n).map(|_| next() as i16).collect();
+        let aw: Vec<i32> = a8.iter().map(|&v| v as i32).collect();
+        let bw: Vec<i32> = b16.iter().map(|&v| v as i32).collect();
+
+        let mut nn = vec![0i32; m * n];
+        imm_nn_serial(&a8, &b16, &mut nn, kd, n);
+        assert_eq!(nn, naive_nn(&aw, &bw, m, kd, n));
+
+        // NT: a[m,kd] @ b2[n,kd]^T equals NN against transposed b2
+        let b2: Vec<i16> = (0..n * kd).map(|_| next() as i16).collect();
+        let mut b2t = vec![0i32; kd * n];
+        for j in 0..n {
+            for k in 0..kd {
+                b2t[k * n + j] = b2[j * kd + k] as i32;
+            }
+        }
+        let mut nt = vec![0i32; m * n];
+        imm_nt_serial(&a8, &b2, &mut nt, kd, n);
+        assert_eq!(nt, naive_nn(&aw, &b2t, m, kd, n));
+
+        // TN: a[ba,ia]^T @ b[ba,ub], checked slab by slab
+        let (ba, ia, ub) = (6usize, 5usize, 3usize);
+        let at: Vec<i8> = (0..ba * ia).map(|_| next() as i8).collect();
+        let bt: Vec<i8> = (0..ba * ub).map(|_| next() as i8).collect();
+        let mut att = vec![0i32; ia * ba];
+        for r in 0..ba {
+            for c in 0..ia {
+                att[c * ba + r] = at[r * ia + c] as i32;
+            }
+        }
+        let btw: Vec<i32> = bt.iter().map(|&v| v as i32).collect();
+        let want = naive_nn(&att, &btw, ia, ba, ub);
+        for (i0, rows) in [(0usize, ia), (1, 2), (4, 1)] {
+            let mut slab = vec![0i32; rows * ub];
+            imm_tn_serial(&at, &bt, &mut slab, ba, ia, ub, i0);
+            assert_eq!(slab[..], want[i0 * ub..(i0 + rows) * ub], "slab {i0}+{rows}");
+        }
+    }
+
+    #[test]
+    fn blocked_nn_handles_kd_across_panel_boundaries() {
+        // kd > KC exercises the panel loop; exact integer accumulation
+        // means blocking must be invisible
+        let (m, kd, n) = (3usize, 300usize, 2usize);
+        let a: Vec<i8> = (0..m * kd).map(|i| ((i % 5) as i8) - 2).collect();
+        let b: Vec<i8> = (0..kd * n).map(|i| ((i % 7) as i8) - 3).collect();
+        let aw: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+        let bw: Vec<i32> = b.iter().map(|&v| v as i32).collect();
+        let mut out = vec![0i32; m * n];
+        imm_nn_serial(&a, &b, &mut out, kd, n);
+        assert_eq!(out, naive_nn(&aw, &bw, m, kd, n));
+    }
+}

@@ -11,6 +11,7 @@
 //! obviously-correct loops, nothing more.
 
 pub mod init;
+pub mod int_gemm;
 pub mod ops;
 pub mod rng;
 

@@ -32,6 +32,7 @@
 
 use std::sync::OnceLock;
 
+use super::int_gemm::{self, Packed};
 use super::Tensor;
 use crate::arith::{QuantEpilogue, QuantStats};
 
@@ -564,6 +565,486 @@ pub fn matmul_tn_sl_q(
     matmul_tn_sl_q_threads(a, b, ba, ia, ub, epi, plan_threads(2 * ba * ia * ub, ia))
 }
 
+// ---------------------------------------------------------------------------
+// QuantGemmImpl dispatch: simulated-f32 vs integer-domain per site
+// ---------------------------------------------------------------------------
+
+/// Which lowering a fused quantized GEMM site runs with.
+///
+/// `Simulated` is the reference: f32 multiplies + [`QuantEpilogue`].
+/// `IntDomain` packs both operands to i8/i16 on a common power-of-two
+/// grid ([`int_gemm::pack`]), multiplies in the integer domain with i32
+/// accumulators and converts back exactly — bit-identical to `Simulated`
+/// whenever it is selected (see `int_gemm`'s module docs for the proof
+/// obligations, and `tests/int_gemm_parity.rs` for the enforcement).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantGemmImpl {
+    /// f32 multiplies, quantization simulated by the fused epilogue.
+    Simulated,
+    /// i8/i16 × i8/i16 → i32 MACs, exact conversion back to f32.
+    IntDomain,
+}
+
+/// Pack both operands and check the full eligibility condition for the
+/// integer-domain lowering at one GEMM site:
+///
+/// 1. `accum_dst` (the `dst +=` operand of the NN/TN flavours, `None`
+///    for the assigning NT flavour) holds only `+0.0` bits — otherwise
+///    the pre-existing values would have to be folded into the integer
+///    accumulation, which the packing can't express;
+/// 2. both operands pack onto common power-of-two grids;
+/// 3. the worst-case partial sum fits [`int_gemm::ACC_BOUND`];
+/// 4. the product exponent sits in the exact-conversion window.
+fn int_packs(
+    a: &[f32],
+    b: &[f32],
+    inner: usize,
+    accum_dst: Option<&[f32]>,
+) -> Option<(Packed, Packed)> {
+    if let Some(d) = accum_dst {
+        if !d.iter().all(|v| v.to_bits() == 0) {
+            return None;
+        }
+    }
+    let ap = int_gemm::pack(a)?;
+    let bp = int_gemm::pack(b)?;
+    if !int_gemm::accum_bound_ok(inner, ap.amax, bp.amax) {
+        return None;
+    }
+    let pe = ap.exp + bp.exp;
+    if !(int_gemm::EXP_LO..=int_gemm::EXP_HI).contains(&pe) {
+        return None;
+    }
+    Some((ap, bp))
+}
+
+/// The lowering the `*_qd` entry points would select for these operands
+/// (with `int_domain` enabled). `inner` is the contraction depth (`kd`
+/// for NN, `ua` for NT, `ba` for TN); `accum_dst` is the accumulated
+/// destination for the NN/TN flavours, `None` for NT. Exposed so the
+/// parity suite can assert the integer path actually engaged (a parity
+/// test that silently fell back would prove nothing).
+pub fn quant_gemm_plan(
+    a: &[f32],
+    b: &[f32],
+    inner: usize,
+    accum_dst: Option<&[f32]>,
+) -> QuantGemmImpl {
+    if int_packs(a, b, inner, accum_dst).is_some() {
+        QuantGemmImpl::IntDomain
+    } else {
+        QuantGemmImpl::Simulated
+    }
+}
+
+/// Integer NN tile: rows `i0 .. i0+rows` of `acc += a @ b`, dispatched
+/// over the i8/i16 storage classes of the packed operands.
+#[allow(clippy::too_many_arguments)]
+fn int_nn_tile(
+    ap: &Packed,
+    bp: &Packed,
+    acc: &mut [i32],
+    i0: usize,
+    rows: usize,
+    kd: usize,
+    n: usize,
+) {
+    use int_gemm::PackedInts as P;
+    let r = i0 * kd..(i0 + rows) * kd;
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => int_gemm::imm_nn_serial(&av[r], &bv[..], acc, kd, n),
+        (P::I8(av), P::I16(bv)) => int_gemm::imm_nn_serial(&av[r], &bv[..], acc, kd, n),
+        (P::I16(av), P::I8(bv)) => int_gemm::imm_nn_serial(&av[r], &bv[..], acc, kd, n),
+        (P::I16(av), P::I16(bv)) => int_gemm::imm_nn_serial(&av[r], &bv[..], acc, kd, n),
+    }
+}
+
+/// Integer NT tile: rows `i0 .. i0+rows` of `acc = a @ b^T`.
+#[allow(clippy::too_many_arguments)]
+fn int_nt_tile(
+    ap: &Packed,
+    bp: &Packed,
+    acc: &mut [i32],
+    i0: usize,
+    rows: usize,
+    ua: usize,
+    ib: usize,
+) {
+    use int_gemm::PackedInts as P;
+    let r = i0 * ua..(i0 + rows) * ua;
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => int_gemm::imm_nt_serial(&av[r], &bv[..], acc, ua, ib),
+        (P::I8(av), P::I16(bv)) => int_gemm::imm_nt_serial(&av[r], &bv[..], acc, ua, ib),
+        (P::I16(av), P::I8(bv)) => int_gemm::imm_nt_serial(&av[r], &bv[..], acc, ua, ib),
+        (P::I16(av), P::I16(bv)) => int_gemm::imm_nt_serial(&av[r], &bv[..], acc, ua, ib),
+    }
+}
+
+/// Integer TN row-slab tile at offset `i0` (whole operands, the kernel
+/// indexes the slab).
+#[allow(clippy::too_many_arguments)]
+fn int_tn_tile(
+    ap: &Packed,
+    bp: &Packed,
+    acc: &mut [i32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    i0: usize,
+) {
+    use int_gemm::PackedInts as P;
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => int_gemm::imm_tn_serial(&av[..], &bv[..], acc, ba, ia, ub, i0),
+        (P::I8(av), P::I16(bv)) => int_gemm::imm_tn_serial(&av[..], &bv[..], acc, ba, ia, ub, i0),
+        (P::I16(av), P::I8(bv)) => int_gemm::imm_tn_serial(&av[..], &bv[..], acc, ba, ia, ub, i0),
+        (P::I16(av), P::I16(bv)) => int_gemm::imm_tn_serial(&av[..], &bv[..], acc, ba, ia, ub, i0),
+    }
+}
+
+/// Integer-domain NN: same row partitioning, epilogue offsets and
+/// tile-order stats merge as [`matmul_sl_q_into_threads`], with the i32
+/// accumulator chunked in lockstep with `dst`.
+#[allow(clippy::too_many_arguments)]
+fn int_nn_run(
+    ap: &Packed,
+    bp: &Packed,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(m).max(1);
+    let mut acc = vec![0i32; m * n];
+    if nt <= 1 {
+        int_nn_tile(ap, bp, &mut acc, 0, m, kd, n);
+        return epi.run_int(&acc, scale, n, bias, dst, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for ((ci, ochunk), achunk) in
+            dst.chunks_mut(rows_per * n).enumerate().zip(acc.chunks_mut(rows_per * n))
+        {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / n;
+            tiles.push(s.spawn(move || {
+                int_nn_tile(ap, bp, achunk, i0, rows, kd, n);
+                epi.run_int(achunk, scale, n, bias, ochunk, (i0 * n) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("int matmul worker"));
+        }
+    });
+    stats
+}
+
+/// Integer-domain NT: mirrors [`matmul_nt_sl_q_into_threads`].
+#[allow(clippy::too_many_arguments)]
+fn int_nt_run(
+    ap: &Packed,
+    bp: &Packed,
+    dst: &mut [f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(m).max(1);
+    let mut acc = vec![0i32; m * ib];
+    if nt <= 1 {
+        int_nt_tile(ap, bp, &mut acc, 0, m, ua, ib);
+        return epi.run_int(&acc, scale, ib, None, dst, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for ((ci, ochunk), achunk) in
+            dst.chunks_mut(rows_per * ib).enumerate().zip(acc.chunks_mut(rows_per * ib))
+        {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / ib;
+            tiles.push(s.spawn(move || {
+                int_nt_tile(ap, bp, achunk, i0, rows, ua, ib);
+                epi.run_int(achunk, scale, ib, None, ochunk, (i0 * ib) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("int matmul_nt worker"));
+        }
+    });
+    stats
+}
+
+/// Integer-domain TN: mirrors [`matmul_tn_sl_q_into_threads`].
+#[allow(clippy::too_many_arguments)]
+fn int_tn_run(
+    ap: &Packed,
+    bp: &Packed,
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(ia).max(1);
+    let mut acc = vec![0i32; ia * ub];
+    if nt <= 1 {
+        int_tn_tile(ap, bp, &mut acc, ba, ia, ub, 0);
+        return epi.run_int(&acc, scale, ub, None, dst, 0);
+    }
+    let rows_per = ia.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for ((ci, ochunk), achunk) in
+            dst.chunks_mut(rows_per * ub).enumerate().zip(acc.chunks_mut(rows_per * ub))
+        {
+            let i0 = ci * rows_per;
+            tiles.push(s.spawn(move || {
+                int_tn_tile(ap, bp, achunk, ba, ia, ub, i0);
+                epi.run_int(achunk, scale, ub, None, ochunk, (i0 * ub) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("int matmul_tn worker"));
+        }
+    });
+    stats
+}
+
+/// Dispatching form of [`matmul_sl_q_into_threads`]: when `int_domain`
+/// is set and the site is eligible (see [`quant_gemm_plan`]), run the
+/// integer-domain lowering; otherwise the simulated kernel. Both paths
+/// produce identical bits and [`QuantStats`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_into_threads(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> QuantStats {
+    if int_domain && m > 0 && n > 0 {
+        assert_eq!(a.len(), m * kd, "matmul_qd a size");
+        assert_eq!(b.len(), kd * n, "matmul_qd b size");
+        assert_eq!(dst.len(), m * n, "matmul_qd dst size");
+        if let Some((ap, bp)) = int_packs(a, b, kd, Some(dst)) {
+            return int_nn_run(&ap, &bp, bias, dst, m, kd, n, epi, threads);
+        }
+    }
+    matmul_sl_q_into_threads(a, b, bias, dst, m, kd, n, epi, threads)
+}
+
+/// [`matmul_sl_qd_into_threads`] with the auto thread plan.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_into(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    int_domain: bool,
+) -> QuantStats {
+    matmul_sl_qd_into_threads(
+        a,
+        b,
+        bias,
+        dst,
+        m,
+        kd,
+        n,
+        epi,
+        plan_threads(2 * m * kd * n, m),
+        int_domain,
+    )
+}
+
+/// Allocating dispatching NN form with explicit threads.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_threads(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * n];
+    let st = matmul_sl_qd_into_threads(a, b, bias, &mut out, m, kd, n, epi, threads, int_domain);
+    (out, st)
+}
+
+/// Dispatching fused quantized `[m,kd] @ [kd,n]`, auto-threaded.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    matmul_sl_qd_threads(a, b, bias, m, kd, n, epi, plan_threads(2 * m * kd * n, m), int_domain)
+}
+
+/// Dispatching form of [`matmul_nt_sl_q_into_threads`] (assigns `dst`;
+/// no accumulated-destination eligibility condition).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_sl_qd_into_threads(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> QuantStats {
+    if int_domain && m > 0 && ib > 0 {
+        assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
+        assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
+        assert_eq!(dst.len(), m * ib, "matmul_nt_qd dst size");
+        if let Some((ap, bp)) = int_packs(a, b, ua, None) {
+            return int_nt_run(&ap, &bp, dst, m, ua, ib, epi, threads);
+        }
+    }
+    matmul_nt_sl_q_into_threads(a, b, dst, m, ua, ib, epi, threads)
+}
+
+/// Allocating dispatching NT form with explicit threads.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_sl_qd_threads(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * ib];
+    let st = matmul_nt_sl_qd_into_threads(a, b, &mut out, m, ua, ib, epi, threads, int_domain);
+    (out, st)
+}
+
+/// Dispatching fused quantized `[m,ua] @ [ib,ua]^T`, auto-threaded.
+pub fn matmul_nt_sl_qd(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    matmul_nt_sl_qd_threads(a, b, m, ua, ib, epi, plan_threads(2 * m * ua * ib, m), int_domain)
+}
+
+/// Dispatching form of [`matmul_tn_sl_q_into_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_sl_qd_into_threads(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> QuantStats {
+    if int_domain && ia > 0 && ub > 0 {
+        assert_eq!(a.len(), ba * ia, "matmul_tn_qd a size");
+        assert_eq!(b.len(), ba * ub, "matmul_tn_qd b size");
+        assert_eq!(dst.len(), ia * ub, "matmul_tn_qd dst size");
+        if let Some((ap, bp)) = int_packs(a, b, ba, Some(dst)) {
+            return int_tn_run(&ap, &bp, dst, ba, ia, ub, epi, threads);
+        }
+    }
+    matmul_tn_sl_q_into_threads(a, b, dst, ba, ia, ub, epi, threads)
+}
+
+/// [`matmul_tn_sl_qd_into_threads`] with the auto thread plan.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_sl_qd_into(
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    int_domain: bool,
+) -> QuantStats {
+    matmul_tn_sl_qd_into_threads(
+        a,
+        b,
+        dst,
+        ba,
+        ia,
+        ub,
+        epi,
+        plan_threads(2 * ba * ia * ub, ia),
+        int_domain,
+    )
+}
+
+/// Allocating dispatching TN form with explicit threads.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_sl_qd_threads(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; ia * ub];
+    let st = matmul_tn_sl_qd_into_threads(a, b, &mut out, ba, ia, ub, epi, threads, int_domain);
+    (out, st)
+}
+
+/// Dispatching fused quantized `[ba,ia]^T @ [ba,ub]`, auto-threaded.
+pub fn matmul_tn_sl_qd(
+    a: &[f32],
+    b: &[f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    int_domain: bool,
+) -> (Vec<f32>, QuantStats) {
+    matmul_tn_sl_qd_threads(a, b, ba, ia, ub, epi, plan_threads(2 * ba * ia * ub, ia), int_domain)
+}
+
 /// `c[B,U] = a[B,I] @ b[I,U]` (blocked, parallel above the threshold).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (ba, ia) = (a.shape()[0], a.shape()[1]);
@@ -904,5 +1385,124 @@ mod tests {
         let mut w = Tensor::from_vec(&[2, 1], vec![0.3, 0.4]); // norm 0.5
         max_norm_inplace(&mut w, 1.0);
         assert_eq!(w.data(), &[0.3, 0.4]);
+    }
+
+    /// Values on a 2^-4 grid with small magnitudes — always eligible for
+    /// the integer-domain lowering at these test shapes.
+    fn grid_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+        (0..n).map(|_| g.i32_range(-100, 100) as f32 * 0.0625).collect()
+    }
+
+    #[test]
+    fn qd_dispatch_is_bit_identical_to_simulated_on_grid_data() {
+        use crate::arith::{FixedFormat, Quantizer};
+        let mut g = Gen::new(0x1D0_6E44);
+        let (m, kd, n) = (7usize, 13, 5);
+        let a = grid_vec(&mut g, m * kd);
+        let b = grid_vec(&mut g, kd * n);
+        let bias = grid_vec(&mut g, n);
+        let epi = QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(10, 3)));
+
+        assert_eq!(
+            quant_gemm_plan(&a, &b, kd, Some(&vec![0.0f32; m * n])),
+            QuantGemmImpl::IntDomain
+        );
+        for threads in [1usize, 2, 4] {
+            let (sim, st_sim) = matmul_sl_q_threads(&a, &b, Some(&bias), m, kd, n, epi, threads);
+            let (int, st_int) =
+                matmul_sl_qd_threads(&a, &b, Some(&bias), m, kd, n, epi, threads, true);
+            assert_eq!(st_sim, st_int, "nn stats t={threads}");
+            for (x, y) in sim.iter().zip(&int) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nn t={threads}");
+            }
+
+            let bt = b2_nt(&b, kd, n);
+            let (sim, st_sim) = matmul_nt_sl_q_threads(&a, &bt, m, kd, n, epi, threads);
+            let (int, st_int) = matmul_nt_sl_qd_threads(&a, &bt, m, kd, n, epi, threads, true);
+            assert_eq!(st_sim, st_int, "nt stats t={threads}");
+            for (x, y) in sim.iter().zip(&int) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nt t={threads}");
+            }
+        }
+    }
+
+    /// Reshape helper: an NT `b` operand `[ib, ua]` from the NN `b`.
+    fn b2_nt(b: &[f32], kd: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * kd];
+        for j in 0..n {
+            for k in 0..kd {
+                out[j * kd + k] = b[k * n + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn qd_tn_dispatch_is_bit_identical_to_simulated() {
+        use crate::arith::{FixedFormat, Quantizer};
+        let mut g = Gen::new(0x7E57_141);
+        let (ba, ia, ub) = (9usize, 11, 6);
+        let a = grid_vec(&mut g, ba * ia);
+        let b = grid_vec(&mut g, ba * ub);
+        let epi = QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(12, 0)));
+        assert_eq!(
+            quant_gemm_plan(&a, &b, ba, Some(&vec![0.0f32; ia * ub])),
+            QuantGemmImpl::IntDomain
+        );
+        for threads in [1usize, 2, 4] {
+            let (sim, st_sim) = matmul_tn_sl_q_threads(&a, &b, ba, ia, ub, epi, threads);
+            let (int, st_int) = matmul_tn_sl_qd_threads(&a, &b, ba, ia, ub, epi, threads, true);
+            assert_eq!(st_sim, st_int, "tn stats t={threads}");
+            for (x, y) in sim.iter().zip(&int) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tn t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn qd_falls_back_when_ineligible_and_still_matches() {
+        use crate::arith::Quantizer;
+        let mut g = Gen::new(0xFA11_BACC);
+        let (m, kd, n) = (4usize, 6, 3);
+        // 0.1 has a 24-bit odd mantissa: never packs
+        let mut a = grid_vec(&mut g, m * kd);
+        a[5] = 0.1;
+        let b = grid_vec(&mut g, kd * n);
+        assert_eq!(quant_gemm_plan(&a, &b, kd, None), QuantGemmImpl::Simulated);
+
+        // a non-(+0.0) accumulated dst also forces the simulated path
+        let clean = grid_vec(&mut g, m * kd);
+        let mut dirty = vec![0.0f32; m * n];
+        dirty[2] = -0.0; // negative zero: bits != 0
+        assert_eq!(quant_gemm_plan(&clean, &b, kd, Some(&dirty)), QuantGemmImpl::Simulated);
+        assert_eq!(
+            quant_gemm_plan(&clean, &b, kd, Some(&vec![0.0f32; m * n])),
+            QuantGemmImpl::IntDomain
+        );
+
+        let epi = QuantEpilogue::new(Quantizer::float32());
+        let (sim, st_sim) = matmul_sl_q_threads(&a, &b, None, m, kd, n, epi, 2);
+        let (int, st_int) = matmul_sl_qd_threads(&a, &b, None, m, kd, n, epi, 2, true);
+        assert_eq!(st_sim, st_int);
+        for (x, y) in sim.iter().zip(&int) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn qd_with_int_domain_off_is_the_simulated_path() {
+        use crate::arith::{FixedFormat, Quantizer};
+        let mut g = Gen::new(0x0FF);
+        let (m, kd, n) = (3usize, 5, 4);
+        let a = grid_vec(&mut g, m * kd);
+        let b = grid_vec(&mut g, kd * n);
+        let epi = QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(8, 2)));
+        let (sim, st_sim) = matmul_sl_q_threads(&a, &b, None, m, kd, n, epi, 1);
+        let (off, st_off) = matmul_sl_qd_threads(&a, &b, None, m, kd, n, epi, 1, false);
+        assert_eq!(st_sim, st_off);
+        assert_eq!(
+            sim.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            off.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 }

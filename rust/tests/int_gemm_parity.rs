@@ -1,0 +1,439 @@
+//! Integer-domain GEMM parity: the dispatching `*_qd` kernels
+//! (`matmul_sl_qd` / `matmul_nt_sl_qd` / `matmul_tn_sl_qd` and their
+//! `_threads` variants) with `int_domain` enabled must be
+//! **bit-identical** — exact `u32` output bits *and* exact `QuantStats`
+//! counters — to the simulated-f32 fused kernels they dispatch over,
+//! across:
+//!
+//! * all three orientations (NN with/without bias, NT, TN),
+//! * the fixed and dynamic-regime fixed arithmetics (i8 and i16 packing),
+//! * all four rounding modes (stochastic via the counter-based stream),
+//! * explicit thread counts {1, 2, 4} — on top of which CI runs the
+//!   whole suite under `LPDNN_THREADS` ∈ {1, 4} and
+//!   `LPDNN_INT_GEMM` ∈ {0, 1} to cover the auto-threaded and
+//!   env-defaulted entry points,
+//! * degenerate shapes (1×1×1, zero-depth reductions, zero-batch TN).
+//!
+//! Every eligible case first asserts [`ops::quant_gemm_plan`] selects
+//! `IntDomain` — a parity test that silently fell back to the simulated
+//! kernel would prove nothing. Ineligible sites (off-grid data, a
+//! violated accumulator bound, a dirty accumulated destination) are
+//! asserted to fall back *and* still match, so the dispatch is
+//! unconditionally bit-transparent.
+//!
+//! A second layer asserts the same at the training-step level (the tiny
+//! maxout MLP and the tiny conv topology, so the im2col-lowered conv
+//! stage GEMMs ride the integer path too): `StepOptions::int_domain`
+//! on/off produces identical loss bits, parameters, velocities and
+//! overflow matrices. A final property shows accepted sites cannot
+//! silently overflow the i32 accumulator.
+
+use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, Quantizer, RoundMode};
+use lpdnn::coordinator::ScaleController;
+use lpdnn::golden::{self, Network, Params, StepOptions};
+use lpdnn::tensor::ops::QuantGemmImpl;
+use lpdnn::tensor::{int_gemm, ops, Pcg32, Tensor};
+use lpdnn::testing::{
+    forall_seeded, Gen, mlp_batch, mlp_state, ROUND_MODES, spatial_batch, TINY_CONV_CLASSES,
+    TINY_CONV_SHAPE, tiny_conv_spec, tiny_mlp, topology_state,
+};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Shapes as (m, kd, n) for NN / (m, ua, ib) for NT / (ba, ia, ub) for
+/// TN: degenerate, odd/non-divisible, and chunk-edge cases (mirrors
+/// `tests/fused_parity.rs`).
+const SHAPES: [(usize, usize, usize); 6] =
+    [(1, 1, 1), (5, 0, 3), (0, 4, 4), (7, 13, 9), (8, 3, 1), (33, 17, 40)];
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The integer-eligible arithmetics: epilogue format paired with the
+/// operand grid `(amax, exp)` the data is drawn on. `fixed 10.3` lands
+/// in i16 packing, the negative-radix dynamic regime in i8. The deepest
+/// contraction in [`SHAPES`] is 33, so `33 · 511 · 511 < 2^24` keeps
+/// every case inside the accumulator bound.
+fn int_arithmetics() -> Vec<(&'static str, FixedFormat, i32, i32)> {
+    vec![
+        ("fixed 10.3", FixedFormat::new(10, 3), 511, -6),
+        ("dynamic 8.-2", FixedFormat::new(8, -2), 127, -9),
+    ]
+}
+
+/// Grid-valued operand data: uniform `int · 2^exp` with `|int| ≤ amax` —
+/// always packable, so the integer plan engages (asserted per case).
+fn grid_vec(rng: &mut Pcg32, n: usize, amax: i32, exp: i32) -> Vec<f32> {
+    let step = int_gemm::exp2f(exp);
+    (0..n).map(|_| (rng.below(2 * amax as u32 + 1) as i32 - amax) as f32 * step).collect()
+}
+
+fn mk_epi(fmt: FixedFormat, mode: RoundMode) -> QuantEpilogue {
+    let mut q = Quantizer::from_format(fmt);
+    q.mode = mode;
+    QuantEpilogue::new(q)
+}
+
+/// Attach the counter-based sample stream when the mode needs one, so
+/// stochastic rounding is exercised with real (index-keyed) samples.
+fn with_stream(epi: QuantEpilogue, mode: RoundMode, seed: u64) -> QuantEpilogue {
+    if mode == RoundMode::Stochastic {
+        epi.with_rng(ElemRng::new(seed))
+    } else {
+        epi
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel level
+// ---------------------------------------------------------------------------
+
+/// Simulated vs integer-domain NN across [`THREADS`], bits and stats.
+#[allow(clippy::too_many_arguments)]
+fn check_nn(
+    ctx: &str,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) {
+    for threads in THREADS {
+        let (want, wst) = ops::matmul_sl_q_threads(a, b, bias, m, kd, n, epi, threads);
+        let (got, gst) = ops::matmul_sl_qd_threads(a, b, bias, m, kd, n, epi, threads, true);
+        assert_eq!(bits(&got), bits(&want), "{ctx} t{threads} bias={}", bias.is_some());
+        assert_eq!(gst, wst, "{ctx} t{threads} bias={} stats", bias.is_some());
+    }
+}
+
+/// Simulated vs integer-domain NT across [`THREADS`], bits and stats.
+fn check_nt(ctx: &str, a: &[f32], b: &[f32], m: usize, ua: usize, ib: usize, epi: QuantEpilogue) {
+    for threads in THREADS {
+        let (want, wst) = ops::matmul_nt_sl_q_threads(a, b, m, ua, ib, epi, threads);
+        let (got, gst) = ops::matmul_nt_sl_qd_threads(a, b, m, ua, ib, epi, threads, true);
+        assert_eq!(bits(&got), bits(&want), "{ctx} t{threads}");
+        assert_eq!(gst, wst, "{ctx} t{threads} stats");
+    }
+}
+
+/// Simulated vs integer-domain TN across [`THREADS`], bits and stats.
+fn check_tn(ctx: &str, a: &[f32], b: &[f32], ba: usize, ia: usize, ub: usize, epi: QuantEpilogue) {
+    for threads in THREADS {
+        let (want, wst) = ops::matmul_tn_sl_q_threads(a, b, ba, ia, ub, epi, threads);
+        let (got, gst) = ops::matmul_tn_sl_qd_threads(a, b, ba, ia, ub, epi, threads, true);
+        assert_eq!(bits(&got), bits(&want), "{ctx} t{threads}");
+        assert_eq!(gst, wst, "{ctx} t{threads} stats");
+    }
+}
+
+#[test]
+fn int_nn_bit_identical_to_simulated() {
+    let mut rng = Pcg32::seeded(0x16E3_0001);
+    for mode in ROUND_MODES {
+        for (label, fmt, amax, exp) in int_arithmetics() {
+            let epi = with_stream(mk_epi(fmt, mode), mode, 0x16E3_A001);
+            for (m, kd, n) in SHAPES {
+                let a = grid_vec(&mut rng, m * kd, amax, exp);
+                let b = grid_vec(&mut rng, kd * n, amax, exp);
+                let bias = grid_vec(&mut rng, n, amax, exp);
+                if m > 0 && n > 0 {
+                    let zeros = vec![0.0f32; m * n];
+                    assert_eq!(
+                        ops::quant_gemm_plan(&a, &b, kd, Some(&zeros)),
+                        QuantGemmImpl::IntDomain,
+                        "{label} {mode:?} {m}x{kd}x{n}: case must engage"
+                    );
+                }
+                let ctx = format!("nn {label} {mode:?} {m}x{kd}x{n}");
+                check_nn(&ctx, &a, &b, None, m, kd, n, epi);
+                check_nn(&ctx, &a, &b, Some(&bias), m, kd, n, epi);
+            }
+        }
+    }
+}
+
+#[test]
+fn int_nt_bit_identical_to_simulated() {
+    let mut rng = Pcg32::seeded(0x16E3_0002);
+    for mode in ROUND_MODES {
+        for (label, fmt, amax, exp) in int_arithmetics() {
+            let epi = with_stream(mk_epi(fmt, mode), mode, 0x16E3_A002);
+            for (m, ua, ib) in SHAPES {
+                let a = grid_vec(&mut rng, m * ua, amax, exp);
+                let b = grid_vec(&mut rng, ib * ua, amax, exp);
+                if m > 0 && ib > 0 {
+                    assert_eq!(
+                        ops::quant_gemm_plan(&a, &b, ua, None),
+                        QuantGemmImpl::IntDomain,
+                        "{label} {mode:?} {m}x{ua}x{ib}: case must engage"
+                    );
+                }
+                let ctx = format!("nt {label} {mode:?} {m}x{ua}x{ib}");
+                check_nt(&ctx, &a, &b, m, ua, ib, epi);
+            }
+        }
+    }
+}
+
+#[test]
+fn int_tn_bit_identical_to_simulated() {
+    let mut rng = Pcg32::seeded(0x16E3_0003);
+    for mode in ROUND_MODES {
+        for (label, fmt, amax, exp) in int_arithmetics() {
+            let epi = with_stream(mk_epi(fmt, mode), mode, 0x16E3_A003);
+            for (ba, ia, ub) in SHAPES {
+                let a = grid_vec(&mut rng, ba * ia, amax, exp);
+                let b = grid_vec(&mut rng, ba * ub, amax, exp);
+                if ia > 0 && ub > 0 {
+                    let zeros = vec![0.0f32; ia * ub];
+                    assert_eq!(
+                        ops::quant_gemm_plan(&a, &b, ba, Some(&zeros)),
+                        QuantGemmImpl::IntDomain,
+                        "{label} {mode:?} {ba}x{ia}x{ub}: case must engage"
+                    );
+                }
+                let ctx = format!("tn {label} {mode:?} {ba}x{ia}x{ub}");
+                check_tn(&ctx, &a, &b, ba, ia, ub, epi);
+            }
+        }
+    }
+}
+
+/// Sites the packer must refuse — off-grid values, a violated
+/// accumulator bound, a dirty (`-0.0`) accumulated destination — fall
+/// back to the simulated kernel and still match it bit-for-bit, so the
+/// dispatch is transparent even when it cannot engage.
+#[test]
+fn ineligible_sites_fall_back_bit_identically() {
+    let mut rng = Pcg32::seeded(0x16E3_0004);
+    let epi = mk_epi(FixedFormat::new(10, 3), RoundMode::HalfAway);
+    let (m, kd, n) = (7, 13, 9);
+
+    // off-grid operand: 0.1 has no finite power-of-two representation
+    let mut a = grid_vec(&mut rng, m * kd, 511, -6);
+    let b = grid_vec(&mut rng, kd * n, 511, -6);
+    a[5] = 0.1;
+    assert_eq!(ops::quant_gemm_plan(&a, &b, kd, None), QuantGemmImpl::Simulated);
+    check_nn("off-grid", &a, &b, None, m, kd, n, epi);
+
+    // accumulator bound: 33 · 2047 · 2047 > 2^24 forces the wide grid out
+    let (ba, ia, ub) = (33, 5, 6);
+    let mut wa = grid_vec(&mut rng, ba * ia, 2047, 0);
+    let mut wb = grid_vec(&mut rng, ba * ub, 2047, 0);
+    wa[0] = 2047.0;
+    wb[0] = 2047.0;
+    assert_eq!(ops::quant_gemm_plan(&wa, &wb, ba, None), QuantGemmImpl::Simulated);
+    check_tn("acc bound", &wa, &wb, ba, ia, ub, epi);
+
+    // dirty accumulated destination: a -0.0 must reject the int path
+    // (the simulated kernels preserve its sign through `dst +=`)
+    let a = grid_vec(&mut rng, m * kd, 511, -6);
+    let mut dirty = vec![0.0f32; m * n];
+    dirty[3] = -0.0;
+    assert_eq!(ops::quant_gemm_plan(&a, &b, kd, Some(&dirty)), QuantGemmImpl::Simulated);
+    let clean = vec![0.0f32; m * n];
+    assert_eq!(ops::quant_gemm_plan(&a, &b, kd, Some(&clean)), QuantGemmImpl::IntDomain);
+    for threads in THREADS {
+        let mut want = dirty.clone();
+        let wst = ops::matmul_sl_q_into_threads(&a, &b, None, &mut want, m, kd, n, epi, threads);
+        let mut got = dirty.clone();
+        let gst =
+            ops::matmul_sl_qd_into_threads(&a, &b, None, &mut got, m, kd, n, epi, threads, true);
+        assert_eq!(bits(&got), bits(&want), "dirty dst t{threads}");
+        assert_eq!(gst, wst, "dirty dst t{threads} stats");
+    }
+
+    // int_domain = false must never touch the integer path
+    let (want, wst) = ops::matmul_sl_q_threads(&a, &b, None, m, kd, n, epi, 2);
+    let (got, gst) = ops::matmul_sl_qd_threads(&a, &b, None, m, kd, n, epi, 2, false);
+    assert_eq!(bits(&got), bits(&want), "int_domain off");
+    assert_eq!(gst, wst, "int_domain off stats");
+}
+
+// ---------------------------------------------------------------------------
+// Train-step level
+// ---------------------------------------------------------------------------
+
+/// Deterministic MLP state with params on the storage grid and inputs on
+/// the computation grid (as the Trainer hands them to the step), so the
+/// first step's GEMM sites are integer-eligible from the start.
+fn quantized_mlp_fixture(comp: FixedFormat, up: FixedFormat) -> (Params, Params, Tensor, Tensor) {
+    let s = tiny_mlp();
+    let (mut params, vels) = mlp_state(s, 0x5EED);
+    let qup = Quantizer::from_format(up);
+    for p in &mut params {
+        qup.apply_slice(p.data_mut());
+    }
+    let (mut x, y) = mlp_batch(s, 16, 0xBA7C);
+    Quantizer::from_format(comp).apply_slice(x.data_mut());
+    (params, vels, x, y)
+}
+
+/// Guard against a vacuous step-level parity: with the fixture state,
+/// the first hidden layer's forward GEMM (x `[B, d_in]` @ w0-filter
+/// `[d_in, units]` into a zeroed z) must select the integer plan.
+#[test]
+fn quantized_mlp_state_engages_the_integer_plan() {
+    let s = tiny_mlp();
+    let (params, _, x, _) =
+        quantized_mlp_fixture(FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let w0 = &params[0].data()[..s.d_in * s.units];
+    let zeros = vec![0.0f32; 16 * s.units];
+    assert_eq!(
+        ops::quant_gemm_plan(x.data(), w0, s.d_in, Some(&zeros)),
+        QuantGemmImpl::IntDomain,
+        "fixture must make the forward site integer-eligible"
+    );
+}
+
+#[test]
+fn train_step_int_domain_bit_identical() {
+    let s = tiny_mlp();
+    let cases: Vec<(&str, ScaleController)> = vec![
+        (
+            "fixed 10.3 / 12.0",
+            ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0)),
+        ),
+        (
+            "fixed 8.1 / 10.0",
+            ScaleController::fixed(24, FixedFormat::new(8, 1), FixedFormat::new(10, 0)),
+        ),
+        (
+            "dynamic 10.3 / 12.0",
+            ScaleController::dynamic(
+                24,
+                FixedFormat::new(10, 3),
+                FixedFormat::new(12, 0),
+                1e-4,
+                64,
+            ),
+        ),
+        // passthrough: nothing packs, so this checks pure fallback
+        ("float32", ScaleController::fixed(24, FixedFormat::FLOAT32, FixedFormat::FLOAT32)),
+    ];
+    for (label, ctrl) in &cases {
+        for mode in ROUND_MODES {
+            let run = |int_domain: bool| {
+                // group 2 is (layer 0, Z) = computation grid, group 0 is
+                // (layer 0, W) = storage grid
+                let (mut params, mut vels, x, y) =
+                    quantized_mlp_fixture(ctrl.format(2), ctrl.format(0));
+                let mut trace: Vec<Vec<u32>> = Vec::new();
+                for _ in 0..3 {
+                    let out = golden::train_step_opt(
+                        s,
+                        &mut params,
+                        &mut vels,
+                        &x,
+                        &y,
+                        0.1,
+                        0.5,
+                        2.0,
+                        ctrl,
+                        StepOptions { mode, fused: true, int_domain, ..Default::default() },
+                    );
+                    trace.push(vec![out.loss.to_bits()]);
+                    trace.push(bits(out.overflow.data()));
+                }
+                for t in params.iter().chain(vels.iter()) {
+                    trace.push(bits(t.data()));
+                }
+                trace
+            };
+            assert_eq!(run(true), run(false), "{label} {mode:?}");
+        }
+    }
+}
+
+/// The conv topology's im2col-lowered stage GEMMs ride the same `*_qd`
+/// kernels — the whole step must stay bit-identical with the integer
+/// domain on.
+#[test]
+fn conv_train_step_int_domain_bit_identical() {
+    let spec = tiny_conv_spec();
+    let net = Network::from_topology_shaped(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES)
+        .expect("fixture topology realizes");
+    let comp = FixedFormat::new(10, 3);
+    let up = FixedFormat::new(12, 0);
+    let ctrl = ScaleController::fixed(net.n_groups(), comp, up);
+    let qup = Quantizer::from_format(up);
+    let qcomp = Quantizer::from_format(comp);
+    for mode in [RoundMode::HalfAway, RoundMode::Stochastic] {
+        let run = |int_domain: bool| {
+            let (mut params, mut vels) =
+                topology_state(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES, 0xC0DE);
+            for p in &mut params {
+                qup.apply_slice(p.data_mut());
+            }
+            let (mut x, y) = spatial_batch(TINY_CONV_SHAPE, 4, TINY_CONV_CLASSES, 0xF00D);
+            qcomp.apply_slice(x.data_mut());
+            let mut trace: Vec<Vec<u32>> = Vec::new();
+            for _ in 0..2 {
+                let out = net.train_step(
+                    &mut params,
+                    &mut vels,
+                    &x,
+                    &y,
+                    0.1,
+                    0.5,
+                    2.0,
+                    &ctrl,
+                    StepOptions { mode, fused: true, int_domain, ..Default::default() },
+                );
+                trace.push(vec![out.loss.to_bits()]);
+                trace.push(bits(out.overflow.data()));
+            }
+            for t in params.iter().chain(vels.iter()) {
+                trace.push(bits(t.data()));
+            }
+            trace
+        };
+        assert_eq!(run(true), run(false), "conv {mode:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Overflow safety
+// ---------------------------------------------------------------------------
+
+/// Whenever the planner accepts a site, an i64 shadow of the integer
+/// accumulation (worst-case: all partial products taken in magnitude)
+/// stays within `ACC_BOUND` — so the i32 accumulator can never wrap, in
+/// any summation order, and every f32 partial sum stays exact.
+#[test]
+fn accepted_sites_cannot_silently_overflow_i32() {
+    forall_seeded("accepted sites fit i32", 0x16E3_0A11, |g: &mut Gen| {
+        let m = g.usize_range(1, 4);
+        let kd = g.usize_range(1, 64);
+        let n = g.usize_range(1, 4);
+        let amax = g.i32_range(1, 3000);
+        let exp = g.i32_range(-12, 4);
+        let step = int_gemm::exp2f(exp);
+        let mut next = |g: &mut Gen| g.i32_range(-amax, amax) as f32 * step;
+        let a: Vec<f32> = (0..m * kd).map(|_| next(g)).collect();
+        let b: Vec<f32> = (0..kd * n).map(|_| next(g)).collect();
+        if ops::quant_gemm_plan(&a, &b, kd, None) != QuantGemmImpl::IntDomain {
+            return;
+        }
+        let (ap, bp) = (int_gemm::pack(&a).unwrap(), int_gemm::pack(&b).unwrap());
+        let (sa, sb) = (int_gemm::exp2f(ap.exp), int_gemm::exp2f(bp.exp));
+        for i in 0..m {
+            for j in 0..n {
+                let shadow: i64 = (0..kd)
+                    .map(|k| {
+                        let ai = (a[i * kd + k] / sa) as i64;
+                        let bj = (b[k * n + j] / sb) as i64;
+                        (ai * bj).abs()
+                    })
+                    .sum();
+                assert!(
+                    shadow <= int_gemm::ACC_BOUND as i64,
+                    "accepted site exceeds the bound: {shadow} at ({i},{j})"
+                );
+            }
+        }
+    });
+}

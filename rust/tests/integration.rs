@@ -4,7 +4,7 @@
 //! artifacts, no Python, no external crates — so `cargo test` exercises
 //! real end-to-end training on a fresh checkout. With `--features pjrt`
 //! (plus `make artifacts`) the same suite also cross-validates the
-//! compiled path (see `pjrt_bridge` below and tests/smoke_hlo.rs).
+//! compiled path (see `pjrt_bridge` below and tests/pjrt_smoke.rs).
 
 use lpdnn::config::{Arithmetic, DataConfig, ExperimentConfig, TrainConfig};
 use lpdnn::coordinator::Session;

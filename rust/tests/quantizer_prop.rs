@@ -8,9 +8,14 @@
 //! * `apply` is monotone in its input (for a shared stochastic sample),
 //! * `stats_only` totals equal `apply_slice` totals on the same data,
 //! * the fused kernels' `QuantEpilogue` can never drift from
-//!   `apply_slice` (bit-for-bit cross-check, plus tiling invariance).
+//!   `apply_slice` (bit-for-bit cross-check, plus tiling invariance),
+//! * the integer-domain GEMM packing (`tensor::int_gemm`) round-trips
+//!   every representable grid value exactly, and its i32 accumulator
+//!   bound covers every GEMM site shape of the builtin topologies.
 
-use lpdnn::arith::{ElemRng, QuantEpilogue, QuantStats, Quantizer, RoundMode};
+use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, QuantStats, Quantizer, RoundMode};
+use lpdnn::config::TopologySpec;
+use lpdnn::tensor::{int_gemm, Shape};
 use lpdnn::testing::{forall_seeded, format_grid, Gen, gen_quantizer, gen_signal, ROUND_MODES};
 
 /// A uniform sample for stochastic rounding; ignored by the other modes.
@@ -135,4 +140,111 @@ fn epilogue_tiling_is_invariant_on_the_format_grid() {
             }
         }
     }
+}
+
+#[test]
+fn int_packing_round_trips_every_grid_value_exactly() {
+    // Any slice on a fixed-point grid is `int * 2^e` for a shared
+    // power-of-two step; `int_gemm::pack` must recover that exactly.
+    // Narrow formats (<= 15 total bits) always fit the i16 operand
+    // window (`|int| <= 2^14`), so for them packing may never fail.
+    forall_seeded("pack/unpack round trip", 0x9126, |g: &mut Gen| {
+        let fmt = FixedFormat::new(g.i32_range(2, 24), g.i32_range(-4, 8));
+        let mut q = Quantizer::from_format(fmt);
+        q.mode = *g.choose(&ROUND_MODES);
+        let mut xs = gen_signal(g, &q, 0, 60);
+        q.apply_slice(&mut xs);
+        let packed = int_gemm::pack(&xs);
+        if fmt.total_bits <= 15 {
+            assert!(packed.is_some(), "{fmt} must pack: {xs:?}");
+        }
+        let Some(p) = packed else { return };
+        assert_eq!(p.len(), xs.len());
+        for (x, y) in xs.iter().zip(p.unpack()) {
+            if *x == 0.0 {
+                // sign of zero may collapse (-0.0 packs as integer 0)
+                assert_eq!(y, 0.0, "{fmt}");
+            } else {
+                assert_eq!(x.to_bits(), y.to_bits(), "{fmt} x={x} y={y}");
+            }
+        }
+    });
+}
+
+/// Flat contraction lengths of every quantized GEMM site a topology
+/// lowers to, mirroring `golden::graph`: per conv stage the im2col
+/// forward (`ksize^2 * c_in`) and the weight-gradient contraction over
+/// `batch * h * w` (SAME-padded pre-pool dims), per hidden dense layer
+/// the forward (`d_in`) and weight-gradient (`batch`) contractions,
+/// then the softmax head's forward / dW / dX triple.
+fn gemm_site_inners(
+    spec: &TopologySpec,
+    in_shape: Shape,
+    n_classes: usize,
+    batch: usize,
+) -> Vec<usize> {
+    let (mut h, mut w, mut c) = match in_shape {
+        Shape::Flat(d) => (1, 1, d),
+        Shape::Spatial { h, w, c } => (h, w, c),
+    };
+    let mut inners = Vec::new();
+    for st in &spec.conv {
+        inners.push(st.ksize * st.ksize * c);
+        inners.push(batch * h * w);
+        c = st.channels;
+        h /= st.pool;
+        w /= st.pool;
+    }
+    let mut d = h * w * c;
+    for &units in &spec.hidden {
+        inners.push(d);
+        inners.push(batch);
+        d = units;
+    }
+    inners.push(d);
+    inners.push(batch);
+    inners.push(n_classes);
+    inners
+}
+
+#[test]
+fn builtin_site_shapes_respect_the_i32_accumulator_bound() {
+    // The bound itself must keep i32 accumulation overflow-free *and*
+    // every partial sum exactly representable in a f32 mantissa.
+    assert!(int_gemm::ACC_BOUND <= i32::MAX as u64);
+    assert!(int_gemm::ACC_BOUND <= 1 << 24);
+    let builtins = [
+        ("pi_mlp", Shape::Flat(784)),
+        ("pi_mlp_wide", Shape::Flat(784)),
+        ("conv", Shape::Spatial { h: 28, w: 28, c: 1 }),
+        ("conv32", Shape::Spatial { h: 32, w: 32, c: 3 }),
+        ("pi_conv", Shape::Spatial { h: 32, w: 32, c: 3 }),
+    ];
+    let (mut accepted, mut rejected) = (0usize, 0usize);
+    for (name, in_shape) in builtins {
+        let spec = TopologySpec::builtin(name).expect("builtin topology");
+        for inner in gemm_site_inners(&spec, in_shape, 10, 64) {
+            for fmt in format_grid() {
+                // worst-case |int| on the fmt grid: maxv is amax steps
+                let amax = (fmt.maxv() / fmt.step()) as u64;
+                let wc = inner as u64 * amax * amax;
+                assert_eq!(
+                    int_gemm::accum_bound_ok(inner, amax as u32, amax as u32),
+                    wc <= int_gemm::ACC_BOUND,
+                    "{name} inner={inner} {fmt}"
+                );
+                if wc <= int_gemm::ACC_BOUND {
+                    accepted += 1;
+                    // an accepted site can never overflow the i32
+                    // accumulator, whatever the summation order
+                    assert!(wc <= i32::MAX as u64, "{name} inner={inner} {fmt}");
+                } else {
+                    rejected += 1;
+                }
+            }
+        }
+    }
+    // The gate is real on the paper's own models: some sites run in the
+    // integer domain while others must fall back to simulated f32.
+    assert!(accepted > 0 && rejected > 0, "accepted={accepted} rejected={rejected}");
 }
