@@ -10,12 +10,13 @@
 #[path = "common.rs"]
 mod common;
 
-use lpdnn::bench_support::print_series;
+use lpdnn::bench_support::{print_series, Table};
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::SweepPoint;
 
 fn main() {
     let mut session = common::setup_sweep();
+    let mut table = Table::new(&["workload", "radix", "test error", "normalized"]);
     for dataset in ["digits", "clusters"] {
         let baseline = common::base_cfg(&format!("fig1-base-{dataset}"), "pi_mlp", dataset);
         let points: Vec<SweepPoint> = (0..=8)
@@ -46,5 +47,14 @@ fn main() {
             "radix",
             &series,
         );
+        for r in &outcome.rows {
+            table.row(&[
+                dataset.to_string(),
+                r.label.clone(),
+                format!("{:.4}", r.test_error),
+                format!("{:.2}x", r.normalized),
+            ]);
+        }
     }
+    common::persist_table("fig1", &table);
 }

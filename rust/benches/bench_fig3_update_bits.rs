@@ -9,7 +9,7 @@
 #[path = "common.rs"]
 mod common;
 
-use lpdnn::bench_support::print_series;
+use lpdnn::bench_support::{print_series, Table};
 use lpdnn::config::Arithmetic;
 use lpdnn::coordinator::SweepPoint;
 
@@ -19,6 +19,7 @@ fn main() {
     let baseline = common::base_cfg("fig3-base", "pi_mlp", dataset);
     let widths: Vec<i32> = vec![6, 8, 10, 12, 14, 16, 18, 20, 24, 28];
 
+    let mut table = Table::new(&["arithmetic", "update bits", "test error", "normalized"]);
     for arith_name in ["fixed", "dynamic"] {
         let points: Vec<SweepPoint> = widths
             .iter()
@@ -58,5 +59,14 @@ fn main() {
             "(paper: cliff below {} bits for {arith_name})",
             if arith_name == "fixed" { 20 } else { 12 }
         );
+        for r in &outcome.rows {
+            table.row(&[
+                arith_name.to_string(),
+                r.label.clone(),
+                format!("{:.4}", r.test_error),
+                format!("{:.2}x", r.normalized),
+            ]);
+        }
     }
+    common::persist_table("fig3", &table);
 }

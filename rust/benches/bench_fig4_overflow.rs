@@ -67,4 +67,5 @@ fn main() {
     table.print();
     println!("(paper: 0.01% is the sweet spot; larger rates degrade, smaller");
     println!(" rates waste range that narrow formats cannot afford)");
+    common::persist_table("fig4", &table);
 }

@@ -719,8 +719,5 @@ fn main() {
     println!("\n=== performance micro-benchmarks ===");
     table.print();
     println!("(tracked across optimization iterations in EXPERIMENTS.md §Perf)");
-    match std::fs::write("BENCH_perf.json", table.to_json().to_string_pretty()) {
-        Ok(()) => println!("(rows persisted to BENCH_perf.json)"),
-        Err(e) => eprintln!("warning: could not write BENCH_perf.json: {e}"),
-    }
+    common::persist_table("perf", &table);
 }

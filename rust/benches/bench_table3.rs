@@ -109,4 +109,5 @@ fn main() {
         norm.row(&cells);
     }
     norm.print();
+    common::persist_table("table3", &table);
 }

@@ -137,3 +137,15 @@ pub fn dynamic(bits_comp: i32, bits_up: i32, max_rate: f64, n_train: usize) -> A
 
 /// Paper Figure 1/2/3 "31-bit" wide format (32 with the sign).
 pub const WIDE_BITS: i32 = 31;
+
+/// Persist a bench table as `BENCH_<name>.json` (versioned via
+/// [`Table::to_json`](lpdnn::bench_support::Table::to_json)) so results
+/// can be diffed across commits. A write failure only warns: the table
+/// already printed, and a read-only checkout shouldn't fail the bench.
+pub fn persist_table(name: &str, table: &lpdnn::bench_support::Table) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, table.to_json().to_string_pretty()) {
+        Ok(()) => println!("(rows persisted to {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,600 @@
+//! Versioned checkpoint persistence (DESIGN.md §Checkpoint format).
+//!
+//! A checkpoint captures everything needed to reconstruct a trained
+//! [`Network`](crate::golden::Network) **bit-exactly**: the
+//! [`TopologySpec`], the arithmetic, the per-group int-bit positions the
+//! [`ScaleController`] had adopted by the end of training, and every
+//! parameter tensor *on its storage grid*. The on-disk form is a single
+//! key-sorted JSON document (the in-repo [`crate::config::json`] codec —
+//! `BTreeMap` keys make the serialization deterministic, so checkpoints
+//! diff cleanly across commits) with a format-version field and an
+//! FNV-1a integrity checksum.
+//!
+//! Bit-exactness rests on two choices:
+//!
+//! - **Parameters are stored as `f32::to_bits()` patterns**, not decimal
+//!   floats. The JSON number writer prints whole numbers below 1e15 as
+//!   exact integers, and every `u32` is such a number — so the payload
+//!   round-trips every f32 bit pattern exactly, including `-0.0`,
+//!   denormals, and the sign bit the decimal shortest-round-trip path
+//!   would be trusted (rather than proven) to keep.
+//! - **Scales are stored as int-bit positions, not step values.** The
+//!   controller rebuilds each group's [`crate::arith::FixedFormat`] from
+//!   `(total_bits from the arithmetic, int_bits from the checkpoint)`,
+//!   which is exactly how [`ScaleController::adopt_int_bits`] constructs
+//!   formats during training.
+//!
+//! `lpdnn train --save <path>` writes one; `lpdnn infer --load <path>`
+//! and `lpdnn serve --load <path>` restore it. Loading distinguishes
+//! four failure modes with distinct, message-carrying errors: corrupted
+//! JSON, an unsupported format version, a checksum mismatch, and a
+//! topology/dataset shape mismatch (see `tests/checkpoint.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::config::json::{self, Json};
+use crate::config::{
+    Arithmetic, BackendKind, DataConfig, ExperimentConfig, TopologySpec, TrainConfig,
+};
+use crate::coordinator::{RunResult, ScaleController};
+use crate::data::dataset_shape;
+use crate::error::Context;
+use crate::runtime::ModelInfo;
+use crate::tensor::{Shape, Tensor};
+use crate::{bail, ensure};
+
+/// On-disk format version. Bump on any incompatible layout change; the
+/// loader rejects versions it does not understand *before* attempting a
+/// checksum (the checksum scheme itself is part of the version).
+pub const CHECKPOINT_VERSION: usize = 1;
+
+/// Largest integer the JSON number writer round-trips exactly (f64
+/// mantissa width). Seeds above this would be silently corrupted.
+const JSON_EXACT_MAX: u64 = 1 << 53;
+
+/// A trained model, ready to persist or just loaded from disk.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Experiment name (provenance only).
+    pub name: String,
+    /// Model label the run was launched with (provenance only; the
+    /// embedded [`TopologySpec`] is authoritative).
+    pub model: String,
+    /// The full topology — restoring never consults the builtin table.
+    pub topology: TopologySpec,
+    /// Dataset name ("digits" | "clusters" | "cifar_like" | "svhn_like").
+    pub dataset: String,
+    pub n_train: usize,
+    /// Test-set size **after** the trainer's padding to whole eval
+    /// batches — stored post-rounding so `infer` regenerates the
+    /// identical split (its own `div_ceil` is then the identity).
+    pub n_test: usize,
+    /// Master seed: dataset generation derives from it.
+    pub seed: u64,
+    pub arithmetic: Arithmetic,
+    /// Per-group adopted int-bit positions, [`ScaleController::int_bits_vec`]
+    /// order. For float32/half these are ignored on restore (the
+    /// passthrough sentinel must not be rebuilt as a fixed format).
+    pub int_bits: Vec<i32>,
+    /// Final train-time test error — `lpdnn infer` recomputes the eval
+    /// and insists on exact equality (the round-trip bit-identity check).
+    pub test_error: f64,
+    /// Parameter tensors in manifest order (w0, b0, w1, b1, ...), values
+    /// already on their storage grids.
+    pub params: Vec<Tensor>,
+}
+
+/// Everything [`Checkpoint::restore`] reconstructs besides the raw
+/// params: the realized shapes, manifest, and a frozen scale controller.
+#[derive(Clone, Debug)]
+pub struct Restored {
+    pub spec: TopologySpec,
+    /// Network input shape (flattened for pure-MLP topologies, spatial
+    /// for conv — the same rule the native backend applies).
+    pub in_shape: Shape,
+    pub n_classes: usize,
+    pub model: ModelInfo,
+    /// A *fixed* controller carrying the adopted formats. Inference
+    /// never ticks it, so even dynamic-arithmetic checkpoints restore to
+    /// frozen scales.
+    pub ctrl: ScaleController,
+    /// Simulate float16 value grids during the forward pass.
+    pub half: bool,
+}
+
+/// FNV-1a 64-bit over the compact serialization — fast, dependency-free,
+/// and plenty for detecting corruption (this is an integrity check, not
+/// an authentication scheme).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Checksum of a checkpoint body (the document *minus* its "checksum"
+/// key, serialized compactly — key-sorted maps make this deterministic).
+fn checksum(body: BTreeMap<String, Json>) -> String {
+    format!("{:016x}", fnv1a64(Json::Object(body).to_string().as_bytes()))
+}
+
+/// Arithmetic → JSON, mirroring the key names `ExperimentConfig::from_json`
+/// reads (`kind`, `bits_comp`, `bits_up`, ...), so checkpoint files and
+/// experiment configs describe arithmetics in the same vocabulary.
+fn arithmetic_to_json(a: &Arithmetic) -> Json {
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        m.insert(k.to_string(), v);
+    };
+    match a {
+        Arithmetic::Float32 => put("kind", Json::Str("float32".into())),
+        Arithmetic::Half => put("kind", Json::Str("half".into())),
+        Arithmetic::Fixed { bits_comp, bits_up, int_bits } => {
+            put("kind", Json::Str("fixed".into()));
+            put("bits_comp", Json::Num(f64::from(*bits_comp)));
+            put("bits_up", Json::Num(f64::from(*bits_up)));
+            put("int_bits", Json::Num(f64::from(*int_bits)));
+        }
+        Arithmetic::Dynamic {
+            bits_comp,
+            bits_up,
+            max_overflow_rate,
+            update_every_examples,
+            init_int_bits,
+            warmup_steps,
+        } => {
+            put("kind", Json::Str("dynamic".into()));
+            put("bits_comp", Json::Num(f64::from(*bits_comp)));
+            put("bits_up", Json::Num(f64::from(*bits_up)));
+            put("max_overflow_rate", Json::Num(*max_overflow_rate));
+            put("update_every_examples", Json::Num(*update_every_examples as f64));
+            put("init_int_bits", Json::Num(f64::from(*init_int_bits)));
+            put("warmup_steps", Json::Num(*warmup_steps as f64));
+        }
+    }
+    Json::Object(m)
+}
+
+/// JSON → Arithmetic (inverse of [`arithmetic_to_json`]).
+fn arithmetic_from_json(j: &Json) -> crate::Result<Arithmetic> {
+    let kind = j.get("kind")?.as_str().context("arithmetic kind")?;
+    match kind {
+        "float32" => Ok(Arithmetic::Float32),
+        "half" | "float16" => Ok(Arithmetic::Half),
+        "fixed" => Ok(Arithmetic::Fixed {
+            bits_comp: j.get("bits_comp")?.as_i64()? as i32,
+            bits_up: j.get("bits_up")?.as_i64()? as i32,
+            int_bits: j.get("int_bits")?.as_i64()? as i32,
+        }),
+        "dynamic" => Ok(Arithmetic::Dynamic {
+            bits_comp: j.get("bits_comp")?.as_i64()? as i32,
+            bits_up: j.get("bits_up")?.as_i64()? as i32,
+            max_overflow_rate: j.get("max_overflow_rate")?.as_f64()?,
+            update_every_examples: j.get("update_every_examples")?.as_usize()?,
+            init_int_bits: j.get("init_int_bits")?.as_i64()? as i32,
+            warmup_steps: j.get("warmup_steps")?.as_usize()?,
+        }),
+        other => bail!("unknown arithmetic kind '{other}' (float32|half|fixed|dynamic)"),
+    }
+}
+
+impl Checkpoint {
+    /// Capture a finished run: the config it was launched with, its
+    /// [`RunResult`], and the backend's parameters in manifest order.
+    pub fn from_run(
+        cfg: &ExperimentConfig,
+        result: &RunResult,
+        params: Vec<Tensor>,
+    ) -> crate::Result<Checkpoint> {
+        let topology = match &cfg.topology {
+            Some(spec) => spec.clone(),
+            None => TopologySpec::builtin(&cfg.model).with_context(|| {
+                format!("model '{}' is not a builtin topology; cannot checkpoint", cfg.model)
+            })?,
+        };
+        ensure!(
+            cfg.train.seed <= JSON_EXACT_MAX,
+            "seed {} exceeds the JSON-exact integer range (2^53); pick a smaller seed to checkpoint",
+            cfg.train.seed
+        );
+        // Store the *padded* test-set size the trainer actually
+        // evaluated, so `infer --load` regenerates the identical split.
+        let n_test = cfg.data.n_test.div_ceil(topology.eval_batch) * topology.eval_batch;
+        Ok(Checkpoint {
+            name: cfg.name.clone(),
+            model: cfg.model.clone(),
+            topology,
+            dataset: cfg.data.dataset.clone(),
+            n_train: cfg.data.n_train,
+            n_test,
+            seed: cfg.train.seed,
+            arithmetic: cfg.arithmetic.clone(),
+            int_bits: result.final_int_bits.clone(),
+            test_error: result.test_error,
+            params,
+        })
+    }
+
+    /// The checkpoint as a key-sorted JSON document, checksum included.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".to_string(), Json::Num(CHECKPOINT_VERSION as f64));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("model".to_string(), Json::Str(self.model.clone()));
+        m.insert("topology".to_string(), self.topology.to_json());
+        let mut data = BTreeMap::new();
+        data.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        data.insert("n_train".to_string(), Json::Num(self.n_train as f64));
+        data.insert("n_test".to_string(), Json::Num(self.n_test as f64));
+        m.insert("data".to_string(), Json::Object(data));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("arithmetic".to_string(), arithmetic_to_json(&self.arithmetic));
+        m.insert(
+            "int_bits".to_string(),
+            Json::Array(self.int_bits.iter().map(|&b| Json::Num(f64::from(b))).collect()),
+        );
+        m.insert("test_error".to_string(), Json::Num(self.test_error));
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut p = BTreeMap::new();
+                // advisory label matching the manifest's naming scheme
+                // (w/b alternate per layer); validation goes by shape
+                let kind = if i % 2 == 0 { "w" } else { "b" };
+                p.insert("name".to_string(), Json::Str(format!("l{}.{kind}", i / 2)));
+                p.insert(
+                    "shape".to_string(),
+                    Json::Array(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                );
+                p.insert(
+                    "bits".to_string(),
+                    Json::Array(
+                        t.data().iter().map(|v| Json::Num(f64::from(v.to_bits()))).collect(),
+                    ),
+                );
+                Json::Object(p)
+            })
+            .collect();
+        m.insert("params".to_string(), Json::Array(params));
+        let sum = checksum(m.clone());
+        m.insert("checksum".to_string(), Json::Str(sum));
+        Json::Object(m)
+    }
+
+    /// Parse a checkpoint document: version gate, checksum verification,
+    /// then field decoding. Shape validation happens in [`restore`].
+    ///
+    /// [`restore`]: Checkpoint::restore
+    pub fn from_json(doc: &Json) -> crate::Result<Checkpoint> {
+        let obj = doc.as_object().context("checkpoint root must be a JSON object")?;
+        let version = doc.get("version")?.as_usize()?;
+        ensure!(
+            version == CHECKPOINT_VERSION,
+            "unsupported checkpoint version {version} (this build reads version {CHECKPOINT_VERSION})"
+        );
+        let stored = doc.get("checksum")?.as_str()?.to_string();
+        let mut body = obj.clone();
+        body.remove("checksum");
+        let computed = checksum(body);
+        ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch: stored {stored}, recomputed {computed} \
+             (file corrupted or hand-edited)"
+        );
+
+        let data = doc.get("data")?;
+        let seed = doc.get("seed")?.as_i64()?;
+        ensure!(seed >= 0, "checkpoint seed {seed} is negative");
+        let int_bits: Vec<i32> = doc
+            .get("int_bits")?
+            .as_array()?
+            .iter()
+            .map(|b| b.as_i64().map(|v| v as i32))
+            .collect::<Result<_, _>>()
+            .context("int_bits")?;
+
+        let mut params = Vec::new();
+        for (i, p) in doc.get("params")?.as_array()?.iter().enumerate() {
+            let shape = p.get("shape")?.as_usize_vec().with_context(|| format!("param {i}"))?;
+            let bits = p.get("bits")?.as_array().with_context(|| format!("param {i}"))?;
+            let mut values = Vec::with_capacity(bits.len());
+            for b in bits {
+                let v = b.as_f64()?;
+                ensure!(
+                    v.fract() == 0.0 && (0.0..=f64::from(u32::MAX)).contains(&v),
+                    "checkpoint param {i}: {v} is not a u32 f32-bit pattern"
+                );
+                values.push(f32::from_bits(v as u32));
+            }
+            let want: usize = shape.iter().product();
+            ensure!(
+                values.len() == want,
+                "checkpoint param {i}: shape {shape:?} wants {want} values, found {}",
+                values.len()
+            );
+            params.push(Tensor::from_vec(&shape, values));
+        }
+
+        Ok(Checkpoint {
+            name: doc.get("name")?.as_str()?.to_string(),
+            model: doc.get("model")?.as_str()?.to_string(),
+            topology: TopologySpec::from_json(doc.get("topology")?)
+                .context("checkpoint topology")?,
+            dataset: data.get("dataset")?.as_str()?.to_string(),
+            n_train: data.get("n_train")?.as_usize()?,
+            n_test: data.get("n_test")?.as_usize()?,
+            seed: seed as u64,
+            arithmetic: arithmetic_from_json(doc.get("arithmetic")?)
+                .context("checkpoint arithmetic")?,
+            int_bits,
+            test_error: doc.get("test_error")?.as_f64()?,
+            params,
+        })
+    }
+
+    /// Parse checkpoint text (corrupted JSON is the first distinct
+    /// failure mode; everything downstream sees a well-formed document).
+    pub fn parse(text: &str) -> crate::Result<Checkpoint> {
+        let doc = json::parse(text).context("checkpoint is not valid JSON")?;
+        Checkpoint::from_json(&doc)
+    }
+
+    /// Write the checkpoint to `path` (pretty-printed — params dominate
+    /// the size either way, and pretty files diff and debug better).
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing checkpoint {path}"))
+    }
+
+    /// Read + parse a checkpoint file.
+    pub fn load(path: &str) -> crate::Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path}"))?;
+        Checkpoint::parse(&text).with_context(|| format!("checkpoint {path}"))
+    }
+
+    /// Re-realize the topology against the dataset, validate the stored
+    /// state against the resulting manifest (the fourth distinct failure
+    /// mode: topology/dataset shape mismatch), and rebuild the frozen
+    /// scale controller.
+    pub fn restore(&self) -> crate::Result<Restored> {
+        self.topology
+            .validate()
+            .with_context(|| format!("checkpoint topology '{}'", self.topology.name))?;
+        let (data_shape, n_classes) = dataset_shape(&self.dataset)?;
+        let in_shape =
+            if self.topology.conv.is_empty() { data_shape.flattened() } else { data_shape };
+        let model = ModelInfo::from_topology_shaped(&self.topology, &in_shape, n_classes)?;
+        ensure!(
+            self.int_bits.len() == model.n_groups,
+            "checkpoint scale table has {} groups but topology '{}' on dataset '{}' yields {} \
+             — topology/dataset mismatch",
+            self.int_bits.len(),
+            self.topology.name,
+            self.dataset,
+            model.n_groups
+        );
+        ensure!(
+            self.params.len() == model.params.len(),
+            "checkpoint carries {} parameter tensors but topology '{}' on dataset '{}' wants {} \
+             — topology/dataset mismatch",
+            self.params.len(),
+            self.topology.name,
+            self.dataset,
+            model.params.len()
+        );
+        for (t, spec) in self.params.iter().zip(&model.params) {
+            ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "checkpoint parameter '{}' has shape {:?} but topology '{}' on dataset '{}' \
+                 wants {:?} — topology/dataset mismatch",
+                spec.name,
+                t.shape(),
+                self.topology.name,
+                self.dataset,
+                spec.shape
+            );
+        }
+        let (comp_fmt, up_fmt) = self.arithmetic.initial_formats();
+        let mut ctrl = ScaleController::fixed(model.n_groups, comp_fmt, up_fmt);
+        // Only fixed-point arithmetics adopt stored scales: float32/half
+        // use the passthrough sentinel format (total_bits = 0), which
+        // adoption would rebuild as a (degenerate) fixed format.
+        if matches!(self.arithmetic, Arithmetic::Fixed { .. } | Arithmetic::Dynamic { .. }) {
+            ctrl.adopt_int_bits(&self.int_bits);
+        }
+        let half = matches!(self.arithmetic, Arithmetic::Half);
+        Ok(Restored {
+            spec: self.topology.clone(),
+            in_shape,
+            n_classes,
+            model,
+            ctrl,
+            half,
+        })
+    }
+
+    /// An [`ExperimentConfig`] equivalent to the checkpointed run for
+    /// backend setup: explicit topology, native backend, and the
+    /// trainer-facing data/seed fields. Train-schedule fields are
+    /// defaults — inference never reads them.
+    pub fn to_config(&self) -> ExperimentConfig {
+        ExperimentConfig {
+            name: self.name.clone(),
+            model: self.model.clone(),
+            backend: BackendKind::Native,
+            topology: Some(self.topology.clone()),
+            arithmetic: self.arithmetic.clone(),
+            train: TrainConfig { seed: self.seed, ..TrainConfig::default() },
+            data: DataConfig {
+                dataset: self.dataset.clone(),
+                n_train: self.n_train,
+                n_test: self.n_test,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint(arithmetic: Arithmetic) -> Checkpoint {
+        let mut spec = TopologySpec::mlp(vec![6, 5], 2);
+        spec.eval_batch = 8;
+        spec.train_batch = 4;
+        let n_groups = spec.n_layers() * crate::runtime::manifest::N_KINDS;
+        // parameter payload exercising the hard bit patterns: -0.0 (the
+        // decimal writer would drop the sign), a denormal, and exact grid
+        // values
+        let w0 = Tensor::from_vec(&[2, 784, 6], vec![0.125; 2 * 784 * 6]);
+        let mut b0 = Tensor::zeros(&[2, 6]);
+        b0.data_mut()[0] = -0.0;
+        b0.data_mut()[1] = f32::from_bits(1); // smallest denormal
+        let w1 = Tensor::from_vec(&[2, 6, 5], vec![-0.375; 2 * 6 * 5]);
+        let b1 = Tensor::zeros(&[2, 5]);
+        let w2 = Tensor::from_vec(&[5, 10], vec![0.5; 50]);
+        let b2 = Tensor::zeros(&[10]);
+        Checkpoint {
+            name: "unit".into(),
+            model: "custom".into(),
+            topology: spec,
+            dataset: "clusters".into(),
+            n_train: 64,
+            n_test: 16,
+            seed: 7,
+            arithmetic,
+            int_bits: (0..n_groups as i32).map(|g| g % 5 - 2).collect(),
+            test_error: 0.171875,
+            params: vec![w0, b0, w1, b1, w2, b2],
+        }
+    }
+
+    fn assert_round_trip(ck: &Checkpoint) {
+        let text = ck.to_json().to_string_pretty();
+        let back = Checkpoint::parse(&text).expect("round trip");
+        assert_eq!(back.name, ck.name);
+        assert_eq!(back.model, ck.model);
+        assert_eq!(back.topology, ck.topology);
+        assert_eq!(back.dataset, ck.dataset);
+        assert_eq!(back.n_train, ck.n_train);
+        assert_eq!(back.n_test, ck.n_test);
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.arithmetic, ck.arithmetic);
+        assert_eq!(back.int_bits, ck.int_bits);
+        assert_eq!(back.test_error.to_bits(), ck.test_error.to_bits());
+        assert_eq!(back.params.len(), ck.params.len());
+        for (a, b) in back.params.iter().zip(&ck.params) {
+            assert_eq!(a.shape(), b.shape());
+            let bits_a: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "param bits must survive the round trip");
+        }
+    }
+
+    #[test]
+    fn round_trips_all_arithmetics_bit_exactly() {
+        for arithmetic in [
+            Arithmetic::Float32,
+            Arithmetic::Half,
+            Arithmetic::Fixed { bits_comp: 10, bits_up: 12, int_bits: 1 },
+            Arithmetic::Dynamic {
+                bits_comp: 10,
+                bits_up: 12,
+                max_overflow_rate: 0.01,
+                update_every_examples: 100,
+                init_int_bits: 1,
+                warmup_steps: 10,
+            },
+        ] {
+            assert_round_trip(&sample_checkpoint(arithmetic));
+        }
+    }
+
+    #[test]
+    fn restore_rebuilds_manifest_and_adopted_scales() {
+        let ck = sample_checkpoint(Arithmetic::Fixed { bits_comp: 10, bits_up: 12, int_bits: 1 });
+        let restored = ck.restore().expect("restore");
+        assert_eq!(restored.model.params.len(), ck.params.len());
+        assert_eq!(restored.ctrl.n_groups(), ck.int_bits.len());
+        assert_eq!(restored.ctrl.int_bits_vec(), ck.int_bits);
+        assert!(!restored.half);
+        // widths survive adoption: group 0 (l0.w) is an update-kind
+        // group at bits_up, group 2 (l0.z) a computation group at
+        // bits_comp
+        assert_eq!(restored.ctrl.format(0).total_bits, 12);
+        assert_eq!(restored.ctrl.format(2).total_bits, 10);
+    }
+
+    #[test]
+    fn restore_keeps_float32_sentinel() {
+        let ck = sample_checkpoint(Arithmetic::Float32);
+        let restored = ck.restore().expect("restore");
+        for g in 0..restored.ctrl.n_groups() {
+            assert!(restored.ctrl.format(g).is_float32());
+        }
+    }
+
+    #[test]
+    fn version_gate_is_a_distinct_error() {
+        let ck = sample_checkpoint(Arithmetic::Float32);
+        let Json::Object(mut m) = ck.to_json() else { panic!("object") };
+        m.insert("version".into(), Json::Num(99.0));
+        let err = Checkpoint::from_json(&Json::Object(m)).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported checkpoint version 99"), "{err:#}");
+    }
+
+    #[test]
+    fn checksum_detects_tampering() {
+        let ck = sample_checkpoint(Arithmetic::Float32);
+        let Json::Object(mut m) = ck.to_json() else { panic!("object") };
+        m.insert("seed".into(), Json::Num(8.0));
+        let err = Checkpoint::from_json(&Json::Object(m)).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn corrupt_json_is_a_distinct_error() {
+        let err = Checkpoint::parse("{ not json").unwrap_err();
+        assert!(format!("{err:#}").contains("not valid JSON"), "{err:#}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_distinct_error() {
+        let mut ck = sample_checkpoint(Arithmetic::Float32);
+        // break the first hidden width: stored params no longer fit the
+        // manifest the topology realizes to
+        ck.topology.hidden[0] = 7;
+        let err = ck.restore().unwrap_err();
+        assert!(format!("{err:#}").contains("topology/dataset mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn scale_table_length_mismatch_is_a_distinct_error() {
+        let mut ck = sample_checkpoint(Arithmetic::Fixed { bits_comp: 10, bits_up: 12, int_bits: 1 });
+        ck.int_bits.pop();
+        let err = ck.restore().unwrap_err();
+        assert!(format!("{err:#}").contains("scale table"), "{err:#}");
+    }
+
+    #[test]
+    fn arithmetic_json_mirrors_experiment_config_keys() {
+        let j = arithmetic_to_json(&Arithmetic::Dynamic {
+            bits_comp: 10,
+            bits_up: 12,
+            max_overflow_rate: 0.01,
+            update_every_examples: 100,
+            init_int_bits: 1,
+            warmup_steps: 10,
+        });
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "dynamic");
+        assert_eq!(j.get("bits_comp").unwrap().as_i64().unwrap(), 10);
+        assert_eq!(j.get("max_overflow_rate").unwrap().as_f64().unwrap(), 0.01);
+        assert_eq!(j.get("warmup_steps").unwrap().as_usize().unwrap(), 10);
+    }
+}

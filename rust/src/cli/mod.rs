@@ -101,6 +101,32 @@ impl Args {
     }
 }
 
+/// Read the file named by `--<flag> <path>`, turning io failures into a
+/// config error naming the flag and path (never a raw io panic).
+pub fn read_file_arg(flag: &str, path: &str) -> crate::Result<String> {
+    std::fs::read_to_string(path).map_err(|e| crate::err!("--{flag} {path}: {e}"))
+}
+
+/// Preflight that `--<flag> <path>` is writable *before* spending the
+/// expensive work whose results it will receive (a training run, a
+/// sweep). Probes by opening in create+append mode, which never
+/// truncates an existing file; a missing file is created empty, exactly
+/// as the eventual write would.
+pub fn preflight_writable(flag: &str, path: &str) -> crate::Result<()> {
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map(|_| ())
+        .map_err(|e| crate::err!("--{flag} {path}: not writable: {e}"))
+}
+
+/// Write `contents` to the file named by `--<flag> <path>`, naming the
+/// flag and path on failure.
+pub fn write_file_arg(flag: &str, path: &str, contents: &str) -> crate::Result<()> {
+    std::fs::write(path, contents).map_err(|e| crate::err!("--{flag} {path}: {e}"))
+}
+
 /// Render the top-level help text.
 pub fn help() -> String {
     "\
@@ -130,7 +156,26 @@ SUBCOMMANDS:
                   --max-overflow-rate R --update-every N --warmup N
                   --steps N --seed N --lr R --dropout-input R --dropout-hidden R
                   --eval-every N --loss-csv <file> --verbose
+                  --save <ckpt.json>     write a versioned checkpoint of the
+                                         trained model after the run (restores
+                                         bit-exactly with infer/serve)
     eval        Evaluate a config's arithmetic on a fresh model (sanity)
+    infer       Restore a checkpoint and re-run the test-set evaluation;
+                fails unless the recomputed error matches the checkpoint's
+                train-time eval bit-exactly
+                  --load <ckpt.json>     checkpoint written by train --save
+    serve       Serve batched quantized inference from a checkpoint with a
+                built-in closed-loop load generator; prints and persists
+                latency percentiles, throughput, and batch-fill stats
+                  --load <ckpt.json>     checkpoint written by train --save
+                  --requests N           total requests to issue (default 256)
+                  --concurrency N        closed-loop producer threads (default 4)
+                  --workers N            inference worker threads (default 2)
+                  --max-batch N          batching cap per forward (default 32)
+                  --max-wait-us N        batcher linger after the first
+                                         queued request, µs (default 2000)
+                  --queue-cap N          bounded request-queue depth (default 64)
+                  --bench-json <file>    stats output (default BENCH_serve.json)
     sweep       Run a sweep: float32 baseline + points over one axis,
                 fanned across a worker pool (rows are bit-identical at
                 any --jobs value; results print normalized by baseline)
@@ -217,5 +262,39 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = parse(&["train", "--int-bits", "-3"]);
         assert_eq!(a.get_parse("int-bits", 0i32).unwrap(), -3);
+    }
+
+    #[test]
+    fn read_file_arg_names_the_flag_and_path() {
+        let err = read_file_arg("load", "/no/such/lpdnn_ckpt.json").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--load"), "{msg}");
+        assert!(msg.contains("/no/such/lpdnn_ckpt.json"), "{msg}");
+    }
+
+    #[test]
+    fn preflight_writable_names_the_flag_and_keeps_contents() {
+        let err = preflight_writable("save", "/no/such/dir/out.json").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--save"), "{msg}");
+        assert!(msg.contains("not writable"), "{msg}");
+
+        // The probe must never truncate an existing file.
+        let path = std::env::temp_dir().join("lpdnn_test_cli_preflight.json");
+        std::fs::write(&path, "keep me").unwrap();
+        preflight_writable("save", path.to_str().unwrap()).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "keep me");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_file_arg_round_trips() {
+        let path = std::env::temp_dir().join("lpdnn_test_cli_write.json");
+        let p = path.to_str().unwrap();
+        write_file_arg("bench-json", p, "{}\n").unwrap();
+        assert_eq!(read_file_arg("bench-json", p).unwrap(), "{}\n");
+        let _ = std::fs::remove_file(&path);
+        let err = write_file_arg("bench-json", "/no/such/dir/b.json", "{}").unwrap_err();
+        assert!(format!("{err}").contains("--bench-json"));
     }
 }

@@ -28,6 +28,7 @@ use super::trainer::{RunResult, Trainer};
 use crate::config::ExperimentConfig;
 use crate::error::Context;
 use crate::runtime::{Backend, BackendSpec};
+use crate::tensor::Tensor;
 
 /// Owns how experiments execute: backend construction, observers,
 /// sweep parallelism. See the module docs.
@@ -91,6 +92,13 @@ impl Session {
             self.backend = Some(self.spec.create()?);
         }
         Ok(self.backend.as_mut().unwrap().as_mut())
+    }
+
+    /// The session backend's current parameters in manifest order. The
+    /// backend is retained across [`Session::run`] calls, so after a run
+    /// this is the trained state — what `lpdnn train --save` checkpoints.
+    pub fn params_host(&mut self) -> crate::Result<Vec<Tensor>> {
+        self.backend()?.params_host()
     }
 
     /// Run one experiment end to end and return its results.

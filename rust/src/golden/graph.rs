@@ -1349,7 +1349,10 @@ impl Network {
     }
 
     /// Forward-only logits `[B, C]` (no dropout, no mutation),
-    /// quantizing forward signals exactly as the train step does.
+    /// quantizing forward signals exactly as the train step does. Kernel
+    /// selection (`fused`, `conv_direct`, `int_domain`) comes from the
+    /// process-wide env defaults; callers that need explicit control
+    /// (the serving path) use [`Network::eval_logits_opt`].
     pub fn eval_logits(
         &self,
         params: &Params,
@@ -1358,12 +1361,36 @@ impl Network {
         mode: RoundMode,
         half: bool,
     ) -> Tensor {
+        self.eval_logits_opt(
+            params,
+            x,
+            ctrl,
+            &StepOptions { mode, half, ..Default::default() },
+        )
+    }
+
+    /// [`Network::eval_logits`] with explicit [`StepOptions`]: the
+    /// serving path honors a checkpoint-independent `int_domain` /
+    /// `fused` choice per request batch instead of whatever the env
+    /// said at process start. `opts.dropout` is ignored — eval never
+    /// drops.
+    pub fn eval_logits_opt(
+        &self,
+        params: &Params,
+        x: &Tensor,
+        ctrl: &ScaleController,
+        opts: &StepOptions,
+    ) -> Tensor {
         assert_eq!(
             ctrl.n_groups(),
             self.n_groups(),
             "scale controller group count must be Network::n_groups()"
         );
-        let mut q = GoldenQ::with_half(ctrl, mode, half);
+        assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
+        let mut q = GoldenQ::with_half(ctrl, opts.mode, opts.half);
+        q.fused = opts.fused;
+        q.conv_direct = opts.conv_direct;
+        q.int_domain = opts.int_domain;
         let mut dctx = DropCtx::eval();
         let mut h = x.clone();
         for (li, layer) in self.layers.iter().enumerate() {

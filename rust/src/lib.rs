@@ -23,6 +23,7 @@
 
 pub mod arith;
 pub mod bench_support;
+pub mod checkpoint;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -30,6 +31,7 @@ pub mod data;
 pub mod error;
 pub mod golden;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 

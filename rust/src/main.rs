@@ -5,14 +5,16 @@
 use std::sync::Arc;
 
 use lpdnn::arith::FixedFormat;
+use lpdnn::checkpoint::Checkpoint;
 use lpdnn::cli::{self, Args};
 use lpdnn::config::{Arithmetic, BackendKind, ExperimentConfig, TopologySpec};
 use lpdnn::coordinator::{
     LossCsvObserver, Session, StderrProgress, SweepPoint, SweepReport,
 };
-use lpdnn::data::Dataset;
+use lpdnn::data::{Batcher, Dataset};
 use lpdnn::error::Context;
-use lpdnn::runtime::{BackendSpec, Manifest};
+use lpdnn::runtime::{Backend, BackendSpec, Manifest};
+use lpdnn::serve::{serve_closed_loop, ServeOptions};
 use lpdnn::tensor::Pcg32;
 
 fn main() {
@@ -28,6 +30,8 @@ fn run(argv: Vec<String>) -> lpdnn::Result<()> {
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_train(&args), // eval = train with --steps 1 semantics; kept for discoverability
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "datasets" => cmd_datasets(&args),
         "formats" => cmd_formats(&args),
@@ -57,8 +61,9 @@ fn apply_topology_flag(args: &Args, cfg: &mut ExperimentConfig) -> lpdnn::Result
 /// A/B runs).
 fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
     if let Some(path) = args.get_opt("config") {
-        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
-        let mut cfg = ExperimentConfig::from_toml_str(&text)?;
+        let text = cli::read_file_arg("config", &path)?;
+        let mut cfg = ExperimentConfig::from_toml_str(&text)
+            .with_context(|| format!("--config {path}"))?;
         if let Some(b) = args.get_opt("backend") {
             cfg.backend = BackendKind::parse(&b)?;
         }
@@ -109,8 +114,17 @@ fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
 fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     let cfg = config_from_args(args)?;
     let loss_csv = args.get_opt("loss-csv");
+    let save_path = args.get_opt("save");
     let verbose = args.has("verbose");
     args.finish()?;
+
+    // Catch unwritable output paths before the training run, not after.
+    if let Some(p) = &save_path {
+        cli::preflight_writable("save", p)?;
+    }
+    if let Some(p) = &loss_csv {
+        cli::preflight_writable("loss-csv", p)?;
+    }
 
     let mut session = Session::new(BackendSpec::new(cfg.backend));
     if verbose {
@@ -154,6 +168,128 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     if let Some(path) = loss_csv {
         println!("loss curve:      {path}");
     }
+    if let Some(path) = &save_path {
+        let params = session.params_host()?;
+        let ckpt = Checkpoint::from_run(&cfg, &result, params)?;
+        ckpt.save(path).with_context(|| format!("--save {path}"))?;
+        let n: usize = ckpt.params.iter().map(|t| t.len()).sum();
+        println!("checkpoint:      {path} ({n} params in {} tensors)", ckpt.params.len());
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint and re-run its test-set evaluation, failing
+/// unless the recomputed error matches the train-time eval bit-exactly
+/// (the round-trip proof `train --save` promises).
+fn cmd_infer(args: &Args) -> lpdnn::Result<()> {
+    let load = args.get_opt("load");
+    args.finish()?;
+    let Some(path) = load else {
+        lpdnn::bail!("infer needs --load <ckpt.json> (written by train --save)");
+    };
+
+    let text = cli::read_file_arg("load", &path)?;
+    let ckpt = Checkpoint::parse(&text).with_context(|| format!("--load {path}"))?;
+    let restored = ckpt.restore()?;
+    let cfg = ckpt.to_config();
+    cfg.validate()?;
+
+    let mut backend = BackendSpec::new(cfg.backend).create()?;
+    let model = backend.begin_run(&cfg)?;
+    backend.load_params(ckpt.params.clone())?;
+
+    eprintln!(
+        "inferring '{}': model={} dataset={} arith={} n_test={}",
+        ckpt.name,
+        restored.spec.name,
+        ckpt.dataset,
+        ckpt.arithmetic.label(),
+        ckpt.n_test
+    );
+    // The same dataset recipe the trainer used: ckpt.n_test is stored
+    // already rounded to the eval batch, so this regenerates the
+    // identical test split.
+    let root_rng = Pcg32::seeded(ckpt.seed);
+    let dataset = Dataset::generate(&ckpt.dataset, ckpt.n_train, ckpt.n_test, &root_rng)?;
+
+    let t0 = std::time::Instant::now();
+    let mut errors = 0usize;
+    let mut total = 0usize;
+    for (x, y, n_real) in Batcher::eval_batches(&dataset.test, model.eval_batch, model.n_classes) {
+        errors += backend.eval_errors(&restored.ctrl, &x, &y, n_real)?;
+        total += n_real;
+    }
+    let err = errors as f64 / total as f64;
+
+    println!("experiment:      {}", ckpt.name);
+    println!("checkpoint:      {path}");
+    println!("arithmetic:      {}", ckpt.arithmetic.label());
+    println!("test error:      {err:.4} ({errors}/{total})");
+    println!("wallclock:       {:.2?}", t0.elapsed());
+    lpdnn::ensure!(
+        err.to_bits() == ckpt.test_error.to_bits(),
+        "restored test error {err} does not match the checkpoint's train-time \
+         eval {} — the checkpoint did not round-trip bit-exactly",
+        ckpt.test_error
+    );
+    println!("matches the train-time eval bit-exactly");
+    Ok(())
+}
+
+/// Serve batched quantized inference from a checkpoint under the
+/// built-in closed-loop load generator, then persist the latency /
+/// throughput / batch-fill table as versioned JSON.
+fn cmd_serve(args: &Args) -> lpdnn::Result<()> {
+    let load = args.get_opt("load");
+    let d = ServeOptions::default();
+    let opts = ServeOptions {
+        requests: args.get_parse("requests", d.requests)?,
+        concurrency: args.get_parse("concurrency", d.concurrency)?,
+        workers: args.get_parse("workers", d.workers)?,
+        max_batch: args.get_parse("max-batch", d.max_batch)?,
+        max_wait: std::time::Duration::from_micros(
+            args.get_parse("max-wait-us", d.max_wait.as_micros() as u64)?,
+        ),
+        queue_cap: args.get_parse("queue-cap", d.queue_cap)?,
+        ..d
+    };
+    let bench_json = args.get("bench-json", "BENCH_serve.json");
+    args.finish()?;
+    let Some(path) = load else {
+        lpdnn::bail!("serve needs --load <ckpt.json> (written by train --save)");
+    };
+    cli::preflight_writable("bench-json", &bench_json)?;
+
+    let text = cli::read_file_arg("load", &path)?;
+    let ckpt = Checkpoint::parse(&text).with_context(|| format!("--load {path}"))?;
+    let restored = ckpt.restore()?;
+    let root_rng = Pcg32::seeded(ckpt.seed);
+    let dataset = Dataset::generate(&ckpt.dataset, ckpt.n_train, ckpt.n_test, &root_rng)?;
+
+    eprintln!(
+        "serving '{}': model={} arith={} requests={} concurrency={} workers={} \
+         max_batch={} max_wait={}us int_domain={}",
+        ckpt.name,
+        restored.spec.name,
+        ckpt.arithmetic.label(),
+        opts.requests,
+        opts.concurrency,
+        opts.workers,
+        opts.max_batch,
+        opts.max_wait.as_micros(),
+        opts.int_domain
+    );
+    let params = Arc::new(ckpt.params.clone());
+    let report = serve_closed_loop(&restored, params, &dataset.test, &opts)?;
+
+    let table = report.table();
+    table.print();
+    cli::write_file_arg(
+        "bench-json",
+        &bench_json,
+        &format!("{}\n", table.to_json().to_string_pretty()),
+    )?;
+    println!("bench json:      {bench_json}");
     Ok(())
 }
 
@@ -316,6 +452,13 @@ fn cmd_sweep(args: &Args) -> lpdnn::Result<()> {
     let verbose = args.has("verbose");
     args.finish()?;
 
+    // Catch an unwritable report path before the sweep burns its budget.
+    // (--loss-csv is not preflighted here: per_label suffixes the path,
+    // so probing the base path would leave a stray empty file.)
+    if let Some(p) = &report_path {
+        cli::preflight_writable("report", p)?;
+    }
+
     if !explicit_steps {
         base.train.steps = lpdnn::bench_support::scaled(base.train.steps);
     }
@@ -370,7 +513,9 @@ fn cmd_sweep(args: &Args) -> lpdnn::Result<()> {
         println!("loss curves:     {path} (one file per point, suffixed by label)");
     }
     if let Some(path) = report_path {
-        SweepReport::from_outcome(&outcome, jobs).write(&path)?;
+        SweepReport::from_outcome(&outcome, jobs)
+            .write(&path)
+            .with_context(|| format!("--report {path}"))?;
         println!("report:          {path}");
     }
     Ok(())

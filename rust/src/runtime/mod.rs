@@ -114,4 +114,14 @@ pub trait Backend {
     /// Current parameters as host tensors in manifest order (testing and
     /// inspection; the PJRT backend fetches from the device).
     fn params_host(&self) -> crate::Result<Vec<Tensor>>;
+
+    /// Replace the run's parameters with host tensors in manifest order
+    /// (checkpoint restore). Values are adopted verbatim — they are
+    /// expected to already sit on their storage grids — and optimizer
+    /// velocities reset to zero. Backends that keep state device-side
+    /// may not support importing host tensors; the default refuses.
+    fn load_params(&mut self, params: Vec<Tensor>) -> crate::Result<()> {
+        let _ = params;
+        crate::bail!("backend '{}' does not support loading host parameters", self.name())
+    }
 }

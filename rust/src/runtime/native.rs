@@ -218,6 +218,28 @@ impl Backend for NativeBackend {
         let run = self.run.as_ref().context("NativeBackend: begin_run was never called")?;
         Ok(run.params.clone())
     }
+
+    fn load_params(&mut self, params: Vec<Tensor>) -> crate::Result<()> {
+        let run = self.run_mut()?;
+        crate::ensure!(
+            params.len() == run.model.params.len(),
+            "load_params: {} tensors for a model with {} parameters",
+            params.len(),
+            run.model.params.len()
+        );
+        for (t, spec) in params.iter().zip(&run.model.params) {
+            crate::ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "load_params: parameter '{}' has shape {:?}, model wants {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+        run.vels = run.model.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        run.params = params;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +363,28 @@ mod tests {
         let out = be.train_step(&ctrl, &x, &y, &hp).unwrap();
         assert!(out.loss.is_finite());
         assert_eq!(out.overflow.shape(), &[32, 3]);
+    }
+
+    #[test]
+    fn load_params_replaces_state_and_validates_shapes() {
+        let mut be = NativeBackend::new();
+        let model = be.begin_run(&cfg()).unwrap();
+        let ctrl =
+            ScaleController::fixed(model.n_groups, FixedFormat::FLOAT32, FixedFormat::FLOAT32);
+        let mut rng = Pcg32::seeded(11);
+        be.init_state(&ctrl, &mut rng).unwrap();
+        let mut params = be.params_host().unwrap();
+        params[0].data_mut()[0] = 0.25;
+        be.load_params(params.clone()).unwrap();
+        assert_eq!(be.params_host().unwrap()[0].data()[0], 0.25);
+        // wrong count
+        let err = be.load_params(params[1..].to_vec()).unwrap_err();
+        assert!(format!("{err:#}").contains("tensors for a model"), "{err:#}");
+        // wrong shape
+        let mut bad = params;
+        bad[0] = Tensor::zeros(&[1, 2, 3]);
+        let err = be.load_params(bad).unwrap_err();
+        assert!(format!("{err:#}").contains("model wants"), "{err:#}");
     }
 
     #[test]

@@ -1,0 +1,598 @@
+//! `lpdnn serve`: a batched, multi-threaded quantized-inference server
+//! (DESIGN.md §Serving).
+//!
+//! The deployment case every related paper motivates — run the trained
+//! low-precision network forward-only, at serving concurrency — wired
+//! as three thread roles around two bounded queues:
+//!
+//! ```text
+//! producers (N) ──► request queue ──► batcher (1) ──► batch queue ──► workers (W)
+//!      ▲                                (max-batch /                      │
+//!      └───────────── response slots ◄── max-wait-µs) ◄──────────────────┘
+//! ```
+//!
+//! * **Producers** submit single examples and block on a per-request
+//!   response slot — the built-in closed-loop load generator
+//!   (`--requests`, `--concurrency`) measures end-to-end latency here.
+//! * The **batcher** drains the request queue under a max-batch-size /
+//!   max-wait policy: a batch ships as soon as it fills, or when the
+//!   oldest queued request has waited `max_wait`, whichever is first.
+//! * **Workers** each own a private [`Network`] (layer scratch is not
+//!   shareable across threads) over shared `Arc` parameters, run the
+//!   fused quantized forward pass ([`Network::eval_logits_opt`], with
+//!   [`StepOptions::int_domain`] honored so the integer-domain kernels
+//!   serve traffic), and fulfill each request's slot.
+//!
+//! **Determinism under concurrency:** batch composition is timing
+//! dependent — two runs will batch requests differently — but responses
+//! are not. The forward pass is row-independent (per-output-element
+//! accumulation order is fixed regardless of how many rows share the
+//! GEMM; maxout/pool/softmax are per-example), eval rounds half-away
+//! (no stochastic stream), and the integer-domain dispatch is
+//! bit-identical to the simulated path whenever it engages. So every
+//! response is bit-identical to a single-example forward pass of the
+//! same checkpoint, whatever the batching, worker count, or
+//! `LPDNN_INT_GEMM` setting — proven per-request in `tests/serve.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arith::RoundMode;
+use crate::bench_support::Table;
+use crate::checkpoint::Restored;
+use crate::data::Split;
+use crate::golden::{fused_default, int_gemm_default, Network, Params, StepOptions};
+use crate::tensor::{ops, Tensor};
+use crate::{bail, ensure};
+
+/// Serving/load-generator knobs (`lpdnn serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Total requests the load generator issues.
+    pub requests: usize,
+    /// Producer threads (closed loop: each has one request in flight).
+    pub concurrency: usize,
+    /// Inference worker threads (each with a private network).
+    pub workers: usize,
+    /// Largest batch the batcher assembles.
+    pub max_batch: usize,
+    /// Longest the batcher holds a non-full batch open.
+    pub max_wait: Duration,
+    /// Request-queue capacity (back-pressure bound).
+    pub queue_cap: usize,
+    /// Kernel selection for the forward pass (mode and float16
+    /// simulation come from the checkpoint's arithmetic).
+    pub fused: bool,
+    pub int_domain: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            requests: 256,
+            concurrency: 4,
+            workers: 2,
+            max_batch: 32,
+            max_wait: Duration::from_micros(2000),
+            queue_cap: 64,
+            fused: fused_default(),
+            int_domain: int_gemm_default(),
+        }
+    }
+}
+
+/// One fulfilled request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: usize,
+    /// The network's logits row for this example (`n_classes` values).
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// Submit → response, as the producer experienced it.
+    pub latency: Duration,
+}
+
+/// A per-request rendezvous: the producer blocks on it, a worker
+/// fulfills it.
+#[derive(Default)]
+struct Slot {
+    state: Mutex<Option<Response>>,
+    ready: Condvar,
+}
+
+impl Slot {
+    fn fulfill(&self, r: Response) {
+        *self.state.lock().unwrap() = Some(r);
+        self.ready.notify_one();
+    }
+
+    fn wait(&self) -> Response {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.take() {
+                return r;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+}
+
+/// One in-flight request.
+struct Request {
+    id: usize,
+    example: Vec<f32>,
+    submitted: Instant,
+    slot: Arc<Slot>,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue (mutex + condvars — no external crates) with a
+/// batch-draining pop for the batcher side.
+struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Block until there is room; `false` if the queue closed instead.
+    fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Block for one item; `None` once the queue is closed *and* drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// The batching policy: block for the first item, then keep the
+    /// batch open until it has `max_n` items or `max_wait` has elapsed
+    /// since the first item was taken. Empty result ⇔ closed and drained.
+    fn pop_batch(&self, max_n: usize, max_wait: Duration) -> Vec<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.items.is_empty() {
+                break;
+            }
+            if st.closed {
+                return Vec::new();
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let deadline = Instant::now() + max_wait;
+        let mut batch = Vec::new();
+        loop {
+            while batch.len() < max_n {
+                match st.items.pop_front() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+            self.not_full.notify_all();
+            if batch.len() >= max_n || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        batch
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// What a serve run measured. Responses are sorted by request id, so
+/// `responses[i]` answers the load generator's example `i % split.len()`.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub opts: ServeOptions,
+    pub wallclock: Duration,
+    pub responses: Vec<Response>,
+    /// Every batch size the batcher shipped, in ship order.
+    pub batch_sizes: Vec<usize>,
+    /// Misclassified requests (predictions vs the split's labels).
+    pub errors: usize,
+}
+
+impl ServeReport {
+    /// Latency percentile over all requests (p in [0, 1]).
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        let mut sorted: Vec<f64> =
+            self.responses.iter().map(|r| r.latency.as_secs_f64()).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        Duration::from_secs_f64(sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)])
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.responses.len() as f64 / self.wallclock.as_secs_f64().max(1e-12)
+    }
+
+    pub fn mean_fill(&self) -> f64 {
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len().max(1) as f64
+    }
+
+    pub fn max_fill(&self) -> usize {
+        self.batch_sizes.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn error_rate(&self) -> f64 {
+        self.errors as f64 / self.responses.len().max(1) as f64
+    }
+
+    /// The report as a metric/value [`Table`] — printed by `lpdnn serve`
+    /// and persisted as versioned JSON (`BENCH_serve.json`) via
+    /// [`Table::to_json`].
+    pub fn table(&self) -> Table {
+        let ms = |d: Duration| format!("{:.3}", d.as_secs_f64() * 1e3);
+        let mut t = Table::new(&["metric", "value"]);
+        let mut row = |k: &str, v: String| t.row(&[k.to_string(), v]);
+        row("requests", self.responses.len().to_string());
+        row("concurrency", self.opts.concurrency.to_string());
+        row("workers", self.opts.workers.to_string());
+        row("max_batch", self.opts.max_batch.to_string());
+        row("max_wait_us", self.opts.max_wait.as_micros().to_string());
+        row("int_domain", self.opts.int_domain.to_string());
+        row("fused", self.opts.fused.to_string());
+        row("batches", self.batch_sizes.len().to_string());
+        row("batch_fill_mean", format!("{:.2}", self.mean_fill()));
+        row("batch_fill_max", self.max_fill().to_string());
+        row("latency_p50_ms", ms(self.latency_percentile(0.50)));
+        row("latency_p95_ms", ms(self.latency_percentile(0.95)));
+        row("latency_p99_ms", ms(self.latency_percentile(0.99)));
+        row("throughput_rps", format!("{:.1}", self.throughput_rps()));
+        row("test_error", format!("{:.6}", self.error_rate()));
+        t
+    }
+}
+
+/// The [`StepOptions`] a serve run evaluates under: deterministic
+/// half-away rounding, float16 simulation per the checkpoint, kernel
+/// selection per the serve flags. `tests/serve.rs` uses the same
+/// options for its direct single-example reference passes.
+pub fn eval_options(restored: &Restored, opts: &ServeOptions) -> StepOptions {
+    StepOptions {
+        mode: RoundMode::HalfAway,
+        half: restored.half,
+        dropout: None,
+        fused: opts.fused,
+        conv_direct: false,
+        int_domain: opts.int_domain,
+    }
+}
+
+/// Run the serve pipeline closed-loop against a restored checkpoint:
+/// `opts.requests` requests cycling through `split`'s examples, issued
+/// by `opts.concurrency` producers, batched and answered by
+/// `opts.workers` workers. Returns per-request responses plus latency /
+/// throughput / batch-fill measurements.
+pub fn serve_closed_loop(
+    restored: &Restored,
+    params: Arc<Params>,
+    split: &Split,
+    opts: &ServeOptions,
+) -> crate::Result<ServeReport> {
+    ensure!(opts.requests > 0, "serve: --requests must be > 0");
+    ensure!(opts.concurrency > 0, "serve: --concurrency must be > 0");
+    ensure!(opts.workers > 0, "serve: --workers must be > 0");
+    ensure!(opts.max_batch > 0, "serve: --max-batch must be > 0");
+    ensure!(!split.is_empty(), "serve: the example split is empty");
+    ensure!(
+        split.example_len() == restored.in_shape.len(),
+        "serve: split examples carry {} values but the network input {} wants {}",
+        split.example_len(),
+        restored.in_shape,
+        restored.in_shape.len()
+    );
+    ensure!(
+        params.len() == restored.model.params.len(),
+        "serve: {} parameter tensors for a model with {}",
+        params.len(),
+        restored.model.params.len()
+    );
+    // fail on the caller's thread if the topology cannot build (workers
+    // would otherwise leave producers blocked on their slots)
+    let _ = Network::from_topology_shaped(&restored.spec, restored.in_shape, restored.n_classes)?;
+
+    let step_opts = eval_options(restored, opts);
+    let request_q: BoundedQueue<Request> = BoundedQueue::new(opts.queue_cap);
+    let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
+    let next_id = AtomicUsize::new(0);
+    let n_classes = restored.n_classes;
+    let in_dims = restored.in_shape.dims();
+
+    let t0 = Instant::now();
+    let (mut responses, batch_sizes) = std::thread::scope(|s| {
+        let worker_handles: Vec<_> = (0..opts.workers)
+            .map(|_| {
+                let params = Arc::clone(&params);
+                let step_opts = &step_opts;
+                let batch_q = &batch_q;
+                let restored = &restored;
+                let in_dims = &in_dims;
+                s.spawn(move || {
+                    // restore() already validated the topology, so this
+                    // only fails on resource exhaustion; panicking beats
+                    // leaving producers parked on unfulfillable slots
+                    let net = Network::from_topology_shaped(
+                        &restored.spec,
+                        restored.in_shape,
+                        restored.n_classes,
+                    )
+                    .expect("serve worker: network construction");
+                    while let Some(batch) = batch_q.pop() {
+                        let n = batch.len();
+                        let mut dims = vec![n];
+                        dims.extend_from_slice(in_dims);
+                        let mut xdata = Vec::with_capacity(n * restored.in_shape.len());
+                        for req in &batch {
+                            xdata.extend_from_slice(&req.example);
+                        }
+                        let x = Tensor::from_vec(&dims, xdata);
+                        let logits = net.eval_logits_opt(&params, &x, &restored.ctrl, step_opts);
+                        let preds = ops::argmax_rows(&logits);
+                        for (i, req) in batch.into_iter().enumerate() {
+                            req.slot.fulfill(Response {
+                                id: req.id,
+                                logits: logits.data()[i * n_classes..(i + 1) * n_classes]
+                                    .to_vec(),
+                                pred: preds[i],
+                                latency: req.submitted.elapsed(),
+                            });
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let batcher = s.spawn(|| {
+            let mut fills = Vec::new();
+            loop {
+                let batch = request_q.pop_batch(opts.max_batch, opts.max_wait);
+                if batch.is_empty() {
+                    break; // closed and drained
+                }
+                fills.push(batch.len());
+                if !batch_q.push(batch) {
+                    break;
+                }
+            }
+            batch_q.close();
+            fills
+        });
+
+        let producer_handles: Vec<_> = (0..opts.concurrency)
+            .map(|_| {
+                let request_q = &request_q;
+                let next_id = &next_id;
+                s.spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        if id >= opts.requests {
+                            break;
+                        }
+                        let slot = Arc::new(Slot::default());
+                        let accepted = request_q.push(Request {
+                            id,
+                            example: split.example(id % split.len()).to_vec(),
+                            submitted: Instant::now(),
+                            slot: Arc::clone(&slot),
+                        });
+                        if !accepted {
+                            break;
+                        }
+                        got.push(slot.wait());
+                    }
+                    got
+                })
+            })
+            .collect();
+
+        let mut responses = Vec::with_capacity(opts.requests);
+        for h in producer_handles {
+            responses.extend(h.join().expect("serve producer panicked"));
+        }
+        request_q.close();
+        let batch_sizes = batcher.join().expect("serve batcher panicked");
+        for h in worker_handles {
+            h.join().expect("serve worker panicked");
+        }
+        (responses, batch_sizes)
+    });
+    let wallclock = t0.elapsed();
+
+    responses.sort_by_key(|r| r.id);
+    if responses.len() != opts.requests {
+        bail!("serve: {} of {} requests were answered", responses.len(), opts.requests);
+    }
+    let errors = responses
+        .iter()
+        .filter(|r| r.pred != split.labels[r.id % split.len()])
+        .count();
+    Ok(ServeReport {
+        opts: opts.clone(),
+        wallclock,
+        responses,
+        batch_sizes,
+        errors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn queue_round_trips_in_order() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        assert!(q.push(1) && q.push(2) && q.push(3));
+        assert_eq!(q.pop(), Some(1));
+        let batch = q.pop_batch(8, Duration::ZERO);
+        assert_eq!(batch, vec![2, 3]);
+        q.close();
+        assert_eq!(q.pop(), None);
+        assert!(q.pop_batch(8, Duration::ZERO).is_empty());
+        assert!(!q.push(4), "push after close must be refused");
+    }
+
+    #[test]
+    fn pop_batch_caps_at_max_n() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(16);
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        let batch = q.pop_batch(4, Duration::ZERO);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_batch(4, Duration::ZERO), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn push_blocks_on_a_full_queue_until_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        assert!(q.push(0usize));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(1));
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(0));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn pop_batch_waits_out_the_deadline_for_more_items() {
+        let q = Arc::new(BoundedQueue::new(8));
+        assert!(q.push(0usize));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            q2.push(1)
+        });
+        // generous deadline: the second item must make it into the batch
+        let batch = q.pop_batch(2, Duration::from_secs(5));
+        assert_eq!(batch, vec![0, 1]);
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn close_unblocks_waiting_consumers() {
+        let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(5));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn slot_rendezvous_delivers_the_response() {
+        let slot = Arc::new(Slot::default());
+        let s2 = Arc::clone(&slot);
+        let h = thread::spawn(move || {
+            s2.fulfill(Response {
+                id: 7,
+                logits: vec![0.0, 1.0],
+                pred: 1,
+                latency: Duration::from_millis(3),
+            });
+        });
+        let r = slot.wait();
+        h.join().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.pred, 1);
+    }
+
+    #[test]
+    fn report_percentiles_and_table() {
+        let opts = ServeOptions { requests: 4, ..Default::default() };
+        let responses: Vec<Response> = (0..4)
+            .map(|i| Response {
+                id: i,
+                logits: vec![0.0; 10],
+                pred: 0,
+                latency: Duration::from_millis((i + 1) as u64),
+            })
+            .collect();
+        let report = ServeReport {
+            opts,
+            wallclock: Duration::from_millis(8),
+            responses,
+            batch_sizes: vec![2, 2],
+            errors: 1,
+        };
+        assert_eq!(report.latency_percentile(0.0), Duration::from_millis(1));
+        assert_eq!(report.latency_percentile(1.0), Duration::from_millis(4));
+        assert!(report.latency_percentile(0.5) <= report.latency_percentile(0.99));
+        assert!((report.throughput_rps() - 500.0).abs() < 1.0);
+        assert_eq!(report.max_fill(), 2);
+        assert!((report.mean_fill() - 2.0).abs() < 1e-12);
+        assert!((report.error_rate() - 0.25).abs() < 1e-12);
+        let json = report.table().to_json().to_string_pretty();
+        let doc = crate::config::json::parse(&json).expect("table json parses");
+        assert_eq!(doc.get("version").unwrap().as_usize().unwrap(), 1);
+        let rows = doc.get("rows").unwrap().as_array().unwrap();
+        let metric = |name: &str| {
+            rows.iter()
+                .find(|r| r.get("metric").unwrap().as_str().unwrap() == name)
+                .unwrap_or_else(|| panic!("row {name} missing"))
+                .get("value")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(metric("requests"), "4");
+        // n=4: p50 index = round(0.5 * 3) = 2 → the 3ms sample
+        assert_eq!(metric("latency_p50_ms"), "3.000");
+        assert_eq!(metric("latency_p99_ms"), "4.000");
+        assert_eq!(metric("throughput_rps"), "500.0");
+        assert_eq!(metric("test_error"), "0.250000");
+    }
+}

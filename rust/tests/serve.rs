@@ -1,0 +1,194 @@
+//! Serve-pipeline integration tests: the acceptance gate for
+//! `lpdnn serve`.
+//!
+//! The server's contract is that batching is a pure latency/throughput
+//! trade — it must never change an answer. Every response from
+//! [`serve_closed_loop`] has to be u32-bit-identical to a direct
+//! single-example forward pass of the same checkpoint, whatever the
+//! batch composition (max-batch 1 vs deep batches), producer
+//! concurrency, worker count, or integer-domain kernel setting.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lpdnn::checkpoint::Checkpoint;
+use lpdnn::config::{
+    Arithmetic, ConvStageSpec, DataConfig, ExperimentConfig, TopologySpec, TrainConfig,
+};
+use lpdnn::coordinator::Session;
+use lpdnn::data::{Dataset, Split};
+use lpdnn::golden::Network;
+use lpdnn::runtime::BackendSpec;
+use lpdnn::serve::{eval_options, serve_closed_loop, ServeOptions};
+use lpdnn::tensor::{ops, Pcg32, Tensor};
+
+/// Train a tiny model and capture it as a checkpoint (the serve
+/// entrypoint's input).
+fn trained_checkpoint(spec: TopologySpec, dataset: &str) -> Checkpoint {
+    let cfg = ExperimentConfig {
+        name: format!("serve-{}", spec.name),
+        model: spec.name.clone(),
+        topology: Some(spec),
+        // fixed-point arithmetic so the integer-domain kernels engage
+        arithmetic: Arithmetic::Fixed { bits_comp: 12, bits_up: 14, int_bits: 4 },
+        train: TrainConfig { steps: 4, seed: 99, ..Default::default() },
+        data: DataConfig { dataset: dataset.into(), n_train: 128, n_test: 48 },
+        ..Default::default()
+    };
+    let mut session = Session::new(BackendSpec::native());
+    let result = session.run(cfg.clone()).unwrap();
+    let params = session.params_host().unwrap();
+    Checkpoint::from_run(&cfg, &result, params).unwrap()
+}
+
+fn fixed_mlp_checkpoint() -> Checkpoint {
+    let mut spec = TopologySpec::mlp(vec![8, 6], 2);
+    spec.train_batch = 8;
+    spec.eval_batch = 8;
+    trained_checkpoint(spec, "clusters")
+}
+
+fn conv_checkpoint() -> Checkpoint {
+    let mut spec = TopologySpec::conv_net(
+        vec![ConvStageSpec { channels: 3, ksize: 3, pool: 2 }],
+        vec![6],
+        2,
+    );
+    spec.train_batch = 8;
+    spec.eval_batch = 8;
+    trained_checkpoint(spec, "digits")
+}
+
+fn test_split(ckpt: &Checkpoint) -> Split {
+    let rng = Pcg32::seeded(ckpt.seed);
+    Dataset::generate(&ckpt.dataset, ckpt.n_train, ckpt.n_test, &rng).unwrap().test
+}
+
+/// The reference: a batch-of-one forward pass per split example, under
+/// the exact [`StepOptions`] the server uses. Returns each example's
+/// logits bit pattern and prediction.
+fn direct_forwards(
+    restored: &lpdnn::checkpoint::Restored,
+    params: &[Tensor],
+    split: &Split,
+    opts: &ServeOptions,
+) -> Vec<(Vec<u32>, usize)> {
+    let net = Network::from_topology_shaped(&restored.spec, restored.in_shape, restored.n_classes)
+        .unwrap();
+    let params: lpdnn::golden::Params = params.to_vec();
+    let sopts = eval_options(restored, opts);
+    (0..split.len())
+        .map(|i| {
+            let mut dims = vec![1];
+            dims.extend(restored.in_shape.dims());
+            let x = Tensor::from_vec(&dims, split.example(i).to_vec());
+            let logits = net.eval_logits_opt(&params, &x, &restored.ctrl, &sopts);
+            let pred = ops::argmax_rows(&logits)[0];
+            (logits.data().iter().map(|v| v.to_bits()).collect(), pred)
+        })
+        .collect()
+}
+
+#[test]
+fn responses_are_bit_identical_to_single_example_forwards() {
+    let ckpt = fixed_mlp_checkpoint();
+    let restored = ckpt.restore().unwrap();
+    let split = test_split(&ckpt);
+    let params = Arc::new(ckpt.params.clone());
+    let requests = 40;
+
+    for int_domain in [false, true] {
+        let base = ServeOptions {
+            requests,
+            max_wait: Duration::from_micros(500),
+            queue_cap: 16,
+            fused: true,
+            int_domain,
+            ..Default::default()
+        };
+        let expected = direct_forwards(&restored, &params, &split, &base);
+        let expected_errors = (0..requests)
+            .filter(|id| expected[id % split.len()].1 != split.labels[id % split.len()])
+            .count();
+
+        // degenerate batching, a balanced setup, and an oversubscribed
+        // one — answers must not depend on any of it
+        for (max_batch, concurrency, workers) in [(1, 1, 1), (8, 4, 2), (4, 8, 3)] {
+            let opts = ServeOptions { max_batch, concurrency, workers, ..base.clone() };
+            let report = serve_closed_loop(&restored, Arc::clone(&params), &split, &opts)
+                .unwrap();
+            let tag = format!("int_domain={int_domain} mb={max_batch} c={concurrency} w={workers}");
+
+            assert_eq!(report.responses.len(), requests, "{tag}: response count");
+            for (i, r) in report.responses.iter().enumerate() {
+                assert_eq!(r.id, i, "{tag}: responses sorted by id");
+                let (want_bits, want_pred) = &expected[r.id % split.len()];
+                let bits: Vec<u32> = r.logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&bits, want_bits, "{tag}: logits drifted for request {i}");
+                assert_eq!(r.pred, *want_pred, "{tag}: prediction drifted for request {i}");
+            }
+            assert_eq!(report.errors, expected_errors, "{tag}: error count");
+            assert_eq!(
+                report.batch_sizes.iter().sum::<usize>(),
+                requests,
+                "{tag}: every request shipped in exactly one batch"
+            );
+            assert!(report.max_fill() <= max_batch, "{tag}: batch cap respected");
+            assert!(
+                report.latency_percentile(0.99) >= report.latency_percentile(0.50),
+                "{tag}: percentiles ordered"
+            );
+            assert!(report.throughput_rps() > 0.0, "{tag}: throughput measured");
+        }
+    }
+}
+
+#[test]
+fn conv_checkpoints_serve_bit_identically() {
+    let ckpt = conv_checkpoint();
+    let restored = ckpt.restore().unwrap();
+    let split = test_split(&ckpt);
+    let params = Arc::new(ckpt.params.clone());
+    let opts = ServeOptions {
+        requests: 16,
+        concurrency: 4,
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 16,
+        fused: true,
+        int_domain: true,
+    };
+    let expected = direct_forwards(&restored, &params, &split, &opts);
+    let report = serve_closed_loop(&restored, params, &split, &opts).unwrap();
+    for r in &report.responses {
+        let (want_bits, want_pred) = &expected[r.id % split.len()];
+        let bits: Vec<u32> = r.logits.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(&bits, want_bits, "conv logits drifted for request {}", r.id);
+        assert_eq!(r.pred, *want_pred);
+    }
+}
+
+#[test]
+fn serve_rejects_degenerate_options_with_clear_errors() {
+    let ckpt = fixed_mlp_checkpoint();
+    let restored = ckpt.restore().unwrap();
+    let split = test_split(&ckpt);
+    let params = Arc::new(ckpt.params.clone());
+    for (patch, needle) in [
+        (ServeOptions { requests: 0, ..Default::default() }, "--requests"),
+        (ServeOptions { concurrency: 0, ..Default::default() }, "--concurrency"),
+        (ServeOptions { workers: 0, ..Default::default() }, "--workers"),
+        (ServeOptions { max_batch: 0, ..Default::default() }, "--max-batch"),
+    ] {
+        let err = serve_closed_loop(&restored, Arc::clone(&params), &split, &patch).unwrap_err();
+        assert!(format!("{err}").contains(needle), "{err}");
+    }
+    // a parameter set that does not match the model is refused up front
+    let mut short = ckpt.params.clone();
+    short.pop();
+    let err =
+        serve_closed_loop(&restored, Arc::new(short), &split, &ServeOptions::default())
+            .unwrap_err();
+    assert!(format!("{err}").contains("parameter tensors"), "{err}");
+}
