@@ -15,6 +15,11 @@
 //! * integer-domain GEMM vs the simulated-f32 fused path on eligible
 //!   grid operands (`int gemm` rows per orientation and arithmetic,
 //!   plus the `int train step` end-to-end A/B)
+//! * the packed-operand cache: pre-packed weight slabs vs re-packing on
+//!   every call (`packed gemm` kernel rows, the `packed train step`
+//!   rebuild-cadence A/B, and the serve-style `packed eval` steady
+//!   state), with `int_gemm::pack_calls` deltas asserted so a dead
+//!   cache cannot masquerade as a perf result
 //! * scale controller overhead per tick
 //! * with `--features pjrt` + artifacts: compiled-step latency and the
 //!   L3↔PJRT literal-assembly boundary
@@ -610,6 +615,188 @@ fn int_gemm_section(table: &mut Table) {
     ]);
 }
 
+/// Packed-vs-repack A/Bs for the weight-slab cache (ROADMAP 1a/4b).
+/// Both paths are bit-identical (tests/int_gemm_parity.rs), so the rows
+/// are pure perf A/Bs; every leg's [`int_gemm::pack_calls`] delta is
+/// measured (and the cached legs asserted cheaper) so a silently-dead
+/// cache cannot masquerade as a win.
+fn packed_cache_section(table: &mut Table) {
+    let arithmetics: &[(&str, FixedFormat)] =
+        &[("fixed 10.3", FixedFormat::new(10, 3)), ("fixed 8.-2", FixedFormat::new(8, -2))];
+    let iters = scaled(40).max(10);
+    let mut rng = Pcg32::seeded(47);
+
+    // kernel level: the weight operand's pack hoisted out of the call
+    for &(label, fmt) in arithmetics {
+        let q = Quantizer::from_format(fmt);
+        let mut grid = |len: usize| -> Vec<f32> {
+            let mut v: Vec<f32> = (0..len).map(|_| rng.normal() * 0.2 * q.maxv).collect();
+            q.apply_slice(&mut v);
+            v
+        };
+        let epi = QuantEpilogue::new(q);
+        let amax = (fmt.maxv() / fmt.step()) as u64;
+        let kd = ((int_gemm::ACC_BOUND / (amax * amax)) as usize).min(784);
+        let (m, n) = (64usize, 128usize);
+        let a = grid(m * kd);
+        let b = grid(kd * n);
+        let bias = grid(n);
+        let bp = int_gemm::pack(&b).expect("grid weights pack");
+        let zeros = vec![0.0f32; m * n];
+        assert_eq!(
+            ops::quant_gemm_plan_cached(&a, Some(&bp), kd, Some(&zeros)),
+            ops::QuantGemmImpl::IntDomain,
+            "packed nn {label}"
+        );
+        let mut dst = zeros;
+        // pack-call cadence: the repack leg packs activations AND
+        // weights, the cached leg only the activations
+        let c0 = int_gemm::pack_calls();
+        dst.fill(0.0);
+        let _ = ops::matmul_sl_qd_into(&a, &b, Some(&bias), &mut dst, m, kd, n, epi, true);
+        let repack_packs = int_gemm::pack_calls() - c0;
+        let c0 = int_gemm::pack_calls();
+        dst.fill(0.0);
+        let _ = ops::matmul_sl_qd_cached_into(
+            &a,
+            &b,
+            Some(&bp),
+            Some(&bias),
+            &mut dst,
+            m,
+            kd,
+            n,
+            epi,
+        );
+        let cached_packs = int_gemm::pack_calls() - c0;
+        assert!(
+            cached_packs < repack_packs,
+            "packed nn {label}: cached leg must skip the weight pack \
+             ({cached_packs} vs {repack_packs})"
+        );
+        let s_repack = bench(2, iters, || {
+            dst.fill(0.0);
+            let _ = ops::matmul_sl_qd_into(&a, &b, Some(&bias), &mut dst, m, kd, n, epi, true);
+        });
+        let s_cached = bench(2, iters, || {
+            dst.fill(0.0);
+            let _ = ops::matmul_sl_qd_cached_into(
+                &a,
+                &b,
+                Some(&bp),
+                Some(&bias),
+                &mut dst,
+                m,
+                kd,
+                n,
+                epi,
+            );
+        });
+        table.row(&[
+            format!("packed gemm nn z 64x{kd}x128+bias ({label})"),
+            format!(
+                "repack {:.2}ms | cached {:.2}ms | speedup {:.2}x (packs/call {repack_packs}→{cached_packs})",
+                s_repack.mean * 1e3,
+                s_cached.mean * 1e3,
+                s_repack.mean / s_cached.mean.max(1e-12),
+            ),
+        ]);
+    }
+
+    // end-to-end cadence: a persistent Network re-packs each weight
+    // layer exactly once per step (sgd_update moves the values, so one
+    // rebuild is unavoidable) — the A/B against a fresh-Network-per-step
+    // loop shows the cache costs nothing in training, and the pack
+    // deltas prove the once-per-update cadence
+    let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+    let (comp, up) = (FixedFormat::new(8, -2), FixedFormat::new(8, 0));
+    let ctrl = ScaleController::fixed(24, comp, up);
+    let step_iters = scaled(10).max(3);
+    let opts = StepOptions { fused: true, int_domain: true, ..Default::default() };
+    let quantized_state = || {
+        let (mut params, vels, mut x, y) = pi_mlp_step_fixture();
+        let qup = Quantizer::from_format(up);
+        for p in &mut params {
+            qup.apply_slice(p.data_mut());
+        }
+        Quantizer::from_format(comp).apply_slice(x.data_mut());
+        (params, vels, x, y)
+    };
+
+    let net = Network::from_mlp_shape(shape);
+    let (mut params, mut vels, x, y) = quantized_state();
+    let _ = net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+    let c0 = int_gemm::pack_calls();
+    let builds0 = net.weight_pack_builds();
+    let _ = net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+    let cached_step_packs = int_gemm::pack_calls() - c0;
+    assert_eq!(
+        net.weight_pack_builds() - builds0,
+        net.n_compute_layers() as u64,
+        "packed train step: exactly one rebuild per weight layer per step"
+    );
+    let s_cached = bench(1, step_iters, || {
+        let _ =
+            net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+    });
+    let (mut params, mut vels, x, y) = quantized_state();
+    let c0 = int_gemm::pack_calls();
+    let fresh = Network::from_mlp_shape(shape);
+    let _ =
+        fresh.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+    let fresh_step_packs = int_gemm::pack_calls() - c0;
+    let s_fresh = bench(1, step_iters, || {
+        let fresh = Network::from_mlp_shape(shape);
+        let _ = fresh.train_step(
+            &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone(),
+        );
+    });
+    table.row(&[
+        "packed train step (pi_mlp, batch 64, fixed 8.-2 comp / 8.0 up)".into(),
+        format!(
+            "fresh-net {:.2}ms | persistent {:.2}ms | speedup {:.2}x (packs/step {fresh_step_packs}→{cached_step_packs}; update forces one rebuild/layer)",
+            s_fresh.mean * 1e3,
+            s_cached.mean * 1e3,
+            s_fresh.mean / s_cached.mean.max(1e-12),
+        ),
+    ]);
+
+    // serve steady state: frozen weights, forward-only — the persistent
+    // (prepacked) network stops packing entirely, while a fresh network
+    // per request batch re-packs every weight slab each time
+    let (params, _, x, _) = quantized_state();
+    let net = Network::from_mlp_shape(shape);
+    net.prepack_int_operands(&params, &ctrl);
+    let c0 = int_gemm::pack_calls();
+    let _ = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    let warm_packs = int_gemm::pack_calls() - c0;
+    let c0 = int_gemm::pack_calls();
+    let fresh = Network::from_mlp_shape(shape);
+    let _ = fresh.eval_logits_opt(&params, &x, &ctrl, &opts);
+    let cold_packs = int_gemm::pack_calls() - c0;
+    assert!(
+        warm_packs < cold_packs,
+        "packed eval: the prepacked network must not re-pack weights \
+         ({warm_packs} vs {cold_packs})"
+    );
+    let s_warm = bench(1, iters, || {
+        let _ = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    });
+    let s_cold = bench(1, iters, || {
+        let fresh = Network::from_mlp_shape(shape);
+        let _ = fresh.eval_logits_opt(&params, &x, &ctrl, &opts);
+    });
+    table.row(&[
+        "packed eval batch (pi_mlp, batch 64, prepacked worker vs per-batch repack)".into(),
+        format!(
+            "repack {:.2}ms | prepacked {:.2}ms | speedup {:.2}x (packs/batch {cold_packs}→{warm_packs}; remainder is activations)",
+            s_cold.mean * 1e3,
+            s_warm.mean * 1e3,
+            s_cold.mean / s_warm.mean.max(1e-12),
+        ),
+    ]);
+}
+
 fn quantizer_section(table: &mut Table) {
     let mut rng = Pcg32::seeded(2);
     let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
@@ -707,6 +894,7 @@ fn main() {
     matmul_section(&mut table);
     fused_gemm_section(&mut table);
     int_gemm_section(&mut table);
+    packed_cache_section(&mut table);
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);
     graph_step_section(&mut table);

@@ -26,6 +26,14 @@
 //!   *logical* tensor — not on iteration order — so any tiling or
 //!   threading draws identical samples. (A sequential PRNG could never
 //!   satisfy the invariant: its samples depend on visit order.)
+//!
+//! The integer-domain kernels ([`crate::tensor::int_gemm`]) run this
+//! same epilogue over the exact f32 products they rescale out of i32
+//! accumulators, which is what lets a *cached* weight pack
+//! ([`crate::tensor::int_gemm::PackedCache`]) substitute for a fresh
+//! one without touching the epilogue's inputs: packing is a pure
+//! function of the operand values, so the epilogue sees bit-identical
+//! products either way.
 
 use super::float16;
 use super::quantizer::{QuantStats, Quantizer};

@@ -121,6 +121,30 @@ pub fn preflight_writable(flag: &str, path: &str) -> crate::Result<()> {
         .map_err(|e| crate::err!("--{flag} {path}: not writable: {e}"))
 }
 
+/// [`preflight_writable`] for flags whose writes land on *derived*
+/// paths (`sweep --loss-csv` suffixes the base path per point, so the
+/// base path itself is never written): probe a representative derived
+/// sibling `probe` in the same directory, but name the user's declared
+/// `path` in the error. When the probe file did not exist before the
+/// call it is removed again, so a passing preflight leaves no stray
+/// empty file behind.
+pub fn preflight_writable_probe(
+    flag: &str,
+    path: &str,
+    probe: &std::path::Path,
+) -> crate::Result<()> {
+    let existed = probe.exists();
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(probe)
+        .map_err(|e| crate::err!("--{flag} {path}: not writable: {e}"))?;
+    if !existed {
+        let _ = std::fs::remove_file(probe);
+    }
+    Ok(())
+}
+
 /// Write `contents` to the file named by `--<flag> <path>`, naming the
 /// flag and path on failure.
 pub fn write_file_arg(flag: &str, path: &str, contents: &str) -> crate::Result<()> {
@@ -285,6 +309,32 @@ mod tests {
         preflight_writable("save", path.to_str().unwrap()).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "keep me");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn preflight_probe_covers_suffixed_paths_and_cleans_up() {
+        // failure names the declared flag/path, not the probe sibling
+        let err = preflight_writable_probe(
+            "loss-csv",
+            "/no/such/dir/loss.csv",
+            std::path::Path::new("/no/such/dir/loss-preflight.csv"),
+        )
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--loss-csv"), "{msg}");
+        assert!(msg.contains("/no/such/dir/loss.csv"), "{msg}");
+
+        // a passing probe removes the file it created...
+        let probe = std::env::temp_dir().join("lpdnn_test_cli_probe-preflight.csv");
+        let _ = std::fs::remove_file(&probe);
+        preflight_writable_probe("loss-csv", "declared.csv", &probe).unwrap();
+        assert!(!probe.exists(), "probe file must be cleaned up");
+
+        // ...but never deletes or truncates one that already existed
+        std::fs::write(&probe, "keep me").unwrap();
+        preflight_writable_probe("loss-csv", "declared.csv", &probe).unwrap();
+        assert_eq!(std::fs::read_to_string(&probe).unwrap(), "keep me");
+        let _ = std::fs::remove_file(&probe);
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! reused across steps), and each maxout filter's `[patch_len, C_out]`
 //! weight slab rides one GEMM with the Z/DW quantization fused into the
 //! tile epilogues — so every conv multiply passes through exactly the
-//! same low-precision machinery as the dense layers.
+//! same low-precision machinery as the dense layers. Under the integer
+//! domain the weight slabs additionally come from the layer's
+//! [`PackedCache`](crate::tensor::int_gemm::PackedCache) (packed once
+//! per update/scale-move, or once per serve worker at prepack); the
+//! patch matrix is input data and re-packs every call.
 //!
 //! **The bit-identity invariant.** The direct kernels here
 //! ([`conv2d_direct_q`], [`conv2d_dw_direct_q`]) are nested-loop

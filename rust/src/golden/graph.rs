@@ -31,6 +31,17 @@
 //! `_qd` dispatch also lets eligible conv GEMMs run in the integer
 //! domain (`StepOptions::int_domain`, `tests/int_gemm_parity.rs`).
 //!
+//! **Weight packs are cached across steps.** Each weight layer owns a
+//! [`PackedCache`] keyed on its parameter-value epoch + the W group's
+//! adopted scale step, so the integer-domain path re-packs a weight
+//! slab only after `sgd_update` bumps the epoch or a scale adoption
+//! moves the step; serve workers pre-pack every slab once at startup
+//! via [`Network::prepack_int_operands`]. Eligibility is re-checked on
+//! every call against the cached pack (the activation operand and the
+//! accumulator bound are input-dependent), and a cache hit returns
+//! byte-identical packs — packing is a pure function of the values —
+//! so caching cannot perturb the bit-identity contract below.
+//!
 //! **The bit-identity contract.** The graph executor is not "close to"
 //! the monolithic step it replaced — it is bit-identical on the builtin
 //! `pi_mlp`, across all four arithmetics, all four rounding modes, fused
@@ -68,8 +79,9 @@ use crate::arith::{QuantStats, RoundMode};
 use crate::config::TopologySpec;
 use crate::coordinator::ScaleController;
 use crate::runtime::manifest::{
-    KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z, N_KINDS,
+    group_index, KIND_B, KIND_DB, KIND_DH, KIND_DW, KIND_DZ, KIND_H, KIND_W, KIND_Z, N_KINDS,
 };
+use crate::tensor::int_gemm::{self, PackedCache};
 use crate::tensor::{ops, Shape, Tensor};
 
 use super::conv::{self, ConvGeom};
@@ -215,6 +227,33 @@ pub trait Layer {
         let _ = (q, params, vels, grads, hp);
         debug_assert!(self.n_params() == 0, "parameterized layer must implement sgd_update");
     }
+
+    /// Build this layer's packed-operand cache against the controller's
+    /// adopted scales without running a forward pass. Serving calls
+    /// this once per worker at startup (weights are static at inference
+    /// time); layers without integer-eligible weight operands do
+    /// nothing.
+    fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
+        let _ = (ctrl, params);
+    }
+
+    /// Rebuild events of this layer's packed-operand cache since
+    /// construction (0 for layers without one) — summed by
+    /// [`Network::weight_pack_builds`] for the invalidation tests.
+    fn pack_builds(&self) -> u64 {
+        0
+    }
+}
+
+/// The scale half of a weight layer's [`PackedCache`] key: the bit
+/// pattern of the stage row's adopted W storage step. Dynamic-scale
+/// updates (`ScaleController::after_batch`) and checkpoint adoption
+/// (`adopt_int_bits`) both move the step, so keying on it re-packs on
+/// every scale-change path without the layers subscribing to the
+/// controller. (`step()` is 0.0 for float32 formats — a stable key;
+/// those sites never pack anyway.)
+fn weight_step_bits(ctrl: &ScaleController, row: usize) -> u32 {
+    ctrl.format(group_index(row, KIND_W)).step().to_bits()
 }
 
 /// The shared dense-layer update rule (w then b, velocity quantized
@@ -261,6 +300,15 @@ pub struct MaxoutDense {
     pub k: usize,
     /// This layer's row in the layer-major group table.
     pub group: usize,
+    /// Per-filter packed weight slabs for the integer-domain forward
+    /// (one slab per maxout filter), invalidated by `sgd_update`.
+    packs: RefCell<PackedCache>,
+}
+
+impl MaxoutDense {
+    pub fn new(units: usize, k: usize, group: usize) -> MaxoutDense {
+        MaxoutDense { units, k, group, packs: RefCell::new(PackedCache::new()) }
+    }
 }
 
 impl Layer for MaxoutDense {
@@ -305,11 +353,32 @@ impl Layer for MaxoutDense {
         let mut zq = Tensor::zeros(&[k, batch, units]);
         let epi = q.epilogue(self.group, KIND_Z);
         let mut zst = QuantStats::default();
+        // integer domain: serve each filter's GEMM from the cached
+        // packed slab (built here on the first step after an update or
+        // scale move, or by a serve worker's prepack)
+        let mut packs = self.packs.borrow_mut();
+        let cached = (q.fused && q.int_domain).then(|| {
+            packs.ensure(weight_step_bits(q.ctrl, self.group), k, |j| {
+                int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units])
+            })
+        });
         for j in 0..k {
             let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
             let brow = &b.data()[j * units..(j + 1) * units];
             let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
-            if q.fused {
+            if let Some(c) = &cached {
+                zst.merge(ops::matmul_sl_qd_cached_into(
+                    x.data(),
+                    wj,
+                    c[j].as_ref(),
+                    Some(brow),
+                    dst,
+                    batch,
+                    d_in,
+                    units,
+                    epi.with_base((j * batch * units) as u64),
+                ));
+            } else if q.fused {
                 zst.merge(ops::matmul_sl_qd_into(
                     x.data(),
                     wj,
@@ -440,6 +509,20 @@ impl Layer for MaxoutDense {
         hp: &UpdateHp,
     ) {
         dense_sgd_update(q, self.group, params, vels, grads, hp);
+        // the weights changed: the next integer-domain forward re-packs
+        self.packs.borrow_mut().invalidate();
+    }
+
+    fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
+        let w = &params[0];
+        let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        self.packs.borrow_mut().ensure(weight_step_bits(ctrl, self.group), k, |j| {
+            int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units])
+        });
+    }
+
+    fn pack_builds(&self) -> u64 {
+        self.packs.borrow().builds()
     }
 }
 
@@ -457,6 +540,15 @@ pub struct SoftmaxHead {
     pub n_classes: usize,
     /// This layer's row in the layer-major group table.
     pub group: usize,
+    /// One packed slab of `w` serving both the forward NN product and
+    /// the backward NT projection, invalidated by `sgd_update`.
+    packs: RefCell<PackedCache>,
+}
+
+impl SoftmaxHead {
+    pub fn new(n_classes: usize, group: usize) -> SoftmaxHead {
+        SoftmaxHead { n_classes, group, packs: RefCell::new(PackedCache::new()) }
+    }
 }
 
 impl Layer for SoftmaxHead {
@@ -494,7 +586,23 @@ impl Layer for SoftmaxHead {
         assert_eq!(x.shape()[1], units, "{}: input width", self.describe());
 
         let epi = q.epilogue(self.group, KIND_Z);
-        let z = if q.fused {
+        let z = if q.fused && q.int_domain {
+            let mut packs = self.packs.borrow_mut();
+            let c = packs
+                .ensure(weight_step_bits(q.ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
+            let (v, st) = ops::matmul_sl_qd_cached(
+                x.data(),
+                w.data(),
+                c[0].as_ref(),
+                Some(b.data()),
+                batch,
+                units,
+                classes,
+                epi,
+            );
+            q.record(self.group, KIND_Z, st);
+            Tensor::from_vec(&[batch, classes], v)
+        } else if q.fused {
             let (v, st) = ops::matmul_sl_qd(
                 x.data(),
                 w.data(),
@@ -559,7 +667,24 @@ impl Layer for SoftmaxHead {
         // projection (the monolith's dh1 site, generalized)
         let dx = dx_group.map(|g| {
             let epi = q.epilogue(g, KIND_DH);
-            if q.fused {
+            if q.fused && q.int_domain {
+                // the forward pass of this same step (or a worker's
+                // prepack) already built the slab: this ensure is a hit
+                let mut packs = self.packs.borrow_mut();
+                let c = packs
+                    .ensure(weight_step_bits(q.ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
+                let (v, st) = ops::matmul_nt_sl_qd_cached(
+                    dz.data(),
+                    w.data(),
+                    c[0].as_ref(),
+                    batch,
+                    classes,
+                    units,
+                    epi,
+                );
+                q.record(g, KIND_DH, st);
+                Tensor::from_vec(&[batch, units], v)
+            } else if q.fused {
                 let (v, st) = ops::matmul_nt_sl_qd(
                     dz.data(),
                     w.data(),
@@ -590,6 +715,19 @@ impl Layer for SoftmaxHead {
         hp: &UpdateHp,
     ) {
         dense_sgd_update(q, self.group, params, vels, grads, hp);
+        // the weights changed: the next integer-domain forward re-packs
+        self.packs.borrow_mut().invalidate();
+    }
+
+    fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
+        let w = &params[0];
+        self.packs
+            .borrow_mut()
+            .ensure(weight_step_bits(ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
+    }
+
+    fn pack_builds(&self) -> u64 {
+        self.packs.borrow().builds()
     }
 }
 
@@ -693,11 +831,21 @@ pub struct MaxoutConv2d {
     /// This stage's row in the layer-major group table.
     pub group: usize,
     scratch: RefCell<ConvScratch>,
+    /// Per-filter packed weight slabs for the integer-domain im2col
+    /// forward, invalidated by `sgd_update`.
+    packs: RefCell<PackedCache>,
 }
 
 impl MaxoutConv2d {
     pub fn new(c_out: usize, k: usize, ksize: usize, group: usize) -> MaxoutConv2d {
-        MaxoutConv2d { c_out, k, ksize, group, scratch: RefCell::new(ConvScratch::default()) }
+        MaxoutConv2d {
+            c_out,
+            k,
+            ksize,
+            group,
+            scratch: RefCell::new(ConvScratch::default()),
+            packs: RefCell::new(PackedCache::new()),
+        }
     }
 
     /// Geometry for a concrete `[B, H, W, C]` input.
@@ -782,11 +930,32 @@ impl Layer for MaxoutConv2d {
             let mut scratch = self.scratch.borrow_mut();
             scratch.patches.resize(rows * plen, 0.0);
             conv::im2col_into(x.data(), batch, &geom, &mut scratch.patches);
+            // integer domain: per-filter packed slabs, cached like the
+            // dense layer's (the patch matrix re-packs every step — it
+            // is input data; the weights are not)
+            let mut packs = self.packs.borrow_mut();
+            let cached = (q.fused && q.int_domain).then(|| {
+                packs.ensure(weight_step_bits(q.ctrl, self.group), k, |j| {
+                    int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out])
+                })
+            });
             for j in 0..k {
                 let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
                 let brow = &b.data()[j * c_out..(j + 1) * c_out];
                 let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
-                if q.fused {
+                if let Some(c) = &cached {
+                    zst.merge(ops::matmul_sl_qd_cached_into(
+                        &scratch.patches,
+                        wj,
+                        c[j].as_ref(),
+                        Some(brow),
+                        dst,
+                        rows,
+                        plen,
+                        c_out,
+                        epi.with_base((j * rows * c_out) as u64),
+                    ));
+                } else if q.fused {
                     zst.merge(ops::matmul_sl_qd_into(
                         &scratch.patches,
                         wj,
@@ -942,6 +1111,20 @@ impl Layer for MaxoutConv2d {
         // w [k, ksize²·C_in, C_out] has the maxout [k, I, U] layout, so
         // the shared rule (incl. the rank-3 max-norm) applies verbatim
         dense_sgd_update(q, self.group, params, vels, grads, hp);
+        // the weights changed: the next integer-domain forward re-packs
+        self.packs.borrow_mut().invalidate();
+    }
+
+    fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
+        let w = &params[0];
+        let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        self.packs.borrow_mut().ensure(weight_step_bits(ctrl, self.group), k, |j| {
+            int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out])
+        });
+    }
+
+    fn pack_builds(&self) -> u64 {
+        self.packs.borrow().builds()
     }
 }
 
@@ -1149,11 +1332,11 @@ impl Network {
             layers.push(Box::new(Flatten));
         }
         for &units in &spec.hidden {
-            layers.push(Box::new(MaxoutDense { units, k: spec.k, group: row }));
+            layers.push(Box::new(MaxoutDense::new(units, spec.k, row)));
             row += 1;
             layers.push(Box::new(DropoutLayer::hidden()));
         }
-        layers.push(Box::new(SoftmaxHead { n_classes, group: row }));
+        layers.push(Box::new(SoftmaxHead::new(n_classes, row)));
         row += 1;
 
         // chain the shape contract through the graph; a failure names
@@ -1241,6 +1424,35 @@ impl Network {
     /// (`None` when `pos` is the bottom compute layer).
     fn group_row_below(&self, pos: usize) -> Option<usize> {
         self.layers[..pos].iter().rev().find_map(|l| l.group_row())
+    }
+
+    /// Pre-pack every weight layer's integer-GEMM operands against the
+    /// controller's adopted scales. Serve workers call this once at
+    /// startup so steady-state requests never re-pack static weights;
+    /// training never needs it (forward builds lazily). Idempotent: a
+    /// second call with the same params + scales is a cache hit.
+    pub fn prepack_int_operands(&self, params: &Params, ctrl: &ScaleController) {
+        assert_eq!(
+            ctrl.n_groups(),
+            self.n_groups(),
+            "scale controller group count must be Network::n_groups()"
+        );
+        assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[li];
+            layer.prepack(ctrl, &params[o..o + n]);
+        }
+    }
+
+    /// Total packed-cache rebuild events across the graph's weight
+    /// layers since construction. This is the pollution-free counter
+    /// the cache-invalidation tests assert on: one build per weight
+    /// layer per train step (or per scale adoption), exactly one per
+    /// layer for a serve worker's lifetime — never one per GEMM. (The
+    /// process-global [`int_gemm::pack_calls`] counter is only
+    /// meaningful as a delta in single-threaded benches.)
+    pub fn weight_pack_builds(&self) -> u64 {
+        self.layers.iter().map(|l| l.pack_builds()).sum()
     }
 
     /// One full train step over the graph. Bit-identical to the

@@ -90,7 +90,10 @@ pub fn fused_default() -> bool {
 /// wherever eligible (`tests/int_gemm_parity.rs`) and falls back to
 /// simulated where not, so flipping this switch never changes results.
 /// Only fused sites dispatch (with `LPDNN_FUSED=0` the two-pass
-/// reference path runs and `LPDNN_INT_GEMM` is ignored).
+/// reference path runs and `LPDNN_INT_GEMM` is ignored). Weight
+/// operands are packed through per-layer caches rather than per call:
+/// a [`Network`]'s weight slabs re-pack only after an update or scale
+/// move ([`graph`] module docs, DESIGN.md §Integer-domain GEMM).
 pub fn int_gemm_default() -> bool {
     static INT_GEMM: OnceLock<bool> = OnceLock::new();
     *INT_GEMM.get_or_init(|| std::env::var("LPDNN_INT_GEMM").map(|v| v != "0").unwrap_or(false))

@@ -452,11 +452,16 @@ fn cmd_sweep(args: &Args) -> lpdnn::Result<()> {
     let verbose = args.has("verbose");
     args.finish()?;
 
-    // Catch an unwritable report path before the sweep burns its budget.
-    // (--loss-csv is not preflighted here: per_label suffixes the path,
-    // so probing the base path would leave a stray empty file.)
+    // Catch unwritable output paths before the sweep burns its budget.
+    // --loss-csv never writes its base path (per_label suffixes it per
+    // point), so probe a suffixed sibling in the same directory — the
+    // probe file is cleaned up again on success.
     if let Some(p) = &report_path {
         cli::preflight_writable("report", p)?;
+    }
+    if let Some(p) = &loss_csv {
+        let probe = LossCsvObserver::per_label(p).path_for("preflight");
+        cli::preflight_writable_probe("loss-csv", p, &probe)?;
     }
 
     if !explicit_steps {

@@ -53,6 +53,10 @@ use crate::tensor::{ops, Pcg32, Shape, Tensor};
 struct NativeRun {
     model: ModelInfo,
     /// The layer graph realized from the run's topology + dataset dims.
+    /// Built once per run, so per-layer state amortizes across steps:
+    /// conv im2col scratch allocates on the first step, and the
+    /// integer-domain packed-weight caches persist until an update or
+    /// scale move invalidates them (`Network::weight_pack_builds`).
     net: Network,
     /// Simulate float16 via binary16 round-trips at every hook.
     half: bool,

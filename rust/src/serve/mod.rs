@@ -21,7 +21,14 @@
 //!   shareable across threads) over shared `Arc` parameters, run the
 //!   fused quantized forward pass ([`Network::eval_logits_opt`], with
 //!   [`StepOptions::int_domain`] honored so the integer-domain kernels
-//!   serve traffic), and fulfill each request's slot.
+//!   serve traffic), and fulfill each request's slot. Because the
+//!   `Network` lives for the worker's whole lifetime, per-layer state
+//!   amortizes across every batch it answers: the conv im2col scratch
+//!   buffers allocate once, and with the integer domain enabled each
+//!   worker pre-packs all weight operands **once at startup**
+//!   ([`Network::prepack_int_operands`]) instead of per GEMM — weights
+//!   are static at inference time. The report's `weight_packs` row
+//!   counts pack-cache builds across all workers as proof.
 //!
 //! **Determinism under concurrency:** batch composition is timing
 //! dependent — two runs will batch requests differently — but responses
@@ -35,7 +42,7 @@
 //! `LPDNN_INT_GEMM` setting — proven per-request in `tests/serve.rs`.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -128,7 +135,11 @@ struct Request {
 }
 
 struct QueueState<T> {
-    items: VecDeque<T>,
+    /// Entries carry their enqueue time: `pop_batch`'s max-wait bound
+    /// is on how long the *oldest* entry has been queued, so the stamp
+    /// must be taken when the item enters, not when the batcher gets
+    /// around to it.
+    items: VecDeque<(Instant, T)>,
     closed: bool,
 }
 
@@ -159,7 +170,7 @@ impl<T> BoundedQueue<T> {
                 return false;
             }
             if st.items.len() < self.cap {
-                st.items.push_back(item);
+                st.items.push_back((Instant::now(), item));
                 self.not_empty.notify_one();
                 return true;
             }
@@ -171,7 +182,7 @@ impl<T> BoundedQueue<T> {
     fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.items.pop_front() {
+            if let Some((_, item)) = st.items.pop_front() {
                 self.not_full.notify_one();
                 return Some(item);
             }
@@ -183,8 +194,11 @@ impl<T> BoundedQueue<T> {
     }
 
     /// The batching policy: block for the first item, then keep the
-    /// batch open until it has `max_n` items or `max_wait` has elapsed
-    /// since the first item was taken. Empty result ⇔ closed and drained.
+    /// batch open until it has `max_n` items or the **oldest** item has
+    /// been queued for `max_wait` — the deadline keys off the first
+    /// item's *enqueue* stamp, so time a request already spent waiting
+    /// for the batcher counts against its wait budget. Empty result ⇔
+    /// closed and drained.
     fn pop_batch(&self, max_n: usize, max_wait: Duration) -> Vec<T> {
         let mut st = self.state.lock().unwrap();
         loop {
@@ -196,12 +210,13 @@ impl<T> BoundedQueue<T> {
             }
             st = self.not_empty.wait(st).unwrap();
         }
-        let deadline = Instant::now() + max_wait;
+        let oldest = st.items.front().map(|&(t, _)| t).expect("loop above ensures non-empty");
+        let deadline = oldest + max_wait;
         let mut batch = Vec::new();
         loop {
             while batch.len() < max_n {
                 match st.items.pop_front() {
-                    Some(item) => batch.push(item),
+                    Some((_, item)) => batch.push(item),
                     None => break,
                 }
             }
@@ -238,6 +253,11 @@ pub struct ServeReport {
     pub batch_sizes: Vec<usize>,
     /// Misclassified requests (predictions vs the split's labels).
     pub errors: usize,
+    /// Packed-cache build events summed over all workers — with the
+    /// integer domain on this is `workers × weight layers` (one prepack
+    /// per worker at startup, zero per-request re-packs), and 0 when
+    /// the integer domain is off.
+    pub weight_pack_builds: u64,
 }
 
 impl ServeReport {
@@ -280,6 +300,7 @@ impl ServeReport {
         row("max_wait_us", self.opts.max_wait.as_micros().to_string());
         row("int_domain", self.opts.int_domain.to_string());
         row("fused", self.opts.fused.to_string());
+        row("weight_packs", self.weight_pack_builds.to_string());
         row("batches", self.batch_sizes.len().to_string());
         row("batch_fill_mean", format!("{:.2}", self.mean_fill()));
         row("batch_fill_max", self.max_fill().to_string());
@@ -344,6 +365,7 @@ pub fn serve_closed_loop(
     let request_q: BoundedQueue<Request> = BoundedQueue::new(opts.queue_cap);
     let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
     let next_id = AtomicUsize::new(0);
+    let weight_packs = AtomicU64::new(0);
     let n_classes = restored.n_classes;
     let in_dims = restored.in_shape.dims();
 
@@ -356,6 +378,7 @@ pub fn serve_closed_loop(
                 let batch_q = &batch_q;
                 let restored = &restored;
                 let in_dims = &in_dims;
+                let weight_packs = &weight_packs;
                 s.spawn(move || {
                     // restore() already validated the topology, so this
                     // only fails on resource exhaustion; panicking beats
@@ -366,6 +389,12 @@ pub fn serve_closed_loop(
                         restored.n_classes,
                     )
                     .expect("serve worker: network construction");
+                    if step_opts.int_domain {
+                        // weights are static at inference time: pack
+                        // every slab once per worker, here, so no
+                        // request ever pays for packing
+                        net.prepack_int_operands(&params, &restored.ctrl);
+                    }
                     while let Some(batch) = batch_q.pop() {
                         let n = batch.len();
                         let mut dims = vec![n];
@@ -387,6 +416,10 @@ pub fn serve_closed_loop(
                             });
                         }
                     }
+                    // summed after the drain, so an (unwanted)
+                    // steady-state re-pack shows up in the count, not
+                    // just in the latency tail
+                    weight_packs.fetch_add(net.weight_pack_builds(), Ordering::Relaxed);
                 })
             })
             .collect();
@@ -462,6 +495,7 @@ pub fn serve_closed_loop(
         responses,
         batch_sizes,
         errors,
+        weight_pack_builds: weight_packs.load(Ordering::Relaxed),
     })
 }
 
@@ -522,6 +556,51 @@ mod tests {
     }
 
     #[test]
+    fn pop_batch_ships_an_already_aged_item_without_further_waiting() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        assert!(q.push(7));
+        thread::sleep(Duration::from_millis(60));
+        let t = Instant::now();
+        let batch = q.pop_batch(8, Duration::from_millis(50));
+        assert_eq!(batch, vec![7]);
+        // the item aged past max_wait before the batcher got to it, so
+        // the batch must ship immediately; the old pop-time deadline
+        // held it open for another full max_wait here
+        assert!(t.elapsed() < Duration::from_millis(40), "shipped after {:?}", t.elapsed());
+    }
+
+    /// The regression the enqueue-time stamps fix: under a slow-drain
+    /// batcher, a request's queue residency is bounded by roughly
+    /// `max_wait` + the batcher's absence, NOT by absence + `max_wait`
+    /// *again* (the old pop-time deadline restarted the clock).
+    #[test]
+    fn queue_residency_is_bounded_by_max_wait_under_slow_drain() {
+        let q: Arc<BoundedQueue<Instant>> = Arc::new(BoundedQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            for _ in 0..4 {
+                assert!(q2.push(Instant::now()));
+                thread::sleep(Duration::from_millis(30));
+            }
+        });
+        // the batcher is away for ~100ms while requests queue up
+        thread::sleep(Duration::from_millis(100));
+        let mut residencies = Vec::new();
+        while residencies.len() < 4 {
+            for stamp in q.pop_batch(100, Duration::from_millis(100)) {
+                residencies.push(stamp.elapsed());
+            }
+        }
+        producer.join().unwrap();
+        let worst = residencies.iter().max().unwrap();
+        // oldest item: ~100ms old at first pop, deadline already spent
+        // → ships at once (~100ms residency). The old code waited until
+        // pop + max_wait → ~200ms. The 160ms bound splits the two with
+        // scheduling slack on both sides.
+        assert!(*worst < Duration::from_millis(160), "worst residency {worst:?}");
+    }
+
+    #[test]
     fn close_unblocks_waiting_consumers() {
         let q: Arc<BoundedQueue<usize>> = Arc::new(BoundedQueue::new(4));
         let q2 = Arc::clone(&q);
@@ -566,6 +645,7 @@ mod tests {
             responses,
             batch_sizes: vec![2, 2],
             errors: 1,
+            weight_pack_builds: 6,
         };
         assert_eq!(report.latency_percentile(0.0), Duration::from_millis(1));
         assert_eq!(report.latency_percentile(1.0), Duration::from_millis(4));
@@ -589,6 +669,7 @@ mod tests {
                 .to_string()
         };
         assert_eq!(metric("requests"), "4");
+        assert_eq!(metric("weight_packs"), "6");
         // n=4: p50 index = round(0.5 * 3) = 2 → the 3ms sample
         assert_eq!(metric("latency_p50_ms"), "3.000");
         assert_eq!(metric("latency_p99_ms"), "4.000");

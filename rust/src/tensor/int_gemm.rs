@@ -36,6 +36,20 @@
 //! contiguous layout, no gather, no data-dependent control flow inside
 //! the innermost loop — the shape LLVM autovectorizes without `std::arch`
 //! (the zero-dep constraint rules out mandatory intrinsics anyway).
+//!
+//! **Packed-operand caching.** Packing is a pure function of the operand
+//! values, so a weight slab that has not changed since its last pack
+//! repacks to byte-identical storage — [`PackedCache`] exploits that to
+//! pack each weight slab once per value change (or adopted-scale move)
+//! instead of once per GEMM call. A cache hit therefore feeds the
+//! kernels the *exact* `Packed` the per-call path would rebuild, which
+//! is why caching cannot perturb the bit-identity contract; the per-call
+//! eligibility checks (accumulator bound, exponent window, clean
+//! destination, the non-cached operand's packability) still run on
+//! every dispatch. [`pack_calls`] counts every `pack` invocation
+//! process-wide so benches and tests can measure packs avoided.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Maximum worst-case absolute sum for an eligible site: `2^24`, the f32
 /// mantissa limit. Below it both the i32 and the simulated-f32
@@ -153,6 +167,19 @@ fn decompose(v: f32) -> Option<(i32, i32)> {
     Some((if bits >> 31 != 0 { -m } else { m }, e))
 }
 
+/// Counts every [`pack`] invocation (hit or miss) process-wide.
+static PACK_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of [`pack`] invocations since process start. Monotonic and
+/// process-global (any thread, any caller), so only *deltas measured in
+/// a single-threaded region* are meaningful — `bench_perf`'s
+/// packed-vs-repack rows use it that way. Tests that need a
+/// pollution-free count under a parallel test runner should prefer
+/// [`PackedCache::builds`] via `Network::weight_pack_builds`.
+pub fn pack_calls() -> u64 {
+    PACK_CALLS.load(Ordering::Relaxed)
+}
+
 /// Pack an f32 slice onto a common power-of-two grid: `Some(p)` with
 /// `xs[i] == p.ints[i] · 2^(p.exp)` exactly, or `None` when any element
 /// is non-finite or the integers would not fit i16 (raw float32 data,
@@ -160,6 +187,7 @@ fn decompose(v: f32) -> Option<(i32, i32)> {
 /// weights and gradients on the paper's storage formats always pack;
 /// `None` just means "stay on the simulated path".
 pub fn pack(xs: &[f32]) -> Option<Packed> {
+    PACK_CALLS.fetch_add(1, Ordering::Relaxed);
     let mut dec = Vec::with_capacity(xs.len());
     let mut p: Option<i32> = None;
     for &v in xs {
@@ -305,6 +333,72 @@ pub fn imm_tn_serial<A: PackInt, B: PackInt>(
                 *o += av * bv.widen();
             }
         }
+    }
+}
+
+/// A cached set of packed operand slabs (one weight layer's worth),
+/// keyed on **value identity + adopted scale**:
+///
+/// * the *epoch*, a counter the owner bumps via [`PackedCache::invalidate`]
+///   whenever the cached values change (the layer graph bumps it in
+///   `sgd_update`, right after params are rewritten and re-quantized);
+/// * the *scale key*, the owning group's adopted storage-format step as
+///   `f32::to_bits` (so every dynamic scale move — `after_batch` ticks
+///   and `adopt_int_bits` warmup transfer alike — forces a rebuild).
+///
+/// A hit returns the byte-identical `Packed` a fresh [`pack`] of the
+/// same values would produce (packing is deterministic and
+/// value-driven), so caching is invisible to the bit-identity contract;
+/// a slab recorded as `None` means "these values do not pack" and the
+/// caller falls back to the simulated kernels without re-attempting.
+/// [`PackedCache::builds`] counts rebuild events for the invalidation
+/// regression tests — it is per-cache state, immune to the parallel
+/// test runner (unlike the global [`pack_calls`] counter).
+#[derive(Default)]
+pub struct PackedCache {
+    /// Bumped by the owner on every value change.
+    epoch: u64,
+    /// The `(epoch, scale_bits)` the current slabs were built under.
+    key: Option<(u64, u32)>,
+    slabs: Vec<Option<Packed>>,
+    builds: u64,
+}
+
+impl PackedCache {
+    pub fn new() -> PackedCache {
+        PackedCache::default()
+    }
+
+    /// Mark the cached values stale; the next [`PackedCache::ensure`]
+    /// rebuilds every slab. Cheap (one counter bump) — callers invalidate
+    /// unconditionally after updates rather than tracking whether the
+    /// integer path is even enabled.
+    pub fn invalidate(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Number of slab-set rebuilds this cache has performed (= ensure
+    /// misses). One training update or scale move costs exactly one.
+    pub fn builds(&self) -> u64 {
+        self.builds
+    }
+
+    /// Return the packed slabs for the current `(epoch, scale_bits)`
+    /// key, rebuilding all `n_slabs` via `build(j)` on a key miss.
+    pub fn ensure(
+        &mut self,
+        scale_bits: u32,
+        n_slabs: usize,
+        mut build: impl FnMut(usize) -> Option<Packed>,
+    ) -> &[Option<Packed>] {
+        let key = (self.epoch, scale_bits);
+        if self.key != Some(key) || self.slabs.len() != n_slabs {
+            self.slabs.clear();
+            self.slabs.extend((0..n_slabs).map(&mut build));
+            self.key = Some(key);
+            self.builds += 1;
+        }
+        &self.slabs
     }
 }
 
@@ -459,6 +553,48 @@ mod tests {
             imm_tn_serial(&at, &bt, &mut slab, ba, ia, ub, i0);
             assert_eq!(slab[..], want[i0 * ub..(i0 + rows) * ub], "slab {i0}+{rows}");
         }
+    }
+
+    #[test]
+    fn packed_cache_rebuilds_only_on_epoch_or_scale_change() {
+        let xs: Vec<f32> = (-4i32..4).map(|k| k as f32 * 0.5).collect();
+        let mut cache = PackedCache::new();
+        let step = 0.5f32.to_bits();
+        {
+            let slabs = cache.ensure(step, 2, |_| pack(&xs));
+            assert_eq!(slabs.len(), 2);
+            assert!(slabs.iter().all(|s| s.is_some()));
+        }
+        assert_eq!(cache.builds(), 1);
+        // same key: a hit, no rebuild
+        cache.ensure(step, 2, |_| panic!("hit must not rebuild"));
+        assert_eq!(cache.builds(), 1);
+        // scale move: rebuild
+        cache.ensure(0.25f32.to_bits(), 2, |_| pack(&xs));
+        assert_eq!(cache.builds(), 2);
+        // value change: rebuild, and the new packs are served
+        cache.invalidate();
+        let ys = [1.0f32, 3.0];
+        let amax = cache.ensure(0.25f32.to_bits(), 2, |_| pack(&ys))[0]
+            .as_ref()
+            .unwrap()
+            .amax;
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(amax, 3);
+        // a slab that fails to pack is cached as None (no re-attempt)
+        cache.invalidate();
+        assert!(cache.ensure(step, 1, |_| pack(&[0.1f32]))[0].is_none());
+        assert_eq!(cache.builds(), 4);
+        cache.ensure(step, 1, |_| panic!("None slabs are cached too"));
+        assert_eq!(cache.builds(), 4);
+    }
+
+    #[test]
+    fn pack_calls_counts_invocations() {
+        let before = pack_calls();
+        let _ = pack(&[1.0f32, 2.0]);
+        let _ = pack(&[0.1f32]); // miss still counts
+        assert!(pack_calls() >= before + 2);
     }
 
     #[test]

@@ -1045,6 +1045,176 @@ pub fn matmul_tn_sl_qd(
     matmul_tn_sl_qd_threads(a, b, ba, ia, ub, epi, plan_threads(2 * ba * ia * ub, ia), int_domain)
 }
 
+// ---------------------------------------------------------------------------
+// Cached-b dispatch: the weight operand arrives pre-packed
+// ---------------------------------------------------------------------------
+
+/// Pack `a` and re-run the full eligibility condition of [`int_packs`]
+/// against a **pre-packed** `b` operand. The cached pack carries the
+/// same `amax`/`exp` a fresh pack of the same values would (packing is
+/// deterministic), so the checks — clean accumulated destination,
+/// accumulator bound, exponent window — are decided identically to the
+/// per-call path; only the redundant repack of `b` is skipped.
+fn int_pack_a_cached(
+    a: &[f32],
+    bp: &Packed,
+    inner: usize,
+    accum_dst: Option<&[f32]>,
+) -> Option<Packed> {
+    if let Some(d) = accum_dst {
+        if !d.iter().all(|v| v.to_bits() == 0) {
+            return None;
+        }
+    }
+    let ap = int_gemm::pack(a)?;
+    if !int_gemm::accum_bound_ok(inner, ap.amax, bp.amax) {
+        return None;
+    }
+    let pe = ap.exp + bp.exp;
+    if !(int_gemm::EXP_LO..=int_gemm::EXP_HI).contains(&pe) {
+        return None;
+    }
+    Some(ap)
+}
+
+/// The lowering the `*_qd_cached` entry points would select given a
+/// cached `b` pack (`None` = the cache recorded `b` as unpackable).
+/// Exposed for the same engagement-assertion reason as
+/// [`quant_gemm_plan`].
+pub fn quant_gemm_plan_cached(
+    a: &[f32],
+    bp: Option<&Packed>,
+    inner: usize,
+    accum_dst: Option<&[f32]>,
+) -> QuantGemmImpl {
+    match bp {
+        Some(bp) if int_pack_a_cached(a, bp, inner, accum_dst).is_some() => {
+            QuantGemmImpl::IntDomain
+        }
+        _ => QuantGemmImpl::Simulated,
+    }
+}
+
+/// [`matmul_sl_qd_into_threads`] with the `b` operand's pack supplied by
+/// a [`PackedCache`]: `Some(bp)` skips the per-call repack of `b`,
+/// `None` means the cache found `b` unpackable and the call goes
+/// straight to the simulated kernel. Callers only reach this entry with
+/// the integer domain enabled; bit-identity to the uncached entry holds
+/// because a valid cache feeds the kernel the byte-identical pack.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_cached_into_threads(
+    a: &[f32],
+    b: &[f32],
+    bp: Option<&Packed>,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    if m > 0 && n > 0 {
+        if let Some(bp) = bp {
+            assert_eq!(a.len(), m * kd, "matmul_qd a size");
+            assert_eq!(b.len(), kd * n, "matmul_qd b size");
+            assert_eq!(bp.len(), b.len(), "cached b pack length");
+            assert_eq!(dst.len(), m * n, "matmul_qd dst size");
+            if let Some(ap) = int_pack_a_cached(a, bp, kd, Some(dst)) {
+                return int_nn_run(&ap, bp, bias, dst, m, kd, n, epi, threads);
+            }
+        }
+    }
+    matmul_sl_q_into_threads(a, b, bias, dst, m, kd, n, epi, threads)
+}
+
+/// [`matmul_sl_qd_cached_into_threads`] with the auto thread plan.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_cached_into(
+    a: &[f32],
+    b: &[f32],
+    bp: Option<&Packed>,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) -> QuantStats {
+    matmul_sl_qd_cached_into_threads(
+        a,
+        b,
+        bp,
+        bias,
+        dst,
+        m,
+        kd,
+        n,
+        epi,
+        plan_threads(2 * m * kd * n, m),
+    )
+}
+
+/// Allocating cached-b NN form, auto-threaded.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sl_qd_cached(
+    a: &[f32],
+    b: &[f32],
+    bp: Option<&Packed>,
+    bias: Option<&[f32]>,
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * n];
+    let st = matmul_sl_qd_cached_into(a, b, bp, bias, &mut out, m, kd, n, epi);
+    (out, st)
+}
+
+/// [`matmul_nt_sl_qd_threads`] with a cached `b` pack (the NT flavour's
+/// `b` is the same weight slab the NN forward packs, so one cache entry
+/// serves both orientations).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_sl_qd_cached_threads(
+    a: &[f32],
+    b: &[f32],
+    bp: Option<&Packed>,
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> (Vec<f32>, QuantStats) {
+    let mut out = vec![0.0f32; m * ib];
+    if m > 0 && ib > 0 {
+        if let Some(bp) = bp {
+            assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
+            assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
+            assert_eq!(bp.len(), b.len(), "cached b pack length");
+            if let Some(ap) = int_pack_a_cached(a, bp, ua, None) {
+                let st = int_nt_run(&ap, bp, &mut out, m, ua, ib, epi, threads);
+                return (out, st);
+            }
+        }
+    }
+    let st = matmul_nt_sl_q_into_threads(a, b, &mut out, m, ua, ib, epi, threads);
+    (out, st)
+}
+
+/// Allocating cached-b NT form, auto-threaded.
+pub fn matmul_nt_sl_qd_cached(
+    a: &[f32],
+    b: &[f32],
+    bp: Option<&Packed>,
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+) -> (Vec<f32>, QuantStats) {
+    matmul_nt_sl_qd_cached_threads(a, b, bp, m, ua, ib, epi, plan_threads(2 * m * ua * ib, m))
+}
+
 /// `c[B,U] = a[B,I] @ b[I,U]` (blocked, parallel above the threshold).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (ba, ia) = (a.shape()[0], a.shape()[1]);

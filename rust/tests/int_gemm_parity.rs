@@ -27,6 +27,15 @@
 //! on/off produces identical loss bits, parameters, velocities and
 //! overflow matrices. A final property shows accepted sites cannot
 //! silently overflow the i32 accumulator.
+//!
+//! A third layer covers the **packed-operand cache**: the cached-b
+//! entry points (`*_cached*`) must be bit-identical to per-call packing
+//! and to the simulated kernels, and a persistent [`Network`] must
+//! rebuild each weight layer's slab exactly once per `sgd_update` and
+//! once per scale adoption — asserted through
+//! [`Network::weight_pack_builds`], so a stale cache (which re-packs
+//! unchanged values and is therefore bit-invisible) or a
+//! repack-per-GEMM regression fails the count, not just the clock.
 
 use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, Quantizer, RoundMode};
 use lpdnn::coordinator::ScaleController;
@@ -393,6 +402,325 @@ fn conv_train_step_int_domain_bit_identical() {
         };
         assert_eq!(run(true), run(false), "conv {mode:?}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-operand cache
+// ---------------------------------------------------------------------------
+
+/// The cached-b entry points with a pre-packed weight slab must be
+/// bit-identical (bits *and* stats) to the simulated kernels — and the
+/// per-call eligibility re-checks must still engage — for both the
+/// forward NN orientation and the dx-projection NT orientation that
+/// share one slab, across arithmetics × round modes × threads. A
+/// recorded-unpackable slab (`bp = None`) must fall back transparently.
+#[test]
+fn cached_weight_packs_bit_identical_to_simulated() {
+    let mut rng = Pcg32::seeded(0x16E3_0005);
+    for mode in ROUND_MODES {
+        for (label, fmt, amax, exp) in int_arithmetics() {
+            let epi = with_stream(mk_epi(fmt, mode), mode, 0x16E3_A005);
+            for (m, kd, n) in [(7, 13, 9), (33, 17, 40)] {
+                let a = grid_vec(&mut rng, m * kd, amax, exp);
+                let b = grid_vec(&mut rng, kd * n, amax, exp);
+                let bias = grid_vec(&mut rng, n, amax, exp);
+                let bp = int_gemm::pack(&b).expect("grid data packs");
+                let zeros = vec![0.0f32; m * n];
+                assert_eq!(
+                    ops::quant_gemm_plan_cached(&a, Some(&bp), kd, Some(&zeros)),
+                    QuantGemmImpl::IntDomain,
+                    "{label} {mode:?} {m}x{kd}x{n}: cached NN case must engage"
+                );
+                for threads in THREADS {
+                    let (want, wst) =
+                        ops::matmul_sl_q_threads(&a, &b, Some(&bias), m, kd, n, epi, threads);
+                    let mut got = vec![0.0f32; m * n];
+                    let gst = ops::matmul_sl_qd_cached_into_threads(
+                        &a,
+                        &b,
+                        Some(&bp),
+                        Some(&bias),
+                        &mut got,
+                        m,
+                        kd,
+                        n,
+                        epi,
+                        threads,
+                    );
+                    assert_eq!(bits(&got), bits(&want), "cached nn {label} {mode:?} t{threads}");
+                    assert_eq!(gst, wst, "cached nn {label} {mode:?} t{threads} stats");
+                }
+
+                // NT (dx projection): b is [ib, ua] row-major — the SAME
+                // flat slab a forward would cache serves this orientation
+                let (ua, ib) = (n, kd);
+                let a2 = grid_vec(&mut rng, m * ua, amax, exp);
+                assert_eq!(
+                    ops::quant_gemm_plan_cached(&a2, Some(&bp), ua, None),
+                    QuantGemmImpl::IntDomain,
+                    "{label} {mode:?} {m}x{ua}x{ib}: cached NT case must engage"
+                );
+                for threads in THREADS {
+                    let (want, wst) = ops::matmul_nt_sl_q_threads(&a2, &b, m, ua, ib, epi, threads);
+                    let (got, gst) = ops::matmul_nt_sl_qd_cached_threads(
+                        &a2,
+                        &b,
+                        Some(&bp),
+                        m,
+                        ua,
+                        ib,
+                        epi,
+                        threads,
+                    );
+                    assert_eq!(bits(&got), bits(&want), "cached nt {label} {mode:?} t{threads}");
+                    assert_eq!(gst, wst, "cached nt {label} {mode:?} t{threads} stats");
+                }
+            }
+        }
+    }
+}
+
+/// Per-call eligibility is re-checked even with a valid cached slab: an
+/// off-grid activation, a dirty accumulated destination, or a slab the
+/// cache recorded as unpackable (`None`) all fall back to the simulated
+/// kernel bit-identically.
+#[test]
+fn cached_dispatch_still_rechecks_per_call_eligibility() {
+    let mut rng = Pcg32::seeded(0x16E3_0006);
+    let epi = mk_epi(FixedFormat::new(10, 3), RoundMode::HalfAway);
+    let (m, kd, n) = (7, 13, 9);
+    let b = grid_vec(&mut rng, kd * n, 511, -6);
+    let bp = int_gemm::pack(&b).expect("grid data packs");
+
+    // off-grid a rejects the cached path even though bp is valid
+    let mut a = grid_vec(&mut rng, m * kd, 511, -6);
+    a[5] = 0.1;
+    assert_eq!(ops::quant_gemm_plan_cached(&a, Some(&bp), kd, None), QuantGemmImpl::Simulated);
+    // dirty accumulated destination likewise
+    let clean_a = grid_vec(&mut rng, m * kd, 511, -6);
+    let mut dirty = vec![0.0f32; m * n];
+    dirty[3] = -0.0;
+    assert_eq!(
+        ops::quant_gemm_plan_cached(&clean_a, Some(&bp), kd, Some(&dirty)),
+        QuantGemmImpl::Simulated
+    );
+    // recorded-unpackable slab goes straight to simulated
+    assert_eq!(ops::quant_gemm_plan_cached(&clean_a, None, kd, None), QuantGemmImpl::Simulated);
+
+    for threads in THREADS {
+        for (ctx, aa, slab) in
+            [("off-grid a", &a, Some(&bp)), ("bp none", &clean_a, None)]
+        {
+            let (want, wst) = ops::matmul_sl_q_threads(aa, &b, None, m, kd, n, epi, threads);
+            let mut got = vec![0.0f32; m * n];
+            let gst = ops::matmul_sl_qd_cached_into_threads(
+                aa, &b, slab, None, &mut got, m, kd, n, epi, threads,
+            );
+            assert_eq!(bits(&got), bits(&want), "{ctx} t{threads}");
+            assert_eq!(gst, wst, "{ctx} t{threads} stats");
+            let (want, wst) = ops::matmul_nt_sl_q_threads(aa, &b, m, kd, n, epi, threads);
+            let (got, gst) =
+                ops::matmul_nt_sl_qd_cached_threads(aa, &b, slab, m, kd, n, epi, threads);
+            assert_eq!(bits(&got), bits(&want), "{ctx} nt t{threads}");
+            assert_eq!(gst, wst, "{ctx} nt t{threads} stats");
+        }
+    }
+}
+
+/// The cache lifecycle proof for training: one persistent [`Network`]
+/// re-packs each weight layer exactly once per train step (forward
+/// builds, backward hits the same key, `sgd_update` invalidates) — never
+/// once per GEMM — while staying bit-identical to a cold-cache network
+/// (fresh `Network` per step, PR 7 behavior) and to the simulated path,
+/// across round modes. A stale-cache bug or a repack-per-GEMM regression
+/// breaks the builds count even where the output bits could not tell.
+#[test]
+fn cached_packs_rebuild_once_per_update_bit_identically() {
+    let s = tiny_mlp();
+    let ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    for mode in ROUND_MODES {
+        let run = |style: &str| -> Vec<Vec<u32>> {
+            let (mut params, mut vels, x, y) =
+                quantized_mlp_fixture(ctrl.format(2), ctrl.format(0));
+            let net = Network::from_mlp_shape(s);
+            let layers = net.n_compute_layers() as u64;
+            let mut trace: Vec<Vec<u32>> = Vec::new();
+            for step in 0..3u64 {
+                let cold;
+                let (net_ref, int_domain) = match style {
+                    "cached" => (&net, true),
+                    "cold" => {
+                        cold = Network::from_mlp_shape(s);
+                        (&cold, true)
+                    }
+                    _ => (&net, false),
+                };
+                let out = net_ref.train_step(
+                    &mut params,
+                    &mut vels,
+                    &x,
+                    &y,
+                    0.1,
+                    0.5,
+                    2.0,
+                    &ctrl,
+                    StepOptions { mode, fused: true, int_domain, ..Default::default() },
+                );
+                trace.push(vec![out.loss.to_bits()]);
+                trace.push(bits(out.overflow.data()));
+                if style == "cached" {
+                    assert_eq!(
+                        net.weight_pack_builds(),
+                        (step + 1) * layers,
+                        "{mode:?}: exactly one rebuild per weight layer per step"
+                    );
+                }
+            }
+            for t in params.iter().chain(vels.iter()) {
+                trace.push(bits(t.data()));
+            }
+            trace
+        };
+        let cached = run("cached");
+        assert_eq!(cached, run("cold"), "{mode:?} cached vs cold-cache");
+        assert_eq!(cached, run("simulated"), "{mode:?} cached vs simulated");
+    }
+}
+
+/// Scale adoption re-keys the caches: after [`ScaleController::adopt_int_bits`]
+/// the next forward rebuilds every slab exactly once. The weight values
+/// did not change, so the rebuilt packs are byte-identical to the stale
+/// ones — only the builds counter can catch a cache that failed to
+/// re-key, which is exactly what this test pins down. Prepack (the serve
+/// workers' startup path) must populate the same caches idempotently.
+#[test]
+fn scale_adoption_and_prepack_drive_the_cache_key() {
+    let s = tiny_mlp();
+    let mut ctrl = ScaleController::fixed(24, FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let (params, _, x, _) = quantized_mlp_fixture(ctrl.format(2), ctrl.format(0));
+    let net = Network::from_mlp_shape(s);
+    let layers = net.n_compute_layers() as u64;
+    let opts = StepOptions {
+        mode: RoundMode::HalfAway,
+        fused: true,
+        int_domain: true,
+        ..Default::default()
+    };
+
+    assert_eq!(net.weight_pack_builds(), 0, "fresh network: no builds");
+    let l0 = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(net.weight_pack_builds(), layers, "first eval builds each slab once");
+    let l1 = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(net.weight_pack_builds(), layers, "second eval is a pure cache hit");
+    assert_eq!(bits(l0.data()), bits(l1.data()));
+
+    // adopt a one-bit-wider integer part for every group: every W
+    // step() moves, so every slab must re-key
+    let adopted: Vec<i32> =
+        (0..ctrl.n_groups()).map(|g| ctrl.format(g).int_bits + 1).collect();
+    ctrl.adopt_int_bits(&adopted);
+    let l2 = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(net.weight_pack_builds(), 2 * layers, "adoption re-keys every slab once");
+    let l3 = net.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(net.weight_pack_builds(), 2 * layers, "…and only once");
+    assert_eq!(bits(l2.data()), bits(l3.data()));
+
+    // bit-identity vs a cold-cache network and the simulated path under
+    // the adopted scales
+    let cold = Network::from_mlp_shape(s);
+    let lc = cold.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(bits(l2.data()), bits(lc.data()), "cached eval ≡ cold eval after adoption");
+    let ls = net.eval_logits_opt(
+        &params,
+        &x,
+        &ctrl,
+        &StepOptions { int_domain: false, ..opts.clone() },
+    );
+    assert_eq!(bits(l2.data()), bits(ls.data()), "cached eval ≡ simulated after adoption");
+
+    // worker-style prepack: populates every slab up front, is
+    // idempotent, and the following eval never re-packs
+    let pre = Network::from_mlp_shape(s);
+    pre.prepack_int_operands(&params, &ctrl);
+    assert_eq!(pre.weight_pack_builds(), layers, "prepack builds each slab once");
+    pre.prepack_int_operands(&params, &ctrl);
+    assert_eq!(pre.weight_pack_builds(), layers, "prepack is idempotent");
+    let lp = pre.eval_logits_opt(&params, &x, &ctrl, &opts);
+    assert_eq!(pre.weight_pack_builds(), layers, "eval after prepack is a pure hit");
+    assert_eq!(bits(lp.data()), bits(l2.data()), "prepacked eval ≡ cached eval");
+}
+
+/// Same lifecycle on the conv topology: the im2col weight slabs cache
+/// across steps (one rebuild per weight-owning layer per step) and stay
+/// bit-identical to the cold-cache and simulated paths.
+#[test]
+fn conv_cached_packs_rebuild_once_per_update_bit_identically() {
+    let spec = tiny_conv_spec();
+    let comp = FixedFormat::new(10, 3);
+    let up = FixedFormat::new(12, 0);
+    let qup = Quantizer::from_format(up);
+    let qcomp = Quantizer::from_format(comp);
+    let mk = || {
+        Network::from_topology_shaped(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES)
+            .expect("fixture topology realizes")
+    };
+    let probe = mk();
+    let ctrl = ScaleController::fixed(probe.n_groups(), comp, up);
+    let run = |style: &str| -> Vec<Vec<u32>> {
+        let (mut params, mut vels) =
+            topology_state(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES, 0xC0DE);
+        for p in &mut params {
+            qup.apply_slice(p.data_mut());
+        }
+        let (mut x, y) = spatial_batch(TINY_CONV_SHAPE, 4, TINY_CONV_CLASSES, 0xF00D);
+        qcomp.apply_slice(x.data_mut());
+        let net = mk();
+        let layers = net.n_compute_layers() as u64;
+        let mut trace: Vec<Vec<u32>> = Vec::new();
+        for step in 0..2u64 {
+            let cold;
+            let (net_ref, int_domain) = match style {
+                "cached" => (&net, true),
+                "cold" => {
+                    cold = mk();
+                    (&cold, true)
+                }
+                _ => (&net, false),
+            };
+            let out = net_ref.train_step(
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.1,
+                0.5,
+                2.0,
+                &ctrl,
+                StepOptions {
+                    mode: RoundMode::HalfAway,
+                    fused: true,
+                    int_domain,
+                    ..Default::default()
+                },
+            );
+            trace.push(vec![out.loss.to_bits()]);
+            trace.push(bits(out.overflow.data()));
+            if style == "cached" {
+                assert_eq!(
+                    net.weight_pack_builds(),
+                    (step + 1) * layers,
+                    "conv: exactly one rebuild per weight layer per step"
+                );
+            }
+        }
+        for t in params.iter().chain(vels.iter()) {
+            trace.push(bits(t.data()));
+        }
+        trace
+    };
+    let cached = run("cached");
+    assert_eq!(cached, run("cold"), "conv cached vs cold-cache");
+    assert_eq!(cached, run("simulated"), "conv cached vs simulated");
 }
 
 // ---------------------------------------------------------------------------

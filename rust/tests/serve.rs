@@ -134,6 +134,21 @@ fn responses_are_bit_identical_to_single_example_forwards() {
                 "{tag}: every request shipped in exactly one batch"
             );
             assert!(report.max_fill() <= max_batch, "{tag}: batch cap respected");
+            // each worker pre-packs every weight layer exactly once at
+            // startup and never re-packs in the steady state (weights
+            // and scales are frozen while serving)
+            let net = Network::from_topology_shaped(
+                &restored.spec,
+                restored.in_shape,
+                restored.n_classes,
+            )
+            .unwrap();
+            let want_packs =
+                if int_domain { (workers * net.n_compute_layers()) as u64 } else { 0 };
+            assert_eq!(
+                report.weight_pack_builds, want_packs,
+                "{tag}: weight packs must be exactly one per worker per layer"
+            );
             assert!(
                 report.latency_percentile(0.99) >= report.latency_percentile(0.50),
                 "{tag}: percentiles ordered"
@@ -167,6 +182,15 @@ fn conv_checkpoints_serve_bit_identically() {
         assert_eq!(&bits, want_bits, "conv logits drifted for request {}", r.id);
         assert_eq!(r.pred, *want_pred);
     }
+    // conv weight slabs (im2col filter matrices) prepack per worker too
+    let net =
+        Network::from_topology_shaped(&restored.spec, restored.in_shape, restored.n_classes)
+            .unwrap();
+    assert_eq!(
+        report.weight_pack_builds,
+        (opts.workers * net.n_compute_layers()) as u64,
+        "conv: one prepack per worker per weight layer"
+    );
 }
 
 #[test]
