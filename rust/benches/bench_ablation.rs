@@ -8,6 +8,10 @@
 //! 3. UPDATE INTERVAL: the controller's tick frequency.
 //! 4. WARMUP: scale initialization by high-precision training (paper 9.3)
 //!    vs cold uniform init.
+//!
+//! A flat summary of every section is persisted as `BENCH_ablation.json`
+//! (versioned via [`Table::to_json`]) so ablation results can be diffed
+//! across commits like `BENCH_perf.json`.
 
 #[path = "common.rs"]
 mod common;
@@ -21,6 +25,10 @@ use lpdnn::tensor::{init::InitSpec, Pcg32, Tensor};
 
 fn main() {
     let mut session = common::setup();
+    // every section also feeds this flat summary, persisted at the end
+    // as BENCH_ablation.json so ablation results diff across commits
+    // the same way BENCH_perf.json does
+    let mut summary = Table::new(&["ablation", "case", "result"]);
 
     // ------------------------------------------------------------------
     // 1. width ablation
@@ -43,6 +51,15 @@ fn main() {
             model.to_string(),
             format!("{:.2}%", 100.0 * errs[0]),
             format!("{:.2}%", 100.0 * errs[1]),
+        ]);
+        summary.row(&[
+            "width".into(),
+            model.to_string(),
+            format!(
+                "10/12 {:.2}% | 5/6 {:.2}%",
+                100.0 * errs[0],
+                100.0 * errs[1]
+            ),
         ]);
     }
     t.print();
@@ -127,6 +144,11 @@ fn main() {
             format!("{loss:.4}"),
             format!("{:.4}", probe.loss),
         ]);
+        summary.row(&[
+            "rounding".into(),
+            format!("{mode:?}"),
+            format!("train {loss:.4} | held-out {:.4}", probe.loss),
+        ]);
     }
     t.print();
     println!("(half-away is the canonical mode the artifacts implement; truncate");
@@ -155,6 +177,11 @@ fn main() {
             format!("{:.2}%", 100.0 * r.test_error),
             format!("{moves}"),
         ]);
+        summary.row(&[
+            "update-interval".into(),
+            format!("every {every}"),
+            format!("{:.2}% ({moves} moves)", 100.0 * r.test_error),
+        ]);
     }
     t.print();
     println!("(paper uses 10 000; too-frequent updates chase minibatch noise,");
@@ -179,9 +206,16 @@ fn main() {
         let r = session.run(cfg).expect("run");
         eprintln!("  {label}: {:.2}%", 100.0 * r.test_error);
         t.row(&[label.to_string(), format!("{:.2}%", 100.0 * r.test_error)]);
+        summary.row(&[
+            "warmup".into(),
+            label.to_string(),
+            format!("{:.2}%", 100.0 * r.test_error),
+        ]);
     }
     t.print();
     println!("(cold starts leave gradient groups quantizing to zero until the");
     println!(" controller walks the exponents down — the paper's reason for");
     println!(" finding initial scaling factors with a higher precision format)");
+
+    common::persist_table("ablation", &summary);
 }

@@ -12,6 +12,9 @@
 //!   step` rows: depth 2 overhead per arithmetic, depths 3/4 scaling)
 //! * conv im2col lowering vs the direct nested-loop reference kernels
 //!   (`conv train step` rows, per arithmetic — bit-identical paths)
+//! * data-parallel sharded train steps at 1/2/4 workers (`dp train
+//!   step` rows, MLP + conv — bit-identical paths, speedup printed,
+//!   the once-per-update weight-pack cadence asserted)
 //! * integer-domain GEMM vs the simulated-f32 fused path on eligible
 //!   grid operands (`int gemm` rows per orientation and arithmetic,
 //!   plus the `int train step` end-to-end A/B)
@@ -797,6 +800,133 @@ fn packed_cache_section(table: &mut Table) {
     ]);
 }
 
+/// Data-parallel train steps: the batch sharded across 1/2/4 workers
+/// with central gradient reduction — bit-identical at every worker
+/// count (`tests/dp_parity.rs`), so the rows are pure perf A/Bs on the
+/// pi_mlp and builtin conv nets. Speedups are printed (they depend on
+/// the host's core count); the packed-operand cadence is asserted: the
+/// shared weight caches must rebuild exactly once per weight layer per
+/// step no matter how many workers ran the forward pass.
+fn dp_step_section(table: &mut Table) {
+    let (comp, up) = (FixedFormat::new(8, -2), FixedFormat::new(8, 0));
+    let qcomp = Quantizer::from_format(comp);
+    let qup = Quantizer::from_format(up);
+    let step_iters = scaled(10).max(3);
+
+    // pi_mlp, batch 64 — same on-grid fixture as the packed-cache rows,
+    // so every fused site is integer-domain eligible
+    let shape = MlpShape::for_dataset("digits", 128, 4).expect("digits dims");
+    let ctrl = ScaleController::fixed(24, comp, up);
+    let mlp_state = || {
+        let (mut params, vels, mut x, y) = pi_mlp_step_fixture();
+        for p in &mut params {
+            qup.apply_slice(p.data_mut());
+        }
+        qcomp.apply_slice(x.data_mut());
+        (params, vels, x, y)
+    };
+    let net = Network::from_mlp_shape(shape);
+    let mut serial_mean = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let opts = StepOptions {
+            fused: true,
+            int_domain: true,
+            dp_workers: workers,
+            ..Default::default()
+        };
+        let (mut params, mut vels, x, y) = mlp_state();
+        let _ =
+            net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+        let builds0 = net.weight_pack_builds();
+        let _ =
+            net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+        let packs = net.weight_pack_builds() - builds0;
+        assert_eq!(
+            packs,
+            net.n_compute_layers() as u64,
+            "dp train step x{workers}: exactly one pack rebuild per weight layer per step"
+        );
+        let s = bench(1, step_iters, || {
+            let _ = net.train_step(
+                &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone(),
+            );
+        });
+        if workers == 1 {
+            serial_mean = s.mean;
+        }
+        table.row(&[
+            format!("dp train step x{workers} (pi_mlp, batch 64, fixed 8.-2/8.0)"),
+            format!(
+                "{:.2}ms | speedup vs x1 {:.2}x (packs/step {packs})",
+                s.mean * 1e3,
+                serial_mean / s.mean.max(1e-12),
+            ),
+        ]);
+    }
+
+    // builtin conv on digits, batch 16 — conv weight slabs (im2col
+    // filter matrices) share the same once-per-update cadence
+    let spec = TopologySpec::builtin("conv").expect("builtin conv");
+    let (in_shape, n_classes) = lpdnn::data::dataset_shape("digits").expect("digits shape");
+    let net = Network::from_topology_shaped(&spec, in_shape, n_classes).expect("conv net");
+    let ctrl = ScaleController::fixed(net.n_groups(), comp, up);
+    let conv_iters = scaled(5).max(2);
+    let batch = 16;
+    let conv_state = || {
+        let (mut params, vels) = lpdnn::testing::topology_state(&spec, in_shape, n_classes, 31);
+        for p in &mut params {
+            qup.apply_slice(p.data_mut());
+        }
+        let mut rng = Pcg32::seeded(29);
+        let mut dims = vec![batch];
+        dims.extend(in_shape.dims());
+        let mut x = Tensor::from_vec(
+            &dims,
+            (0..batch * in_shape.len()).map(|_| rng.uniform()).collect(),
+        );
+        qcomp.apply_slice(x.data_mut());
+        let labels: Vec<usize> = (0..batch).map(|_| rng.below(10) as usize).collect();
+        (params, vels, x, ops::one_hot(&labels, 10))
+    };
+    let mut serial_mean = 0.0f64;
+    for workers in [1usize, 2, 4] {
+        let opts = StepOptions {
+            fused: true,
+            int_domain: true,
+            dp_workers: workers,
+            ..Default::default()
+        };
+        let (mut params, mut vels, x, y) = conv_state();
+        let _ =
+            net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+        let builds0 = net.weight_pack_builds();
+        let _ =
+            net.train_step(&mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone());
+        let packs = net.weight_pack_builds() - builds0;
+        assert_eq!(
+            packs,
+            net.n_compute_layers() as u64,
+            "dp conv train step x{workers}: one pack rebuild per weight layer per step"
+        );
+        let s = bench(1, conv_iters, || {
+            let _ = net.train_step(
+                &mut params, &mut vels, &x, &y, 0.01, 0.5, 3.0, &ctrl, opts.clone(),
+            );
+        });
+        if workers == 1 {
+            serial_mean = s.mean;
+        }
+        table.row(&[
+            format!("dp train step x{workers} (conv digits, batch 16, fixed 8.-2/8.0)"),
+            format!(
+                "{:.2}ms | speedup vs x1 {:.2}x (packs/step {packs})",
+                s.mean * 1e3,
+                serial_mean / s.mean.max(1e-12),
+            ),
+        ]);
+    }
+}
+
 fn quantizer_section(table: &mut Table) {
     let mut rng = Pcg32::seeded(2);
     let mut xs: Vec<f32> = (0..1 << 22).map(|_| rng.normal()).collect(); // 16 MiB
@@ -899,6 +1029,7 @@ fn main() {
     native_step_section(&mut table);
     graph_step_section(&mut table);
     conv_step_section(&mut table);
+    dp_step_section(&mut table);
     quantizer_section(&mut table);
     controller_section(&mut table);
     #[cfg(feature = "pjrt")]

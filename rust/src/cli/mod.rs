@@ -180,6 +180,10 @@ SUBCOMMANDS:
                   --max-overflow-rate R --update-every N --warmup N
                   --steps N --seed N --lr R --dropout-input R --dropout-hidden R
                   --eval-every N --loss-csv <file> --verbose
+                  --dp-workers N         data-parallel workers per train step
+                                         (default LPDNN_DP_WORKERS or 1);
+                                         bit-identical results at any N —
+                                         purely a wall-clock knob
                   --save <ckpt.json>     write a versioned checkpoint of the
                                          trained model after the run (restores
                                          bit-exactly with infer/serve)
@@ -199,6 +203,11 @@ SUBCOMMANDS:
                   --max-wait-us N        batcher linger after the first
                                          queued request, µs (default 2000)
                   --queue-cap N          bounded request-queue depth (default 64)
+                  --open-rate R          open-loop Poisson arrivals at R req/s
+                                         instead of closed-loop producers;
+                                         percentiles then include honest
+                                         queueing delay (default 0 = closed)
+                  --open-seed N          arrival-schedule seed (default 1)
                   --bench-json <file>    stats output (default BENCH_serve.json)
     sweep       Run a sweep: float32 baseline + points over one axis,
                 fanned across a worker pool (rows are bit-identical at
@@ -227,6 +236,7 @@ ENVIRONMENT:
     LPDNN_JOBS          sweep worker pool size for the bench binaries
     LPDNN_THREADS       worker-thread cap for the native matmul kernels
     LPDNN_PAR_MATMUL    FLOP threshold for going parallel (default 2^20)
+    LPDNN_DP_WORKERS    default data-parallel train workers (--dp-workers wins)
 "
     .to_string()
 }

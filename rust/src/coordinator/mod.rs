@@ -38,6 +38,6 @@ pub use observer::{
 };
 pub use report::{RunReport, SweepReport, SweepRowReport, REPORT_VERSION};
 pub use scale_ctrl::ScaleController;
-pub use session::Session;
+pub use session::{oversubscription_warning, Session};
 pub use sweep::{SweepOutcome, SweepPoint, SweepRow};
 pub use trainer::{RunResult, RNG_FORK_BATCHER, RNG_FORK_INIT, WARMUP_SEED_XOR};

@@ -225,10 +225,51 @@ impl Session {
     }
 }
 
+/// One-line oversubscription warning when two parallelism knobs
+/// multiply past the machine's cores, naming both knobs so the user
+/// knows which to cap — e.g. `--dp-workers 4` × `LPDNN_THREADS=8` on a
+/// 16-core host. Returns `None` when the product fits (or when `cores`
+/// is unknown, i.e. 0): oversubscription never changes bits here, it
+/// only wastes wall-clock, so this is advice, not an error.
+pub fn oversubscription_warning(
+    a_name: &str,
+    a: usize,
+    b_name: &str,
+    b: usize,
+    cores: usize,
+) -> Option<String> {
+    if cores == 0 || a.saturating_mul(b) <= cores {
+        return None;
+    }
+    Some(format!(
+        "warning: {a_name}={a} x {b_name}={b} = {} threads oversubscribes {cores} \
+         available cores; cap {a_name} or {b_name} (results are bit-identical either way)",
+        a * b
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{Arithmetic, DataConfig, TrainConfig};
+
+    #[test]
+    fn oversubscription_warning_names_both_knobs() {
+        let w = oversubscription_warning("--dp-workers", 4, "LPDNN_THREADS", 8, 16)
+            .expect("32 threads on 16 cores warns");
+        assert!(w.contains("--dp-workers=4"), "{w}");
+        assert!(w.contains("LPDNN_THREADS=8"), "{w}");
+        assert!(w.contains("32 threads"), "{w}");
+        assert!(w.contains("16 available cores"), "{w}");
+    }
+
+    #[test]
+    fn oversubscription_warning_is_quiet_when_it_fits() {
+        assert!(oversubscription_warning("--dp-workers", 2, "LPDNN_THREADS", 8, 16).is_none());
+        assert!(oversubscription_warning("--jobs", 1, "LPDNN_THREADS", 16, 16).is_none());
+        // unknown core count: stay quiet rather than guess
+        assert!(oversubscription_warning("--dp-workers", 64, "LPDNN_THREADS", 64, 0).is_none());
+    }
 
     fn tiny_cfg(name: &str) -> ExperimentConfig {
         ExperimentConfig {

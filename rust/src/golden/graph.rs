@@ -20,11 +20,38 @@
 //! Activations flow as `[B, ...shape.dims()]` tensors (NHWC for
 //! spatial signals).
 //!
+//! **Weights are shared, per-worker state is scratch.** A [`Network`]
+//! holds only immutable-per-step state (the layer graph, the packed
+//! weight caches behind mutexes) and is `Sync`: any number of
+//! data-parallel workers can run [`Network::train_step`] shards or
+//! [`Network::eval_logits`] concurrently against one instance. All
+//! mutable per-pass state lives in a [`NetScratch`] (one
+//! [`LayerScratch`] per layer: the conv im2col buffers that used to
+//! hide in a `RefCell`), checked out of a pool per pass and returned
+//! after.
+//!
+//! **Data-parallel training is bit-identical at any worker count.**
+//! `StepOptions::dp_workers > 1` shards the batch row-wise across
+//! scoped worker threads. Each worker replays the *identical*
+//! quantization-site sequence over its shard (epilogue bases offset by
+//! the shard's start row, so element-keyed stochastic streams see
+//! full-batch indices), computes its own forward/backward *routing*,
+//! and captures — without computing — the DW/DB epilogues. The driver
+//! then (a) sums the f64 loss over shard log-probabilities in shard
+//! order (the serial association), (b) reassembles the full-batch
+//! GEMM operands, (c) computes each layer's dw/db centrally with the
+//! captured epilogues ([`Layer::reduce_grads`]) — cross-shard f32
+//! summations are never split, so non-associativity cannot bite —
+//! and (d) folds worker [`QuantStats`] with the fixed-order
+//! [`merge_stats_tree`] before the single bottom-up `sgd_update`.
+//! `tests/dp_parity.rs` asserts exact u32 bits at N ∈ {1,2,3,4};
+//! DESIGN.md §Data-parallel training walks the argument.
+//!
 //! **Conv rides the fused GEMM epilogues.** [`MaxoutConv2d`] lowers
 //! each stage by im2col ([`super::conv`]): the SAME-padded stride-1
-//! patch matrix is built once per step into a per-layer scratch buffer
-//! (allocated on the first step of a run, reused afterwards), and each
-//! maxout filter's weight slab rides `matmul_sl_qd_into` /
+//! patch matrix is built once per step into the worker's
+//! [`LayerScratch`] (allocated on the first step, reused afterwards),
+//! and each maxout filter's weight slab rides `matmul_sl_qd_into` /
 //! `matmul_tn_sl_qd_into` with the Z/DW quantization fused into the
 //! tile epilogues — bit-identical to the direct nested-loop reference
 //! kernels (`StepOptions::conv_direct`, `tests/conv_parity.rs`). The
@@ -36,11 +63,13 @@
 //! adopted scale step, so the integer-domain path re-packs a weight
 //! slab only after `sgd_update` bumps the epoch or a scale adoption
 //! moves the step; serve workers pre-pack every slab once at startup
-//! via [`Network::prepack_int_operands`]. Eligibility is re-checked on
-//! every call against the cached pack (the activation operand and the
-//! accumulator bound are input-dependent), and a cache hit returns
-//! byte-identical packs — packing is a pure function of the values —
-//! so caching cannot perturb the bit-identity contract below.
+//! via [`Network::prepack_int_operands`]. The cache hands out an `Arc`
+//! of the packed slabs, so concurrent dp workers share one build per
+//! step (the first to arrive builds; the mutex is never held across a
+//! GEMM). Eligibility is re-checked on every call against the cached
+//! pack, and a cache hit returns byte-identical packs — packing is a
+//! pure function of the values — so caching cannot perturb the
+//! bit-identity contract below.
 //!
 //! **The bit-identity contract.** The graph executor is not "close to"
 //! the monolithic step it replaced — it is bit-identical on the builtin
@@ -60,7 +89,10 @@
 //!    layer below*'s `DH` group **before** any intervening dropout mask
 //!    is applied (pooling/flatten backward is pure routing and owns no
 //!    sites); update `w` then `b` per layer bottom-up, velocity before
-//!    parameter.
+//!    parameter. The DW/DB epilogues are *drawn* at their site
+//!    positions inside `backward` but *run* centrally in
+//!    [`Layer::reduce_grads`] — an epilogue is a pure value, so
+//!    deferring its execution moves no site and changes no bits.
 //! 2. **Group table.** Scaling-factor groups stay layer-major
 //!    (`group_index(row, kind) = row * N_KINDS + kind`) where `row` is
 //!    the compute *stage*'s position in the graph (a conv layer and its
@@ -70,12 +102,17 @@
 //!    take — per-conv-layer dynamic scales need zero controller
 //!    changes.
 //! 3. **RNG draw order.** Dropout masks draw from one stream in forward
-//!    graph order (input mask first, then after each stage), so the
-//!    graph replays the monolith's masks bit-for-bit.
+//!    graph order (input mask first, then after each stage). The driver
+//!    pre-draws every mask for the *full* batch before sharding
+//!    ([`Network::train_step`]), so workers slice identical masks and
+//!    the graph replays the monolith's draws bit-for-bit.
 
-use std::cell::RefCell;
+#![allow(clippy::too_many_arguments)]
 
-use crate::arith::{QuantStats, RoundMode};
+use std::mem;
+use std::sync::Mutex;
+
+use crate::arith::{QuantEpilogue, QuantStats, RoundMode};
 use crate::config::TopologySpec;
 use crate::coordinator::ScaleController;
 use crate::runtime::manifest::{
@@ -86,7 +123,7 @@ use crate::tensor::{ops, Shape, Tensor};
 
 use super::conv::{self, ConvGeom};
 use super::{
-    apply_mask, Dropout, dropout_mask, GoldenOut, GoldenQ, MlpShape, Params,
+    apply_mask, dropout_mask, merge_stats_tree, Dropout, GoldenOut, GoldenQ, MlpShape, Params,
     StepOptions, STOCHASTIC_SITE_SEED,
 };
 
@@ -103,8 +140,8 @@ pub enum Cache {
     Mask(Option<Vec<f32>>),
     /// Conv: the (possibly dropout-masked) `[B, H, W, C]` input +
     /// winning filter per `[B·H·W, C_out]` output element. The im2col
-    /// patch matrix itself stays in the layer's scratch buffer between
-    /// forward and backward of the same step.
+    /// patch matrix itself stays in the worker's [`LayerScratch`]
+    /// between forward and backward of the same pass.
     Conv { x: Tensor, amax: Vec<u8> },
     /// Max pool: the input tensor shape + the flat input index of each
     /// window's argmax (routing targets for backward).
@@ -121,31 +158,119 @@ pub enum DropoutRole {
     Hidden,
 }
 
-/// The per-step dropout stream, threaded through the forward pass. Draws
-/// happen in graph order from the single [`Dropout`] RNG, which is what
-/// keeps graph masks identical to the monolith's.
+/// One data-parallel worker's slice of the batch, threaded through
+/// every layer call. The serial step is the degenerate shard
+/// (`start = 0`, `rows = full`): there is exactly one code path, which
+/// is the whole worker-count-invariance argument.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCtx {
+    /// First batch row of this shard in the full batch.
+    pub start: usize,
+    /// Rows in this shard (the layer inputs carry this batch size).
+    pub rows: usize,
+    /// Full-batch row count (epilogue bases and the `(p - y)/B` loss
+    /// gradient divide by this, never by `rows`).
+    pub full: usize,
+    /// Per-worker GEMM thread cap (`0` = the process-wide auto plan);
+    /// dp workers split `LPDNN_THREADS` so N workers don't oversubscribe
+    /// N-fold. Thread count never changes bits.
+    pub threads: usize,
+}
+
+impl ShardCtx {
+    /// The serial (1-worker) context over a full batch.
+    pub fn serial(batch: usize) -> ShardCtx {
+        ShardCtx { start: 0, rows: batch, full: batch, threads: 0 }
+    }
+
+    /// GEMM thread count for a kernel of `flops`/`rows` under this
+    /// shard's cap.
+    fn gemm_threads(&self, flops: usize, rows: usize) -> usize {
+        ops::plan_threads_capped(flops, rows, self.threads)
+    }
+}
+
+/// One layer's per-worker mutable buffers (today: the conv im2col
+/// scratch — the patch matrix filled in forward, the patch-space
+/// gradient buffers used by backward). Allocated on a worker's first
+/// pass and reused afterwards; owned by a [`NetScratch`], never by the
+/// shared [`Network`].
+#[derive(Default)]
+pub struct LayerScratch {
+    patches: Vec<f32>,
+    dpatch: Vec<f32>,
+    /// One filter's patch-space gradient (the NT product's destination).
+    dpj: Vec<f32>,
+}
+
+/// Per-worker mutable state for one pass over a [`Network`]: one
+/// [`LayerScratch`] per layer. Checked out of the network's pool
+/// (so steady-state steps don't reallocate) and returned after the
+/// pass.
+pub struct NetScratch {
+    layers: Vec<LayerScratch>,
+}
+
+impl NetScratch {
+    fn new(n_layers: usize) -> NetScratch {
+        NetScratch { layers: (0..n_layers).map(|_| LayerScratch::default()).collect() }
+    }
+}
+
+/// A weight layer's deferred gradient work: the shard's GEMM operands
+/// plus the DW/DB epilogues captured at their site positions during the
+/// worker's backward pass. The driver concatenates the shards' operands
+/// back into full-batch tensors and hands them to
+/// [`Layer::reduce_grads`] — the cross-shard summation inside the
+/// dw/db contractions then happens in one kernel call with the serial
+/// association, which is what keeps f32 reduction bits independent of
+/// the worker count.
+pub struct Deferred {
+    /// The layer's left GEMM operand (dense/head: the cached input
+    /// `[rows, I]`; conv: the im2col patch matrix `[rows·H·W, plen]`,
+    /// or the raw `[rows, H, W, C]` input under `conv_direct`).
+    x: Tensor,
+    /// The routed, DZ-quantized gradient (`[slabs, rows·width]` flat).
+    dz: Tensor,
+    /// Maxout filter count (`1` for the head).
+    slabs: usize,
+    /// Per-batch-row width of one `dz` slab row block.
+    width: usize,
+    epi_dw: QuantEpilogue,
+    epi_db: QuantEpilogue,
+}
+
+/// The per-pass dropout context. Masks are pre-drawn for the full batch
+/// by the driver (in forward graph order, from the single [`Dropout`]
+/// stream — identical draws to the serial step); each worker slices its
+/// shard's rows out of the shared masks.
 pub struct DropCtx<'a> {
-    dropout: Option<&'a mut Dropout>,
+    masks: Option<&'a [Option<Vec<f32>>]>,
+    next: usize,
 }
 
 impl<'a> DropCtx<'a> {
-    /// Evaluation context: no masks, no RNG draws.
+    /// Evaluation context: no masks.
     pub fn eval() -> DropCtx<'static> {
-        DropCtx { dropout: None }
+        DropCtx { masks: None, next: 0 }
     }
 
-    /// Training context over the step's dropout state (if any).
-    pub fn train(dropout: Option<&'a mut Dropout>) -> DropCtx<'a> {
-        DropCtx { dropout }
+    /// Training context over the step's pre-drawn full-batch masks
+    /// (`None` = dropout off).
+    pub fn train(masks: Option<&'a [Option<Vec<f32>>]>) -> DropCtx<'a> {
+        DropCtx { masks, next: 0 }
     }
 
-    fn mask(&mut self, n: usize, role: DropoutRole) -> Option<Vec<f32>> {
-        let d = self.dropout.as_mut()?;
-        let rate = match role {
-            DropoutRole::Input => d.input_rate,
-            DropoutRole::Hidden => d.hidden_rate,
-        };
-        dropout_mask(&mut d.rng, n, rate)
+    /// This worker's rows of the next mask in graph order. `n` is the
+    /// *shard* element count of the signal being masked.
+    fn next_mask(&mut self, n: usize, sh: &ShardCtx) -> Option<Vec<f32>> {
+        let all = self.masks?;
+        let idx = self.next;
+        // advance past the slot even when this mask is off (rate 0)
+        self.next += 1;
+        let m = all[idx].as_ref()?;
+        let per = n / sh.rows;
+        Some(m[sh.start * per..(sh.start + sh.rows) * per].to_vec())
     }
 }
 
@@ -165,8 +290,10 @@ pub struct UpdateHp {
 /// layer-major group table. Every quantization site a layer touches
 /// registers against the shared [`GoldenQ`] in a fixed visit order — see
 /// the module docs for the three orderings the implementations must
-/// preserve.
-pub trait Layer {
+/// preserve. Layers are `Send + Sync`: all per-pass mutable state lives
+/// in the caller's [`LayerScratch`], and the packed-weight caches
+/// serialize internally.
+pub trait Layer: Send + Sync {
     /// Human-readable description for diagnostics.
     fn describe(&self) -> String;
 
@@ -181,6 +308,13 @@ pub trait Layer {
         0
     }
 
+    /// The dropout role of a [`DropoutLayer`] (`None` for everything
+    /// else) — what the driver walks to pre-draw the step's masks in
+    /// forward graph order.
+    fn dropout_role(&self) -> Option<DropoutRole> {
+        None
+    }
+
     /// Output signal shape given the input signal shape — the
     /// shape-aware contract [`Network::from_topology_shaped`] chains
     /// through the whole graph at construction time. Errors are config
@@ -188,31 +322,59 @@ pub trait Layer {
     /// pooling below one pixel).
     fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape>;
 
-    /// Consume the layer input, produce its output plus whatever the
-    /// backward pass needs. Quantization sites register against `q` in
-    /// visit order.
+    /// Consume the layer input (the shard's rows), produce its output
+    /// plus whatever the backward pass needs. Quantization sites
+    /// register against `q` in visit order, with epilogue bases offset
+    /// by the shard's start row so shard sweeps reproduce the serial
+    /// whole-batch sweeps bit-for-bit.
     fn forward(
         &self,
         q: &mut GoldenQ,
         params: &[Tensor],
         x: Tensor,
+        sh: &ShardCtx,
+        scratch: &mut LayerScratch,
         drop: &mut DropCtx,
     ) -> (Tensor, Cache);
 
     /// Consume the gradient w.r.t. this layer's output; produce the
-    /// parameter gradients (manifest order) and, when `dx_group` is
-    /// `Some(row)`, the gradient w.r.t. the layer input quantized under
-    /// `(row, DH)` — the *lower* compute layer's DH group, matching the
-    /// monolith's (and L2's) attribution. `dx_group = None` means no
-    /// consumer below needs `dx`.
+    /// layer's [`Deferred`] gradient work (`None` for parameterless
+    /// layers) and, when `dx_group` is `Some(row)`, the gradient w.r.t.
+    /// the layer input quantized under `(row, DH)` — the *lower*
+    /// compute layer's DH group, matching the monolith's (and L2's)
+    /// attribution. `dx_group = None` means no consumer below needs
+    /// `dx`. Parameter gradients are NOT computed here: the DW/DB
+    /// epilogues are drawn at their site positions and carried in the
+    /// `Deferred` for the driver's central [`Layer::reduce_grads`].
     fn backward(
         &self,
         q: &mut GoldenQ,
         params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         dy: Tensor,
         dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>);
+        sh: &ShardCtx,
+        scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>);
+
+    /// Compute this layer's parameter gradients (manifest order) from
+    /// the reassembled full-batch operands and the worker-captured
+    /// DW/DB epilogues. Runs once per step on the driver, after the
+    /// workers join — the cross-shard f32 summation happens inside one
+    /// kernel call, so its association (and bits) match the serial
+    /// step exactly.
+    fn reduce_grads(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        dz: Tensor,
+        epi_dw: QuantEpilogue,
+        epi_db: QuantEpilogue,
+    ) -> Vec<Tensor> {
+        let _ = (q, params, x, dz, epi_dw, epi_db);
+        unreachable!("{}: layer defers no gradients", self.describe())
+    }
 
     /// SGD + momentum + max-norm + storage quantization over this
     /// layer's parameter run. Default: no parameters, nothing to do.
@@ -301,13 +463,15 @@ pub struct MaxoutDense {
     /// This layer's row in the layer-major group table.
     pub group: usize,
     /// Per-filter packed weight slabs for the integer-domain forward
-    /// (one slab per maxout filter), invalidated by `sgd_update`.
-    packs: RefCell<PackedCache>,
+    /// (one slab per maxout filter), invalidated by `sgd_update`. The
+    /// mutex only guards `ensure` — callers keep the returned `Arc`,
+    /// so concurrent workers share one build and no lock spans a GEMM.
+    packs: Mutex<PackedCache>,
 }
 
 impl MaxoutDense {
     pub fn new(units: usize, k: usize, group: usize) -> MaxoutDense {
-        MaxoutDense { units, k, group, packs: RefCell::new(PackedCache::new()) }
+        MaxoutDense { units, k, group, packs: Mutex::new(PackedCache::new()) }
     }
 }
 
@@ -338,61 +502,69 @@ impl Layer for MaxoutDense {
         q: &mut GoldenQ,
         params: &[Tensor],
         x: Tensor,
+        sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
         _drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
         let (w, b) = (&params[0], &params[1]);
         let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-        let batch = x.shape()[0];
+        let rows = x.shape()[0];
         assert_eq!(x.shape()[1], d_in, "{}: input width", self.describe());
 
         // z for every filter, quantized as ONE logical site. Fused: each
-        // filter's [B, U] tile gets bias + quantization in its GEMM
-        // epilogue (base = the filter's offset in the [k, B, U] tensor).
-        // Two-pass: materialize all k tiles, then sweep the whole tensor.
-        // Identical per-element index stream → identical bits/counters.
-        let mut zq = Tensor::zeros(&[k, batch, units]);
+        // filter's [rows, U] tile gets bias + quantization in its GEMM
+        // epilogue (base = the filter tile's offset in the full-batch
+        // [k, B, U] tensor, so a shard reproduces the serial index
+        // stream). Two-pass: materialize all k tiles, then sweep each at
+        // the same bases. Identical per-element index stream → identical
+        // bits/counters.
+        let mut zq = Tensor::zeros(&[k, rows, units]);
         let epi = q.epilogue(self.group, KIND_Z);
         let mut zst = QuantStats::default();
         // integer domain: serve each filter's GEMM from the cached
-        // packed slab (built here on the first step after an update or
-        // scale move, or by a serve worker's prepack)
-        let mut packs = self.packs.borrow_mut();
+        // packed slab (built here on the first worker to arrive after an
+        // update or scale move, or by a serve worker's prepack)
         let cached = (q.fused && q.int_domain).then(|| {
-            packs.ensure(weight_step_bits(q.ctrl, self.group), k, |j| {
-                int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units])
-            })
+            self.packs.lock().expect("dense pack cache poisoned").ensure(
+                weight_step_bits(q.ctrl, self.group),
+                k,
+                |j| int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units]),
+            )
         });
+        let t = sh.gemm_threads(2 * rows * d_in * units, rows);
         for j in 0..k {
             let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
             let brow = &b.data()[j * units..(j + 1) * units];
-            let dst = &mut zq.data_mut()[j * batch * units..(j + 1) * batch * units];
+            let dst = &mut zq.data_mut()[j * rows * units..(j + 1) * rows * units];
             if let Some(c) = &cached {
-                zst.merge(ops::matmul_sl_qd_cached_into(
+                zst.merge(ops::matmul_sl_qd_cached_into_threads(
                     x.data(),
                     wj,
                     c[j].as_ref(),
                     Some(brow),
                     dst,
-                    batch,
+                    rows,
                     d_in,
                     units,
-                    epi.with_base((j * batch * units) as u64),
+                    epi.with_base(((j * sh.full + sh.start) * units) as u64),
+                    t,
                 ));
             } else if q.fused {
-                zst.merge(ops::matmul_sl_qd_into(
+                zst.merge(ops::matmul_sl_qd_into_threads(
                     x.data(),
                     wj,
                     Some(brow),
                     dst,
-                    batch,
+                    rows,
                     d_in,
                     units,
-                    epi.with_base((j * batch * units) as u64),
+                    epi.with_base(((j * sh.full + sh.start) * units) as u64),
+                    t,
                     q.int_domain,
                 ));
             } else {
-                let zj = ops::matmul_sl(x.data(), wj, batch, d_in, units);
-                for r in 0..batch {
+                let zj = ops::matmul_sl_threads(x.data(), wj, rows, d_in, units, t);
+                for r in 0..rows {
                     for u in 0..units {
                         dst[r * units + u] = zj[r * units + u] + brow[u];
                     }
@@ -400,13 +572,16 @@ impl Layer for MaxoutDense {
             }
         }
         if !q.fused {
-            zst = epi.run(zq.data_mut(), 0);
+            for j in 0..k {
+                let dst = &mut zq.data_mut()[j * rows * units..(j + 1) * rows * units];
+                zst.merge(epi.run(dst, ((j * sh.full + sh.start) * units) as u64));
+            }
         }
         q.record(self.group, KIND_Z, zst);
 
-        let mut h = Tensor::zeros(&[batch, units]);
-        let mut amax = vec![0u8; batch * units];
-        for r in 0..batch {
+        let mut h = Tensor::zeros(&[rows, units]);
+        let mut amax = vec![0u8; rows * units];
+        for r in 0..rows {
             for u in 0..units {
                 let (mut best, mut bj) = (f32::NEG_INFINITY, 0u8);
                 for j in 0..k {
@@ -420,7 +595,7 @@ impl Layer for MaxoutDense {
                 amax[r * units + u] = bj;
             }
         }
-        q.apply(&mut h, self.group, KIND_H, true);
+        q.apply_at(&mut h, self.group, KIND_H, true, (sh.start * units) as u64);
         (h, Cache::Maxout { x, amax })
     }
 
@@ -428,76 +603,108 @@ impl Layer for MaxoutDense {
         &self,
         q: &mut GoldenQ,
         params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         dy: Tensor,
         dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        sh: &ShardCtx,
+        scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Maxout { x, amax } = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
         let w = &params[0];
         let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-        let batch = x.shape()[0];
+        let rows = x.shape()[0];
 
-        // route dh to the winning filter, quantize (DZ group)
-        let mut dz = Tensor::zeros(&[k, batch, units]);
-        for r in 0..batch {
+        // route dh to the winning filter, quantize (DZ group) — per-slab
+        // sweeps at the slabs' full-batch bases (= one whole-tensor
+        // sweep in the serial shard)
+        let mut dz = Tensor::zeros(&[k, rows, units]);
+        for r in 0..rows {
             for u in 0..units {
                 let j = amax[r * units + u] as usize;
-                dz.data_mut()[(j * batch + r) * units + u] = dy.at2(r, u);
+                dz.data_mut()[(j * rows + r) * units + u] = dy.at2(r, u);
             }
         }
-        q.apply(&mut dz, self.group, KIND_DZ, true);
+        let epi_dz = q.epilogue(self.group, KIND_DZ);
+        let mut dzst = QuantStats::default();
+        for j in 0..k {
+            let dst = &mut dz.data_mut()[j * rows * units..(j + 1) * rows * units];
+            dzst.merge(epi_dz.run(dst, ((j * sh.full + sh.start) * units) as u64));
+        }
+        q.record(self.group, KIND_DZ, dzst);
+
+        // DW/DB sites are drawn HERE (serial site order) but run in
+        // reduce_grads over the reassembled full batch
+        let epi_dw = q.epilogue(self.group, KIND_DW);
+        let epi_db = q.epilogue(self.group, KIND_DB);
+
+        // dx: per-filter products summed across filters before the total
+        // is quantized as the lower layer's DH group
+        let dx = dx_group.map(|g| {
+            let mut dx = Tensor::zeros(&[rows, d_in]);
+            scratch.dpj.resize(rows * d_in, 0.0);
+            let t = sh.gemm_threads(2 * rows * units * d_in, rows);
+            for j in 0..k {
+                let dzj = &dz.data()[j * rows * units..(j + 1) * rows * units];
+                let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
+                ops::matmul_nt_sl_into_threads(dzj, wj, &mut scratch.dpj, rows, units, d_in, t);
+                for (a, &v) in dx.data_mut().iter_mut().zip(&scratch.dpj) {
+                    *a += v;
+                }
+            }
+            q.apply_at(&mut dx, g, KIND_DH, true, (sh.start * d_in) as u64);
+            dx
+        });
+        (Some(Deferred { x, dz, slabs: k, width: units, epi_dw, epi_db }), dx)
+    }
+
+    fn reduce_grads(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        dz: Tensor,
+        epi_dw: QuantEpilogue,
+        epi_db: QuantEpilogue,
+    ) -> Vec<Tensor> {
+        let w = &params[0];
+        let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let full = x.shape()[0];
 
         // dw for every filter, quantized as ONE logical site (like the z
-        // tiles in the forward pass). The dx contraction is NOT fused:
-        // its per-filter products are summed across filters before the
-        // total is quantized as the lower layer's DH group.
+        // tiles in the forward pass), over the full-batch operands
         let mut dw = Tensor::zeros(&[k, d_in, units]);
         let mut db = Tensor::zeros(&[k, units]);
-        let mut dx = Tensor::zeros(&[batch, d_in]);
-        let epi = q.epilogue(self.group, KIND_DW);
         let mut dwst = QuantStats::default();
         for j in 0..k {
-            // contiguous [batch, units] view of this filter's dz
-            let dzj = &dz.data()[j * batch * units..(j + 1) * batch * units];
+            let dzj = &dz.data()[j * full * units..(j + 1) * full * units];
             let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
             if q.fused {
                 dwst.merge(ops::matmul_tn_sl_qd_into(
                     x.data(),
                     dzj,
                     dwj_dst,
-                    batch,
+                    full,
                     d_in,
                     units,
-                    epi.with_base((j * d_in * units) as u64),
+                    epi_dw.with_base((j * d_in * units) as u64),
                     q.int_domain,
                 ));
             } else {
-                let dwj = ops::matmul_tn_sl(x.data(), dzj, batch, d_in, units);
+                let dwj = ops::matmul_tn_sl(x.data(), dzj, full, d_in, units);
                 dwj_dst.copy_from_slice(&dwj);
             }
-            let dbj = ops::sum_rows_sl(dzj, batch, units);
+            let dbj = ops::sum_rows_sl(dzj, full, units);
             db.data_mut()[j * units..(j + 1) * units].copy_from_slice(&dbj);
-            if dx_group.is_some() {
-                let wj = &w.data()[j * d_in * units..(j + 1) * d_in * units];
-                let dxj = ops::matmul_nt_sl(dzj, wj, batch, units, d_in);
-                for (a, &b) in dx.data_mut().iter_mut().zip(&dxj) {
-                    *a += b;
-                }
-            }
         }
         if !q.fused {
-            dwst = epi.run(dw.data_mut(), 0);
+            dwst = epi_dw.run(dw.data_mut(), 0);
         }
         q.record(self.group, KIND_DW, dwst);
-        q.apply(&mut db, self.group, KIND_DB, true);
-
-        let dx = dx_group.map(|g| {
-            q.apply(&mut dx, g, KIND_DH, true);
-            dx
-        });
-        (vec![dw, db], dx)
+        let dbst = epi_db.run(db.data_mut(), 0);
+        q.record(self.group, KIND_DB, dbst);
+        vec![dw, db]
     }
 
     fn sgd_update(
@@ -510,19 +717,21 @@ impl Layer for MaxoutDense {
     ) {
         dense_sgd_update(q, self.group, params, vels, grads, hp);
         // the weights changed: the next integer-domain forward re-packs
-        self.packs.borrow_mut().invalidate();
+        self.packs.lock().expect("dense pack cache poisoned").invalidate();
     }
 
     fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
         let w = &params[0];
         let (k, d_in, units) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-        self.packs.borrow_mut().ensure(weight_step_bits(ctrl, self.group), k, |j| {
-            int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units])
-        });
+        self.packs.lock().expect("dense pack cache poisoned").ensure(
+            weight_step_bits(ctrl, self.group),
+            k,
+            |j| int_gemm::pack(&w.data()[j * d_in * units..(j + 1) * d_in * units]),
+        );
     }
 
     fn pack_builds(&self) -> u64 {
-        self.packs.borrow().builds()
+        self.packs.lock().expect("dense pack cache poisoned").builds()
     }
 }
 
@@ -542,12 +751,12 @@ pub struct SoftmaxHead {
     pub group: usize,
     /// One packed slab of `w` serving both the forward NN product and
     /// the backward NT projection, invalidated by `sgd_update`.
-    packs: RefCell<PackedCache>,
+    packs: Mutex<PackedCache>,
 }
 
 impl SoftmaxHead {
     pub fn new(n_classes: usize, group: usize) -> SoftmaxHead {
-        SoftmaxHead { n_classes, group, packs: RefCell::new(PackedCache::new()) }
+        SoftmaxHead { n_classes, group, packs: Mutex::new(PackedCache::new()) }
     }
 }
 
@@ -578,46 +787,56 @@ impl Layer for SoftmaxHead {
         q: &mut GoldenQ,
         params: &[Tensor],
         x: Tensor,
+        sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
         _drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
         let (w, b) = (&params[0], &params[1]);
         let (units, classes) = (w.shape()[0], w.shape()[1]);
-        let batch = x.shape()[0];
+        let rows = x.shape()[0];
         assert_eq!(x.shape()[1], units, "{}: input width", self.describe());
 
-        let epi = q.epilogue(self.group, KIND_Z);
+        let epi = q.epilogue(self.group, KIND_Z).with_base((sh.start * classes) as u64);
+        let t = sh.gemm_threads(2 * rows * units * classes, rows);
         let z = if q.fused && q.int_domain {
-            let mut packs = self.packs.borrow_mut();
-            let c = packs
-                .ensure(weight_step_bits(q.ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
-            let (v, st) = ops::matmul_sl_qd_cached(
+            let c = self.packs.lock().expect("head pack cache poisoned").ensure(
+                weight_step_bits(q.ctrl, self.group),
+                1,
+                |_| int_gemm::pack(w.data()),
+            );
+            let mut v = vec![0.0f32; rows * classes];
+            let st = ops::matmul_sl_qd_cached_into_threads(
                 x.data(),
                 w.data(),
                 c[0].as_ref(),
                 Some(b.data()),
-                batch,
+                &mut v,
+                rows,
                 units,
                 classes,
                 epi,
+                t,
             );
             q.record(self.group, KIND_Z, st);
-            Tensor::from_vec(&[batch, classes], v)
+            Tensor::from_vec(&[rows, classes], v)
         } else if q.fused {
-            let (v, st) = ops::matmul_sl_qd(
+            let (v, st) = ops::matmul_sl_qd_threads(
                 x.data(),
                 w.data(),
                 Some(b.data()),
-                batch,
+                rows,
                 units,
                 classes,
                 epi,
+                t,
                 q.int_domain,
             );
             q.record(self.group, KIND_Z, st);
-            Tensor::from_vec(&[batch, classes], v)
+            Tensor::from_vec(&[rows, classes], v)
         } else {
-            let mut z = ops::matmul(&x, w);
-            for r in 0..batch {
+            let v = ops::matmul_sl_threads(x.data(), w.data(), rows, units, classes, t);
+            let mut z = Tensor::from_vec(&[rows, classes], v);
+            for r in 0..rows {
                 for c in 0..classes {
                     z.data_mut()[r * classes + c] += b.data()[c];
                 }
@@ -633,77 +852,112 @@ impl Layer for SoftmaxHead {
         &self,
         q: &mut GoldenQ,
         params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         mut dy: Tensor,
         dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Head { x } = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
         let w = &params[0];
         let (units, classes) = (w.shape()[0], w.shape()[1]);
-        let batch = x.shape()[0];
+        let rows = x.shape()[0];
 
         // dy arrives as the pre-quantized loss gradient (p - y)/B
-        q.apply(&mut dy, self.group, KIND_DZ, true);
+        q.apply_at(&mut dy, self.group, KIND_DZ, true, (sh.start * classes) as u64);
         let dz = dy;
 
-        let epi = q.epilogue(self.group, KIND_DW);
-        let dw = if q.fused {
-            let (v, st) =
-                ops::matmul_tn_sl_qd(x.data(), dz.data(), batch, units, classes, epi, q.int_domain);
-            q.record(self.group, KIND_DW, st);
-            Tensor::from_vec(&[units, classes], v)
-        } else {
-            let mut dw = ops::matmul_tn(x, &dz);
-            let st = epi.run(dw.data_mut(), 0);
-            q.record(self.group, KIND_DW, st);
-            dw
-        };
-        let mut db = ops::sum_rows(&dz);
-        q.apply(&mut db, self.group, KIND_DB, true);
+        // DW/DB sites drawn here, run centrally in reduce_grads
+        let epi_dw = q.epilogue(self.group, KIND_DW);
+        let epi_db = q.epilogue(self.group, KIND_DB);
 
         // dx quantized as the lower layer's DH group, fused into the NT
         // projection (the monolith's dh1 site, generalized)
         let dx = dx_group.map(|g| {
-            let epi = q.epilogue(g, KIND_DH);
+            let epi = q.epilogue(g, KIND_DH).with_base((sh.start * units) as u64);
+            let t = sh.gemm_threads(2 * rows * classes * units, rows);
             if q.fused && q.int_domain {
                 // the forward pass of this same step (or a worker's
                 // prepack) already built the slab: this ensure is a hit
-                let mut packs = self.packs.borrow_mut();
-                let c = packs
-                    .ensure(weight_step_bits(q.ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
-                let (v, st) = ops::matmul_nt_sl_qd_cached(
+                let c = self.packs.lock().expect("head pack cache poisoned").ensure(
+                    weight_step_bits(q.ctrl, self.group),
+                    1,
+                    |_| int_gemm::pack(w.data()),
+                );
+                let (v, st) = ops::matmul_nt_sl_qd_cached_threads(
                     dz.data(),
                     w.data(),
                     c[0].as_ref(),
-                    batch,
+                    rows,
                     classes,
                     units,
                     epi,
+                    t,
                 );
                 q.record(g, KIND_DH, st);
-                Tensor::from_vec(&[batch, units], v)
+                Tensor::from_vec(&[rows, units], v)
             } else if q.fused {
-                let (v, st) = ops::matmul_nt_sl_qd(
+                let (v, st) = ops::matmul_nt_sl_qd_threads(
                     dz.data(),
                     w.data(),
-                    batch,
+                    rows,
                     classes,
                     units,
                     epi,
+                    t,
                     q.int_domain,
                 );
                 q.record(g, KIND_DH, st);
-                Tensor::from_vec(&[batch, units], v)
+                Tensor::from_vec(&[rows, units], v)
             } else {
-                let mut dx = ops::matmul_nt(&dz, w);
+                let v = ops::matmul_nt_sl_threads(dz.data(), w.data(), rows, classes, units, t);
+                let mut dx = Tensor::from_vec(&[rows, units], v);
                 let st = epi.run(dx.data_mut(), 0);
                 q.record(g, KIND_DH, st);
                 dx
             }
         });
-        (vec![dw, db], dx)
+        (Some(Deferred { x, dz, slabs: 1, width: classes, epi_dw, epi_db }), dx)
+    }
+
+    fn reduce_grads(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        dz: Tensor,
+        epi_dw: QuantEpilogue,
+        epi_db: QuantEpilogue,
+    ) -> Vec<Tensor> {
+        let w = &params[0];
+        let (units, classes) = (w.shape()[0], w.shape()[1]);
+        let full = x.shape()[0];
+        let dz = dz.reshape(&[full, classes]);
+
+        let dw = if q.fused {
+            let (v, st) = ops::matmul_tn_sl_qd(
+                x.data(),
+                dz.data(),
+                full,
+                units,
+                classes,
+                epi_dw,
+                q.int_domain,
+            );
+            q.record(self.group, KIND_DW, st);
+            Tensor::from_vec(&[units, classes], v)
+        } else {
+            let mut dw = ops::matmul_tn(&x, &dz);
+            let st = epi_dw.run(dw.data_mut(), 0);
+            q.record(self.group, KIND_DW, st);
+            dw
+        };
+        let mut db = ops::sum_rows(&dz);
+        let dbst = epi_db.run(db.data_mut(), 0);
+        q.record(self.group, KIND_DB, dbst);
+        vec![dw, db]
     }
 
     fn sgd_update(
@@ -716,18 +970,20 @@ impl Layer for SoftmaxHead {
     ) {
         dense_sgd_update(q, self.group, params, vels, grads, hp);
         // the weights changed: the next integer-domain forward re-packs
-        self.packs.borrow_mut().invalidate();
+        self.packs.lock().expect("head pack cache poisoned").invalidate();
     }
 
     fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
         let w = &params[0];
-        self.packs
-            .borrow_mut()
-            .ensure(weight_step_bits(ctrl, self.group), 1, |_| int_gemm::pack(w.data()));
+        self.packs.lock().expect("head pack cache poisoned").ensure(
+            weight_step_bits(ctrl, self.group),
+            1,
+            |_| int_gemm::pack(w.data()),
+        );
     }
 
     fn pack_builds(&self) -> u64 {
-        self.packs.borrow().builds()
+        self.packs.lock().expect("head pack cache poisoned").builds()
     }
 }
 
@@ -735,9 +991,10 @@ impl Layer for SoftmaxHead {
 // DropoutLayer
 // ---------------------------------------------------------------------------
 
-/// Inverted dropout as a graph node: draws its mask from the step's
-/// shared [`Dropout`] stream in forward graph order, masks in place, and
-/// replays the mask over the gradient in backward. No quantization
+/// Inverted dropout as a graph node: slices its shard's rows out of the
+/// pre-drawn full-batch mask (drawn by the driver in forward graph
+/// order from the step's shared [`Dropout`] stream), masks in place,
+/// and replays the mask over the gradient in backward. No quantization
 /// sites, no parameters, identity in evaluation.
 pub struct DropoutLayer {
     pub role: DropoutRole,
@@ -765,6 +1022,10 @@ impl Layer for DropoutLayer {
         None
     }
 
+    fn dropout_role(&self) -> Option<DropoutRole> {
+        Some(self.role)
+    }
+
     fn out_shape(&self, in_shape: &Shape) -> crate::Result<Shape> {
         Ok(*in_shape)
     }
@@ -774,9 +1035,11 @@ impl Layer for DropoutLayer {
         _q: &mut GoldenQ,
         _params: &[Tensor],
         mut x: Tensor,
+        sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
         drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
-        let mask = drop.mask(x.len(), self.role);
+        let mask = drop.next_mask(x.len(), sh);
         apply_mask(&mut x, &mask);
         (x, Cache::Mask(mask))
     }
@@ -785,33 +1048,23 @@ impl Layer for DropoutLayer {
         &self,
         _q: &mut GoldenQ,
         _params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         mut dy: Tensor,
         _dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        _sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Mask(mask) = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
-        apply_mask(&mut dy, mask);
-        (Vec::new(), Some(dy))
+        apply_mask(&mut dy, &mask);
+        (None, Some(dy))
     }
 }
 
 // ---------------------------------------------------------------------------
 // MaxoutConv2d
 // ---------------------------------------------------------------------------
-
-/// Per-run scratch for a conv layer: the im2col patch matrix (filled in
-/// forward, read back by the same step's backward) and the summed
-/// patch-space gradient. Allocated on the first step of a run and
-/// reused afterwards — the buffers are the layer's, not the step's.
-#[derive(Default)]
-struct ConvScratch {
-    patches: Vec<f32>,
-    dpatch: Vec<f32>,
-    /// One filter's patch-space gradient (the NT product's destination).
-    dpj: Vec<f32>,
-}
 
 /// One maxout convolutional stage's *linear* half: SAME-padded stride-1
 /// conv per maxout filter, `z_j = im2col(x) @ w_j + b_j` (Z group, one
@@ -822,7 +1075,8 @@ struct ConvScratch {
 /// stage's `conv → Q_Z → max_k → pool → Q_H` order. Params:
 /// `w [k, ksize²·C_in, C_out]` (the im2col-lowered HWIO slab, so the
 /// rank-3 max-norm path constrains each output channel's true conv
-/// fan-in), `b [k, C_out]`.
+/// fan-in), `b [k, C_out]`. The im2col buffers live in the worker's
+/// [`LayerScratch`], not the layer — the layer itself is `Sync`.
 pub struct MaxoutConv2d {
     pub c_out: usize,
     pub k: usize,
@@ -830,22 +1084,14 @@ pub struct MaxoutConv2d {
     pub ksize: usize,
     /// This stage's row in the layer-major group table.
     pub group: usize,
-    scratch: RefCell<ConvScratch>,
     /// Per-filter packed weight slabs for the integer-domain im2col
     /// forward, invalidated by `sgd_update`.
-    packs: RefCell<PackedCache>,
+    packs: Mutex<PackedCache>,
 }
 
 impl MaxoutConv2d {
     pub fn new(c_out: usize, k: usize, ksize: usize, group: usize) -> MaxoutConv2d {
-        MaxoutConv2d {
-            c_out,
-            k,
-            ksize,
-            group,
-            scratch: RefCell::new(ConvScratch::default()),
-            packs: RefCell::new(PackedCache::new()),
-        }
+        MaxoutConv2d { c_out, k, ksize, group, packs: Mutex::new(PackedCache::new()) }
     }
 
     /// Geometry for a concrete `[B, H, W, C]` input.
@@ -893,6 +1139,8 @@ impl Layer for MaxoutConv2d {
         q: &mut GoldenQ,
         params: &[Tensor],
         x: Tensor,
+        sh: &ShardCtx,
+        scratch: &mut LayerScratch,
         _drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
         let (w, b) = (&params[0], &params[1]);
@@ -901,13 +1149,17 @@ impl Layer for MaxoutConv2d {
         assert_eq!(k, self.k, "{}: filter count", self.describe());
         assert_eq!(plen, geom.patch_len(), "{}: patch length", self.describe());
         let rows = geom.rows(batch);
+        // shard offsets in geometry-row units: one batch row spans H·W
+        // spatial rows, so the full-batch epilogue bases scale with them
+        let full_rows = geom.rows(sh.full);
+        let start_rows = sh.start * geom.h * geom.w;
 
         // z for every filter, quantized as ONE logical site: each
         // filter's [rows, C_out] tile rides one fused GEMM over the
-        // shared patch matrix (base = the filter's offset in the
-        // [k, rows, C_out] tensor) — identical per-element index stream
-        // to one whole-tensor sweep, and bit-identical to the direct
-        // nested-loop reference (q.conv_direct).
+        // shared patch matrix (base = the filter tile's offset in the
+        // full-batch [k, rows, C_out] tensor) — identical per-element
+        // index stream to one whole-tensor sweep, and bit-identical to
+        // the direct nested-loop reference (q.conv_direct).
         let mut zq = Tensor::zeros(&[k, rows, c_out]);
         let epi = q.epilogue(self.group, KIND_Z);
         let mut zst = QuantStats::default();
@@ -923,28 +1175,29 @@ impl Layer for MaxoutConv2d {
                     dst,
                     batch,
                     &geom,
-                    epi.with_base((j * rows * c_out) as u64),
+                    epi.with_base(((j * full_rows + start_rows) * c_out) as u64),
                 ));
             }
         } else {
-            let mut scratch = self.scratch.borrow_mut();
             scratch.patches.resize(rows * plen, 0.0);
             conv::im2col_into(x.data(), batch, &geom, &mut scratch.patches);
             // integer domain: per-filter packed slabs, cached like the
             // dense layer's (the patch matrix re-packs every step — it
             // is input data; the weights are not)
-            let mut packs = self.packs.borrow_mut();
             let cached = (q.fused && q.int_domain).then(|| {
-                packs.ensure(weight_step_bits(q.ctrl, self.group), k, |j| {
-                    int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out])
-                })
+                self.packs.lock().expect("conv pack cache poisoned").ensure(
+                    weight_step_bits(q.ctrl, self.group),
+                    k,
+                    |j| int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out]),
+                )
             });
+            let t = sh.gemm_threads(2 * rows * plen * c_out, rows);
             for j in 0..k {
                 let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
                 let brow = &b.data()[j * c_out..(j + 1) * c_out];
                 let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
                 if let Some(c) = &cached {
-                    zst.merge(ops::matmul_sl_qd_cached_into(
+                    zst.merge(ops::matmul_sl_qd_cached_into_threads(
                         &scratch.patches,
                         wj,
                         c[j].as_ref(),
@@ -953,10 +1206,11 @@ impl Layer for MaxoutConv2d {
                         rows,
                         plen,
                         c_out,
-                        epi.with_base((j * rows * c_out) as u64),
+                        epi.with_base(((j * full_rows + start_rows) * c_out) as u64),
+                        t,
                     ));
                 } else if q.fused {
-                    zst.merge(ops::matmul_sl_qd_into(
+                    zst.merge(ops::matmul_sl_qd_into_threads(
                         &scratch.patches,
                         wj,
                         Some(brow),
@@ -964,11 +1218,12 @@ impl Layer for MaxoutConv2d {
                         rows,
                         plen,
                         c_out,
-                        epi.with_base((j * rows * c_out) as u64),
+                        epi.with_base(((j * full_rows + start_rows) * c_out) as u64),
+                        t,
                         q.int_domain,
                     ));
                 } else {
-                    let zj = ops::matmul_sl(&scratch.patches, wj, rows, plen, c_out);
+                    let zj = ops::matmul_sl_threads(&scratch.patches, wj, rows, plen, c_out, t);
                     for r in 0..rows {
                         for o in 0..c_out {
                             dst[r * c_out + o] = zj[r * c_out + o] + brow[o];
@@ -977,7 +1232,10 @@ impl Layer for MaxoutConv2d {
                 }
             }
             if !q.fused {
-                zst = epi.run(zq.data_mut(), 0);
+                for j in 0..k {
+                    let dst = &mut zq.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
+                    zst.merge(epi.run(dst, ((j * full_rows + start_rows) * c_out) as u64));
+                }
             }
         }
         q.record(self.group, KIND_Z, zst);
@@ -1007,17 +1265,21 @@ impl Layer for MaxoutConv2d {
         &self,
         q: &mut GoldenQ,
         params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         dy: Tensor,
         dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        sh: &ShardCtx,
+        scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Conv { x, amax } = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
         let w = &params[0];
-        let (batch, geom) = self.geom(x);
+        let (batch, geom) = self.geom(&x);
         let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
         let rows = geom.rows(batch);
+        let full_rows = geom.rows(sh.full);
+        let start_rows = sh.start * geom.h * geom.w;
         assert_eq!(dy.len(), rows * c_out, "{}: gradient size", self.describe());
 
         // route the (unpooled) gradient to the winning filter, quantize
@@ -1028,53 +1290,18 @@ impl Layer for MaxoutConv2d {
             let j = amax[i] as usize;
             dz.data_mut()[j * rows * c_out + i] = g;
         }
-        q.apply(&mut dz, self.group, KIND_DZ, true);
-
-        // dw for every filter, quantized as ONE logical site over the
-        // im2col patches (fused TN tiles, direct reference, or two-pass)
-        let mut dw = Tensor::zeros(&[k, plen, c_out]);
-        let mut db = Tensor::zeros(&[k, c_out]);
-        let epi = q.epilogue(self.group, KIND_DW);
-        let mut dwst = QuantStats::default();
-        let mut scratch = self.scratch.borrow_mut();
+        let epi_dz = q.epilogue(self.group, KIND_DZ);
+        let mut dzst = QuantStats::default();
         for j in 0..k {
-            let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
-            let dwj_dst = &mut dw.data_mut()[j * plen * c_out..(j + 1) * plen * c_out];
-            if q.conv_direct {
-                dwst.merge(conv::conv2d_dw_direct_q(
-                    x.data(),
-                    dzj,
-                    dwj_dst,
-                    batch,
-                    &geom,
-                    epi.with_base((j * plen * c_out) as u64),
-                ));
-            } else if q.fused {
-                // the forward pass of this same step filled the patches
-                debug_assert_eq!(scratch.patches.len(), rows * plen);
-                dwst.merge(ops::matmul_tn_sl_qd_into(
-                    &scratch.patches,
-                    dzj,
-                    dwj_dst,
-                    rows,
-                    plen,
-                    c_out,
-                    epi.with_base((j * plen * c_out) as u64),
-                    q.int_domain,
-                ));
-            } else {
-                debug_assert_eq!(scratch.patches.len(), rows * plen);
-                let dwj = ops::matmul_tn_sl(&scratch.patches, dzj, rows, plen, c_out);
-                dwj_dst.copy_from_slice(&dwj);
-            }
-            let dbj = ops::sum_rows_sl(dzj, rows, c_out);
-            db.data_mut()[j * c_out..(j + 1) * c_out].copy_from_slice(&dbj);
+            let dst = &mut dz.data_mut()[j * rows * c_out..(j + 1) * rows * c_out];
+            dzst.merge(epi_dz.run(dst, ((j * full_rows + start_rows) * c_out) as u64));
         }
-        if !q.conv_direct && !q.fused {
-            dwst = epi.run(dw.data_mut(), 0);
-        }
-        q.record(self.group, KIND_DW, dwst);
-        q.apply(&mut db, self.group, KIND_DB, true);
+        q.record(self.group, KIND_DZ, dzst);
+
+        // DW/DB sites drawn here, run centrally in reduce_grads over the
+        // reassembled full-batch patches (or raw input, conv_direct)
+        let epi_dw = q.epilogue(self.group, KIND_DW);
+        let epi_db = q.epilogue(self.group, KIND_DB);
 
         // dx: per-filter patch-space gradients summed across filters,
         // scattered back to image space, then the total quantized as the
@@ -1083,21 +1310,113 @@ impl Layer for MaxoutConv2d {
             scratch.dpatch.resize(rows * plen, 0.0);
             scratch.dpatch.fill(0.0);
             scratch.dpj.resize(rows * plen, 0.0);
-            let scratch = &mut *scratch;
+            let t = sh.gemm_threads(2 * rows * c_out * plen, rows);
             for j in 0..k {
                 let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
                 let wj = &w.data()[j * plen * c_out..(j + 1) * plen * c_out];
-                ops::matmul_nt_sl_into(dzj, wj, &mut scratch.dpj, rows, c_out, plen);
+                ops::matmul_nt_sl_into_threads(dzj, wj, &mut scratch.dpj, rows, c_out, plen, t);
                 for (a, &v) in scratch.dpatch.iter_mut().zip(&scratch.dpj) {
                     *a += v;
                 }
             }
             let mut dx = Tensor::zeros(&[batch, geom.h, geom.w, geom.c_in]);
             conv::col2im_add(&scratch.dpatch, batch, &geom, dx.data_mut());
-            q.apply(&mut dx, g, KIND_DH, true);
+            q.apply_at(
+                &mut dx,
+                g,
+                KIND_DH,
+                true,
+                (sh.start * geom.h * geom.w * geom.c_in) as u64,
+            );
             dx
         });
-        (vec![dw, db], dx)
+
+        // ship the dw operand: the forward-filled patch matrix (moved
+        // out — next step's forward refills it), or the raw input under
+        // conv_direct
+        let xop = if q.conv_direct {
+            x
+        } else {
+            debug_assert_eq!(scratch.patches.len(), rows * plen);
+            Tensor::from_vec(&[rows, plen], mem::take(&mut scratch.patches))
+        };
+        (
+            Some(Deferred {
+                x: xop,
+                dz,
+                slabs: k,
+                width: geom.h * geom.w * c_out,
+                epi_dw,
+                epi_db,
+            }),
+            dx,
+        )
+    }
+
+    fn reduce_grads(
+        &self,
+        q: &mut GoldenQ,
+        params: &[Tensor],
+        x: Tensor,
+        dz: Tensor,
+        epi_dw: QuantEpilogue,
+        epi_db: QuantEpilogue,
+    ) -> Vec<Tensor> {
+        let w = &params[0];
+        let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let mut dw = Tensor::zeros(&[k, plen, c_out]);
+        let mut db = Tensor::zeros(&[k, c_out]);
+        let mut dwst = QuantStats::default();
+        if q.conv_direct {
+            // x is the reassembled raw [B, H, W, C] input
+            let (batch, geom) = self.geom(&x);
+            let rows = geom.rows(batch);
+            for j in 0..k {
+                let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
+                let dwj_dst = &mut dw.data_mut()[j * plen * c_out..(j + 1) * plen * c_out];
+                dwst.merge(conv::conv2d_dw_direct_q(
+                    x.data(),
+                    dzj,
+                    dwj_dst,
+                    batch,
+                    &geom,
+                    epi_dw.with_base((j * plen * c_out) as u64),
+                ));
+                let dbj = ops::sum_rows_sl(dzj, rows, c_out);
+                db.data_mut()[j * c_out..(j + 1) * c_out].copy_from_slice(&dbj);
+            }
+        } else {
+            // x is the reassembled [rows, plen] patch matrix
+            let rows = x.shape()[0];
+            for j in 0..k {
+                let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
+                let dwj_dst = &mut dw.data_mut()[j * plen * c_out..(j + 1) * plen * c_out];
+                if q.fused {
+                    dwst.merge(ops::matmul_tn_sl_qd_into(
+                        x.data(),
+                        dzj,
+                        dwj_dst,
+                        rows,
+                        plen,
+                        c_out,
+                        epi_dw.with_base((j * plen * c_out) as u64),
+                        q.int_domain,
+                    ));
+                } else {
+                    let dwj = ops::matmul_tn_sl(x.data(), dzj, rows, plen, c_out);
+                    dwj_dst.copy_from_slice(&dwj);
+                }
+                let dbj = ops::sum_rows_sl(dzj, rows, c_out);
+                db.data_mut()[j * c_out..(j + 1) * c_out].copy_from_slice(&dbj);
+            }
+            if !q.fused {
+                dwst = epi_dw.run(dw.data_mut(), 0);
+            }
+        }
+        q.record(self.group, KIND_DW, dwst);
+        let dbst = epi_db.run(db.data_mut(), 0);
+        q.record(self.group, KIND_DB, dbst);
+        vec![dw, db]
     }
 
     fn sgd_update(
@@ -1112,19 +1431,21 @@ impl Layer for MaxoutConv2d {
         // the shared rule (incl. the rank-3 max-norm) applies verbatim
         dense_sgd_update(q, self.group, params, vels, grads, hp);
         // the weights changed: the next integer-domain forward re-packs
-        self.packs.borrow_mut().invalidate();
+        self.packs.lock().expect("conv pack cache poisoned").invalidate();
     }
 
     fn prepack(&self, ctrl: &ScaleController, params: &[Tensor]) {
         let w = &params[0];
         let (k, plen, c_out) = (w.shape()[0], w.shape()[1], w.shape()[2]);
-        self.packs.borrow_mut().ensure(weight_step_bits(ctrl, self.group), k, |j| {
-            int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out])
-        });
+        self.packs.lock().expect("conv pack cache poisoned").ensure(
+            weight_step_bits(ctrl, self.group),
+            k,
+            |j| int_gemm::pack(&w.data()[j * plen * c_out..(j + 1) * plen * c_out]),
+        );
     }
 
     fn pack_builds(&self) -> u64 {
-        self.packs.borrow().builds()
+        self.packs.lock().expect("conv pack cache poisoned").builds()
     }
 }
 
@@ -1174,6 +1495,8 @@ impl Layer for MaxPool2d {
         q: &mut GoldenQ,
         _params: &[Tensor],
         x: Tensor,
+        sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
         _drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
         let s = x.shape();
@@ -1206,7 +1529,7 @@ impl Layer for MaxPool2d {
                 }
             }
         }
-        q.apply(&mut out, self.group, KIND_H, true);
+        q.apply_at(&mut out, self.group, KIND_H, true, (sh.start * ph * pw * c) as u64);
         (out, Cache::Pool { in_shape: s.to_vec(), idx })
     }
 
@@ -1214,20 +1537,22 @@ impl Layer for MaxPool2d {
         &self,
         _q: &mut GoldenQ,
         _params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         dy: Tensor,
         _dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        _sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Pool { in_shape, idx } = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
         // scatter to the winning positions; windows never overlap, so
         // each input cell receives at most one contribution
-        let mut dx = Tensor::zeros(in_shape);
+        let mut dx = Tensor::zeros(&in_shape);
         for (i, &src) in idx.iter().enumerate() {
             dx.data_mut()[src as usize] += dy.data()[i];
         }
-        (Vec::new(), Some(dx))
+        (None, Some(dx))
     }
 }
 
@@ -1259,6 +1584,8 @@ impl Layer for Flatten {
         _q: &mut GoldenQ,
         _params: &[Tensor],
         x: Tensor,
+        _sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
         _drop: &mut DropCtx,
     ) -> (Tensor, Cache) {
         let in_shape = x.shape().to_vec();
@@ -1270,14 +1597,16 @@ impl Layer for Flatten {
         &self,
         _q: &mut GoldenQ,
         _params: &[Tensor],
-        cache: &Cache,
+        cache: Cache,
         dy: Tensor,
         _dx_group: Option<usize>,
-    ) -> (Vec<Tensor>, Option<Tensor>) {
+        _sh: &ShardCtx,
+        _scratch: &mut LayerScratch,
+    ) -> (Option<Deferred>, Option<Tensor>) {
         let Cache::Flat { in_shape } = cache else {
             unreachable!("{}: wrong cache variant", self.describe())
         };
-        (Vec::new(), Some(dy.reshape(in_shape)))
+        (None, Some(dy.reshape(&in_shape)))
     }
 }
 
@@ -1285,10 +1614,85 @@ impl Layer for Flatten {
 // Network
 // ---------------------------------------------------------------------------
 
+/// Contiguous `(start, rows)` batch slices for `n` workers: the first
+/// `batch % n` shards take one extra row, so uneven tails stay
+/// deterministic and order-preserving.
+fn shard_ranges(batch: usize, n: usize) -> Vec<(usize, usize)> {
+    let (base, extra) = (batch / n, batch % n);
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let rows = base + usize::from(i < extra);
+        out.push((start, rows));
+        start += rows;
+    }
+    out
+}
+
+/// Copy one shard's rows out of a batch-major tensor (any rank).
+fn shard_rows(x: &Tensor, start: usize, rows: usize) -> Tensor {
+    let per: usize = x.shape()[1..].iter().product();
+    let mut dims = x.shape().to_vec();
+    dims[0] = rows;
+    Tensor::from_vec(&dims, x.data()[start * per..(start + rows) * per].to_vec())
+}
+
+/// Reassemble one layer's shard [`Deferred`]s (in shard order) into the
+/// full-batch dw/db operands: `x` concatenates batch-major; `dz`
+/// interleaves per maxout slab, each shard block landing at its serial
+/// position `(slab · full + shard_start) · width`. Returns worker 0's
+/// captured epilogues — every worker drew the identical site, so any
+/// worker's copy is THE serial epilogue.
+fn assemble_deferred(mut parts: Vec<Deferred>) -> (Tensor, Tensor, QuantEpilogue, QuantEpilogue) {
+    let (slabs, width) = (parts[0].slabs, parts[0].width);
+    if parts.len() == 1 {
+        let d = parts.pop().expect("one part");
+        let rows = d.dz.len() / (slabs * width);
+        return (d.x, d.dz.reshape(&[slabs, rows, width]), d.epi_dw, d.epi_db);
+    }
+    let (epi_dw, epi_db) = (parts[0].epi_dw, parts[0].epi_db);
+    let full: usize = parts.iter().map(|d| d.dz.len() / (slabs * width)).sum();
+
+    let mut x_dims = parts[0].x.shape().to_vec();
+    x_dims[0] = parts.iter().map(|d| d.x.shape()[0]).sum();
+    let mut xd = Vec::with_capacity(x_dims.iter().product());
+    for d in &parts {
+        xd.extend_from_slice(d.x.data());
+    }
+    let x = Tensor::from_vec(&x_dims, xd);
+
+    let mut dz = Tensor::zeros(&[slabs, full, width]);
+    let mut start = 0;
+    for d in &parts {
+        let rows = d.dz.len() / (slabs * width);
+        for j in 0..slabs {
+            let src = &d.dz.data()[j * rows * width..(j + 1) * rows * width];
+            let at = (j * full + start) * width;
+            dz.data_mut()[at..at + rows * width].copy_from_slice(src);
+        }
+        start += rows;
+    }
+    (x, dz, epi_dw, epi_db)
+}
+
+/// One data-parallel worker's results, handed back to the driver.
+struct WorkerOut {
+    /// The shard's `log_softmax` rows (the driver sums the f64 loss
+    /// centrally, in shard order — the serial association).
+    logp: Tensor,
+    /// Per layer position: the deferred dw/db work (`None` for
+    /// parameterless layers).
+    deferred: Vec<Option<Deferred>>,
+    stats: Vec<QuantStats>,
+    site: u64,
+    scratch: NetScratch,
+}
+
 /// A maxout network assembled from [`Layer`]s, driving one train/eval
 /// step over the manifest-ordered flat parameter vector. Built from a
 /// [`TopologySpec`] (+ the dataset's signal [`Shape`]) or, for the
-/// legacy call sites, from an [`MlpShape`].
+/// legacy call sites, from an [`MlpShape`]. Holds shared state only
+/// (`Sync`): per-pass buffers live in pooled [`NetScratch`]es.
 pub struct Network {
     layers: Vec<Box<dyn Layer>>,
     /// Per layer: (offset, count) into the flat manifest-order params.
@@ -1297,6 +1701,9 @@ pub struct Network {
     /// The signal shape the network consumes (dataset-derived).
     in_shape: Shape,
     n_classes: usize,
+    /// Reusable per-worker scratch: checked out per pass, returned
+    /// after, grown lazily to the high-water worker count.
+    scratch_pool: Mutex<Vec<NetScratch>>,
 }
 
 impl Network {
@@ -1355,7 +1762,14 @@ impl Network {
             param_ranges.push((offset, l.n_params()));
             offset += l.n_params();
         }
-        Ok(Network { layers, param_ranges, n_group_rows: row, in_shape, n_classes })
+        Ok(Network {
+            layers,
+            param_ranges,
+            n_group_rows: row,
+            in_shape,
+            n_classes,
+            scratch_pool: Mutex::new(Vec::new()),
+        })
     }
 
     /// Realize an MLP topology against a flat input width (the legacy
@@ -1426,39 +1840,111 @@ impl Network {
         self.layers[..pos].iter().rev().find_map(|l| l.group_row())
     }
 
-    /// Pre-pack every weight layer's integer-GEMM operands against the
-    /// controller's adopted scales. Serve workers call this once at
-    /// startup so steady-state requests never re-pack static weights;
-    /// training never needs it (forward builds lazily). Idempotent: a
-    /// second call with the same params + scales is a cache hit.
-    pub fn prepack_int_operands(&self, params: &Params, ctrl: &ScaleController) {
-        assert_eq!(
-            ctrl.n_groups(),
-            self.n_groups(),
-            "scale controller group count must be Network::n_groups()"
-        );
-        assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
-        for (li, layer) in self.layers.iter().enumerate() {
-            let (o, n) = self.param_ranges[li];
-            layer.prepack(ctrl, &params[o..o + n]);
-        }
+    fn take_scratch(&self) -> NetScratch {
+        self.scratch_pool
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_else(|| NetScratch::new(self.layers.len()))
     }
 
-    /// Total packed-cache rebuild events across the graph's weight
-    /// layers since construction. This is the pollution-free counter
-    /// the cache-invalidation tests assert on: one build per weight
-    /// layer per train step (or per scale adoption), exactly one per
-    /// layer for a serve worker's lifetime — never one per GEMM. (The
-    /// process-global [`int_gemm::pack_calls`] counter is only
-    /// meaningful as a delta in single-threaded benches.)
-    pub fn weight_pack_builds(&self) -> u64 {
-        self.layers.iter().map(|l| l.pack_builds()).sum()
+    fn return_scratch(&self, s: NetScratch) {
+        self.scratch_pool.lock().expect("scratch pool poisoned").push(s);
+    }
+
+    /// Pre-draw every dropout mask for the full batch in forward graph
+    /// order — the exact draw sequence the serial step used to make
+    /// inline, so sharding cannot perturb the mask stream.
+    fn predraw_masks(&self, d: &mut Dropout, batch: usize) -> Vec<Option<Vec<f32>>> {
+        let mut masks = Vec::new();
+        let mut shape = self.in_shape;
+        for l in &self.layers {
+            if let Some(role) = l.dropout_role() {
+                let rate = match role {
+                    DropoutRole::Input => d.input_rate,
+                    DropoutRole::Hidden => d.hidden_rate,
+                };
+                masks.push(dropout_mask(&mut d.rng, batch * shape.len(), rate));
+            }
+            shape = l.out_shape(&shape).expect("shape contract validated at construction");
+        }
+        masks
+    }
+
+    /// One worker's forward + backward routing over its shard: returns
+    /// the shard's `log_softmax` rows and the per-layer deferred dw/db
+    /// work. The serial step IS this function over the full batch —
+    /// one code path, any worker count.
+    fn run_shard(
+        &self,
+        q: &mut GoldenQ,
+        params: &Params,
+        x: Tensor,
+        y: &Tensor,
+        sh: &ShardCtx,
+        scratch: &mut NetScratch,
+        masks: Option<&[Option<Vec<f32>>]>,
+    ) -> (Tensor, Vec<Option<Deferred>>) {
+        let classes = self.n_classes;
+        let mut dctx = DropCtx::train(masks);
+
+        // ---- forward ----
+        let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
+        let mut h = x;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[li];
+            let (out, cache) =
+                layer.forward(q, &params[o..o + n], h, sh, &mut scratch.layers[li], &mut dctx);
+            caches.push(cache);
+            h = out;
+        }
+        let logp = ops::log_softmax(&h);
+
+        // ---- backward ----
+        // loss gradient dz = (p - y)/B over the shard's rows, divided by
+        // the FULL batch; the f64 loss is summed centrally by the driver
+        let mut dz = Tensor::zeros(&[sh.rows, classes]);
+        for (i, v) in dz.data_mut().iter_mut().enumerate() {
+            *v = (logp.data()[i].exp() - y.data()[sh.start * classes + i]) / sh.full as f32;
+        }
+        let mut deferred: Vec<Option<Deferred>> = Vec::with_capacity(self.layers.len());
+        deferred.resize_with(self.layers.len(), || None);
+        let mut dy = dz;
+        for pos in (0..self.layers.len()).rev() {
+            let layer = &self.layers[pos];
+            let (o, n) = self.param_ranges[pos];
+            let cache = caches.pop().expect("one cache per layer");
+            if layer.group_row().is_some() {
+                let dx_group = self.group_row_below(pos);
+                let (d, dx) = layer.backward(
+                    q,
+                    &params[o..o + n],
+                    cache,
+                    dy,
+                    dx_group,
+                    sh,
+                    &mut scratch.layers[pos],
+                );
+                deferred[pos] = d;
+                match dx {
+                    Some(d) => dy = d,
+                    // bottom compute layer: nothing below consumes dx
+                    None => break,
+                }
+            } else {
+                let (d, dx) =
+                    layer.backward(q, &[], cache, dy, None, sh, &mut scratch.layers[pos]);
+                debug_assert!(d.is_none());
+                dy = dx.expect("stateless layers pass their gradient through");
+            }
+        }
+        (logp, deferred)
     }
 
     /// One full train step over the graph. Bit-identical to the
-    /// monolithic reference on the builtin topology (see module docs);
+    /// monolithic reference on the builtin topology (see module docs)
+    /// and bit-identical at any `opts.dp_workers` (`tests/dp_parity.rs`);
     /// mutates params/vels in place.
-    #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
         params: &mut Params,
@@ -1484,80 +1970,156 @@ impl Network {
         if opts.mode == RoundMode::Stochastic {
             // true stochastic rounding draws one uniform sample per
             // element from counter-based per-site streams (index-keyed,
-            // so the fused and two-pass paths sample identically)
+            // so fused/two-pass paths AND batch shards sample identically)
             q.stochastic_seed = Some(STOCHASTIC_SITE_SEED);
         }
         let batch = x.shape()[0];
         let classes = self.n_classes;
-        let mut dctx = DropCtx::train(opts.dropout.as_mut());
+        let masks = opts.dropout.as_mut().map(|d| self.predraw_masks(d, batch));
+        let masks_ref = masks.as_deref();
 
-        // ---- forward ----
-        let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
-        // one input copy buys by-value tensor flow through the whole
-        // graph (layers move activations into their caches); negligible
-        // next to the layer GEMMs — the `graph train step` bench rows
-        // track this dispatch overhead against the monolith
-        let mut h = x.clone();
-        for (li, layer) in self.layers.iter().enumerate() {
-            let (o, n) = self.param_ranges[li];
-            let (out, cache) = layer.forward(&mut q, &params[o..o + n], h, &mut dctx);
-            caches.push(cache);
-            h = out;
-        }
-        let z = h;
-        let logp = ops::log_softmax(&z);
+        let n = opts.dp_workers.max(1).min(batch);
+        let ranges = shard_ranges(batch, n);
+        let mut outs: Vec<WorkerOut> = if n == 1 {
+            // serial = the degenerate 1-shard schedule, same code path
+            let sh = ShardCtx::serial(batch);
+            let mut wq = q.fork();
+            let mut scratch = self.take_scratch();
+            let (logp, deferred) =
+                self.run_shard(&mut wq, params, x.clone(), y, &sh, &mut scratch, masks_ref);
+            let (stats, site) = wq.into_parts();
+            vec![WorkerOut { logp, deferred, stats, site, scratch }]
+        } else {
+            // split the process thread budget so N workers' GEMMs don't
+            // oversubscribe N-fold (thread count never changes bits)
+            let cap = (ops::max_threads() / n).max(1);
+            let jobs: Vec<(ShardCtx, Tensor, NetScratch, GoldenQ)> = ranges
+                .iter()
+                .map(|&(start, rows)| {
+                    (
+                        ShardCtx { start, rows, full: batch, threads: cap },
+                        shard_rows(x, start, rows),
+                        self.take_scratch(),
+                        q.fork(),
+                    )
+                })
+                .collect();
+            let net = &*self;
+            let params_ro: &Params = &*params;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = jobs
+                    .into_iter()
+                    .map(|(sh, xs, mut scratch, mut wq)| {
+                        s.spawn(move || {
+                            let (logp, deferred) = net.run_shard(
+                                &mut wq, params_ro, xs, y, &sh, &mut scratch, masks_ref,
+                            );
+                            let (stats, site) = wq.into_parts();
+                            WorkerOut { logp, deferred, stats, site, scratch }
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("dp worker panicked")).collect()
+            })
+        };
+
+        // ---- loss: ONE running f64 accumulator over the shards' logp
+        // rows in shard (= serial row) order — the serial association
         let mut loss = 0.0f64;
-        for i in 0..batch * classes {
-            loss -= (y.data()[i] * logp.data()[i]) as f64;
+        for (out, &(start, _)) in outs.iter().zip(&ranges) {
+            for (i, &lp) in out.logp.data().iter().enumerate() {
+                loss -= (y.data()[start * classes + i] * lp) as f64;
+            }
         }
         let loss = (loss / batch as f64) as f32;
 
-        // ---- backward ----
-        // loss gradient dz = (p - y)/B, handed to the head pre-quantized
-        let mut dz = Tensor::zeros(&[batch, classes]);
-        for i in 0..batch * classes {
-            dz.data_mut()[i] = (logp.data()[i].exp() - y.data()[i]) / batch as f32;
-        }
+        // ---- stats: fixed binary-tree merge, then adopt the shared
+        // end-site so the update sweeps number exactly as in serial
+        let site = outs[0].site;
+        debug_assert!(
+            outs.iter().all(|o| o.site == site),
+            "dp workers must draw identical site sequences"
+        );
+        q.adopt(
+            merge_stats_tree(outs.iter_mut().map(|o| mem::take(&mut o.stats)).collect()),
+            site,
+        );
+
+        // ---- central dw/db: reassemble full-batch operands per layer,
+        // run the captured epilogues once — cross-shard f32 sums happen
+        // inside single kernel calls, so bits match serial at any N
         let mut grads: Vec<Vec<Tensor>> = Vec::with_capacity(self.layers.len());
         grads.resize_with(self.layers.len(), Vec::new);
-        let mut dy = dz;
         for pos in (0..self.layers.len()).rev() {
-            let layer = &self.layers[pos];
-            let (o, n) = self.param_ranges[pos];
-            if layer.group_row().is_some() {
-                let dx_group = self.group_row_below(pos);
-                let (g, dx) =
-                    layer.backward(&mut q, &params[o..o + n], &caches[pos], dy, dx_group);
-                grads[pos] = g;
-                match dx {
-                    Some(d) => dy = d,
-                    // bottom compute layer: nothing below consumes dx
-                    None => break,
-                }
-            } else {
-                let (_, dx) = layer.backward(&mut q, &[], &caches[pos], dy, None);
-                dy = dx.expect("stateless layers pass their gradient through");
+            let parts: Vec<Deferred> =
+                outs.iter_mut().filter_map(|o| o.deferred[pos].take()).collect();
+            if parts.is_empty() {
+                continue;
             }
+            debug_assert_eq!(parts.len(), outs.len(), "every worker defers the same layers");
+            let (xf, dzf, epi_dw, epi_db) = assemble_deferred(parts);
+            let (off, np) = self.param_ranges[pos];
+            grads[pos] = self.layers[pos].reduce_grads(
+                &mut q,
+                &params[off..off + np],
+                xf,
+                dzf,
+                epi_dw,
+                epi_db,
+            );
         }
 
         // ---- SGD + momentum + max-norm + storage quantization ----
         // (bottom-up = manifest parameter order, matching the monolith)
         let hp = UpdateHp { lr, mom, max_norm };
         for (pos, layer) in self.layers.iter().enumerate() {
-            let (o, n) = self.param_ranges[pos];
-            if n == 0 {
+            let (off, np) = self.param_ranges[pos];
+            if np == 0 {
                 continue;
             }
             layer.sgd_update(
                 &mut q,
-                &mut params[o..o + n],
-                &mut vels[o..o + n],
+                &mut params[off..off + np],
+                &mut vels[off..off + np],
                 &grads[pos],
                 &hp,
             );
         }
 
+        for o in outs {
+            self.return_scratch(o.scratch);
+        }
         GoldenOut { loss, overflow: q.stats_matrix() }
+    }
+
+    /// Pre-pack every weight layer's integer-GEMM operands against the
+    /// controller's adopted scales. Serve workers call this once at
+    /// startup so steady-state requests never re-pack static weights;
+    /// training never needs it (forward builds lazily). Idempotent: a
+    /// second call with the same params + scales is a cache hit.
+    pub fn prepack_int_operands(&self, params: &Params, ctrl: &ScaleController) {
+        assert_eq!(
+            ctrl.n_groups(),
+            self.n_groups(),
+            "scale controller group count must be Network::n_groups()"
+        );
+        assert_eq!(params.len(), self.n_params(), "params/topology mismatch");
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (o, n) = self.param_ranges[li];
+            layer.prepack(ctrl, &params[o..o + n]);
+        }
+    }
+
+    /// Total packed-cache rebuild events across the graph's weight
+    /// layers since construction. This is the pollution-free counter
+    /// the cache-invalidation tests assert on: one build per weight
+    /// layer per train step at ANY worker count (the Arc-sharing cache
+    /// serves every worker from the first build), exactly one per
+    /// layer for a serve worker's lifetime — never one per GEMM. (The
+    /// process-global [`int_gemm::pack_calls`] counter is only
+    /// meaningful as a delta in single-threaded benches.)
+    pub fn weight_pack_builds(&self) -> u64 {
+        self.layers.iter().map(|l| l.pack_builds()).sum()
     }
 
     /// Forward-only logits `[B, C]` (no dropout, no mutation),
@@ -1603,13 +2165,23 @@ impl Network {
         q.fused = opts.fused;
         q.conv_direct = opts.conv_direct;
         q.int_domain = opts.int_domain;
+        let sh = ShardCtx::serial(x.shape()[0]);
+        let mut scratch = self.take_scratch();
         let mut dctx = DropCtx::eval();
         let mut h = x.clone();
         for (li, layer) in self.layers.iter().enumerate() {
             let (o, n) = self.param_ranges[li];
-            let (out, _) = layer.forward(&mut q, &params[o..o + n], h, &mut dctx);
+            let (out, _) = layer.forward(
+                &mut q,
+                &params[o..o + n],
+                h,
+                &sh,
+                &mut scratch.layers[li],
+                &mut dctx,
+            );
             h = out;
         }
+        self.return_scratch(scratch);
         h
     }
 }
@@ -1755,14 +2327,76 @@ mod tests {
             &[1, 2, 2, 1],
             vec![1.0, 5.0, 2.0, 3.0], // window max is the 5 at (0, 1)
         );
+        let sh = ShardCtx::serial(1);
+        let mut scratch = LayerScratch::default();
         let mut drop = DropCtx::eval();
-        let (h, cache) = pool.forward(&mut q, &[], x, &mut drop);
+        let (h, cache) = pool.forward(&mut q, &[], x, &sh, &mut scratch, &mut drop);
         assert_eq!(h.shape(), &[1, 1, 1, 1]);
         assert_eq!(h.data(), &[5.0]);
         let dy = Tensor::from_vec(&[1, 1, 1, 1], vec![7.0]);
-        let (grads, dx) = pool.backward(&mut q, &[], &cache, dy, Some(0));
-        assert!(grads.is_empty());
+        let (d, dx) = pool.backward(&mut q, &[], cache, dy, Some(0), &sh, &mut scratch);
+        assert!(d.is_none());
         assert_eq!(dx.unwrap().data(), &[0.0, 7.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_uneven_batches() {
+        // the first batch % n shards absorb the remainder, one row each
+        assert_eq!(shard_ranges(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(shard_ranges(4, 4), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
+        assert_eq!(shard_ranges(5, 1), vec![(0, 5)]);
+        // ranges tile the batch exactly
+        for (batch, n) in [(10, 4), (7, 3), (16, 5)] {
+            let r = shard_ranges(batch, n);
+            assert_eq!(r.len(), n);
+            let mut at = 0;
+            for &(start, rows) in &r {
+                assert_eq!(start, at);
+                at += rows;
+            }
+            assert_eq!(at, batch);
+        }
+    }
+
+    #[test]
+    fn dp_train_step_matches_serial_bits() {
+        let spec = spec3();
+        let net = Network::from_topology(&spec, 12, 4);
+        let ctrl = ScaleController::fixed(
+            net.n_groups(),
+            FixedFormat::new(10, 3),
+            FixedFormat::new(12, 0),
+        );
+        let (p0, v0) = state(&spec, 12, 4, 3);
+        let n = 10; // uneven over 3 workers: shards of 4, 3, 3
+        let mut rng = Pcg32::seeded(9);
+        let x = Tensor::from_vec(&[n, 12], (0..n * 12).map(|_| rng.normal()).collect());
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4) as usize).collect();
+        let y = ops::one_hot(&labels, 4);
+        let run = |workers: usize| {
+            let (mut params, mut vels) = (p0.clone(), v0.clone());
+            let out = net.train_step(
+                &mut params,
+                &mut vels,
+                &x,
+                &y,
+                0.1,
+                0.5,
+                2.0,
+                &ctrl,
+                StepOptions { dp_workers: workers, ..Default::default() },
+            );
+            (out, params, vels)
+        };
+        let (o1, p1, vv1) = run(1);
+        let (o3, p3, vv3) = run(3);
+        assert_eq!(o1.loss.to_bits(), o3.loss.to_bits());
+        assert_eq!(o1.overflow.data(), o3.overflow.data());
+        for (a, b) in p1.iter().zip(&p3).chain(vv1.iter().zip(&vv3)) {
+            let ab: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
     }
 
     #[test]

@@ -53,8 +53,8 @@ pub mod graph;
 pub mod reference;
 
 pub use graph::{
-    Cache, DropCtx, DropoutLayer, DropoutRole, Flatten, Layer, MaxPool2d, MaxoutConv2d,
-    MaxoutDense, Network, SoftmaxHead, UpdateHp,
+    Cache, Deferred, DropCtx, DropoutLayer, DropoutRole, Flatten, Layer, LayerScratch, MaxPool2d,
+    MaxoutConv2d, MaxoutDense, NetScratch, Network, ShardCtx, SoftmaxHead, UpdateHp,
 };
 
 use std::sync::OnceLock;
@@ -97,6 +97,22 @@ pub fn fused_default() -> bool {
 pub fn int_gemm_default() -> bool {
     static INT_GEMM: OnceLock<bool> = OnceLock::new();
     *INT_GEMM.get_or_init(|| std::env::var("LPDNN_INT_GEMM").map(|v| v != "0").unwrap_or(false))
+}
+
+/// Default for [`StepOptions::dp_workers`]: `LPDNN_DP_WORKERS` when set
+/// (clamped to at least 1), else 1 (serial). Data-parallel sharding is
+/// bit-identical at any worker count (`tests/dp_parity.rs`), so this is
+/// purely a throughput knob — see [`Network::train_step`] and DESIGN.md
+/// §Data-parallel training.
+pub fn dp_workers_default() -> usize {
+    static DP: OnceLock<usize> = OnceLock::new();
+    *DP.get_or_init(|| {
+        std::env::var("LPDNN_DP_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(1)
+            .max(1)
+    })
 }
 
 /// 2-hidden-layer maxout MLP shape description — the legacy fixed-depth
@@ -165,6 +181,12 @@ pub struct StepOptions {
     /// operands, i32 accumulators) instead of simulated f32. Bit-identical
     /// either way (`tests/int_gemm_parity.rs`); see [`int_gemm_default`].
     pub int_domain: bool,
+    /// Data-parallel worker count: shard the batch across this many
+    /// workers, each running forward/backward on its shard, with
+    /// gradients reduced centrally and stats merged in a fixed tree
+    /// order. Bit-identical to 1-worker at any count
+    /// (`tests/dp_parity.rs`); see [`dp_workers_default`].
+    pub dp_workers: usize,
 }
 
 impl Default for StepOptions {
@@ -176,6 +198,7 @@ impl Default for StepOptions {
             fused: fused_default(),
             conv_direct: false,
             int_domain: int_gemm_default(),
+            dp_workers: dp_workers_default(),
         }
     }
 }
@@ -266,11 +289,58 @@ impl<'c> GoldenQ<'c> {
     /// Two-pass tensor quantization for the non-GEMM sites (H, DZ, DB,
     /// storage, and the multi-filter DH accumulation).
     fn apply(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool) {
+        self.apply_at(t, layer, kind, record, 0);
+    }
+
+    /// Like `apply`, but quantizing a shard whose elements start at
+    /// logical flat index `offset` of the full-batch tensor. Stochastic
+    /// rounding streams are keyed on the full-batch index, so a shard
+    /// sweep at its offset reproduces the serial whole-tensor sweep
+    /// bit-for-bit (the tiling-invariance contract of
+    /// [`crate::arith::QuantEpilogue`]).
+    fn apply_at(&mut self, t: &mut Tensor, layer: usize, kind: usize, record: bool, offset: u64) {
         let epi = self.epilogue(layer, kind);
-        let st = epi.run(t.data_mut(), 0);
+        let st = epi.run(t.data_mut(), offset);
         if record {
             self.record(layer, kind, st);
         }
+    }
+
+    /// A fresh context for a data-parallel worker: same controller,
+    /// modes and site position, zeroed stat accumulators. Every worker
+    /// replays the identical site sequence over its shard, so forked
+    /// epilogues are bit-identical across workers; the driver folds the
+    /// workers' stats back with [`merge_stats_tree`] + `adopt`.
+    fn fork(&self) -> GoldenQ<'c> {
+        GoldenQ {
+            ctrl: self.ctrl,
+            mode: self.mode,
+            half: self.half,
+            fused: self.fused,
+            conv_direct: self.conv_direct,
+            int_domain: self.int_domain,
+            stats: vec![QuantStats::default(); self.stats.len()],
+            stochastic_seed: self.stochastic_seed,
+            site: self.site,
+        }
+    }
+
+    /// Decompose a worker context into (per-group stats, end site) for
+    /// the reduction step.
+    fn into_parts(self) -> (Vec<QuantStats>, u64) {
+        (self.stats, self.site)
+    }
+
+    /// Fold tree-merged worker stats into this context and fast-forward
+    /// the site counter past the workers' shared site sequence, so the
+    /// sites that follow (the update sweeps) number exactly as in the
+    /// serial step.
+    fn adopt(&mut self, merged: Vec<QuantStats>, site: u64) {
+        debug_assert_eq!(merged.len(), self.stats.len());
+        for (g, st) in self.stats.iter_mut().zip(merged) {
+            g.merge(st);
+        }
+        self.site = site;
     }
 
     fn stats_matrix(&self) -> Tensor {
@@ -298,6 +368,31 @@ fn apply_mask(t: &mut Tensor, mask: &Option<Vec<f32>>) {
             *v *= s;
         }
     }
+}
+
+/// Reduce per-worker stat vectors (one [`QuantStats`] per group each)
+/// in a fixed binary-tree order: adjacent pairs merge level by level,
+/// an odd tail carries up unmerged. The counters are u64 sums, so any
+/// association yields the same totals (`tests/dp_parity.rs` asserts
+/// flat ≡ tree); the tree order is still pinned as the reduction
+/// contract so a future non-associative statistic cannot silently
+/// depend on the worker count.
+pub fn merge_stats_tree(mut levels: Vec<Vec<QuantStats>>) -> Vec<QuantStats> {
+    assert!(!levels.is_empty(), "merge_stats_tree: no worker stats");
+    while levels.len() > 1 {
+        let mut next = Vec::with_capacity((levels.len() + 1) / 2);
+        let mut it = levels.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (ga, gb) in a.iter_mut().zip(b) {
+                    ga.merge(gb);
+                }
+            }
+            next.push(a);
+        }
+        levels = next;
+    }
+    levels.pop().expect("merge tree always leaves one level")
 }
 
 /// One full golden train step with the canonical options (no dropout, no

@@ -14,8 +14,9 @@ use lpdnn::coordinator::{
 use lpdnn::data::{Batcher, Dataset};
 use lpdnn::error::Context;
 use lpdnn::runtime::{Backend, BackendSpec, Manifest};
-use lpdnn::serve::{serve_closed_loop, ServeOptions};
-use lpdnn::tensor::Pcg32;
+use lpdnn::coordinator::oversubscription_warning;
+use lpdnn::serve::{serve_closed_loop, serve_open_loop, ServeOptions};
+use lpdnn::tensor::{ops, Pcg32};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -111,10 +112,23 @@ fn config_from_args(args: &Args) -> lpdnn::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Cores the OS reports, or 0 when unknown (the warning stays quiet).
+fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+}
+
 fn cmd_train(args: &Args) -> lpdnn::Result<()> {
     let cfg = config_from_args(args)?;
     let loss_csv = args.get_opt("loss-csv");
     let save_path = args.get_opt("save");
+    // data-parallel training workers; unset defers to LPDNN_DP_WORKERS
+    // (bit-identical at any value — tests/dp_parity.rs)
+    let dp_workers = match args.get_opt("dp-workers") {
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|e| lpdnn::err!("--dp-workers {v}: {e}"))?)
+        }
+        None => None,
+    };
     let verbose = args.has("verbose");
     args.finish()?;
 
@@ -126,7 +140,21 @@ fn cmd_train(args: &Args) -> lpdnn::Result<()> {
         cli::preflight_writable("loss-csv", p)?;
     }
 
-    let mut session = Session::new(BackendSpec::new(cfg.backend));
+    let dp = dp_workers.unwrap_or_else(lpdnn::golden::dp_workers_default).max(1);
+    if let Some(w) = oversubscription_warning(
+        "--dp-workers",
+        dp,
+        "LPDNN_THREADS",
+        ops::max_threads(),
+        available_cores(),
+    ) {
+        eprintln!("{w}");
+    }
+    let mut spec = BackendSpec::new(cfg.backend);
+    if let Some(n) = dp_workers {
+        spec = spec.with_dp_workers(n);
+    }
+    let mut session = Session::new(spec);
     if verbose {
         session.add_observer(Arc::new(StderrProgress::new()));
     }
@@ -251,6 +279,8 @@ fn cmd_serve(args: &Args) -> lpdnn::Result<()> {
             args.get_parse("max-wait-us", d.max_wait.as_micros() as u64)?,
         ),
         queue_cap: args.get_parse("queue-cap", d.queue_cap)?,
+        open_rate: args.get_parse("open-rate", d.open_rate)?,
+        open_seed: args.get_parse("open-seed", d.open_seed)?,
         ..d
     };
     let bench_json = args.get("bench-json", "BENCH_serve.json");
@@ -266,21 +296,31 @@ fn cmd_serve(args: &Args) -> lpdnn::Result<()> {
     let root_rng = Pcg32::seeded(ckpt.seed);
     let dataset = Dataset::generate(&ckpt.dataset, ckpt.n_train, ckpt.n_test, &root_rng)?;
 
+    let load = if opts.open_rate > 0.0 {
+        format!("open_rate={}rps seed={}", opts.open_rate, opts.open_seed)
+    } else {
+        format!("concurrency={}", opts.concurrency)
+    };
     eprintln!(
-        "serving '{}': model={} arith={} requests={} concurrency={} workers={} \
+        "serving '{}': model={} arith={} requests={} {load} workers={} \
          max_batch={} max_wait={}us int_domain={}",
         ckpt.name,
         restored.spec.name,
         ckpt.arithmetic.label(),
         opts.requests,
-        opts.concurrency,
         opts.workers,
         opts.max_batch,
         opts.max_wait.as_micros(),
         opts.int_domain
     );
     let params = Arc::new(ckpt.params.clone());
-    let report = serve_closed_loop(&restored, params, &dataset.test, &opts)?;
+    let report = if opts.open_rate > 0.0 {
+        // open loop: seeded Poisson arrivals that do not wait for
+        // responses, so the percentiles include honest queueing delay
+        serve_open_loop(&restored, params, &dataset.test, &opts)?
+    } else {
+        serve_closed_loop(&restored, params, &dataset.test, &opts)?
+    };
 
     let table = report.table();
     table.print();
@@ -472,6 +512,15 @@ fn cmd_sweep(args: &Args) -> lpdnn::Result<()> {
     }
     let (baseline, points) = build_sweep(&base, &axis, points_flag.as_deref(), !explicit_steps)?;
 
+    if let Some(w) = oversubscription_warning(
+        "--jobs",
+        jobs,
+        "LPDNN_THREADS",
+        ops::max_threads(),
+        available_cores(),
+    ) {
+        eprintln!("{w}");
+    }
     let mut session = Session::new(BackendSpec::new(base.backend)).with_jobs(jobs);
     if verbose {
         session.add_observer(Arc::new(StderrProgress::new()));

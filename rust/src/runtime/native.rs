@@ -70,11 +70,22 @@ struct NativeRun {
 #[derive(Default)]
 pub struct NativeBackend {
     run: Option<NativeRun>,
+    /// Data-parallel workers per train step. `None` defers to
+    /// `LPDNN_DP_WORKERS` at step time (unset = serial). Any value
+    /// produces bit-identical training (`tests/dp_parity.rs`).
+    dp_workers: Option<usize>,
 }
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend { run: None }
+        NativeBackend::default()
+    }
+
+    /// Pin the data-parallel worker count (overrides
+    /// `LPDNN_DP_WORKERS`); purely a wall-clock knob, never a bits one.
+    pub fn with_dp_workers(mut self, n: usize) -> NativeBackend {
+        self.dp_workers = Some(n.max(1));
+        self
     }
 
     fn run_mut(&mut self) -> crate::Result<&mut NativeRun> {
@@ -168,6 +179,8 @@ impl Backend for NativeBackend {
         y: &Tensor,
         hp: &StepParams,
     ) -> crate::Result<StepOut> {
+        let dp_workers =
+            self.dp_workers.unwrap_or_else(crate::golden::dp_workers_default);
         let run = self.run_mut()?;
         let x = Self::shape_input(x, run.net.in_shape())?;
         let dropout = if hp.dropout_input > 0.0 || hp.dropout_hidden > 0.0 {
@@ -192,7 +205,7 @@ impl Backend for NativeBackend {
             // defaults: canonical half-away rounding, fused Z/DW/DX
             // epilogues unless LPDNN_FUSED=0, integer-domain GEMMs only
             // when LPDNN_INT_GEMM=1 (same bits every way)
-            StepOptions { half: run.half, dropout, ..Default::default() },
+            StepOptions { half: run.half, dropout, dp_workers, ..Default::default() },
         );
         Ok(StepOut { loss: out.loss, overflow: out.overflow })
     }

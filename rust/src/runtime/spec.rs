@@ -29,12 +29,17 @@ pub struct BackendSpec {
     /// [`Manifest::default_dir`](super::Manifest::default_dir)
     /// (`$LPDNN_ARTIFACTS` or `<crate root>/artifacts`).
     artifacts_dir: Option<PathBuf>,
+    /// Data-parallel worker count for the native backend's train steps
+    /// (`--dp-workers`). `None` defers to `LPDNN_DP_WORKERS` (unset =
+    /// 1); bit-identical at any value, so this is purely a wall-clock
+    /// knob. The PJRT backend ignores it.
+    dp_workers: Option<usize>,
 }
 
 impl BackendSpec {
     /// Spec for `kind` with default artifact resolution.
     pub fn new(kind: BackendKind) -> BackendSpec {
-        BackendSpec { kind, artifacts_dir: None }
+        BackendSpec { kind, artifacts_dir: None, dp_workers: None }
     }
 
     /// The self-contained pure-Rust backend (no artifacts needed).
@@ -54,6 +59,13 @@ impl BackendSpec {
         self
     }
 
+    /// Pin the native backend's data-parallel worker count (overrides
+    /// `LPDNN_DP_WORKERS`). Training bits are identical at any value.
+    pub fn with_dp_workers(mut self, n: usize) -> BackendSpec {
+        self.dp_workers = Some(n.max(1));
+        self
+    }
+
     pub fn kind(&self) -> BackendKind {
         self.kind
     }
@@ -68,7 +80,13 @@ impl BackendSpec {
     /// `--features pjrt`.
     pub fn create(&self) -> crate::Result<Box<dyn Backend>> {
         match self.kind {
-            BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+            BackendKind::Native => {
+                let mut be = NativeBackend::new();
+                if let Some(n) = self.dp_workers {
+                    be = be.with_dp_workers(n);
+                }
+                Ok(Box::new(be))
+            }
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => {
                 let dir = self
@@ -110,6 +128,15 @@ mod tests {
         // every create() call is an independent engine
         let again = spec.create().unwrap();
         assert_eq!(again.name(), "native");
+    }
+
+    #[test]
+    fn dp_workers_override_is_recorded_and_floored() {
+        let spec = BackendSpec::native().with_dp_workers(4);
+        assert_eq!(spec.dp_workers, Some(4));
+        // zero is nonsense; the builder floors it to serial
+        assert_eq!(BackendSpec::native().with_dp_workers(0).dp_workers, Some(1));
+        assert_eq!(BackendSpec::native().dp_workers, None);
     }
 
     #[test]

@@ -51,7 +51,7 @@ use crate::bench_support::Table;
 use crate::checkpoint::Restored;
 use crate::data::Split;
 use crate::golden::{fused_default, int_gemm_default, Network, Params, StepOptions};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Pcg32, Tensor};
 use crate::{bail, ensure};
 
 /// Serving/load-generator knobs (`lpdnn serve` flags).
@@ -73,6 +73,14 @@ pub struct ServeOptions {
     /// simulation come from the checkpoint's arithmetic).
     pub fused: bool,
     pub int_domain: bool,
+    /// Open-loop arrival rate in requests/sec ([`serve_open_loop`]);
+    /// `0.0` means closed-loop only. Closed-loop producers re-submit on
+    /// response, so their latency tail can never show a server falling
+    /// behind — Poisson arrivals keep submitting on schedule and expose
+    /// honest queueing delay in the percentiles.
+    pub open_rate: f64,
+    /// Seed for the Poisson arrival schedule (deterministic offsets).
+    pub open_seed: u64,
 }
 
 impl Default for ServeOptions {
@@ -86,6 +94,8 @@ impl Default for ServeOptions {
             queue_cap: 64,
             fused: fused_default(),
             int_domain: int_gemm_default(),
+            open_rate: 0.0,
+            open_seed: 1,
         }
     }
 }
@@ -294,7 +304,11 @@ impl ServeReport {
         let mut t = Table::new(&["metric", "value"]);
         let mut row = |k: &str, v: String| t.row(&[k.to_string(), v]);
         row("requests", self.responses.len().to_string());
-        row("concurrency", self.opts.concurrency.to_string());
+        if self.opts.open_rate > 0.0 {
+            row("open_rate_rps", format!("{:.1}", self.opts.open_rate));
+        } else {
+            row("concurrency", self.opts.concurrency.to_string());
+        }
         row("workers", self.opts.workers.to_string());
         row("max_batch", self.opts.max_batch.to_string());
         row("max_wait_us", self.opts.max_wait.as_micros().to_string());
@@ -325,22 +339,67 @@ pub fn eval_options(restored: &Restored, opts: &ServeOptions) -> StepOptions {
         fused: opts.fused,
         conv_direct: false,
         int_domain: opts.int_domain,
+        dp_workers: 1, // eval never shards; serve parallelism is its own pool
     }
 }
 
-/// Run the serve pipeline closed-loop against a restored checkpoint:
-/// `opts.requests` requests cycling through `split`'s examples, issued
-/// by `opts.concurrency` producers, batched and answered by
-/// `opts.workers` workers. Returns per-request responses plus latency /
-/// throughput / batch-fill measurements.
-pub fn serve_closed_loop(
+/// One inference worker's whole life: build a private [`Network`]
+/// (pre-packing integer operands when the integer domain is on), answer
+/// batches until the batch queue closes, and return this worker's
+/// packed-cache build count. Shared by the closed-loop and open-loop
+/// drivers — the load generator changes, the serving side does not.
+fn worker_loop(
     restored: &Restored,
-    params: Arc<Params>,
+    params: &Params,
+    step_opts: &StepOptions,
+    batch_q: &BoundedQueue<Vec<Request>>,
+    in_dims: &[usize],
+) -> u64 {
+    // restore() already validated the topology, so this only fails on
+    // resource exhaustion; panicking beats leaving producers parked on
+    // unfulfillable slots
+    let net =
+        Network::from_topology_shaped(&restored.spec, restored.in_shape, restored.n_classes)
+            .expect("serve worker: network construction");
+    if step_opts.int_domain {
+        // weights are static at inference time: pack every slab once
+        // per worker, here, so no request ever pays for packing
+        net.prepack_int_operands(params, &restored.ctrl);
+    }
+    let n_classes = restored.n_classes;
+    while let Some(batch) = batch_q.pop() {
+        let n = batch.len();
+        let mut dims = vec![n];
+        dims.extend_from_slice(in_dims);
+        let mut xdata = Vec::with_capacity(n * restored.in_shape.len());
+        for req in &batch {
+            xdata.extend_from_slice(&req.example);
+        }
+        let x = Tensor::from_vec(&dims, xdata);
+        let logits = net.eval_logits_opt(params, &x, &restored.ctrl, step_opts);
+        let preds = ops::argmax_rows(&logits);
+        for (i, req) in batch.into_iter().enumerate() {
+            req.slot.fulfill(Response {
+                id: req.id,
+                logits: logits.data()[i * n_classes..(i + 1) * n_classes].to_vec(),
+                pred: preds[i],
+                latency: req.submitted.elapsed(),
+            });
+        }
+    }
+    // read after the drain, so an (unwanted) steady-state re-pack shows
+    // up in the count, not just in the latency tail
+    net.weight_pack_builds()
+}
+
+/// Shared request-shape validation for both serve drivers.
+fn validate_serve(
+    restored: &Restored,
+    params: &Params,
     split: &Split,
     opts: &ServeOptions,
-) -> crate::Result<ServeReport> {
+) -> crate::Result<()> {
     ensure!(opts.requests > 0, "serve: --requests must be > 0");
-    ensure!(opts.concurrency > 0, "serve: --concurrency must be > 0");
     ensure!(opts.workers > 0, "serve: --workers must be > 0");
     ensure!(opts.max_batch > 0, "serve: --max-batch must be > 0");
     ensure!(!split.is_empty(), "serve: the example split is empty");
@@ -360,13 +419,28 @@ pub fn serve_closed_loop(
     // fail on the caller's thread if the topology cannot build (workers
     // would otherwise leave producers blocked on their slots)
     let _ = Network::from_topology_shaped(&restored.spec, restored.in_shape, restored.n_classes)?;
+    Ok(())
+}
+
+/// Run the serve pipeline closed-loop against a restored checkpoint:
+/// `opts.requests` requests cycling through `split`'s examples, issued
+/// by `opts.concurrency` producers, batched and answered by
+/// `opts.workers` workers. Returns per-request responses plus latency /
+/// throughput / batch-fill measurements.
+pub fn serve_closed_loop(
+    restored: &Restored,
+    params: Arc<Params>,
+    split: &Split,
+    opts: &ServeOptions,
+) -> crate::Result<ServeReport> {
+    ensure!(opts.concurrency > 0, "serve: --concurrency must be > 0");
+    validate_serve(restored, &params, split, opts)?;
 
     let step_opts = eval_options(restored, opts);
     let request_q: BoundedQueue<Request> = BoundedQueue::new(opts.queue_cap);
     let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
     let next_id = AtomicUsize::new(0);
     let weight_packs = AtomicU64::new(0);
-    let n_classes = restored.n_classes;
     let in_dims = restored.in_shape.dims();
 
     let t0 = Instant::now();
@@ -380,46 +454,9 @@ pub fn serve_closed_loop(
                 let in_dims = &in_dims;
                 let weight_packs = &weight_packs;
                 s.spawn(move || {
-                    // restore() already validated the topology, so this
-                    // only fails on resource exhaustion; panicking beats
-                    // leaving producers parked on unfulfillable slots
-                    let net = Network::from_topology_shaped(
-                        &restored.spec,
-                        restored.in_shape,
-                        restored.n_classes,
-                    )
-                    .expect("serve worker: network construction");
-                    if step_opts.int_domain {
-                        // weights are static at inference time: pack
-                        // every slab once per worker, here, so no
-                        // request ever pays for packing
-                        net.prepack_int_operands(&params, &restored.ctrl);
-                    }
-                    while let Some(batch) = batch_q.pop() {
-                        let n = batch.len();
-                        let mut dims = vec![n];
-                        dims.extend_from_slice(in_dims);
-                        let mut xdata = Vec::with_capacity(n * restored.in_shape.len());
-                        for req in &batch {
-                            xdata.extend_from_slice(&req.example);
-                        }
-                        let x = Tensor::from_vec(&dims, xdata);
-                        let logits = net.eval_logits_opt(&params, &x, &restored.ctrl, step_opts);
-                        let preds = ops::argmax_rows(&logits);
-                        for (i, req) in batch.into_iter().enumerate() {
-                            req.slot.fulfill(Response {
-                                id: req.id,
-                                logits: logits.data()[i * n_classes..(i + 1) * n_classes]
-                                    .to_vec(),
-                                pred: preds[i],
-                                latency: req.submitted.elapsed(),
-                            });
-                        }
-                    }
-                    // summed after the drain, so an (unwanted)
-                    // steady-state re-pack shows up in the count, not
-                    // just in the latency tail
-                    weight_packs.fetch_add(net.weight_pack_builds(), Ordering::Relaxed);
+                    let builds =
+                        worker_loop(restored, &params, step_opts, batch_q, in_dims);
+                    weight_packs.fetch_add(builds, Ordering::Relaxed);
                 })
             })
             .collect();
@@ -473,6 +510,144 @@ pub fn serve_closed_loop(
             responses.extend(h.join().expect("serve producer panicked"));
         }
         request_q.close();
+        let batch_sizes = batcher.join().expect("serve batcher panicked");
+        for h in worker_handles {
+            h.join().expect("serve worker panicked");
+        }
+        (responses, batch_sizes)
+    });
+    let wallclock = t0.elapsed();
+
+    responses.sort_by_key(|r| r.id);
+    if responses.len() != opts.requests {
+        bail!("serve: {} of {} requests were answered", responses.len(), opts.requests);
+    }
+    let errors = responses
+        .iter()
+        .filter(|r| r.pred != split.labels[r.id % split.len()])
+        .count();
+    Ok(ServeReport {
+        opts: opts.clone(),
+        wallclock,
+        responses,
+        batch_sizes,
+        errors,
+        weight_pack_builds: weight_packs.load(Ordering::Relaxed),
+    })
+}
+
+/// Cumulative Poisson arrival offsets: `n` inter-arrival gaps drawn
+/// i.i.d. exponential with mean `1/rate` from a seeded [`Pcg32`], summed
+/// into submit times relative to the run's start. Deterministic: the
+/// same `(rate, n, seed)` always yields the same schedule, so open-loop
+/// serve benches are reproducible modulo OS scheduling.
+pub fn poisson_schedule(rate: f64, n: usize, seed: u64) -> Vec<Duration> {
+    assert!(rate > 0.0 && rate.is_finite(), "poisson_schedule: rate must be positive");
+    let mut rng = Pcg32::seeded(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // inverse-CDF sample; 1 - u is in (0, 1] so ln() is finite
+            let u = rng.uniform() as f64;
+            t += -(1.0 - u).ln() / rate;
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Run the serve pipeline under **open-loop** Poisson load: one
+/// generator thread submits `opts.requests` requests at the seeded
+/// schedule's absolute times ([`poisson_schedule`] with
+/// `opts.open_rate` / `opts.open_seed`), *without* waiting for earlier
+/// responses. Unlike the closed loop — whose producers can never have
+/// more than `concurrency` requests in flight, so a saturated server
+/// just slows the arrival process down — open-loop arrivals keep
+/// coming on schedule, and the latency percentiles include the honest
+/// queueing delay of a server that falls behind.
+pub fn serve_open_loop(
+    restored: &Restored,
+    params: Arc<Params>,
+    split: &Split,
+    opts: &ServeOptions,
+) -> crate::Result<ServeReport> {
+    ensure!(
+        opts.open_rate > 0.0 && opts.open_rate.is_finite(),
+        "serve: --open-rate must be > 0 (requests/sec) for the open loop"
+    );
+    validate_serve(restored, &params, split, opts)?;
+    let schedule = poisson_schedule(opts.open_rate, opts.requests, opts.open_seed);
+
+    let step_opts = eval_options(restored, opts);
+    let request_q: BoundedQueue<Request> = BoundedQueue::new(opts.queue_cap);
+    let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
+    let weight_packs = AtomicU64::new(0);
+    let in_dims = restored.in_shape.dims();
+
+    let t0 = Instant::now();
+    let (mut responses, batch_sizes) = std::thread::scope(|s| {
+        let worker_handles: Vec<_> = (0..opts.workers)
+            .map(|_| {
+                let params = Arc::clone(&params);
+                let step_opts = &step_opts;
+                let batch_q = &batch_q;
+                let restored = &restored;
+                let in_dims = &in_dims;
+                let weight_packs = &weight_packs;
+                s.spawn(move || {
+                    let builds =
+                        worker_loop(restored, &params, step_opts, batch_q, in_dims);
+                    weight_packs.fetch_add(builds, Ordering::Relaxed);
+                })
+            })
+            .collect();
+
+        let batcher = s.spawn(|| {
+            let mut fills = Vec::new();
+            loop {
+                let batch = request_q.pop_batch(opts.max_batch, opts.max_wait);
+                if batch.is_empty() {
+                    break; // closed and drained
+                }
+                fills.push(batch.len());
+                if !batch_q.push(batch) {
+                    break;
+                }
+            }
+            batch_q.close();
+            fills
+        });
+
+        // the load generator: submit on the Poisson clock, collect
+        // every response slot, and only then wait on them — submission
+        // never blocks on a response, which is what "open loop" means
+        let generator = s.spawn(|| {
+            let mut slots = Vec::with_capacity(opts.requests);
+            for (id, due) in schedule.iter().enumerate() {
+                let due_at = t0 + *due;
+                let now = Instant::now();
+                if due_at > now {
+                    std::thread::sleep(due_at - now);
+                }
+                let slot = Arc::new(Slot::default());
+                // stamp BEFORE the (possibly blocking) push: time spent
+                // against a full request queue is queueing delay the
+                // percentiles must report
+                let accepted = request_q.push(Request {
+                    id,
+                    example: split.example(id % split.len()).to_vec(),
+                    submitted: Instant::now(),
+                    slot: Arc::clone(&slot),
+                });
+                if !accepted {
+                    break;
+                }
+                slots.push(slot);
+            }
+            request_q.close();
+            slots.into_iter().map(|sl| sl.wait()).collect::<Vec<_>>()
+        });
+
+        let responses = generator.join().expect("serve generator panicked");
         let batch_sizes = batcher.join().expect("serve batcher panicked");
         for h in worker_handles {
             h.join().expect("serve worker panicked");
@@ -626,6 +801,44 @@ mod tests {
         h.join().unwrap();
         assert_eq!(r.id, 7);
         assert_eq!(r.pred, 1);
+    }
+
+    #[test]
+    fn poisson_schedule_is_seed_deterministic_and_monotone() {
+        let a = poisson_schedule(500.0, 64, 42);
+        let b = poisson_schedule(500.0, 64, 42);
+        assert_eq!(a, b, "same (rate, n, seed) must give the same schedule");
+        let c = poisson_schedule(500.0, 64, 43);
+        assert_ne!(a, c, "a different seed must give a different schedule");
+        assert_eq!(a.len(), 64);
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "arrival offsets must be strictly increasing");
+        }
+        // mean inter-arrival ~ 1/rate: 64 exponential draws at 500 rps
+        // land well within [16ms, 1s] total with overwhelming margin
+        let total = a.last().unwrap().as_secs_f64();
+        assert!(total > 0.016 && total < 1.0, "total {total}s at 500 rps");
+    }
+
+    #[test]
+    fn open_loop_report_table_carries_the_rate() {
+        let opts = ServeOptions { requests: 1, open_rate: 250.0, ..Default::default() };
+        let report = ServeReport {
+            opts,
+            wallclock: Duration::from_millis(4),
+            responses: vec![Response {
+                id: 0,
+                logits: vec![0.0, 1.0],
+                pred: 1,
+                latency: Duration::from_millis(2),
+            }],
+            batch_sizes: vec![1],
+            errors: 0,
+            weight_pack_builds: 0,
+        };
+        let json = report.table().to_json().to_string_pretty();
+        assert!(json.contains("open_rate_rps"), "{json}");
+        assert!(!json.contains("\"concurrency\""), "{json}");
     }
 
     #[test]

@@ -50,6 +50,7 @@
 //! process-wide so benches and tests can measure packs avoided.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Maximum worst-case absolute sum for an eligible site: `2^24`, the f32
 /// mantissa limit. Below it both the i32 and the simulated-f32
@@ -360,7 +361,12 @@ pub struct PackedCache {
     epoch: u64,
     /// The `(epoch, scale_bits)` the current slabs were built under.
     key: Option<(u64, u32)>,
-    slabs: Vec<Option<Packed>>,
+    /// Shared so concurrent readers (data-parallel training workers)
+    /// can hold the slab set across a whole GEMM loop without pinning
+    /// the cache's lock: [`PackedCache::ensure`] hands out a clone of
+    /// this `Arc` and the owner only swaps in a *new* vector on rebuild,
+    /// never mutates one in place.
+    slabs: Arc<Vec<Option<Packed>>>,
     builds: u64,
 }
 
@@ -385,20 +391,24 @@ impl PackedCache {
 
     /// Return the packed slabs for the current `(epoch, scale_bits)`
     /// key, rebuilding all `n_slabs` via `build(j)` on a key miss.
+    ///
+    /// Returns a shared handle rather than a borrow so a caller holding
+    /// the cache behind a `Mutex` (the layer graph, once data-parallel
+    /// workers share one `Network`) can drop the guard immediately and
+    /// keep using the slabs while other workers hit the same cache.
     pub fn ensure(
         &mut self,
         scale_bits: u32,
         n_slabs: usize,
         mut build: impl FnMut(usize) -> Option<Packed>,
-    ) -> &[Option<Packed>] {
+    ) -> Arc<Vec<Option<Packed>>> {
         let key = (self.epoch, scale_bits);
         if self.key != Some(key) || self.slabs.len() != n_slabs {
-            self.slabs.clear();
-            self.slabs.extend((0..n_slabs).map(&mut build));
+            self.slabs = Arc::new((0..n_slabs).map(&mut build).collect());
             self.key = Some(key);
             self.builds += 1;
         }
-        &self.slabs
+        Arc::clone(&self.slabs)
     }
 }
 

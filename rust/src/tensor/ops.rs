@@ -73,6 +73,22 @@ fn plan_threads(flops: usize, rows: usize) -> usize {
     }
 }
 
+/// The env-driven auto plan with an additional caller-side cap, for
+/// callers that are themselves one of several concurrent workers (the
+/// data-parallel training shards): `cap = 0` keeps the exact auto plan,
+/// otherwise the plan is clamped to `cap` so N workers × their GEMM
+/// threads stay inside the machine. Threading splits output rows only,
+/// so any cap is a pure perf choice — results are bit-identical at
+/// every thread count.
+pub fn plan_threads_capped(flops: usize, rows: usize, cap: usize) -> usize {
+    let t = plan_threads(flops, rows);
+    if cap == 0 {
+        t
+    } else {
+        t.min(cap).max(1)
+    }
+}
+
 /// K-dimension block size for the serial kernels: one `[KC, n]` panel of
 /// `b` stays resident in L1/L2 while all rows stream over it.
 const KC: usize = 128;

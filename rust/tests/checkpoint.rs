@@ -93,6 +93,7 @@ fn eval_opts(half: bool, int_domain: bool) -> StepOptions {
         fused: true,
         conv_direct: false,
         int_domain,
+        ..Default::default()
     }
 }
 

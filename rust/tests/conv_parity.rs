@@ -223,6 +223,7 @@ fn conv_network_step_direct_equals_im2col_bitwise() {
                                 dropout: None,
                                 fused,
                                 conv_direct,
+                                ..Default::default()
                             },
                         );
                         trace.push((out.loss.to_bits(), bits(out.overflow.data())));

@@ -1,0 +1,290 @@
+//! Data-parallel parity: the acceptance gate for `--dp-workers` /
+//! `LPDNN_DP_WORKERS`.
+//!
+//! The sharded step's contract is that the worker count is a pure
+//! throughput knob — it must never change a bit. For every worker count
+//! N ∈ {1, 2, 3, 4} (including uneven shard tails), [`Network::train_step`]
+//! has to produce exactly the 1-worker step's `f32::to_bits` loss, the
+//! exact `QuantStats` overflow matrix, and u32-bit-identical parameters
+//! and velocities, across:
+//!
+//! * fixed and float32/float16 arithmetics,
+//! * deterministic and stochastic rounding (the per-site counter-based
+//!   streams are keyed on full-batch element indices, so shard
+//!   boundaries are invisible to them),
+//! * simulated and integer-domain fused GEMMs (`int_domain`),
+//! * dropout on and off (masks are pre-drawn full-batch by the driver),
+//! * the maxout-MLP and conv topologies.
+//!
+//! On top of single-step parity, a dynamic-scaling run proves the whole
+//! control loop is worker-count-invariant: merged overflow counters feed
+//! [`ScaleController::after_batch`], so the scale-move decision log and
+//! final per-group formats at N=4 replay N=1 exactly. A property test
+//! pins the reduction itself: the fixed binary-tree merge of worker
+//! stats equals a flat left fold for any worker count and any counters.
+
+use lpdnn::arith::{FixedFormat, QuantStats, RoundMode};
+use lpdnn::coordinator::ScaleController;
+use lpdnn::golden::{merge_stats_tree, Dropout, Network, StepOptions};
+use lpdnn::tensor::{Pcg32, Tensor};
+use lpdnn::testing::{
+    forall, mlp_batch, mlp_state, spatial_batch, tiny_conv_spec, tiny_mlp, topology_state,
+    TINY_CONV_CLASSES, TINY_CONV_SHAPE,
+};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Step-trace of a short training run: per-step (loss bits, overflow
+/// bits) plus the final parameter and velocity bits.
+type Trace = (Vec<(u32, Vec<u32>)>, Vec<Vec<u32>>, Vec<Vec<u32>>);
+
+fn run_steps(
+    net: &Network,
+    state: impl Fn() -> (lpdnn::golden::Params, lpdnn::golden::Params),
+    x: &Tensor,
+    y: &Tensor,
+    ctrl: &ScaleController,
+    opts: impl Fn() -> StepOptions,
+    steps: usize,
+) -> Trace {
+    let (mut params, mut vels) = state();
+    let mut trace = Vec::new();
+    for _ in 0..steps {
+        let out = net.train_step(&mut params, &mut vels, x, y, 0.1, 0.5, 2.0, ctrl, opts());
+        trace.push((out.loss.to_bits(), bits(out.overflow.data())));
+    }
+    let p = params.iter().map(|t| bits(t.data())).collect();
+    let v = vels.iter().map(|t| bits(t.data())).collect();
+    (trace, p, v)
+}
+
+fn assert_traces_equal(tag: &str, got: &Trace, want: &Trace) {
+    assert_eq!(got.0, want.0, "{tag}: loss/overflow trace diverged");
+    for (i, (a, b)) in got.1.iter().zip(&want.1).enumerate() {
+        assert_eq!(a, b, "{tag}: param {i} bits diverged");
+    }
+    for (i, (a, b)) in got.2.iter().zip(&want.2).enumerate() {
+        assert_eq!(a, b, "{tag}: vel {i} bits diverged");
+    }
+}
+
+/// Batch 10 over N=3 shards as 4+3+3 and N=4 as 3+3+2+2 — the uneven
+/// tails are the cases a row-count bug would corrupt first.
+const UNEVEN_BATCH: usize = 10;
+
+/// Worker counts beyond the batch clamp to the batch, so N=16 on a
+/// 10-row batch is also legal (and must also be bit-identical).
+const WORKER_COUNTS: [usize; 4] = [2, 3, 4, 16];
+
+#[test]
+fn mlp_dp_steps_bit_identical_across_worker_counts() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    let cases: Vec<(&str, ScaleController, bool)> = vec![
+        (
+            "fixed 10.3/12.0",
+            ScaleController::fixed(
+                net.n_groups(),
+                FixedFormat::new(10, 3),
+                FixedFormat::new(12, 0),
+            ),
+            false,
+        ),
+        (
+            "float32",
+            ScaleController::fixed(net.n_groups(), FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            false,
+        ),
+        (
+            "float16",
+            ScaleController::fixed(net.n_groups(), FixedFormat::FLOAT32, FixedFormat::FLOAT32),
+            true,
+        ),
+    ];
+    let (x, y) = mlp_batch(s, UNEVEN_BATCH, 0xD9A1);
+    for (label, ctrl, half) in &cases {
+        for mode in [RoundMode::HalfAway, RoundMode::Stochastic] {
+            for int_domain in [false, true] {
+                let opts = |dp: usize| {
+                    move || StepOptions {
+                        mode,
+                        half: *half,
+                        dropout: None,
+                        fused: true,
+                        int_domain,
+                        dp_workers: dp,
+                        ..Default::default()
+                    }
+                };
+                let serial = run_steps(&net, || mlp_state(s, 0x5EED), &x, &y, ctrl, opts(1), 3);
+                for n in WORKER_COUNTS {
+                    let dp = run_steps(&net, || mlp_state(s, 0x5EED), &x, &y, ctrl, opts(n), 3);
+                    let tag =
+                        format!("mlp {label} {mode:?} int_domain={int_domain} dp_workers={n}");
+                    assert_traces_equal(&tag, &dp, &serial);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_dp_steps_bit_identical_across_worker_counts() {
+    let spec = tiny_conv_spec();
+    let net = Network::from_topology_shaped(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES).unwrap();
+    let ctrl =
+        ScaleController::fixed(net.n_groups(), FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    // batch 6: N=4 shards as 2+2+1+1, so single-row conv shards run too
+    let (x, y) = spatial_batch(TINY_CONV_SHAPE, 6, TINY_CONV_CLASSES, 0xC0DE);
+    let state = || topology_state(&spec, TINY_CONV_SHAPE, TINY_CONV_CLASSES, 0xF00D);
+    for mode in [RoundMode::HalfAway, RoundMode::Stochastic] {
+        for int_domain in [false, true] {
+            let opts = |dp: usize| {
+                move || StepOptions {
+                    mode,
+                    int_domain,
+                    dp_workers: dp,
+                    ..Default::default()
+                }
+            };
+            let serial = run_steps(&net, state, &x, &y, &ctrl, opts(1), 2);
+            for n in [2, 3, 4] {
+                let dp = run_steps(&net, state, &x, &y, &ctrl, opts(n), 2);
+                let tag = format!("conv {mode:?} int_domain={int_domain} dp_workers={n}");
+                assert_traces_equal(&tag, &dp, &serial);
+            }
+        }
+    }
+}
+
+/// Dropout masks are pre-drawn full-batch by the driver (graph order,
+/// one RNG stream), so sharding must not perturb the draw sequence —
+/// the strictest mask-order test is simply bit-parity under dropout.
+#[test]
+fn dropout_dp_steps_bit_identical() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    let ctrl =
+        ScaleController::fixed(net.n_groups(), FixedFormat::new(12, 3), FixedFormat::new(12, 0));
+    let (x, y) = mlp_batch(s, UNEVEN_BATCH, 0xD80);
+    for (ri, rh) in [(0.2f32, 0.5f32), (0.0, 0.5), (0.2, 0.0)] {
+        let opts = |dp: usize| {
+            move || StepOptions {
+                dropout: Some(Dropout {
+                    input_rate: ri,
+                    hidden_rate: rh,
+                    rng: Pcg32::seeded(0xABCD),
+                }),
+                dp_workers: dp,
+                ..Default::default()
+            }
+        };
+        let serial = run_steps(&net, || mlp_state(s, 7), &x, &y, &ctrl, opts(1), 2);
+        for n in [2, 4] {
+            let dp = run_steps(&net, || mlp_state(s, 7), &x, &y, &ctrl, opts(n), 2);
+            assert_traces_equal(&format!("dropout ({ri},{rh}) dp_workers={n}"), &dp, &serial);
+        }
+    }
+}
+
+/// Thread scheduling is real at N=4 (scoped OS threads), so repeat runs
+/// guard against any nondeterminism the parity matrix could mask.
+#[test]
+fn dp_step_repeats_are_bit_deterministic() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    let ctrl =
+        ScaleController::fixed(net.n_groups(), FixedFormat::new(10, 3), FixedFormat::new(12, 0));
+    let (x, y) = mlp_batch(s, UNEVEN_BATCH, 0x11);
+    let opts = || StepOptions {
+        mode: RoundMode::Stochastic,
+        dp_workers: 4,
+        ..Default::default()
+    };
+    let a = run_steps(&net, || mlp_state(s, 9), &x, &y, &ctrl, opts, 3);
+    let b = run_steps(&net, || mlp_state(s, 9), &x, &y, &ctrl, opts, 3);
+    assert_traces_equal("repeat at dp_workers=4", &a, &b);
+}
+
+/// End-to-end dynamic scaling: merged worker overflow counters drive the
+/// controller's per-group scale moves, so an N=4 run must replay the
+/// N=1 run's decision log, final formats, and parameter bits exactly.
+#[test]
+fn dynamic_scaling_run_is_worker_count_invariant() {
+    let s = tiny_mlp();
+    let net = Network::from_mlp_shape(s);
+    let (x, y) = mlp_batch(s, 16, 0xD1CE);
+    let steps = 8;
+    let run = |dp: usize| {
+        let mut ctrl = ScaleController::dynamic(
+            net.n_groups(),
+            FixedFormat::new(10, 3),
+            FixedFormat::new(12, 0),
+            1e-3,
+            32, // update every 2 steps at batch 16
+        );
+        let (mut params, mut vels) = mlp_state(s, 0x5EED);
+        let mut losses = Vec::new();
+        for t in 0..steps {
+            let opts = StepOptions { dp_workers: dp, ..Default::default() };
+            let out = net.train_step(&mut params, &mut vels, &x, &y, 0.1, 0.5, 2.0, &ctrl, opts);
+            losses.push(out.loss.to_bits());
+            ctrl.observe_matrix(&out.overflow);
+            ctrl.after_batch(16, t);
+        }
+        let pbits: Vec<Vec<u32>> = params.iter().map(|t| bits(t.data())).collect();
+        (losses, ctrl.decisions_log.clone(), ctrl.int_bits_vec(), pbits)
+    };
+    let serial = run(1);
+    let dp = run(4);
+    assert_eq!(dp.0, serial.0, "dynamic: loss trace");
+    assert_eq!(dp.1, serial.1, "dynamic: scale-move decision log");
+    assert_eq!(dp.2, serial.2, "dynamic: final int_bits table");
+    assert_eq!(dp.3, serial.3, "dynamic: param bits");
+    assert!(
+        !serial.1.is_empty(),
+        "fixture drifted: the dynamic run made no scale moves, so the \
+         decision-log comparison proved nothing"
+    );
+}
+
+/// The reduction contract in isolation: for any worker count and any
+/// counter values, the fixed binary-tree merge equals a flat left fold
+/// (u64 counter sums are associative), and a single worker's stats pass
+/// through unchanged.
+#[test]
+fn merge_stats_tree_equals_flat_fold_for_any_schedule() {
+    forall("merge_stats_tree flat ≡ tree", |g| {
+        let n_workers = g.usize_range(1, 6);
+        let n_groups = g.usize_range(1, 8);
+        let levels: Vec<Vec<QuantStats>> = (0..n_workers)
+            .map(|_| {
+                (0..n_groups)
+                    .map(|_| QuantStats {
+                        n_over: g.u32() as u64,
+                        n_half: g.u32() as u64,
+                        n_total: g.u32() as u64,
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut flat = vec![QuantStats::default(); n_groups];
+        for w in &levels {
+            for (acc, st) in flat.iter_mut().zip(w) {
+                acc.merge(*st);
+            }
+        }
+        let tree = merge_stats_tree(levels.clone());
+        assert_eq!(tree.len(), n_groups);
+        for (a, b) in tree.iter().zip(&flat) {
+            assert_eq!((a.n_over, a.n_half, a.n_total), (b.n_over, b.n_half, b.n_total));
+        }
+        if n_workers == 1 {
+            for (a, b) in tree.iter().zip(&levels[0]) {
+                assert_eq!((a.n_over, a.n_half, a.n_total), (b.n_over, b.n_half, b.n_total));
+            }
+        }
+    });
+}
