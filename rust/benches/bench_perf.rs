@@ -18,6 +18,10 @@
 //! * integer-domain GEMM vs the simulated-f32 fused path on eligible
 //!   grid operands (`int gemm` rows per orientation and arithmetic,
 //!   plus the `int train step` end-to-end A/B)
+//! * split-accumulator GEMM on wide-grid deep reductions the whole-site
+//!   bound rejects (`split gemm` rows per orientation, vs the simulated
+//!   path those sites previously ran on) and the 4-wide k-unrolled i16
+//!   NT microkernel vs its rolled reference (`unrolled int gemm` row)
 //! * the packed-operand cache: pre-packed weight slabs vs re-packing on
 //!   every call (`packed gemm` kernel rows, the `packed train step`
 //!   rebuild-cadence A/B, and the serve-style `packed eval` steady
@@ -618,6 +622,139 @@ fn int_gemm_section(table: &mut Table) {
     ]);
 }
 
+/// Split-accumulator and unrolled-microkernel A/Bs (ROADMAP 1b/1c).
+///
+/// * `split gemm` rows: wide-grid deep-reduction shapes whose
+///   whole-site worst case overflows [`int_gemm::ACC_BOUND`] — before
+///   the split schedule these were forced onto the simulated path, so
+///   the honest baseline is the simulated kernel it replaces. The plan
+///   is asserted `Split` per row so a silently-Whole (or
+///   silently-Simulated) dispatch cannot pose as a split result.
+/// * `unrolled int gemm` row: the 4-wide k-unrolled i16 NT microkernel
+///   vs the rolled reference loop it replaced (`imm_nt_serial_ref`),
+///   on the l0-dw-like 784-deep contraction.
+fn split_gemm_section(table: &mut Table) {
+    let iters = scaled(40).max(10);
+    let mut rng = Pcg32::seeded(47);
+    // wide 12-bit grid: |int| ≤ 2047 at step 2^-7. Each product is
+    // f32-exact (2047² ≤ 2^24) but the deep reductions below overflow
+    // the whole-site bound, so only the split plan can take them.
+    let (amax, exp) = (2047u32, -7i32);
+    let step = int_gemm::exp2f(exp);
+    let mut grid = |len: usize| -> Vec<f32> {
+        let mut v: Vec<f32> = (0..len)
+            .map(|_| (rng.below(2 * amax + 1) as i32 - amax as i32) as f32 * step)
+            .collect();
+        v[0] = amax as f32 * step; // pin the packed amax: plan is deterministic
+        v
+    };
+    let epi = QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(16, 8)));
+    let speed = |sim: &Stats, alt: &str, s: &Stats| {
+        format!(
+            "simulated {:.2}ms | {alt} {:.2}ms | speedup {:.2}x",
+            sim.mean * 1e3,
+            s.mean * 1e3,
+            sim.mean / s.mean.max(1e-12),
+        )
+    };
+
+    // NN (l0 z shape): 784 · 2047² ≫ 2^24
+    let (m, kd, n) = (64usize, 784usize, 128usize);
+    let a = grid(m * kd);
+    let b = grid(kd * n);
+    let bias = grid(n);
+    let zeros = vec![0.0f32; m * n];
+    assert_eq!(
+        ops::quant_gemm_plan(&a, &b, kd, Some(&zeros)),
+        ops::QuantGemmImpl::Split,
+        "split nn"
+    );
+    let mut dst = zeros;
+    let mut time_nn = |int: bool| {
+        bench(2, iters, || {
+            dst.fill(0.0);
+            let _ = ops::matmul_sl_qd_into(&a, &b, Some(&bias), &mut dst, m, kd, n, epi, int);
+        })
+    };
+    let s_sim = time_nn(false);
+    let s_split = time_nn(true);
+    table.row(&[
+        format!("split gemm nn z 64x{kd}x128+bias (wide 12-bit grid)"),
+        speed(&s_sim, "split", &s_split),
+    ]);
+
+    // NT (l0 dx shape): dy [64,128] @ w [784,128]^T, 128-deep
+    let dy = grid(m * n);
+    let w = grid(kd * n);
+    assert_eq!(ops::quant_gemm_plan(&dy, &w, n, None), ops::QuantGemmImpl::Split, "split nt");
+    let mut time_nt = |int: bool| {
+        bench(2, iters, || {
+            let _ = ops::matmul_nt_sl_qd(&dy, &w, m, n, kd, epi, int);
+        })
+    };
+    let s_sim = time_nt(false);
+    let s_split = time_nt(true);
+    table.row(&[
+        format!("split gemm nt dx 64x{n} @ {kd}x{n}^T (wide 12-bit grid)"),
+        speed(&s_sim, "split", &s_split),
+    ]);
+
+    // TN (l0 dw shape): x [64,784]^T @ dz [64,128], 64-deep batch
+    let xs = grid(m * kd);
+    let dz = grid(m * n);
+    let zeros = vec![0.0f32; kd * n];
+    assert_eq!(
+        ops::quant_gemm_plan(&xs, &dz, m, Some(&zeros)),
+        ops::QuantGemmImpl::Split,
+        "split tn"
+    );
+    let mut dw = zeros;
+    let mut time_tn = |int: bool| {
+        bench(2, iters, || {
+            dw.fill(0.0);
+            let _ = ops::matmul_tn_sl_qd_into(&xs, &dz, &mut dw, m, kd, n, epi, int);
+        })
+    };
+    let s_sim = time_tn(false);
+    let s_split = time_tn(true);
+    table.row(&[
+        format!("split gemm tn dw {m}^T {kd}x{n} (wide 12-bit grid)"),
+        speed(&s_sim, "split", &s_split),
+    ]);
+
+    // unrolled i16 NT microkernel vs the rolled reference it replaced,
+    // on the 784-deep l0-dw contraction (pure integer loops, no
+    // dispatch/epilogue — isolates the k-unroll win). Magnitudes stay
+    // ≤ 127 so the 784-term i32 accumulation cannot wrap even in the
+    // worst case; the kernel's cost is magnitude-independent.
+    let mut krng = Pcg32::seeded(48);
+    let (ua, ib) = (784usize, 128usize);
+    let ai: Vec<i16> = (0..m * ua).map(|_| (krng.below(255) as i32 - 127) as i16).collect();
+    let bi: Vec<i16> = (0..ib * ua).map(|_| (krng.below(255) as i32 - 127) as i16).collect();
+    let mut out = vec![0i32; m * ib];
+    let mut time_kernel = |unrolled: bool| {
+        bench(2, iters, || {
+            out.fill(0);
+            if unrolled {
+                int_gemm::imm_nt_serial(&ai, &bi, &mut out, ua, ib);
+            } else {
+                int_gemm::imm_nt_serial_ref(&ai, &bi, &mut out, ua, ib);
+            }
+        })
+    };
+    let s_ref = time_kernel(false);
+    let s_unr = time_kernel(true);
+    table.row(&[
+        format!("unrolled int gemm nt {m}x{ua} @ {ib}x{ua}^T (i16)"),
+        format!(
+            "rolled {:.2}ms | unrolled {:.2}ms | speedup {:.2}x",
+            s_ref.mean * 1e3,
+            s_unr.mean * 1e3,
+            s_ref.mean / s_unr.mean.max(1e-12),
+        ),
+    ]);
+}
+
 /// Packed-vs-repack A/Bs for the weight-slab cache (ROADMAP 1a/4b).
 /// Both paths are bit-identical (tests/int_gemm_parity.rs), so the rows
 /// are pure perf A/Bs; every leg's [`int_gemm::pack_calls`] delta is
@@ -1024,6 +1161,7 @@ fn main() {
     matmul_section(&mut table);
     fused_gemm_section(&mut table);
     int_gemm_section(&mut table);
+    split_gemm_section(&mut table);
     packed_cache_section(&mut table);
     end_to_end_section(&mut session, &mut table);
     native_step_section(&mut table);

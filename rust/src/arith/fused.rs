@@ -203,14 +203,30 @@ impl QuantEpilogue {
         for (o, &v) in dst.iter_mut().zip(acc) {
             *o = v as f32 * scale;
         }
+        self.run_biased(dst, n, bias, offset)
+    }
+
+    /// Bias-then-quantize over an f32 tile of row width `n`: add the
+    /// bias row to every row in place, then [`QuantEpilogue::run`].
+    /// The single implementation behind the f32 GEMM tile epilogues
+    /// (`tensor::ops`), the direct conv reference path (`golden::conv`)
+    /// and the split-accumulator integer runners — one place for the
+    /// bias/quantize order so the paths cannot drift apart.
+    pub fn run_biased(
+        &self,
+        xs: &mut [f32],
+        n: usize,
+        bias: Option<&[f32]>,
+        offset: u64,
+    ) -> QuantStats {
         if let Some(bs) = bias {
-            for row in dst.chunks_mut(n) {
+            for row in xs.chunks_mut(n) {
                 for (o, &bv) in row.iter_mut().zip(bs) {
                     *o += bv;
                 }
             }
         }
-        self.run(dst, offset)
+        self.run(xs, offset)
     }
 }
 

@@ -19,6 +19,7 @@ use super::sweep::SweepOutcome;
 use super::trainer::RunResult;
 use crate::config::json::{Json, JsonError};
 use crate::error::Context;
+use crate::tensor::ops::GemmSiteCounts;
 
 /// Schema version stamped into every [`SweepReport`].
 pub const REPORT_VERSION: i64 = 1;
@@ -37,6 +38,11 @@ pub struct RunReport {
     pub final_int_bits: Vec<i32>,
     pub steps: usize,
     pub wallclock_secs: f64,
+    /// Per-site GEMM lowering-outcome counters (`"<layer>.<site>"`
+    /// keys). Omitted from the JSON when empty, so reports from
+    /// backends without a layer graph — and golden files predating the
+    /// section — stay byte-identical.
+    pub int_gemm_sites: BTreeMap<String, GemmSiteCounts>,
 }
 
 impl RunReport {
@@ -50,6 +56,7 @@ impl RunReport {
             final_int_bits: r.final_int_bits.clone(),
             steps: r.steps_run,
             wallclock_secs: r.wallclock.as_secs_f64(),
+            int_gemm_sites: r.int_gemm_sites.clone(),
         }
     }
 
@@ -66,6 +73,14 @@ impl RunReport {
         );
         m.insert("steps".to_string(), Json::Num(self.steps as f64));
         m.insert("wallclock_secs".to_string(), Json::Num(self.wallclock_secs));
+        if !self.int_gemm_sites.is_empty() {
+            let sites = self
+                .int_gemm_sites
+                .iter()
+                .map(|(k, c)| (k.clone(), counts_to_json(c)))
+                .collect::<BTreeMap<_, _>>();
+            m.insert("int_gemm_sites".to_string(), Json::Object(sites));
+        }
         Json::Object(m)
     }
 
@@ -76,6 +91,12 @@ impl RunReport {
             .iter()
             .map(|b| b.as_i64().map(|x| x as i32))
             .collect::<Result<Vec<i32>, JsonError>>()?;
+        let mut sites = BTreeMap::new();
+        if let Some(sv) = v.opt("int_gemm_sites") {
+            for (k, c) in sv.as_object()? {
+                sites.insert(k.clone(), counts_from_json(c)?);
+            }
+        }
         Ok(RunReport {
             name: v.get("name")?.as_str()?.to_string(),
             label: v.get("label")?.as_str()?.to_string(),
@@ -85,8 +106,40 @@ impl RunReport {
             final_int_bits: bits,
             steps: v.get("steps")?.as_usize()?,
             wallclock_secs: num_or_nan(v.get("wallclock_secs")?)?,
+            int_gemm_sites: sites,
         })
     }
+}
+
+/// One site's lowering counters as a JSON object. `simulated` is the
+/// derived rejection total (the headline number a smoke check greps);
+/// the five reason counters are the breakdown.
+fn counts_to_json(c: &GemmSiteCounts) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("int".to_string(), Json::Num(c.int as f64));
+    m.insert("split".to_string(), Json::Num(c.split as f64));
+    m.insert("simulated".to_string(), Json::Num(c.simulated() as f64));
+    m.insert("disabled".to_string(), Json::Num(c.disabled as f64));
+    m.insert("dirty_dst".to_string(), Json::Num(c.dirty_dst as f64));
+    m.insert("unpackable".to_string(), Json::Num(c.unpackable as f64));
+    m.insert("exp_window".to_string(), Json::Num(c.exp_window as f64));
+    m.insert("acc_bound".to_string(), Json::Num(c.acc_bound as f64));
+    Json::Object(m)
+}
+
+/// Inverse of [`counts_to_json`]; the derived `simulated` field is
+/// recomputed, not read.
+fn counts_from_json(v: &Json) -> crate::Result<GemmSiteCounts> {
+    let field = |k: &str| -> crate::Result<u64> { Ok(v.get(k)?.as_i64()? as u64) };
+    Ok(GemmSiteCounts {
+        int: field("int")?,
+        split: field("split")?,
+        disabled: field("disabled")?,
+        dirty_dst: field("dirty_dst")?,
+        unpackable: field("unpackable")?,
+        exp_window: field("exp_window")?,
+        acc_bound: field("acc_bound")?,
+    })
 }
 
 /// One serialized sweep row: label, normalized error, full run report.
@@ -221,6 +274,7 @@ mod tests {
                 final_int_bits: vec![3, -1],
                 steps: 10,
                 wallclock_secs: 0.75,
+                int_gemm_sites: BTreeMap::new(),
             },
             rows: vec![SweepRowReport {
                 label: "p".into(),
@@ -234,6 +288,7 @@ mod tests {
                     final_int_bits: vec![],
                     steps: 10,
                     wallclock_secs: 1.25,
+                    int_gemm_sites: BTreeMap::new(),
                 },
             }],
         }
@@ -281,6 +336,10 @@ mod tests {
             final_int_bits: vec![2],
             steps_run: 7,
             wallclock: std::time::Duration::from_millis(250),
+            int_gemm_sites: BTreeMap::from([(
+                "softmax(4)@l3.z".to_string(),
+                GemmSiteCounts { int: 7, ..Default::default() },
+            )]),
         };
         let rep = RunReport::from_result(&r);
         assert_eq!(rep.name, "cfg");
@@ -288,5 +347,25 @@ mod tests {
         assert_eq!(rep.steps, 7);
         assert_eq!(rep.wallclock_secs, 0.25);
         assert_eq!(rep.final_int_bits, vec![2]);
+        assert_eq!(rep.int_gemm_sites["softmax(4)@l3.z"].int, 7);
+    }
+
+    #[test]
+    fn int_gemm_sites_roundtrip_and_empty_section_is_omitted() {
+        // empty map: key absent from the JSON (old golden files parse)
+        let empty = sample();
+        assert!(!empty.to_json_string().contains("int_gemm_sites"));
+
+        let mut report = sample();
+        report.baseline.int_gemm_sites.insert(
+            "maxout(8x2)@l0.z".to_string(),
+            GemmSiteCounts { int: 5, split: 3, acc_bound: 1, ..Default::default() },
+        );
+        let text = report.to_json_string();
+        assert!(text.contains("int_gemm_sites") && text.contains("\"split\": 3"));
+        // the derived rejection total serializes alongside the breakdown
+        assert!(text.contains("\"simulated\": 1"));
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(SweepReport::from_json(&parsed).unwrap(), report);
     }
 }

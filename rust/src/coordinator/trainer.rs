@@ -71,6 +71,10 @@ pub struct RunResult {
     pub final_int_bits: Vec<i32>,
     pub steps_run: usize,
     pub wallclock: std::time::Duration,
+    /// Per-site GEMM lowering-outcome counters over the whole run
+    /// (`"<layer>.<site>"` keys), empty for backends without a layer
+    /// graph — the report's `int_gemm_sites` section.
+    pub int_gemm_sites: std::collections::BTreeMap<String, crate::tensor::ops::GemmSiteCounts>,
 }
 
 /// Drives one experiment end to end on a borrowed backend. Constructed
@@ -184,6 +188,7 @@ impl<'a> Trainer<'a> {
             metrics,
             steps_run: steps,
             wallclock: started.elapsed(),
+            int_gemm_sites: self.backend.int_gemm_sites(),
         };
         self.observers.run_end(&self.meta, &result);
         Ok(result)

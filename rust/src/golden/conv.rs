@@ -139,22 +139,17 @@ pub fn col2im_add(dpatch: &[f32], batch: usize, g: &ConvGeom, dx: &mut [f32]) {
 }
 
 /// Run a quantization epilogue over a conv output tile exactly as the
-/// fused GEMM kernels do: add the bias row (if any) to every `c_out`
-/// chunk, then quantize in place with stats.
+/// fused GEMM kernels do: bias-then-quantize via the shared
+/// [`QuantEpilogue::run_biased`] — the same single implementation the
+/// GEMM tile epilogues and the split-accumulator runners use, so the
+/// direct reference can never drift from the fused paths.
 fn tile_epilogue(
     dst: &mut [f32],
     c_out: usize,
     bias: Option<&[f32]>,
     epi: QuantEpilogue,
 ) -> QuantStats {
-    if let Some(bs) = bias {
-        for row in dst.chunks_mut(c_out) {
-            for (o, &bv) in row.iter_mut().zip(bs) {
-                *o += bv;
-            }
-        }
-    }
-    epi.run(dst, 0)
+    epi.run_biased(dst, c_out, bias, 0)
 }
 
 /// Direct nested-loop reference for one filter's forward conv:

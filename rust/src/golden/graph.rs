@@ -405,6 +405,14 @@ pub trait Layer: Send + Sync {
     fn pack_builds(&self) -> u64 {
         0
     }
+
+    /// Snapshot of this layer's per-site GEMM lowering-outcome counters
+    /// as `(site key, counts)` rows (site keys are short: `"z"`, `"dh"`,
+    /// `"dw"`). Default: no GEMM sites. Collected into the report-level
+    /// `int_gemm_sites` map by [`Network::int_gemm_sites`].
+    fn plan_counts(&self) -> Vec<(&'static str, ops::GemmSiteCounts)> {
+        Vec::new()
+    }
 }
 
 /// The scale half of a weight layer's [`PackedCache`] key: the bit
@@ -467,11 +475,23 @@ pub struct MaxoutDense {
     /// mutex only guards `ensure` — callers keep the returned `Arc`,
     /// so concurrent workers share one build and no lock spans a GEMM.
     packs: Mutex<PackedCache>,
+    /// Lowering-outcome counters for the forward z GEMMs (atomic: all
+    /// data-parallel workers record against the shared layer).
+    tally_z: ops::GemmSiteTally,
+    /// Lowering-outcome counters for the reduce-grads dw GEMMs.
+    tally_dw: ops::GemmSiteTally,
 }
 
 impl MaxoutDense {
     pub fn new(units: usize, k: usize, group: usize) -> MaxoutDense {
-        MaxoutDense { units, k, group, packs: Mutex::new(PackedCache::new()) }
+        MaxoutDense {
+            units,
+            k,
+            group,
+            packs: Mutex::new(PackedCache::new()),
+            tally_z: ops::GemmSiteTally::new(),
+            tally_dw: ops::GemmSiteTally::new(),
+        }
     }
 }
 
@@ -548,6 +568,7 @@ impl Layer for MaxoutDense {
                     units,
                     epi.with_base(((j * sh.full + sh.start) * units) as u64),
                     t,
+                    Some(&self.tally_z),
                 ));
             } else if q.fused {
                 zst.merge(ops::matmul_sl_qd_into_threads(
@@ -561,6 +582,7 @@ impl Layer for MaxoutDense {
                     epi.with_base(((j * sh.full + sh.start) * units) as u64),
                     t,
                     q.int_domain,
+                    Some(&self.tally_z),
                 ));
             } else {
                 let zj = ops::matmul_sl_threads(x.data(), wj, rows, d_in, units, t);
@@ -681,7 +703,7 @@ impl Layer for MaxoutDense {
             let dzj = &dz.data()[j * full * units..(j + 1) * full * units];
             let dwj_dst = &mut dw.data_mut()[j * d_in * units..(j + 1) * d_in * units];
             if q.fused {
-                dwst.merge(ops::matmul_tn_sl_qd_into(
+                dwst.merge(ops::matmul_tn_sl_qd_into_threads(
                     x.data(),
                     dzj,
                     dwj_dst,
@@ -689,7 +711,9 @@ impl Layer for MaxoutDense {
                     d_in,
                     units,
                     epi_dw.with_base((j * d_in * units) as u64),
+                    ops::plan_threads_capped(2 * full * d_in * units, d_in, 0),
                     q.int_domain,
+                    Some(&self.tally_dw),
                 ));
             } else {
                 let dwj = ops::matmul_tn_sl(x.data(), dzj, full, d_in, units);
@@ -733,6 +757,10 @@ impl Layer for MaxoutDense {
     fn pack_builds(&self) -> u64 {
         self.packs.lock().expect("dense pack cache poisoned").builds()
     }
+
+    fn plan_counts(&self) -> Vec<(&'static str, ops::GemmSiteCounts)> {
+        vec![("z", self.tally_z.counts()), ("dw", self.tally_dw.counts())]
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -752,11 +780,23 @@ pub struct SoftmaxHead {
     /// One packed slab of `w` serving both the forward NN product and
     /// the backward NT projection, invalidated by `sgd_update`.
     packs: Mutex<PackedCache>,
+    /// Lowering-outcome counters: forward z, backward dh projection,
+    /// reduce-grads dw.
+    tally_z: ops::GemmSiteTally,
+    tally_dh: ops::GemmSiteTally,
+    tally_dw: ops::GemmSiteTally,
 }
 
 impl SoftmaxHead {
     pub fn new(n_classes: usize, group: usize) -> SoftmaxHead {
-        SoftmaxHead { n_classes, group, packs: Mutex::new(PackedCache::new()) }
+        SoftmaxHead {
+            n_classes,
+            group,
+            packs: Mutex::new(PackedCache::new()),
+            tally_z: ops::GemmSiteTally::new(),
+            tally_dh: ops::GemmSiteTally::new(),
+            tally_dw: ops::GemmSiteTally::new(),
+        }
     }
 }
 
@@ -816,20 +856,24 @@ impl Layer for SoftmaxHead {
                 classes,
                 epi,
                 t,
+                Some(&self.tally_z),
             );
             q.record(self.group, KIND_Z, st);
             Tensor::from_vec(&[rows, classes], v)
         } else if q.fused {
-            let (v, st) = ops::matmul_sl_qd_threads(
+            let mut v = vec![0.0f32; rows * classes];
+            let st = ops::matmul_sl_qd_into_threads(
                 x.data(),
                 w.data(),
                 Some(b.data()),
+                &mut v,
                 rows,
                 units,
                 classes,
                 epi,
                 t,
                 q.int_domain,
+                Some(&self.tally_z),
             );
             q.record(self.group, KIND_Z, st);
             Tensor::from_vec(&[rows, classes], v)
@@ -895,19 +939,23 @@ impl Layer for SoftmaxHead {
                     units,
                     epi,
                     t,
+                    Some(&self.tally_dh),
                 );
                 q.record(g, KIND_DH, st);
                 Tensor::from_vec(&[rows, units], v)
             } else if q.fused {
-                let (v, st) = ops::matmul_nt_sl_qd_threads(
+                let mut v = vec![0.0f32; rows * units];
+                let st = ops::matmul_nt_sl_qd_into_threads(
                     dz.data(),
                     w.data(),
+                    &mut v,
                     rows,
                     classes,
                     units,
                     epi,
                     t,
                     q.int_domain,
+                    Some(&self.tally_dh),
                 );
                 q.record(g, KIND_DH, st);
                 Tensor::from_vec(&[rows, units], v)
@@ -937,14 +985,18 @@ impl Layer for SoftmaxHead {
         let dz = dz.reshape(&[full, classes]);
 
         let dw = if q.fused {
-            let (v, st) = ops::matmul_tn_sl_qd(
+            let mut v = vec![0.0f32; units * classes];
+            let st = ops::matmul_tn_sl_qd_into_threads(
                 x.data(),
                 dz.data(),
+                &mut v,
                 full,
                 units,
                 classes,
                 epi_dw,
+                ops::plan_threads_capped(2 * full * units * classes, units, 0),
                 q.int_domain,
+                Some(&self.tally_dw),
             );
             q.record(self.group, KIND_DW, st);
             Tensor::from_vec(&[units, classes], v)
@@ -984,6 +1036,14 @@ impl Layer for SoftmaxHead {
 
     fn pack_builds(&self) -> u64 {
         self.packs.lock().expect("head pack cache poisoned").builds()
+    }
+
+    fn plan_counts(&self) -> Vec<(&'static str, ops::GemmSiteCounts)> {
+        vec![
+            ("z", self.tally_z.counts()),
+            ("dh", self.tally_dh.counts()),
+            ("dw", self.tally_dw.counts()),
+        ]
     }
 }
 
@@ -1087,11 +1147,24 @@ pub struct MaxoutConv2d {
     /// Per-filter packed weight slabs for the integer-domain im2col
     /// forward, invalidated by `sgd_update`.
     packs: Mutex<PackedCache>,
+    /// Lowering-outcome counters: forward z (im2col path), reduce-grads
+    /// dw. The direct-conv reference path never dispatches a GEMM, so
+    /// it records nothing.
+    tally_z: ops::GemmSiteTally,
+    tally_dw: ops::GemmSiteTally,
 }
 
 impl MaxoutConv2d {
     pub fn new(c_out: usize, k: usize, ksize: usize, group: usize) -> MaxoutConv2d {
-        MaxoutConv2d { c_out, k, ksize, group, packs: Mutex::new(PackedCache::new()) }
+        MaxoutConv2d {
+            c_out,
+            k,
+            ksize,
+            group,
+            packs: Mutex::new(PackedCache::new()),
+            tally_z: ops::GemmSiteTally::new(),
+            tally_dw: ops::GemmSiteTally::new(),
+        }
     }
 
     /// Geometry for a concrete `[B, H, W, C]` input.
@@ -1208,6 +1281,7 @@ impl Layer for MaxoutConv2d {
                         c_out,
                         epi.with_base(((j * full_rows + start_rows) * c_out) as u64),
                         t,
+                        Some(&self.tally_z),
                     ));
                 } else if q.fused {
                     zst.merge(ops::matmul_sl_qd_into_threads(
@@ -1221,6 +1295,7 @@ impl Layer for MaxoutConv2d {
                         epi.with_base(((j * full_rows + start_rows) * c_out) as u64),
                         t,
                         q.int_domain,
+                        Some(&self.tally_z),
                     ));
                 } else {
                     let zj = ops::matmul_sl_threads(&scratch.patches, wj, rows, plen, c_out, t);
@@ -1392,7 +1467,7 @@ impl Layer for MaxoutConv2d {
                 let dzj = &dz.data()[j * rows * c_out..(j + 1) * rows * c_out];
                 let dwj_dst = &mut dw.data_mut()[j * plen * c_out..(j + 1) * plen * c_out];
                 if q.fused {
-                    dwst.merge(ops::matmul_tn_sl_qd_into(
+                    dwst.merge(ops::matmul_tn_sl_qd_into_threads(
                         x.data(),
                         dzj,
                         dwj_dst,
@@ -1400,7 +1475,9 @@ impl Layer for MaxoutConv2d {
                         plen,
                         c_out,
                         epi_dw.with_base((j * plen * c_out) as u64),
+                        ops::plan_threads_capped(2 * rows * plen * c_out, plen, 0),
                         q.int_domain,
+                        Some(&self.tally_dw),
                     ));
                 } else {
                     let dwj = ops::matmul_tn_sl(x.data(), dzj, rows, plen, c_out);
@@ -1446,6 +1523,10 @@ impl Layer for MaxoutConv2d {
 
     fn pack_builds(&self) -> u64 {
         self.packs.lock().expect("conv pack cache poisoned").builds()
+    }
+
+    fn plan_counts(&self) -> Vec<(&'static str, ops::GemmSiteCounts)> {
+        vec![("z", self.tally_z.counts()), ("dw", self.tally_dw.counts())]
     }
 }
 
@@ -2120,6 +2201,24 @@ impl Network {
     /// meaningful as a delta in single-threaded benches.)
     pub fn weight_pack_builds(&self) -> u64 {
         self.layers.iter().map(|l| l.pack_builds()).sum()
+    }
+
+    /// Per-site GEMM lowering-outcome counters across the graph, keyed
+    /// `"<layer describe>.<site>"` (e.g. `"maxout(10x2)@l0.dw"`) in a
+    /// stable map. Counts accumulate over the network's lifetime; the
+    /// trainer snapshots them once at the end of a run for the report's
+    /// `int_gemm_sites` section. Empty when no GEMM ever dispatched
+    /// (e.g. conv-direct reference runs).
+    pub fn int_gemm_sites(&self) -> std::collections::BTreeMap<String, ops::GemmSiteCounts> {
+        let mut out = std::collections::BTreeMap::new();
+        for layer in &self.layers {
+            for (site, counts) in layer.plan_counts() {
+                if !counts.is_empty() {
+                    out.insert(format!("{}.{site}", layer.describe()), counts);
+                }
+            }
+        }
+        out
     }
 
     /// Forward-only logits `[B, C]` (no dropout, no mutation),

@@ -40,6 +40,7 @@ pub use spec::BackendSpec;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::ScaleController;
+use crate::tensor::ops::GemmSiteCounts;
 use crate::tensor::{Pcg32, Tensor};
 
 /// Per-step hyperparameters the trainer hands a backend (the schedules
@@ -123,5 +124,13 @@ pub trait Backend {
     fn load_params(&mut self, params: Vec<Tensor>) -> crate::Result<()> {
         let _ = params;
         crate::bail!("backend '{}' does not support loading host parameters", self.name())
+    }
+
+    /// Per-site GEMM lowering-outcome counters of the current run,
+    /// keyed `"<layer>.<site>"` — the report's `int_gemm_sites`
+    /// section. Backends without a layer graph (or before `begin_run`)
+    /// report nothing.
+    fn int_gemm_sites(&self) -> std::collections::BTreeMap<String, GemmSiteCounts> {
+        std::collections::BTreeMap::new()
     }
 }

@@ -257,6 +257,10 @@ impl Backend for NativeBackend {
         run.params = params;
         Ok(())
     }
+
+    fn int_gemm_sites(&self) -> std::collections::BTreeMap<String, ops::GemmSiteCounts> {
+        self.run.as_ref().map(|r| r.net.int_gemm_sites()).unwrap_or_default()
+    }
 }
 
 #[cfg(test)]

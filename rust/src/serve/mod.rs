@@ -268,6 +268,11 @@ pub struct ServeReport {
     /// per worker at startup, zero per-request re-packs), and 0 when
     /// the integer domain is off.
     pub weight_pack_builds: u64,
+    /// GEMM lowering outcomes summed over every worker's forward sites:
+    /// proof of *which* kernel served the requests. With the integer
+    /// domain on, every dispatch should land in `int` or `split` and
+    /// `simulated()` should be 0; with it off, everything is `disabled`.
+    pub int_gemm_dispatch: ops::GemmSiteCounts,
 }
 
 impl ServeReport {
@@ -315,6 +320,11 @@ impl ServeReport {
         row("int_domain", self.opts.int_domain.to_string());
         row("fused", self.opts.fused.to_string());
         row("weight_packs", self.weight_pack_builds.to_string());
+        let d = &self.int_gemm_dispatch;
+        row(
+            "int_gemm_dispatch",
+            format!("int={} split={} simulated={}", d.int, d.split, d.simulated()),
+        );
         row("batches", self.batch_sizes.len().to_string());
         row("batch_fill_mean", format!("{:.2}", self.mean_fill()));
         row("batch_fill_max", self.max_fill().to_string());
@@ -346,7 +356,8 @@ pub fn eval_options(restored: &Restored, opts: &ServeOptions) -> StepOptions {
 /// One inference worker's whole life: build a private [`Network`]
 /// (pre-packing integer operands when the integer domain is on), answer
 /// batches until the batch queue closes, and return this worker's
-/// packed-cache build count. Shared by the closed-loop and open-loop
+/// packed-cache build count plus its GEMM lowering-outcome counters
+/// (all forward sites merged). Shared by the closed-loop and open-loop
 /// drivers — the load generator changes, the serving side does not.
 fn worker_loop(
     restored: &Restored,
@@ -354,7 +365,7 @@ fn worker_loop(
     step_opts: &StepOptions,
     batch_q: &BoundedQueue<Vec<Request>>,
     in_dims: &[usize],
-) -> u64 {
+) -> (u64, ops::GemmSiteCounts) {
     // restore() already validated the topology, so this only fails on
     // resource exhaustion; panicking beats leaving producers parked on
     // unfulfillable slots
@@ -389,7 +400,11 @@ fn worker_loop(
     }
     // read after the drain, so an (unwanted) steady-state re-pack shows
     // up in the count, not just in the latency tail
-    net.weight_pack_builds()
+    let mut dispatch = ops::GemmSiteCounts::default();
+    for counts in net.int_gemm_sites().values() {
+        dispatch.merge(counts);
+    }
+    (net.weight_pack_builds(), dispatch)
 }
 
 /// Shared request-shape validation for both serve drivers.
@@ -441,6 +456,7 @@ pub fn serve_closed_loop(
     let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
     let next_id = AtomicUsize::new(0);
     let weight_packs = AtomicU64::new(0);
+    let gemm_dispatch = Mutex::new(ops::GemmSiteCounts::default());
     let in_dims = restored.in_shape.dims();
 
     let t0 = Instant::now();
@@ -453,10 +469,12 @@ pub fn serve_closed_loop(
                 let restored = &restored;
                 let in_dims = &in_dims;
                 let weight_packs = &weight_packs;
+                let gemm_dispatch = &gemm_dispatch;
                 s.spawn(move || {
-                    let builds =
+                    let (builds, dispatch) =
                         worker_loop(restored, &params, step_opts, batch_q, in_dims);
                     weight_packs.fetch_add(builds, Ordering::Relaxed);
+                    gemm_dispatch.lock().expect("serve dispatch tally").merge(&dispatch);
                 })
             })
             .collect();
@@ -533,6 +551,7 @@ pub fn serve_closed_loop(
         batch_sizes,
         errors,
         weight_pack_builds: weight_packs.load(Ordering::Relaxed),
+        int_gemm_dispatch: *gemm_dispatch.lock().expect("serve dispatch tally"),
     })
 }
 
@@ -581,6 +600,7 @@ pub fn serve_open_loop(
     let request_q: BoundedQueue<Request> = BoundedQueue::new(opts.queue_cap);
     let batch_q: BoundedQueue<Vec<Request>> = BoundedQueue::new(opts.workers * 2);
     let weight_packs = AtomicU64::new(0);
+    let gemm_dispatch = Mutex::new(ops::GemmSiteCounts::default());
     let in_dims = restored.in_shape.dims();
 
     let t0 = Instant::now();
@@ -593,10 +613,12 @@ pub fn serve_open_loop(
                 let restored = &restored;
                 let in_dims = &in_dims;
                 let weight_packs = &weight_packs;
+                let gemm_dispatch = &gemm_dispatch;
                 s.spawn(move || {
-                    let builds =
+                    let (builds, dispatch) =
                         worker_loop(restored, &params, step_opts, batch_q, in_dims);
                     weight_packs.fetch_add(builds, Ordering::Relaxed);
+                    gemm_dispatch.lock().expect("serve dispatch tally").merge(&dispatch);
                 })
             })
             .collect();
@@ -671,6 +693,7 @@ pub fn serve_open_loop(
         batch_sizes,
         errors,
         weight_pack_builds: weight_packs.load(Ordering::Relaxed),
+        int_gemm_dispatch: *gemm_dispatch.lock().expect("serve dispatch tally"),
     })
 }
 
@@ -835,6 +858,7 @@ mod tests {
             batch_sizes: vec![1],
             errors: 0,
             weight_pack_builds: 0,
+            int_gemm_dispatch: ops::GemmSiteCounts::default(),
         };
         let json = report.table().to_json().to_string_pretty();
         assert!(json.contains("open_rate_rps"), "{json}");
@@ -859,6 +883,11 @@ mod tests {
             batch_sizes: vec![2, 2],
             errors: 1,
             weight_pack_builds: 6,
+            int_gemm_dispatch: ops::GemmSiteCounts {
+                int: 8,
+                split: 2,
+                ..Default::default()
+            },
         };
         assert_eq!(report.latency_percentile(0.0), Duration::from_millis(1));
         assert_eq!(report.latency_percentile(1.0), Duration::from_millis(4));
@@ -883,6 +912,7 @@ mod tests {
         };
         assert_eq!(metric("requests"), "4");
         assert_eq!(metric("weight_packs"), "6");
+        assert_eq!(metric("int_gemm_dispatch"), "int=8 split=2 simulated=0");
         // n=4: p50 index = round(0.5 * 3) = 2 → the 3ms sample
         assert_eq!(metric("latency_p50_ms"), "3.000");
         assert_eq!(metric("latency_p99_ms"), "4.000");

@@ -32,10 +32,44 @@
 //! back to the simulated kernels — which are the reference — so the
 //! dispatch in `ops.rs` is bit-transparent *unconditionally*.
 //!
+//! **Split accumulators.** When condition 2 fails only because the
+//! reduction is *deep* (the per-product magnitudes still satisfy
+//! `amax_a · amax_b ≤ 2^24`, but `inner · amax_a · amax_b` does not),
+//! the site is still exactly representable segment by segment: the
+//! k-reduction is cut into segments, each segment accumulated exactly
+//! in i32, and the segments folded in ascending k-order into an i64
+//! running total. The fold alone is not enough for bit-identity — the
+//! simulated kernel rounds after *every* f32 add — so the split
+//! kernels size each segment from the running total's actual headroom:
+//! with `prod = amax_a · amax_b`, the next segment takes
+//! `(2^24 − |total|) / prod` terms (the first one therefore takes the
+//! maximal [`seg_len`]). Inside such a segment every partial sum the
+//! simulated kernel forms — `total` plus a prefix of the segment — is
+//! an integer of magnitude ≤ `|total| + len · prod ≤ 2^24`, hence
+//! every one of its f32 adds is exact, hence the simulated kernel
+//! computes the same real number as the exact integer total and
+//! `total as f32 * 2^(pa+pb)` reproduces its bits (same
+//! exponent-window and zero-sign arguments as above). Real data
+//! cancels, so the headroom regenerates and segments stay long; only
+//! an output element whose `|total|` grows within one `prod` of the
+//! bound — where not even a one-term segment is provably exact —
+//! *bails*: it falls back to a verbatim replay of the simulated
+//! kernel's own f32 loop (same k-order, same zero-skip behaviour per
+//! orientation), so the answer is bit-identical by construction either
+//! way. The other elements of the tile stay on the integer path.
+//!
 //! Inner loops are plain slice-zip reductions over widened i32 values:
 //! contiguous layout, no gather, no data-dependent control flow inside
 //! the innermost loop — the shape LLVM autovectorizes without `std::arch`
 //! (the zero-dep constraint rules out mandatory intrinsics anyway).
+//! On top of that the kernels hand-unroll the k-dimension 4-wide with
+//! independent accumulators reduced in a fixed, documented order
+//! (`(c0+c1)+(c2+c3)`): integer addition is associative, so the
+//! reassociation cannot change a single bit — it only breaks the
+//! loop-carried dependence chain so the backend can keep 4 MACs in
+//! flight. i8 operands widen through the same generic path. The
+//! pre-unroll NT dot-product loop survives as [`imm_nt_serial_ref`]
+//! for A/B benchmarking.
 //!
 //! **Packed-operand caching.** Packing is a pure function of the operand
 //! values, so a weight slab that has not changed since its last pack
@@ -244,9 +278,37 @@ pub fn accum_bound_ok(inner: usize, amax_a: u32, amax_b: u32) -> bool {
     worst_case_sum(inner, amax_a, amax_b) <= ACC_BOUND
 }
 
+/// Maximal exact-i32 segment length for a split-accumulator reduction:
+/// the largest `s` with `s · amax_a · amax_b ≤` [`ACC_BOUND`] (so any
+/// longer segment could exceed the bound in the worst case).
+///
+/// `None` when no split can help: a zero product means the whole-site
+/// bound already accepts the site for any `inner` (splitting is moot),
+/// and a product above `ACC_BOUND` means *individual products* are not
+/// exactly representable in f32 — the simulated kernel rounds inside a
+/// single multiply-add and no segmentation of the sum can reproduce
+/// that, so the site must stay on the simulated path.
+///
+/// This is both the planner's Split-eligibility test (`Some` ⇒ the
+/// split kernels apply) and the length of the kernels' *first* segment;
+/// later segments shrink with the running total's remaining headroom
+/// (see the module docs).
+pub fn seg_len(amax_a: u32, amax_b: u32) -> Option<usize> {
+    let prod = amax_a as u64 * amax_b as u64;
+    if prod == 0 || prod > ACC_BOUND {
+        return None;
+    }
+    Some((ACC_BOUND / prod) as usize)
+}
+
 /// Integer NN kernel: `out[m,n] += a[m,kd] @ b[kd,n]` in i32, with
-/// `m = out.len() / n`. Same panel blocking and zero-skip as the f32
-/// kernel (pure perf choices — integer accumulation is order-exact).
+/// `m = out.len() / n`. Same panel blocking as the f32 kernel (a pure
+/// perf choice — integer accumulation is order-exact). The k-dimension
+/// is unrolled 4-wide so one pass over the output row amortizes four
+/// b-panel rows; the f32 kernel's per-k zero-skip coarsens to the quad
+/// (an all-zero quad is skipped; a mixed quad multiplies its zeros
+/// through, adding exact integer zeros — unobservable). The tail keeps
+/// the original per-k skip.
 pub fn imm_nn_serial<A: PackInt, B: PackInt>(
     a: &[A],
     b: &[B],
@@ -264,7 +326,27 @@ pub fn imm_nn_serial<A: PackInt, B: PackInt>(
         for i in 0..m {
             let arow = &a[i * kd..(i + 1) * kd];
             let orow = &mut out[i * n..(i + 1) * n];
-            for kk in kb..kend {
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let (a0, a1, a2, a3) = (
+                    arow[kk].widen(),
+                    arow[kk + 1].widen(),
+                    arow[kk + 2].widen(),
+                    arow[kk + 3].widen(),
+                );
+                if (a0 | a1 | a2 | a3) != 0 {
+                    let b0 = &b[kk * n..(kk + 1) * n];
+                    let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                    let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+                    let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o += (a0 * b0[j].widen() + a1 * b1[j].widen())
+                            + (a2 * b2[j].widen() + a3 * b3[j].widen());
+                    }
+                }
+                kk += 4;
+            }
+            for kk in kk..kend {
                 let aik = arow[kk].widen();
                 if aik == 0 {
                     continue;
@@ -280,8 +362,50 @@ pub fn imm_nn_serial<A: PackInt, B: PackInt>(
 }
 
 /// Integer NT kernel: `out[m,ib] = a[m,ua] @ b[ib,ua]^T` (assigns dot
-/// products), with `m = out.len() / ib`.
+/// products), with `m = out.len() / ib`. The dot product runs 4
+/// independent accumulators over `chunks_exact(4)` of both operands,
+/// reduced in the fixed order `(c0+c1)+(c2+c3)` plus a linear tail —
+/// bit-identical to the rolled [`imm_nt_serial_ref`] loop (integer
+/// addition is associative) but free of its loop-carried dependence.
 pub fn imm_nt_serial<A: PackInt, B: PackInt>(
+    a: &[A],
+    b: &[B],
+    out: &mut [i32],
+    ua: usize,
+    ib: usize,
+) {
+    if ib == 0 {
+        return;
+    }
+    let m = out.len() / ib;
+    for i in 0..m {
+        let arow = &a[i * ua..(i + 1) * ua];
+        let orow = &mut out[i * ib..(i + 1) * ib];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * ua..(j + 1) * ua];
+            let ac = arow.chunks_exact(4);
+            let bc = brow.chunks_exact(4);
+            let (atail, btail) = (ac.remainder(), bc.remainder());
+            let mut c = [0i32; 4];
+            for (x4, y4) in ac.zip(bc) {
+                c[0] += x4[0].widen() * y4[0].widen();
+                c[1] += x4[1].widen() * y4[1].widen();
+                c[2] += x4[2].widen() * y4[2].widen();
+                c[3] += x4[3].widen() * y4[3].widen();
+            }
+            let mut acc = (c[0] + c[1]) + (c[2] + c[3]);
+            for (&x, &y) in atail.iter().zip(btail) {
+                acc += x.widen() * y.widen();
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// The pre-unroll NT dot-product loop, kept as the A/B baseline for
+/// `bench_perf`'s `unrolled int gemm` rows (and as a readable reference
+/// for what [`imm_nt_serial`] must reproduce bit for bit).
+pub fn imm_nt_serial_ref<A: PackInt, B: PackInt>(
     a: &[A],
     b: &[B],
     out: &mut [i32],
@@ -308,6 +432,10 @@ pub fn imm_nt_serial<A: PackInt, B: PackInt>(
 
 /// Integer TN kernel for a row-slab: `out[ii,u] += a[nrow, i0+ii] *
 /// b[nrow, u]` over all `ba` batch rows, `ii in 0..out.len()/ub`.
+/// Unrolled 4-wide over batch rows (the TN reduction dimension) with
+/// the same fixed `(v0·b0+v1·b1)+(v2·b2+v3·b3)` pairing as the NN
+/// kernel; the per-row zero-skip coarsens to the quad, the tail keeps
+/// the original per-row skip.
 pub fn imm_tn_serial<A: PackInt, B: PackInt>(
     a: &[A],
     b: &[B],
@@ -321,7 +449,35 @@ pub fn imm_tn_serial<A: PackInt, B: PackInt>(
         return;
     }
     let icount = out.len() / ub;
-    for nrow in 0..ba {
+    let mut r = 0;
+    while r + 4 <= ba {
+        let a0 = &a[r * ia..(r + 1) * ia];
+        let a1 = &a[(r + 1) * ia..(r + 2) * ia];
+        let a2 = &a[(r + 2) * ia..(r + 3) * ia];
+        let a3 = &a[(r + 3) * ia..(r + 4) * ia];
+        let b0 = &b[r * ub..(r + 1) * ub];
+        let b1 = &b[(r + 1) * ub..(r + 2) * ub];
+        let b2 = &b[(r + 2) * ub..(r + 3) * ub];
+        let b3 = &b[(r + 3) * ub..(r + 4) * ub];
+        for ii in 0..icount {
+            let (v0, v1, v2, v3) = (
+                a0[i0 + ii].widen(),
+                a1[i0 + ii].widen(),
+                a2[i0 + ii].widen(),
+                a3[i0 + ii].widen(),
+            );
+            if (v0 | v1 | v2 | v3) == 0 {
+                continue;
+            }
+            let orow = &mut out[ii * ub..(ii + 1) * ub];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += (v0 * b0[j].widen() + v1 * b1[j].widen())
+                    + (v2 * b2[j].widen() + v3 * b3[j].widen());
+            }
+        }
+        r += 4;
+    }
+    for nrow in r..ba {
         let arow = &a[nrow * ia..(nrow + 1) * ia];
         let brow = &b[nrow * ub..(nrow + 1) * ub];
         for ii in 0..icount {
@@ -332,6 +488,277 @@ pub fn imm_tn_serial<A: PackInt, B: PackInt>(
             let orow = &mut out[ii * ub..(ii + 1) * ub];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv.widen();
+            }
+        }
+    }
+}
+
+/// Retire every live element whose running total is within one `prod`
+/// of [`ACC_BOUND`] (not even a one-term segment is provably exact for
+/// it), and return the maximum total magnitude among the survivors.
+/// Shared by the split kernels' joint segment scheduling.
+fn retire_and_headroom(
+    totals: &[i64],
+    bail: &mut [bool],
+    n_alive: &mut usize,
+    prod: u64,
+) -> u64 {
+    let mut hmax = 0u64;
+    for (t, fl) in totals.iter().zip(bail.iter_mut()) {
+        if *fl {
+            continue;
+        }
+        let mag = t.unsigned_abs();
+        if mag + prod > ACC_BOUND {
+            *fl = true;
+            *n_alive -= 1;
+        } else {
+            hmax = hmax.max(mag);
+        }
+    }
+    hmax
+}
+
+/// Split-accumulator NN kernel: `out[m,n] = a[m,kd] @ b[kd,n]` written
+/// as f32, bit-identical to the simulated f32 NN kernel run against a
+/// clean (`+0.0`) destination. `ai`/`bi` are the packed integers of the
+/// f32 operands `af`/`bf`, `prod = amax_a · amax_b` (the planner
+/// guarantees `1 ≤ prod ≤` [`ACC_BOUND`]), `scale = 2^(pa+pb)`.
+///
+/// Per output row the k-reduction runs in adaptively-sized segments:
+/// each segment takes `(ACC_BOUND − max_live |total|) / prod` terms
+/// (the first therefore takes the maximal [`seg_len`]), accumulates
+/// exactly in i32 (zero-skip on the a element, like the f32 kernel),
+/// and folds into per-column i64 totals in ascending k-order. Within
+/// such a segment every simulated-kernel partial sum has integer
+/// magnitude ≤ `ACC_BOUND`, so live columns convert exactly as
+/// `total as f32 * scale`; a column retired by the headroom check
+/// replays the simulated kernel's own f32 loop instead.
+#[allow(clippy::too_many_arguments)]
+pub fn imm_nn_split_serial<A: PackInt, B: PackInt>(
+    ai: &[A],
+    bi: &[B],
+    af: &[f32],
+    bf: &[f32],
+    out: &mut [f32],
+    kd: usize,
+    n: usize,
+    prod: u64,
+    scale: f32,
+) {
+    if n == 0 || kd == 0 {
+        return;
+    }
+    debug_assert!(prod >= 1 && prod <= ACC_BOUND);
+    let m = out.len() / n;
+    let mut totals = vec![0i64; n];
+    let mut bail = vec![false; n];
+    let mut segacc = vec![0i32; n];
+    for i in 0..m {
+        totals.fill(0);
+        bail.fill(false);
+        let arow = &ai[i * kd..(i + 1) * kd];
+        let mut n_alive = n;
+        let mut k = 0;
+        while k < kd && n_alive > 0 {
+            let hmax = retire_and_headroom(&totals, &mut bail, &mut n_alive, prod);
+            if n_alive == 0 {
+                break;
+            }
+            let kend = k + (((ACC_BOUND - hmax) / prod) as usize).min(kd - k);
+            segacc.fill(0);
+            for kk in k..kend {
+                let aik = arow[kk].widen();
+                if aik == 0 {
+                    continue;
+                }
+                let brow = &bi[kk * n..(kk + 1) * n];
+                for (sa, &bv) in segacc.iter_mut().zip(brow) {
+                    *sa += aik * bv.widen();
+                }
+            }
+            for ((t, &fl), &sa) in totals.iter_mut().zip(&bail).zip(&segacc) {
+                if !fl {
+                    *t += sa as i64;
+                }
+            }
+            k = kend;
+        }
+        let orow = &mut out[i * n..(i + 1) * n];
+        for ((o, &t), &fl) in orow.iter_mut().zip(&totals).zip(&bail) {
+            if !fl {
+                *o = t as f32 * scale;
+            }
+        }
+        if n_alive < n {
+            // the simulated NN loop for the retired columns: ascending
+            // k, zero-skip on the a element, from the clean +0.0 start
+            let afrow = &af[i * kd..(i + 1) * kd];
+            for (j, (o, &fl)) in orow.iter_mut().zip(&bail).enumerate() {
+                if !fl {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for (kk, &av) in afrow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * bf[kk * n + j];
+                }
+                *o = acc;
+            }
+        }
+    }
+}
+
+/// Split-accumulator NT kernel: `out[m,ib] = a[m,ua] @ b[ib,ua]^T`
+/// written as f32, bit-identical to the simulated f32 NT kernel (which
+/// assigns dot products and has *no* zero-skip — the fallback replays
+/// exactly that). Per-element adaptive segments as in
+/// [`imm_nn_split_serial`], with the segment dot product unrolled
+/// 4-wide like [`imm_nt_serial`].
+pub fn imm_nt_split_serial<A: PackInt, B: PackInt>(
+    ai: &[A],
+    bi: &[B],
+    af: &[f32],
+    bf: &[f32],
+    out: &mut [f32],
+    ua: usize,
+    ib: usize,
+    prod: u64,
+    scale: f32,
+) {
+    if ib == 0 {
+        return;
+    }
+    debug_assert!(prod >= 1 && prod <= ACC_BOUND);
+    let m = out.len() / ib;
+    for i in 0..m {
+        let arow = &ai[i * ua..(i + 1) * ua];
+        let afrow = &af[i * ua..(i + 1) * ua];
+        let orow = &mut out[i * ib..(i + 1) * ib];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &bi[j * ua..(j + 1) * ua];
+            let mut total = 0i64;
+            let mut exact = true;
+            let mut k = 0;
+            while k < ua {
+                let mag = total.unsigned_abs();
+                if mag + prod > ACC_BOUND {
+                    exact = false;
+                    break;
+                }
+                let kend = k + (((ACC_BOUND - mag) / prod) as usize).min(ua - k);
+                let ac = arow[k..kend].chunks_exact(4);
+                let bc = brow[k..kend].chunks_exact(4);
+                let (atail, btail) = (ac.remainder(), bc.remainder());
+                let mut c = [0i32; 4];
+                for (x4, y4) in ac.zip(bc) {
+                    c[0] += x4[0].widen() * y4[0].widen();
+                    c[1] += x4[1].widen() * y4[1].widen();
+                    c[2] += x4[2].widen() * y4[2].widen();
+                    c[3] += x4[3].widen() * y4[3].widen();
+                }
+                let mut acc = (c[0] + c[1]) + (c[2] + c[3]);
+                for (&x, &y) in atail.iter().zip(btail) {
+                    acc += x.widen() * y.widen();
+                }
+                total += acc as i64;
+                k = kend;
+            }
+            *o = if exact {
+                total as f32 * scale
+            } else {
+                let bfrow = &bf[j * ua..(j + 1) * ua];
+                let mut acc = 0.0f32;
+                for (&x, &y) in afrow.iter().zip(bfrow) {
+                    acc += x * y;
+                }
+                acc
+            };
+        }
+    }
+}
+
+/// Split-accumulator TN kernel for a row-slab: `out[ii,u] = Σ_nrow
+/// a[nrow, i0+ii] · b[nrow, u]` written as f32, bit-identical to the
+/// simulated f32 TN kernel run against a clean destination (ascending
+/// `nrow`, zero-skip on the a element — the fallback replays exactly
+/// that). Adaptive segments cut the batch-row reduction jointly for
+/// the whole slab; headroom, fold and bail as in
+/// [`imm_nn_split_serial`].
+#[allow(clippy::too_many_arguments)]
+pub fn imm_tn_split_serial<A: PackInt, B: PackInt>(
+    ai: &[A],
+    bi: &[B],
+    af: &[f32],
+    bf: &[f32],
+    out: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    i0: usize,
+    prod: u64,
+    scale: f32,
+) {
+    if ub == 0 {
+        return;
+    }
+    debug_assert!(prod >= 1 && prod <= ACC_BOUND);
+    let icount = out.len() / ub;
+    let mut totals = vec![0i64; icount * ub];
+    let mut bail = vec![false; icount * ub];
+    let mut segacc = vec![0i32; icount * ub];
+    let mut n_alive = icount * ub;
+    let mut r = 0;
+    while r < ba && n_alive > 0 {
+        let hmax = retire_and_headroom(&totals, &mut bail, &mut n_alive, prod);
+        if n_alive == 0 {
+            break;
+        }
+        let rend = r + (((ACC_BOUND - hmax) / prod) as usize).min(ba - r);
+        segacc.fill(0);
+        for nrow in r..rend {
+            let arow = &ai[nrow * ia..(nrow + 1) * ia];
+            let brow = &bi[nrow * ub..(nrow + 1) * ub];
+            for ii in 0..icount {
+                let av = arow[i0 + ii].widen();
+                if av == 0 {
+                    continue;
+                }
+                let srow = &mut segacc[ii * ub..(ii + 1) * ub];
+                for (sa, &bv) in srow.iter_mut().zip(brow) {
+                    *sa += av * bv.widen();
+                }
+            }
+        }
+        for ((t, &fl), &sa) in totals.iter_mut().zip(&bail).zip(&segacc) {
+            if !fl {
+                *t += sa as i64;
+            }
+        }
+        r = rend;
+    }
+    for ((o, &t), &fl) in out.iter_mut().zip(&totals).zip(&bail) {
+        if !fl {
+            *o = t as f32 * scale;
+        }
+    }
+    if n_alive < icount * ub {
+        for ii in 0..icount {
+            for u in 0..ub {
+                if !bail[ii * ub + u] {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for nrow in 0..ba {
+                    let av = af[nrow * ia + i0 + ii];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * bf[nrow * ub + u];
+                }
+                out[ii * ub + u] = acc;
             }
         }
     }
@@ -605,6 +1032,249 @@ mod tests {
         let _ = pack(&[1.0f32, 2.0]);
         let _ = pack(&[0.1f32]); // miss still counts
         assert!(pack_calls() >= before + 2);
+    }
+
+    #[test]
+    fn seg_len_edges_match_the_spec() {
+        assert_eq!(seg_len(0, 5), None, "zero product: whole-site bound already accepts");
+        assert_eq!(seg_len(5, 0), None);
+        assert_eq!(seg_len(1, 1), Some(1 << 24));
+        assert_eq!(seg_len(4096, 4096), Some(1), "prod exactly 2^24");
+        assert_eq!(seg_len(4096, 4097), None, "products not f32-exact");
+        assert_eq!(seg_len(512, 512), Some(64), "the deep-l0 10-bit case");
+        for (a, b) in [(1u32, 1u32), (3, 511), (127, 127), (511, 513), (2047, 2047), (4095, 4095)]
+        {
+            let s = seg_len(a, b).unwrap() as u64;
+            let p = a as u64 * b as u64;
+            assert!(s * p <= ACC_BOUND, "({a},{b}): safe");
+            assert!((s + 1) * p > ACC_BOUND, "({a},{b}): maximal");
+        }
+    }
+
+    #[test]
+    fn unrolled_nt_matches_the_rolled_reference() {
+        let mut state = 0xDEAD_BEEFu64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as i32 % 201) - 100
+        };
+        // ua = 11 exercises two full quads plus a 3-term tail; 1 and 4
+        // hit the all-tail and all-quad edges
+        for (m, ua, ib) in [(3usize, 11usize, 4usize), (2, 8, 3), (1, 3, 2), (4, 1, 1), (2, 4, 2)]
+        {
+            let a: Vec<i16> = (0..m * ua).map(|_| next() as i16).collect();
+            let b: Vec<i8> = (0..ib * ua).map(|_| next() as i8).collect();
+            let mut fast = vec![0i32; m * ib];
+            let mut slow = vec![0i32; m * ib];
+            imm_nt_serial(&a, &b, &mut fast, ua, ib);
+            imm_nt_serial_ref(&a, &b, &mut slow, ua, ib);
+            assert_eq!(fast, slow, "({m},{ua},{ib})");
+        }
+    }
+
+    /// The simulated NN kernel's per-element arithmetic: ascending k,
+    /// zero-skip on the a element, f32 rounding after every add.
+    fn ref_nn_f32(a: &[f32], b: &[f32], m: usize, kd: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for k in 0..kd {
+                    let av = a[i * kd + k];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * b[k * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// The simulated NT kernel's per-element arithmetic (no zero-skip).
+    fn ref_nt_f32(a: &[f32], b: &[f32], m: usize, ua: usize, ib: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * ib];
+        for i in 0..m {
+            for j in 0..ib {
+                let mut acc = 0.0f32;
+                for k in 0..ua {
+                    acc += a[i * ua + k] * b[j * ua + k];
+                }
+                out[i * ib + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// The simulated TN kernel's per-element arithmetic for a row-slab.
+    fn ref_tn_f32(
+        a: &[f32],
+        b: &[f32],
+        ba: usize,
+        ia: usize,
+        ub: usize,
+        i0: usize,
+        icount: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; icount * ub];
+        for ii in 0..icount {
+            for u in 0..ub {
+                let mut acc = 0.0f32;
+                for nrow in 0..ba {
+                    let av = a[nrow * ia + i0 + ii];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * b[nrow * ub + u];
+                }
+                out[ii * ub + u] = acc;
+            }
+        }
+        out
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn split_kernels_match_simulated_reference_on_deep_reductions() {
+        // amax ≤ 512 at exp -6: prod ≤ 2^18 ≤ 2^24, first segment ≥ 64
+        // terms; inner 300 pushes the whole-site worst case past 2^24,
+        // so only the split path applies. Mixed-sign data keeps totals
+        // small and the integer path live throughout.
+        let exp = -6i32;
+        let scale = exp2f(exp + exp);
+        let s1 = exp2f(exp);
+        let mut state = 0x517A_CC00u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as i64 % 1025 - 512) as i32
+        };
+        let (m, kd, n) = (3usize, 300usize, 5usize);
+        let ai: Vec<i16> = (0..m * kd).map(|_| next() as i16).collect();
+        let bi: Vec<i16> = (0..kd * n).map(|_| next() as i16).collect();
+        let af: Vec<f32> = ai.iter().map(|&v| v as f32 * s1).collect();
+        let bf: Vec<f32> = bi.iter().map(|&v| v as f32 * s1).collect();
+        let amax = |v: &[i16]| v.iter().map(|x| x.unsigned_abs() as u32).max().unwrap();
+        let prod = amax(&ai) as u64 * amax(&bi) as u64;
+        assert!(prod <= ACC_BOUND && kd as u64 * prod > ACC_BOUND, "split regime");
+
+        let mut nn = vec![0.0f32; m * n];
+        imm_nn_split_serial(&ai, &bi, &af, &bf, &mut nn, kd, n, prod, scale);
+        assert_bits_eq(&nn, &ref_nn_f32(&af, &bf, m, kd, n), "nn");
+
+        // NT over the same depth: b2[n, kd]
+        let b2: Vec<i16> = (0..n * kd).map(|_| next() as i16).collect();
+        let b2f: Vec<f32> = b2.iter().map(|&v| v as f32 * s1).collect();
+        let prod_nt = amax(&ai) as u64 * amax(&b2) as u64;
+        let mut nt = vec![0.0f32; m * n];
+        imm_nt_split_serial(&ai, &b2, &af, &b2f, &mut nt, kd, n, prod_nt, scale);
+        assert_bits_eq(&nt, &ref_nt_f32(&af, &b2f, m, kd, n), "nt");
+
+        // TN: deep batch reduction, checked slab by slab
+        let (ba, ia, ub) = (300usize, 4usize, 3usize);
+        let at: Vec<i16> = (0..ba * ia).map(|_| next() as i16).collect();
+        let bt: Vec<i16> = (0..ba * ub).map(|_| next() as i16).collect();
+        let atf: Vec<f32> = at.iter().map(|&v| v as f32 * s1).collect();
+        let btf: Vec<f32> = bt.iter().map(|&v| v as f32 * s1).collect();
+        let prod_tn = amax(&at) as u64 * amax(&bt) as u64;
+        for (i0, rows) in [(0usize, ia), (1, 2), (3, 1)] {
+            let mut tn = vec![0.0f32; rows * ub];
+            imm_tn_split_serial(&at, &bt, &atf, &btf, &mut tn, ba, ia, ub, i0, prod_tn, scale);
+            assert_bits_eq(&tn, &ref_tn_f32(&atf, &btf, ba, ia, ub, i0, rows), "tn");
+        }
+
+        // i8 a-operand through the same generic path (deep enough that
+        // the whole-site bound still rejects: 1200 · 100 · 512 > 2^24)
+        let (m8, kd8, n8) = (2usize, 1200usize, 3usize);
+        let a8: Vec<i8> = (0..m8 * kd8).map(|_| (next() % 101) as i8).collect();
+        let b8: Vec<i16> = (0..kd8 * n8).map(|_| next() as i16).collect();
+        let a8f: Vec<f32> = a8.iter().map(|&v| v as f32 * s1).collect();
+        let b8f: Vec<f32> = b8.iter().map(|&v| v as f32 * s1).collect();
+        let amax8 = a8.iter().map(|x| x.unsigned_abs() as u32).max().unwrap();
+        let prod8 = amax8 as u64 * amax(&b8) as u64;
+        assert!(prod8 <= ACC_BOUND && kd8 as u64 * prod8 > ACC_BOUND, "split regime");
+        let mut nn8 = vec![0.0f32; m8 * n8];
+        imm_nn_split_serial(&a8, &b8, &a8f, &b8f, &mut nn8, kd8, n8, prod8, scale);
+        assert_bits_eq(&nn8, &ref_nn_f32(&a8f, &b8f, m8, kd8, n8), "nn i8");
+    }
+
+    #[test]
+    fn split_kernels_bail_to_the_rounding_reference_on_adversarial_sums() {
+        // All-positive maximal data: totals blow through 2^24, where the
+        // simulated f32 kernel *rounds* — the split kernels must detect
+        // the lost headroom, retire those elements and replay the
+        // reference loop bit for bit. Column 1 mixes signs so it stays
+        // live, pinning per-column bail isolation.
+        let v = 4095i16; // v² = 16769025, within one product of 2^24
+        let kd = 48usize;
+        let ai: Vec<i16> = vec![v; kd]; // m = 1
+        let mut bi = vec![0i16; kd * 2];
+        for k in 0..kd {
+            bi[k * 2] = v;
+            bi[k * 2 + 1] = if k % 2 == 0 { v } else { -v };
+        }
+        let af: Vec<f32> = ai.iter().map(|&x| x as f32).collect();
+        let bf: Vec<f32> = bi.iter().map(|&x| x as f32).collect();
+        let prod = (v as u64) * (v as u64);
+        let want = ref_nn_f32(&af, &bf, 1, kd, 2);
+        // non-vacuity: the all-positive column really rounds (its exact
+        // total 48·4095² needs a finer ulp than f32 has at 8·10^8)
+        let exact = kd as f64 * (v as f64) * (v as f64);
+        assert!(
+            (want[0] as f64) != exact,
+            "reference must round for the bail path to be exercised"
+        );
+        let mut nn = vec![0.0f32; 2];
+        imm_nn_split_serial(&ai, &bi, &af, &bf, &mut nn, kd, 2, prod, 1.0);
+        assert_bits_eq(&nn, &want, "nn bail");
+        // the cancelling column stays on the exact integer path
+        assert_eq!(nn[1], 0.0, "mixed-sign column cancels exactly");
+
+        // NT: same adversarial row as a dot product
+        let mut nt = vec![0.0f32; 1];
+        let b_row: Vec<i16> = (0..kd).map(|k| bi[k * 2]).collect();
+        let b_rowf: Vec<f32> = b_row.iter().map(|&x| x as f32).collect();
+        imm_nt_split_serial(&ai, &b_row, &af, &b_rowf, &mut nt, kd, 1, prod, 1.0);
+        assert_bits_eq(&nt, &ref_nt_f32(&af, &b_rowf, 1, kd, 1), "nt bail");
+
+        // TN: 48 batch rows of maximal same-sign data
+        let (ba, ia, ub) = (kd, 2usize, 2usize);
+        let at: Vec<i16> = (0..ba * ia).map(|i| if i % ia == 0 { v } else { -v }).collect();
+        let bt: Vec<i16> = vec![v; ba * ub];
+        let atf: Vec<f32> = at.iter().map(|&x| x as f32).collect();
+        let btf: Vec<f32> = bt.iter().map(|&x| x as f32).collect();
+        let mut tn = vec![0.0f32; ia * ub];
+        imm_tn_split_serial(&at, &bt, &atf, &btf, &mut tn, ba, ia, ub, 0, prod, 1.0);
+        assert_bits_eq(&tn, &ref_tn_f32(&atf, &btf, ba, ia, ub, 0, ia), "tn bail");
+    }
+
+    #[test]
+    fn split_kernels_handle_degenerate_shapes() {
+        // inner = 0: nothing to reduce; a clean destination stays +0.0
+        let mut out = vec![0.0f32; 4];
+        imm_nn_split_serial::<i16, i16>(&[], &[], &[], &[], &mut out, 0, 2, 100, 1.0);
+        assert!(out.iter().all(|v| v.to_bits() == 0));
+        imm_nt_split_serial::<i16, i16>(&[1, 2], &[], &[1.0, 2.0], &[], &mut out, 0, 2, 100, 1.0);
+        assert!(out.iter().all(|v| v.to_bits() == 0), "ua = 0 dots are empty sums");
+        // inner = 1: a single product is always exact under prod ≤ 2^24
+        let mut one = vec![0.0f32; 1];
+        imm_nt_split_serial::<i16, i16>(
+            &[4095],
+            &[-4095],
+            &[4095.0],
+            &[-4095.0],
+            &mut one,
+            1,
+            1,
+            4095 * 4095,
+            1.0,
+        );
+        assert_eq!(one[0], -16769025.0);
     }
 
     #[test]

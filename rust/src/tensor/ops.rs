@@ -30,6 +30,7 @@
 //! `QuantEpilogue::run` sweep) at any thread count — enforced by
 //! `tests/fused_parity.rs` and DESIGN.md §Fused quantized GEMM.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use super::int_gemm::{self, Packed};
@@ -312,7 +313,8 @@ pub fn matmul_tn_sl(a: &[f32], b: &[f32], ba: usize, ia: usize, ub: usize) -> Ve
 /// Run the fused epilogue over one output tile of `rows × n` elements
 /// starting at flat element `offset` of the logical output: add the bias
 /// row (if any), then quantize in place with stats. Bit-identical to
-/// doing the same two steps in separate whole-tensor passes.
+/// doing the same two steps in separate whole-tensor passes. (Thin alias
+/// over [`QuantEpilogue::run_biased`], the shared implementation.)
 fn fused_epilogue(
     chunk: &mut [f32],
     n: usize,
@@ -320,14 +322,7 @@ fn fused_epilogue(
     epi: QuantEpilogue,
     offset: u64,
 ) -> QuantStats {
-    if let Some(bs) = bias {
-        for row in chunk.chunks_mut(n) {
-            for (o, &bv) in row.iter_mut().zip(bs) {
-                *o += bv;
-            }
-        }
-    }
-    epi.run(chunk, offset)
+    epi.run_biased(chunk, n, bias, offset)
 }
 
 /// Fused `dst += a[m,kd] @ b[kd,n]`, then bias add + quantization in the
@@ -590,48 +585,208 @@ pub fn matmul_tn_sl_q(
 /// `Simulated` is the reference: f32 multiplies + [`QuantEpilogue`].
 /// `IntDomain` packs both operands to i8/i16 on a common power-of-two
 /// grid ([`int_gemm::pack`]), multiplies in the integer domain with i32
-/// accumulators and converts back exactly — bit-identical to `Simulated`
-/// whenever it is selected (see `int_gemm`'s module docs for the proof
-/// obligations, and `tests/int_gemm_parity.rs` for the enforcement).
+/// accumulators and converts back exactly. `Split` is the integer path
+/// for deep/wide sites whose *whole-reduction* worst case exceeds
+/// [`int_gemm::ACC_BOUND`] while individual products still fit: the
+/// k-reduction runs in exact-i32 segments folded into i64 totals under
+/// a per-output headroom guard (see `int_gemm`'s module docs). Both
+/// integer lowerings are bit-identical to `Simulated` whenever selected
+/// — `tests/int_gemm_parity.rs` enforces it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QuantGemmImpl {
     /// f32 multiplies, quantization simulated by the fused epilogue.
     Simulated,
     /// i8/i16 × i8/i16 → i32 MACs, exact conversion back to f32.
     IntDomain,
+    /// Segmented i32 MACs with i64 carry for deep/wide reductions.
+    Split,
 }
 
-/// Pack both operands and check the full eligibility condition for the
-/// integer-domain lowering at one GEMM site:
+/// Why a site (with the integer domain enabled) fell back to the
+/// simulated kernel. Ordered by check order in the planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SimReason {
+    /// The accumulated destination held non-`+0.0` bits.
+    DirtyDst,
+    /// An operand did not pack onto a common power-of-two i16 grid.
+    Unpackable,
+    /// The product exponent left the exact-conversion window.
+    ExpWindow,
+    /// Individual products exceed `ACC_BOUND` — not even [`Split`]
+    /// can reproduce the simulated kernel's rounding.
+    AccBound,
+}
+
+/// Which integer lowering a planned (non-Simulated) site rides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum IntKind {
+    Whole,
+    Split,
+}
+
+/// Per-site lowering-outcome counters ([`QuantGemmImpl`] plus the
+/// rejection reason for simulated fallbacks). Fields are atomics so the
+/// layer graph can own one tally per GEMM site while data-parallel
+/// workers record concurrently; totals are sums of per-call increments
+/// and therefore deterministic at any worker count.
+#[derive(Debug, Default)]
+pub struct GemmSiteTally {
+    int: AtomicU64,
+    split: AtomicU64,
+    disabled: AtomicU64,
+    dirty_dst: AtomicU64,
+    unpackable: AtomicU64,
+    exp_window: AtomicU64,
+    acc_bound: AtomicU64,
+}
+
+impl GemmSiteTally {
+    pub fn new() -> GemmSiteTally {
+        GemmSiteTally::default()
+    }
+
+    fn record_kind(&self, kind: IntKind) {
+        match kind {
+            IntKind::Whole => &self.int,
+            IntKind::Split => &self.split,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_sim(&self, why: SimReason) {
+        match why {
+            SimReason::DirtyDst => &self.dirty_dst,
+            SimReason::Unpackable => &self.unpackable,
+            SimReason::ExpWindow => &self.exp_window,
+            SimReason::AccBound => &self.acc_bound,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_disabled(&self) {
+        self.disabled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters (relaxed loads — callers read between
+    /// steps, not mid-GEMM).
+    pub fn counts(&self) -> GemmSiteCounts {
+        GemmSiteCounts {
+            int: self.int.load(Ordering::Relaxed),
+            split: self.split.load(Ordering::Relaxed),
+            disabled: self.disabled.load(Ordering::Relaxed),
+            dirty_dst: self.dirty_dst.load(Ordering::Relaxed),
+            unpackable: self.unpackable.load(Ordering::Relaxed),
+            exp_window: self.exp_window.load(Ordering::Relaxed),
+            acc_bound: self.acc_bound.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain snapshot of a [`GemmSiteTally`]: how many dispatches of one
+/// GEMM site rode each lowering, with simulated fallbacks broken down
+/// by rejection reason. Surfaced as the `int_gemm_sites` section of
+/// `RunReport` and the `int_gemm_dispatch` row of serve reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GemmSiteCounts {
+    /// Whole-reduction integer dispatches ([`QuantGemmImpl::IntDomain`]).
+    pub int: u64,
+    /// Split-accumulator integer dispatches ([`QuantGemmImpl::Split`]).
+    pub split: u64,
+    /// Calls made with the integer domain disabled for the step.
+    pub disabled: u64,
+    /// Simulated: the accumulated destination held non-`+0.0` bits.
+    pub dirty_dst: u64,
+    /// Simulated: an operand did not pack to an i16 grid.
+    pub unpackable: u64,
+    /// Simulated: product exponent outside the exact window.
+    pub exp_window: u64,
+    /// Simulated: individual products exceed the f32-exact bound.
+    pub acc_bound: u64,
+}
+
+impl GemmSiteCounts {
+    /// Total simulated-path dispatches (every non-integer outcome).
+    pub fn simulated(&self) -> u64 {
+        self.disabled + self.dirty_dst + self.unpackable + self.exp_window + self.acc_bound
+    }
+
+    /// Total dispatches recorded.
+    pub fn total(&self) -> u64 {
+        self.int + self.split + self.simulated()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Field-wise accumulate (for merging worker-local snapshots).
+    pub fn merge(&mut self, o: &GemmSiteCounts) {
+        self.int += o.int;
+        self.split += o.split;
+        self.disabled += o.disabled;
+        self.dirty_dst += o.dirty_dst;
+        self.unpackable += o.unpackable;
+        self.exp_window += o.exp_window;
+        self.acc_bound += o.acc_bound;
+    }
+}
+
+/// Decide which integer lowering a pair of packs supports at depth
+/// `inner`: the whole-reduction bound picks [`IntKind::Whole`], a
+/// too-deep reduction whose individual products still fit picks
+/// [`IntKind::Split`] ([`int_gemm::seg_len`]), and anything else is a
+/// reasoned rejection. Shared by the per-call and cached-b planners so
+/// the two can never diverge.
+fn packed_kind(ap: &Packed, bp: &Packed, inner: usize) -> Result<IntKind, SimReason> {
+    let pe = ap.exp + bp.exp;
+    if !(int_gemm::EXP_LO..=int_gemm::EXP_HI).contains(&pe) {
+        return Err(SimReason::ExpWindow);
+    }
+    if int_gemm::accum_bound_ok(inner, ap.amax, bp.amax) {
+        Ok(IntKind::Whole)
+    } else if int_gemm::seg_len(ap.amax, bp.amax).is_some() {
+        Ok(IntKind::Split)
+    } else {
+        Err(SimReason::AccBound)
+    }
+}
+
+/// Pack both operands and run the full eligibility condition for the
+/// integer-domain lowerings at one GEMM site:
 ///
 /// 1. `accum_dst` (the `dst +=` operand of the NN/TN flavours, `None`
 ///    for the assigning NT flavour) holds only `+0.0` bits — otherwise
 ///    the pre-existing values would have to be folded into the integer
 ///    accumulation, which the packing can't express;
 /// 2. both operands pack onto common power-of-two grids;
-/// 3. the worst-case partial sum fits [`int_gemm::ACC_BOUND`];
-/// 4. the product exponent sits in the exact-conversion window.
+/// 3. the product exponent sits in the exact-conversion window;
+/// 4. the worst-case partial sum picks the lowering: within
+///    [`int_gemm::ACC_BOUND`] → whole-reduction integer, otherwise
+///    split accumulators when individual products still fit.
 fn int_packs(
     a: &[f32],
     b: &[f32],
     inner: usize,
     accum_dst: Option<&[f32]>,
-) -> Option<(Packed, Packed)> {
+) -> Result<(Packed, Packed, IntKind), SimReason> {
     if let Some(d) = accum_dst {
         if !d.iter().all(|v| v.to_bits() == 0) {
-            return None;
+            return Err(SimReason::DirtyDst);
         }
     }
-    let ap = int_gemm::pack(a)?;
-    let bp = int_gemm::pack(b)?;
-    if !int_gemm::accum_bound_ok(inner, ap.amax, bp.amax) {
-        return None;
+    let ap = int_gemm::pack(a).ok_or(SimReason::Unpackable)?;
+    let bp = int_gemm::pack(b).ok_or(SimReason::Unpackable)?;
+    let kind = packed_kind(&ap, &bp, inner)?;
+    Ok((ap, bp, kind))
+}
+
+/// Map a planning outcome onto the public [`QuantGemmImpl`].
+fn kind_to_impl(kind: Result<IntKind, SimReason>) -> QuantGemmImpl {
+    match kind {
+        Ok(IntKind::Whole) => QuantGemmImpl::IntDomain,
+        Ok(IntKind::Split) => QuantGemmImpl::Split,
+        Err(_) => QuantGemmImpl::Simulated,
     }
-    let pe = ap.exp + bp.exp;
-    if !(int_gemm::EXP_LO..=int_gemm::EXP_HI).contains(&pe) {
-        return None;
-    }
-    Some((ap, bp))
 }
 
 /// The lowering the `*_qd` entry points would select for these operands
@@ -646,11 +801,7 @@ pub fn quant_gemm_plan(
     inner: usize,
     accum_dst: Option<&[f32]>,
 ) -> QuantGemmImpl {
-    if int_packs(a, b, inner, accum_dst).is_some() {
-        QuantGemmImpl::IntDomain
-    } else {
-        QuantGemmImpl::Simulated
-    }
+    kind_to_impl(int_packs(a, b, inner, accum_dst).map(|(_, _, k)| k))
 }
 
 /// Integer NN tile: rows `i0 .. i0+rows` of `acc += a @ b`, dispatched
@@ -839,10 +990,239 @@ fn int_tn_run(
     stats
 }
 
+/// Split-accumulator NN tile: rows `i0 .. i0+rows` of `out = a @ b`
+/// written as f32 (bailed elements come from the f32 replay, so the
+/// tile writes f32 directly rather than an i32 accumulator).
+#[allow(clippy::too_many_arguments)]
+fn split_nn_tile(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    rows: usize,
+    kd: usize,
+    n: usize,
+    prod: u64,
+    scale: f32,
+) {
+    use int_gemm::PackedInts as P;
+    let r = i0 * kd..(i0 + rows) * kd;
+    let af = &a[r.clone()];
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => {
+            int_gemm::imm_nn_split_serial(&av[r.clone()], &bv[..], af, b, out, kd, n, prod, scale)
+        }
+        (P::I8(av), P::I16(bv)) => {
+            int_gemm::imm_nn_split_serial(&av[r.clone()], &bv[..], af, b, out, kd, n, prod, scale)
+        }
+        (P::I16(av), P::I8(bv)) => {
+            int_gemm::imm_nn_split_serial(&av[r.clone()], &bv[..], af, b, out, kd, n, prod, scale)
+        }
+        (P::I16(av), P::I16(bv)) => {
+            int_gemm::imm_nn_split_serial(&av[r.clone()], &bv[..], af, b, out, kd, n, prod, scale)
+        }
+    }
+}
+
+/// Split-accumulator NT tile: rows `i0 .. i0+rows` of `out = a @ b^T`.
+#[allow(clippy::too_many_arguments)]
+fn split_nt_tile(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    i0: usize,
+    rows: usize,
+    ua: usize,
+    ib: usize,
+    prod: u64,
+    scale: f32,
+) {
+    use int_gemm::PackedInts as P;
+    let r = i0 * ua..(i0 + rows) * ua;
+    let af = &a[r.clone()];
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => {
+            int_gemm::imm_nt_split_serial(&av[r.clone()], &bv[..], af, b, out, ua, ib, prod, scale)
+        }
+        (P::I8(av), P::I16(bv)) => {
+            int_gemm::imm_nt_split_serial(&av[r.clone()], &bv[..], af, b, out, ua, ib, prod, scale)
+        }
+        (P::I16(av), P::I8(bv)) => {
+            int_gemm::imm_nt_split_serial(&av[r.clone()], &bv[..], af, b, out, ua, ib, prod, scale)
+        }
+        (P::I16(av), P::I16(bv)) => {
+            int_gemm::imm_nt_split_serial(&av[r.clone()], &bv[..], af, b, out, ua, ib, prod, scale)
+        }
+    }
+}
+
+/// Split-accumulator TN row-slab tile at offset `i0` (whole operands,
+/// the kernel indexes the slab; `out.len()` fixes the slab width).
+#[allow(clippy::too_many_arguments)]
+fn split_tn_tile(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    i0: usize,
+    prod: u64,
+    scale: f32,
+) {
+    use int_gemm::PackedInts as P;
+    match (&ap.ints, &bp.ints) {
+        (P::I8(av), P::I8(bv)) => {
+            int_gemm::imm_tn_split_serial(&av[..], &bv[..], a, b, out, ba, ia, ub, i0, prod, scale)
+        }
+        (P::I8(av), P::I16(bv)) => {
+            int_gemm::imm_tn_split_serial(&av[..], &bv[..], a, b, out, ba, ia, ub, i0, prod, scale)
+        }
+        (P::I16(av), P::I8(bv)) => {
+            int_gemm::imm_tn_split_serial(&av[..], &bv[..], a, b, out, ba, ia, ub, i0, prod, scale)
+        }
+        (P::I16(av), P::I16(bv)) => {
+            int_gemm::imm_tn_split_serial(&av[..], &bv[..], a, b, out, ba, ia, ub, i0, prod, scale)
+        }
+    }
+}
+
+/// Split-accumulator NN: same row partitioning, epilogue offsets and
+/// tile-order stats merge as [`matmul_sl_q_into_threads`]. The tiles
+/// write f32 directly (bailed elements bypass the integer total), so
+/// the epilogue is the plain bias-then-quantize [`QuantEpilogue::run_biased`]
+/// the simulated kernel uses — not `run_int`.
+#[allow(clippy::too_many_arguments)]
+fn split_nn_run(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let prod = ap.amax as u64 * bp.amax as u64;
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        split_nn_tile(ap, bp, a, b, dst, 0, m, kd, n, prod, scale);
+        return epi.run_biased(dst, n, bias, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / n;
+            tiles.push(s.spawn(move || {
+                split_nn_tile(ap, bp, a, b, ochunk, i0, rows, kd, n, prod, scale);
+                epi.run_biased(ochunk, n, bias, (i0 * n) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("split matmul worker"));
+        }
+    });
+    stats
+}
+
+/// Split-accumulator NT: mirrors [`matmul_nt_sl_q_into_threads`].
+#[allow(clippy::too_many_arguments)]
+fn split_nt_run(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    m: usize,
+    ua: usize,
+    ib: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let prod = ap.amax as u64 * bp.amax as u64;
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(m).max(1);
+    if nt <= 1 {
+        split_nt_tile(ap, bp, a, b, dst, 0, m, ua, ib, prod, scale);
+        return epi.run_biased(dst, ib, None, 0);
+    }
+    let rows_per = m.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * ib).enumerate() {
+            let i0 = ci * rows_per;
+            let rows = ochunk.len() / ib;
+            tiles.push(s.spawn(move || {
+                split_nt_tile(ap, bp, a, b, ochunk, i0, rows, ua, ib, prod, scale);
+                epi.run_biased(ochunk, ib, None, (i0 * ib) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("split matmul_nt worker"));
+        }
+    });
+    stats
+}
+
+/// Split-accumulator TN: mirrors [`matmul_tn_sl_q_into_threads`].
+#[allow(clippy::too_many_arguments)]
+fn split_tn_run(
+    ap: &Packed,
+    bp: &Packed,
+    a: &[f32],
+    b: &[f32],
+    dst: &mut [f32],
+    ba: usize,
+    ia: usize,
+    ub: usize,
+    epi: QuantEpilogue,
+    threads: usize,
+) -> QuantStats {
+    let prod = ap.amax as u64 * bp.amax as u64;
+    let scale = int_gemm::exp2f(ap.exp + bp.exp);
+    let nt = threads.min(ia).max(1);
+    if nt <= 1 {
+        split_tn_tile(ap, bp, a, b, dst, ba, ia, ub, 0, prod, scale);
+        return epi.run_biased(dst, ub, None, 0);
+    }
+    let rows_per = ia.div_ceil(nt);
+    let mut stats = QuantStats::default();
+    std::thread::scope(|s| {
+        let mut tiles = Vec::new();
+        for (ci, ochunk) in dst.chunks_mut(rows_per * ub).enumerate() {
+            let i0 = ci * rows_per;
+            tiles.push(s.spawn(move || {
+                split_tn_tile(ap, bp, a, b, ochunk, ba, ia, ub, i0, prod, scale);
+                epi.run_biased(ochunk, ub, None, (i0 * ub) as u64)
+            }));
+        }
+        for t in tiles {
+            stats.merge(t.join().expect("split matmul_tn worker"));
+        }
+    });
+    stats
+}
+
 /// Dispatching form of [`matmul_sl_q_into_threads`]: when `int_domain`
 /// is set and the site is eligible (see [`quant_gemm_plan`]), run the
-/// integer-domain lowering; otherwise the simulated kernel. Both paths
-/// produce identical bits and [`QuantStats`].
+/// integer-domain lowering (whole-reduction or split-accumulator);
+/// otherwise the simulated kernel. All paths produce identical bits and
+/// [`QuantStats`]. `tally` (when present) records the outcome of every
+/// non-empty dispatch for the per-site `int_gemm_sites` report section.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_sl_qd_into_threads(
     a: &[f32],
@@ -855,13 +1235,33 @@ pub fn matmul_sl_qd_into_threads(
     epi: QuantEpilogue,
     threads: usize,
     int_domain: bool,
+    tally: Option<&GemmSiteTally>,
 ) -> QuantStats {
-    if int_domain && m > 0 && n > 0 {
-        assert_eq!(a.len(), m * kd, "matmul_qd a size");
-        assert_eq!(b.len(), kd * n, "matmul_qd b size");
-        assert_eq!(dst.len(), m * n, "matmul_qd dst size");
-        if let Some((ap, bp)) = int_packs(a, b, kd, Some(dst)) {
-            return int_nn_run(&ap, &bp, bias, dst, m, kd, n, epi, threads);
+    if m > 0 && n > 0 {
+        if int_domain {
+            assert_eq!(a.len(), m * kd, "matmul_qd a size");
+            assert_eq!(b.len(), kd * n, "matmul_qd b size");
+            assert_eq!(dst.len(), m * n, "matmul_qd dst size");
+            match int_packs(a, b, kd, Some(dst)) {
+                Ok((ap, bp, kind)) => {
+                    if let Some(t) = tally {
+                        t.record_kind(kind);
+                    }
+                    return match kind {
+                        IntKind::Whole => int_nn_run(&ap, &bp, bias, dst, m, kd, n, epi, threads),
+                        IntKind::Split => {
+                            split_nn_run(&ap, &bp, a, b, bias, dst, m, kd, n, epi, threads)
+                        }
+                    };
+                }
+                Err(why) => {
+                    if let Some(t) = tally {
+                        t.record_sim(why);
+                    }
+                }
+            }
+        } else if let Some(t) = tally {
+            t.record_disabled();
         }
     }
     matmul_sl_q_into_threads(a, b, bias, dst, m, kd, n, epi, threads)
@@ -891,6 +1291,7 @@ pub fn matmul_sl_qd_into(
         epi,
         plan_threads(2 * m * kd * n, m),
         int_domain,
+        None,
     )
 }
 
@@ -908,7 +1309,8 @@ pub fn matmul_sl_qd_threads(
     int_domain: bool,
 ) -> (Vec<f32>, QuantStats) {
     let mut out = vec![0.0f32; m * n];
-    let st = matmul_sl_qd_into_threads(a, b, bias, &mut out, m, kd, n, epi, threads, int_domain);
+    let st =
+        matmul_sl_qd_into_threads(a, b, bias, &mut out, m, kd, n, epi, threads, int_domain, None);
     (out, st)
 }
 
@@ -940,13 +1342,33 @@ pub fn matmul_nt_sl_qd_into_threads(
     epi: QuantEpilogue,
     threads: usize,
     int_domain: bool,
+    tally: Option<&GemmSiteTally>,
 ) -> QuantStats {
-    if int_domain && m > 0 && ib > 0 {
-        assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
-        assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
-        assert_eq!(dst.len(), m * ib, "matmul_nt_qd dst size");
-        if let Some((ap, bp)) = int_packs(a, b, ua, None) {
-            return int_nt_run(&ap, &bp, dst, m, ua, ib, epi, threads);
+    if m > 0 && ib > 0 {
+        if int_domain {
+            assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
+            assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
+            assert_eq!(dst.len(), m * ib, "matmul_nt_qd dst size");
+            match int_packs(a, b, ua, None) {
+                Ok((ap, bp, kind)) => {
+                    if let Some(t) = tally {
+                        t.record_kind(kind);
+                    }
+                    return match kind {
+                        IntKind::Whole => int_nt_run(&ap, &bp, dst, m, ua, ib, epi, threads),
+                        IntKind::Split => {
+                            split_nt_run(&ap, &bp, a, b, dst, m, ua, ib, epi, threads)
+                        }
+                    };
+                }
+                Err(why) => {
+                    if let Some(t) = tally {
+                        t.record_sim(why);
+                    }
+                }
+            }
+        } else if let Some(t) = tally {
+            t.record_disabled();
         }
     }
     matmul_nt_sl_q_into_threads(a, b, dst, m, ua, ib, epi, threads)
@@ -965,7 +1387,8 @@ pub fn matmul_nt_sl_qd_threads(
     int_domain: bool,
 ) -> (Vec<f32>, QuantStats) {
     let mut out = vec![0.0f32; m * ib];
-    let st = matmul_nt_sl_qd_into_threads(a, b, &mut out, m, ua, ib, epi, threads, int_domain);
+    let st =
+        matmul_nt_sl_qd_into_threads(a, b, &mut out, m, ua, ib, epi, threads, int_domain, None);
     (out, st)
 }
 
@@ -994,13 +1417,33 @@ pub fn matmul_tn_sl_qd_into_threads(
     epi: QuantEpilogue,
     threads: usize,
     int_domain: bool,
+    tally: Option<&GemmSiteTally>,
 ) -> QuantStats {
-    if int_domain && ia > 0 && ub > 0 {
-        assert_eq!(a.len(), ba * ia, "matmul_tn_qd a size");
-        assert_eq!(b.len(), ba * ub, "matmul_tn_qd b size");
-        assert_eq!(dst.len(), ia * ub, "matmul_tn_qd dst size");
-        if let Some((ap, bp)) = int_packs(a, b, ba, Some(dst)) {
-            return int_tn_run(&ap, &bp, dst, ba, ia, ub, epi, threads);
+    if ia > 0 && ub > 0 {
+        if int_domain {
+            assert_eq!(a.len(), ba * ia, "matmul_tn_qd a size");
+            assert_eq!(b.len(), ba * ub, "matmul_tn_qd b size");
+            assert_eq!(dst.len(), ia * ub, "matmul_tn_qd dst size");
+            match int_packs(a, b, ba, Some(dst)) {
+                Ok((ap, bp, kind)) => {
+                    if let Some(t) = tally {
+                        t.record_kind(kind);
+                    }
+                    return match kind {
+                        IntKind::Whole => int_tn_run(&ap, &bp, dst, ba, ia, ub, epi, threads),
+                        IntKind::Split => {
+                            split_tn_run(&ap, &bp, a, b, dst, ba, ia, ub, epi, threads)
+                        }
+                    };
+                }
+                Err(why) => {
+                    if let Some(t) = tally {
+                        t.record_sim(why);
+                    }
+                }
+            }
+        } else if let Some(t) = tally {
+            t.record_disabled();
         }
     }
     matmul_tn_sl_q_into_threads(a, b, dst, ba, ia, ub, epi, threads)
@@ -1028,6 +1471,7 @@ pub fn matmul_tn_sl_qd_into(
         epi,
         plan_threads(2 * ba * ia * ub, ia),
         int_domain,
+        None,
     )
 }
 
@@ -1044,7 +1488,8 @@ pub fn matmul_tn_sl_qd_threads(
     int_domain: bool,
 ) -> (Vec<f32>, QuantStats) {
     let mut out = vec![0.0f32; ia * ub];
-    let st = matmul_tn_sl_qd_into_threads(a, b, &mut out, ba, ia, ub, epi, threads, int_domain);
+    let st =
+        matmul_tn_sl_qd_into_threads(a, b, &mut out, ba, ia, ub, epi, threads, int_domain, None);
     (out, st)
 }
 
@@ -1069,28 +1514,23 @@ pub fn matmul_tn_sl_qd(
 /// against a **pre-packed** `b` operand. The cached pack carries the
 /// same `amax`/`exp` a fresh pack of the same values would (packing is
 /// deterministic), so the checks — clean accumulated destination,
-/// accumulator bound, exponent window — are decided identically to the
-/// per-call path; only the redundant repack of `b` is skipped.
+/// exponent window, whole-vs-split accumulator bound — are decided
+/// identically to the per-call path (both funnel through
+/// [`packed_kind`]); only the redundant repack of `b` is skipped.
 fn int_pack_a_cached(
     a: &[f32],
     bp: &Packed,
     inner: usize,
     accum_dst: Option<&[f32]>,
-) -> Option<Packed> {
+) -> Result<(Packed, IntKind), SimReason> {
     if let Some(d) = accum_dst {
         if !d.iter().all(|v| v.to_bits() == 0) {
-            return None;
+            return Err(SimReason::DirtyDst);
         }
     }
-    let ap = int_gemm::pack(a)?;
-    if !int_gemm::accum_bound_ok(inner, ap.amax, bp.amax) {
-        return None;
-    }
-    let pe = ap.exp + bp.exp;
-    if !(int_gemm::EXP_LO..=int_gemm::EXP_HI).contains(&pe) {
-        return None;
-    }
-    Some(ap)
+    let ap = int_gemm::pack(a).ok_or(SimReason::Unpackable)?;
+    let kind = packed_kind(&ap, bp, inner)?;
+    Ok((ap, kind))
 }
 
 /// The lowering the `*_qd_cached` entry points would select given a
@@ -1104,10 +1544,8 @@ pub fn quant_gemm_plan_cached(
     accum_dst: Option<&[f32]>,
 ) -> QuantGemmImpl {
     match bp {
-        Some(bp) if int_pack_a_cached(a, bp, inner, accum_dst).is_some() => {
-            QuantGemmImpl::IntDomain
-        }
-        _ => QuantGemmImpl::Simulated,
+        Some(bp) => kind_to_impl(int_pack_a_cached(a, bp, inner, accum_dst).map(|(_, k)| k)),
+        None => QuantGemmImpl::Simulated,
     }
 }
 
@@ -1129,15 +1567,43 @@ pub fn matmul_sl_qd_cached_into_threads(
     n: usize,
     epi: QuantEpilogue,
     threads: usize,
+    tally: Option<&GemmSiteTally>,
 ) -> QuantStats {
     if m > 0 && n > 0 {
-        if let Some(bp) = bp {
-            assert_eq!(a.len(), m * kd, "matmul_qd a size");
-            assert_eq!(b.len(), kd * n, "matmul_qd b size");
-            assert_eq!(bp.len(), b.len(), "cached b pack length");
-            assert_eq!(dst.len(), m * n, "matmul_qd dst size");
-            if let Some(ap) = int_pack_a_cached(a, bp, kd, Some(dst)) {
-                return int_nn_run(&ap, bp, bias, dst, m, kd, n, epi, threads);
+        match bp {
+            Some(bp) => {
+                assert_eq!(a.len(), m * kd, "matmul_qd a size");
+                assert_eq!(b.len(), kd * n, "matmul_qd b size");
+                assert_eq!(bp.len(), b.len(), "cached b pack length");
+                assert_eq!(dst.len(), m * n, "matmul_qd dst size");
+                match int_pack_a_cached(a, bp, kd, Some(dst)) {
+                    Ok((ap, kind)) => {
+                        if let Some(t) = tally {
+                            t.record_kind(kind);
+                        }
+                        return match kind {
+                            IntKind::Whole => {
+                                int_nn_run(&ap, bp, bias, dst, m, kd, n, epi, threads)
+                            }
+                            IntKind::Split => {
+                                split_nn_run(&ap, bp, a, b, bias, dst, m, kd, n, epi, threads)
+                            }
+                        };
+                    }
+                    Err(why) => {
+                        if let Some(t) = tally {
+                            t.record_sim(why);
+                        }
+                    }
+                }
+            }
+            // A `None` slab means the cache already proved these weight
+            // values unpackable — record the same reason a fresh pack
+            // attempt would produce.
+            None => {
+                if let Some(t) = tally {
+                    t.record_sim(SimReason::Unpackable);
+                }
             }
         }
     }
@@ -1168,6 +1634,7 @@ pub fn matmul_sl_qd_cached_into(
         n,
         epi,
         plan_threads(2 * m * kd * n, m),
+        None,
     )
 }
 
@@ -1201,16 +1668,41 @@ pub fn matmul_nt_sl_qd_cached_threads(
     ib: usize,
     epi: QuantEpilogue,
     threads: usize,
+    tally: Option<&GemmSiteTally>,
 ) -> (Vec<f32>, QuantStats) {
     let mut out = vec![0.0f32; m * ib];
     if m > 0 && ib > 0 {
-        if let Some(bp) = bp {
-            assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
-            assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
-            assert_eq!(bp.len(), b.len(), "cached b pack length");
-            if let Some(ap) = int_pack_a_cached(a, bp, ua, None) {
-                let st = int_nt_run(&ap, bp, &mut out, m, ua, ib, epi, threads);
-                return (out, st);
+        match bp {
+            Some(bp) => {
+                assert_eq!(a.len(), m * ua, "matmul_nt_qd a size");
+                assert_eq!(b.len(), ib * ua, "matmul_nt_qd b size");
+                assert_eq!(bp.len(), b.len(), "cached b pack length");
+                match int_pack_a_cached(a, bp, ua, None) {
+                    Ok((ap, kind)) => {
+                        if let Some(t) = tally {
+                            t.record_kind(kind);
+                        }
+                        let st = match kind {
+                            IntKind::Whole => {
+                                int_nt_run(&ap, bp, &mut out, m, ua, ib, epi, threads)
+                            }
+                            IntKind::Split => {
+                                split_nt_run(&ap, bp, a, b, &mut out, m, ua, ib, epi, threads)
+                            }
+                        };
+                        return (out, st);
+                    }
+                    Err(why) => {
+                        if let Some(t) = tally {
+                            t.record_sim(why);
+                        }
+                    }
+                }
+            }
+            None => {
+                if let Some(t) = tally {
+                    t.record_sim(SimReason::Unpackable);
+                }
             }
         }
     }
@@ -1228,7 +1720,7 @@ pub fn matmul_nt_sl_qd_cached(
     ib: usize,
     epi: QuantEpilogue,
 ) -> (Vec<f32>, QuantStats) {
-    matmul_nt_sl_qd_cached_threads(a, b, bp, m, ua, ib, epi, plan_threads(2 * m * ua * ib, m))
+    matmul_nt_sl_qd_cached_threads(a, b, bp, m, ua, ib, epi, plan_threads(2 * m * ua * ib, m), None)
 }
 
 /// `c[B,U] = a[B,I] @ b[I,U]` (blocked, parallel above the threshold).
@@ -1673,6 +2165,90 @@ mod tests {
         for (x, y) in sim.iter().zip(&int) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    /// Wide-format values on the 2^-4 grid (|int| up to 2047): single
+    /// products fit the f32-exact bound but a handful of terms overflow
+    /// it, so the planner must pick the split-accumulator lowering.
+    fn wide_grid_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+        (0..n).map(|_| g.i32_range(-2047, 2047) as f32 * 0.0625).collect()
+    }
+
+    #[test]
+    fn qd_split_dispatch_is_bit_identical_and_tallied() {
+        use crate::arith::{FixedFormat, Quantizer};
+        let mut g = Gen::new(0x5917);
+        let (m, kd, n) = (5usize, 8, 4);
+        let mut a = wide_grid_vec(&mut g, m * kd);
+        let mut b = wide_grid_vec(&mut g, kd * n);
+        // Pin the amaxes so wc = kd·2047² > 2^24 while 2047² ≤ 2^24.
+        a[0] = 2047.0 * 0.0625;
+        b[0] = -2047.0 * 0.0625;
+        let bias = grid_vec(&mut g, n);
+        let epi = QuantEpilogue::new(Quantizer::from_format(FixedFormat::new(16, 8)));
+        assert_eq!(
+            quant_gemm_plan(&a, &b, kd, Some(&vec![0.0f32; m * n])),
+            QuantGemmImpl::Split
+        );
+        let tally = GemmSiteTally::new();
+        for threads in [1usize, 2, 4] {
+            let (sim, st_sim) = matmul_sl_q_threads(&a, &b, Some(&bias), m, kd, n, epi, threads);
+            let mut out = vec![0.0f32; m * n];
+            let st_split = matmul_sl_qd_into_threads(
+                &a,
+                &b,
+                Some(&bias),
+                &mut out,
+                m,
+                kd,
+                n,
+                epi,
+                threads,
+                true,
+                Some(&tally),
+            );
+            assert_eq!(st_sim, st_split, "split nn stats t={threads}");
+            for (x, y) in sim.iter().zip(&out) {
+                assert_eq!(x.to_bits(), y.to_bits(), "split nn t={threads}");
+            }
+        }
+        let c = tally.counts();
+        assert_eq!((c.split, c.int, c.simulated()), (3, 0, 0));
+    }
+
+    #[test]
+    fn gemm_site_tally_records_every_outcome_kind() {
+        use crate::arith::Quantizer;
+        let mut g = Gen::new(0x7A11_E7);
+        let (m, kd, n) = (3usize, 5, 4);
+        let a = grid_vec(&mut g, m * kd);
+        let b = grid_vec(&mut g, kd * n);
+        let epi = QuantEpilogue::new(Quantizer::float32());
+        let tally = GemmSiteTally::new();
+        assert!(tally.counts().is_empty());
+
+        let mut out = vec![0.0f32; m * n];
+        matmul_sl_qd_into_threads(&a, &b, None, &mut out, m, kd, n, epi, 1, false, Some(&tally));
+        out.fill(0.0);
+        matmul_sl_qd_into_threads(&a, &b, None, &mut out, m, kd, n, epi, 1, true, Some(&tally));
+        let mut dirty = vec![0.0f32; m * n];
+        dirty[1] = -0.0; // negative zero: bits != 0, accumulated dst is dirty
+        matmul_sl_qd_into_threads(&a, &b, None, &mut dirty, m, kd, n, epi, 1, true, Some(&tally));
+        let mut au = a.clone();
+        au[0] = 0.1; // 24-bit odd mantissa: never packs
+        out.fill(0.0);
+        matmul_sl_qd_into_threads(&au, &b, None, &mut out, m, kd, n, epi, 1, true, Some(&tally));
+
+        let c = tally.counts();
+        assert_eq!((c.disabled, c.int, c.dirty_dst, c.unpackable), (1, 1, 1, 1));
+        assert_eq!((c.split, c.exp_window, c.acc_bound), (0, 0, 0));
+        assert_eq!(c.simulated(), 3);
+        assert_eq!(c.total(), 4);
+        let mut merged = GemmSiteCounts::default();
+        merged.merge(&c);
+        merged.merge(&c);
+        assert_eq!(merged.total(), 8);
+        assert!(!merged.is_empty());
     }
 
     #[test]

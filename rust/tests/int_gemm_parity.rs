@@ -15,11 +15,12 @@
 //! * degenerate shapes (1×1×1, zero-depth reductions, zero-batch TN).
 //!
 //! Every eligible case first asserts [`ops::quant_gemm_plan`] selects
-//! `IntDomain` — a parity test that silently fell back to the simulated
-//! kernel would prove nothing. Ineligible sites (off-grid data, a
-//! violated accumulator bound, a dirty accumulated destination) are
-//! asserted to fall back *and* still match, so the dispatch is
-//! unconditionally bit-transparent.
+//! `IntDomain` — or `Split` for the wide-grid/deep-reduction cases the
+//! split-accumulator schedule makes eligible — a parity test that
+//! silently fell back to the simulated kernel would prove nothing.
+//! Ineligible sites (off-grid data, a violated per-product bound, a
+//! dirty accumulated destination) are asserted to fall back *and* still
+//! match, so the dispatch is unconditionally bit-transparent.
 //!
 //! A second layer asserts the same at the training-step level (the tiny
 //! maxout MLP and the tiny conv topology, so the im2col-lowered conv
@@ -228,14 +229,26 @@ fn ineligible_sites_fall_back_bit_identically() {
     assert_eq!(ops::quant_gemm_plan(&a, &b, kd, None), QuantGemmImpl::Simulated);
     check_nn("off-grid", &a, &b, None, m, kd, n, epi);
 
-    // accumulator bound: 33 · 2047 · 2047 > 2^24 forces the wide grid out
+    // a deep wide-grid reduction (33 · 2047 · 2047 > 2^24) used to be
+    // rejected outright; the split-accumulator schedule now takes it —
+    // only the *per-product* bound (amax_a · amax_b ≤ 2^24) gates Split,
+    // and 2047 · 2047 fits with room to spare
     let (ba, ia, ub) = (33, 5, 6);
     let mut wa = grid_vec(&mut rng, ba * ia, 2047, 0);
     let mut wb = grid_vec(&mut rng, ba * ub, 2047, 0);
     wa[0] = 2047.0;
     wb[0] = 2047.0;
-    assert_eq!(ops::quant_gemm_plan(&wa, &wb, ba, None), QuantGemmImpl::Simulated);
-    check_tn("acc bound", &wa, &wb, ba, ia, ub, epi);
+    assert_eq!(ops::quant_gemm_plan(&wa, &wb, ba, None), QuantGemmImpl::Split);
+    check_tn("wide grid rides split", &wa, &wb, ba, ia, ub, epi);
+
+    // per-product bound: 8191 · 8191 > 2^24 — a single product already
+    // overflows the exact-f32 window, so not even Split can take it
+    let mut xa = grid_vec(&mut rng, ba * ia, 8191, 0);
+    let mut xb = grid_vec(&mut rng, ba * ub, 8191, 0);
+    xa[0] = 8191.0;
+    xb[0] = 8191.0;
+    assert_eq!(ops::quant_gemm_plan(&xa, &xb, ba, None), QuantGemmImpl::Simulated);
+    check_tn("per-product bound", &xa, &xb, ba, ia, ub, epi);
 
     // dirty accumulated destination: a -0.0 must reject the int path
     // (the simulated kernels preserve its sign through `dst +=`)
@@ -249,8 +262,9 @@ fn ineligible_sites_fall_back_bit_identically() {
         let mut want = dirty.clone();
         let wst = ops::matmul_sl_q_into_threads(&a, &b, None, &mut want, m, kd, n, epi, threads);
         let mut got = dirty.clone();
-        let gst =
-            ops::matmul_sl_qd_into_threads(&a, &b, None, &mut got, m, kd, n, epi, threads, true);
+        let gst = ops::matmul_sl_qd_into_threads(
+            &a, &b, None, &mut got, m, kd, n, epi, threads, true, None,
+        );
         assert_eq!(bits(&got), bits(&want), "dirty dst t{threads}");
         assert_eq!(gst, wst, "dirty dst t{threads} stats");
     }
@@ -260,6 +274,132 @@ fn ineligible_sites_fall_back_bit_identically() {
     let (got, gst) = ops::matmul_sl_qd_threads(&a, &b, None, m, kd, n, epi, 2, false);
     assert_eq!(bits(&got), bits(&want), "int_domain off");
     assert_eq!(gst, wst, "int_domain off stats");
+}
+
+/// The split-eligible arithmetics as `(label, fmt, amax, exp, inner)`:
+/// grids whose worst-case `inner · amax²` reduction overflows
+/// `ACC_BOUND` while every individual product `amax²` still fits — the
+/// sites the whole-accumulation planner used to reject outright. The
+/// wide 2047-grid lands in i16 packing at inner 33; the 127-grid stays
+/// in i8 and needs a deep reduction (1100 · 127² > 2^24) to trip the
+/// bound.
+fn split_arithmetics() -> Vec<(&'static str, FixedFormat, i32, i32, usize)> {
+    vec![
+        ("fixed 16.8 i16", FixedFormat::new(16, 8), 2047, -6, 33),
+        ("dynamic 8.-2 i8", FixedFormat::new(8, -2), 127, -9, 1100),
+    ]
+}
+
+/// Grid data with the first element pinned to `±amax · 2^exp`, so the
+/// packed amax — and with it the planner's Whole/Split classification —
+/// is deterministic rather than a property of the random draw.
+fn split_grid_vec(rng: &mut Pcg32, n: usize, amax: i32, exp: i32, sign: f32) -> Vec<f32> {
+    let mut v = grid_vec(rng, n, amax, exp);
+    v[0] = sign * amax as f32 * int_gemm::exp2f(exp);
+    v
+}
+
+/// Split-accumulator parity: every orientation × arithmetic × round
+/// mode × thread count, uncached and against a cached weight slab, must
+/// (a) select the `Split` plan — these are exactly the
+/// previously-Simulated wide/deep sites — and (b) stay bit-identical in
+/// output bits and `QuantStats` to the simulated fused kernels.
+#[test]
+fn split_plan_bit_identical_to_simulated() {
+    let mut rng = Pcg32::seeded(0x16E3_0007);
+    for mode in ROUND_MODES {
+        for (label, fmt, amax, exp, inner) in split_arithmetics() {
+            let epi = with_stream(mk_epi(fmt, mode), mode, 0x16E3_A007);
+
+            // NN: [m, inner] @ [inner, n], plus the cached-slab flavour
+            let (m, n) = (5, 4);
+            let a = split_grid_vec(&mut rng, m * inner, amax, exp, 1.0);
+            let b = split_grid_vec(&mut rng, inner * n, amax, exp, -1.0);
+            let bias = grid_vec(&mut rng, n, amax, exp);
+            let zeros = vec![0.0f32; m * n];
+            assert_eq!(
+                ops::quant_gemm_plan(&a, &b, inner, Some(&zeros)),
+                QuantGemmImpl::Split,
+                "{label} {mode:?}: NN case must ride the split plan"
+            );
+            let ctx = format!("split nn {label} {mode:?}");
+            check_nn(&ctx, &a, &b, None, m, inner, n, epi);
+            check_nn(&ctx, &a, &b, Some(&bias), m, inner, n, epi);
+            let bp = int_gemm::pack(&b).expect("grid data packs");
+            assert_eq!(
+                ops::quant_gemm_plan_cached(&a, Some(&bp), inner, Some(&zeros)),
+                QuantGemmImpl::Split,
+                "{label} {mode:?}: cached NN case must ride the split plan"
+            );
+            for threads in THREADS {
+                let (want, wst) =
+                    ops::matmul_sl_q_threads(&a, &b, Some(&bias), m, inner, n, epi, threads);
+                let mut got = vec![0.0f32; m * n];
+                let gst = ops::matmul_sl_qd_cached_into_threads(
+                    &a,
+                    &b,
+                    Some(&bp),
+                    Some(&bias),
+                    &mut got,
+                    m,
+                    inner,
+                    n,
+                    epi,
+                    threads,
+                    None,
+                );
+                assert_eq!(bits(&got), bits(&want), "{ctx} cached t{threads}");
+                assert_eq!(gst, wst, "{ctx} cached t{threads} stats");
+            }
+
+            // NT: [m, ua] @ [ib, ua]^T with ua = inner, plus cached
+            let (m2, ib) = (3, 4);
+            let a2 = split_grid_vec(&mut rng, m2 * inner, amax, exp, 1.0);
+            let b2 = split_grid_vec(&mut rng, ib * inner, amax, exp, 1.0);
+            assert_eq!(
+                ops::quant_gemm_plan(&a2, &b2, inner, None),
+                QuantGemmImpl::Split,
+                "{label} {mode:?}: NT case must ride the split plan"
+            );
+            let ctx = format!("split nt {label} {mode:?}");
+            check_nt(&ctx, &a2, &b2, m2, inner, ib, epi);
+            let bp2 = int_gemm::pack(&b2).expect("grid data packs");
+            assert_eq!(
+                ops::quant_gemm_plan_cached(&a2, Some(&bp2), inner, None),
+                QuantGemmImpl::Split,
+                "{label} {mode:?}: cached NT case must ride the split plan"
+            );
+            for threads in THREADS {
+                let (want, wst) =
+                    ops::matmul_nt_sl_q_threads(&a2, &b2, m2, inner, ib, epi, threads);
+                let (got, gst) = ops::matmul_nt_sl_qd_cached_threads(
+                    &a2,
+                    &b2,
+                    Some(&bp2),
+                    m2,
+                    inner,
+                    ib,
+                    epi,
+                    threads,
+                    None,
+                );
+                assert_eq!(bits(&got), bits(&want), "{ctx} cached t{threads}");
+                assert_eq!(gst, wst, "{ctx} cached t{threads} stats");
+            }
+
+            // TN: [ba, ia]^T @ [ba, ub] with ba = inner
+            let (ia, ub) = (3, 4);
+            let a3 = split_grid_vec(&mut rng, inner * ia, amax, exp, -1.0);
+            let b3 = split_grid_vec(&mut rng, inner * ub, amax, exp, 1.0);
+            let zeros_tn = vec![0.0f32; ia * ub];
+            assert_eq!(
+                ops::quant_gemm_plan(&a3, &b3, inner, Some(&zeros_tn)),
+                QuantGemmImpl::Split,
+                "{label} {mode:?}: TN case must ride the split plan"
+            );
+            check_tn(&format!("split tn {label} {mode:?}"), &a3, &b3, inner, ia, ub, epi);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -446,6 +586,7 @@ fn cached_weight_packs_bit_identical_to_simulated() {
                         n,
                         epi,
                         threads,
+                        None,
                     );
                     assert_eq!(bits(&got), bits(&want), "cached nn {label} {mode:?} t{threads}");
                     assert_eq!(gst, wst, "cached nn {label} {mode:?} t{threads} stats");
@@ -471,6 +612,7 @@ fn cached_weight_packs_bit_identical_to_simulated() {
                         ib,
                         epi,
                         threads,
+                        None,
                     );
                     assert_eq!(bits(&got), bits(&want), "cached nt {label} {mode:?} t{threads}");
                     assert_eq!(gst, wst, "cached nt {label} {mode:?} t{threads} stats");
@@ -514,13 +656,13 @@ fn cached_dispatch_still_rechecks_per_call_eligibility() {
             let (want, wst) = ops::matmul_sl_q_threads(aa, &b, None, m, kd, n, epi, threads);
             let mut got = vec![0.0f32; m * n];
             let gst = ops::matmul_sl_qd_cached_into_threads(
-                aa, &b, slab, None, &mut got, m, kd, n, epi, threads,
+                aa, &b, slab, None, &mut got, m, kd, n, epi, threads, None,
             );
             assert_eq!(bits(&got), bits(&want), "{ctx} t{threads}");
             assert_eq!(gst, wst, "{ctx} t{threads} stats");
             let (want, wst) = ops::matmul_nt_sl_q_threads(aa, &b, m, kd, n, epi, threads);
             let (got, gst) =
-                ops::matmul_nt_sl_qd_cached_threads(aa, &b, slab, m, kd, n, epi, threads);
+                ops::matmul_nt_sl_qd_cached_threads(aa, &b, slab, m, kd, n, epi, threads, None);
             assert_eq!(bits(&got), bits(&want), "{ctx} nt t{threads}");
             assert_eq!(gst, wst, "{ctx} nt t{threads} stats");
         }

@@ -10,8 +10,10 @@
 //! * the fused kernels' `QuantEpilogue` can never drift from
 //!   `apply_slice` (bit-for-bit cross-check, plus tiling invariance),
 //! * the integer-domain GEMM packing (`tensor::int_gemm`) round-trips
-//!   every representable grid value exactly, and its i32 accumulator
-//!   bound covers every GEMM site shape of the builtin topologies.
+//!   every representable grid value exactly, every builtin-topology GEMM
+//!   site lowers to whole-reduction integer or split-accumulator
+//!   arithmetic at the paper's multiply widths, and the split scheduler's
+//!   segment length is maximal-but-safe for arbitrary operand grids.
 
 use lpdnn::arith::{ElemRng, FixedFormat, QuantEpilogue, QuantStats, Quantizer, RoundMode};
 use lpdnn::config::TopologySpec;
@@ -208,7 +210,7 @@ fn gemm_site_inners(
 }
 
 #[test]
-fn builtin_site_shapes_respect_the_i32_accumulator_bound() {
+fn builtin_site_shapes_lower_to_int_or_split_at_paper_widths() {
     // The bound itself must keep i32 accumulation overflow-free *and*
     // every partial sum exactly representable in a f32 mantissa.
     assert!(int_gemm::ACC_BOUND <= i32::MAX as u64);
@@ -220,7 +222,7 @@ fn builtin_site_shapes_respect_the_i32_accumulator_bound() {
         ("conv32", Shape::Spatial { h: 32, w: 32, c: 3 }),
         ("pi_conv", Shape::Spatial { h: 32, w: 32, c: 3 }),
     ];
-    let (mut accepted, mut rejected) = (0usize, 0usize);
+    let (mut whole, mut split, mut simulated) = (0usize, 0usize, 0usize);
     for (name, in_shape) in builtins {
         let spec = TopologySpec::builtin(name).expect("builtin topology");
         for inner in gemm_site_inners(&spec, in_shape, 10, 64) {
@@ -234,17 +236,92 @@ fn builtin_site_shapes_respect_the_i32_accumulator_bound() {
                     "{name} inner={inner} {fmt}"
                 );
                 if wc <= int_gemm::ACC_BOUND {
-                    accepted += 1;
-                    // an accepted site can never overflow the i32
-                    // accumulator, whatever the summation order
+                    // whole-reduction integer: can never overflow i32,
+                    // whatever the summation order
+                    whole += 1;
                     assert!(wc <= i32::MAX as u64, "{name} inner={inner} {fmt}");
+                } else if let Some(s) = int_gemm::seg_len(amax as u32, amax as u32) {
+                    // split accumulators: the first (maximal) segment's
+                    // worst case itself respects the bound
+                    split += 1;
+                    assert!(
+                        s as u64 * amax * amax <= int_gemm::ACC_BOUND,
+                        "{name} inner={inner} {fmt}"
+                    );
                 } else {
-                    rejected += 1;
+                    // a single product exceeds the exact-f32 window, so
+                    // bit-identity to the simulated kernel is
+                    // fundamentally impossible — permitted only beyond
+                    // the paper's Table 3 multiply widths (the 20-bit
+                    // audit format), never at the widths the paper
+                    // actually trains at
+                    simulated += 1;
+                    assert!(
+                        fmt.total_bits > 12,
+                        "{name} inner={inner} {fmt}: a paper-width site may not simulate"
+                    );
                 }
             }
         }
     }
-    // The gate is real on the paper's own models: some sites run in the
-    // integer domain while others must fall back to simulated f32.
-    assert!(accepted > 0 && rejected > 0, "accepted={accepted} rejected={rejected}");
+    // With split accumulators every paper-width site lowers to integer
+    // arithmetic: `whole` for shallow reductions, `split` for the deep
+    // ones (e.g. the 784-deep l0 forward on the 10-bit grid). The
+    // 20-bit audit format keeps the per-product gate honest.
+    assert!(whole > 0, "whole={whole}");
+    assert!(split > 0, "split={split}");
+    assert!(simulated > 0, "simulated={simulated}");
+    // the deep-l0 poster child: 784 · 512 · 512 overflows the whole-site
+    // bound, yet the 10-bit grid rides Split with 64-element segments
+    assert!(!int_gemm::accum_bound_ok(784, 512, 512));
+    assert_eq!(int_gemm::seg_len(512, 512), Some(64));
+}
+
+/// Satellite property for the split scheduler: `seg_len` is
+/// maximal-but-safe for random amax pairs — `Some(s)` means `s` worst
+/// case products fit the bound and `s + 1` would not; `None` means
+/// either a zero product (whole-site bound already accepts any depth)
+/// or a single product beyond the exact-f32 window. Degenerate inner
+/// dims (0 and 1) always satisfy the whole-site bound when a single
+/// product does.
+#[test]
+fn seg_len_is_maximal_but_safe_for_random_amax_pairs() {
+    forall_seeded("seg_len maximal-but-safe", 0x9127, |g: &mut Gen| {
+        let amax_a = g.i32_range(0, 8192) as u32;
+        let amax_b = g.i32_range(0, 8192) as u32;
+        let inner = g.usize_range(0, 2048);
+        let prod = amax_a as u64 * amax_b as u64;
+
+        // inner-dim edges: an empty reduction always fits; a one-term
+        // reduction fits exactly when the single product does
+        assert!(int_gemm::accum_bound_ok(0, amax_a, amax_b));
+        assert_eq!(
+            int_gemm::accum_bound_ok(1, amax_a, amax_b),
+            prod <= int_gemm::ACC_BOUND,
+            "amax=({amax_a},{amax_b})"
+        );
+
+        match int_gemm::seg_len(amax_a, amax_b) {
+            None => assert!(
+                prod == 0 || prod > int_gemm::ACC_BOUND,
+                "None only for zero or over-window products: ({amax_a},{amax_b})"
+            ),
+            Some(s) => {
+                assert!(s >= 1, "a nonzero in-window product admits a segment");
+                assert!(
+                    s as u64 * prod <= int_gemm::ACC_BOUND,
+                    "({amax_a},{amax_b}): segment worst case must fit"
+                );
+                assert!(
+                    (s as u64 + 1) * prod > int_gemm::ACC_BOUND,
+                    "({amax_a},{amax_b}): one more term would overflow — not maximal"
+                );
+                // when splitting is actually needed, the first segment
+                // is a strict prefix of the reduction
+                if !int_gemm::accum_bound_ok(inner, amax_a, amax_b) {
+                    assert!(s < inner, "({amax_a},{amax_b}) inner={inner}");
+                }
+            }
+        }
+    });
 }

@@ -149,6 +149,24 @@ fn responses_are_bit_identical_to_single_example_forwards() {
                 report.weight_pack_builds, want_packs,
                 "{tag}: weight packs must be exactly one per worker per layer"
             );
+            // dispatch proof: with the integer domain on, no site records
+            // `disabled` and at least the hidden layers (whose activations
+            // sit on the computation grid) ride the integer kernels; with
+            // it off, every dispatch records `disabled`. The raw dataset
+            // inputs need not sit on any grid, so layer 0 is allowed to
+            // fall back simulated — hence no simulated()==0 assert here.
+            let d = &report.int_gemm_dispatch;
+            assert!(d.total() > 0, "{tag}: dispatch counters recorded");
+            if int_domain {
+                assert_eq!(d.disabled, 0, "{tag}: integer domain on, nothing disabled");
+                assert!(d.int + d.split > 0, "{tag}: integer kernels served requests");
+            } else {
+                assert_eq!(
+                    d.disabled,
+                    d.total(),
+                    "{tag}: integer domain off, every dispatch disabled"
+                );
+            }
             assert!(
                 report.latency_percentile(0.99) >= report.latency_percentile(0.50),
                 "{tag}: percentiles ordered"

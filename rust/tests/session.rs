@@ -155,6 +155,7 @@ fn golden_report() -> SweepReport {
             final_int_bits: vec![3, -2, 0],
             steps: 40,
             wallclock_secs: 1.5,
+            int_gemm_sites: Default::default(),
         },
         rows: vec![
             SweepRowReport {
@@ -169,6 +170,7 @@ fn golden_report() -> SweepReport {
                     final_int_bits: vec![],
                     steps: 40,
                     wallclock_secs: 2.0,
+                    int_gemm_sites: Default::default(),
                 },
             },
             SweepRowReport {
@@ -183,6 +185,7 @@ fn golden_report() -> SweepReport {
                     final_int_bits: vec![4],
                     steps: 40,
                     wallclock_secs: 0.5,
+                    int_gemm_sites: Default::default(),
                 },
             },
         ],
